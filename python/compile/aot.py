@@ -1,0 +1,59 @@
+"""AOT-compile the L2 executor-tick graph to HLO text.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out ../artifacts/stability.hlo.txt``
+(from the ``python/`` directory). Shapes are static per artifact; the Rust
+runtime picks the artifact matching its configuration.
+"""
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import executor_tick
+
+# Default artifact shape: 16 partitions x r=5 replicas x 64-slot promise
+# window, queue depth 16, majority 3 (r=5 -> floor(r/2)+1).
+P, R, W, Q, MAJORITY = 16, 5, 64, 16, 3
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(p=P, r=R, w=W, q=Q, majority=MAJORITY):
+    fn = functools.partial(executor_tick, majority=majority)
+    bits = jax.ShapeDtypeStruct((p, r, w), jnp.uint8)
+    queue = jax.ShapeDtypeStruct((p, q), jnp.int32)
+    return jax.jit(fn).lower(bits, queue)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/stability.hlo.txt")
+    ap.add_argument("--partitions", type=int, default=P)
+    ap.add_argument("--replicas", type=int, default=R)
+    ap.add_argument("--window", type=int, default=W)
+    ap.add_argument("--queue", type=int, default=Q)
+    ap.add_argument("--majority", type=int, default=MAJORITY)
+    args = ap.parse_args()
+    lowered = lower(args.partitions, args.replicas, args.window, args.queue, args.majority)
+    text = to_hlo_text(lowered)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

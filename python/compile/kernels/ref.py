@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the stability kernel (correctness reference).
+
+Stability detection (paper Theorem 1 / Algorithm 2 lines 49-51), batched
+over partitions: given a promise bitmap ``bits[P, r, W]`` (``bits[p, j, u]``
+= 1 iff process ``j``'s promise for timestamp ``u+1`` on partition ``p`` is
+known), the stable watermark of partition ``p`` is the ``majority``-th
+largest value among the per-process *highest contiguous promise* counts
+(``h[floor(r/2)]`` in the paper's sorted array).
+"""
+
+import jax.numpy as jnp
+
+
+def highest_contiguous(bits):
+    """Length of the all-ones prefix along the last axis.
+
+    ``bits``: uint8/bool array ``[..., W]`` -> int32 ``[...]``.
+    """
+    prefix = jnp.cumprod(bits.astype(jnp.int32), axis=-1)
+    return jnp.sum(prefix, axis=-1).astype(jnp.int32)
+
+
+def stable_watermark_ref(bits, majority):
+    """Reference stability computation.
+
+    ``bits``: ``[P, r, W]`` promise bitmap.
+    ``majority``: how many processes must have contiguous promises
+    (``floor(r/2) + 1`` in the paper).
+
+    Returns int32 ``[P]``: the highest timestamp stable at each partition.
+    """
+    h = highest_contiguous(bits)  # [P, r]
+    h_sorted = jnp.sort(h, axis=-1)  # ascending
+    r = bits.shape[-2]
+    # `majority` processes have watermark >= h_sorted[r - majority].
+    return h_sorted[..., r - majority]

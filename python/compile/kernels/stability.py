@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: batched timestamp-stability detection.
+
+The executor hot-spot of Tempo (paper Algorithm 2 lines 49-51) as a Pallas
+kernel: for every partition, compute each replica's highest contiguous
+promise and take the majority-th order statistic.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over
+partitions — the role threadblocks would play on a GPU — and each grid step
+holds one ``[r, W]`` uint8 tile in VMEM (r*W bytes, ~KBs, far below the
+VMEM budget). The contiguous-prefix scan is expressed with ``cumprod``
+along the W lanes (VPU-friendly, no MXU needed — this is a bitwise
+workload, not a matmul). ``interpret=True`` is mandatory on CPU: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stability_kernel(majority, bits_ref, out_ref):
+    """One grid step: bits_ref [1, r, W] uint8 -> out_ref [1] int32."""
+    bits = bits_ref[0].astype(jnp.int32)  # [r, W], VMEM-resident tile
+    prefix = jnp.cumprod(bits, axis=-1)  # [r, W]
+    h = jnp.sum(prefix, axis=-1)  # [r]
+    h_sorted = jnp.sort(h)  # ascending
+    r = h.shape[0]
+    out_ref[0] = h_sorted[r - majority].astype(jnp.int32)
+
+
+def stable_watermark(bits, majority):
+    """Pallas-accelerated stability detection.
+
+    ``bits``: uint8 ``[P, r, W]`` promise bitmap.
+    Returns int32 ``[P]``.
+    """
+    p, r, w = bits.shape
+
+    def kernel(bits_ref, out_ref):
+        _stability_kernel(majority, bits_ref, out_ref)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(p,),
+        in_specs=[pl.BlockSpec((1, r, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(bits)

@@ -1,0 +1,32 @@
+"""L2: the executor-tick compute graph, calling the L1 Pallas kernel.
+
+One executor tick of the Tempo execution protocol (Algorithm 2/6), batched
+over partitions:
+
+1. stability — per-partition stable watermark from the promise bitmap
+   (the Pallas kernel, ``kernels.stability``);
+2. an executability mask over the committed-command queue: a queue entry
+   with timestamp ``ts`` executes iff ``0 < ts <= watermark`` of its
+   partition.
+
+Python runs only at build time: ``aot.py`` lowers this function once to
+HLO text and the Rust coordinator (rust/src/runtime) loads and executes
+the artifact on its PJRT CPU client.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.stability import stable_watermark
+
+
+def executor_tick(bits, queue_ts, majority):
+    """Batched executor tick.
+
+    ``bits``: uint8 ``[P, r, W]`` promise bitmap.
+    ``queue_ts``: int32 ``[P, Q]`` committed-queue timestamps (0 = empty
+    slot).
+    Returns ``(watermark [P] int32, executable [P, Q] int32)``.
+    """
+    watermark = stable_watermark(bits, majority)  # [P]
+    executable = (queue_ts > 0) & (queue_ts <= watermark[:, None])
+    return watermark, executable.astype(jnp.int32)

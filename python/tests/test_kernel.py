@@ -1,0 +1,123 @@
+"""L1 correctness: Pallas stability kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and bit patterns; fixed golden vectors are shared
+with the Rust integration test (rust/tests/runtime_bridge.rs), which checks
+the same inputs through the AOT artifact against the pure-Rust
+PromiseStore implementation.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import highest_contiguous, stable_watermark_ref
+from compile.kernels.stability import stable_watermark
+
+
+def np_reference(bits, majority):
+    """Independent numpy implementation (oracle for the oracle)."""
+    p, r, w = bits.shape
+    out = np.zeros(p, dtype=np.int32)
+    for i in range(p):
+        h = []
+        for j in range(r):
+            c = 0
+            for u in range(w):
+                if bits[i, j, u]:
+                    c += 1
+                else:
+                    break
+            h.append(c)
+        h.sort()
+        out[i] = h[r - majority]
+    return out
+
+
+def test_highest_contiguous_simple():
+    bits = np.array([[1, 1, 0, 1], [1, 1, 1, 1], [0, 1, 1, 1]], dtype=np.uint8)
+    h = np.asarray(highest_contiguous(bits))
+    assert list(h) == [2, 4, 0]
+
+
+def test_paper_figure2_example():
+    # r=3, watermarks {A:2, B:3, C:2} -> stable 2 at majority 2.
+    bits = np.zeros((1, 3, 4), dtype=np.uint8)
+    bits[0, 0, :2] = 1  # A: promises 1..2
+    bits[0, 1, :3] = 1  # B: promises 1..3
+    bits[0, 2, :2] = 1  # C: promises 1..2
+    assert int(stable_watermark_ref(bits, 2)[0]) == 2
+    assert int(stable_watermark_ref(bits, 3)[0]) == 2  # unanimity
+    assert int(stable_watermark_ref(bits, 1)[0]) == 3  # any single process
+    assert int(stable_watermark(bits, 2)[0]) == 2  # Pallas kernel agrees
+
+
+def test_gap_blocks_stability():
+    # A promise hole at slot 0 pins the watermark at 0 for that process.
+    bits = np.ones((1, 3, 8), dtype=np.uint8)
+    bits[0, 0, 0] = 0
+    bits[0, 1, 0] = 0
+    assert int(stable_watermark_ref(bits, 2)[0]) == 0
+    assert int(stable_watermark(bits, 2)[0]) == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    p=st.integers(1, 8),
+    r=st.integers(3, 7),
+    w=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_reference_random(p, r, w, seed):
+    rng = np.random.default_rng(seed)
+    # Mix dense prefixes (realistic) with random noise (adversarial).
+    bits = (rng.random((p, r, w)) < 0.8).astype(np.uint8)
+    majority = r // 2 + 1
+    expect = np_reference(bits, majority)
+    got_ref = np.asarray(stable_watermark_ref(bits, majority))
+    got_pallas = np.asarray(stable_watermark(bits, majority))
+    np.testing.assert_array_equal(got_ref, expect)
+    np.testing.assert_array_equal(got_pallas, expect)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.integers(3, 7),
+    majority=st.integers(1, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_all_majorities(r, majority, seed):
+    if majority > r:
+        return
+    rng = np.random.default_rng(seed)
+    bits = (rng.random((4, r, 32)) < 0.9).astype(np.uint8)
+    expect = np_reference(bits, majority)
+    np.testing.assert_array_equal(np.asarray(stable_watermark(bits, majority)), expect)
+
+
+def test_golden_vectors_shared_with_rust():
+    """Golden inputs mirrored in rust/tests/runtime_bridge.rs — keep in
+    sync. Deterministic bit pattern: bit(i,j,u) = ((i*7 + j*13 + u*3) % 5) != 0
+    for the first (i+j+1)*4 slots, zero afterwards."""
+    p, r, w = 16, 5, 64
+    bits = np.zeros((p, r, w), dtype=np.uint8)
+    for i in range(p):
+        for j in range(r):
+            limit = min(w, (i + j + 1) * 4)
+            for u in range(limit):
+                bits[i, j, u] = 1 if ((i * 7 + j * 13 + u * 3) % 5) != 0 else 0
+    expect = np_reference(bits, 3)
+    got = np.asarray(stable_watermark(bits, 3))
+    np.testing.assert_array_equal(got, expect)
+    # First few values pinned so any drift is loud.
+    assert list(got[:4]) == list(expect[:4])
+
+
+def test_executor_tick_masks_queue():
+    from compile.model import executor_tick
+
+    bits = np.ones((2, 3, 8), dtype=np.uint8)
+    bits[1, :, 4:] = 0  # partition 1 stable only up to 4
+    queue = np.array([[1, 8, 0, 9], [4, 5, 1, 0]], dtype=np.int32)
+    wm, mask = executor_tick(bits, queue, majority=2)
+    assert list(np.asarray(wm)) == [8, 4]
+    assert np.asarray(mask).tolist() == [[1, 1, 0, 0], [1, 0, 1, 0]]

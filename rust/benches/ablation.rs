@@ -1,0 +1,97 @@
+//! Ablation study (DESIGN.md design-choice callouts):
+//!   1. MBump (§4 "Faster stability") on vs off — multi-partition latency.
+//!   2. Promise-broadcast tick interval — stability latency vs message
+//!      overhead trade-off (the paper flushes every 5 ms).
+//!   3. Fault-tolerance level f — fast-quorum size vs latency.
+
+use tempo::bench_util::{ms, print_table};
+use tempo::core::{ClientId, Config};
+use tempo::protocol::tempo::Tempo;
+use tempo::sim::{run, SimOpts, Topology};
+use tempo::util::Rng;
+use tempo::workload::{CommandSpec, ConflictWorkload, Workload};
+
+/// Every command touches two random keys in different shards — maximal
+/// multi-partition pressure (where MBump matters).
+struct CrossShard;
+impl Workload for CrossShard {
+    fn next(&mut self, _c: ClientId, rng: &mut Rng) -> CommandSpec {
+        let a = rng.gen_range(1000);
+        let b = 1000 + rng.gen_range(1000);
+        CommandSpec { keys: vec![a, b], op: tempo::core::Op::Rmw, payload_len: 64 }
+    }
+}
+
+fn opts(seed: u64) -> SimOpts {
+    let mut o = SimOpts::new(Topology::ec2_three());
+    o.clients_per_site = 16;
+    o.warmup_us = 2_000_000;
+    o.duration_us = 10_000_000;
+    o.seed = seed;
+    o
+}
+
+fn main() {
+    // 1. MBump on/off over 2 shards.
+    let mut rows = Vec::new();
+    for (label, bump) in [("MBump ON (paper §4)", true), ("MBump OFF", false)] {
+        let config = Config::new(3, 1).with_shards(2).with_bump(bump);
+        let r = run::<Tempo, _>(config, opts(1201), CrossShard);
+        rows.push(vec![
+            label.to_string(),
+            ms(r.metrics.latency.quantile(0.5)),
+            ms(r.metrics.latency.quantile(0.99)),
+            format!("{:.1}", r.metrics.latency.mean() / 1e3),
+        ]);
+    }
+    print_table(
+        "Ablation 1: MBump (faster multi-partition stability), 2 shards, cross-shard RMW",
+        &["variant", "p50 ms", "p99 ms", "mean ms"],
+        &rows,
+    );
+
+    // 2. Promise tick interval.
+    let mut rows = Vec::new();
+    for tick_ms in [1u64, 5, 20, 50] {
+        let config = Config::new(5, 1).with_tick_interval_us(tick_ms * 1000);
+        let r = run::<Tempo, _>(config, opts_5(1301 + tick_ms), ConflictWorkload::new(0.02, 100));
+        rows.push(vec![
+            format!("{tick_ms} ms"),
+            ms(r.metrics.latency.quantile(0.5)),
+            ms(r.metrics.latency.quantile(0.99)),
+            format!("{:.1}", r.metrics.latency.mean() / 1e3),
+        ]);
+    }
+    print_table(
+        "Ablation 2: promise-broadcast interval (paper: 5 ms), 5 sites, 2% conflicts",
+        &["tick", "p50 ms", "p99 ms", "mean ms"],
+        &rows,
+    );
+
+    // 3. Fault-tolerance level.
+    let mut rows = Vec::new();
+    for f in [1usize, 2] {
+        let config = Config::new(5, f);
+        let r = run::<Tempo, _>(config, opts_5(1400 + f as u64), ConflictWorkload::new(0.1, 100));
+        rows.push(vec![
+            format!("f={f} (fq={})", 5 / 2 + f),
+            ms(r.metrics.latency.quantile(0.5)),
+            ms(r.metrics.latency.quantile(0.99)),
+            format!("{}", r.metrics.counters.slow_path),
+        ]);
+    }
+    print_table(
+        "Ablation 3: fault-tolerance level, 5 sites, 10% conflicts",
+        &["config", "p50 ms", "p99 ms", "slow paths"],
+        &rows,
+    );
+}
+
+fn opts_5(seed: u64) -> SimOpts {
+    let mut o = SimOpts::new(Topology::ec2());
+    o.clients_per_site = 16;
+    o.warmup_us = 2_000_000;
+    o.duration_us = 10_000_000;
+    o.seed = seed;
+    o
+}

@@ -1,0 +1,52 @@
+//! Figure 6: latency percentiles (p95–p99.99) with 5 sites under a low
+//! conflict rate (2%), at two load levels. Paper: 256 and 512 clients/site;
+//! scaled to 64 and 128.
+//!
+//! Expected shape: Atlas/EPaxos/Caesar tails are several times Tempo's and
+//! deteriorate with load; Tempo's tail stays flat (no dependency chains).
+
+use tempo::bench_util::{latency_opts, ms, print_table};
+use tempo::core::Config;
+use tempo::protocol::caesar::Caesar;
+use tempo::protocol::depsmr::{Atlas, EPaxos};
+use tempo::protocol::tempo::Tempo;
+use tempo::protocol::Protocol;
+use tempo::sim::{run, Topology};
+use tempo::workload::ConflictWorkload;
+
+fn row<P: Protocol>(name: &str, f: usize, clients: usize, seed: u64) -> Vec<String> {
+    let config = Config::new(5, f);
+    let result = run::<P, _>(
+        config,
+        latency_opts(Topology::ec2(), clients, seed),
+        ConflictWorkload::new(0.02, 100),
+    );
+    let t = result.metrics.latency.tail_summary();
+    vec![
+        format!("{name} f={f}"),
+        clients.to_string(),
+        ms(t.p95),
+        ms(t.p99),
+        ms(t.p99_9),
+        ms(t.p99_99),
+        t.count.to_string(),
+    ]
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    for (i, &clients) in [64usize, 128].iter().enumerate() {
+        let s = 600 + 10 * i as u64;
+        rows.push(row::<Tempo>("tempo", 1, clients, s + 1));
+        rows.push(row::<Tempo>("tempo", 2, clients, s + 2));
+        rows.push(row::<Atlas>("atlas", 1, clients, s + 3));
+        rows.push(row::<Atlas>("atlas", 2, clients, s + 4));
+        rows.push(row::<EPaxos>("epaxos", 1, clients, s + 5));
+        rows.push(row::<Caesar>("caesar", 2, clients, s + 6));
+    }
+    print_table(
+        "Figure 6: latency percentiles (ms), 5 sites, 2% conflicts",
+        &["protocol", "clients/site", "p95", "p99", "p99.9", "p99.99", "samples"],
+        &rows,
+    );
+}

@@ -1,0 +1,79 @@
+//! Figure 7: throughput and latency with 5 sites as the load grows, under
+//! low (2%) and moderate (10%) conflicts, 4 KB payloads, with the CPU/NIC
+//! resource model on ("cluster mode"). Includes the utilization heatmap
+//! columns. Paper: 32→20480 clients/site; scaled to 32→2048.
+//!
+//! Expected shape: FPaxos saturates first (leader NIC/CPU) and is
+//! conflict-insensitive; Atlas loses throughput at 10% conflicts
+//! (dependency chains); Caesar degrades more; Tempo's maximum throughput
+//! is the highest and identical across conflict rates.
+
+use tempo::bench_util::{kops, ms, print_table, throughput_opts};
+use tempo::core::Config;
+use tempo::protocol::caesar::Caesar;
+use tempo::protocol::depsmr::Atlas;
+use tempo::protocol::fpaxos::FPaxos;
+use tempo::protocol::tempo::Tempo;
+use tempo::protocol::Protocol;
+use tempo::sim::{run, Topology};
+use tempo::workload::ConflictWorkload;
+
+const PAYLOAD: u32 = 4096;
+const LOADS: [usize; 3] = [32, 128, 512];
+
+fn sweep<P: Protocol>(name: &str, f: usize, conflict: f64, seed: u64, rows: &mut Vec<Vec<String>>) {
+    for (i, &clients) in LOADS.iter().enumerate() {
+        let config = Config::new(5, f);
+        let result = run::<P, _>(
+            config,
+            throughput_opts(Topology::ec2(), clients, seed + i as u64),
+            ConflictWorkload::new(conflict, PAYLOAD),
+        );
+        let (cpu, net_in, net_out) = result.metrics.mean_utilization();
+        let (max_cpu, _, max_out) = result.metrics.max_utilization();
+        eprintln!(
+            "  done: {name} f={f} conflicts={:.0}% clients={clients} -> {:.1} kops/s",
+            conflict * 100.0,
+            result.metrics.throughput_ops_s() / 1e3
+        );
+        rows.push(vec![
+            format!("{name} f={f}"),
+            format!("{:.0}%", conflict * 100.0),
+            clients.to_string(),
+            kops(result.metrics.throughput_ops_s()),
+            ms(result.metrics.latency.quantile(0.5)),
+            ms(result.metrics.latency.quantile(0.99)),
+            format!("{cpu:.0}/{max_cpu:.0}"),
+            format!("{net_in:.0}"),
+            format!("{net_out:.0}/{max_out:.0}"),
+        ]);
+    }
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    for (ci, &conflict) in [0.02f64, 0.10].iter().enumerate() {
+        let s = 700 + 100 * ci as u64;
+        sweep::<Tempo>("tempo", 1, conflict, s + 10, &mut rows);
+        sweep::<Tempo>("tempo", 2, conflict, s + 20, &mut rows);
+        sweep::<Atlas>("atlas", 1, conflict, s + 30, &mut rows);
+        sweep::<Atlas>("atlas", 2, conflict, s + 40, &mut rows);
+        sweep::<FPaxos>("fpaxos", 1, conflict, s + 50, &mut rows);
+        sweep::<Caesar>("caesar", 2, conflict, s + 60, &mut rows);
+    }
+    print_table(
+        "Figure 7: throughput/latency vs load, 5 sites, 4KB payload (cluster mode)",
+        &[
+            "protocol",
+            "conflicts",
+            "clients/site",
+            "kops/s",
+            "p50 ms",
+            "p99 ms",
+            "cpu%avg/max",
+            "in%",
+            "out%avg/max",
+        ],
+        &rows,
+    );
+}

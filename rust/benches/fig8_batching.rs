@@ -1,0 +1,52 @@
+//! Figure 8: maximum throughput with batching OFF/ON for payload sizes
+//! 256 B, 1 KiB and 4 KiB (batch window 5 ms / 10^5 commands, as in the
+//! paper). Cluster mode, high load.
+//!
+//! Expected shape: batching rescues FPaxos at small payloads (the leader
+//! thread is the bottleneck) but brings only moderate gains to Tempo,
+//! whose load is already spread across replicas.
+
+use tempo::bench_util::{kops, print_table, throughput_opts};
+use tempo::core::Config;
+use tempo::protocol::fpaxos::FPaxos;
+use tempo::protocol::tempo::Tempo;
+use tempo::protocol::Protocol;
+use tempo::sim::{run, Topology};
+use tempo::workload::ConflictWorkload;
+
+const CLIENTS: usize = 4096;
+
+fn cell<P: Protocol>(payload: u32, batching: bool, seed: u64) -> f64 {
+    let config = Config::new(5, 1);
+    let mut opts = throughput_opts(Topology::ec2(), CLIENTS, seed);
+    if batching {
+        opts.batching = Some((100_000, 5_000));
+    }
+    let result = run::<P, _>(config, opts, ConflictWorkload::new(0.02, payload));
+    result.metrics.throughput_ops_s()
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    for (i, &payload) in [256u32, 1024, 4096].iter().enumerate() {
+        let s = 800 + 10 * i as u64;
+        let f_off = cell::<FPaxos>(payload, false, s + 1);
+        let f_on = cell::<FPaxos>(payload, true, s + 2);
+        let t_off = cell::<Tempo>(payload, false, s + 3);
+        let t_on = cell::<Tempo>(payload, true, s + 4);
+        rows.push(vec![
+            format!("{payload}B"),
+            kops(f_off),
+            kops(f_on),
+            format!("{:.1}x", f_on / f_off.max(1.0)),
+            kops(t_off),
+            kops(t_on),
+            format!("{:.1}x", t_on / t_off.max(1.0)),
+        ]);
+    }
+    print_table(
+        "Figure 8: max throughput (kops/s), batching OFF vs ON (f = 1)",
+        &["payload", "fpaxos OFF", "fpaxos ON", "gain", "tempo OFF", "tempo ON", "gain"],
+        &rows,
+    );
+}

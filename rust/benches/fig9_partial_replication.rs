@@ -1,0 +1,63 @@
+//! Figure 9: partial replication with YCSB+T — maximum throughput of
+//! Tempo vs Janus* across shard counts {2, 4, 6}, contention
+//! zipf ∈ {0.5, 0.7} and Janus* write ratios {0%, 5%, 50%}. Each shard is
+//! replicated at 3 sites (Ireland, N. California, Singapore), cluster mode.
+//! Paper: 1M keys/shard; scaled to 100K keys/shard and fewer clients.
+//!
+//! Expected shape: Janus* loses throughput as writes/contention grow;
+//! Tempo matches Janus*'s read-only ceiling, is unaffected by either knob,
+//! and scales with the number of shards.
+
+use tempo::bench_util::{kops, print_table, throughput_opts};
+use tempo::core::Config;
+use tempo::protocol::depsmr::Janus;
+use tempo::protocol::tempo::Tempo;
+use tempo::protocol::Protocol;
+use tempo::sim::{run, Topology};
+use tempo::workload::YcsbWorkload;
+
+const CLIENTS: usize = 1024;
+const KEYS_PER_SHARD: u64 = 100_000;
+
+fn cell<P: Protocol>(shards: u32, zipf: f64, writes: f64, seed: u64) -> f64 {
+    let config = Config::new(3, 1).with_shards(shards);
+    let opts = throughput_opts(Topology::ec2_three(), CLIENTS, seed);
+    let workload = YcsbWorkload::new(KEYS_PER_SHARD * shards as u64, zipf, writes);
+    let result = run::<P, _>(config, opts, workload);
+    result.metrics.throughput_ops_s()
+}
+
+fn main() {
+    let mut rows = Vec::new();
+    for (zi, &zipf) in [0.5f64, 0.7].iter().enumerate() {
+        for (si, &shards) in [2u32, 4, 6].iter().enumerate() {
+            let s = 900 + 100 * zi as u64 + 10 * si as u64;
+            let tempo = cell::<Tempo>(shards, zipf, 0.5, s + 1);
+            let j0 = cell::<Janus>(shards, zipf, 0.0, s + 2);
+            let j5 = cell::<Janus>(shards, zipf, 0.05, s + 3);
+            let j50 = cell::<Janus>(shards, zipf, 0.5, s + 4);
+            rows.push(vec![
+                format!("zipf={zipf}"),
+                shards.to_string(),
+                kops(tempo),
+                kops(j0),
+                kops(j5),
+                kops(j50),
+                format!("{:.1}x", tempo / j50.max(1.0)),
+            ]);
+        }
+    }
+    print_table(
+        "Figure 9: max throughput (kops/s), YCSB+T, 3 sites per shard",
+        &[
+            "contention",
+            "shards",
+            "tempo",
+            "janus* w=0%",
+            "janus* w=5%",
+            "janus* w=50%",
+            "tempo/janus*w50",
+        ],
+        &rows,
+    );
+}

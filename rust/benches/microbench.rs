@@ -1,0 +1,98 @@
+//! Component microbenchmarks for the §Perf pass: simulator event rate,
+//! promise-store throughput, SCC executor, histogram, and the PJRT
+//! stability kernel vs the pure-Rust path.
+
+use std::time::Instant;
+use tempo::core::{Config, Dot, ProcessId};
+use tempo::executor::DepGraph;
+use tempo::metrics::Histogram;
+use tempo::protocol::tempo::promises::{PromiseSet, PromiseStore};
+use tempo::protocol::tempo::Tempo;
+use tempo::runtime::stability::{stable_watermarks_rust, KernelShape, StabilityKernel};
+use tempo::runtime::Runtime;
+use tempo::sim::{run, SimOpts, Topology};
+use tempo::util::Rng;
+use tempo::workload::ConflictWorkload;
+
+fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let el = start.elapsed();
+    println!(
+        "{name:<44} {iters:>10} iters  {:>10.1} ns/iter  {:>12.0} /s",
+        el.as_nanos() as f64 / iters as f64,
+        iters as f64 / el.as_secs_f64()
+    );
+}
+
+fn main() {
+    println!("--- component microbenchmarks ---");
+
+    // Promise store: contiguous adds + watermark queries.
+    let procs: Vec<ProcessId> = (0..5).map(ProcessId).collect();
+    let mut store = PromiseStore::default();
+    let mut next = 1u64;
+    bench("promise_store add_range + watermark", 1_000_000, || {
+        let batch = PromiseSet { detached: vec![(next, next)], attached: vec![] };
+        store.add(procs[(next % 5) as usize], &batch, |_| true);
+        next += 1;
+        std::hint::black_box(store.stable_watermark(&procs, 3));
+    });
+
+    // Histogram record.
+    let mut h = Histogram::new();
+    let mut rng = Rng::new(1);
+    bench("histogram record", 4_000_000, || {
+        h.record(rng.gen_between(100, 1_000_000));
+    });
+
+    // SCC executor: 1k-node chains.
+    bench("dep_graph 1k-chain commit+execute", 200, || {
+        let mut g = DepGraph::default();
+        let mut prev: Option<Dot> = None;
+        for i in 1..=1000u64 {
+            let d = Dot::new(ProcessId(0), i);
+            g.commit(d, prev.into_iter().collect());
+            prev = Some(d);
+        }
+        let sccs = g.ready_from(prev.unwrap()).unwrap();
+        std::hint::black_box(sccs.len());
+    });
+
+    // End-to-end simulator event rate (Tempo, 5 sites, 2% conflicts).
+    let start = Instant::now();
+    let config = Config::new(5, 1);
+    let mut o = SimOpts::new(Topology::ec2());
+    o.clients_per_site = 256;
+    o.warmup_us = 0;
+    o.duration_us = 10_000_000;
+    o.seed = 99;
+    let result = run::<Tempo, _>(config, o, ConflictWorkload::new(0.02, 100));
+    let el = start.elapsed();
+    let cmds = result.metrics.ops;
+    println!(
+        "simulator end-to-end: {cmds} cmds in {:.2}s wall = {:.0} cmds/s (sim-time 10s)",
+        el.as_secs_f64(),
+        cmds as f64 / el.as_secs_f64()
+    );
+
+    // Stability kernel: pure Rust vs PJRT artifact.
+    let shape = KernelShape::default();
+    let bits = vec![1u8; shape.partitions * shape.replicas * shape.window];
+    bench("stability pure-rust [16,5,64]", 200_000, || {
+        std::hint::black_box(stable_watermarks_rust(&bits, &shape));
+    });
+    if std::path::Path::new("artifacts/stability.hlo.txt").exists() {
+        let runtime = Runtime::cpu().unwrap();
+        let kernel =
+            StabilityKernel::load(&runtime, "artifacts/stability.hlo.txt", shape).unwrap();
+        let queue = vec![1i32; shape.partitions * shape.queue];
+        bench("stability PJRT artifact [16,5,64]", 2_000, || {
+            std::hint::black_box(kernel.tick(&bits, &queue).unwrap());
+        });
+    } else {
+        println!("stability PJRT artifact: skipped (run `make artifacts`)");
+    }
+}

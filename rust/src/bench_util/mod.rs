@@ -1,0 +1,91 @@
+//! Shared harness for the figure/table benchmarks (criterion is not
+//! available offline; each bench is a `harness = false` binary that prints
+//! the rows of the corresponding paper table/figure).
+//!
+//! Scaling note (see EXPERIMENTS.md): client counts and window lengths are
+//! scaled down from the paper's cluster (which ran minutes-long windows
+//! with up to 20480 clients/site) so each figure regenerates in minutes on
+//! one machine. Shapes — who wins, by what factor, where crossovers fall —
+//! are the reproduction target, not absolute numbers.
+
+use crate::core::Config;
+use crate::metrics::RunMetrics;
+use crate::protocol::Protocol;
+use crate::sim::{ResourceModel, SimOpts, Topology};
+use crate::workload::Workload;
+
+/// One measured cell of a figure.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub protocol: &'static str,
+    pub label: String,
+    pub metrics: RunMetrics,
+}
+
+/// Run a protocol/workload pair under `opts` and collect metrics.
+pub fn measure<P: Protocol, W: Workload>(
+    protocol: &'static str,
+    label: impl Into<String>,
+    config: Config,
+    opts: SimOpts,
+    workload: W,
+) -> Cell {
+    let result = crate::sim::run::<P, W>(config, opts, workload);
+    Cell { protocol, label: label.into(), metrics: result.metrics }
+}
+
+/// Simulator-mode options (no CPU/NIC model): latency experiments.
+pub fn latency_opts(topology: Topology, clients_per_site: usize, seed: u64) -> SimOpts {
+    let mut o = SimOpts::new(topology);
+    o.clients_per_site = clients_per_site;
+    o.warmup_us = 3_000_000;
+    o.duration_us = 20_000_000;
+    o.seed = seed;
+    o
+}
+
+/// Cluster-mode options (CPU/NIC model on): throughput experiments.
+pub fn throughput_opts(topology: Topology, clients_per_site: usize, seed: u64) -> SimOpts {
+    let mut o = SimOpts::new(topology);
+    o.clients_per_site = clients_per_site;
+    o.warmup_us = 1_000_000;
+    o.duration_us = 3_000_000;
+    o.seed = seed;
+    o.resources = Some(ResourceModel::cluster());
+    o
+}
+
+/// Print a fixed-width table.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// ms with one decimal from µs.
+pub fn ms(us: u64) -> String {
+    format!("{:.1}", us as f64 / 1e3)
+}
+
+/// Kilo-ops/s with one decimal.
+pub fn kops(v: f64) -> String {
+    format!("{:.1}", v / 1e3)
+}

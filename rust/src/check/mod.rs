@@ -1,0 +1,286 @@
+//! PSMR specification checker (paper §2): Validity, Ordering, Liveness.
+//!
+//! Consumes the execution logs and client completions recorded by the
+//! simulator and verifies:
+//!
+//! - **Validity** — a process executes a command at most once, and only
+//!   commands that were submitted.
+//! - **Per-partition agreement** — partitions are *keys* (§2): all
+//!   replicas of a key's shard group execute the commands accessing that
+//!   key in the same order (up to a prefix; lagging replicas are allowed).
+//! - **Ordering** — the union of per-key execution orders and the
+//!   real-time order is acyclic (no two partitions order two commands in
+//!   contradictory ways, and completed commands precede later ones).
+//! - **Liveness** — after a drained run, every submitted command executes
+//!   at every live process of every accessed shard group.
+
+use crate::core::{key_to_shard, Command, Dot, Key, ProcessId};
+use crate::sim::SimResult;
+use std::collections::{HashMap, HashSet};
+
+/// A violation of the PSMR specification.
+#[derive(Clone, Debug)]
+pub enum Violation {
+    DuplicateExecution { process: ProcessId, dot: Dot },
+    ExecutedUnsubmitted { process: ProcessId, dot: Dot },
+    DivergentKeyOrder { key: Key, a: ProcessId, b: ProcessId, position: usize },
+    OrderingCycle { sample: Vec<Dot> },
+    RealTimeViolation { first: Dot, second: Dot, key: Key },
+    NotExecuted { process: ProcessId, dot: Dot },
+}
+
+/// Configuration view the checker needs.
+pub struct CheckConfig {
+    pub shards: u32,
+    pub r: usize,
+}
+
+impl CheckConfig {
+    fn shard_procs(&self, shard: u32) -> impl Iterator<Item = usize> + '_ {
+        let base = shard as usize * self.r;
+        base..base + self.r
+    }
+}
+
+impl From<&crate::core::Config> for CheckConfig {
+    fn from(c: &crate::core::Config) -> Self {
+        CheckConfig { shards: c.shards, r: c.r }
+    }
+}
+
+/// Check a drained (or running) simulation result against the PSMR spec.
+/// `require_liveness` should be set only for drained runs.
+pub fn check_psmr(
+    config: &crate::core::Config,
+    result: &SimResult,
+    require_liveness: bool,
+) -> Vec<Violation> {
+    let cfg = CheckConfig::from(config);
+    let mut violations = Vec::new();
+    let submitted: HashMap<Dot, &Command> =
+        result.submitted.iter().map(|(d, c)| (*d, c)).collect();
+
+    // --- Validity --------------------------------------------------------
+    let mut per_proc: Vec<Vec<Dot>> = Vec::with_capacity(result.execution_logs.len());
+    for (p, log) in result.execution_logs.iter().enumerate() {
+        let mut seen = HashSet::new();
+        let mut order = Vec::with_capacity(log.len());
+        for &(dot, _) in log {
+            if !seen.insert(dot) {
+                violations
+                    .push(Violation::DuplicateExecution { process: ProcessId(p as u32), dot });
+            }
+            if !submitted.contains_key(&dot) {
+                violations
+                    .push(Violation::ExecutedUnsubmitted { process: ProcessId(p as u32), dot });
+            }
+            order.push(dot);
+        }
+        per_proc.push(order);
+    }
+
+    // --- Per-partition (per-key) agreement --------------------------------
+    // Project each process log onto each key; all replicas of the key's
+    // shard group must agree on the order of *conflicting* commands:
+    // the write sequence must match (up to a prefix), and every read must
+    // observe the same preceding write. Read-read reordering is allowed —
+    // reads commute (§3.3 "Limitations": only the dependency-based
+    // baselines exploit this; Tempo orders everything, which also passes).
+    let mut key_order: HashMap<Key, Vec<Dot>> = HashMap::new();
+    {
+        let is_write = |dot: &Dot| submitted.get(dot).map_or(true, |c| c.op != crate::core::Op::Get);
+        // key → per-process projected sequences
+        let mut projections: HashMap<Key, Vec<(ProcessId, Vec<Dot>)>> = HashMap::new();
+        for (p, order) in per_proc.iter().enumerate() {
+            let my_shard = (p / cfg.r) as u32;
+            let mut local: HashMap<Key, Vec<Dot>> = HashMap::new();
+            for dot in order {
+                if let Some(cmd) = submitted.get(dot) {
+                    for &k in &cmd.keys {
+                        // Only this process's own partitions: a key's order
+                        // is agreed among the replicas of its shard group.
+                        if key_to_shard(k, cfg.shards).0 == my_shard {
+                            local.entry(k).or_default().push(*dot);
+                        }
+                    }
+                }
+            }
+            for (k, seq) in local {
+                projections.entry(k).or_default().push((ProcessId(p as u32), seq));
+            }
+        }
+        for (k, mut seqs) in projections {
+            seqs.sort_by_key(|(_, s)| std::cmp::Reverse(s.len()));
+            let (ref_p, reference) = seqs[0].clone();
+            // Reference write sequence and read→preceding-write mapping.
+            let ref_writes: Vec<Dot> =
+                reference.iter().filter(|d| is_write(d)).copied().collect();
+            let ref_read_ctx: HashMap<Dot, usize> = {
+                let mut ctx = HashMap::new();
+                let mut w = 0usize;
+                for d in &reference {
+                    if is_write(d) {
+                        w += 1;
+                    } else {
+                        ctx.insert(*d, w);
+                    }
+                }
+                ctx
+            };
+            for (p, seq) in &seqs[1..] {
+                let mut w = 0usize;
+                let mut wseq = 0usize; // index into this replica's writes
+                let mut diverged = None;
+                for (i, d) in seq.iter().enumerate() {
+                    if is_write(d) {
+                        if ref_writes.get(wseq) != Some(d) {
+                            diverged = Some(i);
+                            break;
+                        }
+                        wseq += 1;
+                        w += 1;
+                    } else if let Some(&ctx) = ref_read_ctx.get(d) {
+                        if ctx != w {
+                            diverged = Some(i);
+                            break;
+                        }
+                    }
+                }
+                if let Some(i) = diverged {
+                    violations.push(Violation::DivergentKeyOrder {
+                        key: k,
+                        a: ref_p,
+                        b: *p,
+                        position: i,
+                    });
+                }
+            }
+            key_order.insert(k, reference);
+        }
+    }
+
+    // --- Ordering: real-time within shared keys ---------------------------
+    // If c completed before d was submitted and they share a key, then c
+    // must precede d in that key's execution order.
+    let positions: HashMap<Key, HashMap<Dot, usize>> = key_order
+        .iter()
+        .map(|(k, order)| (*k, order.iter().enumerate().map(|(i, d)| (*d, i)).collect()))
+        .collect();
+    for c in &result.completions {
+        for d in &result.completions {
+            if c.completed_at <= d.submitted_at && c.dot != d.dot {
+                let (ca, da) = match (submitted.get(&c.dot), submitted.get(&d.dot)) {
+                    (Some(a), Some(b)) => (a, b),
+                    _ => continue,
+                };
+                // Only conflicting pairs constrain the order.
+                if ca.op == crate::core::Op::Get && da.op == crate::core::Op::Get {
+                    continue;
+                }
+                for &k in &ca.keys {
+                    if da.keys.contains(&k) {
+                        if let Some(pos) = positions.get(&k) {
+                            if let (Some(&pc), Some(&pd)) = (pos.get(&c.dot), pos.get(&d.dot)) {
+                                if pd < pc {
+                                    violations.push(Violation::RealTimeViolation {
+                                        first: c.dot,
+                                        second: d.dot,
+                                        key: k,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // --- Ordering: acyclicity of the cross-partition order ----------------
+    // Union of per-key execution orders (consecutive edges); a cycle means
+    // two partitions ordered two commands in contradictory ways.
+    {
+        let is_write =
+            |dot: &Dot| submitted.get(dot).map_or(true, |c| c.op != crate::core::Op::Get);
+        let mut indeg: HashMap<Dot, usize> = HashMap::new();
+        let mut adj: HashMap<Dot, Vec<Dot>> = HashMap::new();
+        let mut edge = |a: Dot, b: Dot, adj: &mut HashMap<Dot, Vec<Dot>>,
+                        indeg: &mut HashMap<Dot, usize>| {
+            adj.entry(a).or_default().push(b);
+            *indeg.entry(b).or_insert(0) += 1;
+            indeg.entry(a).or_insert(0);
+        };
+        for order in key_order.values() {
+            // Conflicting edges only: last write → read, read → next write,
+            // write → next write. Read-read pairs commute.
+            let mut last_write: Option<Dot> = None;
+            let mut reads_since: Vec<Dot> = Vec::new();
+            for &d in order {
+                indeg.entry(d).or_insert(0);
+                if is_write(&d) {
+                    if let Some(w) = last_write {
+                        edge(w, d, &mut adj, &mut indeg);
+                    }
+                    for r in reads_since.drain(..) {
+                        edge(r, d, &mut adj, &mut indeg);
+                    }
+                    last_write = Some(d);
+                } else {
+                    if let Some(w) = last_write {
+                        edge(w, d, &mut adj, &mut indeg);
+                    }
+                    reads_since.push(d);
+                }
+            }
+        }
+        let mut queue: Vec<Dot> =
+            indeg.iter().filter(|&(_, &d)| d == 0).map(|(&dot, _)| dot).collect();
+        let total = indeg.len();
+        let mut visited = 0usize;
+        let mut indeg = indeg;
+        while let Some(d) = queue.pop() {
+            visited += 1;
+            if let Some(next) = adj.get(&d) {
+                for &n in next {
+                    let e = indeg.get_mut(&n).unwrap();
+                    *e -= 1;
+                    if *e == 0 {
+                        queue.push(n);
+                    }
+                }
+            }
+        }
+        if visited != total {
+            let sample: Vec<Dot> =
+                indeg.iter().filter(|&(_, &d)| d > 0).take(4).map(|(&dot, _)| dot).collect();
+            violations.push(Violation::OrderingCycle { sample });
+        }
+    }
+
+    // --- Liveness ----------------------------------------------------------
+    if require_liveness {
+        let executed_sets: Vec<HashSet<Dot>> =
+            per_proc.iter().map(|v| v.iter().copied().collect()).collect();
+        for (dot, cmd) in &result.submitted {
+            for s in cmd.shards(cfg.shards) {
+                for p in cfg.shard_procs(s.0) {
+                    if !executed_sets[p].contains(dot) {
+                        violations
+                            .push(Violation::NotExecuted { process: ProcessId(p as u32), dot: *dot });
+                    }
+                }
+            }
+        }
+    }
+
+    violations
+}
+
+/// Assert no violations, with a readable report.
+pub fn assert_psmr(config: &crate::core::Config, result: &SimResult, require_liveness: bool) {
+    let violations = check_psmr(config, result, require_liveness);
+    if !violations.is_empty() {
+        let shown: Vec<_> = violations.iter().take(10).collect();
+        panic!("PSMR violated: {} violation(s); first 10: {:#?}", violations.len(), shown);
+    }
+}

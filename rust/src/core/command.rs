@@ -1,0 +1,160 @@
+//! Commands: the unit of replication.
+//!
+//! A command accesses one or more *partitions*. Following the paper (§6.2,
+//! §6.4) a partition is identified by a key: commands conflict iff they
+//! share a key. In partial replication each key lives on exactly one shard;
+//! in full replication there is a single shard replicated everywhere.
+
+use super::id::{ClientId, Dot, ShardId};
+
+/// A state-machine key (paper: 8-byte keys).
+pub type Key = u64;
+
+/// Operation applied to the in-memory KV store at execution time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Read the value of the key.
+    Get,
+    /// Overwrite the value of the key with `payload_len` fresh bytes.
+    Put,
+    /// Read-modify-write (always conflicting, used by YCSB+T updates).
+    Rmw,
+}
+
+/// An application command submitted by a client.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Command {
+    /// Submitting client (used to route the response).
+    pub client: ClientId,
+    /// Keys accessed — one per partition touched. Sorted, deduplicated.
+    pub keys: Vec<Key>,
+    /// Operation kind (uniform across keys; enough for YCSB+T).
+    pub op: Op,
+    /// Size of the payload carried by the command, in bytes. Payload
+    /// contents are irrelevant to ordering so we carry only the size
+    /// (the wire codec materializes zero bytes for it).
+    pub payload_len: u32,
+    /// Number of single-key commands folded into this one by the batching
+    /// layer (1 = unbatched). Throughput counts `batched` operations.
+    pub batched: u32,
+}
+
+impl Command {
+    pub fn new(client: ClientId, mut keys: Vec<Key>, op: Op, payload_len: u32) -> Self {
+        keys.sort_unstable();
+        keys.dedup();
+        Self { client, keys, op, payload_len, batched: 1 }
+    }
+
+    /// Single-key shorthand.
+    pub fn single(client: ClientId, key: Key, op: Op, payload_len: u32) -> Self {
+        Self { client, keys: vec![key], op, payload_len, batched: 1 }
+    }
+
+    /// Does this command conflict with another (shared key)?
+    /// Both key vectors are sorted, so this is a linear merge.
+    pub fn conflicts_with(&self, other: &Command) -> bool {
+        let (mut i, mut j) = (0, 0);
+        while i < self.keys.len() && j < other.keys.len() {
+            match self.keys[i].cmp(&other.keys[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => return true,
+            }
+        }
+        false
+    }
+
+    /// Shards accessed by this command under `key_to_shard` placement.
+    pub fn shards(&self, shards: u32) -> Vec<ShardId> {
+        let mut out: Vec<ShardId> = self.keys.iter().map(|k| key_to_shard(*k, shards)).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Approximate wire size of this command in bytes (key bytes + payload).
+    pub fn wire_size(&self) -> u64 {
+        8 * self.keys.len() as u64 + self.payload_len as u64 + 16
+    }
+}
+
+/// Static key placement: key → shard.
+pub fn key_to_shard(key: Key, shards: u32) -> ShardId {
+    debug_assert!(shards > 0);
+    // Fibonacci hashing: avoids pathological striding for sequential keys.
+    let h = key.wrapping_mul(0x9E3779B97F4A7C15);
+    ShardId((h >> 32) as u32 % shards)
+}
+
+/// A command completion observed by a client: used by the PSMR checker and
+/// latency accounting.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub dot: Dot,
+    pub client: ClientId,
+    pub submitted_at: u64,
+    pub completed_at: u64,
+}
+
+impl Completion {
+    pub fn latency(&self) -> u64 {
+        self.completed_at.saturating_sub(self.submitted_at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conflict_detection_shared_key() {
+        let a = Command::new(ClientId(1), vec![5, 9], Op::Put, 100);
+        let b = Command::new(ClientId(2), vec![9, 12], Op::Put, 100);
+        let c = Command::new(ClientId(3), vec![1, 2], Op::Put, 100);
+        assert!(a.conflicts_with(&b));
+        assert!(b.conflicts_with(&a));
+        assert!(!a.conflicts_with(&c));
+        assert!(!c.conflicts_with(&b));
+    }
+
+    #[test]
+    fn keys_sorted_and_deduped() {
+        let a = Command::new(ClientId(1), vec![9, 5, 9, 5], Op::Get, 0);
+        assert_eq!(a.keys, vec![5, 9]);
+    }
+
+    #[test]
+    fn key_to_shard_is_total_and_stable() {
+        for shards in 1..8u32 {
+            for key in 0..1000u64 {
+                let s = key_to_shard(key, shards);
+                assert!(s.0 < shards);
+                assert_eq!(s, key_to_shard(key, shards));
+            }
+        }
+    }
+
+    #[test]
+    fn key_to_shard_balances_sequential_keys() {
+        let shards = 4;
+        let mut counts = vec![0u32; shards as usize];
+        for key in 0..10_000u64 {
+            counts[key_to_shard(key, shards).0 as usize] += 1;
+        }
+        for &c in &counts {
+            // Each shard within 20% of fair share.
+            assert!((2000..=3000).contains(&c), "unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn multi_shard_command_lists_each_shard_once() {
+        let cmd = Command::new(ClientId(1), vec![1, 2, 3, 4, 5, 6, 7, 8], Op::Put, 10);
+        let shards = cmd.shards(2);
+        assert!(!shards.is_empty() && shards.len() <= 2);
+        let mut sorted = shards.clone();
+        sorted.dedup();
+        assert_eq!(sorted, shards);
+    }
+}

@@ -1,0 +1,218 @@
+//! Cluster configuration: replication factor, fault tolerance, sharding,
+//! placement, and the quorum arithmetic used throughout the protocols.
+
+use super::id::{ProcessId, ShardId};
+
+/// Static configuration of a (P)SMR deployment.
+///
+/// Following Flexible Paxos (and the paper §2), the allowed number of
+/// failures `f` is decoupled from the replication factor `r`:
+/// `1 <= f <= ⌊(r-1)/2⌋`.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Replication factor: processes per partition.
+    pub r: usize,
+    /// Tolerated failures per partition.
+    pub f: usize,
+    /// Number of shards (1 = full replication).
+    pub shards: u32,
+    /// Number of sites (data centers). For full replication `sites == r`.
+    pub sites: usize,
+    /// Interval between periodic `MPromises` broadcasts / executor runs,
+    /// in microseconds of (simulated) time. Paper flushes every 5 ms.
+    pub tick_interval_us: u64,
+    /// Enable the MBump optimization for faster multi-partition stability
+    /// (paper §4 "Faster stability").
+    pub bump_enabled: bool,
+    /// Timeout after which a pending command triggers recovery, in µs.
+    /// `u64::MAX` disables recovery (useful in failure-free benches).
+    pub recovery_timeout_us: u64,
+}
+
+impl Config {
+    pub fn new(r: usize, f: usize) -> Self {
+        assert!(r >= 3, "need at least 3 replicas (r={r})");
+        assert!(f >= 1 && f <= (r - 1) / 2, "need 1 <= f <= ⌊(r-1)/2⌋ (r={r}, f={f})");
+        Self {
+            r,
+            f,
+            shards: 1,
+            sites: r,
+            tick_interval_us: 5_000,
+            bump_enabled: true,
+            recovery_timeout_us: u64::MAX,
+        }
+    }
+
+    pub fn with_shards(mut self, shards: u32) -> Self {
+        assert!(shards >= 1);
+        self.shards = shards;
+        self
+    }
+
+    pub fn with_tick_interval_us(mut self, us: u64) -> Self {
+        self.tick_interval_us = us;
+        self
+    }
+
+    pub fn with_recovery_timeout_us(mut self, us: u64) -> Self {
+        self.recovery_timeout_us = us;
+        self
+    }
+
+    pub fn with_bump(mut self, enabled: bool) -> Self {
+        self.bump_enabled = enabled;
+        self
+    }
+
+    /// Tempo/Atlas fast-quorum size: `⌊r/2⌋ + f`.
+    pub fn fast_quorum_size(&self) -> usize {
+        self.r / 2 + self.f
+    }
+
+    /// Slow (Flexible Paxos phase-2) quorum size: `f + 1`.
+    pub fn slow_quorum_size(&self) -> usize {
+        self.f + 1
+    }
+
+    /// Recovery (Flexible Paxos phase-1) quorum size: `r - f`.
+    pub fn recovery_quorum_size(&self) -> usize {
+        self.r - self.f
+    }
+
+    /// Simple majority: `⌊r/2⌋ + 1`. Stability detection threshold.
+    pub fn majority(&self) -> usize {
+        self.r / 2 + 1
+    }
+
+    /// EPaxos fast-quorum size: `⌊3r/4⌋` (paper §6 intro).
+    pub fn epaxos_fast_quorum_size(&self) -> usize {
+        3 * self.r / 4
+    }
+
+    /// Caesar fast-quorum size: `⌈3r/4⌉` (paper §6 intro).
+    pub fn caesar_fast_quorum_size(&self) -> usize {
+        (3 * self.r).div_ceil(4)
+    }
+
+    /// Total number of processes across all shards.
+    pub fn n_processes(&self) -> usize {
+        self.r * self.shards as usize
+    }
+
+    /// All processes replicating `shard` (the paper's `I_p`).
+    pub fn shard_processes(&self, shard: ShardId) -> Vec<ProcessId> {
+        let base = shard.0 * self.r as u32;
+        (0..self.r as u32).map(|k| ProcessId(base + k)).collect()
+    }
+
+    /// Shard replicated by `p`.
+    pub fn shard_of(&self, p: ProcessId) -> ShardId {
+        ShardId(p.0 / self.r as u32)
+    }
+
+    /// Site (data center) where `p` runs. Replica k of every shard is
+    /// placed at site k: processes with the same site index are co-located
+    /// (paper Fig. 4: "processes with the same color").
+    pub fn site_of(&self, p: ProcessId) -> usize {
+        (p.0 as usize % self.r) % self.sites
+    }
+
+    /// The replica of `shard` co-located with (or closest to) `p`
+    /// — used to pick per-partition coordinators (the paper's `I_c^i`).
+    pub fn closest_in_shard(&self, p: ProcessId, shard: ShardId) -> ProcessId {
+        let k = p.0 % self.r as u32;
+        ProcessId(shard.0 * self.r as u32 + k)
+    }
+
+    /// Fast quorum for a command coordinated by `coord` at its shard:
+    /// the coordinator plus the `fq-1` replicas closest to it
+    /// (ring order as a latency proxy; real deployments would sort by RTT).
+    pub fn fast_quorum(&self, coord: ProcessId) -> Vec<ProcessId> {
+        self.quorum_from(coord, self.fast_quorum_size())
+    }
+
+    /// Slow quorum including `coord`.
+    pub fn slow_quorum(&self, coord: ProcessId) -> Vec<ProcessId> {
+        self.quorum_from(coord, self.slow_quorum_size())
+    }
+
+    fn quorum_from(&self, coord: ProcessId, size: usize) -> Vec<ProcessId> {
+        let shard = self.shard_of(coord);
+        let base = shard.0 * self.r as u32;
+        let k0 = coord.0 - base;
+        (0..size as u32).map(|d| ProcessId(base + (k0 + d) % self.r as u32)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quorum_sizes_match_paper() {
+        // r=5, f=1: fast 3, slow 2, recovery 4, majority 3.
+        let c = Config::new(5, 1);
+        assert_eq!(c.fast_quorum_size(), 3);
+        assert_eq!(c.slow_quorum_size(), 2);
+        assert_eq!(c.recovery_quorum_size(), 4);
+        assert_eq!(c.majority(), 3);
+        // r=5, f=2: fast 4, slow 3, recovery 3.
+        let c = Config::new(5, 2);
+        assert_eq!(c.fast_quorum_size(), 4);
+        assert_eq!(c.slow_quorum_size(), 3);
+        assert_eq!(c.recovery_quorum_size(), 3);
+        // EPaxos r=5 -> 3; Caesar r=5 -> 4.
+        assert_eq!(c.epaxos_fast_quorum_size(), 3);
+        assert_eq!(c.caesar_fast_quorum_size(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_f_too_large() {
+        // r=3 admits only f=1.
+        let _ = Config::new(3, 2);
+    }
+
+    #[test]
+    fn recovery_and_fast_quorums_always_intersect_in_majority_minus_coord() {
+        // |Q_rec ∩ Q_fast| >= ⌊r/2⌋ (Property 4 prerequisite).
+        for r in [3, 5, 7, 9] {
+            for f in 1..=(r - 1) / 2 {
+                let c = Config::new(r, f);
+                assert!(
+                    c.recovery_quorum_size() + c.fast_quorum_size() - r >= r / 2,
+                    "r={r} f={f}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shard_process_layout_roundtrips() {
+        let c = Config::new(3, 1).with_shards(4);
+        assert_eq!(c.n_processes(), 12);
+        for s in 0..4 {
+            for p in c.shard_processes(ShardId(s)) {
+                assert_eq!(c.shard_of(p), ShardId(s));
+            }
+        }
+        // Co-located replicas share sites across shards.
+        assert_eq!(c.site_of(ProcessId(0)), c.site_of(ProcessId(3)));
+        assert_eq!(c.closest_in_shard(ProcessId(1), ShardId(2)), ProcessId(7));
+    }
+
+    #[test]
+    fn fast_quorum_contains_coordinator_and_has_right_size() {
+        let c = Config::new(5, 2);
+        for p in 0..5 {
+            let q = c.fast_quorum(ProcessId(p));
+            assert_eq!(q.len(), 4);
+            assert!(q.contains(&ProcessId(p)));
+            let mut u = q.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), q.len(), "duplicates in quorum");
+        }
+    }
+}

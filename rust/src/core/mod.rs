@@ -1,0 +1,9 @@
+//! Core substrate: identifiers, commands, configuration and quorum math.
+
+pub mod command;
+pub mod config;
+pub mod id;
+
+pub use command::{key_to_shard, Command, Completion, Key, Op};
+pub use config::Config;
+pub use id::{ClientId, Dot, DotGen, ProcessId, ShardId};

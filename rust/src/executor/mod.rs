@@ -1,0 +1,11 @@
+//! Execution engines.
+//!
+//! Tempo executes by timestamp stability (implemented inside
+//! `protocol::tempo`); the dependency-based baselines (EPaxos, Atlas,
+//! Janus*) execute committed dependency graphs via strongly-connected
+//! components — the mechanism whose unbounded chains cause the tail
+//! latencies the paper measures (§3.3, §D).
+
+pub mod graph;
+
+pub use graph::DepGraph;

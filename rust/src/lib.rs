@@ -1,0 +1,20 @@
+//! Tempo: efficient replication via timestamp stability (EuroSys'21).
+//!
+//! A from-scratch reproduction of the Tempo leaderless SMR protocol, its
+//! baselines (FPaxos, EPaxos, Atlas, Caesar, Janus*), the paper's
+//! evaluation harness (wide-area simulator, workloads, metrics), a real
+//! TCP cluster runtime, and a PJRT bridge to the AOT-compiled Pallas
+//! stability kernel. See DESIGN.md for the system inventory.
+
+pub mod bench_util;
+pub mod check;
+pub mod core;
+pub mod executor;
+pub mod metrics;
+pub mod protocol;
+pub mod net;
+pub mod sim;
+pub mod store;
+pub mod workload;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,180 @@
+//! `tempo` — CLI launcher for the Tempo reproduction.
+//!
+//! Subcommands:
+//!   sim      run a protocol under the wide-area simulator and print metrics
+//!   cluster  run one real Tempo node over TCP (deployable: one process per
+//!            replica, full mesh given by --addrs)
+//!   bench    list the paper-figure benchmarks and how to run them
+//!
+//! Examples:
+//!   tempo sim --protocol tempo --r 5 --f 1 --conflicts 0.02 --clients 64
+//!   tempo sim --protocol janus --r 3 --f 1 --shards 4 --ycsb 0.7,0.5
+//!   tempo cluster --id 0 --r 3 --addrs 10.0.0.1:7000,10.0.0.2:7000,10.0.0.3:7000
+
+use std::collections::HashMap;
+use tempo::bench_util::{latency_opts, throughput_opts};
+use tempo::core::{Config, ProcessId};
+use tempo::protocol::caesar::Caesar;
+use tempo::protocol::depsmr::{Atlas, EPaxos, Janus};
+use tempo::protocol::fpaxos::FPaxos;
+use tempo::protocol::tempo::Tempo;
+use tempo::protocol::Protocol;
+use tempo::sim::{run, SimOpts, Topology};
+use tempo::workload::{ConflictWorkload, Workload, YcsbWorkload};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let value = args.get(i + 1).cloned().unwrap_or_default();
+            flags.insert(name.to_string(), value);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, name: &str, default: T) -> T {
+    flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn run_sim<P: Protocol, W: Workload>(config: Config, opts: SimOpts, workload: W) {
+    let result = run::<P, W>(config, opts, workload);
+    let t = result.metrics.latency.tail_summary();
+    println!("protocol      : {}", P::name());
+    println!("ops completed : {}", result.metrics.ops);
+    println!("throughput    : {:.1} kops/s", result.metrics.throughput_ops_s() / 1e3);
+    println!("latency       : {t}");
+    println!(
+        "paths         : fast={} slow={} recoveries={}",
+        result.metrics.counters.fast_path,
+        result.metrics.counters.slow_path,
+        result.metrics.counters.recoveries
+    );
+    for (site, h) in &result.metrics.site_latency {
+        println!("site {site}        : mean {:.1} ms", h.mean() / 1e3);
+    }
+    if !result.metrics.utilization.is_empty() {
+        let (cpu, net_in, net_out) = result.metrics.mean_utilization();
+        println!("utilization   : cpu {cpu:.0}% in {net_in:.0}% out {net_out:.0}%");
+    }
+}
+
+fn sim_command(args: &[String]) {
+    let flags = parse_flags(args);
+    let protocol = flags.get("protocol").cloned().unwrap_or_else(|| "tempo".into());
+    let r: usize = flag(&flags, "r", 5);
+    let f: usize = flag(&flags, "f", 1);
+    let shards: u32 = flag(&flags, "shards", 1);
+    let clients: usize = flag(&flags, "clients", 64);
+    let duration_s: u64 = flag(&flags, "duration", 10);
+    let seed: u64 = flag(&flags, "seed", 1);
+    let cluster_mode = flags.contains_key("cluster-mode");
+
+    let config = Config::new(r, f).with_shards(shards);
+    let topology = match r {
+        3 => Topology::ec2_three(),
+        5 => Topology::ec2(),
+        n => Topology::uniform(n, 50),
+    };
+    let mut opts = if cluster_mode {
+        throughput_opts(topology, clients, seed)
+    } else {
+        latency_opts(topology, clients, seed)
+    };
+    opts.duration_us = duration_s * 1_000_000;
+
+    // Workload: --ycsb zipf,writes takes precedence over --conflicts.
+    enum W {
+        Conflict(ConflictWorkload),
+        Ycsb(YcsbWorkload),
+    }
+    let workload = if let Some(y) = flags.get("ycsb") {
+        let parts: Vec<f64> = y.split(',').filter_map(|s| s.parse().ok()).collect();
+        let (zipf, writes) =
+            (parts.first().copied().unwrap_or(0.5), parts.get(1).copied().unwrap_or(0.5));
+        W::Ycsb(YcsbWorkload::new(100_000 * shards as u64, zipf, writes))
+    } else {
+        let conflicts: f64 = flag(&flags, "conflicts", 0.02);
+        let payload: u32 = flag(&flags, "payload", 100);
+        W::Conflict(ConflictWorkload::new(conflicts, payload))
+    };
+
+    macro_rules! dispatch {
+        ($p:ty) => {
+            match workload {
+                W::Conflict(w) => run_sim::<$p, _>(config, opts, w),
+                W::Ycsb(w) => run_sim::<$p, _>(config, opts, w),
+            }
+        };
+    }
+    match protocol.as_str() {
+        "tempo" => dispatch!(Tempo),
+        "atlas" => dispatch!(Atlas),
+        "epaxos" => dispatch!(EPaxos),
+        "janus" => dispatch!(Janus),
+        "fpaxos" => dispatch!(FPaxos),
+        "caesar" => dispatch!(Caesar),
+        other => {
+            eprintln!("unknown protocol '{other}' (tempo|atlas|epaxos|janus|fpaxos|caesar)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cluster_command(args: &[String]) {
+    let flags = parse_flags(args);
+    let id: u32 = flag(&flags, "id", 0);
+    let r: usize = flag(&flags, "r", 3);
+    let f: usize = flag(&flags, "f", 1);
+    let addrs: Vec<String> =
+        flags.get("addrs").map(|a| a.split(',').map(String::from).collect()).unwrap_or_default();
+    if addrs.len() != r {
+        eprintln!("--addrs must list exactly r={r} host:port entries");
+        std::process::exit(2);
+    }
+    let config = Config::new(r, f).with_tick_interval_us(flag(&flags, "tick-us", 1_000));
+    println!("tempo node {id}: r={r} f={f} listening on {}", addrs[id as usize]);
+    match tempo::net::start_node(ProcessId(id), config, addrs) {
+        Ok(_node) => {
+            println!("node up; serving until killed (Ctrl-C)");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("failed to start node: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("sim") => sim_command(&args[1..]),
+        Some("cluster") => cluster_command(&args[1..]),
+        Some("bench") => {
+            println!("paper benchmarks (each prints the corresponding table/figure):");
+            for b in [
+                "table1_fastpath",
+                "fig5_fairness",
+                "fig6_tail_latency",
+                "fig7_load_contention",
+                "fig8_batching",
+                "fig9_partial_replication",
+                "ablation",
+                "microbench",
+            ] {
+                println!("  cargo bench --bench {b}");
+            }
+        }
+        _ => {
+            println!("tempo — Efficient Replication via Timestamp Stability (EuroSys'21)");
+            println!("usage: tempo <sim|cluster|bench> [--flags]   (see src/main.rs docs)");
+        }
+    }
+}

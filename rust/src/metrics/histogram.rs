@@ -1,0 +1,236 @@
+//! Latency histogram with HDR-style logarithmic bucketing.
+//!
+//! Bucket layout: 64 exponential tiers × 32 linear sub-buckets, covering
+//! 1 µs .. ~2^63 µs with <= ~3% relative error — plenty for the paper's
+//! p95–p99.99 plots (Fig. 6).
+
+/// Logarithmic-bucket latency histogram (values in microseconds).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+const SUB: usize = 32;
+const SUB_BITS: u32 = 5;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 64 * SUB], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    #[inline]
+    fn index(value: u64) -> usize {
+        let v = value.max(1);
+        let tier = 63 - v.leading_zeros() as usize; // floor(log2 v)
+        if tier < SUB_BITS as usize {
+            v as usize
+        } else {
+            let sub = ((v >> (tier as u32 - SUB_BITS)) - SUB as u64) as usize;
+            ((tier - SUB_BITS as usize + 1) << SUB_BITS) + sub
+        }
+    }
+
+    /// Lower bound of the bucket with the given index (inverse of `index`).
+    fn bucket_low(idx: usize) -> u64 {
+        if idx < (1 << SUB_BITS) {
+            idx as u64
+        } else {
+            let tier = (idx >> SUB_BITS) - 1 + SUB_BITS as usize;
+            let sub = (idx & (SUB - 1)) as u64;
+            (SUB as u64 + sub) << (tier as u32 - SUB_BITS)
+        }
+    }
+
+    pub fn record(&mut self, value_us: u64) {
+        self.buckets[Self::index(value_us)] += 1;
+        self.count += 1;
+        self.sum += value_us as u128;
+        self.min = self.min.min(value_us);
+        self.max = self.max.max(value_us);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Value at quantile `q` in [0, 1]. Returns the lower bound of the
+    /// bucket containing the q-th sample (conservative).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        if rank >= self.count {
+            return self.max;
+        }
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_low(i).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// The percentile series used by Fig. 6.
+    pub fn tail_summary(&self) -> TailSummary {
+        TailSummary {
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            p99_9: self.quantile(0.999),
+            p99_99: self.quantile(0.9999),
+            mean: self.mean(),
+            count: self.count,
+        }
+    }
+}
+
+/// Summary row for tail-latency reporting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TailSummary {
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub p99_9: u64,
+    pub p99_99: u64,
+    pub mean: f64,
+    pub count: u64,
+}
+
+impl std::fmt::Display for TailSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms p99.9={:.1}ms p99.99={:.1}ms (n={})",
+            self.mean / 1e3,
+            self.p50 as f64 / 1e3,
+            self.p95 as f64 / 1e3,
+            self.p99 as f64 / 1e3,
+            self.p99_9 as f64 / 1e3,
+            self.p99_99 as f64 / 1e3,
+            self.count
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn index_bucket_roundtrip_monotone() {
+        let mut last = 0;
+        for v in [1u64, 2, 31, 32, 33, 100, 1000, 12345, 1 << 20, 1 << 40] {
+            let i = Histogram::index(v);
+            assert!(i >= last, "index must be monotone in value");
+            last = i;
+            let low = Histogram::bucket_low(i);
+            assert!(low <= v, "bucket_low({i})={low} > {v}");
+            // Relative error of the bucket lower bound is < 1/32.
+            assert!((v - low) as f64 <= v as f64 / 16.0, "v={v} low={low}");
+        }
+    }
+
+    #[test]
+    fn exact_quantiles_on_uniform_ramp() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((4_700..=5_100).contains(&p50), "p50={p50}");
+        assert!((9_500..=9_950).contains(&p99), "p99={p99}");
+        assert_eq!(h.quantile(1.0), 10_000);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 10_000);
+        assert!((h.mean() - 5000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut r = Rng::new(11);
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for _ in 0..5_000 {
+            let v = r.gen_between(100, 1_000_000);
+            if r.gen_bool(0.5) {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for q in [0.5, 0.95, 0.99, 0.999] {
+            assert_eq!(a.quantile(q), all.quantile(q));
+        }
+    }
+
+    #[test]
+    fn tail_summary_ordering() {
+        let mut h = Histogram::new();
+        let mut r = Rng::new(12);
+        for _ in 0..100_000 {
+            // long-tailed: 1ms typical, occasional 1s
+            let v = if r.gen_bool(0.001) { 1_000_000 } else { r.gen_between(500, 2_000) };
+            h.record(v);
+        }
+        let t = h.tail_summary();
+        assert!(t.p50 <= t.p95 && t.p95 <= t.p99 && t.p99 <= t.p99_9 && t.p99_9 <= t.p99_99);
+        assert!(t.p99_99 >= 900_000, "tail should catch the 1s outliers: {t}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Measurement: latency histograms, throughput accounting, and the
+//! dstat-style resource utilization the paper's heatmaps report (Fig. 7).
+
+pub mod histogram;
+
+pub use histogram::{Histogram, TailSummary};
+
+use std::collections::BTreeMap;
+
+/// Throughput + latency measured over a run, per site and aggregate.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Aggregate client-observed latency.
+    pub latency: Histogram,
+    /// Per-site client latency (Fig. 5).
+    pub site_latency: BTreeMap<usize, Histogram>,
+    /// Completed operations (batched ops count individually).
+    pub ops: u64,
+    /// Wall/simulated duration of the measured window, µs.
+    pub duration_us: u64,
+    /// Resource utilization collected from the simulator, per process.
+    pub utilization: Vec<Utilization>,
+    /// Protocol counters (fast path, slow path, recoveries...).
+    pub counters: Counters,
+}
+
+impl RunMetrics {
+    pub fn throughput_ops_s(&self) -> f64 {
+        if self.duration_us == 0 {
+            0.0
+        } else {
+            self.ops as f64 * 1e6 / self.duration_us as f64
+        }
+    }
+
+    pub fn record_completion(&mut self, site: usize, latency_us: u64, ops: u32) {
+        self.latency.record(latency_us);
+        self.site_latency.entry(site).or_default().record(latency_us);
+        self.ops += ops as u64;
+    }
+
+    /// Mean utilization across processes: (cpu%, net_in%, net_out%).
+    pub fn mean_utilization(&self) -> (f64, f64, f64) {
+        if self.utilization.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        let n = self.utilization.len() as f64;
+        let sum = self.utilization.iter().fold((0.0, 0.0, 0.0), |acc, u| {
+            (acc.0 + u.cpu, acc.1 + u.net_in, acc.2 + u.net_out)
+        });
+        (sum.0 / n, sum.1 / n, sum.2 / n)
+    }
+
+    /// Peak utilization across processes (the leader in FPaxos).
+    pub fn max_utilization(&self) -> (f64, f64, f64) {
+        self.utilization.iter().fold((0.0, 0.0, 0.0), |acc: (f64, f64, f64), u| {
+            (acc.0.max(u.cpu), acc.1.max(u.net_in), acc.2.max(u.net_out))
+        })
+    }
+}
+
+/// dstat-like utilization of one process over the measured window,
+/// each in [0, 100] percent.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Utilization {
+    pub cpu: f64,
+    pub net_in: f64,
+    pub net_out: f64,
+}
+
+/// Protocol event counters, aggregated across processes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Counters {
+    pub fast_path: u64,
+    pub slow_path: u64,
+    pub recoveries: u64,
+    pub messages: u64,
+    pub executed: u64,
+}
+
+impl Counters {
+    pub fn fast_path_ratio(&self) -> f64 {
+        let total = self.fast_path + self.slow_path;
+        if total == 0 {
+            0.0
+        } else {
+            self.fast_path as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &Counters) {
+        self.fast_path += o.fast_path;
+        self.slow_path += o.slow_path;
+        self.recoveries += o.recoveries;
+        self.messages += o.messages;
+        self.executed += o.executed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let mut m = RunMetrics::default();
+        m.duration_us = 2_000_000; // 2 s
+        for _ in 0..1000 {
+            m.record_completion(0, 1_000, 4);
+        }
+        assert_eq!(m.ops, 4000);
+        assert!((m.throughput_ops_s() - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_site_latency_separated() {
+        let mut m = RunMetrics::default();
+        m.record_completion(0, 100_000, 1);
+        m.record_completion(1, 300_000, 1);
+        assert_eq!(m.site_latency[&0].count(), 1);
+        assert_eq!(m.site_latency[&1].count(), 1);
+        assert!(m.site_latency[&1].quantile(0.5) > m.site_latency[&0].quantile(0.5));
+    }
+
+    #[test]
+    fn utilization_aggregates() {
+        let mut m = RunMetrics::default();
+        m.utilization = vec![
+            Utilization { cpu: 90.0, net_in: 10.0, net_out: 20.0 },
+            Utilization { cpu: 10.0, net_in: 30.0, net_out: 40.0 },
+        ];
+        let (cpu, ni, no) = m.mean_utilization();
+        assert!((cpu - 50.0).abs() < 1e-9 && (ni - 20.0).abs() < 1e-9 && (no - 30.0).abs() < 1e-9);
+        assert_eq!(m.max_utilization().0, 90.0);
+    }
+
+    #[test]
+    fn fast_path_ratio() {
+        let mut c = Counters::default();
+        c.fast_path = 9;
+        c.slow_path = 1;
+        assert!((c.fast_path_ratio() - 0.9).abs() < 1e-9);
+        let mut d = Counters::default();
+        d.merge(&c);
+        assert_eq!(d.fast_path, 9);
+    }
+}

@@ -1,0 +1,220 @@
+//! Real TCP cluster runtime (std::net + threads; Python is never on this
+//! path — the Tempo state machine runs exactly as in the simulator, fed by
+//! length-prefixed frames from peer sockets).
+//!
+//! Topology: one [`Node`] per process, full mesh of TCP connections. Each
+//! node runs (a) an acceptor thread per peer connection that decodes frames
+//! into an event channel, (b) the protocol thread owning the Tempo state
+//! machine, the KV store, and a tick timer, (c) a client API
+//! ([`NodeHandle::submit`]) that enqueues commands and returns completion
+//! notifications through a channel.
+
+pub mod wire;
+
+use crate::core::{Command, Config, Dot, DotGen, ProcessId};
+use crate::metrics::Counters;
+use crate::protocol::tempo::msg::Msg;
+use crate::protocol::tempo::Tempo;
+use crate::protocol::{Action, Protocol};
+use crate::store::{KvStore, Response};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Events fed to the protocol thread.
+enum Event {
+    Message { from: ProcessId, msg: Msg },
+    Submit { cmd: Command, done: Sender<(Dot, Response)> },
+    Tick,
+    Shutdown,
+}
+
+/// A completion listener registered per in-flight dot.
+type DoneMap = HashMap<Dot, Sender<(Dot, Response)>>;
+
+/// Handle to a running node.
+pub struct NodeHandle {
+    pub id: ProcessId,
+    events: Sender<Event>,
+    threads: Vec<JoinHandle<()>>,
+    pub counters: Arc<Mutex<Counters>>,
+    pub store_digest: Arc<Mutex<u64>>,
+    pub executed: Arc<Mutex<u64>>,
+}
+
+impl NodeHandle {
+    /// Submit a command; the response arrives on the returned receiver once
+    /// the command executes locally (origin completion, as in the paper).
+    pub fn submit(&self, cmd: Command) -> Receiver<(Dot, Response)> {
+        let (tx, rx) = channel();
+        let _ = self.events.send(Event::Submit { cmd, done: tx });
+        rx
+    }
+
+    /// Stop the protocol thread. Acceptor/tick threads are detached (they
+    /// block on the listener/timer and exit with the process).
+    pub fn shutdown(self) {
+        let _ = self.events.send(Event::Shutdown);
+        drop(self.threads);
+    }
+}
+
+fn write_frame(stream: &mut TcpStream, from: ProcessId, msg: &Msg) -> Result<()> {
+    let body = wire::encode(msg);
+    let mut frame = Vec::with_capacity(body.len() + 8);
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&from.0.to_le_bytes());
+    frame.extend_from_slice(&body);
+    stream.write_all(&frame)?;
+    Ok(())
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<(ProcessId, Msg)> {
+    let mut hdr = [0u8; 8];
+    stream.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+    let from = ProcessId(u32::from_le_bytes(hdr[4..8].try_into().unwrap()));
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Ok((from, wire::decode(&body)?))
+}
+
+/// Start a Tempo node listening on `addrs[id]`, connecting to all peers.
+/// `addrs` must be identical across the cluster.
+pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<NodeHandle> {
+    let me = id.0 as usize;
+    let listener =
+        TcpListener::bind(&addrs[me]).with_context(|| format!("bind {}", addrs[me]))?;
+    let (events_tx, events_rx) = channel::<Event>();
+    let mut threads = Vec::new();
+
+    // Acceptor: peers with higher ids dial us.
+    {
+        let tx = events_tx.clone();
+        let expect = addrs.len() - 1 - me; // only higher ids dial in? see below
+        let _ = expect;
+        threads.push(std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let mut stream = match stream {
+                    Ok(s) => s,
+                    Err(_) => break,
+                };
+                let tx = tx.clone();
+                std::thread::spawn(move || loop {
+                    match read_frame(&mut stream) {
+                        Ok((from, msg)) => {
+                            if tx.send(Event::Message { from, msg }).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                });
+            }
+        }));
+    }
+
+    // Dial every peer (retry until the whole cluster is up).
+    let mut peers: HashMap<ProcessId, TcpStream> = HashMap::new();
+    for (j, addr) in addrs.iter().enumerate() {
+        if j == me {
+            continue;
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(50));
+                    let _ = e;
+                }
+                Err(e) => return Err(e).with_context(|| format!("connect {addr}")),
+            }
+        };
+        stream.set_nodelay(true)?;
+        peers.insert(ProcessId(j as u32), stream);
+    }
+
+    // Tick timer.
+    {
+        let tx = events_tx.clone();
+        let interval = Duration::from_micros(config.tick_interval_us.max(500));
+        threads.push(std::thread::spawn(move || loop {
+            std::thread::sleep(interval);
+            if tx.send(Event::Tick).is_err() {
+                break;
+            }
+        }));
+    }
+
+    let counters = Arc::new(Mutex::new(Counters::default()));
+    let store_digest = Arc::new(Mutex::new(0u64));
+    let executed = Arc::new(Mutex::new(0u64));
+
+    // Protocol thread.
+    {
+        let counters = counters.clone();
+        let store_digest = store_digest.clone();
+        let executed = executed.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut proto = Tempo::new(id, config);
+            let mut store = KvStore::new();
+            let mut dots = DotGen::new(id);
+            let mut done: DoneMap = HashMap::new();
+            let start = Instant::now();
+            let now_us = |s: Instant| s.elapsed().as_micros() as u64;
+            for event in events_rx {
+                let actions = match event {
+                    Event::Message { from, msg } => proto.handle(from, msg, now_us(start)),
+                    Event::Submit { cmd, done: tx } => {
+                        let dot = dots.next();
+                        done.insert(dot, tx);
+                        proto.submit(dot, cmd, now_us(start))
+                    }
+                    Event::Tick => proto.tick(now_us(start)),
+                    Event::Shutdown => break,
+                };
+                for action in actions {
+                    match action {
+                        Action::Send { to, msg } => {
+                            if let Some(stream) = peers.get_mut(&to) {
+                                // A dead peer just drops its traffic.
+                                let _ = write_frame(stream, id, &msg);
+                            }
+                        }
+                        Action::Execute { dot, cmd } => {
+                            let resp = store.execute(&cmd);
+                            *executed.lock().unwrap() += 1;
+                            *store_digest.lock().unwrap() = store.digest();
+                            if dot.origin == id {
+                                if let Some(tx) = done.remove(&dot) {
+                                    let _ = tx.send((dot, resp));
+                                }
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                *counters.lock().unwrap() = proto.counters();
+            }
+        }));
+    }
+
+    Ok(NodeHandle { id, events: events_tx, threads, counters, store_digest, executed })
+}
+
+/// Allocate `n` localhost addresses on free ports.
+pub fn local_addrs(n: usize) -> Result<Vec<String>> {
+    let mut addrs = Vec::with_capacity(n);
+    for _ in 0..n {
+        // Bind to port 0 to reserve a free port, then release it.
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(format!("127.0.0.1:{}", l.local_addr()?.port()));
+    }
+    Ok(addrs)
+}

@@ -1,0 +1,397 @@
+//! Binary wire codec for Tempo messages (the offline registry has no
+//! serde, so framing is hand-rolled: length-prefixed frames, little-endian
+//! fixed-width integers, u8 message tags).
+
+use crate::core::{ClientId, Command, Dot, Op, ProcessId, ShardId};
+use crate::protocol::tempo::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums};
+use crate::protocol::tempo::promises::PromiseSet;
+use anyhow::{bail, Result};
+
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Writer { buf: Vec::with_capacity(256) }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn dot(&mut self, d: Dot) {
+        self.u32(d.origin.0);
+        self.u64(d.seq);
+    }
+    fn cmd(&mut self, c: &Command) {
+        self.u64(c.client.0);
+        self.u8(match c.op {
+            Op::Get => 0,
+            Op::Put => 1,
+            Op::Rmw => 2,
+        });
+        self.u32(c.payload_len);
+        self.u32(c.batched);
+        self.u16(c.keys.len() as u16);
+        for &k in &c.keys {
+            self.u64(k);
+        }
+    }
+    fn quorums(&mut self, q: &Quorums) {
+        self.u8(q.len() as u8);
+        for (s, procs) in q {
+            self.u32(s.0);
+            self.u8(procs.len() as u8);
+            for p in procs {
+                self.u32(p.0);
+            }
+        }
+    }
+    fn key_ts(&mut self, ts: &KeyTs) {
+        self.u16(ts.len() as u16);
+        for &(k, t) in ts {
+            self.u64(k);
+            self.u64(t);
+        }
+    }
+    fn promise_set(&mut self, p: &PromiseSet) {
+        self.u16(p.detached.len() as u16);
+        for &(lo, hi) in &p.detached {
+            self.u64(lo);
+            self.u64(hi);
+        }
+        self.u16(p.attached.len() as u16);
+        for &(d, t) in &p.attached {
+            self.dot(d);
+            self.u64(t);
+        }
+    }
+    fn key_promises(&mut self, kp: &KeyPromises) {
+        self.u16(kp.len() as u16);
+        for (k, p) in kp {
+            self.u64(*k);
+            self.promise_set(p);
+        }
+    }
+}
+
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated frame at {} + {n} > {}", self.pos, self.buf.len());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn dot(&mut self) -> Result<Dot> {
+        Ok(Dot::new(ProcessId(self.u32()?), self.u64()?))
+    }
+    fn cmd(&mut self) -> Result<Command> {
+        let client = ClientId(self.u64()?);
+        let op = match self.u8()? {
+            0 => Op::Get,
+            1 => Op::Put,
+            2 => Op::Rmw,
+            x => bail!("bad op tag {x}"),
+        };
+        let payload_len = self.u32()?;
+        let batched = self.u32()?;
+        let n = self.u16()? as usize;
+        let mut keys = Vec::with_capacity(n);
+        for _ in 0..n {
+            keys.push(self.u64()?);
+        }
+        let mut c = Command::new(client, keys, op, payload_len);
+        c.batched = batched;
+        Ok(c)
+    }
+    fn quorums(&mut self) -> Result<Quorums> {
+        let n = self.u8()? as usize;
+        let mut q = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = ShardId(self.u32()?);
+            let m = self.u8()? as usize;
+            let mut procs = Vec::with_capacity(m);
+            for _ in 0..m {
+                procs.push(ProcessId(self.u32()?));
+            }
+            q.push((s, procs));
+        }
+        Ok(q)
+    }
+    fn key_ts(&mut self) -> Result<KeyTs> {
+        let n = self.u16()? as usize;
+        let mut ts = Vec::with_capacity(n);
+        for _ in 0..n {
+            ts.push((self.u64()?, self.u64()?));
+        }
+        Ok(ts)
+    }
+    fn promise_set(&mut self) -> Result<PromiseSet> {
+        let nd = self.u16()? as usize;
+        let mut detached = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            detached.push((self.u64()?, self.u64()?));
+        }
+        let na = self.u16()? as usize;
+        let mut attached = Vec::with_capacity(na);
+        for _ in 0..na {
+            attached.push((self.dot()?, self.u64()?));
+        }
+        Ok(PromiseSet { detached, attached })
+    }
+    fn key_promises(&mut self) -> Result<KeyPromises> {
+        let n = self.u16()? as usize;
+        let mut kp = Vec::with_capacity(n);
+        for _ in 0..n {
+            kp.push((self.u64()?, self.promise_set()?));
+        }
+        Ok(kp)
+    }
+}
+
+const PHASES: [Phase; 7] = [
+    Phase::Start,
+    Phase::Payload,
+    Phase::Propose,
+    Phase::RecoverR,
+    Phase::RecoverP,
+    Phase::Commit,
+    Phase::Execute,
+];
+
+/// Encode a message (without the length prefix).
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let mut w = Writer::new();
+    match msg {
+        Msg::MSubmit { dot, cmd, quorums } => {
+            w.u8(0);
+            w.dot(*dot);
+            w.cmd(cmd);
+            w.quorums(quorums);
+        }
+        Msg::MPropose { dot, cmd, quorums, ts } => {
+            w.u8(1);
+            w.dot(*dot);
+            w.cmd(cmd);
+            w.quorums(quorums);
+            w.key_ts(ts);
+        }
+        Msg::MProposeAck { dot, ts, promises } => {
+            w.u8(2);
+            w.dot(*dot);
+            w.key_ts(ts);
+            w.key_promises(promises);
+        }
+        Msg::MPayload { dot, cmd, quorums } => {
+            w.u8(3);
+            w.dot(*dot);
+            w.cmd(cmd);
+            w.quorums(quorums);
+        }
+        Msg::MCommit { dot, group, ts, promises } => {
+            w.u8(4);
+            w.dot(*dot);
+            w.u32(group.0);
+            w.key_ts(ts);
+            w.u16(promises.len() as u16);
+            for (p, kp) in promises {
+                w.u32(p.0);
+                w.key_promises(kp);
+            }
+        }
+        Msg::MCommitDirect { dot, cmd, quorums, final_ts } => {
+            w.u8(5);
+            w.dot(*dot);
+            w.cmd(cmd);
+            w.quorums(quorums);
+            w.u64(*final_ts);
+        }
+        Msg::MConsensus { dot, ts, bal } => {
+            w.u8(6);
+            w.dot(*dot);
+            w.key_ts(ts);
+            w.u64(*bal);
+        }
+        Msg::MConsensusAck { dot, bal } => {
+            w.u8(7);
+            w.dot(*dot);
+            w.u64(*bal);
+        }
+        Msg::MPromises { promises } => {
+            w.u8(8);
+            w.key_promises(promises);
+        }
+        Msg::MBump { dot, ts } => {
+            w.u8(9);
+            w.dot(*dot);
+            w.u64(*ts);
+        }
+        Msg::MStable { dot } => {
+            w.u8(10);
+            w.dot(*dot);
+        }
+        Msg::MRec { dot, bal } => {
+            w.u8(11);
+            w.dot(*dot);
+            w.u64(*bal);
+        }
+        Msg::MRecAck { dot, ts, phase, abal, bal } => {
+            w.u8(12);
+            w.dot(*dot);
+            w.key_ts(ts);
+            w.u8(PHASES.iter().position(|p| p == phase).unwrap() as u8);
+            w.u64(*abal);
+            w.u64(*bal);
+        }
+        Msg::MRecNAck { dot, bal } => {
+            w.u8(13);
+            w.dot(*dot);
+            w.u64(*bal);
+        }
+        Msg::MCommitRequest { dot } => {
+            w.u8(14);
+            w.dot(*dot);
+        }
+    }
+    w.buf
+}
+
+/// Decode a message (frame body).
+pub fn decode(buf: &[u8]) -> Result<Msg> {
+    let mut r = Reader::new(buf);
+    let tag = r.u8()?;
+    let msg = match tag {
+        0 => Msg::MSubmit { dot: r.dot()?, cmd: r.cmd()?, quorums: r.quorums()? },
+        1 => Msg::MPropose {
+            dot: r.dot()?,
+            cmd: r.cmd()?,
+            quorums: r.quorums()?,
+            ts: r.key_ts()?,
+        },
+        2 => Msg::MProposeAck { dot: r.dot()?, ts: r.key_ts()?, promises: r.key_promises()? },
+        3 => Msg::MPayload { dot: r.dot()?, cmd: r.cmd()?, quorums: r.quorums()? },
+        4 => {
+            let dot = r.dot()?;
+            let group = ShardId(r.u32()?);
+            let ts = r.key_ts()?;
+            let n = r.u16()? as usize;
+            let mut promises = Vec::with_capacity(n);
+            for _ in 0..n {
+                let p = ProcessId(r.u32()?);
+                promises.push((p, r.key_promises()?));
+            }
+            Msg::MCommit { dot, group, ts, promises }
+        }
+        5 => Msg::MCommitDirect {
+            dot: r.dot()?,
+            cmd: r.cmd()?,
+            quorums: r.quorums()?,
+            final_ts: r.u64()?,
+        },
+        6 => Msg::MConsensus { dot: r.dot()?, ts: r.key_ts()?, bal: r.u64()? },
+        7 => Msg::MConsensusAck { dot: r.dot()?, bal: r.u64()? },
+        8 => Msg::MPromises { promises: r.key_promises()? },
+        9 => Msg::MBump { dot: r.dot()?, ts: r.u64()? },
+        10 => Msg::MStable { dot: r.dot()? },
+        11 => Msg::MRec { dot: r.dot()?, bal: r.u64()? },
+        12 => Msg::MRecAck {
+            dot: r.dot()?,
+            ts: r.key_ts()?,
+            phase: PHASES[r.u8()? as usize],
+            abal: r.u64()?,
+            bal: r.u64()?,
+        },
+        13 => Msg::MRecNAck { dot: r.dot()?, bal: r.u64()? },
+        14 => Msg::MCommitRequest { dot: r.dot()? },
+        x => bail!("bad message tag {x}"),
+    };
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let bytes = encode(&msg);
+        let back = decode(&bytes).expect("decode");
+        assert_eq!(format!("{msg:?}"), format!("{back:?}"), "codec round-trip");
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        let dot = Dot::new(ProcessId(3), 42);
+        let cmd = Command::new(ClientId(7), vec![1, 99], Op::Rmw, 512);
+        let quorums: Quorums =
+            vec![(ShardId(0), vec![ProcessId(0), ProcessId(1)]), (ShardId(1), vec![ProcessId(3)])];
+        let ts: KeyTs = vec![(1, 10), (99, 11)];
+        let ps = PromiseSet { detached: vec![(1, 5), (7, 9)], attached: vec![(dot, 10)] };
+        let kp: KeyPromises = vec![(1, ps.clone()), (99, PromiseSet::default())];
+        roundtrip(Msg::MSubmit { dot, cmd: cmd.clone(), quorums: quorums.clone() });
+        roundtrip(Msg::MPropose {
+            dot,
+            cmd: cmd.clone(),
+            quorums: quorums.clone(),
+            ts: ts.clone(),
+        });
+        roundtrip(Msg::MProposeAck { dot, ts: ts.clone(), promises: kp.clone() });
+        roundtrip(Msg::MPayload { dot, cmd: cmd.clone(), quorums: quorums.clone() });
+        roundtrip(Msg::MCommit {
+            dot,
+            group: ShardId(1),
+            ts: ts.clone(),
+            promises: vec![(ProcessId(2), kp.clone())],
+        });
+        roundtrip(Msg::MCommitDirect { dot, cmd, quorums, final_ts: 17 });
+        roundtrip(Msg::MConsensus { dot, ts: ts.clone(), bal: 6 });
+        roundtrip(Msg::MConsensusAck { dot, bal: 6 });
+        roundtrip(Msg::MPromises { promises: kp });
+        roundtrip(Msg::MBump { dot, ts: 12 });
+        roundtrip(Msg::MStable { dot });
+        roundtrip(Msg::MRec { dot, bal: 8 });
+        roundtrip(Msg::MRecAck { dot, ts, phase: Phase::RecoverP, abal: 0, bal: 8 });
+        roundtrip(Msg::MRecNAck { dot, bal: 9 });
+        roundtrip(Msg::MCommitRequest { dot });
+    }
+
+    #[test]
+    fn truncated_frames_fail_cleanly() {
+        let bytes = encode(&Msg::MStable { dot: Dot::new(ProcessId(1), 2) });
+        for cut in 0..bytes.len() {
+            assert!(decode(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        assert!(decode(&[200]).is_err(), "unknown tag must fail");
+    }
+}

@@ -1,0 +1,2 @@
+//! Atlas baseline — re-export of the unified dependency-based core.
+pub use super::depsmr::{Atlas, Msg};

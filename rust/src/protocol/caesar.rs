@@ -1,0 +1,478 @@
+//! Caesar [Arun et al., DSN'17]: leaderless SMR combining timestamps with
+//! explicit dependencies — the paper's closest timestamp-based baseline
+//! (§3.3 "Dependency-based stability", §6).
+//!
+//! A coordinator proposes a (unique) logical timestamp for its command to a
+//! fast quorum of `⌈3r/4⌉` processes. A quorum member *blocks* its reply
+//! while a conflicting command with a higher proposed timestamp is pending
+//! (Caesar's wait condition — the source of the delays and of the §D
+//! livelock); once unblocked it either ACKs with the conflicting
+//! lower-timestamp commands as dependencies, or NACKs if a conflicting
+//! command already committed with a higher timestamp, forcing a retry at a
+//! higher timestamp (the slow path). Commands execute in timestamp order
+//! once all their smaller-timestamp dependencies have executed.
+//!
+//! Reproduction notes (DESIGN.md): ballots/recovery are not implemented
+//! (the paper never crashes baseline processes), and the retry round
+//! accepts unconditionally — both simplifications favour Caesar.
+
+use super::{Action, Protocol};
+use crate::core::{Command, Config, Dot, Key, ProcessId};
+use crate::metrics::Counters;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// Timestamps are made unique by pairing with the command identifier.
+type Ts = (u64, Dot);
+
+#[derive(Clone, Debug)]
+pub enum Msg {
+    MPropose { dot: Dot, cmd: Command, ts: u64 },
+    MProposeAck { dot: Dot, ts: u64, deps: Vec<Dot> },
+    MProposeNack { dot: Dot, higher_ts: u64 },
+    MRetry { dot: Dot, cmd: Command, ts: u64 },
+    MRetryAck { dot: Dot, ts: u64, deps: Vec<Dot> },
+    MCommit { dot: Dot, cmd: Command, ts: u64, deps: Vec<Dot> },
+}
+
+impl Msg {
+    pub fn wire_size(&self) -> u64 {
+        const HDR: u64 = 24;
+        match self {
+            Msg::MPropose { cmd, .. } | Msg::MRetry { cmd, .. } => HDR + cmd.wire_size() + 8,
+            Msg::MCommit { cmd, deps, .. } => HDR + cmd.wire_size() + 8 + 12 * deps.len() as u64,
+            Msg::MProposeAck { deps, .. } | Msg::MRetryAck { deps, .. } => {
+                HDR + 8 + 12 * deps.len() as u64
+            }
+            Msg::MProposeNack { .. } => HDR + 16,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Pending,
+    Committed,
+    Executed,
+}
+
+#[derive(Clone, Debug)]
+struct Info {
+    phase: Phase,
+    cmd: Command,
+    ts: u64,
+    deps: Vec<Dot>,
+    /// Coordinator bookkeeping.
+    coordinator: bool,
+    acks: usize,
+    ack_deps: BTreeSet<Dot>,
+    nack_ts: u64,
+    nacked: bool,
+    retrying: bool,
+    decided: bool,
+}
+
+/// One known proposal on a key (for the wait condition and dependencies).
+#[derive(Clone, Copy, Debug)]
+struct KeyEntry {
+    ts: u64,
+    committed: bool,
+}
+
+pub struct Caesar {
+    id: ProcessId,
+    config: Config,
+    clock: u64,
+    info: HashMap<Dot, Info>,
+    /// Per-key: commands seen (proposals and commits) with their latest ts.
+    seen: HashMap<Key, BTreeMap<Dot, KeyEntry>>,
+    /// Replies blocked by Caesar's wait condition: blocking dot → queued
+    /// MPropose messages to re-handle when it commits.
+    blocked: HashMap<Dot, Vec<(ProcessId, Msg)>>,
+    /// Committed-unexecuted commands ordered by ⟨ts, dot⟩.
+    exec_queue: BTreeMap<Ts, ()>,
+    /// Executor retry index: dependency → committed commands waiting on it
+    /// (§Perf: avoids rescanning the whole queue per event).
+    exec_blocked: HashMap<Dot, Vec<Dot>>,
+    crashed: bool,
+    pub counters: Counters,
+}
+
+impl Caesar {
+    fn fast_quorum(&self) -> Vec<ProcessId> {
+        let size = self.config.caesar_fast_quorum_size();
+        let k0 = self.id.0;
+        (0..size as u32)
+            .map(|d| ProcessId((k0 + d) % self.config.r as u32))
+            .collect()
+    }
+
+    fn all(&self) -> Vec<ProcessId> {
+        (0..self.config.r as u32).map(ProcessId).collect()
+    }
+
+    /// Conflicting commands seen on the keys of `cmd`.
+    fn conflicts(&self, cmd: &Command) -> Vec<(Dot, KeyEntry)> {
+        let mut out = Vec::new();
+        for k in &cmd.keys {
+            if let Some(m) = self.seen.get(k) {
+                out.extend(m.iter().map(|(d, e)| (*d, *e)));
+            }
+        }
+        out.sort_unstable_by_key(|&(d, _)| d);
+        out.dedup_by_key(|&mut (d, _)| d);
+        out
+    }
+
+    fn register(&mut self, dot: Dot, cmd: &Command, ts: u64, committed: bool) {
+        for &k in &cmd.keys {
+            self.seen.entry(k).or_default().insert(dot, KeyEntry { ts, committed });
+        }
+    }
+
+    fn broadcast(&mut self, to: &[ProcessId], msg: Msg, time: u64, out: &mut Vec<Action<Msg>>) {
+        let mut to_self = false;
+        for &p in to {
+            if p == self.id {
+                to_self = true;
+            } else {
+                out.push(Action::send(p, msg.clone()));
+            }
+        }
+        if to_self {
+            let actions = self.handle(self.id, msg, time);
+            out.extend(actions);
+        }
+    }
+
+    fn handle_propose(
+        &mut self,
+        from: ProcessId,
+        dot: Dot,
+        cmd: Command,
+        ts: u64,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        self.clock = self.clock.max(ts);
+        let conflicts = self.conflicts(&cmd);
+        // Wait condition: a conflicting command with a *higher* proposed
+        // timestamp is still pending → block the reply until it commits
+        // (§3.3; unbounded in §D).
+        if let Some(&(blocking, _)) = conflicts
+            .iter()
+            .find(|(d, e)| !e.committed && (e.ts, *d) > (ts, dot) && *d != dot)
+        {
+            self.blocked
+                .entry(blocking)
+                .or_default()
+                .push((from, Msg::MPropose { dot, cmd, ts }));
+            return;
+        }
+        // NACK if a conflicting command *committed* with a higher timestamp:
+        // `ts` can no longer be honored.
+        let committed_higher = conflicts
+            .iter()
+            .filter(|(d, e)| e.committed && (e.ts, *d) > (ts, dot) && *d != dot)
+            .map(|(_, e)| e.ts)
+            .max();
+        if let Some(h) = committed_higher {
+            self.register(dot, &cmd, ts, false);
+            out.push(Action::send(from, Msg::MProposeNack { dot, higher_ts: h }));
+            return;
+        }
+        // ACK with the smaller-timestamp conflicts as dependencies.
+        let deps: Vec<Dot> = conflicts
+            .iter()
+            .filter(|(d, e)| (e.ts, *d) < (ts, dot) && *d != dot)
+            .map(|(d, _)| *d)
+            .collect();
+        self.register(dot, &cmd, ts, false);
+        out.push(Action::send(from, Msg::MProposeAck { dot, ts, deps }));
+    }
+
+    fn try_decide(&mut self, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
+        let quorum = self.config.caesar_fast_quorum_size();
+        let decision = {
+            let info = match self.info.get_mut(&dot) {
+                Some(i) => i,
+                None => return,
+            };
+            if !info.coordinator || info.decided || info.phase != Phase::Pending {
+                return;
+            }
+            if info.acks + (info.nacked as usize) == 0 {
+                return;
+            }
+            if info.nacked {
+                // Slow path: retry at a timestamp above every conflict.
+                if info.retrying {
+                    return;
+                }
+                info.retrying = true;
+                Some((false, info.cmd.clone(), info.nack_ts))
+            } else if info.acks >= quorum {
+                info.decided = true;
+                Some((true, info.cmd.clone(), info.ts))
+            } else {
+                None
+            }
+        };
+        match decision {
+            Some((true, cmd, ts)) => {
+                self.counters.fast_path += 1;
+                let deps: Vec<Dot> =
+                    self.info[&dot].ack_deps.iter().copied().collect();
+                let targets = self.all();
+                self.broadcast(&targets, Msg::MCommit { dot, cmd, ts, deps }, time, out);
+            }
+            Some((false, cmd, nack_ts)) => {
+                self.counters.slow_path += 1;
+                self.clock = self.clock.max(nack_ts) + 1;
+                let ts = self.clock;
+                {
+                    let info = self.info.get_mut(&dot).unwrap();
+                    info.ts = ts;
+                    info.acks = 0;
+                    info.ack_deps.clear();
+                    info.nacked = false;
+                }
+                let q = self.fast_quorum();
+                self.broadcast(&q, Msg::MRetry { dot, cmd, ts }, time, out);
+            }
+            None => {}
+        }
+    }
+
+    fn handle_commit(
+        &mut self,
+        dot: Dot,
+        cmd: Command,
+        ts: u64,
+        deps: Vec<Dot>,
+        out: &mut Vec<Action<Msg>>,
+        time: u64,
+    ) {
+        let already = self.info.get(&dot).map_or(false, |i| i.phase != Phase::Pending);
+        if already {
+            return;
+        }
+        self.clock = self.clock.max(ts);
+        self.register(dot, &cmd, ts, true);
+        let info = self.info.entry(dot).or_insert_with(|| Info {
+            phase: Phase::Pending,
+            cmd: cmd.clone(),
+            ts,
+            deps: Vec::new(),
+            coordinator: false,
+            acks: 0,
+            ack_deps: BTreeSet::new(),
+            nack_ts: 0,
+            nacked: false,
+            retrying: false,
+            decided: true,
+        });
+        info.phase = Phase::Committed;
+        info.cmd = cmd;
+        info.ts = ts;
+        info.deps = deps;
+        self.exec_queue.insert((ts, dot), ());
+        out.push(Action::Committed { dot, fast: true });
+        // Unblock replies waiting on this command (wait condition).
+        if let Some(waiting) = self.blocked.remove(&dot) {
+            for (from, msg) in waiting {
+                let actions = self.handle(from, msg, time);
+                out.extend(actions);
+            }
+        }
+        let mut queue = vec![dot];
+        if let Some(waiters) = self.exec_blocked.remove(&dot) {
+            queue.extend(waiters);
+        }
+        self.advance(queue, out);
+    }
+
+    /// Execute committed commands in ⟨ts, dot⟩ order; a command waits for
+    /// its smaller-timestamp dependencies (timestamp stability through
+    /// explicit dependencies — the delayed-execution mechanism of §3.3).
+    /// Retries are indexed by the blocking dependency.
+    fn advance(&mut self, mut queue: Vec<Dot>, out: &mut Vec<Action<Msg>>) {
+        while let Some(dot) = queue.pop() {
+            let (ts, executable, blocker) = {
+                let info = match self.info.get(&dot) {
+                    Some(i) if i.phase == Phase::Committed => i,
+                    _ => continue,
+                };
+                let ts = info.ts;
+                let mut blocker = None;
+                for d in &info.deps {
+                    match self.info.get(d) {
+                        Some(di) if di.phase == Phase::Executed => {}
+                        // A dependency committed with a *higher* timestamp
+                        // does not precede us.
+                        Some(di) if di.phase == Phase::Committed && (di.ts, *d) > (ts, dot) => {}
+                        // Unknown/pending/smaller-ts dependency: wait on it.
+                        _ => {
+                            blocker = Some(*d);
+                            break;
+                        }
+                    }
+                }
+                (ts, blocker.is_none(), blocker)
+            };
+            if let Some(b) = blocker {
+                self.exec_blocked.entry(b).or_default().push(dot);
+                continue;
+            }
+            if !executable {
+                continue;
+            }
+            self.exec_queue.remove(&(ts, dot));
+            let info = self.info.get_mut(&dot).unwrap();
+            info.phase = Phase::Executed;
+            self.counters.executed += 1;
+            out.push(Action::Execute { dot, cmd: info.cmd.clone() });
+            // Wake commands blocked on this one.
+            if let Some(waiters) = self.exec_blocked.remove(&dot) {
+                queue.extend(waiters);
+            }
+        }
+    }
+}
+
+impl Protocol for Caesar {
+    type Message = Msg;
+
+    fn new(id: ProcessId, config: Config) -> Self {
+        assert_eq!(config.shards, 1, "Caesar baseline is full-replication only");
+        Caesar {
+            id,
+            config,
+            clock: 0,
+            info: HashMap::new(),
+            seen: HashMap::new(),
+            blocked: HashMap::new(),
+            exec_queue: BTreeMap::new(),
+            exec_blocked: HashMap::new(),
+            crashed: false,
+            counters: Counters::default(),
+        }
+    }
+
+    fn name() -> &'static str {
+        "caesar"
+    }
+
+    fn submit(&mut self, dot: Dot, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+        let mut out = Vec::new();
+        if self.crashed {
+            return out;
+        }
+        self.clock += 1;
+        let ts = self.clock;
+        self.info.insert(
+            dot,
+            Info {
+                phase: Phase::Pending,
+                cmd: cmd.clone(),
+                ts,
+                deps: Vec::new(),
+                coordinator: true,
+                acks: 0,
+                ack_deps: BTreeSet::new(),
+                nack_ts: 0,
+                nacked: false,
+                retrying: false,
+                decided: false,
+            },
+        );
+        let q = self.fast_quorum();
+        self.broadcast(&q, Msg::MPropose { dot, cmd, ts }, time, &mut out);
+        out
+    }
+
+    fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
+        let mut out = Vec::new();
+        if self.crashed {
+            return out;
+        }
+        match msg {
+            Msg::MPropose { dot, cmd, ts } => {
+                self.handle_propose(from, dot, cmd, ts, time, &mut out)
+            }
+            Msg::MProposeAck { dot, ts, deps } | Msg::MRetryAck { dot, ts, deps } => {
+                let run = {
+                    match self.info.get_mut(&dot) {
+                        Some(info)
+                            if info.coordinator
+                                && info.phase == Phase::Pending
+                                && info.ts == ts =>
+                        {
+                            info.acks += 1;
+                            info.ack_deps.extend(deps);
+                            true
+                        }
+                        _ => false,
+                    }
+                };
+                if run {
+                    self.try_decide(dot, time, &mut out);
+                }
+            }
+            Msg::MProposeNack { dot, higher_ts } => {
+                let run = {
+                    match self.info.get_mut(&dot) {
+                        // Late NACKs from the original round are ignored
+                        // once the retry started (the retry round always
+                        // accepts, so no further NACK can be pending).
+                        Some(info)
+                            if info.coordinator
+                                && info.phase == Phase::Pending
+                                && !info.retrying =>
+                        {
+                            info.nacked = true;
+                            info.nack_ts = info.nack_ts.max(higher_ts);
+                            true
+                        }
+                        _ => false,
+                    }
+                };
+                if run {
+                    self.try_decide(dot, time, &mut out);
+                }
+            }
+            Msg::MRetry { dot, cmd, ts } => {
+                // Retry round: accept unconditionally (simplification, see
+                // module docs), reporting smaller-timestamp conflicts.
+                self.clock = self.clock.max(ts);
+                let deps: Vec<Dot> = self
+                    .conflicts(&cmd)
+                    .iter()
+                    .filter(|(d, e)| (e.ts, *d) < (ts, dot) && *d != dot)
+                    .map(|(d, _)| *d)
+                    .collect();
+                self.register(dot, &cmd, ts, false);
+                out.push(Action::send(from, Msg::MRetryAck { dot, ts, deps }));
+            }
+            Msg::MCommit { dot, cmd, ts, deps } => {
+                self.handle_commit(dot, cmd, ts, deps, &mut out, time)
+            }
+        }
+        out
+    }
+
+    fn tick(&mut self, _time: u64) -> Vec<Action<Msg>> {
+        Vec::new()
+    }
+
+    fn crash(&mut self) {
+        self.crashed = true;
+    }
+
+    fn counters(&self) -> Counters {
+        self.counters
+    }
+
+    fn msg_size(msg: &Msg) -> u64 {
+        msg.wire_size()
+    }
+}

@@ -1,0 +1,2 @@
+//! EPaxos baseline — re-export of the unified dependency-based core.
+pub use super::depsmr::{EPaxos, Msg};

@@ -1,0 +1,242 @@
+//! FPaxos: leader-based Multi-Paxos with Flexible quorums [Howard et al.,
+//! OPODIS'16], the paper's leader-based baseline (§6).
+//!
+//! A fixed leader orders all commands into a log; phase-2 quorums have size
+//! `f+1` (instead of a majority), so the leader commits after `f` acks from
+//! followers. Replicas execute the log in slot order. Like the paper's
+//! deployment we keep the leader at process 0 (Ireland — the placement the
+//! paper found fairest) and do not exercise leader change during benches:
+//! the leader is the single point of contention being measured.
+
+use super::{Action, Protocol};
+use crate::core::{Command, Config, Dot, ProcessId};
+use crate::metrics::Counters;
+use std::collections::{BTreeMap, HashMap};
+
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// Any process → leader: order this command.
+    MForward { dot: Dot, cmd: Command },
+    /// Leader → all: phase-2 accept for a log slot.
+    MAccept { slot: u64, dot: Dot, cmd: Command },
+    /// Follower → leader.
+    MAccepted { slot: u64 },
+    /// Leader → all: slot is chosen.
+    MCommit { slot: u64 },
+}
+
+impl Msg {
+    pub fn wire_size(&self) -> u64 {
+        const HDR: u64 = 24;
+        match self {
+            Msg::MForward { cmd, .. } | Msg::MAccept { cmd, .. } => HDR + cmd.wire_size(),
+            _ => HDR + 8,
+        }
+    }
+}
+
+struct Slot {
+    dot: Dot,
+    cmd: Command,
+    committed: bool,
+}
+
+/// FPaxos process state.
+pub struct FPaxos {
+    id: ProcessId,
+    config: Config,
+    /// Log: slot → entry.
+    log: BTreeMap<u64, Slot>,
+    /// Leader only: next slot to assign.
+    next_slot: u64,
+    /// Leader only: ack counts per slot.
+    acks: HashMap<u64, usize>,
+    /// Next slot to execute (all below are executed).
+    exec_from: u64,
+    crashed: bool,
+    counters: Counters,
+}
+
+impl FPaxos {
+    fn leader(&self) -> ProcessId {
+        ProcessId(0)
+    }
+
+    fn is_leader(&self) -> bool {
+        self.id == self.leader()
+    }
+
+    /// Execute every committed slot in order from `exec_from`.
+    fn advance(&mut self, out: &mut Vec<Action<Msg>>) {
+        while let Some(entry) = self.log.get(&self.exec_from) {
+            if !entry.committed {
+                break;
+            }
+            self.counters.executed += 1;
+            out.push(Action::Execute { dot: entry.dot, cmd: entry.cmd.clone() });
+            self.exec_from += 1;
+        }
+    }
+
+    fn leader_order(&mut self, dot: Dot, cmd: Command, out: &mut Vec<Action<Msg>>) {
+        let slot = self.next_slot;
+        self.next_slot += 1;
+        self.log.insert(slot, Slot { dot, cmd: cmd.clone(), committed: false });
+        self.acks.insert(slot, 1); // the leader accepts its own proposal
+        self.counters.fast_path += 1; // every command takes the same path
+        for p in 0..self.config.r as u32 {
+            if p != self.id.0 {
+                out.push(Action::send(ProcessId(p), Msg::MAccept { slot, dot, cmd: cmd.clone() }));
+            }
+        }
+    }
+
+    fn commit_slot(&mut self, slot: u64, out: &mut Vec<Action<Msg>>) {
+        if let Some(e) = self.log.get_mut(&slot) {
+            if !e.committed {
+                e.committed = true;
+                out.push(Action::Committed { dot: e.dot, fast: true });
+            }
+        }
+        self.advance(out);
+    }
+}
+
+impl Protocol for FPaxos {
+    type Message = Msg;
+
+    fn new(id: ProcessId, config: Config) -> Self {
+        assert_eq!(config.shards, 1, "FPaxos baseline is full-replication only");
+        FPaxos {
+            id,
+            config,
+            log: BTreeMap::new(),
+            next_slot: 0,
+            acks: HashMap::new(),
+            exec_from: 0,
+            crashed: false,
+            counters: Counters::default(),
+        }
+    }
+
+    fn name() -> &'static str {
+        "fpaxos"
+    }
+
+    fn submit(&mut self, dot: Dot, cmd: Command, _time: u64) -> Vec<Action<Msg>> {
+        let mut out = Vec::new();
+        if self.crashed {
+            return out;
+        }
+        if self.is_leader() {
+            self.leader_order(dot, cmd, &mut out);
+        } else {
+            out.push(Action::send(self.leader(), Msg::MForward { dot, cmd }));
+        }
+        out
+    }
+
+    fn handle(&mut self, from: ProcessId, msg: Msg, _time: u64) -> Vec<Action<Msg>> {
+        let mut out = Vec::new();
+        if self.crashed {
+            return out;
+        }
+        match msg {
+            Msg::MForward { dot, cmd } => {
+                if self.is_leader() {
+                    self.leader_order(dot, cmd, &mut out);
+                }
+            }
+            Msg::MAccept { slot, dot, cmd } => {
+                self.log.insert(slot, Slot { dot, cmd, committed: false });
+                out.push(Action::send(from, Msg::MAccepted { slot }));
+            }
+            Msg::MAccepted { slot } => {
+                if !self.is_leader() {
+                    return out;
+                }
+                let acks = self.acks.entry(slot).or_insert(0);
+                *acks += 1;
+                // Flexible Paxos phase-2 quorum: f+1 (leader included).
+                if *acks == self.config.slow_quorum_size() {
+                    self.commit_slot(slot, &mut out);
+                    for p in 0..self.config.r as u32 {
+                        if p != self.id.0 {
+                            out.push(Action::send(ProcessId(p), Msg::MCommit { slot }));
+                        }
+                    }
+                }
+            }
+            Msg::MCommit { slot } => {
+                self.commit_slot(slot, &mut out);
+            }
+        }
+        out
+    }
+
+    fn tick(&mut self, _time: u64) -> Vec<Action<Msg>> {
+        Vec::new()
+    }
+
+    fn crash(&mut self) {
+        self.crashed = true;
+    }
+
+    fn counters(&self) -> Counters {
+        self.counters
+    }
+
+    fn msg_size(msg: &Msg) -> u64 {
+        msg.wire_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::assert_psmr;
+    use crate::sim::{run, SimOpts, Topology};
+    use crate::workload::ConflictWorkload;
+
+    fn opts(seed: u64) -> SimOpts {
+        let mut o = SimOpts::new(Topology::ec2());
+        o.clients_per_site = 4;
+        o.warmup_us = 0;
+        o.duration_us = 3_000_000;
+        o.drain_us = 2_000_000;
+        o.seed = seed;
+        o.record_execution = true;
+        o
+    }
+
+    #[test]
+    fn fpaxos_satisfies_psmr() {
+        let config = Config::new(5, 1);
+        let result = run::<FPaxos, _>(config.clone(), opts(21), ConflictWorkload::new(0.02, 100));
+        assert!(result.metrics.ops > 50);
+        assert_psmr(&config, &result, true);
+    }
+
+    #[test]
+    fn fpaxos_f2_satisfies_psmr() {
+        let config = Config::new(5, 2);
+        let result = run::<FPaxos, _>(config.clone(), opts(22), ConflictWorkload::new(1.0, 100));
+        assert!(result.metrics.ops > 50);
+        assert_psmr(&config, &result, true);
+    }
+
+    #[test]
+    fn fpaxos_unfair_to_remote_sites() {
+        // The leaderless fairness argument (Fig. 5): non-leader sites pay
+        // the round trip to Ireland.
+        let config = Config::new(5, 1);
+        let result = run::<FPaxos, _>(config.clone(), opts(23), ConflictWorkload::new(0.02, 100));
+        let leader_site = result.metrics.site_latency[&0].quantile(0.5);
+        // Singapore (site 2) is 186 ms RTT from the leader.
+        let remote_site = result.metrics.site_latency[&2].quantile(0.5);
+        assert!(
+            remote_site > 2 * leader_site,
+            "leader {leader_site}µs vs remote {remote_site}µs"
+        );
+    }
+}

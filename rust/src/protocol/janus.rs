@@ -1,0 +1,2 @@
+//! Janus* baseline — re-export of the unified dependency-based core.
+pub use super::depsmr::{Janus, Msg};

@@ -1,0 +1,154 @@
+//! The protocol abstraction shared by Tempo and all baselines.
+//!
+//! Every protocol is a *deterministic, side-effect-free state machine*:
+//! inputs are submitted commands, received messages, and periodic ticks;
+//! outputs are [`Action`]s (messages to send, commands executed, protocol
+//! events for metrics). The same implementation therefore runs unchanged
+//! under the discrete-event simulator, the real TCP runtime, and the tests
+//! — and property tests can replay adversarial schedules byte-for-byte.
+
+pub mod atlas;
+pub mod depsmr;
+pub mod caesar;
+pub mod epaxos;
+pub mod fpaxos;
+pub mod janus;
+pub mod tempo;
+
+use crate::core::{Command, Config, Dot, ProcessId};
+
+/// Output of a protocol step.
+#[derive(Clone, Debug)]
+pub enum Action<M> {
+    /// Send `msg` to `to` (point-to-point; self-sends are allowed and are
+    /// delivered immediately by the runtimes, matching the paper's
+    /// "self-addressed messages are delivered immediately").
+    Send { to: ProcessId, msg: M },
+    /// The command was applied to the local state machine (`execute_p`).
+    Execute { dot: Dot, cmd: Command },
+    /// The command reached the COMMIT phase locally (metrics only).
+    Committed { dot: Dot, fast: bool },
+    /// A recovery was started for `dot` (metrics only).
+    RecoveryStarted { dot: Dot },
+}
+
+impl<M> Action<M> {
+    pub fn send(to: ProcessId, msg: M) -> Self {
+        Action::Send { to, msg }
+    }
+}
+
+/// A deterministic message-driven replication protocol.
+pub trait Protocol: Sized {
+    /// Wire message type.
+    type Message: Clone + std::fmt::Debug;
+
+    /// Construct the state of process `id` under `config`.
+    fn new(id: ProcessId, config: Config) -> Self;
+
+    /// Protocol name for reporting.
+    fn name() -> &'static str;
+
+    /// Client submits `cmd` at this process (which must replicate one of
+    /// the partitions the command accesses). `dot` identifies the command.
+    fn submit(&mut self, dot: Dot, cmd: Command, time_us: u64) -> Vec<Action<Self::Message>>;
+
+    /// Handle a message from `from`.
+    fn handle(
+        &mut self,
+        from: ProcessId,
+        msg: Self::Message,
+        time_us: u64,
+    ) -> Vec<Action<Self::Message>>;
+
+    /// Periodic handler (promise broadcast, executor run, recovery timers).
+    /// Runtimes call this every `config.tick_interval_us`.
+    fn tick(&mut self, time_us: u64) -> Vec<Action<Self::Message>>;
+
+    /// Marks a process as crashed for the rest of the run. Runtimes stop
+    /// delivering to it; the default needs no protocol action.
+    fn crash(&mut self) {}
+
+    /// Failure-detector input: `p` is suspected to have crashed
+    /// (drives Ω leader election where the protocol needs it).
+    fn suspect(&mut self, _p: ProcessId) {}
+
+    /// Protocol event counters for reporting (fast/slow path, recoveries).
+    fn counters(&self) -> crate::metrics::Counters {
+        crate::metrics::Counters::default()
+    }
+
+    /// Approximate wire size of a message in bytes (drives the simulator's
+    /// CPU/NIC resource model).
+    fn msg_size(_msg: &Self::Message) -> u64 {
+        64
+    }
+}
+
+/// Paxos-style ballot numbering shared by Tempo, FPaxos and the
+/// dependency-based baselines.
+///
+/// Ballots for a command are allocated round-robin: ballot `i` (1..=r) is
+/// reserved for the initial coordinator `i`, and ballots `> r` belong to
+/// processes performing recovery, with owner `bal_leader(b)`.
+pub mod ballot {
+    use crate::core::ProcessId;
+
+    /// Owner of ballot `b` among `r` processes whose ids occupy
+    /// `base..base+r` (shard-local numbering).
+    pub fn leader(b: u64, r: u64, base: u32) -> ProcessId {
+        debug_assert!(b >= 1);
+        ProcessId(base + ((b - 1) % r) as u32)
+    }
+
+    /// The next ballot owned by `p` strictly greater than `cur`
+    /// (paper line 74: `b = i + r(⌊(bal-1)/r⌋ + 1)` in shard-local ids).
+    pub fn next_owned(cur: u64, p: ProcessId, r: u64, base: u32) -> u64 {
+        let i = (p.0 - base) as u64 + 1; // 1-based rank within the shard
+        let round = if cur == 0 { 0 } else { (cur - 1) / r + 1 };
+        let mut b = i + r * round;
+        // next_owned must be > cur even when cur is owned by p itself.
+        while b <= cur {
+            b += r;
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ballot;
+    use crate::core::ProcessId;
+
+    #[test]
+    fn initial_ballots_belong_to_their_coordinator() {
+        let r = 5;
+        for i in 0..5u32 {
+            assert_eq!(ballot::leader(i as u64 + 1, r, 0), ProcessId(i));
+        }
+    }
+
+    #[test]
+    fn next_owned_is_owned_and_increasing() {
+        let r = 5;
+        for p in 0..5u32 {
+            let p = ProcessId(p);
+            let mut cur = 0;
+            for _ in 0..10 {
+                let b = ballot::next_owned(cur, p, r, 0);
+                assert!(b > cur);
+                assert_eq!(ballot::leader(b, r, 0), p);
+                cur = b;
+            }
+        }
+    }
+
+    #[test]
+    fn next_owned_with_shard_base() {
+        let r = 3;
+        let base = 6; // shard 2 of r=3
+        let p = ProcessId(7);
+        let b = ballot::next_owned(0, p, r, base);
+        assert_eq!(ballot::leader(b, r, base), p);
+    }
+}

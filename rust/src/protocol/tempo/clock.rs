@@ -1,0 +1,135 @@
+//! The per-process logical clock and promise generation
+//! (paper Algorithm 1, functions `proposal` and `bump`).
+
+use super::promises::PromiseSet;
+use crate::core::Dot;
+
+/// Logical clock that mints timestamp proposals and records the promises
+/// it gives up along the way. Generated promises accumulate in an outbox
+/// ([`Clock::take_outbox`]) which the protocol drains into `MPromises` /
+/// `MProposeAck` / `MCommit` messages.
+#[derive(Clone, Debug, Default)]
+pub struct Clock {
+    value: u64,
+    outbox: PromiseSet,
+}
+
+impl Clock {
+    pub fn value(&self) -> u64 {
+        self.value
+    }
+
+    /// `proposal(id, m)`: propose `t = max(m, Clock+1)` for command `id`,
+    /// generating detached promises for the skipped range
+    /// `Clock+1 ..= t-1` and the attached promise `⟨i, t⟩`.
+    pub fn proposal(&mut self, id: Dot, m: u64) -> u64 {
+        let t = m.max(self.value + 1);
+        if self.value + 1 <= t - 1 {
+            self.outbox.detached.push((self.value + 1, t - 1));
+        }
+        self.outbox.attached.push((id, t));
+        self.value = t;
+        t
+    }
+
+    /// `bump(t)`: advance the clock to `max(t, Clock)`, generating
+    /// detached promises for the entire skipped range `Clock+1 ..= t`.
+    pub fn bump(&mut self, t: u64) {
+        let t = t.max(self.value);
+        if self.value + 1 <= t {
+            self.outbox.detached.push((self.value + 1, t));
+        }
+        self.value = t;
+    }
+
+    /// Drain promises generated since the last call.
+    pub fn take_outbox(&mut self) -> PromiseSet {
+        std::mem::take(&mut self.outbox)
+    }
+
+    pub fn outbox_is_empty(&self) -> bool {
+        self.outbox.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ProcessId;
+
+    fn dot(n: u64) -> Dot {
+        Dot::new(ProcessId(0), n)
+    }
+
+    #[test]
+    fn proposal_takes_max_of_clock_and_coordinator() {
+        let mut c = Clock::default();
+        // Table 1 d), process C: clock 1, coordinator proposal 6 → 6.
+        c.bump(1);
+        c.take_outbox();
+        let t = c.proposal(dot(1), 6);
+        assert_eq!(t, 6);
+        let out = c.take_outbox();
+        // Detached 2..=5 (four promises), attached ⟨C,6⟩.
+        assert_eq!(out.detached, vec![(2, 5)]);
+        assert_eq!(out.attached, vec![(dot(1), 6)]);
+    }
+
+    #[test]
+    fn proposal_no_detached_when_bump_by_one() {
+        let mut c = Clock::default();
+        // Table 1 d), process B: clock 5, proposal m=6 → 6, no detached.
+        c.bump(5);
+        c.take_outbox();
+        let t = c.proposal(dot(1), 6);
+        assert_eq!(t, 6);
+        let out = c.take_outbox();
+        assert!(out.detached.is_empty());
+        assert_eq!(out.attached, vec![(dot(1), 6)]);
+    }
+
+    #[test]
+    fn proposal_above_coordinator_when_clock_ahead() {
+        let mut c = Clock::default();
+        // Table 1 a), process C: clock 10, coordinator 6 → proposes 11.
+        c.bump(10);
+        c.take_outbox();
+        let t = c.proposal(dot(1), 6);
+        assert_eq!(t, 11);
+        assert_eq!(c.value(), 11);
+    }
+
+    #[test]
+    fn bump_generates_detached_range_inclusive() {
+        let mut c = Clock::default();
+        c.bump(4);
+        let out = c.take_outbox();
+        assert_eq!(out.detached, vec![(1, 4)]);
+        // bump below the clock is a no-op
+        c.bump(2);
+        assert!(c.outbox_is_empty());
+        assert_eq!(c.value(), 4);
+    }
+
+    #[test]
+    fn sequence_of_proposals_is_strictly_increasing() {
+        let mut c = Clock::default();
+        let mut last = 0;
+        for i in 1..100 {
+            let t = c.proposal(dot(i), if i % 3 == 0 { last + 5 } else { 0 });
+            assert!(t > last);
+            last = t;
+        }
+        // Every timestamp 1..=last is promised exactly once (attached or
+        // detached): union of outbox ranges must be 1..=last w/o overlap.
+        let out = c.take_outbox();
+        let mut covered: Vec<u64> = Vec::new();
+        for (lo, hi) in out.detached {
+            covered.extend(lo..=hi);
+        }
+        covered.extend(out.attached.iter().map(|&(_, t)| t));
+        covered.sort_unstable();
+        let expect: Vec<u64> = (1..=last).collect();
+        assert_eq!(covered, expect, "promise ranges must tile 1..=Clock");
+    }
+}

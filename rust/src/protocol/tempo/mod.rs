@@ -1,0 +1,1260 @@
+//! Tempo: leaderless (partial) state-machine replication via timestamp
+//! stability — the paper's contribution (Algorithms 1–6).
+//!
+//! Partitions are **keys** (§2: partitions are "arbitrarily fine-grained,
+//! e.g., just a single state variable"). Each machine (a [`ProcessId`])
+//! replicates all keys of its shard group and runs an independent protocol
+//! instance per key: per-key logical clocks, per-key promise stores, and
+//! per-key execution queues — this is what makes Tempo's latency and
+//! throughput independent of the conflict rate (§6.3) and the protocol
+//! "highly parallel" (§4). Messages between machines batch the per-key
+//! payloads of one command (the §4 co-location optimization).
+//!
+//! Commit: per-key timestamps are computed over a fast quorum of
+//! `⌊r/2⌋+f` machines — fast path in one round trip when, for every key,
+//! the maximal proposal was made by ≥ f quorum members; otherwise a
+//! Flexible-Paxos slow path persists the vector of key timestamps.
+//! A command's final timestamp is the max over all its keys; it executes
+//! in ⟨ts, dot⟩ order per key once *stable* (Theorem 1), with an MStable
+//! handshake across shard groups.
+
+pub mod clock;
+pub mod msg;
+pub mod promises;
+
+use self::clock::Clock;
+use self::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums};
+use self::promises::{PromiseSet, PromiseStore};
+use super::{ballot, Action, Protocol};
+use crate::core::{key_to_shard, Command, Config, Dot, Key, ProcessId, ShardId};
+use crate::metrics::Counters;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// Protocol state of one key (= one partition, paper §2).
+#[derive(Debug, Default)]
+struct KeyState {
+    clock: Clock,
+    store: PromiseStore,
+    /// Everything this process ever promised on this key, for the periodic
+    /// full re-broadcast under failures (§B; footnote 2 only optimizes the
+    /// failure-free case).
+    history: PromiseSet,
+    /// Committed-not-yet-executed commands on this key, ⟨ts, dot⟩ order.
+    queue: BTreeMap<(u64, Dot), ()>,
+    /// Cached stable watermark (Theorem 1), recomputed when dirty.
+    stable: u64,
+}
+
+/// Per-command bookkeeping (the paper's cmd/ts/phase/quorums/bal/abal maps,
+/// plus coordinator-side collection state). One `Info` per dot per machine;
+/// the per-key timestamp values are vectors over the machine's local keys.
+#[derive(Clone, Debug)]
+struct Info {
+    phase: Phase,
+    cmd: Option<Command>,
+    quorums: Quorums,
+    /// Per-key timestamps for OUR group's keys (proposals, then decided).
+    ts: KeyTs,
+    /// Final (global) timestamp, set at commit.
+    final_ts: u64,
+    bal: u64,
+    abal: u64,
+    coordinator: bool,
+    /// Coordinator already dispatched MCommit/MConsensus (dedup guard).
+    decided: bool,
+    /// Coordinator: per-process per-key proposals from MProposeAck.
+    proposals: Vec<(ProcessId, KeyTs)>,
+    /// Coordinator: promise batches from the fast quorum (rebroadcast in
+    /// MCommit, §3.2 piggybacking).
+    collected: Vec<(ProcessId, KeyPromises)>,
+    consensus_acks: BTreeSet<ProcessId>,
+    /// Recovery: (process, per-key ts, phase, abal) from MRecAck.
+    rec_acks: Vec<(ProcessId, KeyTs, Phase, u64)>,
+    /// Per-group committed key-timestamps (Algorithm 3 line 56).
+    group_ts: Vec<(ShardId, KeyTs)>,
+    /// Multi-group execution: groups that announced stability.
+    stable_acks: BTreeSet<ShardId>,
+    announced: bool,
+    pending_since: u64,
+}
+
+impl Info {
+    fn new(time: u64) -> Self {
+        Info {
+            phase: Phase::Start,
+            cmd: None,
+            quorums: Vec::new(),
+            ts: Vec::new(),
+            final_ts: 0,
+            bal: 0,
+            abal: 0,
+            coordinator: false,
+            decided: false,
+            proposals: Vec::new(),
+            collected: Vec::new(),
+            consensus_acks: BTreeSet::new(),
+            rec_acks: Vec::new(),
+            group_ts: Vec::new(),
+            stable_acks: BTreeSet::new(),
+            announced: false,
+            pending_since: time,
+        }
+    }
+
+    fn fast_quorum(&self, group: ShardId) -> Option<&[ProcessId]> {
+        self.quorums.iter().find(|(s, _)| *s == group).map(|(_, q)| q.as_slice())
+    }
+}
+
+/// The Tempo machine state: one protocol instance per local key.
+pub struct Tempo {
+    id: ProcessId,
+    group: ShardId,
+    /// `I_p` at machine granularity: all machines of our group.
+    group_procs: Vec<ProcessId>,
+    config: Config,
+    keys: HashMap<Key, KeyState>,
+    /// Keys whose clock outbox has promises to broadcast next tick.
+    outbox_keys: BTreeSet<Key>,
+    /// Keys whose queues/stability changed since the last execution pass.
+    dirty: BTreeSet<Key>,
+    info: HashMap<Dot, Info>,
+    /// Messages whose precondition is not yet enabled, keyed by command.
+    stalled: HashMap<Dot, Vec<(ProcessId, Msg)>>,
+    /// Dots seen through gated attached promises: dot → first-seen time.
+    missing: HashMap<Dot, u64>,
+    /// Dots currently pending (for the recovery timer).
+    pending: BTreeSet<Dot>,
+    suspected: BTreeSet<ProcessId>,
+    crashed: bool,
+    ticks: u64,
+    pub counters: Counters,
+}
+
+impl Tempo {
+    /// `leader_p` from the Ω failure detector: lowest non-suspected machine
+    /// of our group.
+    fn leader(&self) -> ProcessId {
+        self.group_procs
+            .iter()
+            .copied()
+            .find(|p| !self.suspected.contains(p))
+            .unwrap_or(self.id)
+    }
+
+    fn group_base(&self) -> u32 {
+        self.group.0 * self.config.r as u32
+    }
+
+    /// Initial coordinator of `dot` at `group` (the paper's `initial_p`).
+    fn initial_coordinator(&self, dot: Dot, group: ShardId) -> ProcessId {
+        self.config.closest_in_shard(dot.origin, group)
+    }
+
+    /// Keys of `cmd` that live in our shard group (our local partitions).
+    fn local_keys(&self, cmd: &Command) -> Vec<Key> {
+        cmd.keys
+            .iter()
+            .copied()
+            .filter(|&k| key_to_shard(k, self.config.shards) == self.group)
+            .collect()
+    }
+
+    fn key_state(&mut self, k: Key) -> &mut KeyState {
+        self.keys.entry(k).or_default()
+    }
+
+    fn ensure_info(&mut self, dot: Dot, time: u64) -> &mut Info {
+        self.info.entry(dot).or_insert_with(|| Info::new(time))
+    }
+
+    fn phase_of_internal(&self, dot: Dot) -> Phase {
+        self.info.get(&dot).map_or(Phase::Start, |i| i.phase)
+    }
+
+    /// Send `msg` to every process in `to` except ourselves; handle our own
+    /// copy inline (self-addressed messages are delivered immediately).
+    fn broadcast(&mut self, to: &[ProcessId], msg: Msg, time: u64, out: &mut Vec<Action<Msg>>) {
+        let mut to_self = false;
+        for &p in to {
+            if p == self.id {
+                to_self = true;
+            } else {
+                out.push(Action::send(p, msg.clone()));
+            }
+        }
+        if to_self {
+            let actions = self.handle(self.id, msg, time);
+            out.extend(actions);
+        }
+    }
+
+    /// All machines of every group accessed by `cmd` (the paper's `I_c`).
+    fn all_processes_of(&self, cmd: &Command) -> Vec<ProcessId> {
+        let mut out = Vec::new();
+        for g in cmd.shards(self.config.shards) {
+            out.extend(self.config.shard_processes(g));
+        }
+        out
+    }
+
+    /// Re-deliver messages stalled on `dot` after its state advanced.
+    fn drain_stalled(&mut self, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
+        if let Some(msgs) = self.stalled.remove(&dot) {
+            for (from, msg) in msgs {
+                let actions = self.handle(from, msg, time);
+                out.extend(actions);
+            }
+        }
+    }
+
+    fn stall(&mut self, dot: Dot, from: ProcessId, msg: Msg) {
+        self.stalled.entry(dot).or_default().push((from, msg));
+    }
+
+    /// Incorporate a per-key promise batch from `source`, gating attached
+    /// promises on local commits (Algorithm 2 line 47).
+    fn add_promises(&mut self, source: ProcessId, batches: &KeyPromises, time: u64) {
+        for (k, batch) in batches {
+            if batch.is_empty() || key_to_shard(*k, self.config.shards) != self.group {
+                continue;
+            }
+            let info = &self.info;
+            let state = self.keys.entry(*k).or_default();
+            let unknown = state.store.add(source, batch, |dot| {
+                info.get(&dot).map_or(false, |i| i.phase.is_committed())
+            });
+            self.dirty.insert(*k);
+            for dot in unknown {
+                self.missing.entry(dot).or_insert(time);
+            }
+        }
+    }
+
+    /// Per-key `proposal(id, m)` over `asks`; returns per-key proposals
+    /// and the promise batches generated (for the ack/commit piggyback).
+    fn propose_keys(&mut self, dot: Dot, asks: &[(Key, u64)]) -> (KeyTs, KeyPromises) {
+        let mut ts = Vec::with_capacity(asks.len());
+        let mut batches = Vec::with_capacity(asks.len());
+        for &(k, m) in asks {
+            let state = self.keys.entry(k).or_default();
+            let t = state.clock.proposal(dot, m);
+            let batch = state.clock.take_outbox();
+            state.history.merge(&batch);
+            state.history.coalesce();
+            ts.push((k, t));
+            batches.push((k, batch));
+        }
+        ts.sort_unstable_by_key(|&(k, _)| k);
+        batches.sort_unstable_by_key(|&(k, _)| k);
+        (ts, batches)
+    }
+
+    // ------------------------------------------------------------------
+    // Commit protocol (Algorithm 1 / Algorithm 5)
+    // ------------------------------------------------------------------
+
+    fn handle_submit(
+        &mut self,
+        dot: Dot,
+        cmd: Command,
+        quorums: Quorums,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        if self.phase_of_internal(dot) != Phase::Start {
+            return; // duplicate MSubmit
+        }
+        let me = self.id;
+        let asks: Vec<(Key, u64)> = self.local_keys(&cmd).iter().map(|&k| (k, 0)).collect();
+        let (ts, batches) = self.propose_keys(dot, &asks);
+        {
+            let info = self.ensure_info(dot, time);
+            info.phase = Phase::Propose;
+            info.cmd = Some(cmd.clone());
+            info.quorums = quorums.clone();
+            info.ts = ts.clone();
+            info.coordinator = true;
+            info.proposals.push((me, ts.clone()));
+            info.collected.push((me, batches.clone()));
+            info.pending_since = time;
+        }
+        self.pending.insert(dot);
+        self.add_promises(me, &batches, time);
+
+        let fq: Vec<ProcessId> = self.info[&dot]
+            .fast_quorum(self.group)
+            .expect("fast quorum for own group")
+            .to_vec();
+        for &p in &fq {
+            if p != me {
+                out.push(Action::send(
+                    p,
+                    Msg::MPropose {
+                        dot,
+                        cmd: cmd.clone(),
+                        quorums: quorums.clone(),
+                        ts: ts.clone(),
+                    },
+                ));
+            }
+        }
+        for p in self.group_procs.clone() {
+            if !fq.contains(&p) {
+                out.push(Action::send(
+                    p,
+                    Msg::MPayload { dot, cmd: cmd.clone(), quorums: quorums.clone() },
+                ));
+            }
+        }
+        self.drain_stalled(dot, time, out);
+        self.try_fast_or_slow(dot, time, out);
+    }
+
+    fn handle_payload(
+        &mut self,
+        dot: Dot,
+        cmd: Command,
+        quorums: Quorums,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        if self.phase_of_internal(dot) != Phase::Start {
+            return;
+        }
+        let info = self.ensure_info(dot, time);
+        info.phase = Phase::Payload;
+        info.cmd = Some(cmd);
+        info.quorums = quorums;
+        info.pending_since = time;
+        self.pending.insert(dot);
+        self.missing.remove(&dot);
+        self.drain_stalled(dot, time, out);
+    }
+
+    fn handle_propose(
+        &mut self,
+        from: ProcessId,
+        dot: Dot,
+        cmd: Command,
+        quorums: Quorums,
+        coord_ts: KeyTs,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        if self.phase_of_internal(dot) != Phase::Start {
+            // Already recovered/committed — the MPropose precondition
+            // (line 13) fails; dropping the message prevents the initial
+            // coordinator from taking the fast path after recovery started.
+            return;
+        }
+        let me = self.id;
+        let (ts, batches) = self.propose_keys(dot, &coord_ts);
+        {
+            let info = self.ensure_info(dot, time);
+            info.phase = Phase::Propose;
+            info.cmd = Some(cmd.clone());
+            info.quorums = quorums;
+            info.ts = ts.clone();
+            info.pending_since = time;
+        }
+        self.pending.insert(dot);
+        self.missing.remove(&dot);
+        self.add_promises(me, &batches, time);
+        let highest = ts.iter().map(|&(_, t)| t).max().unwrap_or(0);
+        out.push(Action::send(from, Msg::MProposeAck { dot, ts, promises: batches }));
+
+        // MBump (§4 "Faster stability"): tell co-located replicas of the
+        // other groups accessed by the command to bump their clocks.
+        if self.config.bump_enabled {
+            for g in cmd.shards(self.config.shards) {
+                if g != self.group {
+                    let peer = self.config.closest_in_shard(me, g);
+                    out.push(Action::send(peer, Msg::MBump { dot, ts: highest }));
+                }
+            }
+        }
+        self.drain_stalled(dot, time, out);
+    }
+
+    fn handle_propose_ack(
+        &mut self,
+        from: ProcessId,
+        dot: Dot,
+        ts: KeyTs,
+        promises: KeyPromises,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        self.add_promises(from, &promises, time);
+        {
+            let info = match self.info.get_mut(&dot) {
+                Some(i) => i,
+                None => return,
+            };
+            if info.phase != Phase::Propose || !info.coordinator || info.decided {
+                return; // stale ack (recovery took over, or duplicate)
+            }
+            if info.proposals.iter().any(|(p, _)| *p == from) {
+                return;
+            }
+            info.proposals.push((from, ts));
+            info.collected.push((from, promises));
+        }
+        self.try_fast_or_slow(dot, time, out);
+    }
+
+    /// MProposeAck quorum check: fast path iff, for every local key, the
+    /// maximal proposal was made by at least `f` quorum members
+    /// (Algorithm 1 lines 17–21, per partition).
+    fn try_fast_or_slow(&mut self, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
+        let f = self.config.f;
+        let group = self.group;
+        let decision = {
+            let info = match self.info.get_mut(&dot) {
+                Some(i) => i,
+                None => return,
+            };
+            if info.phase != Phase::Propose || !info.coordinator || info.decided {
+                return;
+            }
+            let fq_len = match info.fast_quorum(group) {
+                Some(q) => q.len(),
+                None => return,
+            };
+            if info.proposals.len() < fq_len {
+                return;
+            }
+            // Per-key max and count over the quorum proposals.
+            let keys: Vec<Key> = info.ts.iter().map(|&(k, _)| k).collect();
+            let mut decided_ts: KeyTs = Vec::with_capacity(keys.len());
+            let mut fast = true;
+            for &k in &keys {
+                let mut max_t = 0;
+                let mut count = 0;
+                for (_, kts) in &info.proposals {
+                    let t = kts
+                        .iter()
+                        .find(|&&(k2, _)| k2 == k)
+                        .map(|&(_, t)| t)
+                        .expect("aligned key proposals");
+                    if t > max_t {
+                        max_t = t;
+                        count = 1;
+                    } else if t == max_t {
+                        count += 1;
+                    }
+                }
+                decided_ts.push((k, max_t));
+                fast &= count >= f;
+            }
+            info.decided = true;
+            info.ts = decided_ts.clone();
+            if fast {
+                (decided_ts, true, info.cmd.clone().unwrap(), std::mem::take(&mut info.collected))
+            } else {
+                (decided_ts, false, info.cmd.clone().unwrap(), Vec::new())
+            }
+        };
+        let (ts, fast, cmd, collected) = decision;
+        if fast {
+            self.counters.fast_path += 1;
+            let targets = self.all_processes_of(&cmd);
+            self.broadcast(
+                &targets,
+                Msg::MCommit { dot, group, ts, promises: collected },
+                time,
+                out,
+            );
+        } else {
+            self.counters.slow_path += 1;
+            let b = (self.id.0 - self.group_base()) as u64 + 1; // ballot "i"
+            let msg = Msg::MConsensus { dot, ts, bal: b };
+            self.broadcast(&self.group_procs.clone(), msg, time, out);
+        }
+    }
+
+    fn handle_commit(
+        &mut self,
+        from: ProcessId,
+        dot: Dot,
+        group: ShardId,
+        ts: KeyTs,
+        promises: Vec<(ProcessId, KeyPromises)>,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        // Incorporate the piggybacked promise batches (our keys only).
+        for (src, batches) in &promises {
+            let b = batches.clone();
+            self.add_promises(*src, &b, time);
+        }
+        match self.phase_of_internal(dot) {
+            Phase::Start => {
+                // Payload not here yet: keep the message (pre: id ∈ pending).
+                self.ensure_info(dot, time);
+                self.stall(dot, from, Msg::MCommit { dot, group, ts, promises });
+                return;
+            }
+            Phase::Commit | Phase::Execute => return, // duplicate
+            _ => {}
+        }
+        {
+            let info = self.info.get_mut(&dot).unwrap();
+            if info.group_ts.iter().any(|(g, _)| *g == group) {
+                return; // duplicate commit from this group
+            }
+            info.group_ts.push((group, ts));
+        }
+        self.try_commit(dot, time, out);
+    }
+
+    /// Commit once an MCommit from every accessed group arrived
+    /// (Algorithm 3 line 56): final timestamp is the max across all keys.
+    fn try_commit(&mut self, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
+        let final_ts = {
+            let info = match self.info.get(&dot) {
+                Some(i) => i,
+                None => return,
+            };
+            if info.phase.is_committed() || info.cmd.is_none() {
+                return;
+            }
+            let groups = info.cmd.as_ref().unwrap().shards(self.config.shards);
+            if info.group_ts.len() < groups.len() {
+                return;
+            }
+            info.group_ts
+                .iter()
+                .flat_map(|(_, kts)| kts.iter().map(|&(_, t)| t))
+                .max()
+                .expect("non-empty commit vector")
+        };
+        self.commit(dot, final_ts, time, out);
+    }
+
+    fn commit(&mut self, dot: Dot, final_ts: u64, time: u64, out: &mut Vec<Action<Msg>>) {
+        let local = {
+            let info = self.info.get_mut(&dot).expect("commit without info");
+            info.final_ts = final_ts;
+            info.phase = Phase::Commit;
+            self.pending.remove(&dot);
+            self.missing.remove(&dot);
+            info.cmd.clone().expect("commit without payload")
+        };
+        let local_keys = self.local_keys(&local);
+        for &k in &local_keys {
+            let state = self.keys.entry(k).or_default();
+            // bump(ts[id]): detached promises up to the committed timestamp
+            // (Algorithm 1 line 25 / Algorithm 3 line 59).
+            state.clock.bump(final_ts);
+            if !state.clock.outbox_is_empty() {
+                self.outbox_keys.insert(k);
+            }
+            // Release attached promises gated on this command (line 47).
+            state.store.on_commit(dot);
+            state.queue.insert((final_ts, dot), ());
+            self.dirty.insert(k);
+        }
+        out.push(Action::Committed { dot, fast: true });
+        self.drain_stalled(dot, time, out);
+        self.advance_execution(out);
+    }
+
+    // ------------------------------------------------------------------
+    // Slow path: single-decree Flexible Paxos (Algorithm 5 lines 30–37)
+    // ------------------------------------------------------------------
+
+    fn handle_consensus(
+        &mut self,
+        from: ProcessId,
+        dot: Dot,
+        ts: KeyTs,
+        bal: u64,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        let info = self.ensure_info(dot, time);
+        if info.bal > bal {
+            // §B liveness: help the recovery leader pick a higher ballot.
+            let cur = info.bal;
+            out.push(Action::send(from, Msg::MRecNAck { dot, bal: cur }));
+            return;
+        }
+        info.ts = ts;
+        info.bal = bal;
+        info.abal = bal;
+        out.push(Action::send(from, Msg::MConsensusAck { dot, bal }));
+    }
+
+    fn handle_consensus_ack(
+        &mut self,
+        from: ProcessId,
+        dot: Dot,
+        bal: u64,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        let slow_quorum = self.config.slow_quorum_size();
+        let ready = {
+            let info = match self.info.get_mut(&dot) {
+                Some(i) => i,
+                None => return,
+            };
+            if info.bal != bal || info.phase.is_committed() {
+                return;
+            }
+            info.consensus_acks.insert(from);
+            // Fires exactly once, when the (f+1)-th distinct ack arrives.
+            info.consensus_acks.len() == slow_quorum
+        };
+        if !ready {
+            return;
+        }
+        let (ts, cmd, collected) = {
+            let info = self.info.get_mut(&dot).unwrap();
+            (info.ts.clone(), info.cmd.clone(), std::mem::take(&mut info.collected))
+        };
+        let cmd = match cmd {
+            Some(c) => c,
+            None => return,
+        };
+        let group = self.group;
+        let targets = self.all_processes_of(&cmd);
+        self.broadcast(&targets, Msg::MCommit { dot, group, ts, promises: collected }, time, out);
+    }
+
+    // ------------------------------------------------------------------
+    // Execution protocol (Algorithm 2 / Algorithm 6 lines 97–103)
+    // ------------------------------------------------------------------
+
+    /// Drain the dirty-key set, executing every stable queue head in
+    /// ⟨ts, dot⟩ order. A command executes once it is the stable head of
+    /// every local key it accesses and (if multi-group) every accessed
+    /// group has announced stability via MStable.
+    fn advance_execution(&mut self, out: &mut Vec<Action<Msg>>) {
+        let majority = self.config.majority();
+        while let Some(k) = self.dirty.pop_first() {
+            // Refresh this key's stable watermark (Theorem 1).
+            {
+                let procs = &self.group_procs;
+                if let Some(state) = self.keys.get_mut(&k) {
+                    let w = state.store.stable_watermark(procs, majority);
+                    if w > state.stable {
+                        state.stable = w;
+                    }
+                } else {
+                    continue;
+                }
+            }
+            loop {
+                let (ts, dot) = {
+                    let state = &self.keys[&k];
+                    match state.queue.keys().next() {
+                        Some(&(ts, dot)) if ts <= state.stable => (ts, dot),
+                        _ => break,
+                    }
+                };
+                if !self.try_execute(dot, ts, out) {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Try to execute `dot` (committed with final timestamp `ts`). Returns
+    /// true if it executed (and queues advanced).
+    fn try_execute(&mut self, dot: Dot, ts: u64, out: &mut Vec<Action<Msg>>) -> bool {
+        let cmd = match self.info.get(&dot) {
+            Some(i) if i.phase == Phase::Commit => i.cmd.clone().unwrap(),
+            _ => return false,
+        };
+        let local = self.local_keys(&cmd);
+        // Stable head of every local key?
+        for &k2 in &local {
+            let state = match self.keys.get(&k2) {
+                Some(s) => s,
+                None => return false,
+            };
+            if state.stable < ts || state.queue.keys().next() != Some(&(ts, dot)) {
+                return false;
+            }
+        }
+        let groups = cmd.shards(self.config.shards);
+        if groups.len() > 1 {
+            // Announce our stability once (Algorithm 6 line 101), then wait
+            // for every accessed group (Algorithm 6 line 102).
+            let me = self.id;
+            let own = self.group;
+            let announce = {
+                let info = self.info.get_mut(&dot).unwrap();
+                if info.announced {
+                    false
+                } else {
+                    info.announced = true;
+                    info.stable_acks.insert(own);
+                    true
+                }
+            };
+            if announce {
+                for p in self.all_processes_of(&cmd) {
+                    if p != me && self.config.shard_of(p) != own {
+                        out.push(Action::send(p, Msg::MStable { dot }));
+                    }
+                }
+            }
+            let ready = {
+                let info = &self.info[&dot];
+                groups.iter().all(|g| info.stable_acks.contains(g))
+            };
+            if !ready {
+                return false;
+            }
+        }
+        // Execute: remove from all local queues and emit the upcall.
+        for &k2 in &local {
+            let state = self.keys.get_mut(&k2).unwrap();
+            state.queue.remove(&(ts, dot));
+            self.dirty.insert(k2);
+        }
+        self.info.get_mut(&dot).unwrap().phase = Phase::Execute;
+        self.counters.executed += 1;
+        out.push(Action::Execute { dot, cmd });
+        true
+    }
+
+    fn handle_stable(&mut self, from: ProcessId, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
+        let group = self.config.shard_of(from);
+        match self.phase_of_internal(dot) {
+            Phase::Execute => {}
+            Phase::Commit => {
+                let (ts, local) = {
+                    let info = self.info.get_mut(&dot).unwrap();
+                    info.stable_acks.insert(group);
+                    (info.final_ts, info.cmd.clone().unwrap())
+                };
+                let _ = ts;
+                for k in self.local_keys(&local) {
+                    self.dirty.insert(k);
+                }
+                self.advance_execution(out);
+            }
+            _ => {
+                self.ensure_info(dot, time);
+                // Record the ack even before commit; no need to re-handle.
+                self.info.get_mut(&dot).unwrap().stable_acks.insert(group);
+            }
+        }
+    }
+
+    fn handle_promises(
+        &mut self,
+        from: ProcessId,
+        promises: KeyPromises,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        self.add_promises(from, &promises, time);
+        self.advance_execution(out);
+    }
+
+    fn handle_bump(&mut self, from: ProcessId, dot: Dot, ts: u64, time: u64) {
+        match self.phase_of_internal(dot) {
+            Phase::Start | Phase::Payload => {
+                // Precondition `id ∈ propose` not met yet; retry when the
+                // command advances (dropped once committed, where the commit
+                // bump subsumes this one).
+                self.ensure_info(dot, time);
+                self.stall(dot, from, Msg::MBump { dot, ts });
+            }
+            Phase::Propose => {
+                let cmd = self.info[&dot].cmd.clone().unwrap();
+                for k in self.local_keys(&cmd) {
+                    let state = self.keys.entry(k).or_default();
+                    state.clock.bump(ts);
+                    if !state.clock.outbox_is_empty() {
+                        self.outbox_keys.insert(k);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Recovery (Algorithm 4 / Algorithm 5 lines 38–62) and §B liveness
+    // ------------------------------------------------------------------
+
+    /// Take over coordination of `dot` (paper `recover(id)`).
+    fn recover(&mut self, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
+        let bal = {
+            let info = match self.info.get_mut(&dot) {
+                Some(i) => i,
+                None => return,
+            };
+            if !info.phase.is_pending() {
+                return;
+            }
+            info.rec_acks.clear();
+            info.consensus_acks.clear();
+            info.bal
+        };
+        let b = ballot::next_owned(bal, self.id, self.config.r as u64, self.group_base());
+        self.counters.recoveries += 1;
+        out.push(Action::RecoveryStarted { dot });
+        self.broadcast(&self.group_procs.clone(), Msg::MRec { dot, bal: b }, time, out);
+    }
+
+    fn handle_rec(
+        &mut self,
+        from: ProcessId,
+        dot: Dot,
+        bal: u64,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        let phase = self.phase_of_internal(dot);
+        if phase == Phase::Start {
+            self.ensure_info(dot, time);
+            self.stall(dot, from, Msg::MRec { dot, bal });
+            return;
+        }
+        if !phase.is_pending() {
+            return; // already committed; MCommitRequest liveness helps `from`
+        }
+        let cur_bal = self.info[&dot].bal;
+        if cur_bal >= bal {
+            out.push(Action::send(from, Msg::MRecNAck { dot, bal: cur_bal }));
+            return;
+        }
+        if cur_bal == 0 {
+            match phase {
+                Phase::Payload => {
+                    // Compute per-key proposals now; RECOVER-R records that
+                    // they happened in the MRec handler, which invalidates
+                    // the fast path (Algorithm 4, case 1).
+                    let cmd = self.info[&dot].cmd.clone().unwrap();
+                    let asks: Vec<(Key, u64)> =
+                        self.local_keys(&cmd).iter().map(|&k| (k, 0)).collect();
+                    let (ts, batches) = self.propose_keys(dot, &asks);
+                    let me = self.id;
+                    self.add_promises(me, &batches, time);
+                    for (k, _) in &batches {
+                        self.outbox_keys.insert(*k);
+                    }
+                    let info = self.info.get_mut(&dot).unwrap();
+                    info.ts = ts;
+                    info.phase = Phase::RecoverR;
+                }
+                Phase::Propose => {
+                    self.info.get_mut(&dot).unwrap().phase = Phase::RecoverP;
+                }
+                _ => {}
+            }
+        }
+        let info = self.info.get_mut(&dot).unwrap();
+        info.bal = bal;
+        let (ts, ph, abal) = (info.ts.clone(), info.phase, info.abal);
+        out.push(Action::send(from, Msg::MRecAck { dot, ts, phase: ph, abal, bal }));
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn handle_rec_ack(
+        &mut self,
+        from: ProcessId,
+        dot: Dot,
+        ts: KeyTs,
+        phase: Phase,
+        abal: u64,
+        bal: u64,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        let rec_quorum = self.config.recovery_quorum_size();
+        let group = self.group;
+        let initial = self.initial_coordinator(dot, group);
+        let decided: KeyTs = {
+            let info = match self.info.get_mut(&dot) {
+                Some(i) => i,
+                None => return,
+            };
+            if info.bal != bal || info.phase.is_committed() {
+                return;
+            }
+            if info.rec_acks.iter().any(|&(p, ..)| p == from) {
+                return;
+            }
+            info.rec_acks.push((from, ts, phase, abal));
+            if info.rec_acks.len() != rec_quorum {
+                return;
+            }
+            if let Some((_, kts, _, _)) = info
+                .rec_acks
+                .iter()
+                .filter(|&&(_, _, _, ab)| ab != 0)
+                .max_by_key(|&&(_, _, _, ab)| ab)
+            {
+                // Some process accepted a consensus proposal: classic Paxos
+                // rule — adopt the value accepted at the highest ballot.
+                kts.clone()
+            } else {
+                // Nobody accepted: reconstruct per-key timestamps that
+                // preserve Properties 3 and 4.
+                let fq: Vec<ProcessId> =
+                    info.fast_quorum(group).map(|q| q.to_vec()).unwrap_or_default();
+                let in_i: Vec<&(ProcessId, KeyTs, Phase, u64)> =
+                    info.rec_acks.iter().filter(|&&(p, ..)| fq.contains(&p)).collect();
+                let s = in_i.iter().any(|&&(p, ..)| p == initial)
+                    || in_i.iter().any(|&&(_, _, ph, _)| ph == Phase::RecoverR);
+                // Candidate set Q': whole recovery quorum if the initial
+                // coordinator cannot have taken the fast path; otherwise
+                // I = Q_rec ∩ Q_fast (>= ⌊r/2⌋ members, Property 4).
+                let candidates: Vec<&(ProcessId, KeyTs, Phase, u64)> = if s {
+                    info.rec_acks.iter().collect()
+                } else {
+                    in_i
+                };
+                let keys: Vec<Key> = info.ts.iter().map(|&(k, _)| k).collect();
+                // When `info.ts` is empty (we never proposed — possible for
+                // a RECOVER-R that raced), derive the key set from an ack.
+                let keys = if keys.is_empty() {
+                    candidates
+                        .first()
+                        .map(|(_, kts, _, _)| kts.iter().map(|&(k, _)| k).collect())
+                        .unwrap_or_default()
+                } else {
+                    keys
+                };
+                keys.iter()
+                    .map(|&k| {
+                        let max_t = candidates
+                            .iter()
+                            .filter_map(|(_, kts, _, _)| {
+                                kts.iter().find(|&&(k2, _)| k2 == k).map(|&(_, t)| t)
+                            })
+                            .max()
+                            .unwrap_or(0);
+                        (k, max_t)
+                    })
+                    .collect()
+            }
+        };
+        {
+            let info = self.info.get_mut(&dot).unwrap();
+            info.ts = decided.clone();
+            info.coordinator = true; // we are this command's coordinator now
+            info.consensus_acks.clear();
+        }
+        let msg = Msg::MConsensus { dot, ts: decided, bal };
+        self.broadcast(&self.group_procs.clone(), msg, time, out);
+    }
+
+    fn handle_rec_nack(&mut self, dot: Dot, bal: u64, time: u64, out: &mut Vec<Action<Msg>>) {
+        // §B: join the higher ballot and retry recovery (only the leader).
+        if self.leader() != self.id {
+            return;
+        }
+        {
+            let info = match self.info.get_mut(&dot) {
+                Some(i) => i,
+                None => return,
+            };
+            if info.bal >= bal || !info.phase.is_pending() {
+                return;
+            }
+            info.bal = bal;
+        }
+        self.recover(dot, time, out);
+    }
+
+    fn handle_commit_request(&mut self, from: ProcessId, dot: Dot, out: &mut Vec<Action<Msg>>) {
+        if let Some(info) = self.info.get(&dot) {
+            if info.phase.is_committed() {
+                if let Some(cmd) = &info.cmd {
+                    out.push(Action::send(
+                        from,
+                        Msg::MCommitDirect {
+                            dot,
+                            cmd: cmd.clone(),
+                            quorums: info.quorums.clone(),
+                            final_ts: info.final_ts,
+                        },
+                    ));
+                }
+            }
+        }
+    }
+
+    fn handle_commit_direct(
+        &mut self,
+        dot: Dot,
+        cmd: Command,
+        quorums: Quorums,
+        final_ts: u64,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        {
+            let info = self.ensure_info(dot, time);
+            if info.phase.is_committed() {
+                return;
+            }
+            if info.cmd.is_none() {
+                info.cmd = Some(cmd.clone());
+                info.quorums = quorums;
+            }
+        }
+        self.commit(dot, final_ts, time, out);
+    }
+}
+
+impl Protocol for Tempo {
+    type Message = Msg;
+
+    fn new(id: ProcessId, config: Config) -> Self {
+        let group = config.shard_of(id);
+        let group_procs = config.shard_processes(group);
+        Tempo {
+            id,
+            group,
+            group_procs,
+            config,
+            keys: HashMap::new(),
+            outbox_keys: BTreeSet::new(),
+            dirty: BTreeSet::new(),
+            info: HashMap::new(),
+            stalled: HashMap::new(),
+            missing: HashMap::new(),
+            pending: BTreeSet::new(),
+            suspected: BTreeSet::new(),
+            crashed: false,
+            ticks: 0,
+            counters: Counters::default(),
+        }
+    }
+
+    fn name() -> &'static str {
+        "tempo"
+    }
+
+    /// Submit a command (paper line 1): pick a fast quorum per accessed
+    /// group and hand the command to the co-located coordinator of each.
+    fn submit(&mut self, dot: Dot, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+        let mut out = Vec::new();
+        if self.crashed {
+            return out;
+        }
+        let groups = cmd.shards(self.config.shards);
+        debug_assert!(
+            groups.contains(&self.group),
+            "submitter must replicate one accessed partition"
+        );
+        let quorums: Quorums = groups
+            .iter()
+            .map(|&g| {
+                let coord = self.config.closest_in_shard(self.id, g);
+                (g, self.config.fast_quorum(coord))
+            })
+            .collect();
+        let coords: Vec<ProcessId> =
+            groups.iter().map(|&g| self.config.closest_in_shard(self.id, g)).collect();
+        self.broadcast(&coords, Msg::MSubmit { dot, cmd, quorums }, time, &mut out);
+        out
+    }
+
+    fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
+        let mut out = Vec::new();
+        if self.crashed {
+            return out;
+        }
+        match msg {
+            Msg::MSubmit { dot, cmd, quorums } => {
+                self.handle_submit(dot, cmd, quorums, time, &mut out)
+            }
+            Msg::MPropose { dot, cmd, quorums, ts } => {
+                self.handle_propose(from, dot, cmd, quorums, ts, time, &mut out)
+            }
+            Msg::MProposeAck { dot, ts, promises } => {
+                self.handle_propose_ack(from, dot, ts, promises, time, &mut out)
+            }
+            Msg::MPayload { dot, cmd, quorums } => {
+                self.handle_payload(dot, cmd, quorums, time, &mut out)
+            }
+            Msg::MCommit { dot, group, ts, promises } => {
+                self.handle_commit(from, dot, group, ts, promises, time, &mut out)
+            }
+            Msg::MCommitDirect { dot, cmd, quorums, final_ts } => {
+                self.handle_commit_direct(dot, cmd, quorums, final_ts, time, &mut out)
+            }
+            Msg::MConsensus { dot, ts, bal } => {
+                self.handle_consensus(from, dot, ts, bal, time, &mut out)
+            }
+            Msg::MConsensusAck { dot, bal } => {
+                self.handle_consensus_ack(from, dot, bal, time, &mut out)
+            }
+            Msg::MPromises { promises } => self.handle_promises(from, promises, time, &mut out),
+            Msg::MBump { dot, ts } => self.handle_bump(from, dot, ts, time),
+            Msg::MStable { dot } => self.handle_stable(from, dot, time, &mut out),
+            Msg::MRec { dot, bal } => self.handle_rec(from, dot, bal, time, &mut out),
+            Msg::MRecAck { dot, ts, phase, abal, bal } => {
+                self.handle_rec_ack(from, dot, ts, phase, abal, bal, time, &mut out)
+            }
+            Msg::MRecNAck { dot, bal } => self.handle_rec_nack(dot, bal, time, &mut out),
+            Msg::MCommitRequest { dot } => self.handle_commit_request(from, dot, &mut out),
+        }
+        out
+    }
+
+    /// Periodic handler: broadcast freshly generated promises, advance
+    /// execution, and run the §B liveness mechanisms (recovery timers and
+    /// MCommitRequest for commands known only through attached promises).
+    fn tick(&mut self, time: u64) -> Vec<Action<Msg>> {
+        let mut out = Vec::new();
+        if self.crashed {
+            return out;
+        }
+        // 1. Promise broadcast (Algorithm 2 line 45; deltas only, per the
+        //    paper's footnote 2), batched across keys into one message.
+        if !self.outbox_keys.is_empty() {
+            let keys: Vec<Key> = std::mem::take(&mut self.outbox_keys).into_iter().collect();
+            let mut batches: KeyPromises = Vec::with_capacity(keys.len());
+            for k in keys {
+                if let Some(state) = self.keys.get_mut(&k) {
+                    let batch = state.clock.take_outbox();
+                    if !batch.is_empty() {
+                        state.history.merge(&batch);
+                        state.history.coalesce();
+                        batches.push((k, batch));
+                    }
+                }
+            }
+            if !batches.is_empty() {
+                let me = self.id;
+                self.add_promises(me, &batches, time);
+                for p in self.group_procs.clone() {
+                    if p != me {
+                        out.push(Action::send(p, Msg::MPromises { promises: batches.clone() }));
+                    }
+                }
+            }
+        }
+        // 1b. Periodic *full* promise re-broadcast (§B): under failures,
+        //     promises piggybacked to a dead coordinator would otherwise be
+        //     lost forever and stability would stall. Only needed when
+        //     recovery is enabled; throttled to every 32nd tick.
+        self.ticks += 1;
+        if self.config.recovery_timeout_us != u64::MAX && self.ticks % 32 == 0 {
+            let mut full: KeyPromises = Vec::new();
+            for (&k, state) in &self.keys {
+                if !state.history.is_empty() {
+                    full.push((k, state.history.clone()));
+                }
+            }
+            if !full.is_empty() {
+                full.sort_unstable_by_key(|&(k, _)| k);
+                for p in self.group_procs.clone() {
+                    if p != self.id {
+                        out.push(Action::send(p, Msg::MPromises { promises: full.clone() }));
+                    }
+                }
+            }
+        }
+        // 2. Execution.
+        self.advance_execution(&mut out);
+        // 3. Recovery timers (only the Ω leader calls recover()).
+        if self.config.recovery_timeout_us != u64::MAX && self.leader() == self.id {
+            let timeout = self.config.recovery_timeout_us;
+            let r = self.config.r as u64;
+            let base = self.group_base();
+            let me = self.id;
+            let due: Vec<Dot> = self
+                .pending
+                .iter()
+                .copied()
+                .filter(|d| {
+                    self.info.get(d).map_or(false, |i| {
+                        i.phase.is_pending()
+                            && time.saturating_sub(i.pending_since) >= timeout
+                            && (i.bal == 0 || ballot::leader(i.bal, r, base) != me)
+                    })
+                })
+                .collect();
+            for dot in due {
+                // Restart the timer so we do not spam MRec every tick.
+                if let Some(i) = self.info.get_mut(&dot) {
+                    i.pending_since = time;
+                }
+                self.recover(dot, time, &mut out);
+            }
+        }
+        // 4. MCommitRequest for dots known only via gated attached promises.
+        if self.config.recovery_timeout_us != u64::MAX {
+            let timeout = self.config.recovery_timeout_us;
+            let due: Vec<Dot> = self
+                .missing
+                .iter()
+                .filter(|&(_, &since)| time.saturating_sub(since) >= timeout)
+                .map(|(&d, _)| d)
+                .collect();
+            for dot in due {
+                *self.missing.get_mut(&dot).unwrap() = time;
+                // We may not know I_c yet: ask the origin's group and ours.
+                let mut targets = self.config.shard_processes(self.config.shard_of(dot.origin));
+                targets.extend(self.group_procs.iter().copied());
+                targets.sort_unstable();
+                targets.dedup();
+                for p in targets {
+                    if p != self.id {
+                        out.push(Action::send(p, Msg::MCommitRequest { dot }));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn crash(&mut self) {
+        self.crashed = true;
+    }
+
+    fn suspect(&mut self, p: ProcessId) {
+        self.suspected.insert(p);
+    }
+
+    fn counters(&self) -> Counters {
+        self.counters
+    }
+
+    fn msg_size(msg: &Msg) -> u64 {
+        msg.wire_size()
+    }
+}
+
+impl Tempo {
+    /// Logical clock of `key` (diagnostics/tests).
+    pub fn clock_value(&self, key: Key) -> u64 {
+        self.keys.get(&key).map_or(0, |s| s.clock.value())
+    }
+
+    /// Stable watermark of `key` (diagnostics/tests).
+    pub fn stable_watermark(&self, key: Key) -> u64 {
+        self.keys
+            .get(&key)
+            .map_or(0, |s| s.store.stable_watermark(&self.group_procs, self.config.majority()))
+    }
+
+    /// Phase of `dot` (tests).
+    pub fn phase_of(&self, dot: Dot) -> Option<Phase> {
+        self.info.get(&dot).map(|i| i.phase)
+    }
+
+    /// Committed (final) timestamp of `dot`, if committed (Property 1).
+    pub fn committed_ts(&self, dot: Dot) -> Option<u64> {
+        self.info.get(&dot).filter(|i| i.phase.is_committed()).map(|i| i.final_ts)
+    }
+
+    /// Committed per-key timestamps at this group (tests).
+    pub fn committed_key_ts(&self, dot: Dot) -> Option<KeyTs> {
+        self.info.get(&dot).filter(|i| i.phase.is_committed()).map(|i| i.ts.clone())
+    }
+}

@@ -1,0 +1,116 @@
+//! Tempo wire messages, mirroring the paper's pseudocode
+//! (Algorithms 1–6: MSubmit, MPropose, MProposeAck, MPayload, MCommit,
+//! MConsensus, MConsensusAck, MPromises, MBump, MStable, MRec, MRecAck,
+//! MRecNAck, MCommitRequest).
+//!
+//! Partitions are *keys* (§2: "arbitrarily fine-grained"). A machine
+//! (process) replicates every key of its shard group, so protocol messages
+//! between machines batch the per-key payloads of one command into a single
+//! wire message: timestamp fields are vectors of `(key, ts)` over the keys
+//! the sender's group is responsible for. This is the paper's §4
+//! co-location optimization applied to the transport.
+
+use super::promises::PromiseSet;
+use crate::core::{Command, Dot, Key, ProcessId, ShardId};
+
+/// Fast-quorum mapping `Q`: the fast quorum chosen per accessed shard group.
+pub type Quorums = Vec<(ShardId, Vec<ProcessId>)>;
+
+/// Per-key timestamps for the keys of one group.
+pub type KeyTs = Vec<(Key, u64)>;
+
+/// Per-key promise batches.
+pub type KeyPromises = Vec<(Key, PromiseSet)>;
+
+/// Command phase at a process (paper Figure 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Start,
+    Payload,
+    Propose,
+    RecoverR,
+    RecoverP,
+    Commit,
+    Execute,
+}
+
+impl Phase {
+    /// `pending = payload ∪ propose ∪ recover-p ∪ recover-r`.
+    pub fn is_pending(self) -> bool {
+        matches!(self, Phase::Payload | Phase::Propose | Phase::RecoverR | Phase::RecoverP)
+    }
+
+    pub fn is_committed(self) -> bool {
+        matches!(self, Phase::Commit | Phase::Execute)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// Submitter → per-group coordinator.
+    MSubmit { dot: Dot, cmd: Command, quorums: Quorums },
+    /// Coordinator → fast quorum of its group: coordinator's per-key
+    /// proposals for the keys of this group.
+    MPropose { dot: Dot, cmd: Command, quorums: Quorums, ts: KeyTs },
+    /// Fast-quorum process → coordinator: per-key proposals plus the
+    /// promises generated while computing them (§3.2 piggybacking).
+    MProposeAck { dot: Dot, ts: KeyTs, promises: KeyPromises },
+    /// Coordinator → remaining group processes (payload dissemination).
+    MPayload { dot: Dot, cmd: Command, quorums: Quorums },
+    /// Group coordinator → `I_c`: per-key timestamps decided at this group,
+    /// with the promise batches collected from the fast quorum.
+    MCommit { dot: Dot, group: ShardId, ts: KeyTs, promises: Vec<(ProcessId, KeyPromises)> },
+    /// Catch-up commit (reply to MCommitRequest): payload + final
+    /// timestamp in one step (§B liveness, condensing MPayload+MCommit).
+    MCommitDirect { dot: Dot, cmd: Command, quorums: Quorums, final_ts: u64 },
+    /// Flexible-Paxos phase 2 (slow path / recovery) on the vector of
+    /// per-key timestamps of this group.
+    MConsensus { dot: Dot, ts: KeyTs, bal: u64 },
+    MConsensusAck { dot: Dot, bal: u64 },
+    /// Periodic promise broadcast within the group (per-key deltas).
+    MPromises { promises: KeyPromises },
+    /// Faster multi-partition stability (§4): a fast-quorum process tells
+    /// co-located replicas of sibling groups to bump their clocks to its
+    /// highest proposal.
+    MBump { dot: Dot, ts: u64 },
+    /// Multi-group stability announcement (Algorithm 3 line 64).
+    MStable { dot: Dot },
+    /// Recovery: Flexible-Paxos phase 1 (Algorithm 4).
+    MRec { dot: Dot, bal: u64 },
+    MRecAck { dot: Dot, ts: KeyTs, phase: Phase, abal: u64, bal: u64 },
+    /// Ballot catch-up for the recovery leader (§B).
+    MRecNAck { dot: Dot, bal: u64 },
+    /// Ask for the payload/commit of a command known only through an
+    /// attached promise (§B).
+    MCommitRequest { dot: Dot },
+}
+
+impl Msg {
+    /// Approximate wire size in bytes, used by the simulator's CPU/NIC
+    /// resource model (header + payload-bearing fields).
+    pub fn wire_size(&self) -> u64 {
+        const HDR: u64 = 24;
+        fn kp_size(kp: &KeyPromises) -> u64 {
+            kp.iter()
+                .map(|(_, p)| 8 + 16 * (p.detached.len() + p.attached.len()) as u64)
+                .sum()
+        }
+        match self {
+            Msg::MSubmit { cmd, .. } | Msg::MPayload { cmd, .. } => HDR + cmd.wire_size(),
+            Msg::MPropose { cmd, ts, .. } => HDR + cmd.wire_size() + 16 * ts.len() as u64,
+            Msg::MCommitDirect { cmd, .. } => HDR + cmd.wire_size() + 8,
+            Msg::MProposeAck { ts, promises, .. } => {
+                HDR + 16 * ts.len() as u64 + kp_size(promises)
+            }
+            Msg::MCommit { ts, promises, .. } => {
+                HDR + 16 * ts.len() as u64
+                    + promises.iter().map(|(_, kp)| 8 + kp_size(kp)).sum::<u64>()
+            }
+            Msg::MPromises { promises } => HDR + kp_size(promises),
+            Msg::MConsensus { ts, .. } | Msg::MRecAck { ts, .. } => {
+                HDR + 8 + 16 * ts.len() as u64
+            }
+            _ => HDR + 16,
+        }
+    }
+}

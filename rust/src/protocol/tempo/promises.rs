@@ -1,0 +1,332 @@
+//! Promise tracking and stability detection (paper §3.2).
+//!
+//! A *promise* `⟨j, u⟩` says process `j` will never (again) propose
+//! timestamp `u`. Promises *attached* to a command additionally carry the
+//! command's identifier and are only incorporated once that command is
+//! committed locally (Algorithm 2, line 47) — that gating is what makes
+//! Theorem 1 sound. Timestamp `t` is *stable* once a majority of processes
+//! have all their promises up to `t` known (Theorem 1).
+//!
+//! Promises from one process are dense ranges in practice (clocks only move
+//! forward), so we track a contiguous watermark plus a sparse set of
+//! out-of-order values — `highest_contiguous_promise` is then O(1).
+
+use crate::core::{Dot, ProcessId};
+use std::collections::{BTreeSet, HashMap};
+
+/// Set of known promises from a single source process.
+#[derive(Clone, Debug, Default)]
+pub struct SourceTracker {
+    /// All promises `1..=watermark` are present.
+    watermark: u64,
+    /// Promises above the watermark, not yet contiguous.
+    above: BTreeSet<u64>,
+}
+
+impl SourceTracker {
+    /// `highest_contiguous_promise(j)` of Algorithm 2.
+    #[inline]
+    pub fn highest_contiguous(&self) -> u64 {
+        self.watermark
+    }
+
+    /// Add a single promise.
+    pub fn add(&mut self, u: u64) {
+        if u <= self.watermark {
+            return;
+        }
+        if u == self.watermark + 1 {
+            self.watermark = u;
+            self.drain_contiguous();
+        } else {
+            self.above.insert(u);
+        }
+    }
+
+    /// Add the inclusive promise range `lo..=hi` (no-op if `lo > hi`).
+    pub fn add_range(&mut self, lo: u64, hi: u64) {
+        if lo > hi {
+            return;
+        }
+        if lo <= self.watermark + 1 {
+            if hi > self.watermark {
+                self.watermark = hi;
+                self.drain_contiguous();
+            }
+        } else {
+            self.above.extend(lo..=hi);
+        }
+    }
+
+    fn drain_contiguous(&mut self) {
+        while self.above.remove(&(self.watermark + 1)) {
+            self.watermark += 1;
+        }
+        // Values at or below the watermark are redundant; drop them.
+        if let Some(&min) = self.above.iter().next() {
+            if min <= self.watermark {
+                self.above = self.above.split_off(&(self.watermark + 1));
+            }
+        }
+    }
+
+    /// Number of promises buffered out of order (diagnostics).
+    pub fn pending(&self) -> usize {
+        self.above.len()
+    }
+}
+
+/// A batch of promises from one process, as shipped in `MPromises`,
+/// `MProposeAck` and `MCommit` messages.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PromiseSet {
+    /// Detached promise ranges (inclusive).
+    pub detached: Vec<(u64, u64)>,
+    /// Attached promises: (command, timestamp).
+    pub attached: Vec<(Dot, u64)>,
+}
+
+impl PromiseSet {
+    pub fn is_empty(&self) -> bool {
+        self.detached.is_empty() && self.attached.is_empty()
+    }
+
+    pub fn merge(&mut self, other: &PromiseSet) {
+        self.detached.extend_from_slice(&other.detached);
+        self.attached.extend_from_slice(&other.attached);
+    }
+
+    /// Coalesce overlapping/adjacent detached ranges and dedup attached
+    /// promises (keeps long-lived promise histories compact).
+    pub fn coalesce(&mut self) {
+        if self.detached.len() > 1 {
+            self.detached.sort_unstable();
+            let mut merged: Vec<(u64, u64)> = Vec::with_capacity(self.detached.len());
+            for &(lo, hi) in &self.detached {
+                if lo > hi {
+                    continue;
+                }
+                match merged.last_mut() {
+                    Some((_, mhi)) if lo <= mhi.saturating_add(1) => {
+                        *mhi = (*mhi).max(hi);
+                    }
+                    _ => merged.push((lo, hi)),
+                }
+            }
+            self.detached = merged;
+        }
+        self.attached.sort_unstable();
+        self.attached.dedup();
+    }
+}
+
+/// All promises known at one process for its partition, with the
+/// commit-gating required by Algorithm 2 line 47.
+#[derive(Clone, Debug, Default)]
+pub struct PromiseStore {
+    trackers: HashMap<ProcessId, SourceTracker>,
+    /// Attached promises whose command is not yet committed locally:
+    /// dot → (source, timestamp) pairs.
+    gated: HashMap<Dot, Vec<(ProcessId, u64)>>,
+}
+
+impl PromiseStore {
+    /// Incorporate a batch from `source`. `is_committed` reports whether a
+    /// dot is locally committed or executed; non-committed attached
+    /// promises are gated until [`Self::on_commit`].
+    /// Returns the dots of gated attached promises (candidates for
+    /// MCommitRequest, §B liveness).
+    pub fn add(
+        &mut self,
+        source: ProcessId,
+        batch: &PromiseSet,
+        mut is_committed: impl FnMut(Dot) -> bool,
+    ) -> Vec<Dot> {
+        let tracker = self.trackers.entry(source).or_default();
+        for &(lo, hi) in &batch.detached {
+            tracker.add_range(lo, hi);
+        }
+        let mut unknown = Vec::new();
+        for &(dot, u) in &batch.attached {
+            if is_committed(dot) {
+                self.trackers.entry(source).or_default().add(u);
+            } else {
+                self.gated.entry(dot).or_default().push((source, u));
+                unknown.push(dot);
+            }
+        }
+        unknown
+    }
+
+    /// Release promises gated on `dot` (call when `dot` commits locally).
+    pub fn on_commit(&mut self, dot: Dot) {
+        if let Some(pairs) = self.gated.remove(&dot) {
+            for (source, u) in pairs {
+                self.trackers.entry(source).or_default().add(u);
+            }
+        }
+    }
+
+    /// Highest contiguous promise of `source`.
+    pub fn highest_contiguous(&self, source: ProcessId) -> u64 {
+        self.trackers.get(&source).map_or(0, |t| t.highest_contiguous())
+    }
+
+    /// The stable watermark over `processes`: the largest `s` such that
+    /// all promises up to `s` are known from at least `majority` of them —
+    /// i.e. the `⌊r/2⌋`-indexed order statistic of Algorithm 2 line 50,
+    /// generalized to an arbitrary majority size.
+    pub fn stable_watermark(&self, processes: &[ProcessId], majority: usize) -> u64 {
+        debug_assert!(majority >= 1 && majority <= processes.len());
+        let mut h: Vec<u64> = processes.iter().map(|p| self.highest_contiguous(*p)).collect();
+        h.sort_unstable();
+        // `majority` processes have watermark >= h[len - majority].
+        h[h.len() - majority]
+    }
+
+    /// Dots with gated (attached) promises — commands other processes have
+    /// proposed for but we have not committed (used by §B liveness).
+    pub fn gated_dots(&self) -> impl Iterator<Item = Dot> + '_ {
+        self.gated.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    const P: [ProcessId; 3] = [ProcessId(0), ProcessId(1), ProcessId(2)];
+
+    #[test]
+    fn source_tracker_contiguity() {
+        let mut t = SourceTracker::default();
+        t.add(1);
+        t.add(2);
+        assert_eq!(t.highest_contiguous(), 2);
+        t.add(5); // gap at 3,4
+        assert_eq!(t.highest_contiguous(), 2);
+        assert_eq!(t.pending(), 1);
+        t.add_range(3, 4);
+        assert_eq!(t.highest_contiguous(), 5);
+        assert_eq!(t.pending(), 0);
+    }
+
+    #[test]
+    fn source_tracker_overlapping_ranges_and_duplicates() {
+        let mut t = SourceTracker::default();
+        t.add_range(1, 10);
+        t.add_range(5, 8); // fully contained
+        t.add(3); // duplicate
+        assert_eq!(t.highest_contiguous(), 10);
+        t.add_range(15, 20);
+        t.add_range(8, 14); // bridges the gap, overlapping both sides
+        assert_eq!(t.highest_contiguous(), 20);
+        t.add_range(7, 3); // inverted range is a no-op
+        assert_eq!(t.highest_contiguous(), 20);
+    }
+
+    #[test]
+    fn source_tracker_random_insertion_order_converges() {
+        let mut r = Rng::new(42);
+        for _ in 0..50 {
+            let mut vals: Vec<u64> = (1..=200).collect();
+            r.shuffle(&mut vals);
+            let mut t = SourceTracker::default();
+            for v in vals {
+                t.add(v);
+            }
+            assert_eq!(t.highest_contiguous(), 200);
+            assert_eq!(t.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn attached_promises_gated_until_commit() {
+        // Figure 2 / Theorem 1 mechanics: an attached promise must not
+        // contribute to stability before its command commits locally.
+        let mut s = PromiseStore::default();
+        let dot = Dot::new(ProcessId(1), 1);
+        let batch = PromiseSet { detached: vec![(1, 1)], attached: vec![(dot, 2)] };
+        let unknown = s.add(ProcessId(1), &batch, |_| false);
+        assert_eq!(unknown, vec![dot]);
+        assert_eq!(s.highest_contiguous(ProcessId(1)), 1); // only the detached one
+        s.on_commit(dot);
+        assert_eq!(s.highest_contiguous(ProcessId(1)), 2);
+    }
+
+    #[test]
+    fn stable_watermark_is_majority_order_statistic() {
+        // Figure 2 of the paper: r=3, watermarks {A:2, B:3, C:2} → stable 2.
+        let mut s = PromiseStore::default();
+        s.add(P[0], &PromiseSet { detached: vec![(1, 2)], attached: vec![] }, |_| true);
+        s.add(P[1], &PromiseSet { detached: vec![(1, 3)], attached: vec![] }, |_| true);
+        s.add(P[2], &PromiseSet { detached: vec![(1, 2)], attached: vec![] }, |_| true);
+        assert_eq!(s.stable_watermark(&P, 2), 3 - 1); // majority of 2 → 2... see below
+        // majority=2 → second-highest watermark = 2
+        assert_eq!(s.stable_watermark(&P, 2), 2);
+        // unanimity (majority=3) → min = 2
+        assert_eq!(s.stable_watermark(&P, 3), 2);
+        // single process (majority=1) → max = 3
+        assert_eq!(s.stable_watermark(&P, 1), 3);
+    }
+
+    #[test]
+    fn stable_watermark_missing_source_counts_as_zero() {
+        let mut s = PromiseStore::default();
+        s.add(P[0], &PromiseSet { detached: vec![(1, 5)], attached: vec![] }, |_| true);
+        assert_eq!(s.stable_watermark(&P, 2), 0);
+    }
+
+    #[test]
+    fn figure2_example_from_paper() {
+        // Promises: X = {A:1..2}, Y = {B:1..3, A:2? ...}. We reproduce the
+        // table on the right of Figure 2 with the three listed sets:
+        //   X = all promises up to 2 by A
+        //   Y = promise 2 by A missing 1; all up to 3 by B  (we model Y as
+        //       B:1..3 plus A:2 out-of-order)
+        //   Z = all promises up to 2 by C
+        let xs = PromiseSet { detached: vec![(1, 2)], attached: vec![] }; // A
+        let ys_b = PromiseSet { detached: vec![(1, 3)], attached: vec![] }; // B
+        let ys_a = PromiseSet { detached: vec![(2, 2)], attached: vec![] }; // A (sparse)
+        let zs = PromiseSet { detached: vec![(1, 2)], attached: vec![] }; // C
+
+        // Y ∪ Z → stable 2 (majority {B, C}).
+        let mut s = PromiseStore::default();
+        s.add(P[1], &ys_b, |_| true);
+        s.add(P[0], &ys_a, |_| true);
+        s.add(P[2], &zs, |_| true);
+        assert_eq!(s.stable_watermark(&P, 2), 2);
+
+        // Y alone → stable 0 (no majority has contiguous promises).
+        let mut s = PromiseStore::default();
+        s.add(P[1], &ys_b, |_| true);
+        s.add(P[0], &ys_a, |_| true);
+        assert_eq!(s.stable_watermark(&P, 2), 0);
+
+        // X ∪ Y → A becomes contiguous to 2, B to 3 → stable 2.
+        let mut s = PromiseStore::default();
+        s.add(P[0], &xs, |_| true);
+        s.add(P[0], &ys_a, |_| true);
+        s.add(P[1], &ys_b, |_| true);
+        assert_eq!(s.stable_watermark(&P, 2), 2);
+
+        // X ∪ Y ∪ Z → stable 2 (not 3: only B reaches 3).
+        let mut s = PromiseStore::default();
+        s.add(P[0], &xs, |_| true);
+        s.add(P[0], &ys_a, |_| true);
+        s.add(P[1], &ys_b, |_| true);
+        s.add(P[2], &zs, |_| true);
+        assert_eq!(s.stable_watermark(&P, 2), 2);
+    }
+
+    #[test]
+    fn gated_dots_visible_for_liveness() {
+        let mut s = PromiseStore::default();
+        let dot = Dot::new(ProcessId(2), 7);
+        s.add(P[1], &PromiseSet { detached: vec![], attached: vec![(dot, 4)] }, |_| false);
+        assert_eq!(s.gated_dots().collect::<Vec<_>>(), vec![dot]);
+        s.on_commit(dot);
+        assert_eq!(s.gated_dots().count(), 0);
+    }
+}

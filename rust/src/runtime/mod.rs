@@ -1,0 +1,38 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+pub mod stability;
+use anyhow::Result;
+
+/// Compiled artifact loaded on the PJRT CPU client.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT client wrapper owning compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact (produced by python/compile/aot.py).
+    pub fn load_hlo_text(&self, path: &str) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(Artifact { exe: self.client.compile(&comp)? })
+    }
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns the elements of the output tuple.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result)
+    }
+}

@@ -1,0 +1,128 @@
+//! The AOT-compiled stability kernel: Rust-side wrapper over the
+//! `artifacts/stability.hlo.txt` artifact produced by `python/compile/aot.py`
+//! (L2 executor-tick graph calling the L1 Pallas kernel).
+//!
+//! The artifact has static shapes: `P` partitions × `r` replicas × `W`
+//! promise-window slots, a `Q`-deep queue, and a baked-in majority. The
+//! default artifact is (16, 5, 64, 16, majority 3).
+
+use super::{Artifact, Runtime};
+use anyhow::{bail, Result};
+
+/// Shape of a compiled stability artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelShape {
+    pub partitions: usize,
+    pub replicas: usize,
+    pub window: usize,
+    pub queue: usize,
+    pub majority: usize,
+}
+
+impl Default for KernelShape {
+    fn default() -> Self {
+        KernelShape { partitions: 16, replicas: 5, window: 64, queue: 16, majority: 3 }
+    }
+}
+
+/// Batched stability detection through PJRT.
+pub struct StabilityKernel {
+    artifact: Artifact,
+    pub shape: KernelShape,
+}
+
+impl StabilityKernel {
+    /// Load `artifacts/stability.hlo.txt` (or a custom path) and compile it
+    /// on the runtime's PJRT client.
+    pub fn load(runtime: &Runtime, path: &str, shape: KernelShape) -> Result<Self> {
+        let artifact = runtime.load_hlo_text(path)?;
+        Ok(StabilityKernel { artifact, shape })
+    }
+
+    /// Run one executor tick: `bits` is the row-major `[P, r, W]` promise
+    /// bitmap, `queue_ts` the `[P, Q]` committed-queue timestamps.
+    /// Returns (per-partition stable watermark, executability mask).
+    pub fn tick(&self, bits: &[u8], queue_ts: &[i32]) -> Result<(Vec<i32>, Vec<i32>)> {
+        let s = &self.shape;
+        if bits.len() != s.partitions * s.replicas * s.window {
+            bail!("bits length {} != P*r*W", bits.len());
+        }
+        if queue_ts.len() != s.partitions * s.queue {
+            bail!("queue length {} != P*Q", queue_ts.len());
+        }
+        let bits_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[s.partitions, s.replicas, s.window],
+            bits,
+        )?;
+        let queue_bytes: Vec<u8> = queue_ts.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let queue_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &[s.partitions, s.queue],
+            &queue_bytes,
+        )?;
+        let result = self.artifact.execute(&[bits_lit, queue_lit])?;
+        let (wm_lit, mask_lit) = result.to_tuple2()?;
+        Ok((wm_lit.to_vec::<i32>()?, mask_lit.to_vec::<i32>()?))
+    }
+}
+
+/// Pure-Rust reference of the same computation, used on the default hot
+/// path and cross-checked against the PJRT artifact in tests.
+pub fn stable_watermarks_rust(
+    bits: &[u8],
+    shape: &KernelShape,
+) -> Vec<i32> {
+    let (p, r, w, m) = (shape.partitions, shape.replicas, shape.window, shape.majority);
+    let mut out = Vec::with_capacity(p);
+    for i in 0..p {
+        let mut h: Vec<i32> = (0..r)
+            .map(|j| {
+                let base = (i * r + j) * w;
+                let mut c = 0;
+                for u in 0..w {
+                    if bits[base + u] != 0 {
+                        c += 1;
+                    } else {
+                        break;
+                    }
+                }
+                c
+            })
+            .collect();
+        h.sort_unstable();
+        out.push(h[r - m]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rust_reference_figure2() {
+        // r=3, watermarks {2, 3, 2} → stable 2 at majority 2.
+        let shape = KernelShape { partitions: 1, replicas: 3, window: 4, queue: 1, majority: 2 };
+        #[rustfmt::skip]
+        let bits = vec![
+            1, 1, 0, 0, // A: 1..2
+            1, 1, 1, 0, // B: 1..3
+            1, 1, 0, 0, // C: 1..2
+        ];
+        assert_eq!(stable_watermarks_rust(&bits, &shape), vec![2]);
+        let unanimity = KernelShape { majority: 3, ..shape };
+        assert_eq!(stable_watermarks_rust(&bits, &unanimity), vec![2]);
+        let any = KernelShape { majority: 1, ..shape };
+        assert_eq!(stable_watermarks_rust(&bits, &any), vec![3]);
+    }
+
+    #[test]
+    fn rust_reference_gap_blocks() {
+        let shape = KernelShape { partitions: 1, replicas: 3, window: 8, queue: 1, majority: 2 };
+        let mut bits = vec![1u8; 24];
+        bits[0] = 0; // hole at process 0 slot 0
+        bits[8] = 0; // hole at process 1 slot 0
+        assert_eq!(stable_watermarks_rust(&bits, &shape), vec![0]);
+    }
+}

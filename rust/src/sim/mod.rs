@@ -1,0 +1,417 @@
+//! Deterministic discrete-event simulator for wide-area (P)SMR.
+//!
+//! This is the reproduction's testbed (see DESIGN.md §3): protocols run
+//! unchanged against a latency matrix (Table 2 by default), an optional
+//! CPU/NIC resource model (for the throughput/saturation experiments,
+//! Figs. 7–9), closed-loop clients, optional site-level batching, and a
+//! crash/suspect schedule for the recovery experiments. Runs are fully
+//! deterministic given the seed.
+
+pub mod resource;
+pub mod topology;
+
+pub use resource::{ResourceModel, ResourceState};
+pub use topology::Topology;
+
+use crate::core::{key_to_shard, ClientId, Command, Completion, Config, Dot, DotGen, ProcessId};
+use crate::metrics::{Counters, RunMetrics};
+use crate::protocol::{Action, Protocol};
+use crate::util::Rng;
+use crate::workload::batching::Batcher;
+use crate::workload::Workload;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Simulation options.
+#[derive(Clone, Debug)]
+pub struct SimOpts {
+    pub topology: Topology,
+    /// `None` disregards CPU/network (the paper's "simulator mode");
+    /// `Some` models them (our "cluster mode" substitute).
+    pub resources: Option<ResourceModel>,
+    pub clients_per_site: usize,
+    /// Measurement starts after `warmup_us`.
+    pub warmup_us: u64,
+    /// Measurement window length.
+    pub duration_us: u64,
+    /// Extra time after the window during which no new commands are
+    /// submitted but in-flight ones keep running (for liveness checks).
+    pub drain_us: u64,
+    pub seed: u64,
+    /// Site-level batching: (max batch size, max delay µs).
+    pub batching: Option<(usize, u64)>,
+    /// Record per-process execution logs and completions (test oracles).
+    pub record_execution: bool,
+    /// Crash schedule: (time, process).
+    pub crashes: Vec<(u64, ProcessId)>,
+    /// Failure-detection delay after a crash.
+    pub suspect_delay_us: u64,
+}
+
+impl SimOpts {
+    pub fn new(topology: Topology) -> Self {
+        SimOpts {
+            topology,
+            resources: None,
+            clients_per_site: 16,
+            warmup_us: 2_000_000,
+            duration_us: 10_000_000,
+            drain_us: 0,
+            seed: 1,
+            batching: None,
+            record_execution: false,
+            crashes: Vec::new(),
+            suspect_delay_us: 500_000,
+        }
+    }
+}
+
+/// Result of a run: metrics plus optional test-oracle material.
+#[derive(Clone, Debug, Default)]
+pub struct SimResult {
+    pub metrics: RunMetrics,
+    /// Per-process execution order (when `record_execution`).
+    pub execution_logs: Vec<Vec<(Dot, u64)>>,
+    /// Client-observed completions (when `record_execution`).
+    pub completions: Vec<Completion>,
+    /// All submitted dots with their commands (when `record_execution`).
+    pub submitted: Vec<(Dot, Command)>,
+}
+
+#[derive(Clone, Debug)]
+enum Event<M> {
+    Deliver { from: ProcessId, to: ProcessId, msg: M, bytes: u64 },
+    Tick { p: ProcessId },
+    ClientSubmit { client: usize },
+    BatchFlush { site: usize },
+    Crash { p: ProcessId },
+    Suspect { at: ProcessId, suspected: ProcessId },
+}
+
+struct InFlight {
+    /// (client index, submit time) — batches carry several members.
+    members: Vec<(usize, u64)>,
+    site: usize,
+    ops: u32,
+}
+
+/// The simulator.
+pub struct Simulation<P: Protocol, W: Workload> {
+    config: Config,
+    opts: SimOpts,
+    procs: Vec<P>,
+    dead: Vec<bool>,
+    dots: Vec<DotGen>,
+    resources: Vec<ResourceState>,
+    heap: BinaryHeap<Reverse<(u64, u64)>>,
+    payloads: HashMap<(u64, u64), Event<P::Message>>,
+    seq: u64,
+    now: u64,
+    workload: W,
+    rng: Rng,
+    in_flight: HashMap<Dot, InFlight>,
+    batchers: Vec<Batcher>,
+    result: SimResult,
+    warmup_snapshot: Option<Vec<(f64, f64, f64)>>,
+    end_time: u64,
+    final_time: u64,
+}
+
+impl<P: Protocol, W: Workload> Simulation<P, W> {
+    pub fn new(config: Config, opts: SimOpts, workload: W) -> Self {
+        assert_eq!(
+            config.sites,
+            opts.topology.sites(),
+            "config.sites must match the topology"
+        );
+        let n = config.n_processes();
+        let procs: Vec<P> = (0..n).map(|i| P::new(ProcessId(i as u32), config.clone())).collect();
+        let dots = (0..n).map(|i| DotGen::new(ProcessId(i as u32))).collect();
+        let resources = (0..n).map(|_| ResourceState::default()).collect();
+        let batchers = match opts.batching {
+            Some((max, delay)) => {
+                (0..config.sites).map(|_| Batcher::new(max, delay)).collect()
+            }
+            None => Vec::new(),
+        };
+        let end_time = opts.warmup_us + opts.duration_us;
+        let final_time = end_time + opts.drain_us;
+        let rng = Rng::new(opts.seed);
+        let record = opts.record_execution;
+        let mut sim = Simulation {
+            config,
+            opts,
+            procs,
+            dead: vec![false; n],
+            dots,
+            resources,
+            heap: BinaryHeap::new(),
+            payloads: HashMap::new(),
+            seq: 0,
+            now: 0,
+            workload,
+            rng,
+            in_flight: HashMap::new(),
+            batchers,
+            result: SimResult::default(),
+            warmup_snapshot: None,
+            end_time,
+            final_time,
+        };
+        if record {
+            sim.result.execution_logs = vec![Vec::new(); n];
+        }
+        sim
+    }
+
+    fn push(&mut self, time: u64, ev: Event<P::Message>) {
+        self.seq += 1;
+        let key = (time, self.seq);
+        self.heap.push(Reverse(key));
+        self.payloads.insert(key, ev);
+    }
+
+    /// Run to completion and return the collected result.
+    pub fn run(mut self) -> SimResult {
+        // Initial ticks, staggered across processes to avoid lockstep.
+        let interval = self.config.tick_interval_us.max(1);
+        for i in 0..self.procs.len() {
+            let offset = (i as u64 * 97) % interval;
+            self.push(offset + 1, Event::Tick { p: ProcessId(i as u32) });
+        }
+        // Client start events, staggered inside the first tick interval.
+        let n_clients = self.opts.clients_per_site * self.config.sites;
+        for c in 0..n_clients {
+            let offset = (c as u64 * 131) % 1_000;
+            self.push(offset + 1, Event::ClientSubmit { client: c });
+        }
+        for (t, p) in self.opts.crashes.clone() {
+            self.push(t, Event::Crash { p });
+        }
+
+        while let Some(Reverse(key)) = self.heap.pop() {
+            let (time, _) = key;
+            if time > self.final_time {
+                break;
+            }
+            self.now = time;
+            if self.warmup_snapshot.is_none() && time >= self.opts.warmup_us {
+                self.warmup_snapshot = Some(
+                    self.resources
+                        .iter()
+                        .map(|r| (r.cpu_busy_us, r.in_busy_us, r.out_busy_us))
+                        .collect(),
+                );
+            }
+            let ev = self.payloads.remove(&key).expect("event payload");
+            self.step(time, ev);
+        }
+        self.finalize()
+    }
+
+    fn step(&mut self, time: u64, ev: Event<P::Message>) {
+        match ev {
+            Event::Tick { p } => {
+                let interval = self.config.tick_interval_us.max(1);
+                if time + interval <= self.final_time {
+                    self.push(time + interval, Event::Tick { p });
+                }
+                if self.dead[p.0 as usize] {
+                    return;
+                }
+                let actions = self.procs[p.0 as usize].tick(time);
+                self.process_actions(p, actions, time);
+            }
+            Event::Deliver { from, to, msg, bytes } => {
+                if self.dead[to.0 as usize] {
+                    return;
+                }
+                let handle_at = if let Some(model) = self.opts.resources {
+                    let res = &mut self.resources[to.0 as usize];
+                    let ready = res.use_in(time as f64, model.wire_us(bytes));
+                    res.use_cpu(ready, model.cpu_cost_us(bytes)) as u64
+                } else {
+                    time
+                };
+                let actions = self.procs[to.0 as usize].handle(from, msg, handle_at);
+                self.process_actions(to, actions, handle_at);
+            }
+            Event::ClientSubmit { client } => {
+                if time > self.end_time {
+                    return; // submissions stop at the end of the window
+                }
+                self.client_submit(client, time);
+            }
+            Event::BatchFlush { site } => {
+                if let Some(batch) = self.batchers[site].flush_if_due(time) {
+                    self.submit_batch(site, batch.spec, batch.members, time);
+                }
+            }
+            Event::Crash { p } => {
+                self.dead[p.0 as usize] = true;
+                self.procs[p.0 as usize].crash();
+                let delay = self.opts.suspect_delay_us;
+                for q in 0..self.procs.len() {
+                    if !self.dead[q] {
+                        self.push(
+                            time + delay,
+                            Event::Suspect { at: ProcessId(q as u32), suspected: p },
+                        );
+                    }
+                }
+            }
+            Event::Suspect { at, suspected } => {
+                if !self.dead[at.0 as usize] {
+                    self.procs[at.0 as usize].suspect(suspected);
+                }
+            }
+        }
+    }
+
+    fn client_submit(&mut self, client: usize, time: u64) {
+        let site = client % self.config.sites;
+        let cid = ClientId(client as u64);
+        let spec = self.workload.next(cid, &mut self.rng);
+        if self.batchers.is_empty() {
+            self.submit_batch(site, spec, vec![(client, time)], time);
+        } else {
+            let (deadline, flushed) = self.batchers[site].push(client, spec, time);
+            if let Some(d) = deadline {
+                self.push(d, Event::BatchFlush { site });
+            }
+            if let Some(batch) = flushed {
+                self.submit_batch(site, batch.spec, batch.members, time);
+            }
+        }
+    }
+
+    fn submit_batch(
+        &mut self,
+        site: usize,
+        spec: crate::workload::CommandSpec,
+        members: Vec<(usize, u64)>,
+        time: u64,
+    ) {
+        // The origin process: the replica at the client's site of the shard
+        // holding the first key (i ∈ I_c as PSMR requires).
+        let shard = key_to_shard(spec.keys[0], self.config.shards);
+        let origin = ProcessId(shard.0 * self.config.r as u32 + site as u32);
+        if self.dead[origin.0 as usize] {
+            // Site lost its replica: clients of this site stop (the paper
+            // would fail them over; unnecessary for our experiments).
+            return;
+        }
+        let dot = self.dots[origin.0 as usize].next();
+        let mut cmd = Command::new(ClientId(members[0].0 as u64), spec.keys, spec.op, spec.payload_len);
+        cmd.batched = members.len() as u32;
+        let ops = cmd.batched;
+        if self.opts.record_execution {
+            self.result.submitted.push((dot, cmd.clone()));
+        }
+        self.in_flight.insert(dot, InFlight { members, site, ops });
+        // Client → local replica hop.
+        let submit_at = time + self.opts.topology.local_us;
+        let actions = self.procs[origin.0 as usize].submit(dot, cmd, submit_at);
+        self.process_actions(origin, actions, submit_at);
+    }
+
+    fn process_actions(&mut self, at: ProcessId, actions: Vec<Action<P::Message>>, time: u64) {
+        for action in actions {
+            match action {
+                Action::Send { to, msg } => {
+                    if to == at {
+                        // Protocols handle self-sends inline; any residual
+                        // self-send is delivered immediately.
+                        let acts = self.procs[at.0 as usize].handle(at, msg, time);
+                        self.process_actions(at, acts, time);
+                        continue;
+                    }
+                    let bytes = P::msg_size(&msg);
+                    let from_site = self.config.site_of(at);
+                    let to_site = self.config.site_of(to);
+                    let depart = if let Some(model) = self.opts.resources {
+                        let res = &mut self.resources[at.0 as usize];
+                        let cpu_done = res.use_cpu(time as f64, model.cpu_cost_us(bytes));
+                        res.use_out(cpu_done, model.wire_us(bytes)) as u64
+                    } else {
+                        time
+                    };
+                    let latency =
+                        self.opts.topology.latency_us(from_site, to_site, self.rng.gen_f64());
+                    self.push(depart + latency, Event::Deliver { from: at, to, msg, bytes });
+                }
+                Action::Execute { dot, cmd } => {
+                    if self.opts.record_execution {
+                        self.result.execution_logs[at.0 as usize].push((dot, time));
+                    }
+                    if at == dot.origin {
+                        self.complete(dot, &cmd, time);
+                    }
+                }
+                Action::Committed { .. } | Action::RecoveryStarted { .. } => {}
+            }
+        }
+    }
+
+    /// Command executed at its origin: clients observe completion one local
+    /// hop later and immediately submit their next command (closed loop).
+    fn complete(&mut self, dot: Dot, _cmd: &Command, time: u64) {
+        let inf = match self.in_flight.remove(&dot) {
+            Some(x) => x,
+            None => return, // duplicate Execute would be a protocol bug
+        };
+        let done_at = time + self.opts.topology.local_us;
+        let in_window = done_at >= self.opts.warmup_us && done_at < self.end_time;
+        for &(client, submitted_at) in &inf.members {
+            let latency = done_at.saturating_sub(submitted_at);
+            if in_window {
+                self.result.metrics.record_completion(inf.site, latency, 1);
+            }
+            if self.opts.record_execution {
+                self.result.completions.push(Completion {
+                    dot,
+                    client: ClientId(client as u64),
+                    submitted_at,
+                    completed_at: done_at,
+                });
+            }
+            self.push(done_at, Event::ClientSubmit { client });
+        }
+        // Batched entries record `ops = members`; already counted above.
+        debug_assert_eq!(inf.ops as usize, inf.members.len());
+    }
+
+    fn finalize(mut self) -> SimResult {
+        self.result.metrics.duration_us = self.opts.duration_us;
+        // Utilization over the measurement window.
+        if self.opts.resources.is_some() {
+            let snap = self
+                .warmup_snapshot
+                .unwrap_or_else(|| self.resources.iter().map(|_| (0.0, 0.0, 0.0)).collect());
+            let window = self.opts.duration_us as f64;
+            self.result.metrics.utilization = self
+                .resources
+                .iter()
+                .zip(snap)
+                .map(|(r, (c0, i0, o0))| {
+                    let mut adj = ResourceState::default();
+                    adj.cpu_busy_us = r.cpu_busy_us - c0;
+                    adj.in_busy_us = r.in_busy_us - i0;
+                    adj.out_busy_us = r.out_busy_us - o0;
+                    adj.utilization(window)
+                })
+                .collect();
+        }
+        let mut counters = Counters::default();
+        for p in &self.procs {
+            counters.merge(&p.counters());
+        }
+        self.result.metrics.counters = counters;
+        self.result
+    }
+}
+
+/// Convenience: run protocol `P` under `opts` with `workload`.
+pub fn run<P: Protocol, W: Workload>(config: Config, opts: SimOpts, workload: W) -> SimResult {
+    Simulation::<P, W>::new(config, opts, workload).run()
+}

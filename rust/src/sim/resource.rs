@@ -1,0 +1,123 @@
+//! Per-process resource model: CPU and NIC bandwidth.
+//!
+//! The paper's own simulator "computes the observed client latency when CPU
+//! and network bottlenecks are disregarded" (§6.1). To also reproduce the
+//! *throughput* experiments (Figs. 7–9), which saturate CPU or NIC on the
+//! local cluster, we add an explicit resource model: each message costs CPU
+//! time at the sender and receiver and wire time proportional to its size.
+//! Utilization percentages feed the Fig. 7 heatmap.
+
+/// Resource parameters of one process (machine).
+#[derive(Clone, Copy, Debug)]
+pub struct ResourceModel {
+    /// CPU cost to process (send or receive) one message, µs.
+    pub cpu_per_msg_us: f64,
+    /// Additional CPU cost per KiB of message payload, µs.
+    pub cpu_per_kib_us: f64,
+    /// NIC bandwidth, bytes per µs (10 Gbit/s ≈ 1250 B/µs).
+    pub nic_bytes_per_us: f64,
+}
+
+impl ResourceModel {
+    /// Roughly a c5.2xlarge-like server as used in the paper's cluster:
+    /// ~2 µs of CPU per protocol message + 0.4 µs/KiB, 10 Gbit NIC.
+    pub fn cluster() -> Self {
+        ResourceModel { cpu_per_msg_us: 2.0, cpu_per_kib_us: 0.4, nic_bytes_per_us: 1250.0 }
+    }
+
+    pub fn cpu_cost_us(&self, bytes: u64) -> f64 {
+        self.cpu_per_msg_us + self.cpu_per_kib_us * (bytes as f64 / 1024.0)
+    }
+
+    pub fn wire_us(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.nic_bytes_per_us
+    }
+}
+
+/// Mutable resource state of one process during simulation.
+#[derive(Clone, Debug, Default)]
+pub struct ResourceState {
+    /// Time until which the CPU is busy.
+    pub cpu_free_at: f64,
+    /// Time until which the outbound NIC is busy.
+    pub out_free_at: f64,
+    /// Time until which the inbound NIC is busy.
+    pub in_free_at: f64,
+    /// Accumulated busy time (for utilization), µs.
+    pub cpu_busy_us: f64,
+    pub out_busy_us: f64,
+    pub in_busy_us: f64,
+}
+
+impl ResourceState {
+    /// Occupy the CPU for `cost` µs starting no earlier than `now`.
+    /// Returns the completion time.
+    pub fn use_cpu(&mut self, now: f64, cost: f64) -> f64 {
+        let start = self.cpu_free_at.max(now);
+        self.cpu_free_at = start + cost;
+        self.cpu_busy_us += cost;
+        self.cpu_free_at
+    }
+
+    /// Serialize `bytes` onto the outbound wire. Returns departure time.
+    pub fn use_out(&mut self, now: f64, wire_us: f64) -> f64 {
+        let start = self.out_free_at.max(now);
+        self.out_free_at = start + wire_us;
+        self.out_busy_us += wire_us;
+        self.out_free_at
+    }
+
+    /// Deserialize `bytes` from the inbound wire. Returns ready time.
+    pub fn use_in(&mut self, now: f64, wire_us: f64) -> f64 {
+        let start = self.in_free_at.max(now);
+        self.in_free_at = start + wire_us;
+        self.in_busy_us += wire_us;
+        self.in_free_at
+    }
+
+    /// Utilization over a window of `window_us`, in percent (capped 100).
+    pub fn utilization(&self, window_us: f64) -> crate::metrics::Utilization {
+        let pct = |busy: f64| (100.0 * busy / window_us).min(100.0);
+        crate::metrics::Utilization {
+            cpu: pct(self.cpu_busy_us),
+            net_in: pct(self.in_busy_us),
+            net_out: pct(self.out_busy_us),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_queueing_delays_when_busy() {
+        let mut s = ResourceState::default();
+        let done1 = s.use_cpu(0.0, 5.0);
+        assert_eq!(done1, 5.0);
+        // Arrives at t=2 but CPU busy until 5 → finishes at 8.
+        let done2 = s.use_cpu(2.0, 3.0);
+        assert_eq!(done2, 8.0);
+        // Idle gap: arrives at 100 → finishes at 101.
+        let done3 = s.use_cpu(100.0, 1.0);
+        assert_eq!(done3, 101.0);
+        assert_eq!(s.cpu_busy_us, 9.0);
+    }
+
+    #[test]
+    fn utilization_percent() {
+        let mut s = ResourceState::default();
+        s.use_cpu(0.0, 50.0);
+        let u = s.utilization(100.0);
+        assert!((u.cpu - 50.0).abs() < 1e-9);
+        assert_eq!(u.net_in, 0.0);
+    }
+
+    #[test]
+    fn wire_time_scales_with_bytes() {
+        let m = ResourceModel::cluster();
+        // 10 Gbit/s: 12500 bytes take ~10 µs.
+        assert!((m.wire_us(12_500) - 10.0).abs() < 0.01);
+        assert!(m.cpu_cost_us(4096) > m.cpu_cost_us(100));
+    }
+}

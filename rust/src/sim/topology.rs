@@ -1,0 +1,144 @@
+//! Wide-area topologies: inter-site latency matrices.
+//!
+//! The default matrix is the paper's Table 2 (§A): average ping (RTT)
+//! latencies between the five EC2 sites used in the evaluation — Ireland
+//! (eu-west-1), N. California (us-west-1), Singapore (ap-southeast-1),
+//! Canada (ca-central-1) and São Paulo (sa-east-1).
+
+/// Names of the five EC2 sites of the paper's evaluation.
+pub const EC2_SITES: [&str; 5] = ["Ireland", "N.California", "Singapore", "Canada", "S.Paulo"];
+
+/// Table 2: ping (round-trip) latencies in milliseconds.
+pub const EC2_PING_MS: [[u64; 5]; 5] = [
+    // IE    NC    SG    CA    SP
+    [0, 141, 186, 72, 183],   // Ireland
+    [141, 0, 181, 78, 190],   // N. California
+    [186, 181, 0, 221, 338],  // Singapore
+    [72, 78, 221, 0, 123],    // Canada
+    [183, 190, 338, 123, 0],  // São Paulo
+];
+
+/// One-way inter-site latencies in microseconds.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// `one_way_us[a][b]`: one-way latency site a → site b.
+    one_way_us: Vec<Vec<u64>>,
+    /// Latency between co-located processes (same site), one-way µs.
+    pub local_us: u64,
+    /// Symmetric jitter bound as a fraction of the latency (e.g. 0.01).
+    pub jitter: f64,
+}
+
+impl Topology {
+    /// The paper's five-site EC2 topology (Table 2).
+    pub fn ec2() -> Self {
+        let one_way = EC2_PING_MS
+            .iter()
+            .map(|row| row.iter().map(|rtt_ms| rtt_ms * 1_000 / 2).collect())
+            .collect();
+        Topology { one_way_us: one_way, local_us: 125, jitter: 0.01 }
+    }
+
+    /// First `n` sites of the EC2 topology (n <= 5).
+    pub fn ec2_subset(n: usize) -> Self {
+        assert!(n >= 1 && n <= 5);
+        let one_way = (0..n)
+            .map(|a| (0..n).map(|b| EC2_PING_MS[a][b] * 1_000 / 2).collect())
+            .collect();
+        Topology { one_way_us: one_way, local_us: 125, jitter: 0.01 }
+    }
+
+    /// The 3-site topology used in the partial-replication evaluation
+    /// (§6.4): Ireland, N. California, Singapore.
+    pub fn ec2_three() -> Self {
+        let idx = [0usize, 1, 2];
+        let one_way = idx
+            .iter()
+            .map(|&a| idx.iter().map(|&b| EC2_PING_MS[a][b] * 1_000 / 2).collect())
+            .collect();
+        Topology { one_way_us: one_way, local_us: 125, jitter: 0.01 }
+    }
+
+    /// Uniform synthetic topology: every pair of distinct sites at
+    /// `one_way_ms` one-way.
+    pub fn uniform(sites: usize, one_way_ms: u64) -> Self {
+        let one_way = (0..sites)
+            .map(|a| {
+                (0..sites).map(|b| if a == b { 0 } else { one_way_ms * 1_000 }).collect()
+            })
+            .collect();
+        Topology { one_way_us: one_way, local_us: 125, jitter: 0.01 }
+    }
+
+    pub fn sites(&self) -> usize {
+        self.one_way_us.len()
+    }
+
+    /// Base one-way latency between two sites (no jitter), µs.
+    pub fn base_latency_us(&self, from_site: usize, to_site: usize) -> u64 {
+        if from_site == to_site {
+            self.local_us
+        } else {
+            self.one_way_us[from_site][to_site]
+        }
+    }
+
+    /// One-way latency with deterministic pseudo-jitter derived from `u`
+    /// (a uniform random value in [0,1)).
+    pub fn latency_us(&self, from_site: usize, to_site: usize, u: f64) -> u64 {
+        let base = self.base_latency_us(from_site, to_site) as f64;
+        // jitter in [-jitter, +jitter]
+        let factor = 1.0 + self.jitter * (2.0 * u - 1.0);
+        (base * factor) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_symmetry_and_diagonal() {
+        for a in 0..5 {
+            assert_eq!(EC2_PING_MS[a][a], 0);
+            for b in 0..5 {
+                assert_eq!(EC2_PING_MS[a][b], EC2_PING_MS[b][a]);
+            }
+        }
+    }
+
+    #[test]
+    fn one_way_is_half_rtt() {
+        let t = Topology::ec2();
+        // Ireland ↔ Canada: 72ms RTT → 36ms one-way.
+        assert_eq!(t.base_latency_us(0, 3), 36_000);
+        // Singapore ↔ São Paulo: 338ms RTT → 169ms one-way.
+        assert_eq!(t.base_latency_us(2, 4), 169_000);
+    }
+
+    #[test]
+    fn local_latency_is_small() {
+        let t = Topology::ec2();
+        assert!(t.base_latency_us(1, 1) < 1_000);
+    }
+
+    #[test]
+    fn jitter_is_bounded() {
+        let t = Topology::ec2();
+        let base = t.base_latency_us(0, 2);
+        for u in [0.0, 0.25, 0.5, 0.75, 0.999] {
+            let l = t.latency_us(0, 2, u);
+            let lo = (base as f64 * 0.99) as u64;
+            let hi = (base as f64 * 1.01) as u64 + 1;
+            assert!(l >= lo && l <= hi, "latency {l} outside [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn uniform_topology() {
+        let t = Topology::uniform(7, 50);
+        assert_eq!(t.sites(), 7);
+        assert_eq!(t.base_latency_us(0, 6), 50_000);
+        assert_eq!(t.base_latency_us(3, 3), t.local_us);
+    }
+}

@@ -1,0 +1,147 @@
+//! In-memory key-value store: the replicated state machine the paper's
+//! framework ships (§6.1). Executed commands are applied here through the
+//! `execute_p` upcall; determinism is what PSMR replicates.
+
+use crate::core::{Command, Key, Op};
+use std::collections::HashMap;
+
+/// Value stored per key: a version counter plus the payload length that
+/// last wrote it (payload bytes themselves are irrelevant to ordering, so
+/// we store a digest-sized summary — keeps memory bounded in long runs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Value {
+    pub version: u64,
+    pub last_payload: u32,
+}
+
+/// Response returned to the client for one command.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Response {
+    /// Per accessed key: version observed (reads) or produced (writes).
+    pub versions: Vec<(Key, u64)>,
+}
+
+/// Deterministic in-memory KV store.
+#[derive(Clone, Debug, Default)]
+pub struct KvStore {
+    data: HashMap<Key, Value>,
+    applied: u64,
+}
+
+impl KvStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Apply `cmd` to the local state; returns the client response.
+    pub fn execute(&mut self, cmd: &Command) -> Response {
+        self.applied += 1;
+        let mut versions = Vec::with_capacity(cmd.keys.len());
+        for &k in &cmd.keys {
+            let v = self.data.entry(k).or_default();
+            match cmd.op {
+                Op::Get => versions.push((k, v.version)),
+                Op::Put => {
+                    v.version += 1;
+                    v.last_payload = cmd.payload_len;
+                    versions.push((k, v.version));
+                }
+                Op::Rmw => {
+                    // read-modify-write: bump version deterministically
+                    // from the observed value.
+                    v.version = v.version + 1 + (v.last_payload as u64 % 2);
+                    v.last_payload = cmd.payload_len;
+                    versions.push((k, v.version));
+                }
+            }
+        }
+        Response { versions }
+    }
+
+    pub fn get(&self, k: Key) -> Option<Value> {
+        self.data.get(&k).copied()
+    }
+
+    pub fn applied(&self) -> u64 {
+        self.applied
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Digest of the whole store — replicas that executed the same command
+    /// sequence must agree (used by tests and the e2e driver).
+    pub fn digest(&self) -> u64 {
+        let mut keys: Vec<_> = self.data.iter().collect();
+        keys.sort_by_key(|(k, _)| **k);
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        for (k, v) in keys {
+            mix(*k);
+            mix(v.version);
+            mix(v.last_payload as u64);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ClientId;
+
+    #[test]
+    fn deterministic_across_replicas() {
+        let cmds: Vec<Command> = (0..100)
+            .map(|i| {
+                Command::new(
+                    ClientId(i),
+                    vec![i % 7, (i * 3) % 7],
+                    if i % 3 == 0 { Op::Get } else { Op::Put },
+                    (i % 50) as u32,
+                )
+            })
+            .collect();
+        let mut a = KvStore::new();
+        let mut b = KvStore::new();
+        for c in &cmds {
+            let ra = a.execute(c);
+            let rb = b.execute(c);
+            assert_eq!(ra, rb);
+        }
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn order_changes_digest() {
+        let w1 = Command::single(ClientId(1), 5, Op::Put, 10);
+        let w2 = Command::single(ClientId(2), 5, Op::Rmw, 20);
+        let mut a = KvStore::new();
+        a.execute(&w1);
+        a.execute(&w2);
+        let mut b = KvStore::new();
+        b.execute(&w2);
+        b.execute(&w1);
+        assert_ne!(a.digest(), b.digest(), "RMW vs PUT order must be observable");
+    }
+
+    #[test]
+    fn reads_do_not_mutate() {
+        let mut s = KvStore::new();
+        s.execute(&Command::single(ClientId(1), 9, Op::Put, 1));
+        let d = s.digest();
+        s.execute(&Command::single(ClientId(2), 9, Op::Get, 0));
+        assert_eq!(s.digest(), d);
+        assert_eq!(s.get(9).unwrap().version, 1);
+    }
+}

@@ -1,0 +1,6 @@
+//! Self-contained utilities (the offline registry lacks `rand`/`proptest`).
+
+pub mod prop;
+pub mod rng;
+
+pub use rng::{Rng, Zipf};

@@ -1,0 +1,83 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline registry does not ship `proptest`, so this module provides
+//! the subset we need: seeded case generation, a configurable number of
+//! iterations, and failure reports that include the seed so a failing case
+//! can be replayed deterministically with `PROP_SEED=<seed>`.
+
+use super::rng::Rng;
+
+/// Number of cases per property; override with env `PROP_CASES`.
+pub fn cases() -> u64 {
+    std::env::var("PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+/// Base seed; override with env `PROP_SEED` to replay a failure.
+pub fn base_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xDEFA117)
+}
+
+/// Run `prop` on `cases()` generated inputs. `gen` receives a seeded RNG.
+/// On failure the panic message carries the per-case seed.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = base_seed();
+    let n = if std::env::var("PROP_SEED").is_ok() { 1 } else { cases() };
+    for i in 0..n {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed (case {i}, PROP_SEED={seed}):\n  {msg}\n  input: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property also drives the RNG (for random
+/// schedules where the input is the seed itself).
+pub fn forall_seeds(name: &str, mut prop: impl FnMut(u64) -> Result<(), String>) {
+    let base = base_seed();
+    let n = if std::env::var("PROP_SEED").is_ok() { 1 } else { cases() };
+    for i in 0..n {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(seed) {
+            panic!("property '{name}' failed (case {i}, PROP_SEED={seed}):\n  {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivial", |r| r.gen_range(100), |x| {
+            assert!(*x < 100);
+            Ok(())
+        });
+        forall_seeds("seeded", |_| {
+            count += 1;
+            Ok(())
+        });
+        let _ = count;
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn failing_property_reports_seed() {
+        forall("failing", |r| r.gen_range(10), |x| {
+            if *x < 10 {
+                Err("always fails".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

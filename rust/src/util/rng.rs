@@ -1,0 +1,236 @@
+//! Deterministic PRNG and samplers.
+//!
+//! The offline registry does not ship `rand`, so we implement
+//! xoshiro256** (Blackman & Vigna) seeded via SplitMix64 — the standard
+//! construction — plus the samplers the workloads need (uniform, zipf,
+//! shuffle).
+
+/// xoshiro256** PRNG. Deterministic, fast, good statistical quality.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 seeding, as recommended by the xoshiro authors.
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)`. Lemire's nearly-divisionless method.
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn gen_between(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.gen_range(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct elements from `xs` (partial Fisher–Yates).
+    pub fn sample<T: Clone>(&mut self, xs: &[T], k: usize) -> Vec<T> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        let k = k.min(xs.len());
+        for i in 0..k {
+            let j = self.gen_between(i as u64, xs.len() as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx[..k].iter().map(|&i| xs[i].clone()).collect()
+    }
+}
+
+/// Zipf(θ) sampler over `[0, n)` using the Gray et al. (SIGMOD'94)
+/// computation, the same construction YCSB uses. θ = 0 is uniform;
+/// the paper uses θ ∈ {0.5, 0.7}.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0);
+        assert!((0.0..1.0).contains(&theta), "theta in [0,1): {theta}");
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Self { n, theta, alpha, zetan, eta, zeta2 }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // Exact for n <= 10^6; for larger n use the Euler–Maclaurin
+        // approximation (error < 1e-9 for theta < 1).
+        if n <= 1_000_000 {
+            (1..=n).map(|i| 1.0 / (i as f64).powf(theta)).sum()
+        } else {
+            let head: f64 = (1..=1_000_000u64).map(|i| 1.0 / (i as f64).powf(theta)).sum();
+            let a = 1_000_000f64;
+            let b = n as f64;
+            head + (b.powf(1.0 - theta) - a.powf(1.0 - theta)) / (1.0 - theta)
+                + 0.5 * (1.0 / b.powf(theta) - 1.0 / a.powf(theta))
+        }
+    }
+
+    /// Draw a rank in `[0, n)`; rank 0 is the most popular key.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.gen_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let k = (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        k.min(self.n - 1)
+    }
+
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    #[allow(dead_code)]
+    fn zeta2(&self) -> f64 {
+        self.zeta2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = Rng::new(7);
+        for n in [1u64, 2, 3, 17, 1 << 40] {
+            for _ in 0..1000 {
+                assert!(r.gen_range(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn gen_range_roughly_uniform() {
+        let mut r = Rng::new(1);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[r.gen_range(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((9_000..11_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn gen_bool_probability() {
+        let mut r = Rng::new(2);
+        let hits = (0..100_000).filter(|_| r.gen_bool(0.02)).count();
+        assert!((1_500..2_500).contains(&hits), "2% conflicts ~ {hits}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_distinct() {
+        let mut r = Rng::new(4);
+        let xs: Vec<u32> = (0..20).collect();
+        let s = r.sample(&xs, 5);
+        assert_eq!(s.len(), 5);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 5);
+    }
+
+    #[test]
+    fn zipf_skew_increases_with_theta() {
+        let mut r = Rng::new(5);
+        let hot_fraction = |theta: f64, r: &mut Rng| {
+            let z = Zipf::new(1_000_000, theta);
+            let hits = (0..50_000).filter(|_| z.sample(r) < 100).count();
+            hits as f64 / 50_000.0
+        };
+        let f05 = hot_fraction(0.5, &mut r);
+        let f07 = hot_fraction(0.7, &mut r);
+        assert!(f07 > f05, "zipf 0.7 ({f07}) should be hotter than 0.5 ({f05})");
+        assert!(f05 > 0.001);
+    }
+
+    #[test]
+    fn zipf_stays_in_range() {
+        let mut r = Rng::new(6);
+        let z = Zipf::new(1000, 0.7);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut r) < 1000);
+        }
+    }
+}

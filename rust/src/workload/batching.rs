@@ -1,0 +1,140 @@
+//! Site-level batching (Fig. 8): single-key commands from co-located
+//! clients are aggregated into one multi-key command, flushed after
+//! `max_delay_us` or once `max_batch` commands are buffered, whichever is
+//! earlier (the paper uses 5 ms / 10⁵ commands).
+
+use super::CommandSpec;
+use crate::core::{Key, Op};
+
+/// One buffered entry: (client index, spec, buffered-at time).
+#[derive(Clone, Debug)]
+pub struct Buffered {
+    pub client: usize,
+    pub spec: CommandSpec,
+    pub at_us: u64,
+}
+
+/// A per-site batch accumulator.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    pub max_batch: usize,
+    pub max_delay_us: u64,
+    buf: Vec<Buffered>,
+    /// Deadline of the oldest buffered entry, if any.
+    deadline_us: Option<u64>,
+}
+
+/// A flushed batch: the merged command spec plus its member clients with
+/// their individual buffering times.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub spec: CommandSpec,
+    pub members: Vec<(usize, u64)>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_delay_us: u64) -> Self {
+        Self { max_batch, max_delay_us, buf: Vec::new(), deadline_us: None }
+    }
+
+    /// Buffer a command. Returns `Some(flush_deadline)` if this entry
+    /// started a new batch (caller should schedule a flush event), and the
+    /// batch itself if the size cap was reached.
+    pub fn push(&mut self, client: usize, spec: CommandSpec, now_us: u64) -> (Option<u64>, Option<Batch>) {
+        let new_deadline = if self.buf.is_empty() {
+            let d = now_us + self.max_delay_us;
+            self.deadline_us = Some(d);
+            Some(d)
+        } else {
+            None
+        };
+        self.buf.push(Buffered { client, spec, at_us: now_us });
+        if self.buf.len() >= self.max_batch {
+            (new_deadline, Some(self.flush()))
+        } else {
+            (new_deadline, None)
+        }
+    }
+
+    /// Flush if the pending deadline is due (timer event handler).
+    pub fn flush_if_due(&mut self, now_us: u64) -> Option<Batch> {
+        match self.deadline_us {
+            Some(d) if d <= now_us && !self.buf.is_empty() => Some(self.flush()),
+            _ => None,
+        }
+    }
+
+    pub fn flush(&mut self) -> Batch {
+        debug_assert!(!self.buf.is_empty());
+        self.deadline_us = None;
+        let buf = std::mem::take(&mut self.buf);
+        let mut keys: Vec<Key> = buf.iter().flat_map(|b| b.spec.keys.iter().copied()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        let payload: u64 = buf.iter().map(|b| b.spec.payload_len as u64).sum();
+        let any_write = buf.iter().any(|b| b.spec.op != Op::Get);
+        let spec = CommandSpec {
+            keys,
+            op: if any_write { Op::Put } else { Op::Get },
+            payload_len: payload.min(u32::MAX as u64) as u32,
+        };
+        let members = buf.iter().map(|b| (b.client, b.at_us)).collect();
+        Batch { spec, members }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(key: Key) -> CommandSpec {
+        CommandSpec { keys: vec![key], op: Op::Put, payload_len: 100 }
+    }
+
+    #[test]
+    fn size_cap_triggers_flush() {
+        let mut b = Batcher::new(3, 5_000);
+        let (d1, f1) = b.push(0, spec(1), 0);
+        assert_eq!(d1, Some(5_000));
+        assert!(f1.is_none());
+        let (d2, f2) = b.push(1, spec(2), 10);
+        assert!(d2.is_none() && f2.is_none());
+        let (_, f3) = b.push(2, spec(3), 20);
+        let batch = f3.expect("size cap reached");
+        assert_eq!(batch.spec.keys, vec![1, 2, 3]);
+        assert_eq!(batch.spec.payload_len, 300);
+        assert_eq!(batch.members.len(), 3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn timer_flush() {
+        let mut b = Batcher::new(100, 5_000);
+        b.push(0, spec(1), 0);
+        b.push(1, spec(1), 100); // duplicate key deduped
+        assert!(b.flush_if_due(4_999).is_none());
+        let batch = b.flush_if_due(5_000).expect("deadline due");
+        assert_eq!(batch.spec.keys, vec![1]);
+        assert_eq!(batch.members, vec![(0, 0), (1, 100)]);
+        // Nothing left: further timers are no-ops.
+        assert!(b.flush_if_due(10_000).is_none());
+    }
+
+    #[test]
+    fn read_only_batch_stays_a_read() {
+        let mut b = Batcher::new(10, 1_000);
+        let read = CommandSpec { keys: vec![5], op: Op::Get, payload_len: 0 };
+        b.push(0, read.clone(), 0);
+        b.push(1, read, 1);
+        let batch = b.flush();
+        assert_eq!(batch.spec.op, Op::Get);
+    }
+}

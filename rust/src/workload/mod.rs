@@ -1,0 +1,175 @@
+//! Workload generators: the paper's conflict-rate microbenchmark (§6.2)
+//! and YCSB+T (§6.4), plus the site-level batching layer (Fig. 8).
+
+pub mod batching;
+
+use crate::core::{ClientId, Key, Op};
+use crate::util::{Rng, Zipf};
+
+/// What a client wants executed (before a Dot is assigned).
+#[derive(Clone, Debug)]
+pub struct CommandSpec {
+    pub keys: Vec<Key>,
+    pub op: Op,
+    pub payload_len: u32,
+}
+
+/// A stream of command specifications.
+pub trait Workload {
+    fn next(&mut self, client: ClientId, rng: &mut Rng) -> CommandSpec;
+}
+
+/// The paper's microbenchmark: "a client chooses key 0 with probability ρ,
+/// and some unique key otherwise" (§6.2). Commands carry `payload` bytes.
+#[derive(Clone, Debug)]
+pub struct ConflictWorkload {
+    /// Conflict rate ρ in [0, 1].
+    pub conflict_rate: f64,
+    /// Payload size in bytes (paper: 100 B default, 256 B–4 KiB in Figs 7/8).
+    pub payload_len: u32,
+    /// Next per-client unique-key counters are derived from the client id.
+    counter: u64,
+}
+
+impl ConflictWorkload {
+    pub fn new(conflict_rate: f64, payload_len: u32) -> Self {
+        assert!((0.0..=1.0).contains(&conflict_rate));
+        Self { conflict_rate, payload_len, counter: 0 }
+    }
+}
+
+impl Workload for ConflictWorkload {
+    fn next(&mut self, client: ClientId, rng: &mut Rng) -> CommandSpec {
+        let key = if rng.gen_bool(self.conflict_rate) {
+            0
+        } else {
+            // Unique key: high bits from the client, low bits a counter;
+            // bit 63 set so it never collides with key 0 or YCSB keys.
+            self.counter += 1;
+            (1 << 63) | (client.0 << 24) | (self.counter & 0xFF_FFFF)
+        };
+        CommandSpec { keys: vec![key], op: Op::Put, payload_len: self.payload_len }
+    }
+}
+
+/// YCSB+T (§6.4): every transaction accesses two keys drawn from a
+/// scrambled-zipfian distribution; a fraction `write_ratio` of commands are
+/// updates (read-modify-write), the rest reads. Workloads A/B/C of YCSB
+/// correspond to write ratios 50%/5%/0%.
+#[derive(Clone, Debug)]
+pub struct YcsbWorkload {
+    zipf: Zipf,
+    /// Total number of keys (paper: 1M per shard).
+    pub n_keys: u64,
+    /// Fraction of update (write) commands.
+    pub write_ratio: f64,
+    /// Keys accessed per transaction (paper: 2).
+    pub keys_per_tx: usize,
+    pub payload_len: u32,
+}
+
+impl YcsbWorkload {
+    pub fn new(n_keys: u64, zipf_theta: f64, write_ratio: f64) -> Self {
+        Self {
+            zipf: Zipf::new(n_keys, zipf_theta),
+            n_keys,
+            write_ratio,
+            keys_per_tx: 2,
+            payload_len: 100,
+        }
+    }
+
+    /// YCSB's "scrambled zipfian": spread hot ranks over the key space so
+    /// hot keys land on different shards.
+    fn scramble(&self, rank: u64) -> Key {
+        // FNV-1a 64-bit over the rank.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in rank.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h % self.n_keys
+    }
+}
+
+impl Workload for YcsbWorkload {
+    fn next(&mut self, _client: ClientId, rng: &mut Rng) -> CommandSpec {
+        let mut keys = Vec::with_capacity(self.keys_per_tx);
+        while keys.len() < self.keys_per_tx {
+            let k = self.scramble(self.zipf.sample(rng));
+            if !keys.contains(&k) {
+                keys.push(k);
+            }
+        }
+        let op = if rng.gen_bool(self.write_ratio) { Op::Rmw } else { Op::Get };
+        CommandSpec { keys, op, payload_len: self.payload_len }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conflict_rate_is_respected() {
+        let mut w = ConflictWorkload::new(0.1, 100);
+        let mut rng = Rng::new(9);
+        let n = 100_000;
+        let conflicts = (0..n)
+            .filter(|_| w.next(ClientId(7), &mut rng).keys[0] == 0)
+            .count();
+        let rate = conflicts as f64 / n as f64;
+        assert!((0.08..0.12).contains(&rate), "rate={rate}");
+    }
+
+    #[test]
+    fn nonconflicting_keys_are_unique_per_client() {
+        let mut w = ConflictWorkload::new(0.0, 100);
+        let mut rng = Rng::new(9);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10_000 {
+            let k = w.next(ClientId(3), &mut rng).keys[0];
+            assert!(seen.insert(k), "duplicate unique key {k}");
+        }
+    }
+
+    #[test]
+    fn different_clients_never_collide_on_unique_keys() {
+        let mut w = ConflictWorkload::new(0.0, 100);
+        let mut rng = Rng::new(10);
+        let a = w.next(ClientId(1), &mut rng).keys[0];
+        let b = w.next(ClientId(2), &mut rng).keys[0];
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn ycsb_two_distinct_keys_in_range() {
+        let mut w = YcsbWorkload::new(1_000_000, 0.7, 0.05);
+        let mut rng = Rng::new(11);
+        for _ in 0..10_000 {
+            let spec = w.next(ClientId(1), &mut rng);
+            assert_eq!(spec.keys.len(), 2);
+            assert_ne!(spec.keys[0], spec.keys[1]);
+            assert!(spec.keys.iter().all(|&k| k < 1_000_000));
+        }
+    }
+
+    #[test]
+    fn ycsb_write_ratio() {
+        let mut w = YcsbWorkload::new(1_000_000, 0.5, 0.5);
+        let mut rng = Rng::new(12);
+        let writes = (0..10_000)
+            .filter(|_| w.next(ClientId(1), &mut rng).op == Op::Rmw)
+            .count();
+        assert!((4_500..5_500).contains(&writes), "writes={writes}");
+    }
+
+    #[test]
+    fn ycsb_read_only_workload_c() {
+        let mut w = YcsbWorkload::new(1_000, 0.5, 0.0);
+        let mut rng = Rng::new(13);
+        for _ in 0..100 {
+            assert_eq!(w.next(ClientId(1), &mut rng).op, Op::Get);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Integration tests: every baseline protocol through the simulator,
+//! checked against the PSMR specification.
+
+use tempo::check::assert_psmr;
+use tempo::core::Config;
+use tempo::protocol::caesar::Caesar;
+use tempo::protocol::depsmr::{Atlas, EPaxos, Janus};
+use tempo::protocol::fpaxos::FPaxos;
+use tempo::sim::{run, SimOpts, Topology};
+use tempo::workload::{ConflictWorkload, YcsbWorkload};
+
+fn opts(topology: Topology, seed: u64) -> SimOpts {
+    let mut o = SimOpts::new(topology);
+    o.clients_per_site = 4;
+    o.warmup_us = 0;
+    o.duration_us = 3_000_000;
+    o.drain_us = 4_000_000;
+    o.seed = seed;
+    o.record_execution = true;
+    o
+}
+
+#[test]
+fn atlas_r5_f1_low_conflict() {
+    let config = Config::new(5, 1);
+    let result =
+        run::<Atlas, _>(config.clone(), opts(Topology::ec2(), 31), ConflictWorkload::new(0.02, 100));
+    assert!(result.metrics.ops > 50);
+    assert_psmr(&config, &result, true);
+    // Atlas f=1 always takes the fast path (§6 intro).
+    assert_eq!(result.metrics.counters.slow_path, 0);
+}
+
+#[test]
+fn atlas_r5_f2_high_conflict() {
+    let config = Config::new(5, 2);
+    let result =
+        run::<Atlas, _>(config.clone(), opts(Topology::ec2(), 32), ConflictWorkload::new(1.0, 100));
+    assert!(result.metrics.ops > 20, "ops={}", result.metrics.ops);
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn epaxos_low_conflict() {
+    let config = Config::new(5, 2);
+    let result = run::<EPaxos, _>(
+        config.clone(),
+        opts(Topology::ec2(), 33),
+        ConflictWorkload::new(0.02, 100),
+    );
+    assert!(result.metrics.ops > 50);
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn epaxos_more_slow_paths_than_atlas_under_conflicts() {
+    // EPaxos' identical-deps condition fails more often than Atlas'
+    // f-supported-union condition (§6 intro).
+    let conflict = ConflictWorkload::new(0.5, 100);
+    let config = Config::new(5, 1);
+    let e = run::<EPaxos, _>(config.clone(), opts(Topology::ec2(), 34), conflict.clone());
+    let a = run::<Atlas, _>(config, opts(Topology::ec2(), 34), conflict);
+    assert_eq!(a.metrics.counters.slow_path, 0);
+    assert!(
+        e.metrics.counters.slow_path > 0,
+        "EPaxos should take slow paths under 50% conflicts: {:?}",
+        e.metrics.counters
+    );
+}
+
+#[test]
+fn caesar_low_conflict() {
+    let config = Config::new(5, 2);
+    let result = run::<Caesar, _>(
+        config.clone(),
+        opts(Topology::ec2(), 35),
+        ConflictWorkload::new(0.02, 100),
+    );
+    assert!(result.metrics.ops > 50);
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn caesar_contention_degrades_latency() {
+    // Caesar's wait condition blocks replies under contention (§3.3).
+    let config = Config::new(5, 2);
+    let low = run::<Caesar, _>(
+        config.clone(),
+        opts(Topology::ec2(), 36),
+        ConflictWorkload::new(0.02, 100),
+    );
+    let high = run::<Caesar, _>(
+        config.clone(),
+        opts(Topology::ec2(), 36),
+        ConflictWorkload::new(0.5, 100),
+    );
+    assert!(
+        high.metrics.latency.mean() > low.metrics.latency.mean(),
+        "contention should raise Caesar latency: low={:.0} high={:.0}",
+        low.metrics.latency.mean(),
+        high.metrics.latency.mean()
+    );
+}
+
+#[test]
+fn fpaxos_all_sites_complete() {
+    let config = Config::new(3, 1);
+    let result = run::<FPaxos, _>(
+        config.clone(),
+        opts(Topology::ec2_three(), 37),
+        ConflictWorkload::new(0.1, 100),
+    );
+    assert!(result.metrics.ops > 50);
+    assert_psmr(&config, &result, true);
+    // All three sites observed completions.
+    assert_eq!(result.metrics.site_latency.len(), 3);
+}
+
+#[test]
+fn janus_partial_replication_two_shards() {
+    let config = Config::new(3, 1).with_shards(2);
+    let result = run::<Janus, _>(
+        config.clone(),
+        opts(Topology::ec2_three(), 38),
+        YcsbWorkload::new(100_000, 0.5, 0.05),
+    );
+    assert!(result.metrics.ops > 50, "ops={}", result.metrics.ops);
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn janus_update_heavy_zipf() {
+    let config = Config::new(3, 1).with_shards(4);
+    let result = run::<Janus, _>(
+        config.clone(),
+        opts(Topology::ec2_three(), 39),
+        YcsbWorkload::new(100_000, 0.7, 0.5),
+    );
+    assert!(result.metrics.ops > 50, "ops={}", result.metrics.ops);
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn janus_read_only_never_slow_paths() {
+    // Reads don't conflict with reads: YCSB-C is Janus*'s best case (§6.4).
+    let config = Config::new(3, 1).with_shards(2);
+    let result = run::<Janus, _>(
+        config.clone(),
+        opts(Topology::ec2_three(), 40),
+        YcsbWorkload::new(1_000, 0.7, 0.0),
+    );
+    assert!(result.metrics.ops > 50);
+    assert_eq!(result.metrics.counters.slow_path, 0);
+    assert_psmr(&config, &result, true);
+}

@@ -1,0 +1,96 @@
+//! §D pathological scenarios: the dependency-chain and blocking behaviours
+//! that motivate Tempo, demonstrated on our baseline implementations.
+
+use tempo::core::{ClientId, Command, Config, Op};
+use tempo::protocol::caesar::Caesar;
+use tempo::protocol::depsmr::Atlas;
+use tempo::protocol::tempo::Tempo;
+use tempo::sim::{run, SimOpts, Topology};
+use tempo::workload::ConflictWorkload;
+
+fn opts(seed: u64) -> SimOpts {
+    let mut o = SimOpts::new(Topology::ec2_three());
+    o.clients_per_site = 8;
+    o.warmup_us = 0;
+    o.duration_us = 4_000_000;
+    o.drain_us = 4_000_000;
+    o.seed = seed;
+    o.record_execution = true;
+    o
+}
+
+#[test]
+fn tempo_tail_beats_atlas_tail_under_contention() {
+    // The §3.3/Fig. 6 claim in miniature: under contention, dependency
+    // chains inflate Atlas' tail latency while Tempo's stays flat.
+    let config = Config::new(3, 1);
+    let w = ConflictWorkload::new(0.5, 100);
+    let t = run::<Tempo, _>(config.clone(), opts(71), w.clone());
+    let a = run::<Atlas, _>(config, opts(71), w);
+    let tp = t.metrics.latency.quantile(0.999);
+    let ap = a.metrics.latency.quantile(0.999);
+    assert!(
+        ap > tp,
+        "atlas p99.9 ({ap}µs) should exceed tempo p99.9 ({tp}µs) at 50% conflicts"
+    );
+}
+
+#[test]
+fn caesar_blocking_inflates_commit_latency() {
+    let config = Config::new(5, 2);
+    let w_low = ConflictWorkload::new(0.02, 100);
+    let w_high = ConflictWorkload::new(0.8, 100);
+    let low = run::<Caesar, _>(config.clone(), opts_5(72), w_low);
+    let high = run::<Caesar, _>(config, opts_5(72), w_high);
+    assert!(high.metrics.latency.quantile(0.99) > low.metrics.latency.quantile(0.99));
+}
+
+fn opts_5(seed: u64) -> SimOpts {
+    let mut o = SimOpts::new(Topology::ec2());
+    o.clients_per_site = 8;
+    o.warmup_us = 0;
+    o.duration_us = 4_000_000;
+    o.drain_us = 4_000_000;
+    o.seed = seed;
+    o.record_execution = true;
+    o
+}
+
+#[test]
+fn tempo_throughput_insensitive_to_conflicts() {
+    // §6.3: Tempo's performance is independent of the conflict rate.
+    let config = Config::new(3, 1);
+    let lo = run::<Tempo, _>(config.clone(), opts(73), ConflictWorkload::new(0.0, 100));
+    let hi = run::<Tempo, _>(config, opts(73), ConflictWorkload::new(0.1, 100));
+    let ratio = hi.metrics.ops as f64 / lo.metrics.ops as f64;
+    assert!(
+        ratio > 0.8,
+        "10% conflicts cost Tempo {:.0}% throughput (lo={} hi={})",
+        (1.0 - ratio) * 100.0,
+        lo.metrics.ops,
+        hi.metrics.ops
+    );
+}
+
+#[test]
+fn multi_key_commands_respect_all_partitions() {
+    // Submit explicit two-key commands through the simulator and check the
+    // per-key agreement on both keys (Ordering across partitions).
+    struct TwoKey(u64);
+    impl tempo::workload::Workload for TwoKey {
+        fn next(
+            &mut self,
+            _c: ClientId,
+            rng: &mut tempo::util::Rng,
+        ) -> tempo::workload::CommandSpec {
+            let a = rng.gen_range(self.0);
+            let b = (a + 1 + rng.gen_range(self.0 - 1)) % self.0;
+            tempo::workload::CommandSpec { keys: vec![a, b], op: Op::Rmw, payload_len: 16 }
+        }
+    }
+    let config = Config::new(3, 1).with_shards(2);
+    let result = run::<Tempo, _>(config.clone(), opts(74), TwoKey(40));
+    assert!(result.metrics.ops > 20);
+    tempo::check::assert_psmr(&config, &result, true);
+    let _ = Command::new(ClientId(0), vec![0], Op::Get, 0); // keep import used
+}

@@ -1,0 +1,232 @@
+//! Property-based tests over the core invariants (seeded harness in
+//! `tempo::util::prop`; replay failures with `PROP_SEED=<seed>`).
+
+use tempo::core::{ClientId, Command, Config, Dot, Op, ProcessId};
+use tempo::executor::DepGraph;
+use tempo::protocol::tempo::clock::Clock;
+use tempo::protocol::tempo::promises::{PromiseSet, PromiseStore, SourceTracker};
+use tempo::util::prop::{forall_seeds, forall};
+use tempo::util::Rng;
+
+#[test]
+fn prop_clock_promises_tile_the_timestamp_space() {
+    // Whatever interleaving of proposal/bump operations runs, the promises
+    // generated tile 1..=Clock exactly once (Lemma 6: LocalPromises is
+    // gapless) and proposals are strictly increasing.
+    forall_seeds("clock-tiling", |seed| {
+        let mut rng = Rng::new(seed);
+        let mut clock = Clock::default();
+        let mut all = PromiseSet::default();
+        let mut last = 0u64;
+        for i in 0..200 {
+            if rng.gen_bool(0.5) {
+                let m = rng.gen_range(20) + last;
+                let t = clock.proposal(Dot::new(ProcessId(0), i), m);
+                if t < m || t <= last {
+                    return Err(format!("proposal {t} not above max({m}, last {last})"));
+                }
+                last = t;
+            } else {
+                clock.bump(last + rng.gen_range(10));
+                last = clock.value();
+            }
+            all.merge(&clock.take_outbox());
+        }
+        // Tile check: every timestamp 1..=Clock appears exactly once.
+        let mut covered = vec![0u32; clock.value() as usize + 1];
+        for (lo, hi) in &all.detached {
+            for u in *lo..=*hi {
+                covered[u as usize] += 1;
+            }
+        }
+        for (_, t) in &all.attached {
+            covered[*t as usize] += 1;
+        }
+        for u in 1..=clock.value() as usize {
+            if covered[u] != 1 {
+                return Err(format!("timestamp {u} promised {} times", covered[u]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_source_tracker_matches_naive_set_model() {
+    forall_seeds("tracker-vs-set", |seed| {
+        let mut rng = Rng::new(seed);
+        let mut tracker = SourceTracker::default();
+        let mut model = std::collections::BTreeSet::new();
+        for _ in 0..300 {
+            if rng.gen_bool(0.7) {
+                let u = rng.gen_range(120) + 1;
+                tracker.add(u);
+                model.insert(u);
+            } else {
+                let lo = rng.gen_range(100) + 1;
+                let hi = lo + rng.gen_range(20);
+                tracker.add_range(lo, hi);
+                model.extend(lo..=hi);
+            }
+            let expect = (1..).take_while(|u| model.contains(u)).count() as u64;
+            if tracker.highest_contiguous() != expect {
+                return Err(format!(
+                    "watermark {} != model {expect}",
+                    tracker.highest_contiguous()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_promise_store_watermark_monotone_and_bounded() {
+    forall_seeds("watermark-monotone", |seed| {
+        let mut rng = Rng::new(seed);
+        let procs: Vec<ProcessId> = (0..5).map(ProcessId).collect();
+        let mut store = PromiseStore::default();
+        let mut last = 0;
+        for _ in 0..200 {
+            let src = procs[rng.gen_range(5) as usize];
+            let lo = rng.gen_range(50) + 1;
+            let batch =
+                PromiseSet { detached: vec![(lo, lo + rng.gen_range(8))], attached: vec![] };
+            store.add(src, &batch, |_| true);
+            let w = store.stable_watermark(&procs, 3);
+            if w < last {
+                return Err(format!("stable watermark regressed {last} -> {w}"));
+            }
+            // Bounded by the maximum single-source watermark.
+            let max = procs.iter().map(|p| store.highest_contiguous(*p)).max().unwrap();
+            if w > max {
+                return Err(format!("watermark {w} above any source ({max})"));
+            }
+            last = w;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dep_graph_executes_all_and_respects_order() {
+    // Random DAG-ish dependency sets (possibly cyclic): once everything is
+    // committed, everything executes, and a command never executes before
+    // a dependency in a *different* SCC.
+    forall_seeds("graph-total-execution", |seed| {
+        let mut rng = Rng::new(seed);
+        let n = 60 + rng.gen_range(60);
+        let dots: Vec<Dot> = (0..n).map(|i| Dot::new(ProcessId((i % 5) as u32), i)).collect();
+        let mut deps: Vec<Vec<Dot>> = Vec::new();
+        for i in 0..n as usize {
+            let mut d = Vec::new();
+            for _ in 0..rng.gen_range(4) {
+                let j = rng.gen_range(n) as usize;
+                if j != i {
+                    d.push(dots[j]);
+                }
+            }
+            deps.push(d);
+        }
+        let mut g = DepGraph::default();
+        let mut order: Vec<usize> = (0..n as usize).collect();
+        rng.shuffle(&mut order);
+        for &i in &order {
+            g.commit(dots[i], deps[i].clone());
+        }
+        // Execute everything reachable.
+        let mut executed = Vec::new();
+        for &d in &dots {
+            if g.is_executed(d) {
+                continue;
+            }
+            if let Some(sccs) = g.ready_from(d) {
+                for scc in sccs {
+                    for m in scc {
+                        if !g.is_executed(m) {
+                            g.mark_executed(m);
+                            executed.push(m);
+                        }
+                    }
+                }
+            }
+        }
+        if executed.len() != n as usize {
+            return Err(format!("only {}/{n} executed", executed.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_codec_roundtrips_random_messages() {
+    use tempo::net::wire::{decode, encode};
+    use tempo::protocol::tempo::msg::Msg;
+    forall(
+        "wire-roundtrip",
+        |rng| {
+            let dot = Dot::new(ProcessId(rng.gen_range(16) as u32), rng.gen_range(1 << 20));
+            let keys: Vec<u64> = (0..1 + rng.gen_range(4)).map(|_| rng.gen_range(1 << 30)).collect();
+            let cmd = Command::new(
+                ClientId(rng.gen_range(1 << 16)),
+                keys.clone(),
+                if rng.gen_bool(0.5) { Op::Put } else { Op::Get },
+                rng.gen_range(4096) as u32,
+            );
+            let ts: Vec<(u64, u64)> =
+                keys.iter().map(|&k| (k, rng.gen_range(1 << 16))).collect();
+            match rng.gen_range(4) {
+                0 => Msg::MPropose { dot, cmd, quorums: vec![], ts },
+                1 => Msg::MCommit { dot, group: tempo::core::ShardId(0), ts, promises: vec![] },
+                2 => Msg::MProposeAck {
+                    dot,
+                    ts,
+                    promises: vec![(
+                        keys[0],
+                        tempo::protocol::tempo::promises::PromiseSet {
+                            detached: vec![(1, rng.gen_range(100) + 1)],
+                            attached: vec![(dot, rng.gen_range(100) + 1)],
+                        },
+                    )],
+                },
+                _ => Msg::MConsensus { dot, ts, bal: rng.gen_range(1 << 10) },
+            }
+        },
+        |msg| {
+            let bytes = encode(msg);
+            let back = decode(&bytes).map_err(|e| e.to_string())?;
+            if format!("{msg:?}") != format!("{back:?}") {
+                return Err(format!("round-trip mismatch: {msg:?} vs {back:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tempo_sim_agreement_across_seeds() {
+    // End-to-end safety sweep: random seeds, random conflict rates — the
+    // PSMR checker must pass every time (liveness included; no crashes).
+    forall_seeds("tempo-psmr-sweep", |seed| {
+        let conflict = (seed % 11) as f64 / 10.0;
+        let config = Config::new(3, 1);
+        let mut o = tempo::sim::SimOpts::new(tempo::sim::Topology::ec2_three());
+        o.clients_per_site = 3;
+        o.warmup_us = 0;
+        o.duration_us = 1_000_000;
+        o.drain_us = 2_000_000;
+        o.seed = seed;
+        o.record_execution = true;
+        let result = tempo::sim::run::<tempo::protocol::tempo::Tempo, _>(
+            config.clone(),
+            o,
+            tempo::workload::ConflictWorkload::new(conflict, 64),
+        );
+        let violations = tempo::check::check_psmr(&config, &result, true);
+        if violations.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("{} violations at conflict={conflict}", violations.len()))
+        }
+    });
+}

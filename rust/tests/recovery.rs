@@ -1,0 +1,135 @@
+//! Fault injection: crash coordinators mid-protocol and verify that
+//! Tempo's recovery (Algorithm 4 + §B liveness) preserves the PSMR spec —
+//! in particular Property 1 (timestamp agreement) and Liveness.
+
+use tempo::check::{check_psmr, Violation};
+use tempo::core::{Config, ProcessId};
+use tempo::protocol::tempo::Tempo;
+use tempo::sim::{run, SimOpts, Topology};
+use tempo::util::prop::forall_seeds;
+use tempo::workload::ConflictWorkload;
+
+fn crash_opts(seed: u64, crash_at_us: u64, victim: u32) -> SimOpts {
+    let mut o = SimOpts::new(Topology::ec2());
+    o.clients_per_site = 2;
+    o.warmup_us = 0;
+    o.duration_us = 2_000_000;
+    o.drain_us = 8_000_000; // recovery timers need time to fire
+    o.seed = seed;
+    o.record_execution = true;
+    o.crashes = vec![(crash_at_us, ProcessId(victim))];
+    o.suspect_delay_us = 300_000;
+    o
+}
+
+/// Liveness is only required for commands whose origin survived: commands
+/// submitted *by* the crashed process may never have left it.
+fn assert_psmr_with_crash(config: &Config, result: &tempo::sim::SimResult, victim: u32) {
+    let violations = check_psmr(config, result, true);
+    let filtered: Vec<&Violation> = violations
+        .iter()
+        .filter(|v| match v {
+            Violation::NotExecuted { process, dot } => {
+                // The crashed process does not execute; commands from the
+                // victim may be incomplete if they never reached a quorum.
+                process.0 != victim && dot.origin.0 != victim
+            }
+            _ => true,
+        })
+        .collect();
+    assert!(
+        filtered.is_empty(),
+        "PSMR violated under crash of P{victim}: {} violation(s): {:#?}",
+        filtered.len(),
+        filtered.iter().take(8).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn coordinator_crash_is_recovered_r3() {
+    let config = Config::new(3, 1).with_recovery_timeout_us(1_000_000);
+    let mut o = crash_opts(51, 500_000, 0);
+    o.topology = Topology::ec2_three();
+    let result = run::<Tempo, _>(config.clone(), o, ConflictWorkload::new(0.1, 100));
+    assert!(result.metrics.counters.recoveries > 0, "{:?}", result.metrics.counters);
+    assert_psmr_with_crash(&config, &result, 0);
+}
+
+#[test]
+fn coordinator_crash_is_recovered_r5_f2() {
+    let config = Config::new(5, 2).with_recovery_timeout_us(1_000_000);
+    let result = run::<Tempo, _>(
+        config.clone(),
+        crash_opts(52, 500_000, 1),
+        ConflictWorkload::new(0.5, 100),
+    );
+    assert_psmr_with_crash(&config, &result, 1);
+}
+
+#[test]
+fn two_crashes_tolerated_with_f2() {
+    let config = Config::new(5, 2).with_recovery_timeout_us(1_000_000);
+    let mut o = crash_opts(53, 400_000, 3);
+    o.crashes.push((900_000, ProcessId(4)));
+    let result = run::<Tempo, _>(config.clone(), o, ConflictWorkload::new(0.2, 100));
+    let violations = check_psmr(&config, &result, true);
+    let filtered: Vec<_> = violations
+        .iter()
+        .filter(|v| match v {
+            Violation::NotExecuted { process, dot } => {
+                !matches!(process.0, 3 | 4) && !matches!(dot.origin.0, 3 | 4)
+            }
+            _ => true,
+        })
+        .collect();
+    assert!(filtered.is_empty(), "{:#?}", filtered.iter().take(8).collect::<Vec<_>>());
+}
+
+#[test]
+fn crash_sweep_property_random_times_and_victims() {
+    // Property: whatever the crash time and victim, safety (agreement,
+    // per-key order) holds and surviving-origin commands execute.
+    forall_seeds("tempo-crash-sweep", |seed| {
+        let victim = (seed % 5) as u32;
+        let crash_at = 200_000 + (seed % 7) * 150_000;
+        let config = Config::new(5, 1).with_recovery_timeout_us(800_000);
+        let result = run::<Tempo, _>(
+            config.clone(),
+            crash_opts(seed, crash_at, victim),
+            ConflictWorkload::new(0.3, 100),
+        );
+        let violations = check_psmr(&config, &result, true);
+        let filtered: Vec<&Violation> = violations
+            .iter()
+            .filter(|v| match v {
+                Violation::NotExecuted { process, dot } => {
+                    process.0 != victim && dot.origin.0 != victim
+                }
+                _ => true,
+            })
+            .collect();
+        if filtered.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "victim=P{victim} crash_at={crash_at}: {} violations: {:?}",
+                filtered.len(),
+                filtered.iter().take(4).collect::<Vec<_>>()
+            ))
+        }
+    });
+}
+
+#[test]
+fn no_recovery_when_nothing_crashes() {
+    let config = Config::new(5, 1).with_recovery_timeout_us(2_000_000);
+    let mut o = SimOpts::new(Topology::ec2());
+    o.clients_per_site = 2;
+    o.warmup_us = 0;
+    o.duration_us = 2_000_000;
+    o.drain_us = 4_000_000;
+    o.seed = 54;
+    o.record_execution = true;
+    let result = run::<Tempo, _>(config, o, ConflictWorkload::new(0.1, 100));
+    assert_eq!(result.metrics.counters.recoveries, 0, "spurious recovery triggered");
+}

@@ -1,0 +1,70 @@
+//! L3↔L1/L2 bridge: load the AOT artifact through PJRT and cross-check
+//! against the pure-Rust stability implementation on the golden vectors
+//! shared with python/tests/test_kernel.py.
+//!
+//! Requires `make artifacts` (skips gracefully when the artifact is absent
+//! so `cargo test` works before the Python toolchain ran).
+
+use tempo::runtime::stability::{stable_watermarks_rust, KernelShape, StabilityKernel};
+use tempo::runtime::Runtime;
+
+const ARTIFACT: &str = "artifacts/stability.hlo.txt";
+
+fn golden_bits(shape: &KernelShape) -> Vec<u8> {
+    // Mirror of test_golden_vectors_shared_with_rust in test_kernel.py:
+    // bit(i,j,u) = ((i*7 + j*13 + u*3) % 5) != 0 for u < (i+j+1)*4.
+    let (p, r, w) = (shape.partitions, shape.replicas, shape.window);
+    let mut bits = vec![0u8; p * r * w];
+    for i in 0..p {
+        for j in 0..r {
+            let limit = w.min((i + j + 1) * 4);
+            for u in 0..limit {
+                bits[(i * r + j) * w + u] =
+                    if (i * 7 + j * 13 + u * 3) % 5 != 0 { 1 } else { 0 };
+            }
+        }
+    }
+    bits
+}
+
+#[test]
+fn pjrt_artifact_matches_rust_reference() {
+    if !std::path::Path::new(ARTIFACT).exists() {
+        eprintln!("skipping: {ARTIFACT} missing (run `make artifacts`)");
+        return;
+    }
+    let shape = KernelShape::default();
+    let runtime = Runtime::cpu().expect("PJRT CPU client");
+    let kernel = StabilityKernel::load(&runtime, ARTIFACT, shape).expect("compile artifact");
+
+    let bits = golden_bits(&shape);
+    let queue: Vec<i32> = (0..(shape.partitions * shape.queue) as i32).collect();
+    let (wm, mask) = kernel.tick(&bits, &queue).expect("execute");
+
+    let expect = stable_watermarks_rust(&bits, &shape);
+    assert_eq!(wm, expect, "PJRT artifact disagrees with the Rust reference");
+
+    // Mask semantics: queue_ts executable iff 0 < ts <= watermark.
+    for i in 0..shape.partitions {
+        for q in 0..shape.queue {
+            let ts = queue[i * shape.queue + q];
+            let expect_bit = (ts > 0 && ts <= wm[i]) as i32;
+            assert_eq!(mask[i * shape.queue + q], expect_bit, "mask at ({i},{q})");
+        }
+    }
+}
+
+#[test]
+fn pjrt_artifact_all_promised_window() {
+    if !std::path::Path::new(ARTIFACT).exists() {
+        return;
+    }
+    let shape = KernelShape::default();
+    let runtime = Runtime::cpu().unwrap();
+    let kernel = StabilityKernel::load(&runtime, ARTIFACT, shape).unwrap();
+    let bits = vec![1u8; shape.partitions * shape.replicas * shape.window];
+    let queue = vec![0i32; shape.partitions * shape.queue];
+    let (wm, mask) = kernel.tick(&bits, &queue).unwrap();
+    assert!(wm.iter().all(|&w| w == shape.window as i32));
+    assert!(mask.iter().all(|&m| m == 0), "empty queue slots never execute");
+}

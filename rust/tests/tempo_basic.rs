@@ -1,0 +1,139 @@
+//! Integration tests: Tempo through the simulator, checked against the
+//! PSMR specification (Validity / Ordering / Liveness).
+
+use tempo::check::assert_psmr;
+use tempo::core::Config;
+use tempo::protocol::tempo::Tempo;
+use tempo::sim::{run, SimOpts, Topology};
+use tempo::workload::ConflictWorkload;
+
+fn opts(topology: Topology, seed: u64) -> SimOpts {
+    let mut o = SimOpts::new(topology);
+    o.clients_per_site = 4;
+    o.warmup_us = 0;
+    o.duration_us = 3_000_000;
+    o.drain_us = 3_000_000;
+    o.seed = seed;
+    o.record_execution = true;
+    o
+}
+
+#[test]
+fn tempo_r3_f1_low_conflict_satisfies_psmr() {
+    let config = Config::new(3, 1);
+    let result = run::<Tempo, _>(
+        config.clone(),
+        opts(Topology::ec2_three(), 7),
+        ConflictWorkload::new(0.02, 100),
+    );
+    assert!(result.metrics.ops > 50, "too few ops: {}", result.metrics.ops);
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn tempo_r5_f1_satisfies_psmr() {
+    let config = Config::new(5, 1);
+    let result = run::<Tempo, _>(
+        config.clone(),
+        opts(Topology::ec2(), 8),
+        ConflictWorkload::new(0.02, 100),
+    );
+    assert!(result.metrics.ops > 50);
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn tempo_r5_f2_satisfies_psmr() {
+    let config = Config::new(5, 2);
+    let result = run::<Tempo, _>(
+        config.clone(),
+        opts(Topology::ec2(), 9),
+        ConflictWorkload::new(0.02, 100),
+    );
+    assert!(result.metrics.ops > 50);
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn tempo_full_conflict_satisfies_psmr() {
+    // Every command conflicts: the hardest ordering workload.
+    let config = Config::new(5, 2);
+    let result = run::<Tempo, _>(
+        config.clone(),
+        opts(Topology::ec2(), 10),
+        ConflictWorkload::new(1.0, 100),
+    );
+    assert!(result.metrics.ops > 50);
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn tempo_f1_always_takes_fast_path() {
+    // With f = 1, count(max proposal) >= 1 trivially holds (§3.1).
+    let config = Config::new(5, 1);
+    let result = run::<Tempo, _>(
+        config.clone(),
+        opts(Topology::ec2(), 11),
+        ConflictWorkload::new(0.5, 100),
+    );
+    assert_eq!(result.metrics.counters.slow_path, 0);
+    assert!(result.metrics.counters.fast_path > 0);
+}
+
+#[test]
+fn tempo_f2_contention_uses_slow_path_sometimes() {
+    let config = Config::new(5, 2);
+    let result = run::<Tempo, _>(
+        config.clone(),
+        opts(Topology::ec2(), 12),
+        ConflictWorkload::new(1.0, 100),
+    );
+    // With full conflicts and f=2 some commands can't match f proposals.
+    assert!(
+        result.metrics.counters.slow_path > 0,
+        "expected some slow paths under full conflicts: {:?}",
+        result.metrics.counters
+    );
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn tempo_partial_replication_two_shards() {
+    let config = Config::new(3, 1).with_shards(2);
+    let result = run::<Tempo, _>(
+        config.clone(),
+        opts(Topology::ec2_three(), 13),
+        tempo::workload::YcsbWorkload::new(10_000, 0.5, 0.5),
+    );
+    assert!(result.metrics.ops > 50, "ops={}", result.metrics.ops);
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn tempo_partial_replication_four_shards_zipf_hot() {
+    let config = Config::new(3, 1).with_shards(4);
+    let result = run::<Tempo, _>(
+        config.clone(),
+        opts(Topology::ec2_three(), 14),
+        tempo::workload::YcsbWorkload::new(1_000, 0.7, 0.5),
+    );
+    assert!(result.metrics.ops > 50, "ops={}", result.metrics.ops);
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn tempo_deterministic_given_seed() {
+    let config = Config::new(3, 1);
+    let a = run::<Tempo, _>(
+        config.clone(),
+        opts(Topology::ec2_three(), 42),
+        ConflictWorkload::new(0.1, 100),
+    );
+    let b = run::<Tempo, _>(
+        config,
+        opts(Topology::ec2_three(), 42),
+        ConflictWorkload::new(0.1, 100),
+    );
+    assert_eq!(a.metrics.ops, b.metrics.ops);
+    assert_eq!(a.execution_logs, b.execution_logs);
+}
