@@ -16,7 +16,7 @@ use tempo::metrics::Histogram;
 use tempo::net::{local_addrs, start_node};
 use tempo::util::{Rng, Zipf};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tempo::util::error::Result<()> {
     let r = 3;
     let config = Config::new(r, 1).with_tick_interval_us(1_000);
     let addrs = local_addrs(r)?;

@@ -1,6 +1,7 @@
 //! Component microbenchmarks for the §Perf pass: simulator event rate,
-//! promise-store throughput, SCC executor, histogram, and the PJRT
-//! stability kernel vs the pure-Rust path.
+//! promise-store throughput, the scan-based vs incremental stability
+//! watermark (results recorded to BENCH_stability.json), SCC executor,
+//! histogram, and (with `--features pjrt`) the PJRT stability kernel.
 
 use std::time::Instant;
 use tempo::core::{Config, Dot, ProcessId};
@@ -8,23 +9,98 @@ use tempo::executor::DepGraph;
 use tempo::metrics::Histogram;
 use tempo::protocol::tempo::promises::{PromiseSet, PromiseStore};
 use tempo::protocol::tempo::Tempo;
-use tempo::runtime::stability::{stable_watermarks_rust, KernelShape, StabilityKernel};
-use tempo::runtime::Runtime;
+use tempo::runtime::stability::{stable_watermarks_rust, KernelShape};
 use tempo::sim::{run, SimOpts, Topology};
 use tempo::util::Rng;
 use tempo::workload::ConflictWorkload;
 
-fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
+/// Run `f` for `iters` iterations; print and return ns/iter.
+fn bench(name: &str, iters: u64, mut f: impl FnMut()) -> f64 {
     let start = Instant::now();
     for _ in 0..iters {
         f();
     }
     let el = start.elapsed();
+    let ns_per_iter = el.as_nanos() as f64 / iters as f64;
     println!(
-        "{name:<44} {iters:>10} iters  {:>10.1} ns/iter  {:>12.0} /s",
-        el.as_nanos() as f64 / iters as f64,
+        "{name:<44} {iters:>10} iters  {ns_per_iter:>10.1} ns/iter  {:>12.0} /s",
         iters as f64 / el.as_secs_f64()
     );
+    ns_per_iter
+}
+
+/// The stability hot path: one promise delta + one watermark query per
+/// iteration, over r=5 sources at majority 3. `scan` collects and sorts
+/// every source frontier per query (the seed's behaviour);
+/// `incremental` reads the cached majority frontier maintained on deltas.
+fn stability_watermark_bench() -> (f64, f64) {
+    let procs: Vec<ProcessId> = (0..5).map(ProcessId).collect();
+
+    let mut scan_store = PromiseStore::default();
+    let mut next = 1u64;
+    let scan_ns = bench("stability watermark: scan (seed path)", 1_000_000, || {
+        let batch = PromiseSet { detached: vec![(next, next)], attached: vec![] };
+        scan_store.add(procs[(next % 5) as usize], &batch, |_| true);
+        next += 1;
+        std::hint::black_box(scan_store.stable_watermark(&procs, 3));
+    });
+
+    let mut inc_store = PromiseStore::default();
+    inc_store.init_quorum(&procs, 3);
+    let mut next = 1u64;
+    let inc_ns = bench("stability watermark: incremental cache", 1_000_000, || {
+        let batch = PromiseSet { detached: vec![(next, next)], attached: vec![] };
+        inc_store.add(procs[(next % 5) as usize], &batch, |_| true);
+        next += 1;
+        std::hint::black_box(inc_store.watermark());
+    });
+
+    // The two paths must agree on the final watermark.
+    assert_eq!(inc_store.watermark(), scan_store.stable_watermark(&procs, 3));
+    (scan_ns, inc_ns)
+}
+
+fn write_stability_baseline(scan_ns: f64, inc_ns: f64) {
+    let speedup = scan_ns / inc_ns;
+    let json = format!(
+        "{{\n  \"bench\": \"stability_watermark\",\n  \"unit\": \"ns_per_iter\",\n  \
+         \"workload\": \"add 1 promise + query majority watermark, r=5, majority=3\",\n  \
+         \"scan_ns_per_iter\": {scan_ns:.1},\n  \"incremental_ns_per_iter\": {inc_ns:.1},\n  \
+         \"speedup\": {speedup:.2},\n  \
+         \"regenerate\": \"cargo bench --bench microbench\"\n}}\n"
+    );
+    // cargo runs benches with CWD = the package dir (rust/); the baseline
+    // lives at the repo root next to ROADMAP.md.
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(d) => format!("{d}/../BENCH_stability.json"),
+        Err(_) => "BENCH_stability.json".to_string(),
+    };
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("stability baseline written to {path} (speedup {speedup:.2}x)"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_stability_bench(shape: KernelShape, bits: &[u8]) {
+    use tempo::runtime::stability::StabilityKernel;
+    use tempo::runtime::Runtime;
+    if std::path::Path::new("artifacts/stability.hlo.txt").exists() {
+        let runtime = Runtime::cpu().unwrap();
+        let kernel =
+            StabilityKernel::load(&runtime, "artifacts/stability.hlo.txt", shape).unwrap();
+        let queue = vec![1i32; shape.partitions * shape.queue];
+        bench("stability PJRT artifact [16,5,64]", 2_000, || {
+            std::hint::black_box(kernel.tick(bits, &queue).unwrap());
+        });
+    } else {
+        println!("stability PJRT artifact: skipped (run `make artifacts`)");
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_stability_bench(_shape: KernelShape, _bits: &[u8]) {
+    println!("stability PJRT artifact: skipped (build with --features pjrt)");
 }
 
 fn main() {
@@ -33,13 +109,19 @@ fn main() {
     // Promise store: contiguous adds + watermark queries.
     let procs: Vec<ProcessId> = (0..5).map(ProcessId).collect();
     let mut store = PromiseStore::default();
+    store.init_quorum(&procs, 3);
     let mut next = 1u64;
     bench("promise_store add_range + watermark", 1_000_000, || {
         let batch = PromiseSet { detached: vec![(next, next)], attached: vec![] };
         store.add(procs[(next % 5) as usize], &batch, |_| true);
         next += 1;
-        std::hint::black_box(store.stable_watermark(&procs, 3));
+        std::hint::black_box(store.watermark());
     });
+
+    // Scan-based vs incremental stability watermark (the hot path this
+    // refactor optimizes); record the baseline JSON.
+    let (scan_ns, inc_ns) = stability_watermark_bench();
+    write_stability_baseline(scan_ns, inc_ns);
 
     // Histogram record.
     let mut h = Histogram::new();
@@ -78,21 +160,11 @@ fn main() {
         cmds as f64 / el.as_secs_f64()
     );
 
-    // Stability kernel: pure Rust vs PJRT artifact.
+    // Stability kernel: pure Rust reference, then (optionally) PJRT.
     let shape = KernelShape::default();
     let bits = vec![1u8; shape.partitions * shape.replicas * shape.window];
     bench("stability pure-rust [16,5,64]", 200_000, || {
         std::hint::black_box(stable_watermarks_rust(&bits, &shape));
     });
-    if std::path::Path::new("artifacts/stability.hlo.txt").exists() {
-        let runtime = Runtime::cpu().unwrap();
-        let kernel =
-            StabilityKernel::load(&runtime, "artifacts/stability.hlo.txt", shape).unwrap();
-        let queue = vec![1i32; shape.partitions * shape.queue];
-        bench("stability PJRT artifact [16,5,64]", 2_000, || {
-            std::hint::black_box(kernel.tick(&bits, &queue).unwrap());
-        });
-    } else {
-        println!("stability PJRT artifact: skipped (run `make artifacts`)");
-    }
+    pjrt_stability_bench(shape, &bits);
 }

@@ -27,6 +27,12 @@ pub struct Config {
     /// Timeout after which a pending command triggers recovery, in µs.
     /// `u64::MAX` disables recovery (useful in failure-free benches).
     pub recovery_timeout_us: u64,
+    /// Garbage-collection cadence: every `gc_interval_ticks` periodic
+    /// ticks a process exchanges its executed-command frontiers with its
+    /// group (`MGarbageCollect`) and prunes group-wide-executed command
+    /// state. 0 disables GC (memory then grows with the run, as the seed
+    /// did unconditionally).
+    pub gc_interval_ticks: u64,
 }
 
 impl Config {
@@ -41,6 +47,7 @@ impl Config {
             tick_interval_us: 5_000,
             bump_enabled: true,
             recovery_timeout_us: u64::MAX,
+            gc_interval_ticks: 16,
         }
     }
 
@@ -62,6 +69,11 @@ impl Config {
 
     pub fn with_bump(mut self, enabled: bool) -> Self {
         self.bump_enabled = enabled;
+        self
+    }
+
+    pub fn with_gc_interval_ticks(mut self, ticks: u64) -> Self {
+        self.gc_interval_ticks = ticks;
         self
     }
 

@@ -9,6 +9,7 @@
 //! latency experiments expose.
 
 use crate::core::Dot;
+use crate::protocol::common::stability::ExecutedSet;
 use std::collections::{HashMap, HashSet};
 
 #[derive(Clone, Debug)]
@@ -17,27 +18,32 @@ struct Node {
 }
 
 /// The committed-but-unexecuted dependency graph of one partition/group.
+///
+/// Executed dots are remembered as per-origin contiguous frontiers
+/// ([`ExecutedSet`]) rather than a `HashSet` of every dot ever executed,
+/// so the graph's memory is bounded in steady state while dependencies on
+/// long-executed (even GC'd) commands still read as satisfied.
 #[derive(Clone, Debug, Default)]
 pub struct DepGraph {
     nodes: HashMap<Dot, Node>,
-    executed: HashSet<Dot>,
+    executed: ExecutedSet,
 }
 
 impl DepGraph {
     /// Record a committed command with its final dependencies.
     pub fn commit(&mut self, dot: Dot, deps: Vec<Dot>) {
-        if self.executed.contains(&dot) {
+        if self.executed.contains(dot) {
             return;
         }
         self.nodes.entry(dot).or_insert(Node { deps });
     }
 
     pub fn is_committed(&self, dot: Dot) -> bool {
-        self.nodes.contains_key(&dot) || self.executed.contains(&dot)
+        self.nodes.contains_key(&dot) || self.executed.contains(dot)
     }
 
     pub fn is_executed(&self, dot: Dot) -> bool {
-        self.executed.contains(&dot)
+        self.executed.contains(dot)
     }
 
     /// Number of committed-unexecuted nodes (diagnostics).
@@ -63,7 +69,7 @@ impl DepGraph {
     /// uncommitted dependency blocks it — callers index their retries by it
     /// instead of rescanning every pending command (§Perf iteration 6).
     pub fn ready_or_missing(&self, root: Dot) -> Result<Vec<Vec<Dot>>, Dot> {
-        if self.executed.contains(&root) {
+        if self.executed.contains(root) {
             return Ok(Vec::new());
         }
         if !self.nodes.contains_key(&root) {
@@ -73,7 +79,7 @@ impl DepGraph {
         let mut closure: HashSet<Dot> = HashSet::new();
         let mut stack = vec![root];
         while let Some(d) = stack.pop() {
-            if closure.contains(&d) || self.executed.contains(&d) {
+            if closure.contains(&d) || self.executed.contains(d) {
                 continue;
             }
             match self.nodes.get(&d) {
@@ -81,7 +87,7 @@ impl DepGraph {
                 Some(node) => {
                     closure.insert(d);
                     for &dep in &node.deps {
-                        if !closure.contains(&dep) && !self.executed.contains(&dep) {
+                        if !closure.contains(&dep) && !self.executed.contains(dep) {
                             stack.push(dep);
                         }
                     }

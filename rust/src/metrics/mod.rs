@@ -76,6 +76,10 @@ pub struct Counters {
     pub recoveries: u64,
     pub messages: u64,
     pub executed: u64,
+    /// Per-command `Info` records pruned by the GC exchange.
+    pub gc_pruned: u64,
+    /// Incremental stability-watermark advances observed by the executor.
+    pub wm_advances: u64,
 }
 
 impl Counters {
@@ -94,6 +98,8 @@ impl Counters {
         self.recoveries += o.recoveries;
         self.messages += o.messages;
         self.executed += o.executed;
+        self.gc_pruned += o.gc_pruned;
+        self.wm_advances += o.wm_advances;
     }
 }
 

@@ -17,7 +17,7 @@ use crate::protocol::tempo::msg::Msg;
 use crate::protocol::tempo::Tempo;
 use crate::protocol::{Action, Protocol};
 use crate::store::{KvStore, Response};
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};

@@ -5,7 +5,7 @@
 use crate::core::{ClientId, Command, Dot, Op, ProcessId, ShardId};
 use crate::protocol::tempo::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums};
 use crate::protocol::tempo::promises::PromiseSet;
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 pub struct Writer {
     pub buf: Vec<u8>,
@@ -284,6 +284,14 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             w.u8(14);
             w.dot(*dot);
         }
+        Msg::MGarbageCollect { executed } => {
+            w.u8(15);
+            w.u16(executed.len() as u16);
+            for &(p, wm) in executed {
+                w.u32(p.0);
+                w.u64(wm);
+            }
+        }
     }
     w.buf
 }
@@ -326,15 +334,27 @@ pub fn decode(buf: &[u8]) -> Result<Msg> {
         9 => Msg::MBump { dot: r.dot()?, ts: r.u64()? },
         10 => Msg::MStable { dot: r.dot()? },
         11 => Msg::MRec { dot: r.dot()?, bal: r.u64()? },
-        12 => Msg::MRecAck {
-            dot: r.dot()?,
-            ts: r.key_ts()?,
-            phase: PHASES[r.u8()? as usize],
-            abal: r.u64()?,
-            bal: r.u64()?,
-        },
+        12 => {
+            let dot = r.dot()?;
+            let ts = r.key_ts()?;
+            let pi = r.u8()? as usize;
+            // A malformed phase byte must be an error, not a panic.
+            let phase = match PHASES.get(pi) {
+                Some(p) => *p,
+                None => bail!("bad phase tag {pi}"),
+            };
+            Msg::MRecAck { dot, ts, phase, abal: r.u64()?, bal: r.u64()? }
+        }
         13 => Msg::MRecNAck { dot: r.dot()?, bal: r.u64()? },
         14 => Msg::MCommitRequest { dot: r.dot()? },
+        15 => {
+            let n = r.u16()? as usize;
+            let mut executed = Vec::with_capacity(n);
+            for _ in 0..n {
+                executed.push((ProcessId(r.u32()?), r.u64()?));
+            }
+            Msg::MGarbageCollect { executed }
+        }
         x => bail!("bad message tag {x}"),
     };
     Ok(msg)
@@ -384,14 +404,46 @@ mod tests {
         roundtrip(Msg::MRecAck { dot, ts, phase: Phase::RecoverP, abal: 0, bal: 8 });
         roundtrip(Msg::MRecNAck { dot, bal: 9 });
         roundtrip(Msg::MCommitRequest { dot });
+        roundtrip(Msg::MGarbageCollect {
+            executed: vec![(ProcessId(0), 41), (ProcessId(4), 7)],
+        });
+        roundtrip(Msg::MGarbageCollect { executed: vec![] });
     }
 
     #[test]
     fn truncated_frames_fail_cleanly() {
-        let bytes = encode(&Msg::MStable { dot: Dot::new(ProcessId(1), 2) });
-        for cut in 0..bytes.len() {
-            assert!(decode(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        for msg in [
+            Msg::MStable { dot: Dot::new(ProcessId(1), 2) },
+            Msg::MGarbageCollect { executed: vec![(ProcessId(3), 9)] },
+            Msg::MRecAck {
+                dot: Dot::new(ProcessId(1), 2),
+                ts: vec![(5, 6)],
+                phase: Phase::Commit,
+                abal: 1,
+                bal: 2,
+            },
+        ] {
+            let bytes = encode(&msg);
+            for cut in 0..bytes.len() {
+                assert!(decode(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+            }
         }
         assert!(decode(&[200]).is_err(), "unknown tag must fail");
+    }
+
+    #[test]
+    fn malformed_phase_byte_is_an_error_not_a_panic() {
+        let msg = Msg::MRecAck {
+            dot: Dot::new(ProcessId(1), 2),
+            ts: vec![],
+            phase: Phase::Commit,
+            abal: 1,
+            bal: 2,
+        };
+        let mut bytes = encode(&msg);
+        // Layout: tag(1) + dot(12) + ts len(2) + phase byte.
+        let phase_at = 1 + 12 + 2;
+        bytes[phase_at] = 250;
+        assert!(decode(&bytes).is_err(), "phase byte 250 must fail cleanly");
     }
 }

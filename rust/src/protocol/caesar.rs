@@ -12,11 +12,16 @@
 //! higher timestamp (the slow path). Commands execute in timestamp order
 //! once all their smaller-timestamp dependencies have executed.
 //!
+//! Broadcast, buffering (the wait condition reuses the shared stall buffer
+//! keyed by the *blocking* command), command info and executed-command GC
+//! come from [`crate::protocol::common`].
+//!
 //! Reproduction notes (DESIGN.md): ballots/recovery are not implemented
 //! (the paper never crashes baseline processes), and the retry round
 //! accepts unconditionally — both simplifications favour Caesar.
 
-use super::{Action, Protocol};
+use super::common::{wire, BaseProcess, CommandsInfo, GCTrack, GcProcess, Process};
+use super::{Action, Footprint, Protocol};
 use crate::core::{Command, Config, Dot, Key, ProcessId};
 use crate::metrics::Counters;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
@@ -32,18 +37,21 @@ pub enum Msg {
     MRetry { dot: Dot, cmd: Command, ts: u64 },
     MRetryAck { dot: Dot, ts: u64, deps: Vec<Dot> },
     MCommit { dot: Dot, cmd: Command, ts: u64, deps: Vec<Dot> },
+    /// Periodic GC exchange (`protocol::common::GCTrack`).
+    MGarbageCollect { executed: Vec<(ProcessId, u64)> },
 }
 
 impl Msg {
     pub fn wire_size(&self) -> u64 {
-        const HDR: u64 = 24;
+        use wire::{dots, proc_vals, HDR};
         match self {
             Msg::MPropose { cmd, .. } | Msg::MRetry { cmd, .. } => HDR + cmd.wire_size() + 8,
-            Msg::MCommit { cmd, deps, .. } => HDR + cmd.wire_size() + 8 + 12 * deps.len() as u64,
+            Msg::MCommit { cmd, deps, .. } => HDR + cmd.wire_size() + 8 + dots(deps.len()),
             Msg::MProposeAck { deps, .. } | Msg::MRetryAck { deps, .. } => {
-                HDR + 8 + 12 * deps.len() as u64
+                HDR + 8 + dots(deps.len())
             }
             Msg::MProposeNack { .. } => HDR + 16,
+            Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
         }
     }
 }
@@ -79,35 +87,33 @@ struct KeyEntry {
 }
 
 pub struct Caesar {
-    id: ProcessId,
-    config: Config,
+    bp: BaseProcess<Msg>,
     clock: u64,
-    info: HashMap<Dot, Info>,
+    info: CommandsInfo<Info>,
     /// Per-key: commands seen (proposals and commits) with their latest ts.
+    /// GC removes group-wide-executed commands from these tables.
     seen: HashMap<Key, BTreeMap<Dot, KeyEntry>>,
-    /// Replies blocked by Caesar's wait condition: blocking dot → queued
-    /// MPropose messages to re-handle when it commits.
-    blocked: HashMap<Dot, Vec<(ProcessId, Msg)>>,
     /// Committed-unexecuted commands ordered by ⟨ts, dot⟩.
     exec_queue: BTreeMap<Ts, ()>,
     /// Executor retry index: dependency → committed commands waiting on it
     /// (§Perf: avoids rescanning the whole queue per event).
     exec_blocked: HashMap<Dot, Vec<Dot>>,
-    crashed: bool,
+    gc: GCTrack,
+    ticks: u64,
     pub counters: Counters,
 }
 
 impl Caesar {
     fn fast_quorum(&self) -> Vec<ProcessId> {
-        let size = self.config.caesar_fast_quorum_size();
-        let k0 = self.id.0;
+        let size = self.bp.config.caesar_fast_quorum_size();
+        let k0 = self.bp.id.0;
         (0..size as u32)
-            .map(|d| ProcessId((k0 + d) % self.config.r as u32))
+            .map(|d| ProcessId((k0 + d) % self.bp.config.r as u32))
             .collect()
     }
 
     fn all(&self) -> Vec<ProcessId> {
-        (0..self.config.r as u32).map(ProcessId).collect()
+        (0..self.bp.config.r as u32).map(ProcessId).collect()
     }
 
     /// Conflicting commands seen on the keys of `cmd`.
@@ -129,43 +135,29 @@ impl Caesar {
         }
     }
 
-    fn broadcast(&mut self, to: &[ProcessId], msg: Msg, time: u64, out: &mut Vec<Action<Msg>>) {
-        let mut to_self = false;
-        for &p in to {
-            if p == self.id {
-                to_self = true;
-            } else {
-                out.push(Action::send(p, msg.clone()));
-            }
-        }
-        if to_self {
-            let actions = self.handle(self.id, msg, time);
-            out.extend(actions);
-        }
-    }
-
     fn handle_propose(
         &mut self,
         from: ProcessId,
         dot: Dot,
         cmd: Command,
         ts: u64,
-        time: u64,
+        _time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
+        if self.gc.was_executed(dot) {
+            return;
+        }
         self.clock = self.clock.max(ts);
         let conflicts = self.conflicts(&cmd);
         // Wait condition: a conflicting command with a *higher* proposed
         // timestamp is still pending → block the reply until it commits
-        // (§3.3; unbounded in §D).
+        // (§3.3; unbounded in §D). The reply is parked in the shared stall
+        // buffer keyed by the blocking command.
         if let Some(&(blocking, _)) = conflicts
             .iter()
             .find(|(d, e)| !e.committed && (e.ts, *d) > (ts, dot) && *d != dot)
         {
-            self.blocked
-                .entry(blocking)
-                .or_default()
-                .push((from, Msg::MPropose { dot, cmd, ts }));
+            self.stall(blocking, from, Msg::MPropose { dot, cmd, ts });
             return;
         }
         // NACK if a conflicting command *committed* with a higher timestamp:
@@ -191,7 +183,7 @@ impl Caesar {
     }
 
     fn try_decide(&mut self, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
-        let quorum = self.config.caesar_fast_quorum_size();
+        let quorum = self.bp.config.caesar_fast_quorum_size();
         let decision = {
             let info = match self.info.get_mut(&dot) {
                 Some(i) => i,
@@ -220,8 +212,7 @@ impl Caesar {
         match decision {
             Some((true, cmd, ts)) => {
                 self.counters.fast_path += 1;
-                let deps: Vec<Dot> =
-                    self.info[&dot].ack_deps.iter().copied().collect();
+                let deps: Vec<Dot> = self.info[&dot].ack_deps.iter().copied().collect();
                 let targets = self.all();
                 self.broadcast(&targets, Msg::MCommit { dot, cmd, ts, deps }, time, out);
             }
@@ -252,13 +243,16 @@ impl Caesar {
         out: &mut Vec<Action<Msg>>,
         time: u64,
     ) {
+        if self.gc.was_executed(dot) {
+            return;
+        }
         let already = self.info.get(&dot).map_or(false, |i| i.phase != Phase::Pending);
         if already {
             return;
         }
         self.clock = self.clock.max(ts);
         self.register(dot, &cmd, ts, true);
-        let info = self.info.entry(dot).or_insert_with(|| Info {
+        let info = self.info.ensure(dot, || Info {
             phase: Phase::Pending,
             cmd: cmd.clone(),
             ts,
@@ -278,12 +272,7 @@ impl Caesar {
         self.exec_queue.insert((ts, dot), ());
         out.push(Action::Committed { dot, fast: true });
         // Unblock replies waiting on this command (wait condition).
-        if let Some(waiting) = self.blocked.remove(&dot) {
-            for (from, msg) in waiting {
-                let actions = self.handle(from, msg, time);
-                out.extend(actions);
-            }
-        }
+        self.drain_stalled(dot, time, out);
         let mut queue = vec![dot];
         if let Some(waiters) = self.exec_blocked.remove(&dot) {
             queue.extend(waiters);
@@ -305,6 +294,10 @@ impl Caesar {
                 let ts = info.ts;
                 let mut blocker = None;
                 for d in &info.deps {
+                    // GC'd dependencies executed everywhere long ago.
+                    if self.gc.was_executed(*d) {
+                        continue;
+                    }
                     match self.info.get(d) {
                         Some(di) if di.phase == Phase::Executed => {}
                         // A dependency committed with a *higher* timestamp
@@ -329,6 +322,7 @@ impl Caesar {
             self.exec_queue.remove(&(ts, dot));
             let info = self.info.get_mut(&dot).unwrap();
             info.phase = Phase::Executed;
+            self.gc.record_executed(dot);
             self.counters.executed += 1;
             out.push(Action::Execute { dot, cmd: info.cmd.clone() });
             // Wake commands blocked on this one.
@@ -337,62 +331,59 @@ impl Caesar {
             }
         }
     }
+
 }
 
-impl Protocol for Caesar {
-    type Message = Msg;
+impl GcProcess for Caesar {
+    fn gc_track(&mut self) -> &mut GCTrack {
+        &mut self.gc
+    }
 
-    fn new(id: ProcessId, config: Config) -> Self {
-        assert_eq!(config.shards, 1, "Caesar baseline is full-replication only");
-        Caesar {
-            id,
-            config,
-            clock: 0,
-            info: HashMap::new(),
-            seen: HashMap::new(),
-            blocked: HashMap::new(),
-            exec_queue: BTreeMap::new(),
-            exec_blocked: HashMap::new(),
-            crashed: false,
-            counters: Counters::default(),
+    /// Prune info and conflict-table (`seen`) entries of commands every
+    /// replica executed: they executed everywhere before any future
+    /// conflicting proposal is acked, so they can never be needed as a
+    /// dependency or wait-condition blocker again.
+    fn prune_executed(&mut self) {
+        for (origin, lo, hi) in self.gc.safe_to_prune() {
+            for seq in lo..=hi {
+                let dot = Dot::new(origin, seq);
+                let keys: Vec<Key> =
+                    self.info.get(&dot).map(|i| i.cmd.keys.clone()).unwrap_or_default();
+                for k in keys {
+                    let empty = if let Some(m) = self.seen.get_mut(&k) {
+                        m.remove(&dot);
+                        m.is_empty()
+                    } else {
+                        false
+                    };
+                    if empty {
+                        self.seen.remove(&k);
+                    }
+                }
+                if self.info.prune(&dot) {
+                    self.counters.gc_pruned += 1;
+                }
+                self.exec_blocked.remove(&dot);
+                self.bp.drop_stalled(dot);
+            }
         }
     }
+}
 
-    fn name() -> &'static str {
-        "caesar"
+impl Process for Caesar {
+    type Msg = Msg;
+
+    fn base(&self) -> &BaseProcess<Msg> {
+        &self.bp
     }
 
-    fn submit(&mut self, dot: Dot, cmd: Command, time: u64) -> Vec<Action<Msg>> {
-        let mut out = Vec::new();
-        if self.crashed {
-            return out;
-        }
-        self.clock += 1;
-        let ts = self.clock;
-        self.info.insert(
-            dot,
-            Info {
-                phase: Phase::Pending,
-                cmd: cmd.clone(),
-                ts,
-                deps: Vec::new(),
-                coordinator: true,
-                acks: 0,
-                ack_deps: BTreeSet::new(),
-                nack_ts: 0,
-                nacked: false,
-                retrying: false,
-                decided: false,
-            },
-        );
-        let q = self.fast_quorum();
-        self.broadcast(&q, Msg::MPropose { dot, cmd, ts }, time, &mut out);
-        out
+    fn base_mut(&mut self) -> &mut BaseProcess<Msg> {
+        &mut self.bp
     }
 
-    fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
+    fn dispatch(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
-        if self.crashed {
+        if self.bp.crashed {
             return out;
         }
         match msg {
@@ -441,6 +432,9 @@ impl Protocol for Caesar {
                 }
             }
             Msg::MRetry { dot, cmd, ts } => {
+                if self.gc.was_executed(dot) {
+                    return out;
+                }
                 // Retry round: accept unconditionally (simplification, see
                 // module docs), reporting smaller-timestamp conflicts.
                 self.clock = self.clock.max(ts);
@@ -456,16 +450,81 @@ impl Protocol for Caesar {
             Msg::MCommit { dot, cmd, ts, deps } => {
                 self.handle_commit(dot, cmd, ts, deps, &mut out, time)
             }
+            Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
         }
         out
     }
+}
+
+impl Protocol for Caesar {
+    type Message = Msg;
+
+    fn new(id: ProcessId, config: Config) -> Self {
+        assert_eq!(config.shards, 1, "Caesar baseline is full-replication only");
+        let bp = BaseProcess::new(id, config);
+        let gc = GCTrack::new(id, bp.group_procs.clone());
+        Caesar {
+            bp,
+            clock: 0,
+            info: CommandsInfo::default(),
+            seen: HashMap::new(),
+            exec_queue: BTreeMap::new(),
+            exec_blocked: HashMap::new(),
+            gc,
+            ticks: 0,
+            counters: Counters::default(),
+        }
+    }
+
+    fn name() -> &'static str {
+        "caesar"
+    }
+
+    fn submit(&mut self, dot: Dot, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+        let mut out = Vec::new();
+        if self.bp.crashed {
+            return out;
+        }
+        self.clock += 1;
+        let ts = self.clock;
+        self.info.insert(
+            dot,
+            Info {
+                phase: Phase::Pending,
+                cmd: cmd.clone(),
+                ts,
+                deps: Vec::new(),
+                coordinator: true,
+                acks: 0,
+                ack_deps: BTreeSet::new(),
+                nack_ts: 0,
+                nacked: false,
+                retrying: false,
+                decided: false,
+            },
+        );
+        let q = self.fast_quorum();
+        self.broadcast(&q, Msg::MPropose { dot, cmd, ts }, time, &mut out);
+        out
+    }
+
+    fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
+        self.dispatch(from, msg, time)
+    }
 
     fn tick(&mut self, _time: u64) -> Vec<Action<Msg>> {
-        Vec::new()
+        let mut out = Vec::new();
+        if self.bp.crashed {
+            return out;
+        }
+        self.ticks += 1;
+        let ticks = self.ticks;
+        self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
+        out
     }
 
     fn crash(&mut self) {
-        self.crashed = true;
+        self.bp.crashed = true;
     }
 
     fn counters(&self) -> Counters {
@@ -474,5 +533,13 @@ impl Protocol for Caesar {
 
     fn msg_size(msg: &Msg) -> u64 {
         msg.wire_size()
+    }
+
+    fn footprint(&self) -> Footprint {
+        Footprint {
+            infos: self.info.len(),
+            keys: self.seen.len(),
+            stalled: self.bp.stalled_len() + self.exec_blocked.len(),
+        }
     }
 }

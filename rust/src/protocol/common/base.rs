@@ -1,0 +1,180 @@
+//! `BaseProcess` + the `Process` trait: the identity/group/config state,
+//! broadcast-with-immediate-self-delivery, and stalled-message buffering
+//! that every protocol previously hand-rolled (fantoch's `BaseProcess`
+//! factoring, adapted to this crate's side-effect-free state machines).
+
+use crate::core::{Config, Dot, ProcessId, ShardId};
+use crate::protocol::Action;
+use std::collections::HashMap;
+
+/// State shared by every protocol implementation. Generic over the wire
+/// message type `M` so the stalled-message buffer can live here too.
+#[derive(Clone, Debug)]
+pub struct BaseProcess<M> {
+    pub id: ProcessId,
+    pub group: ShardId,
+    /// All machines of our shard group (the paper's `I_p`).
+    pub group_procs: Vec<ProcessId>,
+    pub config: Config,
+    pub crashed: bool,
+    /// Messages whose precondition is not yet enabled, keyed by the command
+    /// (or, for Caesar's wait condition, the blocking command).
+    stalled: HashMap<Dot, Vec<(ProcessId, M)>>,
+}
+
+impl<M> BaseProcess<M> {
+    pub fn new(id: ProcessId, config: Config) -> Self {
+        let group = config.shard_of(id);
+        let group_procs = config.shard_processes(group);
+        BaseProcess { id, group, group_procs, config, crashed: false, stalled: HashMap::new() }
+    }
+
+    /// Shard-local process-id base (`group * r`).
+    pub fn group_base(&self) -> u32 {
+        self.group.0 * self.config.r as u32
+    }
+
+    pub fn stall(&mut self, dot: Dot, from: ProcessId, msg: M) {
+        self.stalled.entry(dot).or_default().push((from, msg));
+    }
+
+    /// Remove and return the messages stalled on `dot`.
+    pub fn take_stalled(&mut self, dot: Dot) -> Vec<(ProcessId, M)> {
+        self.stalled.remove(&dot).unwrap_or_default()
+    }
+
+    /// Drop any messages stalled on `dot` without re-handling them (GC).
+    pub fn drop_stalled(&mut self, dot: Dot) {
+        self.stalled.remove(&dot);
+    }
+
+    /// Number of commands with buffered messages (diagnostics).
+    pub fn stalled_len(&self) -> usize {
+        self.stalled.len()
+    }
+}
+
+/// Implemented by protocol state machines built on [`BaseProcess`].
+/// Provides the shared broadcast (self-addressed messages are delivered
+/// immediately, matching the paper) and the stalled-message machinery.
+pub trait Process: Sized {
+    type Msg: Clone;
+
+    fn base(&self) -> &BaseProcess<Self::Msg>;
+    fn base_mut(&mut self) -> &mut BaseProcess<Self::Msg>;
+
+    /// The single message-dispatch entry point (`Protocol::handle` routes
+    /// here; so do self-deliveries and stalled-message replays).
+    fn dispatch(
+        &mut self,
+        from: ProcessId,
+        msg: Self::Msg,
+        time: u64,
+    ) -> Vec<Action<Self::Msg>>;
+
+    /// Send `msg` to every process in `to` except ourselves; handle our own
+    /// copy inline.
+    fn broadcast(
+        &mut self,
+        to: &[ProcessId],
+        msg: Self::Msg,
+        time: u64,
+        out: &mut Vec<Action<Self::Msg>>,
+    ) {
+        let me = self.base().id;
+        let mut to_self = false;
+        for &p in to {
+            if p == me {
+                to_self = true;
+            } else {
+                out.push(Action::send(p, msg.clone()));
+            }
+        }
+        if to_self {
+            let actions = self.dispatch(me, msg, time);
+            out.extend(actions);
+        }
+    }
+
+    /// Buffer a message whose precondition is not yet enabled.
+    fn stall(&mut self, dot: Dot, from: ProcessId, msg: Self::Msg) {
+        self.base_mut().stall(dot, from, msg);
+    }
+
+    /// Re-deliver messages stalled on `dot` after its state advanced.
+    fn drain_stalled(&mut self, dot: Dot, time: u64, out: &mut Vec<Action<Self::Msg>>) {
+        for (from, msg) in self.base_mut().take_stalled(dot) {
+            let actions = self.dispatch(from, msg, time);
+            out.extend(actions);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Config;
+
+    #[derive(Clone, Debug, PartialEq)]
+    enum TestMsg {
+        Ping,
+        Pong,
+    }
+
+    struct Echo {
+        bp: BaseProcess<TestMsg>,
+        handled: Vec<(ProcessId, TestMsg)>,
+    }
+
+    impl Process for Echo {
+        type Msg = TestMsg;
+
+        fn base(&self) -> &BaseProcess<TestMsg> {
+            &self.bp
+        }
+
+        fn base_mut(&mut self) -> &mut BaseProcess<TestMsg> {
+            &mut self.bp
+        }
+
+        fn dispatch(&mut self, from: ProcessId, msg: TestMsg, _time: u64) -> Vec<Action<TestMsg>> {
+            self.handled.push((from, msg));
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn broadcast_delivers_self_copy_inline() {
+        let config = Config::new(3, 1);
+        let mut p = Echo { bp: BaseProcess::new(ProcessId(1), config), handled: Vec::new() };
+        let mut out = Vec::new();
+        let to: Vec<ProcessId> = (0..3).map(ProcessId).collect();
+        p.broadcast(&to, TestMsg::Ping, 0, &mut out);
+        // Two sends (P0, P2) and one inline self-delivery.
+        assert_eq!(out.len(), 2);
+        assert_eq!(p.handled, vec![(ProcessId(1), TestMsg::Ping)]);
+    }
+
+    #[test]
+    fn stalled_messages_replay_once() {
+        let config = Config::new(3, 1);
+        let mut p = Echo { bp: BaseProcess::new(ProcessId(0), config), handled: Vec::new() };
+        let dot = Dot::new(ProcessId(2), 4);
+        p.stall(dot, ProcessId(2), TestMsg::Pong);
+        assert_eq!(p.base().stalled_len(), 1);
+        let mut out = Vec::new();
+        p.drain_stalled(dot, 0, &mut out);
+        assert_eq!(p.handled, vec![(ProcessId(2), TestMsg::Pong)]);
+        p.drain_stalled(dot, 0, &mut out);
+        assert_eq!(p.handled.len(), 1, "stalled messages replay exactly once");
+    }
+
+    #[test]
+    fn base_process_derives_group_from_config() {
+        let config = Config::new(3, 1).with_shards(2);
+        let bp: BaseProcess<TestMsg> = BaseProcess::new(ProcessId(4), config);
+        assert_eq!(bp.group, ShardId(1));
+        assert_eq!(bp.group_base(), 3);
+        assert_eq!(bp.group_procs, vec![ProcessId(3), ProcessId(4), ProcessId(5)]);
+    }
+}

@@ -1,0 +1,222 @@
+//! Group-wide garbage collection of executed-command state (the fantoch
+//! `GCTrack` idea): each process records the commands it executed as
+//! per-origin contiguous frontiers, periodically exchanges those frontiers
+//! with its shard group (`MGarbageCollect`), and prunes per-command state
+//! once *every* group member has executed a command — at that point nobody
+//! can need its payload, timestamps, or dependencies again.
+//!
+//! Frontiers are contiguous (`SourceTracker` watermark), so sequence
+//! numbers are assumed 1-based (as `DotGen` mints them). Under partial
+//! replication a group executes only the subset of an origin's commands
+//! that touch its keys, so foreign-shard gaps stall that origin's frontier
+//! and GC degrades to a no-op — safe, but unbounded; per-group sequence
+//! spaces are a ROADMAP item.
+
+use super::base::Process;
+use super::stability::SourceTracker;
+use crate::core::{Dot, ProcessId};
+use crate::protocol::Action;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct GCTrack {
+    id: ProcessId,
+    group: Vec<ProcessId>,
+    /// Dots executed locally, per origin.
+    executed: HashMap<ProcessId, SourceTracker>,
+    /// Latest contiguous frontier reported by each group member, per origin.
+    reported: HashMap<ProcessId, HashMap<ProcessId, u64>>,
+    /// Per-origin sequence number up to which state was already pruned.
+    pruned: HashMap<ProcessId, u64>,
+}
+
+impl GCTrack {
+    pub fn new(id: ProcessId, group: Vec<ProcessId>) -> Self {
+        GCTrack {
+            id,
+            group,
+            executed: HashMap::new(),
+            reported: HashMap::new(),
+            pruned: HashMap::new(),
+        }
+    }
+
+    /// Record a locally executed command.
+    pub fn record_executed(&mut self, dot: Dot) {
+        self.executed.entry(dot.origin).or_default().add(dot.seq);
+    }
+
+    /// Was `dot` executed locally? Used to guard against resurrecting
+    /// pruned state from stale messages and promise re-broadcasts.
+    pub fn was_executed(&self, dot: Dot) -> bool {
+        self.executed.get(&dot.origin).map_or(false, |t| t.contains(dot.seq))
+    }
+
+    /// Our per-origin contiguous executed frontier — the `MGarbageCollect`
+    /// payload. Sorted for deterministic wire bytes.
+    pub fn snapshot(&self) -> Vec<(ProcessId, u64)> {
+        let mut v: Vec<(ProcessId, u64)> = self
+            .executed
+            .iter()
+            .map(|(&origin, t)| (origin, t.highest_contiguous()))
+            .filter(|&(_, wm)| wm > 0)
+            .collect();
+        v.sort_unstable_by_key(|&(origin, _)| origin);
+        v
+    }
+
+    /// Incorporate a member's frontier report (frontiers only advance).
+    pub fn update_from(&mut self, member: ProcessId, frontiers: &[(ProcessId, u64)]) {
+        let slot = self.reported.entry(member).or_default();
+        for &(origin, wm) in frontiers {
+            let e = slot.entry(origin).or_insert(0);
+            if wm > *e {
+                *e = wm;
+            }
+        }
+    }
+
+    /// Newly safe-to-prune ranges: per origin, the dots `lo..=hi` that
+    /// every group member (us included) has executed and that were not
+    /// pruned yet. Advances the internal pruned marker.
+    pub fn safe_to_prune(&mut self) -> Vec<(ProcessId, u64, u64)> {
+        let mut out = Vec::new();
+        for (&origin, tracker) in &self.executed {
+            let mut frontier = tracker.highest_contiguous();
+            for member in &self.group {
+                if *member == self.id {
+                    continue;
+                }
+                let reported = self
+                    .reported
+                    .get(member)
+                    .and_then(|m| m.get(&origin))
+                    .copied()
+                    .unwrap_or(0);
+                frontier = frontier.min(reported);
+            }
+            let done = self.pruned.entry(origin).or_insert(0);
+            if frontier > *done {
+                out.push((origin, *done + 1, frontier));
+                *done = frontier;
+            }
+        }
+        out.sort_unstable_by_key(|&(origin, ..)| origin);
+        out
+    }
+}
+
+/// Protocols that garbage-collect through [`GCTrack`]. Implementors
+/// provide the tracker and the protocol-specific pruning of newly safe
+/// dots; the periodic frontier exchange and the `MGarbageCollect` ingest
+/// live here once, shared by all protocol families.
+pub trait GcProcess: Process {
+    fn gc_track(&mut self) -> &mut GCTrack;
+
+    /// Drop protocol state for every dot [`GCTrack::safe_to_prune`]
+    /// reports (info records, stalled messages, conflict tables, ...).
+    fn prune_executed(&mut self);
+
+    /// Ingest a peer's executed-frontier report and prune.
+    fn handle_garbage_collect(&mut self, from: ProcessId, executed: &[(ProcessId, u64)]) {
+        self.gc_track().update_from(from, executed);
+        self.prune_executed();
+    }
+
+    /// One periodic GC step: on every `gc_interval_ticks`-th tick,
+    /// broadcast our executed frontier to the group (wrapped into the
+    /// protocol's message type by `wrap`) and prune locally.
+    fn gc_tick(
+        &mut self,
+        ticks: u64,
+        wrap: impl Fn(Vec<(ProcessId, u64)>) -> Self::Msg,
+        out: &mut Vec<Action<Self::Msg>>,
+    ) {
+        let every = self.base().config.gc_interval_ticks;
+        if every == 0 || ticks % every != 0 {
+            return;
+        }
+        let snap = self.gc_track().snapshot();
+        if snap.is_empty() {
+            return;
+        }
+        let me = self.base().id;
+        for p in self.base().group_procs.clone() {
+            if p != me {
+                out.push(Action::send(p, wrap(snap.clone())));
+            }
+        }
+        self.prune_executed();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dot(p: u32, s: u64) -> Dot {
+        Dot::new(ProcessId(p), s)
+    }
+
+    fn track() -> GCTrack {
+        GCTrack::new(ProcessId(0), (0..3).map(ProcessId).collect())
+    }
+
+    #[test]
+    fn nothing_safe_until_every_member_reports() {
+        let mut gc = track();
+        gc.record_executed(dot(5, 1));
+        gc.record_executed(dot(5, 2));
+        assert!(gc.safe_to_prune().is_empty(), "peers have not reported");
+        gc.update_from(ProcessId(1), &[(ProcessId(5), 2)]);
+        assert!(gc.safe_to_prune().is_empty(), "P2 has not reported");
+        gc.update_from(ProcessId(2), &[(ProcessId(5), 1)]);
+        assert_eq!(gc.safe_to_prune(), vec![(ProcessId(5), 1, 1)]);
+        // Only the delta comes back next time.
+        gc.update_from(ProcessId(2), &[(ProcessId(5), 2)]);
+        assert_eq!(gc.safe_to_prune(), vec![(ProcessId(5), 2, 2)]);
+        assert!(gc.safe_to_prune().is_empty(), "no double pruning");
+    }
+
+    #[test]
+    fn frontier_is_bounded_by_own_execution() {
+        let mut gc = track();
+        gc.record_executed(dot(5, 1));
+        gc.update_from(ProcessId(1), &[(ProcessId(5), 50)]);
+        gc.update_from(ProcessId(2), &[(ProcessId(5), 50)]);
+        assert_eq!(gc.safe_to_prune(), vec![(ProcessId(5), 1, 1)]);
+    }
+
+    #[test]
+    fn gaps_stall_the_frontier() {
+        let mut gc = track();
+        gc.record_executed(dot(5, 1));
+        gc.record_executed(dot(5, 3)); // gap at 2
+        gc.update_from(ProcessId(1), &[(ProcessId(5), 3)]);
+        gc.update_from(ProcessId(2), &[(ProcessId(5), 3)]);
+        assert_eq!(gc.safe_to_prune(), vec![(ProcessId(5), 1, 1)]);
+        gc.record_executed(dot(5, 2));
+        assert_eq!(gc.safe_to_prune(), vec![(ProcessId(5), 2, 3)]);
+    }
+
+    #[test]
+    fn was_executed_survives_pruning() {
+        let mut gc = track();
+        gc.record_executed(dot(5, 1));
+        gc.update_from(ProcessId(1), &[(ProcessId(5), 1)]);
+        gc.update_from(ProcessId(2), &[(ProcessId(5), 1)]);
+        let _ = gc.safe_to_prune();
+        assert!(gc.was_executed(dot(5, 1)));
+        assert!(!gc.was_executed(dot(5, 2)));
+    }
+
+    #[test]
+    fn snapshot_reports_contiguous_frontiers_sorted() {
+        let mut gc = track();
+        gc.record_executed(dot(7, 1));
+        gc.record_executed(dot(2, 1));
+        gc.record_executed(dot(2, 2));
+        gc.record_executed(dot(2, 9)); // gap: not part of the frontier
+        assert_eq!(gc.snapshot(), vec![(ProcessId(2), 2), (ProcessId(7), 1)]);
+    }
+}

@@ -1,0 +1,82 @@
+//! Generic per-command bookkeeping store. Every protocol keeps one `Info`
+//! record per [`Dot`]; this wrapper gives them a single creation point and
+//! a prune hook for [`super::gc::GCTrack`]-driven garbage collection —
+//! the seed kept these maps forever, so memory grew without bound.
+
+use crate::core::Dot;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct CommandsInfo<I> {
+    info: HashMap<Dot, I>,
+}
+
+impl<I> Default for CommandsInfo<I> {
+    fn default() -> Self {
+        CommandsInfo { info: HashMap::new() }
+    }
+}
+
+impl<I> CommandsInfo<I> {
+    pub fn get(&self, dot: &Dot) -> Option<&I> {
+        self.info.get(dot)
+    }
+
+    pub fn get_mut(&mut self, dot: &Dot) -> Option<&mut I> {
+        self.info.get_mut(dot)
+    }
+
+    pub fn contains(&self, dot: &Dot) -> bool {
+        self.info.contains_key(dot)
+    }
+
+    /// The record for `dot`, created with `new` on first touch.
+    pub fn ensure(&mut self, dot: Dot, new: impl FnOnce() -> I) -> &mut I {
+        self.info.entry(dot).or_insert_with(new)
+    }
+
+    /// Insert (or replace) the record for `dot`.
+    pub fn insert(&mut self, dot: Dot, info: I) {
+        self.info.insert(dot, info);
+    }
+
+    /// Drop the record for `dot`; true if one existed.
+    pub fn prune(&mut self, dot: &Dot) -> bool {
+        self.info.remove(dot).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.info.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.info.is_empty()
+    }
+}
+
+impl<I> std::ops::Index<&Dot> for CommandsInfo<I> {
+    type Output = I;
+
+    fn index(&self, dot: &Dot) -> &I {
+        self.info.get(dot).expect("no info for command")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ProcessId;
+
+    #[test]
+    fn ensure_creates_once_and_prune_removes() {
+        let mut m: CommandsInfo<u32> = CommandsInfo::default();
+        let d = Dot::new(ProcessId(0), 1);
+        *m.ensure(d, || 7) += 1;
+        *m.ensure(d, || 100) += 1; // existing record, ctor not called
+        assert_eq!(m[&d], 9);
+        assert_eq!(m.len(), 1);
+        assert!(m.prune(&d));
+        assert!(!m.prune(&d));
+        assert!(m.get(&d).is_none() && m.is_empty());
+    }
+}

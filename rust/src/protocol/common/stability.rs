@@ -1,0 +1,288 @@
+//! The shared stability kernel (paper §3.2, Theorem 1): contiguous
+//! per-source frontiers and the majority order-statistic watermark.
+//!
+//! Three consumers share this module so the computation exists exactly
+//! once:
+//! - `protocol::tempo::promises::PromiseStore` tracks promise frontiers per
+//!   source process and maintains the majority watermark *incrementally*
+//!   through [`QuorumFrontier`] (updated on add/commit deltas instead of
+//!   re-scanning every tracker on each dirty pass);
+//! - `protocol::common::gc::GCTrack` tracks executed-command frontiers per
+//!   origin with the same [`SourceTracker`];
+//! - `runtime::stability` (the batched kernel reference) computes the same
+//!   order statistic over a promise bitmap via [`majority_watermark`].
+
+use crate::core::{Dot, ProcessId};
+use std::collections::{BTreeSet, HashMap};
+
+/// Set of known values (promises, executed sequence numbers...) from a
+/// single source, tracked as a contiguous watermark plus a sparse set of
+/// out-of-order values — `highest_contiguous` is then O(1).
+#[derive(Clone, Debug, Default)]
+pub struct SourceTracker {
+    /// All values `1..=watermark` are present.
+    watermark: u64,
+    /// Values above the watermark, not yet contiguous.
+    above: BTreeSet<u64>,
+}
+
+impl SourceTracker {
+    /// `highest_contiguous_promise(j)` of Algorithm 2.
+    #[inline]
+    pub fn highest_contiguous(&self) -> u64 {
+        self.watermark
+    }
+
+    /// Is `u` present (1-based)?
+    #[inline]
+    pub fn contains(&self, u: u64) -> bool {
+        u >= 1 && (u <= self.watermark || self.above.contains(&u))
+    }
+
+    /// Add a single value.
+    pub fn add(&mut self, u: u64) {
+        if u <= self.watermark {
+            return;
+        }
+        if u == self.watermark + 1 {
+            self.watermark = u;
+            self.drain_contiguous();
+        } else {
+            self.above.insert(u);
+        }
+    }
+
+    /// Add the inclusive range `lo..=hi` (no-op if `lo > hi`).
+    pub fn add_range(&mut self, lo: u64, hi: u64) {
+        if lo > hi {
+            return;
+        }
+        if lo <= self.watermark + 1 {
+            if hi > self.watermark {
+                self.watermark = hi;
+                self.drain_contiguous();
+            }
+        } else {
+            self.above.extend(lo..=hi);
+        }
+    }
+
+    fn drain_contiguous(&mut self) {
+        while self.above.remove(&(self.watermark + 1)) {
+            self.watermark += 1;
+        }
+        // Values at or below the watermark are redundant; drop them.
+        if let Some(&min) = self.above.iter().next() {
+            if min <= self.watermark {
+                self.above = self.above.split_off(&(self.watermark + 1));
+            }
+        }
+    }
+
+    /// Number of values buffered out of order (diagnostics).
+    pub fn pending(&self) -> usize {
+        self.above.len()
+    }
+}
+
+/// Largest `s` such that at least `majority` of `frontiers` are `>= s`:
+/// the `majority`-th largest frontier (Algorithm 2 line 50, generalized to
+/// an arbitrary majority size). Sorts `frontiers` in place.
+pub fn majority_watermark(frontiers: &mut [u64], majority: usize) -> u64 {
+    debug_assert!(majority >= 1 && majority <= frontiers.len());
+    frontiers.sort_unstable();
+    frontiers[frontiers.len() - majority]
+}
+
+/// Incrementally maintained majority watermark over a fixed source set.
+///
+/// The seed recomputed every key's stable watermark by collecting and
+/// sorting all per-source frontiers on each dirty pass; here the watermark
+/// is updated only when a source's frontier actually advances (`update` is
+/// O(r log r) with r <= 9 in practice and allocation-free after
+/// construction) and `watermark` is an O(1) read.
+#[derive(Clone, Debug, Default)]
+pub struct QuorumFrontier {
+    sources: Vec<(ProcessId, u64)>,
+    majority: usize,
+    watermark: u64,
+    scratch: Vec<u64>,
+}
+
+impl QuorumFrontier {
+    pub fn new(processes: &[ProcessId], majority: usize) -> Self {
+        assert!(majority >= 1 && majority <= processes.len());
+        QuorumFrontier {
+            sources: processes.iter().map(|&p| (p, 0)).collect(),
+            majority,
+            watermark: 0,
+            scratch: Vec::with_capacity(processes.len()),
+        }
+    }
+
+    /// An unconfigured frontier ignores updates and reports watermark 0.
+    pub fn is_configured(&self) -> bool {
+        !self.sources.is_empty()
+    }
+
+    /// Record that `source`'s contiguous frontier advanced to `frontier`.
+    /// Returns true when the majority watermark advanced.
+    pub fn update(&mut self, source: ProcessId, frontier: u64) -> bool {
+        let entry = match self.sources.iter_mut().find(|(p, _)| *p == source) {
+            Some(e) => e,
+            None => return false, // unknown source (or unconfigured)
+        };
+        if frontier <= entry.1 {
+            return false;
+        }
+        entry.1 = frontier;
+        self.scratch.clear();
+        self.scratch.extend(self.sources.iter().map(|&(_, v)| v));
+        let w = majority_watermark(&mut self.scratch, self.majority);
+        if w > self.watermark {
+            self.watermark = w;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The current majority watermark, O(1).
+    #[inline]
+    pub fn watermark(&self) -> u64 {
+        self.watermark
+    }
+}
+
+/// Set of executed [`Dot`]s, stored per-origin as a contiguous frontier
+/// plus sparse overflow — bounded in steady state, unlike a `HashSet` of
+/// every dot ever executed. Tolerates 0-based sequence numbers (tests use
+/// them) by offsetting into the 1-based [`SourceTracker`] space.
+#[derive(Clone, Debug, Default)]
+pub struct ExecutedSet {
+    per_origin: HashMap<ProcessId, SourceTracker>,
+}
+
+impl ExecutedSet {
+    pub fn insert(&mut self, dot: Dot) {
+        self.per_origin.entry(dot.origin).or_default().add(dot.seq.saturating_add(1));
+    }
+
+    pub fn contains(&self, dot: Dot) -> bool {
+        self.per_origin
+            .get(&dot.origin)
+            .map_or(false, |t| t.contains(dot.seq.saturating_add(1)))
+    }
+
+    /// Out-of-order entries buffered across all origins (diagnostics).
+    pub fn pending(&self) -> usize {
+        self.per_origin.values().map(|t| t.pending()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn source_tracker_contiguity() {
+        let mut t = SourceTracker::default();
+        t.add(1);
+        t.add(2);
+        assert_eq!(t.highest_contiguous(), 2);
+        t.add(5); // gap at 3,4
+        assert_eq!(t.highest_contiguous(), 2);
+        assert_eq!(t.pending(), 1);
+        assert!(t.contains(5) && !t.contains(3));
+        t.add_range(3, 4);
+        assert_eq!(t.highest_contiguous(), 5);
+        assert_eq!(t.pending(), 0);
+    }
+
+    #[test]
+    fn source_tracker_overlapping_ranges_and_duplicates() {
+        let mut t = SourceTracker::default();
+        t.add_range(1, 10);
+        t.add_range(5, 8); // fully contained
+        t.add(3); // duplicate
+        assert_eq!(t.highest_contiguous(), 10);
+        t.add_range(15, 20);
+        t.add_range(8, 14); // bridges the gap, overlapping both sides
+        assert_eq!(t.highest_contiguous(), 20);
+        t.add_range(7, 3); // inverted range is a no-op
+        assert_eq!(t.highest_contiguous(), 20);
+    }
+
+    #[test]
+    fn source_tracker_random_insertion_order_converges() {
+        let mut r = Rng::new(42);
+        for _ in 0..50 {
+            let mut vals: Vec<u64> = (1..=200).collect();
+            r.shuffle(&mut vals);
+            let mut t = SourceTracker::default();
+            for v in vals {
+                t.add(v);
+            }
+            assert_eq!(t.highest_contiguous(), 200);
+            assert_eq!(t.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn majority_watermark_is_order_statistic() {
+        // Figure 2: frontiers {2, 3, 2} → stable 2 at majority 2.
+        assert_eq!(majority_watermark(&mut [2, 3, 2], 2), 2);
+        assert_eq!(majority_watermark(&mut [2, 3, 2], 3), 2);
+        assert_eq!(majority_watermark(&mut [2, 3, 2], 1), 3);
+        assert_eq!(majority_watermark(&mut [0, 5, 0], 2), 0);
+    }
+
+    #[test]
+    fn quorum_frontier_tracks_scan() {
+        let procs: Vec<ProcessId> = (0..5).map(ProcessId).collect();
+        let mut q = QuorumFrontier::new(&procs, 3);
+        let mut frontiers = [0u64; 5];
+        let mut rng = Rng::new(7);
+        let mut last = 0;
+        for _ in 0..500 {
+            let i = rng.gen_range(5) as usize;
+            frontiers[i] += rng.gen_range(4);
+            q.update(procs[i], frontiers[i]);
+            let mut scan = frontiers;
+            let expect = majority_watermark(&mut scan, 3);
+            assert_eq!(q.watermark(), expect);
+            assert!(q.watermark() >= last, "watermark must be monotone");
+            last = q.watermark();
+        }
+    }
+
+    #[test]
+    fn quorum_frontier_ignores_unknown_sources_and_stale_updates() {
+        let procs: Vec<ProcessId> = (0..3).map(ProcessId).collect();
+        let mut q = QuorumFrontier::new(&procs, 2);
+        assert!(!q.update(ProcessId(9), 100));
+        assert_eq!(q.watermark(), 0);
+        q.update(ProcessId(0), 5);
+        q.update(ProcessId(1), 3);
+        assert_eq!(q.watermark(), 3);
+        assert!(!q.update(ProcessId(1), 2), "stale frontier must be ignored");
+        assert_eq!(q.watermark(), 3);
+        let unconfigured = QuorumFrontier::default();
+        assert!(!unconfigured.is_configured());
+        assert_eq!(unconfigured.watermark(), 0);
+    }
+
+    #[test]
+    fn executed_set_handles_zero_based_sequences() {
+        let mut s = ExecutedSet::default();
+        let d0 = Dot::new(ProcessId(1), 0);
+        let d1 = Dot::new(ProcessId(1), 1);
+        assert!(!s.contains(d0));
+        s.insert(d0);
+        assert!(s.contains(d0) && !s.contains(d1));
+        s.insert(d1);
+        assert!(s.contains(d1));
+        assert_eq!(s.pending(), 0);
+    }
+}

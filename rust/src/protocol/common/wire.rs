@@ -1,0 +1,37 @@
+//! Shared wire-size accounting for the simulator's CPU/NIC resource model.
+//! Every protocol's `Msg::wire_size` previously restated these constants;
+//! they live here once so the resource model stays consistent across
+//! protocols (and new message kinds — e.g. `MGarbageCollect` — size
+//! themselves the same way everywhere).
+
+/// Fixed per-message framing overhead: tag, dot, routing metadata.
+pub const HDR: u64 = 24;
+
+/// Wire size of `n` dot references (origin u32 + seq u64).
+pub fn dots(n: usize) -> u64 {
+    12 * n as u64
+}
+
+/// Wire size of `n` (key, u64) pairs (per-key timestamps).
+pub fn key_vals(n: usize) -> u64 {
+    16 * n as u64
+}
+
+/// Wire size of `n` (process, u64) pairs (GC frontiers, ack vectors).
+pub fn proc_vals(n: usize) -> u64 {
+    12 * n as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_scale_linearly() {
+        assert_eq!(dots(0), 0);
+        assert_eq!(dots(3), 36);
+        assert_eq!(key_vals(2), 32);
+        assert_eq!(proc_vals(5), 60);
+        assert!(HDR > 0);
+    }
+}

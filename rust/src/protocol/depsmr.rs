@@ -12,6 +12,10 @@
 //! mechanism whose unbounded chains produce the tail latencies the paper
 //! measures.
 //!
+//! Broadcast, stalled-message buffering, command info and executed-command
+//! GC come from [`crate::protocol::common`] (shared with Tempo, Caesar and
+//! FPaxos).
+//!
 //! Reproduction notes (see DESIGN.md): the slow path uses the Flexible
 //! Paxos `f+1` quorum for all variants (favourable to EPaxos); baseline
 //! recovery is not implemented (the paper's experiments never crash
@@ -20,7 +24,8 @@
 //! inquiry protocol — faithful for transactions whose conflicts are
 //! per-key, which YCSB+T's are.
 
-use super::{Action, Protocol};
+use super::common::{wire, BaseProcess, CommandsInfo, GCTrack, GcProcess, Process};
+use super::{Action, Footprint, Protocol};
 use crate::core::{key_to_shard, Command, Config, Dot, Key, Op, ProcessId, ShardId};
 use crate::executor::DepGraph;
 use crate::metrics::Counters;
@@ -69,17 +74,20 @@ pub enum Msg {
     /// Janus* cross-group execution barrier: this group is ready to
     /// execute `dot` (its local dependency closure is committed).
     MReady { dot: Dot },
+    /// Periodic GC exchange (`protocol::common::GCTrack`).
+    MGarbageCollect { executed: Vec<(ProcessId, u64)> },
 }
 
 impl Msg {
     pub fn wire_size(&self) -> u64 {
-        const HDR: u64 = 24;
+        use wire::{dots, proc_vals, HDR};
         match self {
             Msg::MSubmit { cmd, .. } | Msg::MPayload { cmd, .. } => HDR + cmd.wire_size(),
-            Msg::MPropose { cmd, deps, .. } => HDR + cmd.wire_size() + 12 * deps.len() as u64,
+            Msg::MPropose { cmd, deps, .. } => HDR + cmd.wire_size() + dots(deps.len()),
             Msg::MProposeAck { deps, .. }
             | Msg::MCommit { deps, .. }
-            | Msg::MConsensus { deps, .. } => HDR + 12 * deps.len() as u64,
+            | Msg::MConsensus { deps, .. } => HDR + dots(deps.len()),
+            Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
             _ => HDR + 16,
         }
     }
@@ -134,21 +142,18 @@ impl Info {
 
 /// Shared state machine for the dependency-based protocols.
 pub struct DepCore {
-    id: ProcessId,
-    group: ShardId,
-    group_procs: Vec<ProcessId>,
-    config: Config,
+    bp: BaseProcess<Msg>,
     variant: Variant,
     conflicts: HashMap<Key, KeyDeps>,
-    info: HashMap<Dot, Info>,
+    info: CommandsInfo<Info>,
     graph: DepGraph,
     /// Committed-unexecuted commands (roots for the executor scan).
     pending_roots: BTreeSet<Dot>,
     /// Executor retry index: uncommitted/unexecuted dependency → roots
     /// whose closure is blocked on it.
     blocked_on: HashMap<Dot, Vec<Dot>>,
-    stalled: HashMap<Dot, Vec<(ProcessId, Msg)>>,
-    crashed: bool,
+    gc: GCTrack,
+    ticks: u64,
     pub counters: Counters,
 }
 
@@ -157,21 +162,18 @@ impl DepCore {
         if variant != Variant::Janus {
             assert_eq!(config.shards, 1, "EPaxos/Atlas are full-replication baselines");
         }
-        let group = config.shard_of(id);
-        let group_procs = config.shard_processes(group);
+        let bp = BaseProcess::new(id, config);
+        let gc = GCTrack::new(id, bp.group_procs.clone());
         DepCore {
-            id,
-            group,
-            group_procs,
-            config,
+            bp,
             variant,
             conflicts: HashMap::new(),
-            info: HashMap::new(),
+            info: CommandsInfo::default(),
             graph: DepGraph::default(),
             pending_roots: BTreeSet::new(),
             blocked_on: HashMap::new(),
-            stalled: HashMap::new(),
-            crashed: false,
+            gc,
+            ticks: 0,
             counters: Counters::default(),
         }
     }
@@ -180,7 +182,7 @@ impl DepCore {
         cmd.keys
             .iter()
             .copied()
-            .filter(move |&k| key_to_shard(k, self.config.shards) == self.group)
+            .filter(move |&k| key_to_shard(k, self.bp.config.shards) == self.bp.group)
     }
 
     fn is_write(cmd: &Command) -> bool {
@@ -217,69 +219,43 @@ impl DepCore {
     fn fast_quorum_of(&self, info: &Info) -> Option<Vec<ProcessId>> {
         info.quorums
             .iter()
-            .find(|(g, _)| *g == self.group)
+            .find(|(g, _)| *g == self.bp.group)
             .map(|(_, q)| q.clone())
     }
 
     fn all_processes_of(&self, cmd: &Command) -> Vec<ProcessId> {
         let mut out = Vec::new();
-        for g in cmd.shards(self.config.shards) {
-            out.extend(self.config.shard_processes(g));
+        for g in cmd.shards(self.bp.config.shards) {
+            out.extend(self.bp.config.shard_processes(g));
         }
         out
-    }
-
-    fn broadcast(&mut self, to: &[ProcessId], msg: Msg, time: u64, out: &mut Vec<Action<Msg>>) {
-        let mut to_self = false;
-        for &p in to {
-            if p == self.id {
-                to_self = true;
-            } else {
-                out.push(Action::send(p, msg.clone()));
-            }
-        }
-        if to_self {
-            let actions = self.handle_msg(self.id, msg, time);
-            out.extend(actions);
-        }
-    }
-
-    fn stall(&mut self, dot: Dot, from: ProcessId, msg: Msg) {
-        self.stalled.entry(dot).or_default().push((from, msg));
-    }
-
-    fn drain_stalled(&mut self, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
-        if let Some(msgs) = self.stalled.remove(&dot) {
-            for (from, msg) in msgs {
-                let actions = self.handle_msg(from, msg, time);
-                out.extend(actions);
-            }
-        }
     }
 
     // -- commit protocol ---------------------------------------------------
 
     pub fn submit(&mut self, dot: Dot, cmd: Command, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
-        if self.crashed {
+        if self.bp.crashed {
             return out;
         }
-        let groups = cmd.shards(self.config.shards);
+        let groups = cmd.shards(self.bp.config.shards);
         let quorums: Quorums = groups
             .iter()
             .map(|&g| {
-                let coord = self.config.closest_in_shard(self.id, g);
-                let base = g.0 * self.config.r as u32;
+                let coord = self.bp.config.closest_in_shard(self.bp.id, g);
+                let base = g.0 * self.bp.config.r as u32;
                 let k0 = coord.0 - base;
-                let size = self.variant.fast_quorum_size(&self.config) as u32;
+                let size = self.variant.fast_quorum_size(&self.bp.config) as u32;
                 let q = (0..size)
-                    .map(|d| ProcessId(base + (k0 + d) % self.config.r as u32))
+                    .map(|d| ProcessId(base + (k0 + d) % self.bp.config.r as u32))
                     .collect();
                 (g, q)
             })
             .collect();
-        let coords: Vec<ProcessId> =
-            groups.iter().map(|&g| self.config.closest_in_shard(self.id, g)).collect();
+        let coords: Vec<ProcessId> = groups
+            .iter()
+            .map(|&g| self.bp.config.closest_in_shard(self.bp.id, g))
+            .collect();
         self.broadcast(&coords, Msg::MSubmit { dot, cmd, quorums }, time, &mut out);
         out
     }
@@ -292,13 +268,15 @@ impl DepCore {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
-        if self.info.get(&dot).map_or(false, |i| i.phase != Phase::Start) {
+        if self.gc.was_executed(dot)
+            || self.info.get(&dot).map_or(false, |i| i.phase != Phase::Start)
+        {
             return;
         }
         let deps = self.conflicts_and_register(dot, &cmd);
-        let me = self.id;
+        let me = self.bp.id;
         {
-            let info = self.info.entry(dot).or_insert_with(Info::new);
+            let info = self.info.ensure(dot, Info::new);
             info.phase = Phase::Propose;
             info.cmd = Some(cmd.clone());
             info.quorums = quorums.clone();
@@ -320,7 +298,7 @@ impl DepCore {
                 ));
             }
         }
-        for p in self.group_procs.clone() {
+        for p in self.bp.group_procs.clone() {
             if !fq.contains(&p) {
                 out.push(Action::send(
                     p,
@@ -332,6 +310,7 @@ impl DepCore {
         self.try_decide(dot, time, out);
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn handle_propose(
         &mut self,
         from: ProcessId,
@@ -342,7 +321,9 @@ impl DepCore {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
-        if self.info.get(&dot).map_or(false, |i| i.phase != Phase::Start) {
+        if self.gc.was_executed(dot)
+            || self.info.get(&dot).map_or(false, |i| i.phase != Phase::Start)
+        {
             return;
         }
         let mut deps = self.conflicts_and_register(dot, &cmd);
@@ -351,7 +332,7 @@ impl DepCore {
         deps.dedup();
         deps.retain(|&d| d != dot);
         {
-            let info = self.info.entry(dot).or_insert_with(Info::new);
+            let info = self.info.ensure(dot, Info::new);
             info.phase = Phase::Propose;
             info.cmd = Some(cmd);
             info.quorums = quorums;
@@ -387,8 +368,9 @@ impl DepCore {
 
     /// Fast-path check once the whole fast quorum answered.
     fn try_decide(&mut self, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
-        let f = self.config.f;
+        let f = self.bp.config.f;
         let variant = self.variant;
+        let group = self.bp.group;
         let decision = {
             let info = match self.info.get_mut(&dot) {
                 Some(i) => i,
@@ -400,7 +382,7 @@ impl DepCore {
             let fq_len = info
                 .quorums
                 .iter()
-                .find(|(g, _)| *g == self.group)
+                .find(|(g, _)| *g == group)
                 .map(|(_, q)| q.len())
                 .unwrap_or(usize::MAX);
             if info.acks.len() < fq_len {
@@ -428,16 +410,15 @@ impl DepCore {
             (union, fast, info.cmd.clone().unwrap())
         };
         let (deps, fast, cmd) = decision;
-        let group = self.group;
         if fast {
             self.counters.fast_path += 1;
             let targets = self.all_processes_of(&cmd);
             self.broadcast(&targets, Msg::MCommit { dot, group, deps }, time, out);
         } else {
             self.counters.slow_path += 1;
-            let b = (self.id.0 - group.0 * self.config.r as u32) as u64 + 1;
+            let b = (self.bp.id.0 - self.bp.group_base()) as u64 + 1;
             let msg = Msg::MConsensus { dot, deps, bal: b };
-            self.broadcast(&self.group_procs.clone(), msg, time, out);
+            self.broadcast(&self.bp.group_procs.clone(), msg, time, out);
         }
     }
 
@@ -450,9 +431,12 @@ impl DepCore {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
+        if self.gc.was_executed(dot) {
+            return;
+        }
         match self.info.get(&dot).map_or(Phase::Start, |i| i.phase) {
             Phase::Start => {
-                self.info.entry(dot).or_insert_with(Info::new);
+                self.info.ensure(dot, Info::new);
                 self.stall(dot, from, Msg::MCommit { dot, group, deps });
                 return;
             }
@@ -478,7 +462,7 @@ impl DepCore {
             if info.phase.is_committed_like() || info.cmd.is_none() {
                 return;
             }
-            let groups = info.cmd.as_ref().unwrap().shards(self.config.shards);
+            let groups = info.cmd.as_ref().unwrap().shards(self.bp.config.shards);
             if info.group_deps.len() < groups.len() {
                 return;
             }
@@ -488,7 +472,7 @@ impl DepCore {
             // MReady barrier.
             info.group_deps
                 .iter()
-                .find(|(g, _)| *g == self.group)
+                .find(|(g, _)| *g == self.bp.group)
                 .map(|(_, d)| d.clone())
                 .unwrap_or_default()
         };
@@ -519,7 +503,10 @@ impl DepCore {
         _time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
-        let info = self.info.entry(dot).or_insert_with(Info::new);
+        if self.gc.was_executed(dot) {
+            return;
+        }
+        let info = self.info.ensure(dot, Info::new);
         if info.bal > bal {
             return;
         }
@@ -536,7 +523,7 @@ impl DepCore {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
-        let slow_quorum = self.config.slow_quorum_size();
+        let slow_quorum = self.bp.config.slow_quorum_size();
         let ready = {
             let info = match self.info.get_mut(&dot) {
                 Some(i) => i,
@@ -559,7 +546,7 @@ impl DepCore {
             Some(c) => c,
             None => return,
         };
-        let group = self.group;
+        let group = self.bp.group;
         let targets = self.all_processes_of(&cmd);
         self.broadcast(&targets, Msg::MCommit { dot, group, deps }, time, out);
     }
@@ -596,6 +583,7 @@ impl DepCore {
                         continue;
                     }
                     self.graph.mark_executed(m);
+                    self.gc.record_executed(m);
                     let info = self.info.get_mut(&m).unwrap();
                     info.phase = Phase::Execute;
                     let cmd = info.cmd.clone().unwrap();
@@ -618,18 +606,18 @@ impl DepCore {
             let info = &self.info[&dot];
             (info.cmd.clone().unwrap(), info.announced)
         };
-        let groups = cmd.shards(self.config.shards);
+        let groups = cmd.shards(self.bp.config.shards);
         if groups.len() <= 1 {
             return true;
         }
-        let me = self.id;
-        let own = self.group;
+        let me = self.bp.id;
+        let own = self.bp.group;
         if !announced {
             let info = self.info.get_mut(&dot).unwrap();
             info.announced = true;
             info.ready_acks.insert(own);
             for p in self.all_processes_of(&cmd) {
-                if p != me && self.config.shard_of(p) != own {
+                if p != me && self.bp.config.shard_of(p) != own {
                     out.push(Action::send(p, Msg::MReady { dot }));
                 }
             }
@@ -639,14 +627,96 @@ impl DepCore {
     }
 
     fn handle_ready(&mut self, from: ProcessId, dot: Dot, out: &mut Vec<Action<Msg>>) {
-        let group = self.config.shard_of(from);
-        self.info.entry(dot).or_insert_with(Info::new).ready_acks.insert(group);
+        if self.gc.was_executed(dot) {
+            return;
+        }
+        let group = self.bp.config.shard_of(from);
+        self.info.ensure(dot, Info::new).ready_acks.insert(group);
         self.try_execute_roots(vec![dot], out);
     }
 
-    pub fn handle_msg(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
+    /// Periodic handler: the GC frontier exchange (common::GcProcess).
+    pub fn tick(&mut self, _time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
-        if self.crashed {
+        if self.bp.crashed {
+            return out;
+        }
+        self.ticks += 1;
+        let ticks = self.ticks;
+        self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
+        out
+    }
+
+    pub fn crash(&mut self) {
+        self.bp.crashed = true;
+    }
+
+    pub fn footprint(&self) -> Footprint {
+        Footprint {
+            infos: self.info.len(),
+            keys: self.conflicts.len(),
+            stalled: self.bp.stalled_len() + self.blocked_on.len(),
+        }
+    }
+}
+
+impl GcProcess for DepCore {
+    fn gc_track(&mut self) -> &mut GCTrack {
+        &mut self.gc
+    }
+
+    fn prune_executed(&mut self) {
+        for (origin, lo, hi) in self.gc.safe_to_prune() {
+            for seq in lo..=hi {
+                let dot = Dot::new(origin, seq);
+                // Scrub the conflict tables: a group-wide-executed command
+                // executed everywhere before any future conflicting command
+                // commits, so it need not appear as a dependency again (the
+                // graph remembers it as executed in bounded space).
+                let keys: Vec<Key> = self
+                    .info
+                    .get(&dot)
+                    .and_then(|i| i.cmd.as_ref())
+                    .map(|c| self.local_keys(c).collect())
+                    .unwrap_or_default();
+                for k in keys {
+                    let remove = if let Some(slot) = self.conflicts.get_mut(&k) {
+                        if slot.last_write == Some(dot) {
+                            slot.last_write = None;
+                        }
+                        slot.reads_since_write.retain(|&d| d != dot);
+                        slot.last_write.is_none() && slot.reads_since_write.is_empty()
+                    } else {
+                        false
+                    };
+                    if remove {
+                        self.conflicts.remove(&k);
+                    }
+                }
+                if self.info.prune(&dot) {
+                    self.counters.gc_pruned += 1;
+                }
+                self.blocked_on.remove(&dot);
+                self.bp.drop_stalled(dot);
+            }
+        }
+    }
+}
+
+impl Process for DepCore {
+    type Msg = Msg;
+
+    fn base(&self) -> &BaseProcess<Msg> {
+        &self.bp
+    }
+
+    fn base_mut(&mut self) -> &mut BaseProcess<Msg> {
+        &mut self.bp
+    }
+
+    fn dispatch(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
+        let mut out = Vec::new();
+        if self.bp.crashed {
             return out;
         }
         match msg {
@@ -660,8 +730,11 @@ impl DepCore {
                 self.handle_propose_ack(from, dot, deps, time, &mut out)
             }
             Msg::MPayload { dot, cmd, quorums } => {
+                if self.gc.was_executed(dot) {
+                    return out;
+                }
                 if self.info.get(&dot).map_or(true, |i| i.phase == Phase::Start) {
-                    let info = self.info.entry(dot).or_insert_with(Info::new);
+                    let info = self.info.ensure(dot, Info::new);
                     info.phase = Phase::Payload;
                     info.cmd = Some(cmd);
                     info.quorums = quorums;
@@ -678,12 +751,9 @@ impl DepCore {
                 self.handle_consensus_ack(from, dot, bal, time, &mut out)
             }
             Msg::MReady { dot } => self.handle_ready(from, dot, &mut out),
+            Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
         }
         out
-    }
-
-    pub fn crash(&mut self) {
-        self.crashed = true;
     }
 }
 
@@ -714,11 +784,11 @@ macro_rules! dep_protocol {
             }
 
             fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
-                self.0.handle_msg(from, msg, time)
+                self.0.dispatch(from, msg, time)
             }
 
-            fn tick(&mut self, _time: u64) -> Vec<Action<Msg>> {
-                Vec::new()
+            fn tick(&mut self, time: u64) -> Vec<Action<Msg>> {
+                self.0.tick(time)
             }
 
             fn crash(&mut self) {
@@ -731,6 +801,10 @@ macro_rules! dep_protocol {
 
             fn msg_size(msg: &Msg) -> u64 {
                 msg.wire_size()
+            }
+
+            fn footprint(&self) -> Footprint {
+                self.0.footprint()
             }
         }
     };

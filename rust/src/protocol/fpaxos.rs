@@ -7,8 +7,15 @@
 //! deployment we keep the leader at process 0 (Ireland — the placement the
 //! paper found fairest) and do not exercise leader change during benches:
 //! the leader is the single point of contention being measured.
+//!
+//! Built on [`crate::protocol::common`]: `BaseProcess` carries the
+//! identity/config state and `GCTrack` drives log truncation — slots are
+//! mapped onto the leader's dot space (slot `s` ↔ sequence `s + 1`) so the
+//! shared frontier exchange prunes every log prefix the whole group
+//! executed.
 
-use super::{Action, Protocol};
+use super::common::{wire, BaseProcess, GCTrack, GcProcess, Process};
+use super::{Action, Footprint, Protocol};
 use crate::core::{Command, Config, Dot, ProcessId};
 use crate::metrics::Counters;
 use std::collections::{BTreeMap, HashMap};
@@ -23,13 +30,16 @@ pub enum Msg {
     MAccepted { slot: u64 },
     /// Leader → all: slot is chosen.
     MCommit { slot: u64 },
+    /// Periodic GC exchange (`protocol::common::GCTrack`).
+    MGarbageCollect { executed: Vec<(ProcessId, u64)> },
 }
 
 impl Msg {
     pub fn wire_size(&self) -> u64 {
-        const HDR: u64 = 24;
+        use wire::{proc_vals, HDR};
         match self {
             Msg::MForward { cmd, .. } | Msg::MAccept { cmd, .. } => HDR + cmd.wire_size(),
+            Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
             _ => HDR + 8,
         }
     }
@@ -43,17 +53,17 @@ struct Slot {
 
 /// FPaxos process state.
 pub struct FPaxos {
-    id: ProcessId,
-    config: Config,
-    /// Log: slot → entry.
+    bp: BaseProcess<Msg>,
+    /// Log: slot → entry. GC truncates the group-wide-executed prefix.
     log: BTreeMap<u64, Slot>,
     /// Leader only: next slot to assign.
     next_slot: u64,
-    /// Leader only: ack counts per slot.
+    /// Leader only: ack counts per slot (dropped once the slot commits).
     acks: HashMap<u64, usize>,
     /// Next slot to execute (all below are executed).
     exec_from: u64,
-    crashed: bool,
+    gc: GCTrack,
+    ticks: u64,
     counters: Counters,
 }
 
@@ -63,7 +73,13 @@ impl FPaxos {
     }
 
     fn is_leader(&self) -> bool {
-        self.id == self.leader()
+        self.bp.id == self.leader()
+    }
+
+    /// Slot `s` in the GC dot space: origin = leader, seq = s + 1
+    /// (sequence numbers are 1-based).
+    fn slot_dot(&self, slot: u64) -> Dot {
+        Dot::new(self.leader(), slot + 1)
     }
 
     /// Execute every committed slot in order from `exec_from`.
@@ -74,6 +90,8 @@ impl FPaxos {
             }
             self.counters.executed += 1;
             out.push(Action::Execute { dot: entry.dot, cmd: entry.cmd.clone() });
+            let slot = self.exec_from;
+            self.gc.record_executed(self.slot_dot(slot));
             self.exec_from += 1;
         }
     }
@@ -84,8 +102,8 @@ impl FPaxos {
         self.log.insert(slot, Slot { dot, cmd: cmd.clone(), committed: false });
         self.acks.insert(slot, 1); // the leader accepts its own proposal
         self.counters.fast_path += 1; // every command takes the same path
-        for p in 0..self.config.r as u32 {
-            if p != self.id.0 {
+        for p in 0..self.bp.config.r as u32 {
+            if p != self.bp.id.0 {
                 out.push(Action::send(ProcessId(p), Msg::MAccept { slot, dot, cmd: cmd.clone() }));
             }
         }
@@ -98,7 +116,84 @@ impl FPaxos {
                 out.push(Action::Committed { dot: e.dot, fast: true });
             }
         }
+        self.acks.remove(&slot);
         self.advance(out);
+    }
+
+}
+
+impl GcProcess for FPaxos {
+    fn gc_track(&mut self) -> &mut GCTrack {
+        &mut self.gc
+    }
+
+    /// Truncate the log prefix every replica executed.
+    fn prune_executed(&mut self) {
+        for (_origin, lo, hi) in self.gc.safe_to_prune() {
+            for seq in lo..=hi {
+                let slot = seq - 1;
+                if self.log.remove(&slot).is_some() {
+                    self.counters.gc_pruned += 1;
+                }
+                self.acks.remove(&slot);
+            }
+        }
+    }
+}
+
+impl Process for FPaxos {
+    type Msg = Msg;
+
+    fn base(&self) -> &BaseProcess<Msg> {
+        &self.bp
+    }
+
+    fn base_mut(&mut self) -> &mut BaseProcess<Msg> {
+        &mut self.bp
+    }
+
+    fn dispatch(&mut self, from: ProcessId, msg: Msg, _time: u64) -> Vec<Action<Msg>> {
+        let mut out = Vec::new();
+        if self.bp.crashed {
+            return out;
+        }
+        match msg {
+            Msg::MForward { dot, cmd } => {
+                if self.is_leader() {
+                    self.leader_order(dot, cmd, &mut out);
+                }
+            }
+            Msg::MAccept { slot, dot, cmd } => {
+                if slot >= self.exec_from {
+                    self.log.insert(slot, Slot { dot, cmd, committed: false });
+                }
+                out.push(Action::send(from, Msg::MAccepted { slot }));
+            }
+            Msg::MAccepted { slot } => {
+                if !self.is_leader() {
+                    return out;
+                }
+                let acks = match self.acks.get_mut(&slot) {
+                    Some(a) => a,
+                    None => return out, // already committed (acks dropped)
+                };
+                *acks += 1;
+                // Flexible Paxos phase-2 quorum: f+1 (leader included).
+                if *acks == self.bp.config.slow_quorum_size() {
+                    self.commit_slot(slot, &mut out);
+                    for p in 0..self.bp.config.r as u32 {
+                        if p != self.bp.id.0 {
+                            out.push(Action::send(ProcessId(p), Msg::MCommit { slot }));
+                        }
+                    }
+                }
+            }
+            Msg::MCommit { slot } => {
+                self.commit_slot(slot, &mut out);
+            }
+            Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
+        }
+        out
     }
 }
 
@@ -107,14 +202,16 @@ impl Protocol for FPaxos {
 
     fn new(id: ProcessId, config: Config) -> Self {
         assert_eq!(config.shards, 1, "FPaxos baseline is full-replication only");
+        let bp = BaseProcess::new(id, config);
+        let gc = GCTrack::new(id, bp.group_procs.clone());
         FPaxos {
-            id,
-            config,
+            bp,
             log: BTreeMap::new(),
             next_slot: 0,
             acks: HashMap::new(),
             exec_from: 0,
-            crashed: false,
+            gc,
+            ticks: 0,
             counters: Counters::default(),
         }
     }
@@ -125,7 +222,7 @@ impl Protocol for FPaxos {
 
     fn submit(&mut self, dot: Dot, cmd: Command, _time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
-        if self.crashed {
+        if self.bp.crashed {
             return out;
         }
         if self.is_leader() {
@@ -136,50 +233,23 @@ impl Protocol for FPaxos {
         out
     }
 
-    fn handle(&mut self, from: ProcessId, msg: Msg, _time: u64) -> Vec<Action<Msg>> {
-        let mut out = Vec::new();
-        if self.crashed {
-            return out;
-        }
-        match msg {
-            Msg::MForward { dot, cmd } => {
-                if self.is_leader() {
-                    self.leader_order(dot, cmd, &mut out);
-                }
-            }
-            Msg::MAccept { slot, dot, cmd } => {
-                self.log.insert(slot, Slot { dot, cmd, committed: false });
-                out.push(Action::send(from, Msg::MAccepted { slot }));
-            }
-            Msg::MAccepted { slot } => {
-                if !self.is_leader() {
-                    return out;
-                }
-                let acks = self.acks.entry(slot).or_insert(0);
-                *acks += 1;
-                // Flexible Paxos phase-2 quorum: f+1 (leader included).
-                if *acks == self.config.slow_quorum_size() {
-                    self.commit_slot(slot, &mut out);
-                    for p in 0..self.config.r as u32 {
-                        if p != self.id.0 {
-                            out.push(Action::send(ProcessId(p), Msg::MCommit { slot }));
-                        }
-                    }
-                }
-            }
-            Msg::MCommit { slot } => {
-                self.commit_slot(slot, &mut out);
-            }
-        }
-        out
+    fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
+        self.dispatch(from, msg, time)
     }
 
     fn tick(&mut self, _time: u64) -> Vec<Action<Msg>> {
-        Vec::new()
+        let mut out = Vec::new();
+        if self.bp.crashed {
+            return out;
+        }
+        self.ticks += 1;
+        let ticks = self.ticks;
+        self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
+        out
     }
 
     fn crash(&mut self) {
-        self.crashed = true;
+        self.bp.crashed = true;
     }
 
     fn counters(&self) -> Counters {
@@ -188,6 +258,14 @@ impl Protocol for FPaxos {
 
     fn msg_size(msg: &Msg) -> u64 {
         msg.wire_size()
+    }
+
+    fn footprint(&self) -> Footprint {
+        Footprint {
+            infos: self.log.len(),
+            keys: 0,
+            stalled: self.bp.stalled_len() + self.acks.len(),
+        }
     }
 }
 
@@ -238,5 +316,25 @@ mod tests {
             remote_site > 2 * leader_site,
             "leader {leader_site}µs vs remote {remote_site}µs"
         );
+    }
+
+    #[test]
+    fn fpaxos_log_is_truncated_by_gc() {
+        let config = Config::new(5, 1); // default gc_interval_ticks
+        let mut o = opts(24);
+        o.duration_us = 4_000_000;
+        o.drain_us = 3_000_000;
+        let result = run::<FPaxos, _>(config.clone(), o, ConflictWorkload::new(0.1, 100));
+        assert!(result.metrics.ops > 100);
+        assert!(result.metrics.counters.gc_pruned > 0, "log never truncated");
+        for fp in &result.footprints {
+            assert!(
+                fp.infos < result.metrics.ops as usize / 2,
+                "log retained {} slots after {} ops",
+                fp.infos,
+                result.metrics.ops
+            );
+        }
+        assert_psmr(&config, &result, true);
     }
 }

@@ -8,6 +8,7 @@
 //! — and property tests can replay adversarial schedules byte-for-byte.
 
 pub mod atlas;
+pub mod common;
 pub mod depsmr;
 pub mod caesar;
 pub mod epaxos;
@@ -16,6 +17,18 @@ pub mod janus;
 pub mod tempo;
 
 use crate::core::{Command, Config, Dot, ProcessId};
+
+/// Memory-footprint diagnostics: sizes of the per-command/per-key maps a
+/// protocol retains. The GC tests assert these stay bounded in long runs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Footprint {
+    /// Per-command `Info` records currently held.
+    pub infos: usize,
+    /// Per-key state entries (key states, conflict tables, log slots).
+    pub keys: usize,
+    /// Commands with buffered (stalled/blocked) messages.
+    pub stalled: usize,
+}
 
 /// Output of a protocol step.
 #[derive(Clone, Debug)]
@@ -82,6 +95,11 @@ pub trait Protocol: Sized {
     /// CPU/NIC resource model).
     fn msg_size(_msg: &Self::Message) -> u64 {
         64
+    }
+
+    /// Sizes of the retained per-command/per-key maps (GC diagnostics).
+    fn footprint(&self) -> Footprint {
+        Footprint::default()
     }
 }
 

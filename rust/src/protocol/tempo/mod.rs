@@ -17,6 +17,11 @@
 //! A command's final timestamp is the max over all its keys; it executes
 //! in ⟨ts, dot⟩ order per key once *stable* (Theorem 1), with an MStable
 //! handshake across shard groups.
+//!
+//! Structure: broadcast, stalled-message buffering, command info, and the
+//! executed-command GC all come from [`crate::protocol::common`]; key
+//! stability is the *incremental* majority watermark of
+//! [`promises::PromiseStore`] (updated on promise deltas, O(1) to read).
 
 pub mod clock;
 pub mod msg;
@@ -25,10 +30,11 @@ pub mod promises;
 use self::clock::Clock;
 use self::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums};
 use self::promises::{PromiseSet, PromiseStore};
-use super::{ballot, Action, Protocol};
+use super::common::{BaseProcess, CommandsInfo, GCTrack, GcProcess, Process};
+use super::{ballot, Action, Footprint, Protocol};
 use crate::core::{key_to_shard, Command, Config, Dot, Key, ProcessId, ShardId};
 use crate::metrics::Counters;
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 
 /// Protocol state of one key (= one partition, paper §2).
 #[derive(Debug, Default)]
@@ -37,12 +43,22 @@ struct KeyState {
     store: PromiseStore,
     /// Everything this process ever promised on this key, for the periodic
     /// full re-broadcast under failures (§B; footnote 2 only optimizes the
-    /// failure-free case).
+    /// failure-free case). GC rewrites attached promises of group-wide
+    /// executed commands into detached ranges, keeping this bounded.
     history: PromiseSet,
     /// Committed-not-yet-executed commands on this key, ⟨ts, dot⟩ order.
     queue: BTreeMap<(u64, Dot), ()>,
-    /// Cached stable watermark (Theorem 1), recomputed when dirty.
+    /// Cached stable watermark (Theorem 1); refreshed from the store's
+    /// incremental majority frontier when the key is dirty.
     stable: u64,
+}
+
+impl KeyState {
+    fn new(procs: &[ProcessId], majority: usize) -> Self {
+        let mut s = KeyState::default();
+        s.store.init_quorum(procs, majority);
+        s
+    }
 }
 
 /// Per-command bookkeeping (the paper's cmd/ts/phase/quorums/bal/abal maps,
@@ -108,25 +124,21 @@ impl Info {
 
 /// The Tempo machine state: one protocol instance per local key.
 pub struct Tempo {
-    id: ProcessId,
-    group: ShardId,
-    /// `I_p` at machine granularity: all machines of our group.
-    group_procs: Vec<ProcessId>,
-    config: Config,
+    /// Identity, group, config, stalled-message buffer (protocol/common).
+    bp: BaseProcess<Msg>,
     keys: HashMap<Key, KeyState>,
     /// Keys whose clock outbox has promises to broadcast next tick.
     outbox_keys: BTreeSet<Key>,
     /// Keys whose queues/stability changed since the last execution pass.
     dirty: BTreeSet<Key>,
-    info: HashMap<Dot, Info>,
-    /// Messages whose precondition is not yet enabled, keyed by command.
-    stalled: HashMap<Dot, Vec<(ProcessId, Msg)>>,
+    info: CommandsInfo<Info>,
     /// Dots seen through gated attached promises: dot → first-seen time.
     missing: HashMap<Dot, u64>,
     /// Dots currently pending (for the recovery timer).
     pending: BTreeSet<Dot>,
     suspected: BTreeSet<ProcessId>,
-    crashed: bool,
+    /// Executed-command frontiers + group exchange state (GC).
+    gc: GCTrack,
     ticks: u64,
     pub counters: Counters,
 }
@@ -135,20 +147,17 @@ impl Tempo {
     /// `leader_p` from the Ω failure detector: lowest non-suspected machine
     /// of our group.
     fn leader(&self) -> ProcessId {
-        self.group_procs
+        self.bp
+            .group_procs
             .iter()
             .copied()
             .find(|p| !self.suspected.contains(p))
-            .unwrap_or(self.id)
-    }
-
-    fn group_base(&self) -> u32 {
-        self.group.0 * self.config.r as u32
+            .unwrap_or(self.bp.id)
     }
 
     /// Initial coordinator of `dot` at `group` (the paper's `initial_p`).
     fn initial_coordinator(&self, dot: Dot, group: ShardId) -> ProcessId {
-        self.config.closest_in_shard(dot.origin, group)
+        self.bp.config.closest_in_shard(dot.origin, group)
     }
 
     /// Keys of `cmd` that live in our shard group (our local partitions).
@@ -156,73 +165,48 @@ impl Tempo {
         cmd.keys
             .iter()
             .copied()
-            .filter(|&k| key_to_shard(k, self.config.shards) == self.group)
+            .filter(|&k| key_to_shard(k, self.bp.config.shards) == self.bp.group)
             .collect()
     }
 
-    fn key_state(&mut self, k: Key) -> &mut KeyState {
-        self.keys.entry(k).or_default()
-    }
-
     fn ensure_info(&mut self, dot: Dot, time: u64) -> &mut Info {
-        self.info.entry(dot).or_insert_with(|| Info::new(time))
+        self.info.ensure(dot, || Info::new(time))
     }
 
     fn phase_of_internal(&self, dot: Dot) -> Phase {
         self.info.get(&dot).map_or(Phase::Start, |i| i.phase)
     }
 
-    /// Send `msg` to every process in `to` except ourselves; handle our own
-    /// copy inline (self-addressed messages are delivered immediately).
-    fn broadcast(&mut self, to: &[ProcessId], msg: Msg, time: u64, out: &mut Vec<Action<Msg>>) {
-        let mut to_self = false;
-        for &p in to {
-            if p == self.id {
-                to_self = true;
-            } else {
-                out.push(Action::send(p, msg.clone()));
-            }
-        }
-        if to_self {
-            let actions = self.handle(self.id, msg, time);
-            out.extend(actions);
-        }
-    }
-
     /// All machines of every group accessed by `cmd` (the paper's `I_c`).
     fn all_processes_of(&self, cmd: &Command) -> Vec<ProcessId> {
         let mut out = Vec::new();
-        for g in cmd.shards(self.config.shards) {
-            out.extend(self.config.shard_processes(g));
+        for g in cmd.shards(self.bp.config.shards) {
+            out.extend(self.bp.config.shard_processes(g));
         }
         out
     }
 
-    /// Re-deliver messages stalled on `dot` after its state advanced.
-    fn drain_stalled(&mut self, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
-        if let Some(msgs) = self.stalled.remove(&dot) {
-            for (from, msg) in msgs {
-                let actions = self.handle(from, msg, time);
-                out.extend(actions);
-            }
-        }
-    }
-
-    fn stall(&mut self, dot: Dot, from: ProcessId, msg: Msg) {
-        self.stalled.entry(dot).or_default().push((from, msg));
-    }
-
     /// Incorporate a per-key promise batch from `source`, gating attached
-    /// promises on local commits (Algorithm 2 line 47).
+    /// promises on local commits (Algorithm 2 line 47). Promises attached
+    /// to group-wide-executed (GC'd) commands count as committed.
     fn add_promises(&mut self, source: ProcessId, batches: &KeyPromises, time: u64) {
+        let majority = self.bp.config.majority();
+        let shards = self.bp.config.shards;
+        let group = self.bp.group;
         for (k, batch) in batches {
-            if batch.is_empty() || key_to_shard(*k, self.config.shards) != self.group {
+            if batch.is_empty() || key_to_shard(*k, shards) != group {
                 continue;
             }
+            let procs = &self.bp.group_procs;
             let info = &self.info;
-            let state = self.keys.entry(*k).or_default();
+            let gc = &self.gc;
+            let state = self
+                .keys
+                .entry(*k)
+                .or_insert_with(|| KeyState::new(procs, majority));
             let unknown = state.store.add(source, batch, |dot| {
                 info.get(&dot).map_or(false, |i| i.phase.is_committed())
+                    || gc.was_executed(dot)
             });
             self.dirty.insert(*k);
             for dot in unknown {
@@ -234,10 +218,12 @@ impl Tempo {
     /// Per-key `proposal(id, m)` over `asks`; returns per-key proposals
     /// and the promise batches generated (for the ack/commit piggyback).
     fn propose_keys(&mut self, dot: Dot, asks: &[(Key, u64)]) -> (KeyTs, KeyPromises) {
+        let majority = self.bp.config.majority();
         let mut ts = Vec::with_capacity(asks.len());
         let mut batches = Vec::with_capacity(asks.len());
         for &(k, m) in asks {
-            let state = self.keys.entry(k).or_default();
+            let procs = &self.bp.group_procs;
+            let state = self.keys.entry(k).or_insert_with(|| KeyState::new(procs, majority));
             let t = state.clock.proposal(dot, m);
             let batch = state.clock.take_outbox();
             state.history.merge(&batch);
@@ -262,10 +248,11 @@ impl Tempo {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
-        if self.phase_of_internal(dot) != Phase::Start {
-            return; // duplicate MSubmit
+        if self.gc.was_executed(dot) || self.phase_of_internal(dot) != Phase::Start {
+            return; // duplicate MSubmit (or long-executed and GC'd)
         }
-        let me = self.id;
+        let me = self.bp.id;
+        let group = self.bp.group;
         let asks: Vec<(Key, u64)> = self.local_keys(&cmd).iter().map(|&k| (k, 0)).collect();
         let (ts, batches) = self.propose_keys(dot, &asks);
         {
@@ -283,7 +270,7 @@ impl Tempo {
         self.add_promises(me, &batches, time);
 
         let fq: Vec<ProcessId> = self.info[&dot]
-            .fast_quorum(self.group)
+            .fast_quorum(group)
             .expect("fast quorum for own group")
             .to_vec();
         for &p in &fq {
@@ -299,7 +286,7 @@ impl Tempo {
                 ));
             }
         }
-        for p in self.group_procs.clone() {
+        for p in self.bp.group_procs.clone() {
             if !fq.contains(&p) {
                 out.push(Action::send(
                     p,
@@ -319,7 +306,7 @@ impl Tempo {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
-        if self.phase_of_internal(dot) != Phase::Start {
+        if self.gc.was_executed(dot) || self.phase_of_internal(dot) != Phase::Start {
             return;
         }
         let info = self.ensure_info(dot, time);
@@ -332,6 +319,7 @@ impl Tempo {
         self.drain_stalled(dot, time, out);
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn handle_propose(
         &mut self,
         from: ProcessId,
@@ -342,13 +330,13 @@ impl Tempo {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
-        if self.phase_of_internal(dot) != Phase::Start {
+        if self.gc.was_executed(dot) || self.phase_of_internal(dot) != Phase::Start {
             // Already recovered/committed — the MPropose precondition
             // (line 13) fails; dropping the message prevents the initial
             // coordinator from taking the fast path after recovery started.
             return;
         }
-        let me = self.id;
+        let me = self.bp.id;
         let (ts, batches) = self.propose_keys(dot, &coord_ts);
         {
             let info = self.ensure_info(dot, time);
@@ -366,10 +354,10 @@ impl Tempo {
 
         // MBump (§4 "Faster stability"): tell co-located replicas of the
         // other groups accessed by the command to bump their clocks.
-        if self.config.bump_enabled {
-            for g in cmd.shards(self.config.shards) {
-                if g != self.group {
-                    let peer = self.config.closest_in_shard(me, g);
+        if self.bp.config.bump_enabled {
+            for g in cmd.shards(self.bp.config.shards) {
+                if g != self.bp.group {
+                    let peer = self.bp.config.closest_in_shard(me, g);
                     out.push(Action::send(peer, Msg::MBump { dot, ts: highest }));
                 }
             }
@@ -408,8 +396,8 @@ impl Tempo {
     /// maximal proposal was made by at least `f` quorum members
     /// (Algorithm 1 lines 17–21, per partition).
     fn try_fast_or_slow(&mut self, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
-        let f = self.config.f;
-        let group = self.group;
+        let f = self.bp.config.f;
+        let group = self.bp.group;
         let decision = {
             let info = match self.info.get_mut(&dot) {
                 Some(i) => i,
@@ -468,12 +456,13 @@ impl Tempo {
             );
         } else {
             self.counters.slow_path += 1;
-            let b = (self.id.0 - self.group_base()) as u64 + 1; // ballot "i"
+            let b = (self.bp.id.0 - self.bp.group_base()) as u64 + 1; // ballot "i"
             let msg = Msg::MConsensus { dot, ts, bal: b };
-            self.broadcast(&self.group_procs.clone(), msg, time, out);
+            self.broadcast(&self.bp.group_procs.clone(), msg, time, out);
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn handle_commit(
         &mut self,
         from: ProcessId,
@@ -488,6 +477,9 @@ impl Tempo {
         for (src, batches) in &promises {
             let b = batches.clone();
             self.add_promises(*src, &b, time);
+        }
+        if self.gc.was_executed(dot) {
+            return; // late duplicate for a long-executed, GC'd command
         }
         match self.phase_of_internal(dot) {
             Phase::Start => {
@@ -520,7 +512,7 @@ impl Tempo {
             if info.phase.is_committed() || info.cmd.is_none() {
                 return;
             }
-            let groups = info.cmd.as_ref().unwrap().shards(self.config.shards);
+            let groups = info.cmd.as_ref().unwrap().shards(self.bp.config.shards);
             if info.group_ts.len() < groups.len() {
                 return;
             }
@@ -542,9 +534,11 @@ impl Tempo {
             self.missing.remove(&dot);
             info.cmd.clone().expect("commit without payload")
         };
+        let majority = self.bp.config.majority();
         let local_keys = self.local_keys(&local);
         for &k in &local_keys {
-            let state = self.keys.entry(k).or_default();
+            let procs = &self.bp.group_procs;
+            let state = self.keys.entry(k).or_insert_with(|| KeyState::new(procs, majority));
             // bump(ts[id]): detached promises up to the committed timestamp
             // (Algorithm 1 line 25 / Algorithm 3 line 59).
             state.clock.bump(final_ts);
@@ -574,6 +568,9 @@ impl Tempo {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
+        if self.gc.was_executed(dot) {
+            return;
+        }
         let info = self.ensure_info(dot, time);
         if info.bal > bal {
             // §B liveness: help the recovery leader pick a higher ballot.
@@ -595,7 +592,7 @@ impl Tempo {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
-        let slow_quorum = self.config.slow_quorum_size();
+        let slow_quorum = self.bp.config.slow_quorum_size();
         let ready = {
             let info = match self.info.get_mut(&dot) {
                 Some(i) => i,
@@ -619,7 +616,7 @@ impl Tempo {
             Some(c) => c,
             None => return,
         };
-        let group = self.group;
+        let group = self.bp.group;
         let targets = self.all_processes_of(&cmd);
         self.broadcast(&targets, Msg::MCommit { dot, group, ts, promises: collected }, time, out);
     }
@@ -633,15 +630,16 @@ impl Tempo {
     /// every local key it accesses and (if multi-group) every accessed
     /// group has announced stability via MStable.
     fn advance_execution(&mut self, out: &mut Vec<Action<Msg>>) {
-        let majority = self.config.majority();
         while let Some(k) = self.dirty.pop_first() {
-            // Refresh this key's stable watermark (Theorem 1).
+            // Refresh this key's stable watermark (Theorem 1) from the
+            // store's incrementally maintained majority frontier — an O(1)
+            // read; the seed re-scanned every source tracker here.
             {
-                let procs = &self.group_procs;
                 if let Some(state) = self.keys.get_mut(&k) {
-                    let w = state.store.stable_watermark(procs, majority);
+                    let w = state.store.watermark();
                     if w > state.stable {
                         state.stable = w;
+                        self.counters.wm_advances += 1;
                     }
                 } else {
                     continue;
@@ -680,12 +678,12 @@ impl Tempo {
                 return false;
             }
         }
-        let groups = cmd.shards(self.config.shards);
+        let groups = cmd.shards(self.bp.config.shards);
         if groups.len() > 1 {
             // Announce our stability once (Algorithm 6 line 101), then wait
             // for every accessed group (Algorithm 6 line 102).
-            let me = self.id;
-            let own = self.group;
+            let me = self.bp.id;
+            let own = self.bp.group;
             let announce = {
                 let info = self.info.get_mut(&dot).unwrap();
                 if info.announced {
@@ -698,7 +696,7 @@ impl Tempo {
             };
             if announce {
                 for p in self.all_processes_of(&cmd) {
-                    if p != me && self.config.shard_of(p) != own {
+                    if p != me && self.bp.config.shard_of(p) != own {
                         out.push(Action::send(p, Msg::MStable { dot }));
                     }
                 }
@@ -718,13 +716,17 @@ impl Tempo {
             self.dirty.insert(k2);
         }
         self.info.get_mut(&dot).unwrap().phase = Phase::Execute;
+        self.gc.record_executed(dot);
         self.counters.executed += 1;
         out.push(Action::Execute { dot, cmd });
         true
     }
 
     fn handle_stable(&mut self, from: ProcessId, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
-        let group = self.config.shard_of(from);
+        if self.gc.was_executed(dot) {
+            return;
+        }
+        let group = self.bp.config.shard_of(from);
         match self.phase_of_internal(dot) {
             Phase::Execute => {}
             Phase::Commit => {
@@ -759,6 +761,9 @@ impl Tempo {
     }
 
     fn handle_bump(&mut self, from: ProcessId, dot: Dot, ts: u64, time: u64) {
+        if self.gc.was_executed(dot) {
+            return;
+        }
         match self.phase_of_internal(dot) {
             Phase::Start | Phase::Payload => {
                 // Precondition `id ∈ propose` not met yet; retry when the
@@ -768,9 +773,12 @@ impl Tempo {
                 self.stall(dot, from, Msg::MBump { dot, ts });
             }
             Phase::Propose => {
+                let majority = self.bp.config.majority();
                 let cmd = self.info[&dot].cmd.clone().unwrap();
                 for k in self.local_keys(&cmd) {
-                    let state = self.keys.entry(k).or_default();
+                    let procs = &self.bp.group_procs;
+                    let state =
+                        self.keys.entry(k).or_insert_with(|| KeyState::new(procs, majority));
                     state.clock.bump(ts);
                     if !state.clock.outbox_is_empty() {
                         self.outbox_keys.insert(k);
@@ -781,6 +789,99 @@ impl Tempo {
         }
     }
 
+}
+
+impl GcProcess for Tempo {
+    fn gc_track(&mut self) -> &mut GCTrack {
+        &mut self.gc
+    }
+
+    /// Prune all per-command state for dots every group member executed,
+    /// and rewrite promise histories so they stop referencing those dots.
+    fn prune_executed(&mut self) {
+        let ranges = self.gc.safe_to_prune();
+        if ranges.is_empty() {
+            return;
+        }
+        let mut pruned: HashSet<Dot> = HashSet::new();
+        for (origin, lo, hi) in ranges {
+            for seq in lo..=hi {
+                let dot = Dot::new(origin, seq);
+                if self.info.prune(&dot) {
+                    self.counters.gc_pruned += 1;
+                }
+                self.bp.drop_stalled(dot);
+                self.missing.remove(&dot);
+                self.pending.remove(&dot);
+                pruned.insert(dot);
+            }
+        }
+        // Attached promises of pruned commands become detached ranges in
+        // the re-broadcast history: receivers treat them gate-free (their
+        // command executed group-wide), and `history` stays bounded.
+        for state in self.keys.values_mut() {
+            state.history.detach_executed(&pruned);
+        }
+    }
+}
+
+impl Process for Tempo {
+    type Msg = Msg;
+
+    fn base(&self) -> &BaseProcess<Msg> {
+        &self.bp
+    }
+
+    fn base_mut(&mut self) -> &mut BaseProcess<Msg> {
+        &mut self.bp
+    }
+
+    fn dispatch(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
+        let mut out = Vec::new();
+        if self.bp.crashed {
+            return out;
+        }
+        match msg {
+            Msg::MSubmit { dot, cmd, quorums } => {
+                self.handle_submit(dot, cmd, quorums, time, &mut out)
+            }
+            Msg::MPropose { dot, cmd, quorums, ts } => {
+                self.handle_propose(from, dot, cmd, quorums, ts, time, &mut out)
+            }
+            Msg::MProposeAck { dot, ts, promises } => {
+                self.handle_propose_ack(from, dot, ts, promises, time, &mut out)
+            }
+            Msg::MPayload { dot, cmd, quorums } => {
+                self.handle_payload(dot, cmd, quorums, time, &mut out)
+            }
+            Msg::MCommit { dot, group, ts, promises } => {
+                self.handle_commit(from, dot, group, ts, promises, time, &mut out)
+            }
+            Msg::MCommitDirect { dot, cmd, quorums, final_ts } => {
+                self.handle_commit_direct(dot, cmd, quorums, final_ts, time, &mut out)
+            }
+            Msg::MConsensus { dot, ts, bal } => {
+                self.handle_consensus(from, dot, ts, bal, time, &mut out)
+            }
+            Msg::MConsensusAck { dot, bal } => {
+                self.handle_consensus_ack(from, dot, bal, time, &mut out)
+            }
+            Msg::MPromises { promises } => self.handle_promises(from, promises, time, &mut out),
+            Msg::MBump { dot, ts } => self.handle_bump(from, dot, ts, time),
+            Msg::MStable { dot } => self.handle_stable(from, dot, time, &mut out),
+            Msg::MRec { dot, bal } => self.handle_rec(from, dot, bal, time, &mut out),
+            Msg::MRecAck { dot, ts, phase, abal, bal } => {
+                self.handle_rec_ack(from, dot, ts, phase, abal, bal, time, &mut out)
+            }
+            Msg::MRecNAck { dot, bal } => self.handle_rec_nack(dot, bal, time, &mut out),
+            Msg::MCommitRequest { dot } => self.handle_commit_request(from, dot, &mut out),
+            Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
+        }
+        out
+    }
+}
+
+impl Tempo {
     // ------------------------------------------------------------------
     // Recovery (Algorithm 4 / Algorithm 5 lines 38–62) and §B liveness
     // ------------------------------------------------------------------
@@ -799,10 +900,11 @@ impl Tempo {
             info.consensus_acks.clear();
             info.bal
         };
-        let b = ballot::next_owned(bal, self.id, self.config.r as u64, self.group_base());
+        let b =
+            ballot::next_owned(bal, self.bp.id, self.bp.config.r as u64, self.bp.group_base());
         self.counters.recoveries += 1;
         out.push(Action::RecoveryStarted { dot });
-        self.broadcast(&self.group_procs.clone(), Msg::MRec { dot, bal: b }, time, out);
+        self.broadcast(&self.bp.group_procs.clone(), Msg::MRec { dot, bal: b }, time, out);
     }
 
     fn handle_rec(
@@ -813,6 +915,9 @@ impl Tempo {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
+        if self.gc.was_executed(dot) {
+            return; // GC'd: everyone executed; MCommitRequest serves laggards
+        }
         let phase = self.phase_of_internal(dot);
         if phase == Phase::Start {
             self.ensure_info(dot, time);
@@ -837,7 +942,7 @@ impl Tempo {
                     let asks: Vec<(Key, u64)> =
                         self.local_keys(&cmd).iter().map(|&k| (k, 0)).collect();
                     let (ts, batches) = self.propose_keys(dot, &asks);
-                    let me = self.id;
+                    let me = self.bp.id;
                     self.add_promises(me, &batches, time);
                     for (k, _) in &batches {
                         self.outbox_keys.insert(*k);
@@ -870,8 +975,8 @@ impl Tempo {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
-        let rec_quorum = self.config.recovery_quorum_size();
-        let group = self.group;
+        let rec_quorum = self.bp.config.recovery_quorum_size();
+        let group = self.bp.group;
         let initial = self.initial_coordinator(dot, group);
         let decided: KeyTs = {
             let info = match self.info.get_mut(&dot) {
@@ -946,12 +1051,12 @@ impl Tempo {
             info.consensus_acks.clear();
         }
         let msg = Msg::MConsensus { dot, ts: decided, bal };
-        self.broadcast(&self.group_procs.clone(), msg, time, out);
+        self.broadcast(&self.bp.group_procs.clone(), msg, time, out);
     }
 
     fn handle_rec_nack(&mut self, dot: Dot, bal: u64, time: u64, out: &mut Vec<Action<Msg>>) {
         // §B: join the higher ballot and retry recovery (only the leader).
-        if self.leader() != self.id {
+        if self.leader() != self.bp.id {
             return;
         }
         {
@@ -994,6 +1099,9 @@ impl Tempo {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
+        if self.gc.was_executed(dot) {
+            return;
+        }
         {
             let info = self.ensure_info(dot, time);
             if info.phase.is_committed() {
@@ -1012,22 +1120,18 @@ impl Protocol for Tempo {
     type Message = Msg;
 
     fn new(id: ProcessId, config: Config) -> Self {
-        let group = config.shard_of(id);
-        let group_procs = config.shard_processes(group);
+        let bp = BaseProcess::new(id, config);
+        let gc = GCTrack::new(id, bp.group_procs.clone());
         Tempo {
-            id,
-            group,
-            group_procs,
-            config,
+            bp,
             keys: HashMap::new(),
             outbox_keys: BTreeSet::new(),
             dirty: BTreeSet::new(),
-            info: HashMap::new(),
-            stalled: HashMap::new(),
+            info: CommandsInfo::default(),
             missing: HashMap::new(),
             pending: BTreeSet::new(),
             suspected: BTreeSet::new(),
-            crashed: false,
+            gc,
             ticks: 0,
             counters: Counters::default(),
         }
@@ -1041,76 +1145,40 @@ impl Protocol for Tempo {
     /// group and hand the command to the co-located coordinator of each.
     fn submit(&mut self, dot: Dot, cmd: Command, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
-        if self.crashed {
+        if self.bp.crashed {
             return out;
         }
-        let groups = cmd.shards(self.config.shards);
+        let groups = cmd.shards(self.bp.config.shards);
         debug_assert!(
-            groups.contains(&self.group),
+            groups.contains(&self.bp.group),
             "submitter must replicate one accessed partition"
         );
         let quorums: Quorums = groups
             .iter()
             .map(|&g| {
-                let coord = self.config.closest_in_shard(self.id, g);
-                (g, self.config.fast_quorum(coord))
+                let coord = self.bp.config.closest_in_shard(self.bp.id, g);
+                (g, self.bp.config.fast_quorum(coord))
             })
             .collect();
-        let coords: Vec<ProcessId> =
-            groups.iter().map(|&g| self.config.closest_in_shard(self.id, g)).collect();
+        let coords: Vec<ProcessId> = groups
+            .iter()
+            .map(|&g| self.bp.config.closest_in_shard(self.bp.id, g))
+            .collect();
         self.broadcast(&coords, Msg::MSubmit { dot, cmd, quorums }, time, &mut out);
         out
     }
 
     fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
-        let mut out = Vec::new();
-        if self.crashed {
-            return out;
-        }
-        match msg {
-            Msg::MSubmit { dot, cmd, quorums } => {
-                self.handle_submit(dot, cmd, quorums, time, &mut out)
-            }
-            Msg::MPropose { dot, cmd, quorums, ts } => {
-                self.handle_propose(from, dot, cmd, quorums, ts, time, &mut out)
-            }
-            Msg::MProposeAck { dot, ts, promises } => {
-                self.handle_propose_ack(from, dot, ts, promises, time, &mut out)
-            }
-            Msg::MPayload { dot, cmd, quorums } => {
-                self.handle_payload(dot, cmd, quorums, time, &mut out)
-            }
-            Msg::MCommit { dot, group, ts, promises } => {
-                self.handle_commit(from, dot, group, ts, promises, time, &mut out)
-            }
-            Msg::MCommitDirect { dot, cmd, quorums, final_ts } => {
-                self.handle_commit_direct(dot, cmd, quorums, final_ts, time, &mut out)
-            }
-            Msg::MConsensus { dot, ts, bal } => {
-                self.handle_consensus(from, dot, ts, bal, time, &mut out)
-            }
-            Msg::MConsensusAck { dot, bal } => {
-                self.handle_consensus_ack(from, dot, bal, time, &mut out)
-            }
-            Msg::MPromises { promises } => self.handle_promises(from, promises, time, &mut out),
-            Msg::MBump { dot, ts } => self.handle_bump(from, dot, ts, time),
-            Msg::MStable { dot } => self.handle_stable(from, dot, time, &mut out),
-            Msg::MRec { dot, bal } => self.handle_rec(from, dot, bal, time, &mut out),
-            Msg::MRecAck { dot, ts, phase, abal, bal } => {
-                self.handle_rec_ack(from, dot, ts, phase, abal, bal, time, &mut out)
-            }
-            Msg::MRecNAck { dot, bal } => self.handle_rec_nack(dot, bal, time, &mut out),
-            Msg::MCommitRequest { dot } => self.handle_commit_request(from, dot, &mut out),
-        }
-        out
+        self.dispatch(from, msg, time)
     }
 
     /// Periodic handler: broadcast freshly generated promises, advance
-    /// execution, and run the §B liveness mechanisms (recovery timers and
-    /// MCommitRequest for commands known only through attached promises).
+    /// execution, run the GC exchange, and run the §B liveness mechanisms
+    /// (recovery timers and MCommitRequest for commands known only through
+    /// attached promises).
     fn tick(&mut self, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
-        if self.crashed {
+        if self.bp.crashed {
             return out;
         }
         // 1. Promise broadcast (Algorithm 2 line 45; deltas only, per the
@@ -1129,9 +1197,9 @@ impl Protocol for Tempo {
                 }
             }
             if !batches.is_empty() {
-                let me = self.id;
+                let me = self.bp.id;
                 self.add_promises(me, &batches, time);
-                for p in self.group_procs.clone() {
+                for p in self.bp.group_procs.clone() {
                     if p != me {
                         out.push(Action::send(p, Msg::MPromises { promises: batches.clone() }));
                     }
@@ -1143,7 +1211,7 @@ impl Protocol for Tempo {
         //     lost forever and stability would stall. Only needed when
         //     recovery is enabled; throttled to every 32nd tick.
         self.ticks += 1;
-        if self.config.recovery_timeout_us != u64::MAX && self.ticks % 32 == 0 {
+        if self.bp.config.recovery_timeout_us != u64::MAX && self.ticks % 32 == 0 {
             let mut full: KeyPromises = Vec::new();
             for (&k, state) in &self.keys {
                 if !state.history.is_empty() {
@@ -1152,8 +1220,8 @@ impl Protocol for Tempo {
             }
             if !full.is_empty() {
                 full.sort_unstable_by_key(|&(k, _)| k);
-                for p in self.group_procs.clone() {
-                    if p != self.id {
+                for p in self.bp.group_procs.clone() {
+                    if p != self.bp.id {
                         out.push(Action::send(p, Msg::MPromises { promises: full.clone() }));
                     }
                 }
@@ -1161,12 +1229,16 @@ impl Protocol for Tempo {
         }
         // 2. Execution.
         self.advance_execution(&mut out);
+        // 2b. GC exchange: share our executed frontiers with the group and
+        //     prune everything the whole group executed (common::GcProcess).
+        let ticks = self.ticks;
+        self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
         // 3. Recovery timers (only the Ω leader calls recover()).
-        if self.config.recovery_timeout_us != u64::MAX && self.leader() == self.id {
-            let timeout = self.config.recovery_timeout_us;
-            let r = self.config.r as u64;
-            let base = self.group_base();
-            let me = self.id;
+        if self.bp.config.recovery_timeout_us != u64::MAX && self.leader() == self.bp.id {
+            let timeout = self.bp.config.recovery_timeout_us;
+            let r = self.bp.config.r as u64;
+            let base = self.bp.group_base();
+            let me = self.bp.id;
             let due: Vec<Dot> = self
                 .pending
                 .iter()
@@ -1188,8 +1260,8 @@ impl Protocol for Tempo {
             }
         }
         // 4. MCommitRequest for dots known only via gated attached promises.
-        if self.config.recovery_timeout_us != u64::MAX {
-            let timeout = self.config.recovery_timeout_us;
+        if self.bp.config.recovery_timeout_us != u64::MAX {
+            let timeout = self.bp.config.recovery_timeout_us;
             let due: Vec<Dot> = self
                 .missing
                 .iter()
@@ -1199,12 +1271,13 @@ impl Protocol for Tempo {
             for dot in due {
                 *self.missing.get_mut(&dot).unwrap() = time;
                 // We may not know I_c yet: ask the origin's group and ours.
-                let mut targets = self.config.shard_processes(self.config.shard_of(dot.origin));
-                targets.extend(self.group_procs.iter().copied());
+                let mut targets =
+                    self.bp.config.shard_processes(self.bp.config.shard_of(dot.origin));
+                targets.extend(self.bp.group_procs.iter().copied());
                 targets.sort_unstable();
                 targets.dedup();
                 for p in targets {
-                    if p != self.id {
+                    if p != self.bp.id {
                         out.push(Action::send(p, Msg::MCommitRequest { dot }));
                     }
                 }
@@ -1214,7 +1287,7 @@ impl Protocol for Tempo {
     }
 
     fn crash(&mut self) {
-        self.crashed = true;
+        self.bp.crashed = true;
     }
 
     fn suspect(&mut self, p: ProcessId) {
@@ -1228,6 +1301,14 @@ impl Protocol for Tempo {
     fn msg_size(msg: &Msg) -> u64 {
         msg.wire_size()
     }
+
+    fn footprint(&self) -> Footprint {
+        Footprint {
+            infos: self.info.len(),
+            keys: self.keys.len(),
+            stalled: self.bp.stalled_len() + self.missing.len(),
+        }
+    }
 }
 
 impl Tempo {
@@ -1236,11 +1317,12 @@ impl Tempo {
         self.keys.get(&key).map_or(0, |s| s.clock.value())
     }
 
-    /// Stable watermark of `key` (diagnostics/tests).
+    /// Stable watermark of `key` (diagnostics/tests): the scan-based
+    /// reference path, which must agree with the incremental cache.
     pub fn stable_watermark(&self, key: Key) -> u64 {
-        self.keys
-            .get(&key)
-            .map_or(0, |s| s.store.stable_watermark(&self.group_procs, self.config.majority()))
+        self.keys.get(&key).map_or(0, |s| {
+            s.store.stable_watermark(&self.bp.group_procs, self.bp.config.majority())
+        })
     }
 
     /// Phase of `dot` (tests).

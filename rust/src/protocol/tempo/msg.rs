@@ -83,13 +83,16 @@ pub enum Msg {
     /// Ask for the payload/commit of a command known only through an
     /// attached promise (§B).
     MCommitRequest { dot: Dot },
+    /// Periodic GC exchange (`protocol::common::GCTrack`): the sender's
+    /// per-origin contiguous frontier of executed commands.
+    MGarbageCollect { executed: Vec<(ProcessId, u64)> },
 }
 
 impl Msg {
     /// Approximate wire size in bytes, used by the simulator's CPU/NIC
     /// resource model (header + payload-bearing fields).
     pub fn wire_size(&self) -> u64 {
-        const HDR: u64 = 24;
+        use crate::protocol::common::wire::{key_vals, proc_vals, HDR};
         fn kp_size(kp: &KeyPromises) -> u64 {
             kp.iter()
                 .map(|(_, p)| 8 + 16 * (p.detached.len() + p.attached.len()) as u64)
@@ -97,19 +100,20 @@ impl Msg {
         }
         match self {
             Msg::MSubmit { cmd, .. } | Msg::MPayload { cmd, .. } => HDR + cmd.wire_size(),
-            Msg::MPropose { cmd, ts, .. } => HDR + cmd.wire_size() + 16 * ts.len() as u64,
+            Msg::MPropose { cmd, ts, .. } => HDR + cmd.wire_size() + key_vals(ts.len()),
             Msg::MCommitDirect { cmd, .. } => HDR + cmd.wire_size() + 8,
             Msg::MProposeAck { ts, promises, .. } => {
-                HDR + 16 * ts.len() as u64 + kp_size(promises)
+                HDR + key_vals(ts.len()) + kp_size(promises)
             }
             Msg::MCommit { ts, promises, .. } => {
-                HDR + 16 * ts.len() as u64
+                HDR + key_vals(ts.len())
                     + promises.iter().map(|(_, kp)| 8 + kp_size(kp)).sum::<u64>()
             }
             Msg::MPromises { promises } => HDR + kp_size(promises),
             Msg::MConsensus { ts, .. } | Msg::MRecAck { ts, .. } => {
-                HDR + 8 + 16 * ts.len() as u64
+                HDR + 8 + key_vals(ts.len())
             }
+            Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
             _ => HDR + 16,
         }
     }

@@ -7,74 +7,18 @@
 //! Theorem 1 sound. Timestamp `t` is *stable* once a majority of processes
 //! have all their promises up to `t` known (Theorem 1).
 //!
-//! Promises from one process are dense ranges in practice (clocks only move
-//! forward), so we track a contiguous watermark plus a sparse set of
-//! out-of-order values — `highest_contiguous_promise` is then O(1).
+//! The frontier/order-statistic kernel lives in
+//! [`crate::protocol::common::stability`], shared with the GC tracker and
+//! the batched runtime kernel; this module adds the commit gating and the
+//! *incremental* majority watermark: [`PromiseStore::watermark`] is an
+//! O(1) read updated on add/commit deltas, replacing the seed's
+//! collect-and-sort scan on every dirty pass.
 
 use crate::core::{Dot, ProcessId};
-use std::collections::{BTreeSet, HashMap};
+use crate::protocol::common::stability::{majority_watermark, QuorumFrontier};
+use std::collections::{HashMap, HashSet};
 
-/// Set of known promises from a single source process.
-#[derive(Clone, Debug, Default)]
-pub struct SourceTracker {
-    /// All promises `1..=watermark` are present.
-    watermark: u64,
-    /// Promises above the watermark, not yet contiguous.
-    above: BTreeSet<u64>,
-}
-
-impl SourceTracker {
-    /// `highest_contiguous_promise(j)` of Algorithm 2.
-    #[inline]
-    pub fn highest_contiguous(&self) -> u64 {
-        self.watermark
-    }
-
-    /// Add a single promise.
-    pub fn add(&mut self, u: u64) {
-        if u <= self.watermark {
-            return;
-        }
-        if u == self.watermark + 1 {
-            self.watermark = u;
-            self.drain_contiguous();
-        } else {
-            self.above.insert(u);
-        }
-    }
-
-    /// Add the inclusive promise range `lo..=hi` (no-op if `lo > hi`).
-    pub fn add_range(&mut self, lo: u64, hi: u64) {
-        if lo > hi {
-            return;
-        }
-        if lo <= self.watermark + 1 {
-            if hi > self.watermark {
-                self.watermark = hi;
-                self.drain_contiguous();
-            }
-        } else {
-            self.above.extend(lo..=hi);
-        }
-    }
-
-    fn drain_contiguous(&mut self) {
-        while self.above.remove(&(self.watermark + 1)) {
-            self.watermark += 1;
-        }
-        // Values at or below the watermark are redundant; drop them.
-        if let Some(&min) = self.above.iter().next() {
-            if min <= self.watermark {
-                self.above = self.above.split_off(&(self.watermark + 1));
-            }
-        }
-    }
-
-    /// Number of promises buffered out of order (diagnostics).
-    pub fn pending(&self) -> usize {
-        self.above.len()
-    }
-}
+pub use crate::protocol::common::stability::SourceTracker;
 
 /// A batch of promises from one process, as shipped in `MPromises`,
 /// `MProposeAck` and `MCommit` messages.
@@ -118,6 +62,31 @@ impl PromiseSet {
         self.attached.sort_unstable();
         self.attached.dedup();
     }
+
+    /// Convert the attached promises of group-wide-executed commands into
+    /// detached ranges (GC): once everyone executed a command, receivers
+    /// no longer need its commit gating, and the promise history stops
+    /// referencing the pruned dot.
+    pub fn detach_executed(&mut self, executed: &HashSet<Dot>) {
+        if self.attached.is_empty() {
+            return;
+        }
+        let before = self.attached.len();
+        let mut detached = std::mem::take(&mut self.detached);
+        self.attached.retain(|&(d, t)| {
+            if executed.contains(&d) {
+                detached.push((t, t));
+                false
+            } else {
+                true
+            }
+        });
+        self.detached = detached;
+        // Most keys hold none of the pruned dots: skip the sort then.
+        if self.attached.len() != before {
+            self.coalesce();
+        }
+    }
 }
 
 /// All promises known at one process for its partition, with the
@@ -128,9 +97,23 @@ pub struct PromiseStore {
     /// Attached promises whose command is not yet committed locally:
     /// dot → (source, timestamp) pairs.
     gated: HashMap<Dot, Vec<(ProcessId, u64)>>,
+    /// Incrementally maintained majority watermark (configure through
+    /// [`Self::init_quorum`]); [`Self::stable_watermark`] remains as the
+    /// scan-based reference/diagnostic path.
+    quorum: QuorumFrontier,
 }
 
 impl PromiseStore {
+    /// Configure the incremental watermark over `processes`/`majority`.
+    /// Existing tracker state (if any) seeds the frontier.
+    pub fn init_quorum(&mut self, processes: &[ProcessId], majority: usize) {
+        let mut q = QuorumFrontier::new(processes, majority);
+        for (&p, t) in &self.trackers {
+            q.update(p, t.highest_contiguous());
+        }
+        self.quorum = q;
+    }
+
     /// Incorporate a batch from `source`. `is_committed` reports whether a
     /// dot is locally committed or executed; non-committed attached
     /// promises are gated until [`Self::on_commit`].
@@ -155,6 +138,8 @@ impl PromiseStore {
                 unknown.push(dot);
             }
         }
+        let frontier = self.highest_contiguous(source);
+        self.quorum.update(source, frontier);
         unknown
     }
 
@@ -162,7 +147,10 @@ impl PromiseStore {
     pub fn on_commit(&mut self, dot: Dot) {
         if let Some(pairs) = self.gated.remove(&dot) {
             for (source, u) in pairs {
-                self.trackers.entry(source).or_default().add(u);
+                let tracker = self.trackers.entry(source).or_default();
+                tracker.add(u);
+                let frontier = tracker.highest_contiguous();
+                self.quorum.update(source, frontier);
             }
         }
     }
@@ -172,16 +160,21 @@ impl PromiseStore {
         self.trackers.get(&source).map_or(0, |t| t.highest_contiguous())
     }
 
-    /// The stable watermark over `processes`: the largest `s` such that
-    /// all promises up to `s` are known from at least `majority` of them —
-    /// i.e. the `⌊r/2⌋`-indexed order statistic of Algorithm 2 line 50,
-    /// generalized to an arbitrary majority size.
+    /// The incrementally maintained majority watermark: O(1). Returns 0
+    /// until [`Self::init_quorum`] configured the source set.
+    #[inline]
+    pub fn watermark(&self) -> u64 {
+        self.quorum.watermark()
+    }
+
+    /// The stable watermark over `processes`, computed by scan: the largest
+    /// `s` such that all promises up to `s` are known from at least
+    /// `majority` of them — Algorithm 2 line 50. Reference/diagnostic path;
+    /// the hot path reads [`Self::watermark`].
     pub fn stable_watermark(&self, processes: &[ProcessId], majority: usize) -> u64 {
         debug_assert!(majority >= 1 && majority <= processes.len());
         let mut h: Vec<u64> = processes.iter().map(|p| self.highest_contiguous(*p)).collect();
-        h.sort_unstable();
-        // `majority` processes have watermark >= h[len - majority].
-        h[h.len() - majority]
+        majority_watermark(&mut h, majority)
     }
 
     /// Dots with gated (attached) promises — commands other processes have
@@ -197,49 +190,6 @@ mod tests {
     use crate::util::Rng;
 
     const P: [ProcessId; 3] = [ProcessId(0), ProcessId(1), ProcessId(2)];
-
-    #[test]
-    fn source_tracker_contiguity() {
-        let mut t = SourceTracker::default();
-        t.add(1);
-        t.add(2);
-        assert_eq!(t.highest_contiguous(), 2);
-        t.add(5); // gap at 3,4
-        assert_eq!(t.highest_contiguous(), 2);
-        assert_eq!(t.pending(), 1);
-        t.add_range(3, 4);
-        assert_eq!(t.highest_contiguous(), 5);
-        assert_eq!(t.pending(), 0);
-    }
-
-    #[test]
-    fn source_tracker_overlapping_ranges_and_duplicates() {
-        let mut t = SourceTracker::default();
-        t.add_range(1, 10);
-        t.add_range(5, 8); // fully contained
-        t.add(3); // duplicate
-        assert_eq!(t.highest_contiguous(), 10);
-        t.add_range(15, 20);
-        t.add_range(8, 14); // bridges the gap, overlapping both sides
-        assert_eq!(t.highest_contiguous(), 20);
-        t.add_range(7, 3); // inverted range is a no-op
-        assert_eq!(t.highest_contiguous(), 20);
-    }
-
-    #[test]
-    fn source_tracker_random_insertion_order_converges() {
-        let mut r = Rng::new(42);
-        for _ in 0..50 {
-            let mut vals: Vec<u64> = (1..=200).collect();
-            r.shuffle(&mut vals);
-            let mut t = SourceTracker::default();
-            for v in vals {
-                t.add(v);
-            }
-            assert_eq!(t.highest_contiguous(), 200);
-            assert_eq!(t.pending(), 0);
-        }
-    }
 
     #[test]
     fn attached_promises_gated_until_commit() {
@@ -262,7 +212,6 @@ mod tests {
         s.add(P[0], &PromiseSet { detached: vec![(1, 2)], attached: vec![] }, |_| true);
         s.add(P[1], &PromiseSet { detached: vec![(1, 3)], attached: vec![] }, |_| true);
         s.add(P[2], &PromiseSet { detached: vec![(1, 2)], attached: vec![] }, |_| true);
-        assert_eq!(s.stable_watermark(&P, 2), 3 - 1); // majority of 2 → 2... see below
         // majority=2 → second-highest watermark = 2
         assert_eq!(s.stable_watermark(&P, 2), 2);
         // unanimity (majority=3) → min = 2
@@ -276,6 +225,31 @@ mod tests {
         let mut s = PromiseStore::default();
         s.add(P[0], &PromiseSet { detached: vec![(1, 5)], attached: vec![] }, |_| true);
         assert_eq!(s.stable_watermark(&P, 2), 0);
+    }
+
+    #[test]
+    fn incremental_watermark_matches_scan_through_gating() {
+        let mut s = PromiseStore::default();
+        s.init_quorum(&P, 2);
+        let dot = Dot::new(ProcessId(2), 9);
+        s.add(P[0], &PromiseSet { detached: vec![(1, 3)], attached: vec![] }, |_| true);
+        s.add(P[1], &PromiseSet { detached: vec![(1, 1)], attached: vec![(dot, 2)] }, |_| false);
+        // Gated attached promise must not advance the cached watermark.
+        assert_eq!(s.watermark(), 1);
+        assert_eq!(s.watermark(), s.stable_watermark(&P, 2));
+        s.on_commit(dot);
+        assert_eq!(s.watermark(), 2);
+        assert_eq!(s.watermark(), s.stable_watermark(&P, 2));
+    }
+
+    #[test]
+    fn init_quorum_seeds_from_existing_trackers() {
+        let mut s = PromiseStore::default();
+        s.add(P[0], &PromiseSet { detached: vec![(1, 4)], attached: vec![] }, |_| true);
+        s.add(P[1], &PromiseSet { detached: vec![(1, 6)], attached: vec![] }, |_| true);
+        assert_eq!(s.watermark(), 0, "unconfigured store reports 0");
+        s.init_quorum(&P, 2);
+        assert_eq!(s.watermark(), 4);
     }
 
     #[test]
@@ -328,5 +302,51 @@ mod tests {
         assert_eq!(s.gated_dots().collect::<Vec<_>>(), vec![dot]);
         s.on_commit(dot);
         assert_eq!(s.gated_dots().count(), 0);
+    }
+
+    #[test]
+    fn detach_executed_rewrites_history() {
+        let d1 = Dot::new(ProcessId(0), 1);
+        let d2 = Dot::new(ProcessId(0), 2);
+        let mut ps = PromiseSet { detached: vec![(1, 2)], attached: vec![(d1, 3), (d2, 5)] };
+        let executed: HashSet<Dot> = [d1].into_iter().collect();
+        ps.detach_executed(&executed);
+        // ⟨d1, 3⟩ became the detached range (3,3), coalesced into (1,3).
+        assert_eq!(ps.detached, vec![(1, 3)]);
+        assert_eq!(ps.attached, vec![(d2, 5)]);
+    }
+
+    #[test]
+    fn random_interleavings_keep_cache_and_scan_agreeing() {
+        let mut rng = Rng::new(0xD07);
+        for _ in 0..20 {
+            let mut s = PromiseStore::default();
+            s.init_quorum(&P, 2);
+            let mut pending: Vec<Dot> = Vec::new();
+            for i in 0..200u64 {
+                let src = P[rng.gen_range(3) as usize];
+                if rng.gen_bool(0.7) {
+                    let lo = rng.gen_range(40) + 1;
+                    let batch = PromiseSet {
+                        detached: vec![(lo, lo + rng.gen_range(6))],
+                        attached: vec![],
+                    };
+                    s.add(src, &batch, |_| true);
+                } else {
+                    let dot = Dot::new(src, i + 1);
+                    let batch = PromiseSet {
+                        detached: vec![],
+                        attached: vec![(dot, rng.gen_range(50) + 1)],
+                    };
+                    s.add(src, &batch, |_| false);
+                    pending.push(dot);
+                }
+                if !pending.is_empty() && rng.gen_bool(0.5) {
+                    let dot = pending.swap_remove(rng.gen_range(pending.len() as u64) as usize);
+                    s.on_commit(dot);
+                }
+                assert_eq!(s.watermark(), s.stable_watermark(&P, 2));
+            }
+        }
     }
 }

@@ -1,38 +1,57 @@
 //! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The PJRT client needs the external `xla` crate, which the offline
+//! registry does not ship — everything touching it is gated behind the
+//! `pjrt` feature (see rust/Cargo.toml). The pure-Rust stability
+//! reference in [`stability`] is always available and is the default hot
+//! path.
+
 pub mod stability;
-use anyhow::Result;
 
-/// Compiled artifact loaded on the PJRT CPU client.
-pub struct Artifact {
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use crate::util::error::{Error, Result};
 
-/// PJRT client wrapper owning compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        Ok(Self { client: xla::PjRtClient::cpu()? })
+    /// Compiled artifact loaded on the PJRT CPU client.
+    pub struct Artifact {
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// PJRT client wrapper owning compiled executables.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    /// Load an HLO-text artifact (produced by python/compile/aot.py).
-    pub fn load_hlo_text(&self, path: &str) -> Result<Artifact> {
-        let proto = xla::HloModuleProto::from_text_file(path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(Artifact { exe: self.client.compile(&comp)? })
+    fn wrap<T, E: std::fmt::Display>(r: std::result::Result<T, E>) -> Result<T> {
+        r.map_err(|e| Error::msg(format!("xla: {e}")))
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            Ok(Self { client: wrap(xla::PjRtClient::cpu())? })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact (produced by python/compile/aot.py).
+        pub fn load_hlo_text(&self, path: &str) -> Result<Artifact> {
+            let proto = wrap(xla::HloModuleProto::from_text_file(path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(Artifact { exe: wrap(self.client.compile(&comp))? })
+        }
+    }
+
+    impl Artifact {
+        /// Execute with literal inputs; returns the tuple output literal.
+        pub fn execute(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+            let result =
+                wrap(wrap(self.exe.execute::<xla::Literal>(inputs))?[0][0].to_literal_sync())?;
+            Ok(result)
+        }
     }
 }
 
-impl Artifact {
-    /// Execute with literal inputs; returns the elements of the output tuple.
-    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        Ok(result)
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Artifact, Runtime};

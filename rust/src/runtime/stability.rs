@@ -1,13 +1,19 @@
-//! The AOT-compiled stability kernel: Rust-side wrapper over the
-//! `artifacts/stability.hlo.txt` artifact produced by `python/compile/aot.py`
-//! (L2 executor-tick graph calling the L1 Pallas kernel).
+//! The batched stability kernel: a Rust-side reference (always available)
+//! plus, behind the `pjrt` feature, a wrapper over the
+//! `artifacts/stability.hlo.txt` artifact produced by
+//! `python/compile/aot.py` (L2 executor-tick graph calling the L1 Pallas
+//! kernel).
 //!
 //! The artifact has static shapes: `P` partitions × `r` replicas × `W`
 //! promise-window slots, a `Q`-deep queue, and a baked-in majority. The
 //! default artifact is (16, 5, 64, 16, majority 3).
+//!
+//! The per-partition computation — contiguous frontier per replica, then
+//! the majority order statistic — is the same kernel the protocol path
+//! uses; it lives in [`crate::protocol::common::stability`] so the two
+//! never drift.
 
-use super::{Artifact, Runtime};
-use anyhow::{bail, Result};
+use crate::protocol::common::stability::majority_watermark;
 
 /// Shape of a compiled stability artifact.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,16 +31,46 @@ impl Default for KernelShape {
     }
 }
 
-/// Batched stability detection through PJRT.
+/// Pure-Rust reference of the batched computation, used on the default hot
+/// path and cross-checked against the PJRT artifact in tests.
+pub fn stable_watermarks_rust(bits: &[u8], shape: &KernelShape) -> Vec<i32> {
+    let (p, r, w, m) = (shape.partitions, shape.replicas, shape.window, shape.majority);
+    let mut out = Vec::with_capacity(p);
+    let mut h: Vec<u64> = vec![0; r];
+    for i in 0..p {
+        for (j, slot) in h.iter_mut().enumerate() {
+            let base = (i * r + j) * w;
+            let mut c = 0u64;
+            for u in 0..w {
+                if bits[base + u] != 0 {
+                    c += 1;
+                } else {
+                    break;
+                }
+            }
+            *slot = c;
+        }
+        out.push(majority_watermark(&mut h, m) as i32);
+    }
+    out
+}
+
+/// Batched stability detection through PJRT (requires `--features pjrt`).
+#[cfg(feature = "pjrt")]
 pub struct StabilityKernel {
-    artifact: Artifact,
+    artifact: super::Artifact,
     pub shape: KernelShape,
 }
 
+#[cfg(feature = "pjrt")]
 impl StabilityKernel {
     /// Load `artifacts/stability.hlo.txt` (or a custom path) and compile it
     /// on the runtime's PJRT client.
-    pub fn load(runtime: &Runtime, path: &str, shape: KernelShape) -> Result<Self> {
+    pub fn load(
+        runtime: &super::Runtime,
+        path: &str,
+        shape: KernelShape,
+    ) -> crate::util::error::Result<Self> {
         let artifact = runtime.load_hlo_text(path)?;
         Ok(StabilityKernel { artifact, shape })
     }
@@ -42,7 +78,12 @@ impl StabilityKernel {
     /// Run one executor tick: `bits` is the row-major `[P, r, W]` promise
     /// bitmap, `queue_ts` the `[P, Q]` committed-queue timestamps.
     /// Returns (per-partition stable watermark, executability mask).
-    pub fn tick(&self, bits: &[u8], queue_ts: &[i32]) -> Result<(Vec<i32>, Vec<i32>)> {
+    pub fn tick(
+        &self,
+        bits: &[u8],
+        queue_ts: &[i32],
+    ) -> crate::util::error::Result<(Vec<i32>, Vec<i32>)> {
+        use crate::util::error::{bail, Error};
         let s = &self.shape;
         if bits.len() != s.partitions * s.replicas * s.window {
             bail!("bits length {} != P*r*W", bits.len());
@@ -50,50 +91,27 @@ impl StabilityKernel {
         if queue_ts.len() != s.partitions * s.queue {
             bail!("queue length {} != P*Q", queue_ts.len());
         }
+        let wrap = |e: String| Error::msg(format!("xla: {e}"));
         let bits_lit = xla::Literal::create_from_shape_and_untyped_data(
             xla::ElementType::U8,
             &[s.partitions, s.replicas, s.window],
             bits,
-        )?;
+        )
+        .map_err(|e| wrap(e.to_string()))?;
         let queue_bytes: Vec<u8> = queue_ts.iter().flat_map(|v| v.to_le_bytes()).collect();
         let queue_lit = xla::Literal::create_from_shape_and_untyped_data(
             xla::ElementType::S32,
             &[s.partitions, s.queue],
             &queue_bytes,
-        )?;
+        )
+        .map_err(|e| wrap(e.to_string()))?;
         let result = self.artifact.execute(&[bits_lit, queue_lit])?;
-        let (wm_lit, mask_lit) = result.to_tuple2()?;
-        Ok((wm_lit.to_vec::<i32>()?, mask_lit.to_vec::<i32>()?))
+        let (wm_lit, mask_lit) = result.to_tuple2().map_err(|e| wrap(e.to_string()))?;
+        Ok((
+            wm_lit.to_vec::<i32>().map_err(|e| wrap(e.to_string()))?,
+            mask_lit.to_vec::<i32>().map_err(|e| wrap(e.to_string()))?,
+        ))
     }
-}
-
-/// Pure-Rust reference of the same computation, used on the default hot
-/// path and cross-checked against the PJRT artifact in tests.
-pub fn stable_watermarks_rust(
-    bits: &[u8],
-    shape: &KernelShape,
-) -> Vec<i32> {
-    let (p, r, w, m) = (shape.partitions, shape.replicas, shape.window, shape.majority);
-    let mut out = Vec::with_capacity(p);
-    for i in 0..p {
-        let mut h: Vec<i32> = (0..r)
-            .map(|j| {
-                let base = (i * r + j) * w;
-                let mut c = 0;
-                for u in 0..w {
-                    if bits[base + u] != 0 {
-                        c += 1;
-                    } else {
-                        break;
-                    }
-                }
-                c
-            })
-            .collect();
-        h.sort_unstable();
-        out.push(h[r - m]);
-    }
-    out
 }
 
 #[cfg(test)]

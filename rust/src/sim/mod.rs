@@ -15,7 +15,7 @@ pub use topology::Topology;
 
 use crate::core::{key_to_shard, ClientId, Command, Completion, Config, Dot, DotGen, ProcessId};
 use crate::metrics::{Counters, RunMetrics};
-use crate::protocol::{Action, Protocol};
+use crate::protocol::{Action, Footprint, Protocol};
 use crate::util::Rng;
 use crate::workload::batching::Batcher;
 use crate::workload::Workload;
@@ -76,6 +76,8 @@ pub struct SimResult {
     pub completions: Vec<Completion>,
     /// All submitted dots with their commands (when `record_execution`).
     pub submitted: Vec<(Dot, Command)>,
+    /// End-of-run memory footprint of each process (GC diagnostics).
+    pub footprints: Vec<Footprint>,
 }
 
 #[derive(Clone, Debug)]
@@ -407,6 +409,7 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             counters.merge(&p.counters());
         }
         self.result.metrics.counters = counters;
+        self.result.footprints = self.procs.iter().map(|p| p.footprint()).collect();
         self.result
     }
 }

@@ -1,0 +1,89 @@
+//! Minimal error handling (the offline registry ships no `anyhow`): an
+//! owned-message error with context chaining, covering the subset this
+//! crate needs — `Result`, `bail!`, and `Context::with_context`.
+
+use std::fmt;
+
+/// An error carrying a human-readable message (with any context chain
+/// already folded into the string).
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Return early with a formatted [`Error`].
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+pub(crate) use bail;
+
+/// Attach context to the error side of a `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn may_fail(fail: bool) -> Result<u32> {
+        if fail {
+            bail!("failed with code {}", 7);
+        }
+        Ok(1)
+    }
+
+    #[test]
+    fn bail_formats_and_context_chains() {
+        assert_eq!(may_fail(false).unwrap(), 1);
+        let e = may_fail(true).unwrap_err();
+        assert_eq!(e.to_string(), "failed with code 7");
+        let chained: Result<u32> = may_fail(true).with_context(|| "outer");
+        assert_eq!(chained.unwrap_err().to_string(), "outer: failed with code 7");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("boom"));
+    }
+}

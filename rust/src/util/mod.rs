@@ -1,5 +1,7 @@
-//! Self-contained utilities (the offline registry lacks `rand`/`proptest`).
+//! Self-contained utilities (the offline registry lacks `rand`/`proptest`
+//! and `anyhow`).
 
+pub mod error;
 pub mod prop;
 pub mod rng;
 

@@ -1,0 +1,163 @@
+//! Garbage-collection boundedness: long-running sims must prune executed
+//! command state (`protocol/common::GCTrack`) — the seed kept every `Info`
+//! record forever, so memory grew with the run. Each protocol family is
+//! checked: the per-command info maps stay small relative to the number of
+//! executed commands when GC is on, and provably grow when it is off.
+
+use tempo::check::assert_psmr;
+use tempo::core::Config;
+use tempo::protocol::caesar::Caesar;
+use tempo::protocol::depsmr::{Atlas, EPaxos};
+use tempo::protocol::fpaxos::FPaxos;
+use tempo::protocol::tempo::Tempo;
+use tempo::protocol::Protocol;
+use tempo::sim::{run, SimOpts, SimResult, Topology};
+use tempo::workload::ConflictWorkload;
+
+fn opts(seed: u64) -> SimOpts {
+    let mut o = SimOpts::new(Topology::ec2_three());
+    o.clients_per_site = 8;
+    o.warmup_us = 0;
+    o.duration_us = 8_000_000;
+    o.drain_us = 4_000_000;
+    o.seed = seed;
+    o.record_execution = true;
+    o
+}
+
+/// The info maps must hold far fewer entries than the run executed, and
+/// the GC counters must show real pruning happened.
+fn assert_bounded(result: &SimResult, min_ops: u64) {
+    let ops = result.metrics.ops;
+    assert!(ops > min_ops, "need traffic for a meaningful GC test, ops={ops}");
+    assert!(
+        result.metrics.counters.gc_pruned > 0,
+        "GC never pruned anything: {:?}",
+        result.metrics.counters
+    );
+    for (p, fp) in result.footprints.iter().enumerate() {
+        assert!(
+            fp.infos < ops as usize / 4,
+            "P{p} retains {} info entries after {} ops — GC not bounding memory",
+            fp.infos,
+            ops
+        );
+    }
+}
+
+#[test]
+fn tempo_info_map_stays_bounded_under_gc() {
+    let config = Config::new(3, 1); // gc_interval_ticks defaults on
+    let result = run::<Tempo, _>(config.clone(), opts(81), ConflictWorkload::new(0.2, 100));
+    assert_psmr(&config, &result, true);
+    assert_bounded(&result, 400);
+}
+
+#[test]
+fn tempo_info_map_grows_without_gc() {
+    let config = Config::new(3, 1).with_gc_interval_ticks(0);
+    let result = run::<Tempo, _>(config.clone(), opts(81), ConflictWorkload::new(0.2, 100));
+    assert_psmr(&config, &result, true);
+    let ops = result.metrics.ops as usize;
+    assert!(ops > 400);
+    assert_eq!(result.metrics.counters.gc_pruned, 0);
+    assert!(
+        result.footprints.iter().any(|fp| fp.infos >= ops),
+        "without GC every process should retain an info entry per command \
+         (ops={ops}, footprints={:?})",
+        result.footprints
+    );
+}
+
+#[test]
+fn tempo_incremental_watermarks_advance() {
+    // The incremental stability cache is the execution gate: it must have
+    // advanced (counted per key) for anything to execute at all.
+    let config = Config::new(3, 1);
+    let result = run::<Tempo, _>(config, opts(82), ConflictWorkload::new(0.1, 100));
+    assert!(result.metrics.ops > 100);
+    assert!(
+        result.metrics.counters.wm_advances > 0,
+        "stability watermarks never advanced: {:?}",
+        result.metrics.counters
+    );
+}
+
+#[test]
+fn atlas_info_map_stays_bounded_under_gc() {
+    let config = Config::new(3, 1);
+    let result = run::<Atlas, _>(config.clone(), opts(83), ConflictWorkload::new(0.2, 100));
+    assert_psmr(&config, &result, true);
+    assert_bounded(&result, 400);
+}
+
+#[test]
+fn epaxos_info_map_stays_bounded_under_gc() {
+    let config = Config::new(3, 1);
+    let result = run::<EPaxos, _>(config.clone(), opts(84), ConflictWorkload::new(0.2, 100));
+    assert_psmr(&config, &result, true);
+    assert_bounded(&result, 400);
+}
+
+#[test]
+fn caesar_info_and_conflict_maps_stay_bounded_under_gc() {
+    let config = Config::new(3, 1);
+    let result = run::<Caesar, _>(config.clone(), opts(85), ConflictWorkload::new(0.2, 100));
+    assert_psmr(&config, &result, true);
+    assert_bounded(&result, 400);
+    // Caesar's per-key `seen` tables are the growth the §3.3 baseline
+    // notoriously suffers; GC must scrub them too. Unique keys are never
+    // reused, so bounded == far fewer keys than commands executed.
+    let ops = result.metrics.ops as usize;
+    for (p, fp) in result.footprints.iter().enumerate() {
+        assert!(
+            fp.keys < ops / 4,
+            "P{p} retains {} conflict-table keys after {ops} ops",
+            fp.keys
+        );
+    }
+}
+
+#[test]
+fn fpaxos_log_stays_bounded_under_gc() {
+    let config = Config::new(3, 1);
+    let result = run::<FPaxos, _>(config.clone(), opts(86), ConflictWorkload::new(0.2, 100));
+    assert_psmr(&config, &result, true);
+    assert_bounded(&result, 400);
+}
+
+#[test]
+fn gc_exchange_is_deterministic() {
+    let config = Config::new(3, 1);
+    let a = run::<Tempo, _>(config.clone(), opts(87), ConflictWorkload::new(0.2, 100));
+    let b = run::<Tempo, _>(config, opts(87), ConflictWorkload::new(0.2, 100));
+    assert_eq!(a.metrics.ops, b.metrics.ops);
+    assert_eq!(a.metrics.counters.gc_pruned, b.metrics.counters.gc_pruned);
+    assert_eq!(a.execution_logs, b.execution_logs);
+}
+
+/// GC must never execute-starve a protocol: everything still executes
+/// everywhere (liveness) with an aggressive 1-tick GC cadence.
+#[test]
+fn aggressive_gc_cadence_preserves_liveness() {
+    let config = Config::new(3, 1).with_gc_interval_ticks(1);
+    let mut o = opts(88);
+    o.duration_us = 3_000_000;
+    let result = run::<Tempo, _>(config.clone(), o, ConflictWorkload::new(0.3, 100));
+    assert!(result.metrics.ops > 100);
+    assert_psmr(&config, &result, true);
+    assert!(result.metrics.counters.gc_pruned > 0);
+}
+
+/// Footprint sanity for a protocol with no GC configured at all.
+#[test]
+fn footprint_reports_are_wired_for_all_protocols() {
+    let config = Config::new(3, 1);
+    let result = run::<Tempo, _>(config, opts(89), ConflictWorkload::new(0.02, 100));
+    assert_eq!(result.footprints.len(), 3);
+    // After the drain every stalled buffer should be empty.
+    for fp in &result.footprints {
+        assert_eq!(fp.stalled, 0, "stalled buffers must drain: {:?}", result.footprints);
+    }
+    let _ = <Tempo as Protocol>::name();
+}

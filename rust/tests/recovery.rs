@@ -121,6 +121,26 @@ fn crash_sweep_property_random_times_and_victims() {
 }
 
 #[test]
+fn recovery_converges_after_gc_pruned_executed_commands() {
+    // GC prunes executed command info before the crash; recovery of the
+    // commands in flight at the crash must still converge — pruned state
+    // is exactly the state no recovery can need (everyone executed it).
+    let config = Config::new(3, 1)
+        .with_recovery_timeout_us(1_000_000)
+        .with_gc_interval_ticks(8);
+    let mut o = crash_opts(55, 1_200_000, 0);
+    o.topology = Topology::ec2_three();
+    o.duration_us = 2_000_000;
+    let result = run::<Tempo, _>(config.clone(), o, ConflictWorkload::new(0.2, 100));
+    assert!(
+        result.metrics.counters.gc_pruned > 0,
+        "GC should have pruned executed commands before the crash: {:?}",
+        result.metrics.counters
+    );
+    assert_psmr_with_crash(&config, &result, 0);
+}
+
+#[test]
 fn no_recovery_when_nothing_crashes() {
     let config = Config::new(5, 1).with_recovery_timeout_us(2_000_000);
     let mut o = SimOpts::new(Topology::ec2());

@@ -3,7 +3,10 @@
 //! shared with python/tests/test_kernel.py.
 //!
 //! Requires `make artifacts` (skips gracefully when the artifact is absent
-//! so `cargo test` works before the Python toolchain ran).
+//! so `cargo test` works before the Python toolchain ran) and the `pjrt`
+//! feature (the offline registry has no `xla` crate; see rust/Cargo.toml).
+
+#![cfg(feature = "pjrt")]
 
 use tempo::runtime::stability::{stable_watermarks_rust, KernelShape, StabilityKernel};
 use tempo::runtime::Runtime;
