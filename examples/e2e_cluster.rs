@@ -80,7 +80,11 @@ fn main() -> tempo::util::error::Result<()> {
     let total = ops.load(Ordering::Relaxed);
     let h = hist.lock().unwrap();
     let t = h.tail_summary();
-    println!("\ne2e cluster results ({}s, {} closed-loop clients):", duration.as_secs(), r * clients_per_node);
+    println!(
+        "\ne2e cluster results ({}s, {} closed-loop clients):",
+        duration.as_secs(),
+        r * clients_per_node
+    );
     println!("  throughput: {:.0} ops/s", total as f64 / duration.as_secs_f64());
     println!("  latency: {t}");
 

@@ -1,0 +1,122 @@
+"""Batched vs unbatched framing, measured through the wire-codec port.
+
+The container this repo grows in has no Rust toolchain, so the
+authoritative simulator comparison (``cargo bench --bench microbench``,
+which overwrites BENCH_batching.json with throughput numbers from the
+CPU/NIC resource model) cannot run here. This script measures what *can*
+be measured for real on this machine: for a realistic mix of protocol
+messages bound for one peer, the frames, bytes and encode+decode time of
+one-frame-per-message vs ``MBatch`` coalescing (docs/WIRE.md tag 16),
+including the runtime's 8-byte per-frame header (len + sender).
+
+Run from anywhere: ``python3 python/bench/bench_batching.py``.
+"""
+
+import json
+import os
+import time
+
+from wire import decode, encode
+
+FRAME_HDR = 8  # u32 len + u32 sender, net/mod.rs write_frame
+BATCH_MAX = 16  # Config::batch_max_msgs used in the comparison
+
+
+def message_mix(n):
+    """A tick interval's worth of traffic to one peer: proposals and acks
+    for distinct commands plus the periodic promise/GC exchange."""
+    out = []
+    for i in range(n):
+        dot = (i % 5, 1 + i)
+        cmd = {
+            "client": i,
+            "op": 1,
+            "payload_len": 100,
+            "batched": 1,
+            "keys": [i % 3],
+        }
+        kind = i % 6
+        if kind == 0:
+            out.append(
+                {
+                    "t": "MPropose",
+                    "dot": dot,
+                    "cmd": cmd,
+                    "quorums": [(0, [0, 1, 2])],
+                    "ts": [(i % 3, 10 + i)],
+                }
+            )
+        elif kind == 1:
+            ps = ([(1, 5 + i)], [(dot, 10 + i)])
+            out.append(
+                {"t": "MProposeAck", "dot": dot, "ts": [(i % 3, 10 + i)], "promises": [(i % 3, ps)]}
+            )
+        elif kind == 2:
+            out.append(
+                {"t": "MCommit", "dot": dot, "group": 0, "ts": [(i % 3, 10 + i)], "promises": []}
+            )
+        elif kind == 3:
+            out.append({"t": "MPromises", "promises": [(i % 3, ([(1, 20 + i)], []))]})
+        elif kind == 4:
+            out.append({"t": "MGarbageCollect", "executed": [(j, 50 + i) for j in range(5)]})
+        else:
+            out.append({"t": "MStable", "dot": dot})
+    return out
+
+
+def batches(msgs, size):
+    for i in range(0, len(msgs), size):
+        chunk = msgs[i : i + size]
+        yield chunk[0] if len(chunk) == 1 else {"t": "MBatch", "msgs": chunk}
+
+
+def measure(frames, rounds):
+    """Encode+decode wall time over `rounds` passes; returns (s, bytes, n)."""
+    wire_bytes = sum(len(encode(f)) + FRAME_HDR for f in frames)
+    start = time.perf_counter()
+    for _ in range(rounds):
+        for f in frames:
+            decode(encode(f))
+    return time.perf_counter() - start, wire_bytes, len(frames)
+
+
+def main():
+    n_msgs, rounds = 960, 30
+    msgs = message_mix(n_msgs)
+    flat = [decode(encode(b)) for b in batches(msgs, BATCH_MAX)]
+    assert [m for b in flat for m in (b["msgs"] if b["t"] == "MBatch" else [b])] == msgs
+
+    unb_s, unb_bytes, unb_frames = measure(msgs, rounds)
+    bat_s, bat_bytes, bat_frames = measure(list(batches(msgs, BATCH_MAX)), rounds)
+
+    total = n_msgs * rounds
+    result = {
+        "bench": "message_batching",
+        "harness": "python wire-codec port (python/bench/wire.py); no Rust "
+        "toolchain in this container — `cargo bench --bench microbench` "
+        "overwrites this file with the simulator comparison under the "
+        "CPU/NIC resource model",
+        "workload": f"{n_msgs}-message mix (propose/ack/commit/promises/gc/stable) "
+        f"to one peer, batch_max_msgs={BATCH_MAX}, 8B frame header",
+        "unbatched_frames": unb_frames,
+        "batched_frames": bat_frames,
+        "frame_reduction": round(unb_frames / bat_frames, 2),
+        "unbatched_wire_bytes": unb_bytes,
+        "batched_wire_bytes": bat_bytes,
+        "unbatched_us_per_msg": round(unb_s / total * 1e6, 3),
+        "batched_us_per_msg": round(bat_s / total * 1e6, 3),
+        "codec_speedup": round(unb_s / bat_s, 2),
+        "regenerate": "python3 python/bench/bench_batching.py "
+        "(or cargo bench --bench microbench for the simulator numbers)",
+    }
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+    path = os.path.normpath(os.path.join(root, "BENCH_batching.json"))
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"written to {path}")
+
+
+if __name__ == "__main__":
+    main()

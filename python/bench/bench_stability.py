@@ -1,0 +1,123 @@
+"""Scan vs incremental stability watermark, measured via a Python port.
+
+Faithful port of the Rust microbenchmark's hot loop
+(rust/benches/microbench.rs::stability_watermark_bench): one promise
+delta + one majority-watermark query per iteration over r=5 sources at
+majority 3. ``scan`` re-collects and sorts every source frontier on each
+query (the seed's behaviour, PromiseStore::stable_watermark); the
+``incremental`` path updates a cached majority frontier on deltas
+(QuorumFrontier) and reads it in O(1).
+
+The container this repo grows in has no Rust toolchain, so the absolute
+ns/iter here are Python numbers — the *ratio* is the algorithmic
+scan-vs-incremental comparison, measured for real on this machine.
+``cargo bench --bench microbench`` overwrites this file with the Rust
+numbers when a toolchain is available.
+
+Run from anywhere: ``python3 python/bench/bench_stability.py``.
+"""
+
+import json
+import os
+import time
+
+R, MAJORITY, ITERS = 5, 3, 200_000
+
+
+class SourceTracker:
+    """Contiguous watermark + sparse overflow (protocol/common/stability.rs)."""
+
+    def __init__(self):
+        self.watermark = 0
+        self.above = set()
+
+    def add(self, u):
+        if u <= self.watermark:
+            return
+        if u == self.watermark + 1:
+            self.watermark = u
+            while self.watermark + 1 in self.above:
+                self.above.discard(self.watermark + 1)
+                self.watermark += 1
+        else:
+            self.above.add(u)
+
+
+def scan_watermark(trackers):
+    """The seed path: collect + sort every frontier per query."""
+    frontiers = sorted(t.watermark for t in trackers)
+    return frontiers[len(frontiers) - MAJORITY]
+
+
+class QuorumFrontier:
+    """Incrementally maintained majority watermark."""
+
+    def __init__(self, n, majority):
+        self.frontiers = [0] * n
+        self.majority = majority
+        self.watermark = 0
+
+    def update(self, source, frontier):
+        if frontier <= self.frontiers[source]:
+            return False
+        self.frontiers[source] = frontier
+        w = sorted(self.frontiers)[len(self.frontiers) - self.majority]
+        if w > self.watermark:
+            self.watermark = w
+            return True
+        return False
+
+
+def bench_scan():
+    trackers = [SourceTracker() for _ in range(R)]
+    start = time.perf_counter()
+    for i in range(1, ITERS + 1):
+        trackers[i % R].add(i)
+        scan_watermark(trackers)
+    el = time.perf_counter() - start
+    return el / ITERS * 1e9, scan_watermark(trackers)
+
+
+def bench_incremental():
+    trackers = [SourceTracker() for _ in range(R)]
+    q = QuorumFrontier(R, MAJORITY)
+    start = time.perf_counter()
+    for i in range(1, ITERS + 1):
+        t = trackers[i % R]
+        t.add(i)
+        q.update(i % R, t.watermark)
+        _ = q.watermark  # the O(1) read
+    el = time.perf_counter() - start
+    return el / ITERS * 1e9, q.watermark
+
+
+def main():
+    scan_ns, scan_wm = bench_scan()
+    inc_ns, inc_wm = bench_incremental()
+    assert scan_wm == inc_wm, (scan_wm, inc_wm)
+    result = {
+        "bench": "stability_watermark",
+        "unit": "ns_per_iter",
+        "harness": "python port (python/bench/bench_stability.py); no Rust "
+        "toolchain in this container — absolute numbers are Python-speed, "
+        "the scan-vs-incremental ratio is the algorithmic comparison. "
+        "`cargo bench --bench microbench` overwrites this file with Rust "
+        "numbers",
+        "workload": f"add 1 promise + query majority watermark, r={R}, "
+        f"majority={MAJORITY}, {ITERS} iters",
+        "scan_ns_per_iter": round(scan_ns, 1),
+        "incremental_ns_per_iter": round(inc_ns, 1),
+        "speedup": round(scan_ns / inc_ns, 2),
+        "regenerate": "cargo bench --bench microbench",
+    }
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+    path = os.path.normpath(os.path.join(root, "BENCH_stability.json"))
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"written to {path}")
+
+
+if __name__ == "__main__":
+    main()

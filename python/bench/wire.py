@@ -1,0 +1,374 @@
+"""Python port of the Tempo wire codec (rust/src/net/wire.rs).
+
+Byte-for-byte faithful to docs/WIRE.md: little-endian fixed-width
+integers, u8 message tags, length-prefixed ``MBatch`` members. Used by
+``bench_batching.py`` to measure framing amortization on this machine and
+as an executable cross-check of the WIRE.md spec: every frame produced
+here must decode to the same message, and malformed frames must raise
+``WireError`` (mirroring the Rust codec returning ``Err`` — never a
+panic).
+
+Messages are dicts with a ``t`` tag key, e.g.::
+
+    {"t": "MStable", "dot": (3, 42)}
+    {"t": "MBatch", "msgs": [...]}
+
+Dots are ``(origin, seq)`` tuples; commands are dicts with ``client``,
+``op`` (0 Get / 1 Put / 2 Rmw), ``payload_len``, ``batched`` and ``keys``.
+"""
+
+import struct
+
+
+class WireError(Exception):
+    """Malformed frame (truncated, oversized, bad tag/op/phase, nested batch)."""
+
+
+PHASES = ["Start", "Payload", "Propose", "RecoverR", "RecoverP", "Commit", "Execute"]
+
+
+class Writer:
+    def __init__(self):
+        self.parts = []
+
+    def u8(self, v):
+        self.parts.append(struct.pack("<B", v))
+
+    def u16(self, v):
+        self.parts.append(struct.pack("<H", v))
+
+    def u32(self, v):
+        self.parts.append(struct.pack("<I", v))
+
+    def u64(self, v):
+        self.parts.append(struct.pack("<Q", v))
+
+    def dot(self, d):
+        self.u32(d[0])
+        self.u64(d[1])
+
+    def cmd(self, c):
+        self.u64(c["client"])
+        self.u8(c["op"])
+        self.u32(c["payload_len"])
+        self.u32(c["batched"])
+        self.u16(len(c["keys"]))
+        for k in c["keys"]:
+            self.u64(k)
+
+    def quorums(self, q):
+        self.u8(len(q))
+        for shard, procs in q:
+            self.u32(shard)
+            self.u8(len(procs))
+            for p in procs:
+                self.u32(p)
+
+    def key_ts(self, ts):
+        self.u16(len(ts))
+        for k, t in ts:
+            self.u64(k)
+            self.u64(t)
+
+    def promise_set(self, ps):
+        detached, attached = ps
+        self.u16(len(detached))
+        for lo, hi in detached:
+            self.u64(lo)
+            self.u64(hi)
+        self.u16(len(attached))
+        for d, t in attached:
+            self.dot(d)
+            self.u64(t)
+
+    def key_promises(self, kp):
+        self.u16(len(kp))
+        for k, ps in kp:
+            self.u64(k)
+            self.promise_set(ps)
+
+    def bytes(self):
+        return b"".join(self.parts)
+
+
+class Reader:
+    def __init__(self, buf):
+        self.buf = buf
+        self.pos = 0
+
+    def take(self, n):
+        if self.pos + n > len(self.buf):
+            raise WireError(
+                f"truncated frame at {self.pos} + {n} > {len(self.buf)}"
+            )
+        s = self.buf[self.pos : self.pos + n]
+        self.pos += n
+        return s
+
+    def u8(self):
+        return self.take(1)[0]
+
+    def u16(self):
+        return struct.unpack("<H", self.take(2))[0]
+
+    def u32(self):
+        return struct.unpack("<I", self.take(4))[0]
+
+    def u64(self):
+        return struct.unpack("<Q", self.take(8))[0]
+
+    def dot(self):
+        return (self.u32(), self.u64())
+
+    def cmd(self):
+        client = self.u64()
+        op = self.u8()
+        if op > 2:
+            raise WireError(f"bad op tag {op}")
+        payload_len = self.u32()
+        batched = self.u32()
+        keys = [self.u64() for _ in range(self.u16())]
+        return {
+            "client": client,
+            "op": op,
+            "payload_len": payload_len,
+            "batched": batched,
+            "keys": keys,
+        }
+
+    def quorums(self):
+        return [
+            (self.u32(), [self.u32() for _ in range(self.u8())])
+            for _ in range(self.u8())
+        ]
+
+    def key_ts(self):
+        return [(self.u64(), self.u64()) for _ in range(self.u16())]
+
+    def promise_set(self):
+        detached = [(self.u64(), self.u64()) for _ in range(self.u16())]
+        attached = [(self.dot(), self.u64()) for _ in range(self.u16())]
+        return (detached, attached)
+
+    def key_promises(self):
+        return [(self.u64(), self.promise_set()) for _ in range(self.u16())]
+
+
+def encode(msg):
+    """Encode one message (frame body, without the runtime's length prefix)."""
+    w = Writer()
+    t = msg["t"]
+    if t == "MSubmit":
+        w.u8(0), w.dot(msg["dot"]), w.cmd(msg["cmd"]), w.quorums(msg["quorums"])
+    elif t == "MPropose":
+        w.u8(1), w.dot(msg["dot"]), w.cmd(msg["cmd"]), w.quorums(msg["quorums"])
+        w.key_ts(msg["ts"])
+    elif t == "MProposeAck":
+        w.u8(2), w.dot(msg["dot"]), w.key_ts(msg["ts"])
+        w.key_promises(msg["promises"])
+    elif t == "MPayload":
+        w.u8(3), w.dot(msg["dot"]), w.cmd(msg["cmd"]), w.quorums(msg["quorums"])
+    elif t == "MCommit":
+        w.u8(4), w.dot(msg["dot"]), w.u32(msg["group"]), w.key_ts(msg["ts"])
+        w.u16(len(msg["promises"]))
+        for p, kp in msg["promises"]:
+            w.u32(p)
+            w.key_promises(kp)
+    elif t == "MCommitDirect":
+        w.u8(5), w.dot(msg["dot"]), w.cmd(msg["cmd"]), w.quorums(msg["quorums"])
+        w.u64(msg["final_ts"])
+    elif t == "MConsensus":
+        w.u8(6), w.dot(msg["dot"]), w.key_ts(msg["ts"]), w.u64(msg["bal"])
+    elif t == "MConsensusAck":
+        w.u8(7), w.dot(msg["dot"]), w.u64(msg["bal"])
+    elif t == "MPromises":
+        w.u8(8), w.key_promises(msg["promises"])
+    elif t == "MBump":
+        w.u8(9), w.dot(msg["dot"]), w.u64(msg["ts"])
+    elif t == "MStable":
+        w.u8(10), w.dot(msg["dot"])
+    elif t == "MRec":
+        w.u8(11), w.dot(msg["dot"]), w.u64(msg["bal"])
+    elif t == "MRecAck":
+        w.u8(12), w.dot(msg["dot"]), w.key_ts(msg["ts"])
+        w.u8(PHASES.index(msg["phase"]))
+        w.u64(msg["abal"]), w.u64(msg["bal"])
+    elif t == "MRecNAck":
+        w.u8(13), w.dot(msg["dot"]), w.u64(msg["bal"])
+    elif t == "MCommitRequest":
+        w.u8(14), w.dot(msg["dot"])
+    elif t == "MGarbageCollect":
+        w.u8(15)
+        w.u16(len(msg["executed"]))
+        for p, wm in msg["executed"]:
+            w.u32(p)
+            w.u64(wm)
+    elif t == "MBatch":
+        w.u8(16)
+        w.u16(len(msg["msgs"]))
+        for m in msg["msgs"]:
+            body = encode(m)
+            w.u32(len(body))
+            w.parts.append(body)
+    else:
+        raise ValueError(f"unknown message {t}")
+    return w.bytes()
+
+
+def decode(buf):
+    """Decode one frame body; raises WireError on malformed input.
+
+    Trailing bytes after a complete top-level message are ignored
+    (forward compatibility); inside an ``MBatch`` every member must
+    consume its length prefix exactly.
+    """
+    return _decode_at(Reader(buf))
+
+
+def _decode_at(r):
+    tag = r.u8()
+    if tag == 0:
+        return {"t": "MSubmit", "dot": r.dot(), "cmd": r.cmd(), "quorums": r.quorums()}
+    if tag == 1:
+        return {
+            "t": "MPropose",
+            "dot": r.dot(),
+            "cmd": r.cmd(),
+            "quorums": r.quorums(),
+            "ts": r.key_ts(),
+        }
+    if tag == 2:
+        return {
+            "t": "MProposeAck",
+            "dot": r.dot(),
+            "ts": r.key_ts(),
+            "promises": r.key_promises(),
+        }
+    if tag == 3:
+        return {"t": "MPayload", "dot": r.dot(), "cmd": r.cmd(), "quorums": r.quorums()}
+    if tag == 4:
+        dot, group, ts = r.dot(), r.u32(), r.key_ts()
+        promises = [(r.u32(), r.key_promises()) for _ in range(r.u16())]
+        return {"t": "MCommit", "dot": dot, "group": group, "ts": ts, "promises": promises}
+    if tag == 5:
+        return {
+            "t": "MCommitDirect",
+            "dot": r.dot(),
+            "cmd": r.cmd(),
+            "quorums": r.quorums(),
+            "final_ts": r.u64(),
+        }
+    if tag == 6:
+        return {"t": "MConsensus", "dot": r.dot(), "ts": r.key_ts(), "bal": r.u64()}
+    if tag == 7:
+        return {"t": "MConsensusAck", "dot": r.dot(), "bal": r.u64()}
+    if tag == 8:
+        return {"t": "MPromises", "promises": r.key_promises()}
+    if tag == 9:
+        return {"t": "MBump", "dot": r.dot(), "ts": r.u64()}
+    if tag == 10:
+        return {"t": "MStable", "dot": r.dot()}
+    if tag == 11:
+        return {"t": "MRec", "dot": r.dot(), "bal": r.u64()}
+    if tag == 12:
+        dot, ts, pi = r.dot(), r.key_ts(), r.u8()
+        if pi >= len(PHASES):
+            raise WireError(f"bad phase tag {pi}")
+        return {
+            "t": "MRecAck",
+            "dot": dot,
+            "ts": ts,
+            "phase": PHASES[pi],
+            "abal": r.u64(),
+            "bal": r.u64(),
+        }
+    if tag == 13:
+        return {"t": "MRecNAck", "dot": r.dot(), "bal": r.u64()}
+    if tag == 14:
+        return {"t": "MCommitRequest", "dot": r.dot()}
+    if tag == 15:
+        executed = [(r.u32(), r.u64()) for _ in range(r.u16())]
+        return {"t": "MGarbageCollect", "executed": executed}
+    if tag == 16:
+        msgs = []
+        for _ in range(r.u16()):
+            length = r.u32()
+            body = r.take(length)
+            # Reject nested batches by peeking the member tag BEFORE
+            # recursing: a deeply nested hostile frame must error, not
+            # exhaust the stack.
+            if body[:1] == b"\x10":
+                raise WireError("nested MBatch frame")
+            sub = Reader(body)
+            inner = _decode_at(sub)
+            if sub.pos != length:
+                raise WireError(
+                    f"MBatch member declared {length} bytes, used {sub.pos}"
+                )
+            msgs.append(inner)
+        return {"t": "MBatch", "msgs": msgs}
+    raise WireError(f"bad message tag {tag}")
+
+
+def self_check():
+    """Round-trip + malformed-input sanity check of the port itself."""
+    dot = (3, 42)
+    cmd = {"client": 7, "op": 2, "payload_len": 512, "batched": 1, "keys": [1, 99]}
+    ps = ([(1, 5), (7, 9)], [(dot, 10)])
+    msgs = [
+        {"t": "MSubmit", "dot": dot, "cmd": cmd, "quorums": [(0, [0, 1]), (1, [3])]},
+        {"t": "MPropose", "dot": dot, "cmd": cmd, "quorums": [], "ts": [(1, 10)]},
+        {"t": "MProposeAck", "dot": dot, "ts": [(1, 10)], "promises": [(1, ps)]},
+        {"t": "MCommit", "dot": dot, "group": 1, "ts": [(1, 10)], "promises": [(2, [(1, ps)])]},
+        {"t": "MPromises", "promises": [(1, ps), (99, ([], []))]},
+        {"t": "MRecAck", "dot": dot, "ts": [], "phase": "Commit", "abal": 1, "bal": 2},
+        {"t": "MGarbageCollect", "executed": [(0, 41), (4, 7)]},
+        {"t": "MStable", "dot": dot},
+        {"t": "MBatch", "msgs": [{"t": "MStable", "dot": dot}, {"t": "MBump", "dot": dot, "ts": 9}]},
+    ]
+    for m in msgs:
+        assert decode(encode(m)) == m, m
+    batch = encode(msgs[-1])
+    for cut in range(len(batch)):
+        try:
+            decode(batch[:cut])
+            raise AssertionError(f"truncated frame decoded at cut {cut}")
+        except WireError:
+            pass
+    nested = Writer()
+    nested.u8(16), nested.u16(1)
+    body = encode({"t": "MBatch", "msgs": []})
+    nested.u32(len(body))
+    nested.parts.append(body)
+    try:
+        decode(nested.bytes())
+        raise AssertionError("nested batch decoded")
+    except WireError:
+        pass
+    padded = Writer()
+    padded.u8(16), padded.u16(1)
+    body = encode({"t": "MStable", "dot": dot})
+    padded.u32(len(body) + 2)
+    padded.parts.append(body)
+    padded.u16(0xBEEF)
+    try:
+        decode(padded.bytes())
+        raise AssertionError("padded member decoded")
+    except WireError:
+        pass
+    frame = encode({"t": "MStable", "dot": dot})
+    for _ in range(5000):  # depth well past any recursion limit
+        deep = Writer()
+        deep.u8(16), deep.u16(1), deep.u32(len(frame))
+        deep.parts.append(frame)
+        frame = deep.bytes()
+    try:
+        decode(frame)
+        raise AssertionError("deeply nested batch decoded")
+    except WireError:
+        pass
+
+
+if __name__ == "__main__":
+    self_check()
+    print("wire codec port: self-check OK")

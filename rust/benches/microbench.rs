@@ -1,7 +1,9 @@
 //! Component microbenchmarks for the §Perf pass: simulator event rate,
 //! promise-store throughput, the scan-based vs incremental stability
-//! watermark (results recorded to BENCH_stability.json), SCC executor,
-//! histogram, and (with `--features pjrt`) the PJRT stability kernel.
+//! watermark (results recorded to BENCH_stability.json), message batching
+//! on vs off under the CPU/NIC resource model (recorded to
+//! BENCH_batching.json), SCC executor, histogram, and (with
+//! `--features pjrt`) the PJRT stability kernel.
 
 use std::time::Instant;
 use tempo::core::{Config, Dot, ProcessId};
@@ -10,7 +12,7 @@ use tempo::metrics::Histogram;
 use tempo::protocol::tempo::promises::{PromiseSet, PromiseStore};
 use tempo::protocol::tempo::Tempo;
 use tempo::runtime::stability::{stable_watermarks_rust, KernelShape};
-use tempo::sim::{run, SimOpts, Topology};
+use tempo::sim::{run, ResourceModel, SimOpts, Topology};
 use tempo::util::Rng;
 use tempo::workload::ConflictWorkload;
 
@@ -71,12 +73,72 @@ fn write_stability_baseline(scan_ns: f64, inc_ns: f64) {
     );
     // cargo runs benches with CWD = the package dir (rust/); the baseline
     // lives at the repo root next to ROADMAP.md.
-    let path = match std::env::var("CARGO_MANIFEST_DIR") {
-        Ok(d) => format!("{d}/../BENCH_stability.json"),
-        Err(_) => "BENCH_stability.json".to_string(),
-    };
+    let path = baseline_path("BENCH_stability.json");
     match std::fs::write(&path, &json) {
         Ok(()) => println!("stability baseline written to {path} (speedup {speedup:.2}x)"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+/// cargo runs benches with CWD = the package dir (rust/); the baselines
+/// live at the repo root next to ROADMAP.md.
+fn baseline_path(name: &str) -> String {
+    match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(d) => format!("{d}/../{name}"),
+        Err(_) => name.to_string(),
+    }
+}
+
+/// Message batching on vs off: the same saturating Tempo workload under
+/// the CPU/NIC resource model, where every delivered frame costs a fixed
+/// per-message CPU charge — exactly what `MBatch` amortizes. Records
+/// simulated throughput and the observed batching counters.
+fn batching_comparison() {
+    fn one(config: Config) -> (f64, f64, tempo::metrics::Counters) {
+        let mut o = SimOpts::new(Topology::ec2());
+        o.clients_per_site = 128;
+        o.warmup_us = 1_000_000;
+        o.duration_us = 5_000_000;
+        o.seed = 7;
+        o.resources = Some(ResourceModel::cluster());
+        let start = Instant::now();
+        let result = run::<Tempo, _>(config, o, ConflictWorkload::new(0.02, 100));
+        let wall = start.elapsed().as_secs_f64();
+        (result.metrics.throughput_ops_s(), wall, result.metrics.counters)
+    }
+
+    let (base_ops_s, base_wall, base_c) = one(Config::new(5, 1));
+    let (batch_ops_s, batch_wall, batch_c) = one(Config::new(5, 1).with_batching(16));
+    println!(
+        "sim throughput (resource model): unbatched {base_ops_s:.0} ops/s, \
+         batched {batch_ops_s:.0} ops/s ({:.2}x); \
+         {} batches, {:.1} msgs/batch",
+        batch_ops_s / base_ops_s,
+        batch_c.batches_sent,
+        batch_c.mean_batch_size()
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"message_batching\",\n  \
+         \"workload\": \"tempo r=5 f=1, 640 closed-loop clients, 2% conflicts, \
+         100B payloads, CPU/NIC resource model (c5.2xlarge-like), 5s window\",\n  \
+         \"unbatched_ops_per_s\": {base_ops_s:.0},\n  \
+         \"batched_ops_per_s\": {batch_ops_s:.0},\n  \
+         \"throughput_ratio\": {:.3},\n  \
+         \"batch_max_msgs\": 16,\n  \
+         \"batches_sent\": {},\n  \
+         \"mean_batch_size\": {:.2},\n  \
+         \"unbatched_wall_s\": {base_wall:.2},\n  \"batched_wall_s\": {batch_wall:.2},\n  \
+         \"unbatched_fast_path_ratio\": {:.3},\n  \"batched_fast_path_ratio\": {:.3},\n  \
+         \"regenerate\": \"cargo bench --bench microbench\"\n}}\n",
+        batch_ops_s / base_ops_s,
+        batch_c.batches_sent,
+        batch_c.mean_batch_size(),
+        base_c.fast_path_ratio(),
+        batch_c.fast_path_ratio(),
+    );
+    let path = baseline_path("BENCH_batching.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("batching baseline written to {path}"),
         Err(e) => println!("could not write {path}: {e}"),
     }
 }
@@ -122,6 +184,10 @@ fn main() {
     // refactor optimizes); record the baseline JSON.
     let (scan_ns, inc_ns) = stability_watermark_bench();
     write_stability_baseline(scan_ns, inc_ns);
+
+    // Message batching on vs off under the resource model; records
+    // BENCH_batching.json.
+    batching_comparison();
 
     // Histogram record.
     let mut h = Histogram::new();

@@ -88,7 +88,7 @@ pub fn check_psmr(
     // baselines exploit this; Tempo orders everything, which also passes).
     let mut key_order: HashMap<Key, Vec<Dot>> = HashMap::new();
     {
-        let is_write = |dot: &Dot| submitted.get(dot).map_or(true, |c| c.op != crate::core::Op::Get);
+        let is_write = |dot: &Dot| submitted.get(dot).is_none_or(|c| c.op != crate::core::Op::Get);
         // key → per-process projected sequences
         let mut projections: HashMap<Key, Vec<(ProcessId, Vec<Dot>)>> = HashMap::new();
         for (p, order) in per_proc.iter().enumerate() {
@@ -200,8 +200,7 @@ pub fn check_psmr(
     // Union of per-key execution orders (consecutive edges); a cycle means
     // two partitions ordered two commands in contradictory ways.
     {
-        let is_write =
-            |dot: &Dot| submitted.get(dot).map_or(true, |c| c.op != crate::core::Op::Get);
+        let is_write = |dot: &Dot| submitted.get(dot).is_none_or(|c| c.op != crate::core::Op::Get);
         let mut indeg: HashMap<Dot, usize> = HashMap::new();
         let mut adj: HashMap<Dot, Vec<Dot>> = HashMap::new();
         let mut edge = |a: Dot, b: Dot, adj: &mut HashMap<Dot, Vec<Dot>>,
@@ -265,8 +264,10 @@ pub fn check_psmr(
             for s in cmd.shards(cfg.shards) {
                 for p in cfg.shard_procs(s.0) {
                     if !executed_sets[p].contains(dot) {
-                        violations
-                            .push(Violation::NotExecuted { process: ProcessId(p as u32), dot: *dot });
+                        violations.push(Violation::NotExecuted {
+                            process: ProcessId(p as u32),
+                            dot: *dot,
+                        });
                     }
                 }
             }

@@ -33,6 +33,19 @@ pub struct Config {
     /// state. 0 disables GC (memory then grows with the run, as the seed
     /// did unconditionally).
     pub gc_interval_ticks: u64,
+    /// Outgoing message batching (`protocol::common::batch::Batcher`):
+    /// a per-destination queue is wrapped into one `MBatch` wire frame
+    /// once it holds this many messages. 0 disables batching (every
+    /// message is its own frame, the seed behaviour).
+    pub batch_max_msgs: usize,
+    /// Batching flush policy. `true` (the default when batching is on):
+    /// queues are held across protocol steps and flushed on the size
+    /// threshold or the next periodic tick — maximum amortization, up to
+    /// one tick of added latency. `false`: queues are flushed at the end
+    /// of every protocol step, so batching only coalesces the messages
+    /// one step emits to the same destination and never delays anything
+    /// (behaviour- and timing-transparent; see `rust/tests/batching.rs`).
+    pub batch_hold: bool,
 }
 
 impl Config {
@@ -48,6 +61,8 @@ impl Config {
             bump_enabled: true,
             recovery_timeout_us: u64::MAX,
             gc_interval_ticks: 16,
+            batch_max_msgs: 0,
+            batch_hold: true,
         }
     }
 
@@ -74,6 +89,19 @@ impl Config {
 
     pub fn with_gc_interval_ticks(mut self, ticks: u64) -> Self {
         self.gc_interval_ticks = ticks;
+        self
+    }
+
+    /// Enable outgoing message batching with the given per-destination
+    /// size threshold (0 disables).
+    pub fn with_batching(mut self, max_msgs: usize) -> Self {
+        self.batch_max_msgs = max_msgs;
+        self
+    }
+
+    /// Select the batching flush policy (see [`Config::batch_hold`]).
+    pub fn with_batch_hold(mut self, hold: bool) -> Self {
+        self.batch_hold = hold;
         self
     }
 

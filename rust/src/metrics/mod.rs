@@ -80,6 +80,10 @@ pub struct Counters {
     pub gc_pruned: u64,
     /// Incremental stability-watermark advances observed by the executor.
     pub wm_advances: u64,
+    /// `MBatch` frames flushed by the outgoing message batcher.
+    pub batches_sent: u64,
+    /// Protocol messages carried inside those `MBatch` frames.
+    pub batched_msgs: u64,
 }
 
 impl Counters {
@@ -100,6 +104,18 @@ impl Counters {
         self.executed += o.executed;
         self.gc_pruned += o.gc_pruned;
         self.wm_advances += o.wm_advances;
+        self.batches_sent += o.batches_sent;
+        self.batched_msgs += o.batched_msgs;
+    }
+
+    /// Mean number of messages per flushed batch (0 when batching never
+    /// produced a multi-message frame).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches_sent == 0 {
+            0.0
+        } else {
+            self.batched_msgs as f64 / self.batches_sent as f64
+        }
     }
 }
 

@@ -2,12 +2,19 @@
 //! path — the Tempo state machine runs exactly as in the simulator, fed by
 //! length-prefixed frames from peer sockets).
 //!
-//! Topology: one [`Node`] per process, full mesh of TCP connections. Each
-//! node runs (a) an acceptor thread per peer connection that decodes frames
-//! into an event channel, (b) the protocol thread owning the Tempo state
-//! machine, the KV store, and a tick timer, (c) a client API
+//! Topology: one [`NodeHandle`] per process, full mesh of TCP connections.
+//! Each node runs (a) an acceptor thread per peer connection that decodes
+//! frames into an event channel, (b) the protocol thread owning the Tempo
+//! state machine, the KV store, and a tick timer, (c) a client API
 //! ([`NodeHandle::submit`]) that enqueues commands and returns completion
 //! notifications through a channel.
+//!
+//! With `Config::batch_max_msgs > 0` the protocol layer coalesces the
+//! messages bound for one peer into single `MBatch` frames
+//! (`protocol::common::batch`), so this send path makes one `write_all`
+//! (one syscall, one frame header) per batch instead of one per message —
+//! the TCP layer needs no batching logic of its own beyond the codec.
+//! Frame layout and limits are documented in `docs/WIRE.md`.
 
 pub mod wire;
 
@@ -17,7 +24,7 @@ use crate::protocol::tempo::msg::Msg;
 use crate::protocol::tempo::Tempo;
 use crate::protocol::{Action, Protocol};
 use crate::store::{KvStore, Response};
-use crate::util::error::{Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -74,10 +81,21 @@ fn write_frame(stream: &mut TcpStream, from: ProcessId, msg: &Msg) -> Result<()>
     Ok(())
 }
 
+/// Upper bound on one frame body (`docs/WIRE.md`): a corrupt or hostile
+/// length header must not make a node allocate gigabytes before the codec
+/// ever sees the bytes. The sender side cooperates: the batching layer
+/// flushes a destination queue at `BATCH_SOFT_MAX_BYTES` (4 MiB of
+/// estimated encoding, `protocol::common::batch`), keeping legitimate
+/// `MBatch` frames far below this cap.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
 fn read_frame(stream: &mut TcpStream) -> Result<(ProcessId, Msg)> {
     let mut hdr = [0u8; 8];
     stream.read_exact(&mut hdr)?;
     let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        bail!("frame of {len} bytes exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})");
+    }
     let from = ProcessId(u32::from_le_bytes(hdr[4..8].try_into().unwrap()));
     let mut body = vec![0u8; len];
     stream.read_exact(&mut body)?;

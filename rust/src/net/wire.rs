@@ -1,6 +1,8 @@
 //! Binary wire codec for Tempo messages (the offline registry has no
 //! serde, so framing is hand-rolled: length-prefixed frames, little-endian
-//! fixed-width integers, u8 message tags).
+//! fixed-width integers, u8 message tags). The complete frame layout —
+//! every tag, every compound encoding, and the malformed-input error
+//! contract — is documented in `docs/WIRE.md`; keep the two in sync.
 
 use crate::core::{ClientId, Command, Dot, Op, ProcessId, ShardId};
 use crate::protocol::tempo::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums};
@@ -9,6 +11,12 @@ use crate::util::error::{bail, Result};
 
 pub struct Writer {
     pub buf: Vec<u8>,
+}
+
+impl Default for Writer {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Writer {
@@ -46,7 +54,7 @@ impl Writer {
             self.u64(k);
         }
     }
-    fn quorums(&mut self, q: &Quorums) {
+    fn quorums(&mut self, q: &[(ShardId, Vec<ProcessId>)]) {
         self.u8(q.len() as u8);
         for (s, procs) in q {
             self.u32(s.0);
@@ -56,7 +64,7 @@ impl Writer {
             }
         }
     }
-    fn key_ts(&mut self, ts: &KeyTs) {
+    fn key_ts(&mut self, ts: &[(u64, u64)]) {
         self.u16(ts.len() as u16);
         for &(k, t) in ts {
             self.u64(k);
@@ -75,7 +83,7 @@ impl Writer {
             self.u64(t);
         }
     }
-    fn key_promises(&mut self, kp: &KeyPromises) {
+    fn key_promises(&mut self, kp: &[(u64, PromiseSet)]) {
         self.u16(kp.len() as u16);
         for (k, p) in kp {
             self.u64(*k);
@@ -292,13 +300,28 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
                 w.u64(wm);
             }
         }
+        Msg::MBatch { msgs } => {
+            w.u8(16);
+            w.u16(msgs.len() as u16);
+            for m in msgs {
+                let body = encode(m);
+                w.u32(body.len() as u32);
+                w.buf.extend_from_slice(&body);
+            }
+        }
     }
     w.buf
 }
 
-/// Decode a message (frame body).
+/// Decode a message (frame body). Trailing bytes after a complete
+/// top-level message are ignored (forward compatibility); inside an
+/// `MBatch` every member must consume its length prefix exactly.
 pub fn decode(buf: &[u8]) -> Result<Msg> {
     let mut r = Reader::new(buf);
+    decode_at(&mut r)
+}
+
+fn decode_at(r: &mut Reader) -> Result<Msg> {
     let tag = r.u8()?;
     let msg = match tag {
         0 => Msg::MSubmit { dot: r.dot()?, cmd: r.cmd()?, quorums: r.quorums()? },
@@ -355,6 +378,30 @@ pub fn decode(buf: &[u8]) -> Result<Msg> {
             }
             Msg::MGarbageCollect { executed }
         }
+        16 => {
+            // Length-prefixed member frames; a batch inside a batch is
+            // malformed by construction (the Batcher never nests) and is
+            // rejected *before* recursing — by peeking the member's tag —
+            // so a deeply nested hostile frame cannot overflow the stack.
+            // Each member must consume its declared length exactly;
+            // surplus bytes are corruption.
+            let n = r.u16()? as usize;
+            let mut msgs = Vec::with_capacity(n.min(256));
+            for _ in 0..n {
+                let len = r.u32()? as usize;
+                let body = r.take(len)?;
+                if body.first() == Some(&16) {
+                    bail!("nested MBatch frame");
+                }
+                let mut sub = Reader::new(body);
+                let inner = decode_at(&mut sub)?;
+                if sub.pos != len {
+                    bail!("MBatch member declared {len} bytes, used {}", sub.pos);
+                }
+                msgs.push(inner);
+            }
+            Msg::MBatch { msgs }
+        }
         x => bail!("bad message tag {x}"),
     };
     Ok(msg)
@@ -408,6 +455,67 @@ mod tests {
             executed: vec![(ProcessId(0), 41), (ProcessId(4), 7)],
         });
         roundtrip(Msg::MGarbageCollect { executed: vec![] });
+        roundtrip(Msg::MBatch {
+            msgs: vec![
+                Msg::MStable { dot },
+                Msg::MPromises { promises: vec![(1, ps)] },
+                Msg::MGarbageCollect { executed: vec![(ProcessId(2), 3)] },
+            ],
+        });
+        roundtrip(Msg::MBatch { msgs: vec![] });
+    }
+
+    #[test]
+    fn batch_frames_fail_cleanly_on_malformed_input() {
+        let dot = Dot::new(ProcessId(1), 2);
+        let msg = Msg::MBatch {
+            msgs: vec![Msg::MStable { dot }, Msg::MBump { dot, ts: 9 }],
+        };
+        let bytes = encode(&msg);
+        // Truncation anywhere inside the frame must error, not panic.
+        for cut in 0..bytes.len() {
+            assert!(decode(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        // An oversized member length (beyond the buffer) must error.
+        let mut oversized = bytes.clone();
+        // Layout: tag(1) + count(2) + first member len(4).
+        oversized[3..7].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&oversized).is_err(), "oversized member must fail");
+        // A member with trailing junk inside its declared length must
+        // error too: members consume their length prefix exactly.
+        let mut w = Writer::new();
+        w.u8(16);
+        w.u16(1);
+        let body = encode(&Msg::MStable { dot });
+        w.u32(body.len() as u32 + 2);
+        w.buf.extend_from_slice(&body);
+        w.u16(0xBEEF); // 2 junk bytes covered by the member length
+        assert!(decode(&w.buf).is_err(), "padded member must fail");
+        // A nested batch must be rejected, not recursed into.
+        let nested = Msg::MBatch { msgs: vec![] };
+        let mut w = Writer::new();
+        w.u8(16);
+        w.u16(1);
+        let body = encode(&nested);
+        w.u32(body.len() as u32);
+        w.buf.extend_from_slice(&body);
+        assert!(decode(&w.buf).is_err(), "nested MBatch must fail");
+    }
+
+    #[test]
+    fn deeply_nested_batch_errors_without_exhausting_the_stack() {
+        // A hostile frame of MBatch-wrapping-MBatch repeated many times
+        // must return Err from the tag peek, not recurse per level.
+        let mut frame = encode(&Msg::MStable { dot: Dot::new(ProcessId(1), 2) });
+        for _ in 0..100_000 {
+            let mut w = Writer::new();
+            w.u8(16);
+            w.u16(1);
+            w.u32(frame.len() as u32);
+            w.buf.extend_from_slice(&frame);
+            frame = w.buf;
+        }
+        assert!(decode(&frame).is_err(), "deep nesting must fail cleanly");
     }
 
     #[test]

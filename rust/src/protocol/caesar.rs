@@ -39,6 +39,23 @@ pub enum Msg {
     MCommit { dot: Dot, cmd: Command, ts: u64, deps: Vec<Dot> },
     /// Periodic GC exchange (`protocol::common::GCTrack`).
     MGarbageCollect { executed: Vec<(ProcessId, u64)> },
+    /// Batch frame (`protocol::common::batch`): several messages bound for
+    /// the same destination; unbatched inside `Process::dispatch`.
+    MBatch { msgs: Vec<Msg> },
+}
+
+impl super::common::BatchMsg for Msg {
+    fn batch(msgs: Vec<Msg>) -> Msg {
+        Msg::MBatch { msgs }
+    }
+
+    fn is_batch(&self) -> bool {
+        matches!(self, Msg::MBatch { .. })
+    }
+
+    fn approx_wire_bytes(&self) -> u64 {
+        self.wire_size()
+    }
 }
 
 impl Msg {
@@ -52,6 +69,9 @@ impl Msg {
             }
             Msg::MProposeNack { .. } => HDR + 16,
             Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
+            Msg::MBatch { msgs } => {
+                HDR + msgs.iter().map(|m| 4 + m.wire_size()).sum::<u64>()
+            }
         }
     }
 }
@@ -246,7 +266,7 @@ impl Caesar {
         if self.gc.was_executed(dot) {
             return;
         }
-        let already = self.info.get(&dot).map_or(false, |i| i.phase != Phase::Pending);
+        let already = self.info.get(&dot).is_some_and(|i| i.phase != Phase::Pending);
         if already {
             return;
         }
@@ -331,7 +351,6 @@ impl Caesar {
             }
         }
     }
-
 }
 
 impl GcProcess for Caesar {
@@ -451,6 +470,12 @@ impl Process for Caesar {
                 self.handle_commit(dot, cmd, ts, deps, &mut out, time)
             }
             Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
+            Msg::MBatch { msgs } => {
+                for m in msgs {
+                    let actions = self.dispatch(from, m, time);
+                    out.extend(actions);
+                }
+            }
         }
         out
     }
@@ -505,11 +530,12 @@ impl Protocol for Caesar {
         );
         let q = self.fast_quorum();
         self.broadcast(&q, Msg::MPropose { dot, cmd, ts }, time, &mut out);
-        out
+        self.outbound(out, false)
     }
 
     fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
-        self.dispatch(from, msg, time)
+        let out = self.dispatch(from, msg, time);
+        self.outbound(out, false)
     }
 
     fn tick(&mut self, _time: u64) -> Vec<Action<Msg>> {
@@ -520,7 +546,7 @@ impl Protocol for Caesar {
         self.ticks += 1;
         let ticks = self.ticks;
         self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
-        out
+        self.outbound(out, true)
     }
 
     fn crash(&mut self) {
@@ -528,7 +554,9 @@ impl Protocol for Caesar {
     }
 
     fn counters(&self) -> Counters {
-        self.counters
+        let mut c = self.counters;
+        self.bp.batcher.record_stats(&mut c);
+        c
     }
 
     fn msg_size(msg: &Msg) -> u64 {
@@ -540,6 +568,7 @@ impl Protocol for Caesar {
             infos: self.info.len(),
             keys: self.seen.len(),
             stalled: self.bp.stalled_len() + self.exec_blocked.len(),
+            queued: self.bp.batcher.queued(),
         }
     }
 }

@@ -3,30 +3,48 @@
 //! that every protocol previously hand-rolled (fantoch's `BaseProcess`
 //! factoring, adapted to this crate's side-effect-free state machines).
 
+use super::batch::{BatchMsg, Batcher};
 use crate::core::{Config, Dot, ProcessId, ShardId};
 use crate::protocol::Action;
 use std::collections::HashMap;
 
 /// State shared by every protocol implementation. Generic over the wire
-/// message type `M` so the stalled-message buffer can live here too.
+/// message type `M` so the stalled-message buffer and the outgoing
+/// message batcher can live here too.
 #[derive(Clone, Debug)]
 pub struct BaseProcess<M> {
+    /// This process's identifier.
     pub id: ProcessId,
+    /// The shard group this process replicates.
     pub group: ShardId,
     /// All machines of our shard group (the paper's `I_p`).
     pub group_procs: Vec<ProcessId>,
+    /// The cluster configuration.
     pub config: Config,
+    /// Set by `Protocol::crash`; a crashed process ignores all input.
     pub crashed: bool,
+    /// Per-destination coalescing of outgoing sends (`Config::batch_max_msgs`).
+    pub batcher: Batcher<M>,
     /// Messages whose precondition is not yet enabled, keyed by the command
     /// (or, for Caesar's wait condition, the blocking command).
     stalled: HashMap<Dot, Vec<(ProcessId, M)>>,
 }
 
 impl<M> BaseProcess<M> {
+    /// Build the shared state of process `id` under `config`.
     pub fn new(id: ProcessId, config: Config) -> Self {
         let group = config.shard_of(id);
         let group_procs = config.shard_processes(group);
-        BaseProcess { id, group, group_procs, config, crashed: false, stalled: HashMap::new() }
+        let batcher = Batcher::from_config(id, &config);
+        BaseProcess {
+            id,
+            group,
+            group_procs,
+            config,
+            crashed: false,
+            batcher,
+            stalled: HashMap::new(),
+        }
     }
 
     /// Shard-local process-id base (`group * r`).
@@ -34,6 +52,8 @@ impl<M> BaseProcess<M> {
         self.group.0 * self.config.r as u32
     }
 
+    /// Buffer a message from `from` whose precondition (keyed by `dot`)
+    /// is not yet enabled.
     pub fn stall(&mut self, dot: Dot, from: ProcessId, msg: M) {
         self.stalled.entry(dot).or_default().push((from, msg));
     }
@@ -58,9 +78,13 @@ impl<M> BaseProcess<M> {
 /// Provides the shared broadcast (self-addressed messages are delivered
 /// immediately, matching the paper) and the stalled-message machinery.
 pub trait Process: Sized {
+    /// The protocol's wire message type.
     type Msg: Clone;
 
+    /// The shared [`BaseProcess`] state.
     fn base(&self) -> &BaseProcess<Self::Msg>;
+
+    /// Mutable access to the shared [`BaseProcess`] state.
     fn base_mut(&mut self) -> &mut BaseProcess<Self::Msg>;
 
     /// The single message-dispatch entry point (`Protocol::handle` routes
@@ -107,6 +131,26 @@ pub trait Process: Sized {
             let actions = self.dispatch(from, msg, time);
             out.extend(actions);
         }
+    }
+
+    /// Route one protocol step's actions through the outgoing message
+    /// batcher ([`super::batch::Batcher`]). `Protocol::{submit, handle,
+    /// tick}` implementations call this exactly once per step, with `tick`
+    /// set on the periodic handler so held queues drain at least once per
+    /// tick interval. With batching disabled this is the identity.
+    fn outbound(&mut self, actions: Vec<Action<Self::Msg>>, tick: bool) -> Vec<Action<Self::Msg>>
+    where
+        Self::Msg: BatchMsg,
+    {
+        let batcher = &mut self.base_mut().batcher;
+        if !batcher.enabled() {
+            return actions;
+        }
+        let mut out = batcher.harvest(actions);
+        if tick || !batcher.hold() {
+            out.extend(batcher.flush());
+        }
+        out
     }
 }
 

@@ -1,0 +1,285 @@
+//! Outgoing message batching (the fantoch batching layer, see PAPERS
+//! "State-Machine Replication for Planet-Scale Systems"): coalesce the
+//! protocol messages bound for the same destination into a single `MBatch`
+//! wire frame, amortizing per-message framing, syscall and CPU costs.
+//!
+//! The layer is protocol-agnostic: every protocol `Msg` enum adds one
+//! `MBatch` variant and implements [`BatchMsg`]; the per-destination
+//! queueing lives here once, inside [`Batcher`], owned by
+//! [`super::base::BaseProcess`]. Unbatching happens inside each protocol's
+//! `Process::dispatch` (a batch frame simply re-dispatches its members in
+//! order), so handlers never see batches. Batching is off by default
+//! (`Config::batch_max_msgs == 0`); see `Config::batch_hold` for the two
+//! flush policies and `docs/WIRE.md` for the `MBatch` frame layout.
+
+use crate::core::{Config, ProcessId};
+use crate::metrics::Counters;
+use crate::protocol::Action;
+use std::collections::BTreeMap;
+
+/// Implemented by protocol message enums that carry an `MBatch` variant.
+///
+/// The contract: `batch(msgs)` wraps two or more non-batch messages, and
+/// `is_batch` recognizes the wrapper so [`Batcher`] never nests batches
+/// (the wire codec rejects nested batches as malformed input).
+pub trait BatchMsg: Sized {
+    /// Wrap `msgs` into the protocol's batch variant. Callers guarantee
+    /// `msgs.len() >= 2` and that no member is itself a batch.
+    fn batch(msgs: Vec<Self>) -> Self;
+
+    /// Is this message a batch frame?
+    fn is_batch(&self) -> bool;
+
+    /// Approximate encoded size in bytes (protocols delegate to their
+    /// `wire_size`). Drives the byte-based flush threshold so a batch
+    /// frame can never grow past the transport's frame cap.
+    fn approx_wire_bytes(&self) -> u64;
+}
+
+/// Byte-based flush threshold per destination queue: a queue whose
+/// estimated encoding reaches this flushes immediately, regardless of
+/// `Config::batch_max_msgs`. Held at 4 MiB — a quarter of the TCP
+/// runtime's `MAX_FRAME_BYTES` (16 MiB) — because `approx_wire_bytes`
+/// is an estimate, not the exact encoding; without this cap, a large
+/// message-count threshold times promise-heavy messages could build a
+/// frame the *receiver* rejects as hostile.
+pub const BATCH_SOFT_MAX_BYTES: u64 = 4 << 20;
+
+/// Per-destination coalescing of outgoing [`Action::Send`]s.
+///
+/// A queue is flushed as one [`BatchMsg::batch`] frame when it reaches
+/// `max_msgs` messages or [`BATCH_SOFT_MAX_BYTES`] of estimated encoding
+/// (inside [`Batcher::harvest`]), and any remainder is flushed by
+/// [`Batcher::flush`] — on every periodic tick under `batch_hold`, or
+/// at the end of every protocol step otherwise (see `Config::batch_hold`).
+/// Per-destination FIFO order is preserved; self-addressed sends and
+/// non-send actions pass through untouched. A queue holding a single
+/// message flushes it unwrapped (no one-element batches on the wire).
+#[derive(Clone, Debug)]
+pub struct Batcher<M> {
+    me: ProcessId,
+    max_msgs: usize,
+    hold: bool,
+    /// Pending messages and their summed `approx_wire_bytes`, per peer.
+    queues: BTreeMap<ProcessId, (Vec<M>, u64)>,
+    queued: usize,
+    batches_sent: u64,
+    batched_msgs: u64,
+}
+
+impl<M> Batcher<M> {
+    /// Build the batcher for process `me` from the cluster config.
+    pub fn from_config(me: ProcessId, config: &Config) -> Self {
+        Batcher {
+            me,
+            // The wire frame's member count is a u16 (docs/WIRE.md).
+            max_msgs: config.batch_max_msgs.min(u16::MAX as usize),
+            hold: config.batch_hold,
+            queues: BTreeMap::new(),
+            queued: 0,
+            batches_sent: 0,
+            batched_msgs: 0,
+        }
+    }
+
+    /// Is batching on at all? (`Config::batch_max_msgs > 0`.)
+    pub fn enabled(&self) -> bool {
+        self.max_msgs > 0
+    }
+
+    /// Are queues held across protocol steps (flushed on size threshold
+    /// or tick) rather than at the end of every step?
+    pub fn hold(&self) -> bool {
+        self.hold
+    }
+
+    /// Messages currently queued across all destinations (diagnostics;
+    /// reported through `Footprint::queued`).
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    /// Fold this batcher's lifetime statistics into `c`.
+    pub fn record_stats(&self, c: &mut Counters) {
+        c.batches_sent += self.batches_sent;
+        c.batched_msgs += self.batched_msgs;
+    }
+}
+
+impl<M: BatchMsg> Batcher<M> {
+    /// Route one protocol step's actions through the batcher: remote sends
+    /// are queued per destination (emitting a batch whenever a queue
+    /// reaches the size threshold); everything else passes through in
+    /// order. With batching disabled this is the identity.
+    pub fn harvest(&mut self, actions: Vec<Action<M>>) -> Vec<Action<M>> {
+        if !self.enabled() {
+            return actions;
+        }
+        let mut out = Vec::with_capacity(actions.len());
+        for action in actions {
+            match action {
+                Action::Send { to, msg } if to != self.me && !msg.is_batch() => {
+                    let bytes = msg.approx_wire_bytes();
+                    let (q, q_bytes) = self.queues.entry(to).or_default();
+                    q.push(msg);
+                    *q_bytes += bytes;
+                    self.queued += 1;
+                    if q.len() >= self.max_msgs || *q_bytes >= BATCH_SOFT_MAX_BYTES {
+                        let msgs = std::mem::take(q);
+                        *q_bytes = 0;
+                        self.queued -= msgs.len();
+                        out.push(Action::send(to, self.wrap(msgs)));
+                    }
+                }
+                other => out.push(other),
+            }
+        }
+        out
+    }
+
+    /// Flush every queue: one send per destination holding messages.
+    pub fn flush(&mut self) -> Vec<Action<M>> {
+        if self.queued == 0 {
+            return Vec::new();
+        }
+        let queues = std::mem::take(&mut self.queues);
+        self.queued = 0;
+        queues
+            .into_iter()
+            .filter(|(_, (q, _))| !q.is_empty())
+            .map(|(to, (q, _))| Action::send(to, self.wrap(q)))
+            .collect()
+    }
+
+    /// Wrap a drained queue: single messages go out as themselves.
+    fn wrap(&mut self, msgs: Vec<M>) -> M {
+        debug_assert!(!msgs.is_empty());
+        if msgs.len() == 1 {
+            return msgs.into_iter().next().expect("non-empty");
+        }
+        self.batches_sent += 1;
+        self.batched_msgs += msgs.len() as u64;
+        M::batch(msgs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Debug, PartialEq)]
+    enum TestMsg {
+        One(u64),
+        /// A message pretending to encode to this many bytes.
+        Big(u64),
+        Batch(Vec<TestMsg>),
+    }
+
+    impl BatchMsg for TestMsg {
+        fn batch(msgs: Vec<Self>) -> Self {
+            TestMsg::Batch(msgs)
+        }
+
+        fn is_batch(&self) -> bool {
+            matches!(self, TestMsg::Batch(_))
+        }
+
+        fn approx_wire_bytes(&self) -> u64 {
+            match self {
+                TestMsg::One(_) => 16,
+                TestMsg::Big(bytes) => *bytes,
+                TestMsg::Batch(msgs) => msgs.iter().map(|m| m.approx_wire_bytes()).sum(),
+            }
+        }
+    }
+
+    fn batcher(max: usize) -> Batcher<TestMsg> {
+        let config = Config::new(3, 1).with_batching(max);
+        Batcher::from_config(ProcessId(0), &config)
+    }
+
+    fn send(to: u32, v: u64) -> Action<TestMsg> {
+        Action::send(ProcessId(to), TestMsg::One(v))
+    }
+
+    #[test]
+    fn disabled_batcher_is_the_identity() {
+        let mut b = batcher(0);
+        assert!(!b.enabled());
+        let out = b.harvest(vec![send(1, 7), send(2, 8)]);
+        assert_eq!(out.len(), 2);
+        assert_eq!(b.queued(), 0);
+        assert!(b.flush().is_empty());
+    }
+
+    #[test]
+    fn size_threshold_flushes_in_fifo_order() {
+        let mut b = batcher(2);
+        let out = b.harvest(vec![send(1, 1), send(2, 9), send(1, 2), send(1, 3)]);
+        // P1's queue hit the threshold after (1, 2); (9) and (3) stay queued.
+        assert_eq!(out.len(), 1);
+        match &out[0] {
+            Action::Send { to, msg: TestMsg::Batch(msgs) } => {
+                assert_eq!(*to, ProcessId(1));
+                assert_eq!(*msgs, vec![TestMsg::One(1), TestMsg::One(2)]);
+            }
+            other => panic!("expected a batch to P1, got {other:?}"),
+        }
+        assert_eq!(b.queued(), 2);
+        let flushed = b.flush();
+        assert_eq!(flushed.len(), 2, "one send per queued destination");
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn single_message_queues_flush_unwrapped() {
+        let mut b = batcher(8);
+        assert!(b.harvest(vec![send(1, 5)]).is_empty());
+        let out = b.flush();
+        assert_eq!(out.len(), 1);
+        assert!(
+            matches!(&out[0], Action::Send { msg: TestMsg::One(5), .. }),
+            "lone message must not be wrapped: {out:?}"
+        );
+        let mut c = Counters::default();
+        b.record_stats(&mut c);
+        assert_eq!(c.batches_sent, 0, "no batch frame for a single message");
+    }
+
+    #[test]
+    fn self_sends_and_existing_batches_pass_through() {
+        let mut b = batcher(4);
+        let pre = TestMsg::Batch(vec![TestMsg::One(1), TestMsg::One(2)]);
+        let out = b.harvest(vec![send(0, 3), Action::send(ProcessId(2), pre.clone())]);
+        assert_eq!(out.len(), 2, "self-send and pre-batched frame pass through");
+        assert_eq!(b.queued(), 0);
+        assert!(matches!(&out[1], Action::Send { msg, .. } if *msg == pre));
+    }
+
+    #[test]
+    fn byte_threshold_flushes_before_the_count_threshold() {
+        // Threshold of 1000 messages, but two ~3 MiB messages cross the
+        // 4 MiB soft cap and must flush as a frame the transport accepts.
+        let mut b = batcher(1000);
+        let big = || Action::send(ProcessId(1), TestMsg::Big(3 << 20));
+        let out = b.harvest(vec![big(), big()]);
+        assert_eq!(out.len(), 1, "byte cap must force a flush");
+        match &out[0] {
+            Action::Send { msg: TestMsg::Batch(msgs), .. } => assert_eq!(msgs.len(), 2),
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn stats_count_batches_and_members() {
+        let mut b = batcher(3);
+        let _ = b.harvest((0..7).map(|v| send(1, v)).collect());
+        let _ = b.flush(); // 3 + 3 batched, then 1 unwrapped
+        let mut c = Counters::default();
+        b.record_stats(&mut c);
+        assert_eq!(c.batches_sent, 2);
+        assert_eq!(c.batched_msgs, 6);
+        assert_eq!(c.mean_batch_size(), 3.0);
+    }
+}

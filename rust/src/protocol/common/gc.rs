@@ -18,6 +18,11 @@ use crate::core::{Dot, ProcessId};
 use crate::protocol::Action;
 use std::collections::HashMap;
 
+/// Executed-command frontier tracking and the group-wide prune decision.
+///
+/// Records local executions as per-origin contiguous frontiers, folds in
+/// the frontiers peers report via `MGarbageCollect`, and yields the dot
+/// ranges every group member executed — safe to prune everywhere.
 #[derive(Clone, Debug)]
 pub struct GCTrack {
     id: ProcessId,
@@ -31,6 +36,7 @@ pub struct GCTrack {
 }
 
 impl GCTrack {
+    /// Tracker for process `id` whose shard group is `group`.
     pub fn new(id: ProcessId, group: Vec<ProcessId>) -> Self {
         GCTrack {
             id,
@@ -49,7 +55,7 @@ impl GCTrack {
     /// Was `dot` executed locally? Used to guard against resurrecting
     /// pruned state from stale messages and promise re-broadcasts.
     pub fn was_executed(&self, dot: Dot) -> bool {
-        self.executed.get(&dot.origin).map_or(false, |t| t.contains(dot.seq))
+        self.executed.get(&dot.origin).is_some_and(|t| t.contains(dot.seq))
     }
 
     /// Our per-origin contiguous executed frontier — the `MGarbageCollect`
@@ -111,6 +117,7 @@ impl GCTrack {
 /// dots; the periodic frontier exchange and the `MGarbageCollect` ingest
 /// live here once, shared by all protocol families.
 pub trait GcProcess: Process {
+    /// The protocol's [`GCTrack`] instance.
     fn gc_track(&mut self) -> &mut GCTrack;
 
     /// Drop protocol state for every dot [`GCTrack::safe_to_prune`]

@@ -6,6 +6,8 @@
 use crate::core::Dot;
 use std::collections::HashMap;
 
+/// Per-command bookkeeping map: one `I` record per [`Dot`], with a single
+/// creation point ([`CommandsInfo::ensure`]) and a GC prune hook.
 #[derive(Clone, Debug)]
 pub struct CommandsInfo<I> {
     info: HashMap<Dot, I>,
@@ -18,14 +20,17 @@ impl<I> Default for CommandsInfo<I> {
 }
 
 impl<I> CommandsInfo<I> {
+    /// The record for `dot`, if one exists.
     pub fn get(&self, dot: &Dot) -> Option<&I> {
         self.info.get(dot)
     }
 
+    /// Mutable access to the record for `dot`, if one exists.
     pub fn get_mut(&mut self, dot: &Dot) -> Option<&mut I> {
         self.info.get_mut(dot)
     }
 
+    /// Is there a record for `dot`?
     pub fn contains(&self, dot: &Dot) -> bool {
         self.info.contains_key(dot)
     }
@@ -45,10 +50,12 @@ impl<I> CommandsInfo<I> {
         self.info.remove(dot).is_some()
     }
 
+    /// Number of retained records (memory diagnostics).
     pub fn len(&self) -> usize {
         self.info.len()
     }
 
+    /// Is the map empty?
     pub fn is_empty(&self) -> bool {
         self.info.is_empty()
     }

@@ -1,22 +1,27 @@
 //! The shared protocol base layer (the fantoch `BaseProcess`/`GCTrack`
 //! factoring, see PAPERS "State-Machine Replication for Planet-Scale
 //! Systems"): identity/group/config state with broadcast and stalled-
-//! message buffering ([`BaseProcess`]/[`Process`]), generic per-command
-//! bookkeeping ([`CommandsInfo`]), group-wide garbage collection of
-//! executed commands ([`GCTrack`]), the stability kernel shared with the
-//! runtime ([`stability`]), and wire-size accounting ([`wire`]).
+//! message buffering ([`BaseProcess`]/[`Process`]), outgoing message
+//! batching ([`batch`]), generic per-command bookkeeping
+//! ([`CommandsInfo`]), group-wide garbage collection of executed commands
+//! ([`GCTrack`]), the stability kernel shared with the runtime
+//! ([`stability`]), and wire-size accounting ([`wire`]).
 //!
 //! Layering: `core` → `protocol/common` → protocol implementations
 //! (`tempo`, `depsmr`, `caesar`, `fpaxos`) → `executor`/`runtime` →
-//! `sim`/`net`. See ARCHITECTURE.md.
+//! `sim`/`net`. See ARCHITECTURE.md and docs/WIRE.md.
+
+#![warn(missing_docs)]
 
 pub mod base;
+pub mod batch;
 pub mod gc;
 pub mod info;
 pub mod stability;
 pub mod wire;
 
 pub use base::{BaseProcess, Process};
+pub use batch::{BatchMsg, Batcher};
 pub use gc::{GCTrack, GcProcess};
 pub use info::CommandsInfo;
 pub use stability::{majority_watermark, ExecutedSet, QuorumFrontier, SourceTracker};

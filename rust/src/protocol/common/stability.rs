@@ -110,6 +110,7 @@ pub struct QuorumFrontier {
 }
 
 impl QuorumFrontier {
+    /// Frontier over `processes` with the given `majority` threshold.
     pub fn new(processes: &[ProcessId], majority: usize) -> Self {
         assert!(majority >= 1 && majority <= processes.len());
         QuorumFrontier {
@@ -164,14 +165,14 @@ pub struct ExecutedSet {
 }
 
 impl ExecutedSet {
+    /// Record `dot` as executed.
     pub fn insert(&mut self, dot: Dot) {
         self.per_origin.entry(dot.origin).or_default().add(dot.seq.saturating_add(1));
     }
 
+    /// Was `dot` recorded as executed?
     pub fn contains(&self, dot: Dot) -> bool {
-        self.per_origin
-            .get(&dot.origin)
-            .map_or(false, |t| t.contains(dot.seq.saturating_add(1)))
+        self.per_origin.get(&dot.origin).is_some_and(|t| t.contains(dot.seq.saturating_add(1)))
     }
 
     /// Out-of-order entries buffered across all origins (diagnostics).

@@ -76,6 +76,23 @@ pub enum Msg {
     MReady { dot: Dot },
     /// Periodic GC exchange (`protocol::common::GCTrack`).
     MGarbageCollect { executed: Vec<(ProcessId, u64)> },
+    /// Batch frame (`protocol::common::batch`): several messages bound for
+    /// the same destination; unbatched inside `Process::dispatch`.
+    MBatch { msgs: Vec<Msg> },
+}
+
+impl super::common::BatchMsg for Msg {
+    fn batch(msgs: Vec<Msg>) -> Msg {
+        Msg::MBatch { msgs }
+    }
+
+    fn is_batch(&self) -> bool {
+        matches!(self, Msg::MBatch { .. })
+    }
+
+    fn approx_wire_bytes(&self) -> u64 {
+        self.wire_size()
+    }
 }
 
 impl Msg {
@@ -88,6 +105,9 @@ impl Msg {
             | Msg::MCommit { deps, .. }
             | Msg::MConsensus { deps, .. } => HDR + dots(deps.len()),
             Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
+            Msg::MBatch { msgs } => {
+                HDR + msgs.iter().map(|m| 4 + m.wire_size()).sum::<u64>()
+            }
             _ => HDR + 16,
         }
     }
@@ -269,7 +289,7 @@ impl DepCore {
         out: &mut Vec<Action<Msg>>,
     ) {
         if self.gc.was_executed(dot)
-            || self.info.get(&dot).map_or(false, |i| i.phase != Phase::Start)
+            || self.info.get(&dot).is_some_and(|i| i.phase != Phase::Start)
         {
             return;
         }
@@ -322,7 +342,7 @@ impl DepCore {
         out: &mut Vec<Action<Msg>>,
     ) {
         if self.gc.was_executed(dot)
-            || self.info.get(&dot).map_or(false, |i| i.phase != Phase::Start)
+            || self.info.get(&dot).is_some_and(|i| i.phase != Phase::Start)
         {
             return;
         }
@@ -656,6 +676,7 @@ impl DepCore {
             infos: self.info.len(),
             keys: self.conflicts.len(),
             stalled: self.bp.stalled_len() + self.blocked_on.len(),
+            queued: self.bp.batcher.queued(),
         }
     }
 }
@@ -733,7 +754,7 @@ impl Process for DepCore {
                 if self.gc.was_executed(dot) {
                     return out;
                 }
-                if self.info.get(&dot).map_or(true, |i| i.phase == Phase::Start) {
+                if self.info.get(&dot).is_none_or(|i| i.phase == Phase::Start) {
                     let info = self.info.ensure(dot, Info::new);
                     info.phase = Phase::Payload;
                     info.cmd = Some(cmd);
@@ -752,6 +773,12 @@ impl Process for DepCore {
             }
             Msg::MReady { dot } => self.handle_ready(from, dot, &mut out),
             Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
+            Msg::MBatch { msgs } => {
+                for m in msgs {
+                    let actions = self.dispatch(from, m, time);
+                    out.extend(actions);
+                }
+            }
         }
         out
     }
@@ -780,15 +807,18 @@ macro_rules! dep_protocol {
             }
 
             fn submit(&mut self, dot: Dot, cmd: Command, time: u64) -> Vec<Action<Msg>> {
-                self.0.submit(dot, cmd, time)
+                let out = self.0.submit(dot, cmd, time);
+                self.0.outbound(out, false)
             }
 
             fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
-                self.0.dispatch(from, msg, time)
+                let out = self.0.dispatch(from, msg, time);
+                self.0.outbound(out, false)
             }
 
             fn tick(&mut self, time: u64) -> Vec<Action<Msg>> {
-                self.0.tick(time)
+                let out = self.0.tick(time);
+                self.0.outbound(out, true)
             }
 
             fn crash(&mut self) {
@@ -796,7 +826,9 @@ macro_rules! dep_protocol {
             }
 
             fn counters(&self) -> Counters {
-                self.0.counters
+                let mut c = self.0.counters;
+                self.0.bp.batcher.record_stats(&mut c);
+                c
             }
 
             fn msg_size(msg: &Msg) -> u64 {

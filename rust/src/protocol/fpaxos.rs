@@ -32,6 +32,23 @@ pub enum Msg {
     MCommit { slot: u64 },
     /// Periodic GC exchange (`protocol::common::GCTrack`).
     MGarbageCollect { executed: Vec<(ProcessId, u64)> },
+    /// Batch frame (`protocol::common::batch`): several messages bound for
+    /// the same destination; unbatched inside `Process::dispatch`.
+    MBatch { msgs: Vec<Msg> },
+}
+
+impl super::common::BatchMsg for Msg {
+    fn batch(msgs: Vec<Msg>) -> Msg {
+        Msg::MBatch { msgs }
+    }
+
+    fn is_batch(&self) -> bool {
+        matches!(self, Msg::MBatch { .. })
+    }
+
+    fn approx_wire_bytes(&self) -> u64 {
+        self.wire_size()
+    }
 }
 
 impl Msg {
@@ -40,6 +57,9 @@ impl Msg {
         match self {
             Msg::MForward { cmd, .. } | Msg::MAccept { cmd, .. } => HDR + cmd.wire_size(),
             Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
+            Msg::MBatch { msgs } => {
+                HDR + msgs.iter().map(|m| 4 + m.wire_size()).sum::<u64>()
+            }
             _ => HDR + 8,
         }
     }
@@ -119,7 +139,6 @@ impl FPaxos {
         self.acks.remove(&slot);
         self.advance(out);
     }
-
 }
 
 impl GcProcess for FPaxos {
@@ -192,6 +211,12 @@ impl Process for FPaxos {
                 self.commit_slot(slot, &mut out);
             }
             Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
+            Msg::MBatch { msgs } => {
+                for m in msgs {
+                    let actions = self.dispatch(from, m, _time);
+                    out.extend(actions);
+                }
+            }
         }
         out
     }
@@ -230,11 +255,12 @@ impl Protocol for FPaxos {
         } else {
             out.push(Action::send(self.leader(), Msg::MForward { dot, cmd }));
         }
-        out
+        self.outbound(out, false)
     }
 
     fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
-        self.dispatch(from, msg, time)
+        let out = self.dispatch(from, msg, time);
+        self.outbound(out, false)
     }
 
     fn tick(&mut self, _time: u64) -> Vec<Action<Msg>> {
@@ -245,7 +271,7 @@ impl Protocol for FPaxos {
         self.ticks += 1;
         let ticks = self.ticks;
         self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
-        out
+        self.outbound(out, true)
     }
 
     fn crash(&mut self) {
@@ -253,7 +279,9 @@ impl Protocol for FPaxos {
     }
 
     fn counters(&self) -> Counters {
-        self.counters
+        let mut c = self.counters;
+        self.bp.batcher.record_stats(&mut c);
+        c
     }
 
     fn msg_size(msg: &Msg) -> u64 {
@@ -265,6 +293,7 @@ impl Protocol for FPaxos {
             infos: self.log.len(),
             keys: 0,
             stalled: self.bp.stalled_len() + self.acks.len(),
+            queued: self.bp.batcher.queued(),
         }
     }
 }

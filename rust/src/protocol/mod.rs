@@ -28,6 +28,8 @@ pub struct Footprint {
     pub keys: usize,
     /// Commands with buffered (stalled/blocked) messages.
     pub stalled: usize,
+    /// Outgoing messages currently held in the batcher's queues.
+    pub queued: usize,
 }
 
 /// Output of a protocol step.

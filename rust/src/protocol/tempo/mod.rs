@@ -205,8 +205,7 @@ impl Tempo {
                 .entry(*k)
                 .or_insert_with(|| KeyState::new(procs, majority));
             let unknown = state.store.add(source, batch, |dot| {
-                info.get(&dot).map_or(false, |i| i.phase.is_committed())
-                    || gc.was_executed(dot)
+                info.get(&dot).is_some_and(|i| i.phase.is_committed()) || gc.was_executed(dot)
             });
             self.dirty.insert(*k);
             for dot in unknown {
@@ -788,7 +787,6 @@ impl Tempo {
             _ => {}
         }
     }
-
 }
 
 impl GcProcess for Tempo {
@@ -876,6 +874,14 @@ impl Process for Tempo {
             Msg::MRecNAck { dot, bal } => self.handle_rec_nack(dot, bal, time, &mut out),
             Msg::MCommitRequest { dot } => self.handle_commit_request(from, dot, &mut out),
             Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
+            // Unbatching lives here, not in the handlers: a batch frame
+            // re-dispatches its members in order (protocol::common::batch).
+            Msg::MBatch { msgs } => {
+                for m in msgs {
+                    let actions = self.dispatch(from, m, time);
+                    out.extend(actions);
+                }
+            }
         }
         out
     }
@@ -1165,11 +1171,12 @@ impl Protocol for Tempo {
             .map(|&g| self.bp.config.closest_in_shard(self.bp.id, g))
             .collect();
         self.broadcast(&coords, Msg::MSubmit { dot, cmd, quorums }, time, &mut out);
-        out
+        self.outbound(out, false)
     }
 
     fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
-        self.dispatch(from, msg, time)
+        let out = self.dispatch(from, msg, time);
+        self.outbound(out, false)
     }
 
     /// Periodic handler: broadcast freshly generated promises, advance
@@ -1244,7 +1251,7 @@ impl Protocol for Tempo {
                 .iter()
                 .copied()
                 .filter(|d| {
-                    self.info.get(d).map_or(false, |i| {
+                    self.info.get(d).is_some_and(|i| {
                         i.phase.is_pending()
                             && time.saturating_sub(i.pending_since) >= timeout
                             && (i.bal == 0 || ballot::leader(i.bal, r, base) != me)
@@ -1283,7 +1290,7 @@ impl Protocol for Tempo {
                 }
             }
         }
-        out
+        self.outbound(out, true)
     }
 
     fn crash(&mut self) {
@@ -1295,7 +1302,9 @@ impl Protocol for Tempo {
     }
 
     fn counters(&self) -> Counters {
-        self.counters
+        let mut c = self.counters;
+        self.bp.batcher.record_stats(&mut c);
+        c
     }
 
     fn msg_size(msg: &Msg) -> u64 {
@@ -1307,6 +1316,7 @@ impl Protocol for Tempo {
             infos: self.info.len(),
             keys: self.keys.len(),
             stalled: self.bp.stalled_len() + self.missing.len(),
+            queued: self.bp.batcher.queued(),
         }
     }
 }

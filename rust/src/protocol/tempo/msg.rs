@@ -86,6 +86,24 @@ pub enum Msg {
     /// Periodic GC exchange (`protocol::common::GCTrack`): the sender's
     /// per-origin contiguous frontier of executed commands.
     MGarbageCollect { executed: Vec<(ProcessId, u64)> },
+    /// Batch frame (`protocol::common::batch`): several messages bound for
+    /// the same destination in one frame. Never nested; unbatched inside
+    /// `Process::dispatch`, so handlers never see it.
+    MBatch { msgs: Vec<Msg> },
+}
+
+impl crate::protocol::common::BatchMsg for Msg {
+    fn batch(msgs: Vec<Msg>) -> Msg {
+        Msg::MBatch { msgs }
+    }
+
+    fn is_batch(&self) -> bool {
+        matches!(self, Msg::MBatch { .. })
+    }
+
+    fn approx_wire_bytes(&self) -> u64 {
+        self.wire_size()
+    }
 }
 
 impl Msg {
@@ -114,6 +132,11 @@ impl Msg {
                 HDR + 8 + key_vals(ts.len())
             }
             Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
+            // One frame header amortized over the members (each inner size
+            // already includes its own HDR; 4 bytes of length prefix each).
+            Msg::MBatch { msgs } => {
+                HDR + msgs.iter().map(|m| 4 + m.wire_size()).sum::<u64>()
+            }
             _ => HDR + 16,
         }
     }

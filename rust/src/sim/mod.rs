@@ -6,6 +6,16 @@
 //! Figs. 7–9), closed-loop clients, optional site-level batching, and a
 //! crash/suspect schedule for the recovery experiments. Runs are fully
 //! deterministic given the seed.
+//!
+//! Two distinct batching layers meet here. *Site-level client batching*
+//! (`SimOpts::batching`, Fig. 8) merges several clients' commands into one
+//! submitted command before the protocol sees them. *Message batching*
+//! (`Config::batch_max_msgs`, `protocol::common::batch`) coalesces a
+//! process's outgoing protocol messages per destination into `MBatch`
+//! frames; it happens inside the protocols, so a batch is one `Deliver`
+//! event whose `msg_size` covers all members — the resource model charges
+//! one per-message CPU cost instead of many, and `SimResult::footprints`
+//! plus `Counters::{batches_sent, batched_msgs}` report what batching did.
 
 pub mod resource;
 pub mod topology;
@@ -90,6 +100,19 @@ enum Event<M> {
     Suspect { at: ProcessId, suspected: ProcessId },
 }
 
+/// Heap key: `(time, kind rank, actor, co-actor, sequence)`.
+///
+/// Events at the same timestamp are ordered *canonically* — by what the
+/// event is (crashes, then ticks, then client submits, then site-batch
+/// flushes, then message deliveries ordered by destination/sender/FIFO
+/// rank) — never by heap-insertion order. This makes the schedule a pure
+/// function of the delivered-message multiset, so regrouping deliveries
+/// (message batching under `Config::batch_hold == false`) provably cannot
+/// change a run: `rust/tests/batching.rs` asserts batched and unbatched
+/// runs execute identically, and that assertion is schedule-stable rather
+/// than true-for-this-seed.
+type EventKey = (u64, u8, u32, u32, u64);
+
 struct InFlight {
     /// (client index, submit time) — batches carry several members.
     members: Vec<(usize, u64)>,
@@ -105,9 +128,13 @@ pub struct Simulation<P: Protocol, W: Workload> {
     dead: Vec<bool>,
     dots: Vec<DotGen>,
     resources: Vec<ResourceState>,
-    heap: BinaryHeap<Reverse<(u64, u64)>>,
-    payloads: HashMap<(u64, u64), Event<P::Message>>,
-    seq: u64,
+    heap: BinaryHeap<Reverse<EventKey>>,
+    payloads: HashMap<EventKey, Event<P::Message>>,
+    /// Per-(from, to) delivery rank: preserves sender FIFO order at equal
+    /// delivery times (see [`EventKey`]).
+    pair_seq: HashMap<(ProcessId, ProcessId), u64>,
+    /// Rank for the event classes without a natural identity counter.
+    aux_seq: u64,
     now: u64,
     workload: W,
     rng: Rng,
@@ -149,7 +176,8 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             resources,
             heap: BinaryHeap::new(),
             payloads: HashMap::new(),
-            seq: 0,
+            pair_seq: HashMap::new(),
+            aux_seq: 0,
             now: 0,
             workload,
             rng,
@@ -167,8 +195,32 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
     }
 
     fn push(&mut self, time: u64, ev: Event<P::Message>) {
-        self.seq += 1;
-        let key = (time, self.seq);
+        let key: EventKey = match &ev {
+            // A process crashes before anything else it would do at the
+            // same instant (matching the pre-canonical push order, where
+            // crashes were scheduled first).
+            Event::Crash { p } => {
+                self.aux_seq += 1;
+                (time, 0, p.0, 0, self.aux_seq)
+            }
+            // Ticks of one process sit at distinct times (interval >= 1).
+            Event::Tick { p } => (time, 1, p.0, 0, 0),
+            // A closed-loop client has at most one pending submit event.
+            Event::ClientSubmit { client } => (time, 2, *client as u32, 0, 0),
+            Event::BatchFlush { site } => {
+                self.aux_seq += 1;
+                (time, 3, *site as u32, 0, self.aux_seq)
+            }
+            Event::Deliver { from, to, .. } => {
+                let c = self.pair_seq.entry((*from, *to)).or_insert(0);
+                *c += 1;
+                (time, 4, to.0, from.0, *c)
+            }
+            Event::Suspect { at, suspected } => {
+                self.aux_seq += 1;
+                (time, 5, at.0, suspected.0, self.aux_seq)
+            }
+        };
         self.heap.push(Reverse(key));
         self.payloads.insert(key, ev);
     }
@@ -192,7 +244,7 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         }
 
         while let Some(Reverse(key)) = self.heap.pop() {
-            let (time, _) = key;
+            let time = key.0;
             if time > self.final_time {
                 break;
             }
@@ -304,7 +356,8 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             return;
         }
         let dot = self.dots[origin.0 as usize].next();
-        let mut cmd = Command::new(ClientId(members[0].0 as u64), spec.keys, spec.op, spec.payload_len);
+        let mut cmd =
+            Command::new(ClientId(members[0].0 as u64), spec.keys, spec.op, spec.payload_len);
         cmd.batched = members.len() as u32;
         let ops = cmd.batched;
         if self.opts.record_execution {
@@ -396,10 +449,12 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
                 .iter()
                 .zip(snap)
                 .map(|(r, (c0, i0, o0))| {
-                    let mut adj = ResourceState::default();
-                    adj.cpu_busy_us = r.cpu_busy_us - c0;
-                    adj.in_busy_us = r.in_busy_us - i0;
-                    adj.out_busy_us = r.out_busy_us - o0;
+                    let adj = ResourceState {
+                        cpu_busy_us: r.cpu_busy_us - c0,
+                        in_busy_us: r.in_busy_us - i0,
+                        out_busy_us: r.out_busy_us - o0,
+                        ..ResourceState::default()
+                    };
                     adj.utilization(window)
                 })
                 .collect();

@@ -40,7 +40,12 @@ impl Batcher {
     /// Buffer a command. Returns `Some(flush_deadline)` if this entry
     /// started a new batch (caller should schedule a flush event), and the
     /// batch itself if the size cap was reached.
-    pub fn push(&mut self, client: usize, spec: CommandSpec, now_us: u64) -> (Option<u64>, Option<Batch>) {
+    pub fn push(
+        &mut self,
+        client: usize,
+        spec: CommandSpec,
+        now_us: u64,
+    ) -> (Option<u64>, Option<Batch>) {
         let new_deadline = if self.buf.is_empty() {
             let d = now_us + self.max_delay_us;
             self.deadline_us = Some(d);

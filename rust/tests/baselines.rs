@@ -24,7 +24,11 @@ fn opts(topology: Topology, seed: u64) -> SimOpts {
 fn atlas_r5_f1_low_conflict() {
     let config = Config::new(5, 1);
     let result =
-        run::<Atlas, _>(config.clone(), opts(Topology::ec2(), 31), ConflictWorkload::new(0.02, 100));
+        run::<Atlas, _>(
+            config.clone(),
+            opts(Topology::ec2(), 31),
+            ConflictWorkload::new(0.02, 100),
+        );
     assert!(result.metrics.ops > 50);
     assert_psmr(&config, &result, true);
     // Atlas f=1 always takes the fast path (§6 intro).

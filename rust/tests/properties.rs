@@ -212,7 +212,7 @@ fn prop_wire_decode_never_panics_on_corrupt_input() {
         let _ = decode(&junk);
         // 2. Truncations and single-bit corruptions of a valid frame.
         let dot = Dot::new(ProcessId(rng.gen_range(8) as u32), rng.gen_range(1 << 16) + 1);
-        let msg = match rng.gen_range(4) {
+        let msg = match rng.gen_range(5) {
             0 => Msg::MRecAck {
                 dot,
                 ts: vec![(rng.gen_range(100), rng.gen_range(100))],
@@ -231,6 +231,12 @@ fn prop_wire_decode_never_panics_on_corrupt_input() {
                         attached: vec![(dot, rng.gen_range(50) + 1)],
                     },
                 )],
+            },
+            3 => Msg::MBatch {
+                msgs: vec![
+                    Msg::MStable { dot },
+                    Msg::MBump { dot, ts: rng.gen_range(1 << 16) },
+                ],
             },
             _ => Msg::MStable { dot },
         };
@@ -253,7 +259,8 @@ fn prop_wire_codec_roundtrips_random_messages() {
         "wire-roundtrip",
         |rng| {
             let dot = Dot::new(ProcessId(rng.gen_range(16) as u32), rng.gen_range(1 << 20));
-            let keys: Vec<u64> = (0..1 + rng.gen_range(4)).map(|_| rng.gen_range(1 << 30)).collect();
+            let keys: Vec<u64> =
+                (0..1 + rng.gen_range(4)).map(|_| rng.gen_range(1 << 30)).collect();
             let cmd = Command::new(
                 ClientId(rng.gen_range(1 << 16)),
                 keys.clone(),
