@@ -1,9 +1,13 @@
 //! End-to-end driver (DESIGN.md requirement): a REAL Tempo cluster —
-//! three OS processes... er, three full nodes with real TCP sockets on
-//! localhost, each running the production state machine, the wire codec,
-//! the tick loop and an in-memory KV store. Closed-loop clients submit a
-//! YCSB-style workload through the leader-local API; we report throughput
-//! and the latency distribution, and verify the replicas' stores converged.
+//! three full nodes with real TCP sockets on localhost, each running the
+//! production state machine, the wire codec, the tick loop and an
+//! in-memory KV store — serving REAL request/response clients: every
+//! client is a `TcpClient` session on its own socket, sending
+//! `ClientSubmit` frames (docs/WIRE.md tag 17) and blocking for the
+//! matching `ClientReply` (tag 18). We report throughput and the latency
+//! distribution, verify the replicas' stores converged, and — the
+//! response-validity half — check a sequential client's responses
+//! byte-for-byte against a local KvStore oracle.
 //!
 //! Run with: `cargo run --release --example e2e_cluster`
 //! Results recorded in EXPERIMENTS.md §E2E.
@@ -11,9 +15,11 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+use tempo::client::Session;
 use tempo::core::{ClientId, Command, Config, Op, ProcessId};
 use tempo::metrics::Histogram;
-use tempo::net::{local_addrs, start_node};
+use tempo::net::{local_addrs, start_node, TcpClient};
+use tempo::store::KvStore;
 use tempo::util::{Rng, Zipf};
 
 fn main() -> tempo::util::error::Result<()> {
@@ -39,7 +45,8 @@ fn main() -> tempo::util::error::Result<()> {
         .collect();
     std::thread::sleep(Duration::from_millis(300)); // mesh up
 
-    // Closed-loop clients: 8 per node, zipfian keys, 50% RMW.
+    // Closed-loop TCP clients: 8 per node, each a real socket speaking
+    // ClientSubmit/ClientReply; zipfian keys, 50% RMW.
     let clients_per_node = 8;
     let duration = Duration::from_secs(10);
     let ops = Arc::new(AtomicU64::new(0));
@@ -47,27 +54,30 @@ fn main() -> tempo::util::error::Result<()> {
     let deadline = Instant::now() + duration;
 
     std::thread::scope(|scope| {
-        for (n, node) in nodes.iter().enumerate() {
+        for (n, addr) in addrs.iter().enumerate() {
             for c in 0..clients_per_node {
                 let ops = ops.clone();
                 let hist = hist.clone();
                 scope.spawn(move || {
+                    let client = ClientId((n * 100 + c) as u64);
+                    let mut tc = match TcpClient::connect(addr, client) {
+                        Ok(tc) => tc,
+                        Err(e) => panic!("client {client:?}: connect: {e:#}"),
+                    };
+                    tc.set_timeout(Some(Duration::from_secs(5))).expect("timeout");
                     let mut rng = Rng::new((n * 100 + c) as u64 + 1);
                     let zipf = Zipf::new(10_000, 0.7);
-                    let client = ClientId((n * 100 + c) as u64);
                     while Instant::now() < deadline {
                         let key = zipf.sample(&mut rng);
                         let op = if rng.gen_bool(0.5) { Op::Rmw } else { Op::Get };
-                        let cmd = Command::single(client, key, op, 100);
                         let t0 = Instant::now();
-                        let rx = node.submit(cmd);
-                        match rx.recv_timeout(Duration::from_secs(5)) {
+                        match tc.submit_single(key, op, 100) {
                             Ok(_) => {
                                 ops.fetch_add(1, Ordering::Relaxed);
                                 hist.lock().unwrap().record(t0.elapsed().as_micros() as u64);
                             }
                             Err(e) => {
-                                eprintln!("client {client:?}: timeout ({e}); stopping");
+                                eprintln!("client {client:?}: {e:#}; stopping");
                                 break;
                             }
                         }
@@ -81,12 +91,40 @@ fn main() -> tempo::util::error::Result<()> {
     let h = hist.lock().unwrap();
     let t = h.tail_summary();
     println!(
-        "\ne2e cluster results ({}s, {} closed-loop clients):",
+        "\ne2e cluster results ({}s, {} closed-loop TCP clients):",
         duration.as_secs(),
         r * clients_per_node
     );
     println!("  throughput: {:.0} ops/s", total as f64 / duration.as_secs_f64());
     println!("  latency: {t}");
+    drop(h);
+
+    // Response validity over real TCP: a fresh client works a private key
+    // range (untouched by the load phase) and every reply must match a
+    // local sequential KvStore oracle replaying the same commands.
+    let mut oracle = KvStore::new();
+    let mut mirror = Session::new(ClientId(9_999));
+    let mut tc = TcpClient::connect(&addrs[0], ClientId(9_999))?;
+    tc.set_timeout(Some(Duration::from_secs(5)))?;
+    let base = 1u64 << 40;
+    let mut checked = 0u32;
+    for i in 0..60u64 {
+        let key = base + i % 20;
+        let op = match i % 3 {
+            0 => Op::Put,
+            1 => Op::Rmw,
+            _ => Op::Get,
+        };
+        let payload = (i % 128) as u32;
+        let expect = oracle.execute(&Command::single(mirror.next_rid(), key, op.clone(), payload));
+        let (_, got) = tc.submit_single(key, op, payload)?;
+        assert_eq!(
+            got, expect,
+            "response diverged from the sequential oracle at op {i} (key {key})"
+        );
+        checked += 1;
+    }
+    println!("  oracle check: {checked} sequential responses match the KvStore oracle");
 
     // Let in-flight work drain, then verify convergence.
     std::thread::sleep(Duration::from_millis(800));
@@ -110,7 +148,10 @@ fn main() -> tempo::util::error::Result<()> {
         "replicas too far apart: {digests:?}"
     );
     // Replicas that executed the same count must agree on the digest.
-    println!("\ne2e cluster OK: {total} ops served over real TCP; replicas converge.");
+    println!(
+        "\ne2e cluster OK: {total} ops served over real TCP \
+         (ClientSubmit in, ClientReply out); replicas converge."
+    );
     for n in nodes {
         n.shutdown();
     }

@@ -10,13 +10,19 @@ one-frame-per-message vs ``MBatch`` coalescing (docs/WIRE.md tag 16),
 including the runtime's 8-byte per-frame header (len + sender).
 
 Run from anywhere: ``python3 python/bench/bench_batching.py``.
+``--smoke`` (or ``SMOKE=1``) runs a fast regression pass — the codec
+round-trip and batching equivalence checks at reduced iteration counts —
+without overwriting the recorded BENCH_batching.json (for cargo-less CI).
 """
 
 import json
 import os
+import sys
 import time
 
 from wire import decode, encode
+
+SMOKE = "--smoke" in sys.argv[1:] or os.environ.get("SMOKE") == "1"
 
 FRAME_HDR = 8  # u32 len + u32 sender, net/mod.rs write_frame
 BATCH_MAX = 16  # Config::batch_max_msgs used in the comparison
@@ -29,7 +35,7 @@ def message_mix(n):
     for i in range(n):
         dot = (i % 5, 1 + i)
         cmd = {
-            "client": i,
+            "rid": (i, 1 + i),
             "op": 1,
             "payload_len": 100,
             "batched": 1,
@@ -81,7 +87,7 @@ def measure(frames, rounds):
 
 
 def main():
-    n_msgs, rounds = 960, 30
+    n_msgs, rounds = (192, 3) if SMOKE else (960, 30)
     msgs = message_mix(n_msgs)
     flat = [decode(encode(b)) for b in batches(msgs, BATCH_MAX)]
     assert [m for b in flat for m in (b["msgs"] if b["t"] == "MBatch" else [b])] == msgs
@@ -109,6 +115,10 @@ def main():
         "regenerate": "python3 python/bench/bench_batching.py "
         "(or cargo bench --bench microbench for the simulator numbers)",
     }
+    if SMOKE:
+        print(json.dumps(result, indent=2))
+        print("smoke mode: BENCH_batching.json left untouched")
+        return
     root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
     path = os.path.normpath(os.path.join(root, "BENCH_batching.json"))
     with open(path, "w") as f:

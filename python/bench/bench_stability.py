@@ -15,13 +15,18 @@ scan-vs-incremental comparison, measured for real on this machine.
 numbers when a toolchain is available.
 
 Run from anywhere: ``python3 python/bench/bench_stability.py``.
+``--smoke`` (or ``SMOKE=1``) runs a fast regression pass at reduced
+iteration counts without overwriting the recorded BENCH_stability.json
+(for cargo-less CI).
 """
 
 import json
 import os
+import sys
 import time
 
-R, MAJORITY, ITERS = 5, 3, 200_000
+SMOKE = "--smoke" in sys.argv[1:] or os.environ.get("SMOKE") == "1"
+R, MAJORITY, ITERS = 5, 3, (20_000 if SMOKE else 200_000)
 
 
 class SourceTracker:
@@ -110,6 +115,10 @@ def main():
         "speedup": round(scan_ns / inc_ns, 2),
         "regenerate": "cargo bench --bench microbench",
     }
+    if SMOKE:
+        print(json.dumps(result, indent=2))
+        print("smoke mode: BENCH_stability.json left untouched")
+        return
     root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
     path = os.path.normpath(os.path.join(root, "BENCH_stability.json"))
     with open(path, "w") as f:

@@ -1,20 +1,27 @@
 """Python port of the Tempo wire codec (rust/src/net/wire.rs).
 
 Byte-for-byte faithful to docs/WIRE.md: little-endian fixed-width
-integers, u8 message tags, length-prefixed ``MBatch`` members. Used by
-``bench_batching.py`` to measure framing amortization on this machine and
-as an executable cross-check of the WIRE.md spec: every frame produced
-here must decode to the same message, and malformed frames must raise
-``WireError`` (mirroring the Rust codec returning ``Err`` — never a
-panic).
+integers, u8 message tags, length-prefixed ``MBatch`` members, and the
+client service frames (``ClientSubmit`` tag 17 / ``ClientReply`` tag 18).
+Used by ``bench_batching.py`` to measure framing amortization on this
+machine and as an executable cross-check of the WIRE.md spec: every frame
+produced here must decode to the same message, and malformed frames must
+raise ``WireError`` (mirroring the Rust codec returning ``Err`` — never a
+panic). The protocol and client planes are strictly separated:
+``decode`` rejects tags 17–18, ``decode_client`` rejects tags 0–16, and
+an ``MBatch`` member carrying a client frame is malformed the same way a
+nested batch is.
 
 Messages are dicts with a ``t`` tag key, e.g.::
 
     {"t": "MStable", "dot": (3, 42)}
     {"t": "MBatch", "msgs": [...]}
+    {"t": "ClientReply", "rid": (7, 3), "response": [(1, 4)]}
 
-Dots are ``(origin, seq)`` tuples; commands are dicts with ``client``,
-``op`` (0 Get / 1 Put / 2 Rmw), ``payload_len``, ``batched`` and ``keys``.
+Dots are ``(origin, seq)`` tuples; rids are ``(client, seq)`` tuples;
+commands are dicts with ``rid``, ``op`` (0 Get / 1 Put / 2 Rmw),
+``payload_len``, ``batched`` and ``keys`` (the codec materializes
+``payload_len`` zero bytes of payload).
 """
 
 import struct
@@ -47,14 +54,20 @@ class Writer:
         self.u32(d[0])
         self.u64(d[1])
 
+    def rid(self, r):
+        self.u64(r[0])
+        self.u64(r[1])
+
     def cmd(self, c):
-        self.u64(c["client"])
+        self.rid(c["rid"])
         self.u8(c["op"])
         self.u32(c["payload_len"])
         self.u32(c["batched"])
         self.u16(len(c["keys"]))
         for k in c["keys"]:
             self.u64(k)
+        # Payload contents are irrelevant to ordering: materialized zeros.
+        self.parts.append(b"\x00" * c["payload_len"])
 
     def quorums(self, q):
         self.u8(len(q))
@@ -120,16 +133,20 @@ class Reader:
     def dot(self):
         return (self.u32(), self.u64())
 
+    def rid(self):
+        return (self.u64(), self.u64())
+
     def cmd(self):
-        client = self.u64()
+        rid = self.rid()
         op = self.u8()
         if op > 2:
             raise WireError(f"bad op tag {op}")
         payload_len = self.u32()
         batched = self.u32()
         keys = [self.u64() for _ in range(self.u16())]
+        self.take(payload_len)  # skip the materialized payload, checked
         return {
-            "client": client,
+            "rid": rid,
             "op": op,
             "payload_len": payload_len,
             "batched": batched,
@@ -215,6 +232,40 @@ def encode(msg):
     return w.bytes()
 
 
+def encode_client(frame):
+    """Encode a client frame (tags 17–18, without the length prefix)."""
+    w = Writer()
+    t = frame["t"]
+    if t == "ClientSubmit":
+        w.u8(17), w.cmd(frame["cmd"])
+    elif t == "ClientReply":
+        w.u8(18), w.rid(frame["rid"])
+        w.u16(len(frame["response"]))
+        for k, v in frame["response"]:
+            w.u64(k)
+            w.u64(v)
+    else:
+        raise ValueError(f"unknown client frame {t}")
+    return w.bytes()
+
+
+def decode_client(buf):
+    """Decode a client frame; a protocol tag (0–16) here is an error."""
+    r = Reader(buf)
+    tag = r.u8()
+    if tag == 17:
+        return {"t": "ClientSubmit", "cmd": r.cmd()}
+    if tag == 18:
+        return {
+            "t": "ClientReply",
+            "rid": r.rid(),
+            "response": [(r.u64(), r.u64()) for _ in range(r.u16())],
+        }
+    if tag <= 16:
+        raise WireError(f"protocol frame tag {tag} in client stream")
+    raise WireError(f"bad client frame tag {tag}")
+
+
 def decode(buf):
     """Decode one frame body; raises WireError on malformed input.
 
@@ -294,11 +345,14 @@ def _decode_at(r):
         for _ in range(r.u16()):
             length = r.u32()
             body = r.take(length)
-            # Reject nested batches by peeking the member tag BEFORE
-            # recursing: a deeply nested hostile frame must error, not
-            # exhaust the stack.
+            # Reject nested batches and client frames by peeking the
+            # member tag BEFORE recursing: a deeply nested hostile frame
+            # must error, not exhaust the stack, and a client frame can
+            # never travel between protocol peers.
             if body[:1] == b"\x10":
                 raise WireError("nested MBatch frame")
+            if body[:1] in (b"\x11", b"\x12"):
+                raise WireError(f"client frame tag {body[0]} inside MBatch")
             sub = Reader(body)
             inner = _decode_at(sub)
             if sub.pos != length:
@@ -307,13 +361,15 @@ def _decode_at(r):
                 )
             msgs.append(inner)
         return {"t": "MBatch", "msgs": msgs}
+    if tag in (17, 18):
+        raise WireError(f"client frame tag {tag} in protocol stream")
     raise WireError(f"bad message tag {tag}")
 
 
 def self_check():
     """Round-trip + malformed-input sanity check of the port itself."""
     dot = (3, 42)
-    cmd = {"client": 7, "op": 2, "payload_len": 512, "batched": 1, "keys": [1, 99]}
+    cmd = {"rid": (7, 9), "op": 2, "payload_len": 512, "batched": 1, "keys": [1, 99]}
     ps = ([(1, 5), (7, 9)], [(dot, 10)])
     msgs = [
         {"t": "MSubmit", "dot": dot, "cmd": cmd, "quorums": [(0, [0, 1]), (1, [3])]},
@@ -367,6 +423,45 @@ def self_check():
         raise AssertionError("deeply nested batch decoded")
     except WireError:
         pass
+    # The command encoding matches Command::wire_size exactly: rid 16 +
+    # op 1 + payload_len 4 + batched 4 + count 2 + 8/key + payload bytes.
+    w = Writer()
+    w.cmd(cmd)
+    assert len(w.bytes()) == 27 + 8 * len(cmd["keys"]) + cmd["payload_len"], len(w.bytes())
+    # Client frames (tags 17–18): round-trip, truncation, and the strict
+    # separation of the protocol and client planes.
+    submit = {"t": "ClientSubmit", "cmd": cmd}
+    reply = {"t": "ClientReply", "rid": (7, 9), "response": [(1, 4), (99, 17)]}
+    for f in (submit, reply):
+        enc = encode_client(f)
+        assert decode_client(enc) == f, f
+        for cut in range(len(enc)):
+            try:
+                decode_client(enc[:cut])
+                raise AssertionError(f"truncated client frame decoded at {cut}")
+            except WireError:
+                pass
+        try:
+            decode(enc)
+            raise AssertionError("client frame decoded as a protocol message")
+        except WireError:
+            pass
+    try:
+        decode_client(encode({"t": "MStable", "dot": dot}))
+        raise AssertionError("protocol message decoded as a client frame")
+    except WireError:
+        pass
+    # An MBatch member carrying a client frame is rejected from the tag
+    # peek, exactly like a nested batch.
+    for member in (encode_client(submit), encode_client(reply)):
+        b = Writer()
+        b.u8(16), b.u16(1), b.u32(len(member))
+        b.parts.append(member)
+        try:
+            decode(b.bytes())
+            raise AssertionError("client frame inside MBatch decoded")
+        except WireError:
+            pass
 
 
 if __name__ == "__main__":

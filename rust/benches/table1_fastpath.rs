@@ -4,7 +4,7 @@
 //! the Tempo state machine directly with the exact clock interleavings and
 //! printing the resulting proposals, match and fast-path columns.
 
-use tempo::core::{ClientId, Command, Config, Dot, Op, ProcessId};
+use tempo::core::{ClientId, Command, Config, Dot, Op, ProcessId, Rid};
 use tempo::protocol::tempo::msg::Msg;
 use tempo::protocol::tempo::Tempo;
 use tempo::protocol::{Action, Protocol};
@@ -25,7 +25,7 @@ fn scenario(f: usize, clocks: &[u64]) -> (Vec<u64>, bool) {
     for (j, &c) in clocks.iter().enumerate() {
         if c > 0 {
             let filler = Dot::new(ProcessId(10 + j as u32), 1);
-            let cmd = Command::single(ClientId(99), KEY, Op::Put, 0);
+            let cmd = Command::single(Rid::new(ClientId(99), 1), KEY, Op::Put, 0);
             let _ = procs[j].handle(
                 ProcessId(j as u32),
                 Msg::MCommitDirect { dot: filler, cmd, quorums: vec![], final_ts: c },
@@ -35,13 +35,14 @@ fn scenario(f: usize, clocks: &[u64]) -> (Vec<u64>, bool) {
     }
 
     // Coordinator A (process 0) submits; route messages synchronously.
-    let dot = Dot::new(ProcessId(0), 1);
-    let cmd = Command::single(ClientId(1), KEY, Op::Put, 0);
+    // submit() allocates the dot internally: the first command of P0 is
+    // renamed to P0.1.
+    let cmd = Command::single(Rid::new(ClientId(1), 1), KEY, Op::Put, 0);
     let mut queue: Vec<(ProcessId, ProcessId, Msg)> = Vec::new();
     let mut proposals: Vec<u64> = Vec::new();
     let mut saw_consensus = false;
     let mut committed = false;
-    let actions = procs[0].submit(dot, cmd, 0);
+    let actions = procs[0].submit(cmd, 0);
     collect(ProcessId(0), actions, &mut queue, &mut proposals, &mut saw_consensus, &mut committed);
     while let Some((from, to, msg)) = queue.pop() {
         let actions = procs[to.0 as usize].handle(from, msg, 0);

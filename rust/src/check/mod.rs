@@ -13,9 +13,15 @@
 //!   contradictory ways, and completed commands precede later ones).
 //! - **Liveness** — after a drained run, every submitted command executes
 //!   at every live process of every accessed shard group.
+//! - **Response validity** — the checker is semantics-aware, not just
+//!   order-aware: every client-observed [`crate::core::Response`] must
+//!   equal the response produced by replaying the coordinator's execution
+//!   log through a sequential `KvStore` oracle. An execution can be
+//!   perfectly ordered yet reply garbage; this catches it.
 
-use crate::core::{key_to_shard, Command, Dot, Key, ProcessId};
+use crate::core::{key_to_shard, Command, Dot, Key, ProcessId, Rid};
 use crate::sim::SimResult;
+use crate::store::KvStore;
 use std::collections::{HashMap, HashSet};
 
 /// A violation of the PSMR specification.
@@ -27,6 +33,10 @@ pub enum Violation {
     OrderingCycle { sample: Vec<Dot> },
     RealTimeViolation { first: Dot, second: Dot, key: Key },
     NotExecuted { process: ProcessId, dot: Dot },
+    /// The response the client observed for `rid` differs from what the
+    /// sequential oracle computes at `process` (the coordinator) for the
+    /// command's position in that replica's execution order.
+    ResponseMismatch { process: ProcessId, dot: Dot, rid: Rid },
 }
 
 /// Configuration view the checker needs.
@@ -253,6 +263,42 @@ pub fn check_psmr(
             let sample: Vec<Dot> =
                 indeg.iter().filter(|&(_, &d)| d > 0).take(4).map(|(&dot, _)| dot).collect();
             violations.push(Violation::OrderingCycle { sample });
+        }
+    }
+
+    // --- Response validity -------------------------------------------------
+    // Replay each process's execution log through a sequential KvStore
+    // oracle. A client observes its response from the command's
+    // coordinator (dot.origin), so for every completion the oracle
+    // response computed at that replica's position must match what the
+    // client saw. Combined with the order checks above this makes the
+    // checker semantics-aware: agreed order AND agreed results.
+    {
+        // dot → (rid, client-observed response); members of a site-level
+        // batch share rid/dot and observed the same merged response.
+        let mut observed: HashMap<Dot, (Rid, &crate::core::Response)> = HashMap::new();
+        for c in &result.completions {
+            observed.entry(c.dot).or_insert((c.rid, &c.response));
+        }
+        for (p, log) in result.execution_logs.iter().enumerate() {
+            let process = ProcessId(p as u32);
+            let mut oracle = KvStore::new();
+            for &(dot, _) in log {
+                if let Some(cmd) = submitted.get(&dot) {
+                    let resp = oracle.execute(cmd);
+                    if dot.origin == process {
+                        if let Some(&(rid, obs)) = observed.get(&dot) {
+                            if *obs != resp {
+                                violations.push(Violation::ResponseMismatch {
+                                    process,
+                                    dot,
+                                    rid,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
         }
     }
 

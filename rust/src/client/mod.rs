@@ -1,0 +1,107 @@
+//! Client service API (paper §6.1): sessions and rifl-style request ids.
+//!
+//! The paper's framework serves real clients — a command is submitted at a
+//! coordinator replica, executed at timestamp stability, and its result is
+//! returned to the issuing client. This module is the client half of that
+//! contract:
+//!
+//! - a [`Session`] holds a [`ClientId`] and allocates [`Rid`]s — request
+//!   ids `Rid(client, seq)` with a per-session monotone sequence — and
+//!   builds [`Command`]s carrying them;
+//! - `Protocol::submit(cmd, time)` renames the command internally to a
+//!   `Dot` (callers never pre-allocate dots);
+//! - the replica's `executor::Executor` applies the command at execution
+//!   time and emits `Action::Reply { rid, response }` at the command's
+//!   coordinator only, which the runtimes route back to the session (in
+//!   the TCP runtime as a `ClientReply` frame, docs/WIRE.md tag 18).
+//!
+//! The simulator drives one `Session` per closed-loop client; the TCP
+//! runtime wraps one in `net::TcpClient` for real request/response
+//! traffic over sockets.
+
+#![warn(missing_docs)]
+
+use crate::core::{ClientId, Command, Key, Op, Rid};
+
+/// A client session: the identity and request-id allocator behind every
+/// command a client submits. Sequence numbers start at 1 and never repeat
+/// within a session, so `(client, seq)` names a request uniquely for the
+/// lifetime of the deployment (assuming client ids are unique, which the
+/// runtimes enforce by construction).
+#[derive(Clone, Debug)]
+pub struct Session {
+    client: ClientId,
+    next_seq: u64,
+}
+
+impl Session {
+    /// Open a session for `client`.
+    pub fn new(client: ClientId) -> Self {
+        Session { client, next_seq: 1 }
+    }
+
+    /// The session's client identity.
+    pub fn client(&self) -> ClientId {
+        self.client
+    }
+
+    /// Number of request ids allocated so far.
+    pub fn issued(&self) -> u64 {
+        self.next_seq - 1
+    }
+
+    /// Allocate the next request id.
+    pub fn next_rid(&mut self) -> Rid {
+        let rid = Rid::new(self.client, self.next_seq);
+        self.next_seq += 1;
+        rid
+    }
+
+    /// Build a command carrying a fresh request id.
+    pub fn command(&mut self, keys: Vec<Key>, op: Op, payload_len: u32) -> Command {
+        Command::new(self.next_rid(), keys, op, payload_len)
+    }
+
+    /// Single-key shorthand for [`Session::command`].
+    pub fn single(&mut self, key: Key, op: Op, payload_len: u32) -> Command {
+        Command::single(self.next_rid(), key, op, payload_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rids_are_unique_and_monotone() {
+        let mut s = Session::new(ClientId(7));
+        let a = s.next_rid();
+        let b = s.next_rid();
+        assert_eq!(a, Rid::new(ClientId(7), 1));
+        assert_eq!(b, Rid::new(ClientId(7), 2));
+        assert!(a < b);
+        assert_eq!(s.issued(), 2);
+    }
+
+    #[test]
+    fn commands_carry_session_identity() {
+        let mut s = Session::new(ClientId(3));
+        let c1 = s.single(9, Op::Put, 64);
+        let c2 = s.command(vec![1, 2], Op::Get, 0);
+        assert_eq!(c1.client(), ClientId(3));
+        assert_eq!(c1.rid, Rid::new(ClientId(3), 1));
+        assert_eq!(c2.rid, Rid::new(ClientId(3), 2));
+        assert_ne!(c1.rid, c2.rid);
+    }
+
+    #[test]
+    fn sessions_of_different_clients_never_collide() {
+        let mut a = Session::new(ClientId(1));
+        let mut b = Session::new(ClientId(2));
+        let ra: Vec<Rid> = (0..10).map(|_| a.next_rid()).collect();
+        let rb: Vec<Rid> = (0..10).map(|_| b.next_rid()).collect();
+        for x in &ra {
+            assert!(!rb.contains(x));
+        }
+    }
+}

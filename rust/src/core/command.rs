@@ -4,8 +4,14 @@
 //! §6.4) a partition is identified by a key: commands conflict iff they
 //! share a key. In partial replication each key lives on exactly one shard;
 //! in full replication there is a single shard replicated everywhere.
+//!
+//! A command is named end to end by its [`Rid`] — the rifl-style request
+//! id its client's [`crate::client::Session`] allocated. The protocol
+//! renames the command internally to a [`Dot`] when it is submitted
+//! (`Protocol::submit` allocates the dot; callers never see it), and the
+//! reply carries the `Rid` back to the client.
 
-use super::id::{ClientId, Dot, ShardId};
+use super::id::{ClientId, Dot, Rid, ShardId};
 
 /// A state-machine key (paper: 8-byte keys).
 pub type Key = u64;
@@ -24,15 +30,17 @@ pub enum Op {
 /// An application command submitted by a client.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Command {
-    /// Submitting client (used to route the response).
-    pub client: ClientId,
+    /// Request id allocated by the issuing client's session; routes the
+    /// response back to the client (and identifies retries).
+    pub rid: Rid,
     /// Keys accessed — one per partition touched. Sorted, deduplicated.
     pub keys: Vec<Key>,
     /// Operation kind (uniform across keys; enough for YCSB+T).
     pub op: Op,
     /// Size of the payload carried by the command, in bytes. Payload
-    /// contents are irrelevant to ordering so we carry only the size
-    /// (the wire codec materializes zero bytes for it).
+    /// contents are irrelevant to ordering so state carries only the size;
+    /// the wire codec materializes `payload_len` zero bytes so frames have
+    /// realistic sizes.
     pub payload_len: u32,
     /// Number of single-key commands folded into this one by the batching
     /// layer (1 = unbatched). Throughput counts `batched` operations.
@@ -40,15 +48,20 @@ pub struct Command {
 }
 
 impl Command {
-    pub fn new(client: ClientId, mut keys: Vec<Key>, op: Op, payload_len: u32) -> Self {
+    pub fn new(rid: Rid, mut keys: Vec<Key>, op: Op, payload_len: u32) -> Self {
         keys.sort_unstable();
         keys.dedup();
-        Self { client, keys, op, payload_len, batched: 1 }
+        Self { rid, keys, op, payload_len, batched: 1 }
     }
 
     /// Single-key shorthand.
-    pub fn single(client: ClientId, key: Key, op: Op, payload_len: u32) -> Self {
-        Self { client, keys: vec![key], op, payload_len, batched: 1 }
+    pub fn single(rid: Rid, key: Key, op: Op, payload_len: u32) -> Self {
+        Self { rid, keys: vec![key], op, payload_len, batched: 1 }
+    }
+
+    /// The issuing client (from the request id).
+    pub fn client(&self) -> ClientId {
+        self.rid.client()
     }
 
     /// Does this command conflict with another (shared key)?
@@ -73,9 +86,14 @@ impl Command {
         out
     }
 
-    /// Approximate wire size of this command in bytes (key bytes + payload).
+    /// Exact wire size of this command in bytes — equal to the length of
+    /// the codec's `cmd` encoding (`net::wire`, docs/WIRE.md): rid
+    /// (client u64 + seq u64), op u8, payload_len u32, batched u32, key
+    /// count u16, the keys, and `payload_len` payload bytes. The wire
+    /// codec tests assert this stays equal to the encoded length so the
+    /// simulator's NIC model never under- or over-counts.
     pub fn wire_size(&self) -> u64 {
-        8 * self.keys.len() as u64 + self.payload_len as u64 + 16
+        8 + 8 + 1 + 4 + 4 + 2 + 8 * self.keys.len() as u64 + self.payload_len as u64
     }
 }
 
@@ -87,14 +105,35 @@ pub fn key_to_shard(key: Key, shards: u32) -> ShardId {
     ShardId((h >> 32) as u32 % shards)
 }
 
+/// Response returned to the client for one command — computed by the
+/// replica's [`crate::executor::Executor`] when the command executes and
+/// routed back to the issuing session as `Action::Reply` (and, over TCP,
+/// a `ClientReply` frame). Defined here (not in `store`) because it is
+/// part of the client-facing API: the PSMR response-validity check is
+/// phrased over client-observed `Response`s.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Response {
+    /// Per accessed key: version observed (reads) or produced (writes).
+    pub versions: Vec<(Key, u64)>,
+}
+
 /// A command completion observed by a client: used by the PSMR checker and
 /// latency accounting.
 #[derive(Clone, Debug)]
 pub struct Completion {
+    /// Protocol-internal identity the submitting replica assigned.
     pub dot: Dot,
+    /// Request id the response was matched against.
+    pub rid: Rid,
+    /// Observing client. For site-batched commands several clients share
+    /// one `rid`/`dot` (and observe the same merged response); `client`
+    /// records which member this completion belongs to.
     pub client: ClientId,
     pub submitted_at: u64,
     pub completed_at: u64,
+    /// The response this client observed (checked against a sequential
+    /// oracle by `check::assert_psmr`).
+    pub response: Response,
 }
 
 impl Completion {
@@ -107,11 +146,15 @@ impl Completion {
 mod tests {
     use super::*;
 
+    fn rid(c: u64) -> Rid {
+        Rid::new(ClientId(c), 1)
+    }
+
     #[test]
     fn conflict_detection_shared_key() {
-        let a = Command::new(ClientId(1), vec![5, 9], Op::Put, 100);
-        let b = Command::new(ClientId(2), vec![9, 12], Op::Put, 100);
-        let c = Command::new(ClientId(3), vec![1, 2], Op::Put, 100);
+        let a = Command::new(rid(1), vec![5, 9], Op::Put, 100);
+        let b = Command::new(rid(2), vec![9, 12], Op::Put, 100);
+        let c = Command::new(rid(3), vec![1, 2], Op::Put, 100);
         assert!(a.conflicts_with(&b));
         assert!(b.conflicts_with(&a));
         assert!(!a.conflicts_with(&c));
@@ -120,8 +163,26 @@ mod tests {
 
     #[test]
     fn keys_sorted_and_deduped() {
-        let a = Command::new(ClientId(1), vec![9, 5, 9, 5], Op::Get, 0);
+        let a = Command::new(rid(1), vec![9, 5, 9, 5], Op::Get, 0);
         assert_eq!(a.keys, vec![5, 9]);
+    }
+
+    #[test]
+    fn command_carries_its_client() {
+        let a = Command::single(Rid::new(ClientId(7), 3), 1, Op::Put, 0);
+        assert_eq!(a.client(), ClientId(7));
+        assert_eq!(a.rid.seq(), 3);
+    }
+
+    #[test]
+    fn wire_size_counts_every_encoded_field() {
+        // Fixed header (rid 16 + op 1 + payload_len 4 + batched 4 + count
+        // 2 = 27) plus 8 per key plus the payload bytes. The codec test
+        // `command_wire_size_matches_codec` pins this to the encoder.
+        let a = Command::new(rid(1), vec![5, 9], Op::Put, 100);
+        assert_eq!(a.wire_size(), 27 + 16 + 100);
+        let b = Command::single(rid(1), 5, Op::Get, 0);
+        assert_eq!(b.wire_size(), 27 + 8);
     }
 
     #[test]
@@ -150,7 +211,7 @@ mod tests {
 
     #[test]
     fn multi_shard_command_lists_each_shard_once() {
-        let cmd = Command::new(ClientId(1), vec![1, 2, 3, 4, 5, 6, 7, 8], Op::Put, 10);
+        let cmd = Command::new(rid(1), vec![1, 2, 3, 4, 5, 6, 7, 8], Op::Put, 10);
         let shards = cmd.shards(2);
         assert!(!shards.is_empty() && shards.len() <= 2);
         let mut sorted = shards.clone();

@@ -46,6 +46,14 @@ pub struct Config {
     /// one step emits to the same destination and never delays anything
     /// (behaviour- and timing-transparent; see `rust/tests/batching.rs`).
     pub batch_hold: bool,
+    /// Age bound for held batch queues, in microseconds. Under
+    /// `batch_hold`, a periodic tick flushes only the queues whose oldest
+    /// entry has waited at least this long — younger queues keep
+    /// accumulating toward `batch_max_msgs` for bigger batches — so a
+    /// lone sub-threshold message still departs within one delay bound
+    /// (plus one tick of quantization). 0 (the default) flushes every
+    /// held queue on every tick.
+    pub batch_max_delay_us: u64,
 }
 
 impl Config {
@@ -63,6 +71,7 @@ impl Config {
             gc_interval_ticks: 16,
             batch_max_msgs: 0,
             batch_hold: true,
+            batch_max_delay_us: 0,
         }
     }
 
@@ -102,6 +111,13 @@ impl Config {
     /// Select the batching flush policy (see [`Config::batch_hold`]).
     pub fn with_batch_hold(mut self, hold: bool) -> Self {
         self.batch_hold = hold;
+        self
+    }
+
+    /// Age bound for held batch queues (see
+    /// [`Config::batch_max_delay_us`]; 0 flushes every tick).
+    pub fn with_batch_max_delay_us(mut self, us: u64) -> Self {
+        self.batch_max_delay_us = us;
         self
     }
 

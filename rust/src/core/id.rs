@@ -19,6 +19,45 @@ pub struct ShardId(pub u32);
 #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
 pub struct ClientId(pub u64);
 
+/// Rifl-style request identifier (fantoch's `Rifl` lineage): the issuing
+/// client plus a per-client sequence number, allocated by a
+/// [`crate::client::Session`]. A `Rid` names a *request* end to end —
+/// it travels inside the [`super::Command`], survives the protocol's
+/// internal renaming to a [`Dot`], and comes back in the reply — so a
+/// client can match responses to requests without ever seeing protocol
+/// identifiers.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Rid(pub ClientId, pub u64);
+
+impl Rid {
+    /// Build a request id directly (tests; real code uses `Session`).
+    pub fn new(client: ClientId, seq: u64) -> Self {
+        Self(client, seq)
+    }
+
+    /// The issuing client.
+    pub fn client(self) -> ClientId {
+        self.0
+    }
+
+    /// Per-client sequence number (1-based).
+    pub fn seq(self) -> u64 {
+        self.1
+    }
+}
+
+impl fmt::Debug for Rid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "C{}.{}", self.0 .0, self.1)
+    }
+}
+
+impl fmt::Display for Rid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "C{}.{}", self.0 .0, self.1)
+    }
+}
+
 /// Unique command identifier: (origin process, per-origin sequence number).
 #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Dot {
@@ -110,5 +149,17 @@ mod tests {
     #[test]
     fn display_formats() {
         assert_eq!(format!("{}", Dot::new(ProcessId(7), 42)), "P7.42");
+        assert_eq!(format!("{}", Rid::new(ClientId(3), 9)), "C3.9");
+    }
+
+    #[test]
+    fn rid_orders_by_client_then_seq() {
+        let a = Rid::new(ClientId(1), 9);
+        let b = Rid::new(ClientId(2), 1);
+        let c = Rid::new(ClientId(1), 10);
+        assert!(a < b);
+        assert!(a < c);
+        assert_eq!(a.client(), ClientId(1));
+        assert_eq!(a.seq(), 9);
     }
 }

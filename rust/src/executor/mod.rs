@@ -1,11 +1,156 @@
 //! Execution engines.
 //!
-//! Tempo executes by timestamp stability (implemented inside
-//! `protocol::tempo`); the dependency-based baselines (EPaxos, Atlas,
-//! Janus*) execute committed dependency graphs via strongly-connected
-//! components — the mechanism whose unbounded chains cause the tail
-//! latencies the paper measures (§3.3, §D).
+//! [`Executor`] is the replica-side bridge between a protocol's ordering
+//! decisions and the replicated [`StateMachine`]: it consumes
+//! `Action::Execute` upcalls in the order the protocol emits them,
+//! applies each command, and emits `Action::Reply { rid, response }` at
+//! the command's coordinator only — so client responses are a
+//! first-class protocol output, not test-side reconstruction. Both
+//! runtimes (the simulator and the TCP cluster) own one `Executor` per
+//! replica and route its replies back to the issuing session.
+//!
+//! [`DepGraph`] is the dependency-graph execution engine used by the
+//! dependency-based baselines (EPaxos, Atlas, Janus*): committed commands
+//! execute via strongly-connected components — the mechanism whose
+//! unbounded chains cause the tail latencies the paper measures (§3.3,
+//! §D). Tempo executes by timestamp stability (inside `protocol::tempo`).
 
 pub mod graph;
 
 pub use graph::DepGraph;
+
+use crate::core::{Command, Dot, ProcessId, Response};
+use crate::protocol::Action;
+use crate::store::{KvStore, StateMachine};
+
+/// Per-replica execution engine: applies `Action::Execute` upcalls to a
+/// pluggable [`StateMachine`] in order and emits `Action::Reply` for
+/// commands this replica coordinates (`dot.origin == id`).
+#[derive(Clone, Debug)]
+pub struct Executor<S: StateMachine = KvStore> {
+    id: ProcessId,
+    sm: S,
+    executed: u64,
+}
+
+impl<S: StateMachine> Executor<S> {
+    /// Build the executor of replica `id` over state machine `sm`.
+    pub fn new(id: ProcessId, sm: S) -> Self {
+        Executor { id, sm, executed: 0 }
+    }
+
+    /// The wrapped state machine (digest checks, test oracles).
+    pub fn state(&self) -> &S {
+        &self.sm
+    }
+
+    /// Commands applied so far.
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Apply one executed command; returns the reply to route to the
+    /// client if this replica is the command's coordinator.
+    pub fn apply(&mut self, dot: Dot, cmd: &Command) -> Option<Response> {
+        let response = self.sm.apply(cmd);
+        self.executed += 1;
+        (dot.origin == self.id).then_some(response)
+    }
+
+    /// Run one protocol step's action stream through the executor:
+    /// `Execute` actions are applied in order (each immediately followed
+    /// by its `Reply` when this replica coordinates the command);
+    /// everything else passes through untouched. Runtimes call this on
+    /// every action batch a protocol step returns.
+    pub fn absorb<M>(&mut self, actions: Vec<Action<M>>) -> Vec<Action<M>> {
+        if !actions.iter().any(|a| matches!(a, Action::Execute { .. })) {
+            return actions;
+        }
+        let mut out = Vec::with_capacity(actions.len() + 1);
+        for action in actions {
+            match action {
+                Action::Execute { dot, cmd } => {
+                    let reply = self.apply(dot, &cmd);
+                    let rid = cmd.rid;
+                    out.push(Action::Execute { dot, cmd });
+                    if let Some(response) = reply {
+                        out.push(Action::Reply { rid, response });
+                    }
+                }
+                other => out.push(other),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ClientId, Op, Rid};
+
+    type TestMsg = ();
+
+    fn cmd(client: u64, seq: u64, key: u64) -> Command {
+        Command::single(Rid::new(ClientId(client), seq), key, Op::Put, 8)
+    }
+
+    #[test]
+    fn replies_only_at_the_coordinator() {
+        let origin = ProcessId(1);
+        let mut coord = Executor::new(origin, KvStore::new());
+        let mut other = Executor::new(ProcessId(2), KvStore::new());
+        let c = cmd(7, 1, 5);
+        let dot = Dot::new(origin, 1);
+        let at_coord = coord.absorb::<TestMsg>(vec![Action::Execute { dot, cmd: c.clone() }]);
+        let at_other = other.absorb::<TestMsg>(vec![Action::Execute { dot, cmd: c.clone() }]);
+        assert_eq!(at_coord.len(), 2, "coordinator must emit the reply");
+        match &at_coord[1] {
+            Action::Reply { rid, response } => {
+                assert_eq!(*rid, c.rid);
+                assert_eq!(response.versions, vec![(5, 1)]);
+            }
+            other => panic!("expected a reply, got {other:?}"),
+        }
+        assert_eq!(at_other.len(), 1, "non-coordinator must stay silent");
+        // Both replicas applied the command.
+        assert_eq!(coord.executed(), 1);
+        assert_eq!(other.executed(), 1);
+        assert_eq!(coord.state().digest(), other.state().digest());
+    }
+
+    #[test]
+    fn absorb_preserves_order_and_passthrough() {
+        let me = ProcessId(0);
+        let mut e = Executor::new(me, KvStore::new());
+        let c1 = cmd(1, 1, 9);
+        let c2 = cmd(1, 2, 9);
+        let actions: Vec<Action<TestMsg>> = vec![
+            Action::Committed { dot: Dot::new(me, 1), fast: true },
+            Action::Execute { dot: Dot::new(me, 1), cmd: c1.clone() },
+            Action::Execute { dot: Dot::new(me, 2), cmd: c2.clone() },
+        ];
+        let out = e.absorb(actions);
+        assert_eq!(out.len(), 5);
+        assert!(matches!(out[0], Action::Committed { .. }));
+        // Execute → its reply, in application order: the second Put on the
+        // same key must observe version 2.
+        match (&out[2], &out[4]) {
+            (Action::Reply { response: r1, .. }, Action::Reply { response: r2, .. }) => {
+                assert_eq!(r1.versions, vec![(9, 1)]);
+                assert_eq!(r2.versions, vec![(9, 2)]);
+            }
+            other => panic!("replies misplaced: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn absorb_without_executes_is_identity() {
+        let mut e = Executor::new(ProcessId(0), KvStore::new());
+        let actions: Vec<Action<TestMsg>> =
+            vec![Action::Submitted { dot: Dot::new(ProcessId(0), 1) }];
+        let out = e.absorb(actions);
+        assert_eq!(out.len(), 1);
+        assert_eq!(e.executed(), 0);
+    }
+}

@@ -13,6 +13,7 @@
 
 pub mod bench_util;
 pub mod check;
+pub mod client;
 pub mod core;
 pub mod executor;
 pub mod metrics;

@@ -2,12 +2,16 @@
 //! path — the Tempo state machine runs exactly as in the simulator, fed by
 //! length-prefixed frames from peer sockets).
 //!
-//! Topology: one [`NodeHandle`] per process, full mesh of TCP connections.
-//! Each node runs (a) an acceptor thread per peer connection that decodes
-//! frames into an event channel, (b) the protocol thread owning the Tempo
-//! state machine, the KV store, and a tick timer, (c) a client API
-//! ([`NodeHandle::submit`]) that enqueues commands and returns completion
-//! notifications through a channel.
+//! Topology: one [`NodeHandle`] per process, full mesh of TCP connections,
+//! plus a *client plane*: real clients ([`TcpClient`]) dial any node,
+//! send `ClientSubmit` frames (docs/WIRE.md tag 17) and receive
+//! `ClientReply` frames (tag 18) — request/response over the same
+//! listener, distinguished by the frame header's sender field
+//! ([`CLIENT_FROM`]). Each node runs (a) an acceptor thread per inbound
+//! connection that decodes frames into an event channel, (b) the protocol
+//! thread owning the Tempo state machine and an [`Executor`] over the KV
+//! store (replies are `Action::Reply`, routed back by request id), and
+//! (c) a tick timer.
 //!
 //! With `Config::batch_max_msgs > 0` the protocol layer coalesces the
 //! messages bound for one peer into single `MBatch` frames
@@ -18,12 +22,14 @@
 
 pub mod wire;
 
-use crate::core::{Command, Config, Dot, DotGen, ProcessId};
+use crate::client::Session;
+use crate::core::{ClientId, Command, Config, Key, Op, ProcessId, Response, Rid};
+use crate::executor::Executor;
 use crate::metrics::Counters;
 use crate::protocol::tempo::msg::Msg;
 use crate::protocol::tempo::Tempo;
 use crate::protocol::{Action, Protocol};
-use crate::store::{KvStore, Response};
+use crate::store::KvStore;
 use crate::util::error::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -33,16 +39,21 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// Sender field of frames on the client plane: a connection whose frames
+/// carry this value is a client session, not a protocol peer (no real
+/// `ProcessId` can collide — process ids are dense and small).
+pub const CLIENT_FROM: u32 = u32::MAX;
+
 /// Events fed to the protocol thread.
 enum Event {
     Message { from: ProcessId, msg: Msg },
-    Submit { cmd: Command, done: Sender<(Dot, Response)> },
+    Submit { cmd: Command, done: Sender<(Rid, Response)> },
     Tick,
     Shutdown,
 }
 
-/// A completion listener registered per in-flight dot.
-type DoneMap = HashMap<Dot, Sender<(Dot, Response)>>;
+/// A completion listener registered per in-flight request id.
+type DoneMap = HashMap<Rid, Sender<(Rid, Response)>>;
 
 /// Handle to a running node.
 pub struct NodeHandle {
@@ -55,9 +66,10 @@ pub struct NodeHandle {
 }
 
 impl NodeHandle {
-    /// Submit a command; the response arrives on the returned receiver once
-    /// the command executes locally (origin completion, as in the paper).
-    pub fn submit(&self, cmd: Command) -> Receiver<(Dot, Response)> {
+    /// Submit a command from an in-process client session; the response
+    /// arrives on the returned receiver once the command executes at this
+    /// node (the coordinator's executor emits `Action::Reply`).
+    pub fn submit(&self, cmd: Command) -> Receiver<(Rid, Response)> {
         let (tx, rx) = channel();
         let _ = self.events.send(Event::Submit { cmd, done: tx });
         rx
@@ -71,14 +83,17 @@ impl NodeHandle {
     }
 }
 
-fn write_frame(stream: &mut TcpStream, from: ProcessId, msg: &Msg) -> Result<()> {
-    let body = wire::encode(msg);
+fn write_frame(stream: &mut TcpStream, from: u32, body: &[u8]) -> Result<()> {
     let mut frame = Vec::with_capacity(body.len() + 8);
     frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    frame.extend_from_slice(&from.0.to_le_bytes());
-    frame.extend_from_slice(&body);
+    frame.extend_from_slice(&from.to_le_bytes());
+    frame.extend_from_slice(body);
     stream.write_all(&frame)?;
     Ok(())
+}
+
+fn write_msg(stream: &mut TcpStream, from: ProcessId, msg: &Msg) -> Result<()> {
+    write_frame(stream, from.0, &wire::encode(msg))
 }
 
 /// Upper bound on one frame body (`docs/WIRE.md`): a corrupt or hostile
@@ -89,21 +104,75 @@ fn write_frame(stream: &mut TcpStream, from: ProcessId, msg: &Msg) -> Result<()>
 /// `MBatch` frames far below this cap.
 pub const MAX_FRAME_BYTES: usize = 16 << 20;
 
-fn read_frame(stream: &mut TcpStream) -> Result<(ProcessId, Msg)> {
+/// Read one raw frame: the sender field and the undecoded body. The
+/// caller decodes as a protocol message or a client frame depending on
+/// the sender ([`CLIENT_FROM`] marks the client plane).
+fn read_frame(stream: &mut TcpStream) -> Result<(u32, Vec<u8>)> {
     let mut hdr = [0u8; 8];
     stream.read_exact(&mut hdr)?;
     let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
     if len > MAX_FRAME_BYTES {
         bail!("frame of {len} bytes exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})");
     }
-    let from = ProcessId(u32::from_le_bytes(hdr[4..8].try_into().unwrap()));
+    let from = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
     let mut body = vec![0u8; len];
     stream.read_exact(&mut body)?;
-    Ok((from, wire::decode(&body)?))
+    Ok((from, body))
+}
+
+/// Serve one inbound connection: protocol frames go straight to the event
+/// channel; client submits lazily start a reply-writer thread for the
+/// connection and register its sender as the request's completion route.
+fn serve_connection(mut stream: TcpStream, node: ProcessId, tx: Sender<Event>) {
+    let mut reply_tx: Option<Sender<(Rid, Response)>> = None;
+    loop {
+        let (from, body) = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        if from == CLIENT_FROM {
+            let cmd = match wire::decode_client(&body) {
+                Ok(wire::ClientFrame::Submit { cmd }) => cmd,
+                // A node never receives replies; malformed input drops
+                // the connection (the codec promises Err, not panic).
+                Ok(wire::ClientFrame::Reply { .. }) | Err(_) => return,
+            };
+            if reply_tx.is_none() {
+                let mut wstream = match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(_) => return,
+                };
+                let (txr, rxr) = channel::<(Rid, Response)>();
+                std::thread::spawn(move || {
+                    for (rid, response) in rxr {
+                        let body =
+                            wire::encode_client(&wire::ClientFrame::Reply { rid, response });
+                        if write_frame(&mut wstream, node.0, &body).is_err() {
+                            return;
+                        }
+                    }
+                });
+                reply_tx = Some(txr);
+            }
+            let done = reply_tx.as_ref().expect("reply writer started").clone();
+            if tx.send(Event::Submit { cmd, done }).is_err() {
+                return;
+            }
+        } else {
+            let msg = match wire::decode(&body) {
+                Ok(m) => m,
+                Err(_) => return,
+            };
+            if tx.send(Event::Message { from: ProcessId(from), msg }).is_err() {
+                return;
+            }
+        }
+    }
 }
 
 /// Start a Tempo node listening on `addrs[id]`, connecting to all peers.
-/// `addrs` must be identical across the cluster.
+/// `addrs` must be identical across the cluster. The same listener serves
+/// protocol peers and [`TcpClient`]s.
 pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<NodeHandle> {
     let me = id.0 as usize;
     let listener =
@@ -111,28 +180,17 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
     let (events_tx, events_rx) = channel::<Event>();
     let mut threads = Vec::new();
 
-    // Acceptor: peers with higher ids dial us.
+    // Acceptor: protocol peers and clients dial us.
     {
         let tx = events_tx.clone();
-        let expect = addrs.len() - 1 - me; // only higher ids dial in? see below
-        let _ = expect;
         threads.push(std::thread::spawn(move || {
             for stream in listener.incoming() {
-                let mut stream = match stream {
+                let stream = match stream {
                     Ok(s) => s,
                     Err(_) => break,
                 };
                 let tx = tx.clone();
-                std::thread::spawn(move || loop {
-                    match read_frame(&mut stream) {
-                        Ok((from, msg)) => {
-                            if tx.send(Event::Message { from, msg }).is_err() {
-                                break;
-                            }
-                        }
-                        Err(_) => break,
-                    }
-                });
+                std::thread::spawn(move || serve_connection(stream, id, tx));
             }
         }));
     }
@@ -174,49 +232,50 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
     let store_digest = Arc::new(Mutex::new(0u64));
     let executed = Arc::new(Mutex::new(0u64));
 
-    // Protocol thread.
+    // Protocol thread: the state machine, the executor over the KV store,
+    // and the rid → reply-channel routing table.
     {
         let counters = counters.clone();
         let store_digest = store_digest.clone();
         let executed = executed.clone();
         threads.push(std::thread::spawn(move || {
             let mut proto = Tempo::new(id, config);
-            let mut store = KvStore::new();
-            let mut dots = DotGen::new(id);
+            let mut exec = Executor::new(id, KvStore::new());
             let mut done: DoneMap = HashMap::new();
+            let mut last_executed = 0u64;
             let start = Instant::now();
             let now_us = |s: Instant| s.elapsed().as_micros() as u64;
             for event in events_rx {
                 let actions = match event {
                     Event::Message { from, msg } => proto.handle(from, msg, now_us(start)),
                     Event::Submit { cmd, done: tx } => {
-                        let dot = dots.next();
-                        done.insert(dot, tx);
-                        proto.submit(dot, cmd, now_us(start))
+                        done.insert(cmd.rid, tx);
+                        proto.submit(cmd, now_us(start))
                     }
                     Event::Tick => proto.tick(now_us(start)),
                     Event::Shutdown => break,
                 };
+                let actions = exec.absorb(actions);
                 for action in actions {
                     match action {
                         Action::Send { to, msg } => {
                             if let Some(stream) = peers.get_mut(&to) {
                                 // A dead peer just drops its traffic.
-                                let _ = write_frame(stream, id, &msg);
+                                let _ = write_msg(stream, id, &msg);
                             }
                         }
-                        Action::Execute { dot, cmd } => {
-                            let resp = store.execute(&cmd);
-                            *executed.lock().unwrap() += 1;
-                            *store_digest.lock().unwrap() = store.digest();
-                            if dot.origin == id {
-                                if let Some(tx) = done.remove(&dot) {
-                                    let _ = tx.send((dot, resp));
-                                }
+                        Action::Reply { rid, response } => {
+                            if let Some(tx) = done.remove(&rid) {
+                                let _ = tx.send((rid, response));
                             }
                         }
                         _ => {}
                     }
+                }
+                if exec.executed() != last_executed {
+                    last_executed = exec.executed();
+                    *executed.lock().unwrap() = last_executed;
+                    *store_digest.lock().unwrap() = exec.state().digest();
                 }
                 *counters.lock().unwrap() = proto.counters();
             }
@@ -224,6 +283,63 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
     }
 
     Ok(NodeHandle { id, events: events_tx, threads, counters, store_digest, executed })
+}
+
+/// A real request/response client: a [`Session`] speaking `ClientSubmit`
+/// / `ClientReply` frames to one node over its own TCP connection.
+pub struct TcpClient {
+    session: Session,
+    stream: TcpStream,
+}
+
+impl TcpClient {
+    /// Connect to the node at `addr` as `client`. Client ids must be
+    /// unique across the deployment (they name the session's requests).
+    pub fn connect(addr: &str, client: ClientId) -> Result<TcpClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(TcpClient { session: Session::new(client), stream })
+    }
+
+    /// The session identity.
+    pub fn client(&self) -> ClientId {
+        self.session.client()
+    }
+
+    /// Abort a blocked [`TcpClient::submit`] after `timeout` (None blocks
+    /// forever, the default).
+    pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Submit one command and block for its response (closed loop): the
+    /// session allocates the rid, the frame goes out as `ClientSubmit`,
+    /// and the matching `ClientReply` comes back once the command
+    /// executed at the node.
+    pub fn submit(&mut self, keys: Vec<Key>, op: Op, payload_len: u32) -> Result<(Rid, Response)> {
+        let cmd = self.session.command(keys, op, payload_len);
+        let rid = cmd.rid;
+        let body = wire::encode_client(&wire::ClientFrame::Submit { cmd });
+        write_frame(&mut self.stream, CLIENT_FROM, &body)?;
+        loop {
+            let (_, body) = read_frame(&mut self.stream)?;
+            match wire::decode_client(&body)? {
+                wire::ClientFrame::Reply { rid: got, response } if got == rid => {
+                    return Ok((rid, response));
+                }
+                // A reply for an earlier (timed-out) request of this
+                // closed-loop session: skip it.
+                wire::ClientFrame::Reply { .. } => continue,
+                wire::ClientFrame::Submit { .. } => bail!("unexpected ClientSubmit from node"),
+            }
+        }
+    }
+
+    /// Single-key shorthand for [`TcpClient::submit`].
+    pub fn submit_single(&mut self, key: Key, op: Op, payload_len: u32) -> Result<(Rid, Response)> {
+        self.submit(vec![key], op, payload_len)
+    }
 }
 
 /// Allocate `n` localhost addresses on free ports.

@@ -1,13 +1,38 @@
-//! Binary wire codec for Tempo messages (the offline registry has no
-//! serde, so framing is hand-rolled: length-prefixed frames, little-endian
-//! fixed-width integers, u8 message tags). The complete frame layout —
+//! Binary wire codec for Tempo protocol messages (tags 0–16) and the
+//! client service frames (tags 17–18). The offline registry has no serde,
+//! so framing is hand-rolled: length-prefixed frames, little-endian
+//! fixed-width integers, u8 message tags. The complete frame layout —
 //! every tag, every compound encoding, and the malformed-input error
 //! contract — is documented in `docs/WIRE.md`; keep the two in sync.
+//!
+//! The two tag ranges are *strictly separated streams*: [`decode`]
+//! (protocol messages, peer connections) rejects a client tag, and
+//! [`decode_client`] (client connections) rejects a protocol tag — a
+//! frame can never cross from one plane into the other, and an `MBatch`
+//! member carrying a client frame is malformed the same way a nested
+//! batch is.
 
-use crate::core::{ClientId, Command, Dot, Op, ProcessId, ShardId};
+use crate::core::{ClientId, Command, Dot, Op, ProcessId, Response, Rid, ShardId};
 use crate::protocol::tempo::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums};
 use crate::protocol::tempo::promises::PromiseSet;
 use crate::util::error::{bail, Result};
+
+/// Tag of the `ClientSubmit` frame (docs/WIRE.md).
+pub const TAG_CLIENT_SUBMIT: u8 = 17;
+/// Tag of the `ClientReply` frame (docs/WIRE.md).
+pub const TAG_CLIENT_REPLY: u8 = 18;
+
+/// Frames exchanged between a client session and a node over the client
+/// plane of the TCP runtime (never between protocol peers).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientFrame {
+    /// Client → node: submit `cmd` (which carries its `Rid`) at this
+    /// replica. Tag 17.
+    Submit { cmd: Command },
+    /// Node → client: the response for request `rid`, produced by the
+    /// coordinator's executor at execution time. Tag 18.
+    Reply { rid: Rid, response: Response },
+}
 
 pub struct Writer {
     pub buf: Vec<u8>,
@@ -40,8 +65,12 @@ impl Writer {
         self.u32(d.origin.0);
         self.u64(d.seq);
     }
+    fn rid(&mut self, r: Rid) {
+        self.u64(r.client().0);
+        self.u64(r.seq());
+    }
     fn cmd(&mut self, c: &Command) {
-        self.u64(c.client.0);
+        self.rid(c.rid);
         self.u8(match c.op {
             Op::Get => 0,
             Op::Put => 1,
@@ -52,6 +81,17 @@ impl Writer {
         self.u16(c.keys.len() as u16);
         for &k in &c.keys {
             self.u64(k);
+        }
+        // Materialize the payload (contents are irrelevant to ordering,
+        // so the bytes are zero) — frames carry realistic sizes and
+        // `Command::wire_size` equals the encoded length exactly.
+        self.buf.resize(self.buf.len() + c.payload_len as usize, 0);
+    }
+    fn response(&mut self, r: &Response) {
+        self.u16(r.versions.len() as u16);
+        for &(k, v) in &r.versions {
+            self.u64(k);
+            self.u64(v);
         }
     }
     fn quorums(&mut self, q: &[(ShardId, Vec<ProcessId>)]) {
@@ -125,8 +165,11 @@ impl<'a> Reader<'a> {
     fn dot(&mut self) -> Result<Dot> {
         Ok(Dot::new(ProcessId(self.u32()?), self.u64()?))
     }
+    fn rid(&mut self) -> Result<Rid> {
+        Ok(Rid::new(ClientId(self.u64()?), self.u64()?))
+    }
     fn cmd(&mut self) -> Result<Command> {
-        let client = ClientId(self.u64()?);
+        let rid = self.rid()?;
         let op = match self.u8()? {
             0 => Op::Get,
             1 => Op::Put,
@@ -140,9 +183,21 @@ impl<'a> Reader<'a> {
         for _ in 0..n {
             keys.push(self.u64()?);
         }
-        let mut c = Command::new(client, keys, op, payload_len);
+        // Skip the materialized payload bytes (bounds-checked: a hostile
+        // payload_len larger than the frame is a truncation error, and no
+        // allocation happens before the check).
+        self.take(payload_len as usize)?;
+        let mut c = Command::new(rid, keys, op, payload_len);
         c.batched = batched;
         Ok(c)
+    }
+    fn response(&mut self) -> Result<Response> {
+        let n = self.u16()? as usize;
+        let mut versions = Vec::with_capacity(n);
+        for _ in 0..n {
+            versions.push((self.u64()?, self.u64()?));
+        }
+        Ok(Response { versions })
     }
     fn quorums(&mut self) -> Result<Quorums> {
         let n = self.u8()? as usize;
@@ -313,6 +368,36 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
     w.buf
 }
 
+/// Encode a client frame (without the length prefix).
+pub fn encode_client(frame: &ClientFrame) -> Vec<u8> {
+    let mut w = Writer::new();
+    match frame {
+        ClientFrame::Submit { cmd } => {
+            w.u8(TAG_CLIENT_SUBMIT);
+            w.cmd(cmd);
+        }
+        ClientFrame::Reply { rid, response } => {
+            w.u8(TAG_CLIENT_REPLY);
+            w.rid(*rid);
+            w.response(response);
+        }
+    }
+    w.buf
+}
+
+/// Decode a client frame (tags 17–18). A protocol tag here is an error:
+/// the client plane never carries protocol messages.
+pub fn decode_client(buf: &[u8]) -> Result<ClientFrame> {
+    let mut r = Reader::new(buf);
+    let tag = r.u8()?;
+    match tag {
+        TAG_CLIENT_SUBMIT => Ok(ClientFrame::Submit { cmd: r.cmd()? }),
+        TAG_CLIENT_REPLY => Ok(ClientFrame::Reply { rid: r.rid()?, response: r.response()? }),
+        x if x <= 16 => bail!("protocol frame tag {x} in client stream"),
+        x => bail!("bad client frame tag {x}"),
+    }
+}
+
 /// Decode a message (frame body). Trailing bytes after a complete
 /// top-level message are ignored (forward compatibility); inside an
 /// `MBatch` every member must consume its length prefix exactly.
@@ -380,18 +465,23 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
         }
         16 => {
             // Length-prefixed member frames; a batch inside a batch is
-            // malformed by construction (the Batcher never nests) and is
-            // rejected *before* recursing — by peeking the member's tag —
-            // so a deeply nested hostile frame cannot overflow the stack.
-            // Each member must consume its declared length exactly;
-            // surplus bytes are corruption.
+            // malformed by construction (the Batcher never nests), and a
+            // client frame can never travel between protocol peers — both
+            // are rejected *before* recursing, by peeking the member's
+            // tag, so a deeply nested hostile frame cannot overflow the
+            // stack. Each member must consume its declared length
+            // exactly; surplus bytes are corruption.
             let n = r.u16()? as usize;
             let mut msgs = Vec::with_capacity(n.min(256));
             for _ in 0..n {
                 let len = r.u32()? as usize;
                 let body = r.take(len)?;
-                if body.first() == Some(&16) {
-                    bail!("nested MBatch frame");
+                match body.first() {
+                    Some(&16) => bail!("nested MBatch frame"),
+                    Some(&t) if t == TAG_CLIENT_SUBMIT || t == TAG_CLIENT_REPLY => {
+                        bail!("client frame tag {t} inside MBatch")
+                    }
+                    _ => {}
                 }
                 let mut sub = Reader::new(body);
                 let inner = decode_at(&mut sub)?;
@@ -401,6 +491,9 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
                 msgs.push(inner);
             }
             Msg::MBatch { msgs }
+        }
+        x if x == TAG_CLIENT_SUBMIT || x == TAG_CLIENT_REPLY => {
+            bail!("client frame tag {x} in protocol stream")
         }
         x => bail!("bad message tag {x}"),
     };
@@ -420,7 +513,7 @@ mod tests {
     #[test]
     fn all_variants_roundtrip() {
         let dot = Dot::new(ProcessId(3), 42);
-        let cmd = Command::new(ClientId(7), vec![1, 99], Op::Rmw, 512);
+        let cmd = Command::new(Rid::new(ClientId(7), 9), vec![1, 99], Op::Rmw, 512);
         let quorums: Quorums =
             vec![(ShardId(0), vec![ProcessId(0), ProcessId(1)]), (ShardId(1), vec![ProcessId(3)])];
         let ts: KeyTs = vec![(1, 10), (99, 11)];
@@ -537,6 +630,123 @@ mod tests {
             }
         }
         assert!(decode(&[200]).is_err(), "unknown tag must fail");
+    }
+
+    #[test]
+    fn command_wire_size_matches_codec() {
+        // The sim's NIC model charges Command::wire_size; it must equal
+        // the encoded length exactly (op byte, batched count and payload
+        // included — the seed undercounted all three).
+        let representative = [
+            Command::new(Rid::new(ClientId(0), 1), vec![0], Op::Get, 0),
+            Command::new(Rid::new(ClientId(7), 9), vec![1, 99], Op::Rmw, 512),
+            Command::new(Rid::new(ClientId(u64::MAX), u64::MAX), (0..50).collect(), Op::Put, 4096),
+            {
+                let rid = Rid::new(ClientId(3), 2);
+                let mut batched = Command::new(rid, vec![5, 6, 7], Op::Put, 100);
+                batched.batched = 1000;
+                batched
+            },
+        ];
+        for cmd in representative {
+            let mut w = Writer::new();
+            w.cmd(&cmd);
+            assert_eq!(
+                cmd.wire_size(),
+                w.buf.len() as u64,
+                "wire_size out of sync with the codec for {cmd:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn client_frames_roundtrip() {
+        let cmd = Command::new(Rid::new(ClientId(7), 3), vec![1, 99], Op::Put, 256);
+        let submit = ClientFrame::Submit { cmd };
+        let bytes = encode_client(&submit);
+        assert_eq!(bytes[0], TAG_CLIENT_SUBMIT);
+        assert_eq!(decode_client(&bytes).expect("decode submit"), submit);
+
+        let reply = ClientFrame::Reply {
+            rid: Rid::new(ClientId(7), 3),
+            response: Response { versions: vec![(1, 4), (99, 17)] },
+        };
+        let bytes = encode_client(&reply);
+        assert_eq!(bytes[0], TAG_CLIENT_REPLY);
+        assert_eq!(decode_client(&bytes).expect("decode reply"), reply);
+        let empty = ClientFrame::Reply {
+            rid: Rid::new(ClientId(0), 1),
+            response: Response { versions: vec![] },
+        };
+        assert_eq!(decode_client(&encode_client(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn client_frames_fail_cleanly_on_malformed_input() {
+        let cmd = Command::new(Rid::new(ClientId(7), 3), vec![1, 99], Op::Put, 64);
+        for frame in [
+            ClientFrame::Submit { cmd },
+            ClientFrame::Reply {
+                rid: Rid::new(ClientId(2), 9),
+                response: Response { versions: vec![(5, 1)] },
+            },
+        ] {
+            let bytes = encode_client(&frame);
+            for cut in 0..bytes.len() {
+                assert!(decode_client(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+            }
+        }
+        assert!(decode_client(&[200]).is_err(), "unknown tag must fail");
+    }
+
+    #[test]
+    fn client_and_protocol_streams_are_strictly_separated() {
+        let dot = Dot::new(ProcessId(1), 2);
+        let cmd = Command::new(Rid::new(ClientId(7), 3), vec![1], Op::Put, 8);
+        // A client frame in the protocol stream is an error...
+        let submit = encode_client(&ClientFrame::Submit { cmd });
+        assert!(decode(&submit).is_err(), "ClientSubmit must not decode as a Msg");
+        let reply = encode_client(&ClientFrame::Reply {
+            rid: Rid::new(ClientId(1), 1),
+            response: Response { versions: vec![] },
+        });
+        assert!(decode(&reply).is_err(), "ClientReply must not decode as a Msg");
+        // ... and a protocol frame in the client stream is an error.
+        let stable = encode(&Msg::MStable { dot });
+        assert!(decode_client(&stable).is_err(), "Msg must not decode as a client frame");
+    }
+
+    #[test]
+    fn batch_rejects_nested_client_frames_like_nested_batches() {
+        // An MBatch member whose tag is 17 or 18 must fail from the tag
+        // peek, exactly like a nested batch.
+        for member in [
+            encode_client(&ClientFrame::Submit {
+                cmd: Command::new(Rid::new(ClientId(1), 1), vec![3], Op::Put, 4),
+            }),
+            encode_client(&ClientFrame::Reply {
+                rid: Rid::new(ClientId(1), 1),
+                response: Response { versions: vec![(3, 1)] },
+            }),
+        ] {
+            let mut w = Writer::new();
+            w.u8(16);
+            w.u16(1);
+            w.u32(member.len() as u32);
+            w.buf.extend_from_slice(&member);
+            assert!(decode(&w.buf).is_err(), "client frame inside MBatch must fail");
+        }
+    }
+
+    #[test]
+    fn hostile_payload_length_is_a_truncation_error() {
+        // A cmd whose payload_len claims more bytes than the frame holds
+        // must error without allocating.
+        let cmd = Command::new(Rid::new(ClientId(1), 1), vec![3], Op::Put, 8);
+        let mut bytes = encode_client(&ClientFrame::Submit { cmd });
+        // Layout: tag(1) + rid(16) + op(1) → payload_len at offset 18.
+        bytes[18..22].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_client(&bytes).is_err(), "hostile payload_len must fail");
     }
 
     #[test]

@@ -505,11 +505,13 @@ impl Protocol for Caesar {
         "caesar"
     }
 
-    fn submit(&mut self, dot: Dot, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+    fn submit(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
         if self.bp.crashed {
             return out;
         }
+        let dot = self.bp.next_dot();
+        out.push(Action::Submitted { dot });
         self.clock += 1;
         let ts = self.clock;
         self.info.insert(
@@ -530,15 +532,15 @@ impl Protocol for Caesar {
         );
         let q = self.fast_quorum();
         self.broadcast(&q, Msg::MPropose { dot, cmd, ts }, time, &mut out);
-        self.outbound(out, false)
+        self.outbound(out, false, time)
     }
 
     fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
         let out = self.dispatch(from, msg, time);
-        self.outbound(out, false)
+        self.outbound(out, false, time)
     }
 
-    fn tick(&mut self, _time: u64) -> Vec<Action<Msg>> {
+    fn tick(&mut self, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
         if self.bp.crashed {
             return out;
@@ -546,7 +548,7 @@ impl Protocol for Caesar {
         self.ticks += 1;
         let ticks = self.ticks;
         self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
-        self.outbound(out, true)
+        self.outbound(out, true, time)
     }
 
     fn crash(&mut self) {

@@ -4,7 +4,7 @@
 //! factoring, adapted to this crate's side-effect-free state machines).
 
 use super::batch::{BatchMsg, Batcher};
-use crate::core::{Config, Dot, ProcessId, ShardId};
+use crate::core::{Config, Dot, DotGen, ProcessId, ShardId};
 use crate::protocol::Action;
 use std::collections::HashMap;
 
@@ -25,6 +25,10 @@ pub struct BaseProcess<M> {
     pub crashed: bool,
     /// Per-destination coalescing of outgoing sends (`Config::batch_max_msgs`).
     pub batcher: Batcher<M>,
+    /// Dot allocator for commands submitted at this process (the paper's
+    /// `next_id()`): `Protocol::submit` renames each accepted command to
+    /// `(id, seq)` here — callers never pre-allocate dots.
+    dots: DotGen,
     /// Messages whose precondition is not yet enabled, keyed by the command
     /// (or, for Caesar's wait condition, the blocking command).
     stalled: HashMap<Dot, Vec<(ProcessId, M)>>,
@@ -43,8 +47,14 @@ impl<M> BaseProcess<M> {
             config,
             crashed: false,
             batcher,
+            dots: DotGen::new(id),
             stalled: HashMap::new(),
         }
+    }
+
+    /// Allocate the dot for a freshly submitted command.
+    pub fn next_dot(&mut self) -> Dot {
+        self.dots.next()
     }
 
     /// Shard-local process-id base (`group * r`).
@@ -137,8 +147,14 @@ pub trait Process: Sized {
     /// batcher ([`super::batch::Batcher`]). `Protocol::{submit, handle,
     /// tick}` implementations call this exactly once per step, with `tick`
     /// set on the periodic handler so held queues drain at least once per
-    /// tick interval. With batching disabled this is the identity.
-    fn outbound(&mut self, actions: Vec<Action<Self::Msg>>, tick: bool) -> Vec<Action<Self::Msg>>
+    /// delay bound (`Config::batch_max_delay_us`; every tick when 0).
+    /// With batching disabled this is the identity.
+    fn outbound(
+        &mut self,
+        actions: Vec<Action<Self::Msg>>,
+        tick: bool,
+        now: u64,
+    ) -> Vec<Action<Self::Msg>>
     where
         Self::Msg: BatchMsg,
     {
@@ -146,9 +162,11 @@ pub trait Process: Sized {
         if !batcher.enabled() {
             return actions;
         }
-        let mut out = batcher.harvest(actions);
-        if tick || !batcher.hold() {
+        let mut out = batcher.harvest(actions, now);
+        if !batcher.hold() {
             out.extend(batcher.flush());
+        } else if tick {
+            out.extend(batcher.flush_due(now));
         }
         out
     }

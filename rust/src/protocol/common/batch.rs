@@ -45,23 +45,44 @@ pub trait BatchMsg: Sized {
 /// frame the *receiver* rejects as hostile.
 pub const BATCH_SOFT_MAX_BYTES: u64 = 4 << 20;
 
+/// One destination's pending messages: the queue, its summed
+/// `approx_wire_bytes`, and when its oldest entry was enqueued (drives
+/// the age-based flush, `Config::batch_max_delay_us`).
+#[derive(Clone, Debug)]
+struct Queue<M> {
+    msgs: Vec<M>,
+    bytes: u64,
+    oldest_at: u64,
+}
+
+// Manual impl: a derived Default would demand `M: Default`, which the
+// protocol Msg enums do not (and need not) provide.
+impl<M> Default for Queue<M> {
+    fn default() -> Self {
+        Queue { msgs: Vec::new(), bytes: 0, oldest_at: 0 }
+    }
+}
+
 /// Per-destination coalescing of outgoing [`Action::Send`]s.
 ///
 /// A queue is flushed as one [`BatchMsg::batch`] frame when it reaches
 /// `max_msgs` messages or [`BATCH_SOFT_MAX_BYTES`] of estimated encoding
-/// (inside [`Batcher::harvest`]), and any remainder is flushed by
-/// [`Batcher::flush`] — on every periodic tick under `batch_hold`, or
-/// at the end of every protocol step otherwise (see `Config::batch_hold`).
-/// Per-destination FIFO order is preserved; self-addressed sends and
-/// non-send actions pass through untouched. A queue holding a single
-/// message flushes it unwrapped (no one-element batches on the wire).
+/// (inside [`Batcher::harvest`]). Any remainder is flushed by the policy
+/// of `Config::batch_hold`: per protocol step ([`Batcher::flush`], the
+/// transparent policy), or held across steps and flushed by the periodic
+/// tick once the queue's oldest entry exceeds
+/// `Config::batch_max_delay_us` ([`Batcher::flush_due`]; a delay of 0
+/// flushes on every tick). Per-destination FIFO order is preserved;
+/// self-addressed sends and non-send actions pass through untouched. A
+/// queue holding a single message flushes it unwrapped (no one-element
+/// batches on the wire).
 #[derive(Clone, Debug)]
 pub struct Batcher<M> {
     me: ProcessId,
     max_msgs: usize,
     hold: bool,
-    /// Pending messages and their summed `approx_wire_bytes`, per peer.
-    queues: BTreeMap<ProcessId, (Vec<M>, u64)>,
+    max_delay_us: u64,
+    queues: BTreeMap<ProcessId, Queue<M>>,
     queued: usize,
     batches_sent: u64,
     batched_msgs: u64,
@@ -75,6 +96,7 @@ impl<M> Batcher<M> {
             // The wire frame's member count is a u16 (docs/WIRE.md).
             max_msgs: config.batch_max_msgs.min(u16::MAX as usize),
             hold: config.batch_hold,
+            max_delay_us: config.batch_max_delay_us,
             queues: BTreeMap::new(),
             queued: 0,
             batches_sent: 0,
@@ -110,8 +132,10 @@ impl<M: BatchMsg> Batcher<M> {
     /// Route one protocol step's actions through the batcher: remote sends
     /// are queued per destination (emitting a batch whenever a queue
     /// reaches the size threshold); everything else passes through in
-    /// order. With batching disabled this is the identity.
-    pub fn harvest(&mut self, actions: Vec<Action<M>>) -> Vec<Action<M>> {
+    /// order. `now` stamps the age of a queue's oldest entry for
+    /// [`Batcher::flush_due`]. With batching disabled this is the
+    /// identity.
+    pub fn harvest(&mut self, actions: Vec<Action<M>>, now: u64) -> Vec<Action<M>> {
         if !self.enabled() {
             return actions;
         }
@@ -120,13 +144,16 @@ impl<M: BatchMsg> Batcher<M> {
             match action {
                 Action::Send { to, msg } if to != self.me && !msg.is_batch() => {
                     let bytes = msg.approx_wire_bytes();
-                    let (q, q_bytes) = self.queues.entry(to).or_default();
-                    q.push(msg);
-                    *q_bytes += bytes;
+                    let q = self.queues.entry(to).or_default();
+                    if q.msgs.is_empty() {
+                        q.oldest_at = now;
+                    }
+                    q.msgs.push(msg);
+                    q.bytes += bytes;
                     self.queued += 1;
-                    if q.len() >= self.max_msgs || *q_bytes >= BATCH_SOFT_MAX_BYTES {
-                        let msgs = std::mem::take(q);
-                        *q_bytes = 0;
+                    if q.msgs.len() >= self.max_msgs || q.bytes >= BATCH_SOFT_MAX_BYTES {
+                        let msgs = std::mem::take(&mut q.msgs);
+                        q.bytes = 0;
                         self.queued -= msgs.len();
                         out.push(Action::send(to, self.wrap(msgs)));
                     }
@@ -146,8 +173,40 @@ impl<M: BatchMsg> Batcher<M> {
         self.queued = 0;
         queues
             .into_iter()
-            .filter(|(_, (q, _))| !q.is_empty())
-            .map(|(to, (q, _))| Action::send(to, self.wrap(q)))
+            .filter(|(_, q)| !q.msgs.is_empty())
+            .map(|(to, q)| Action::send(to, self.wrap(q.msgs)))
+            .collect()
+    }
+
+    /// Age-based flush (the periodic tick under `Config::batch_hold`):
+    /// flush only the queues whose oldest entry has waited at least
+    /// `Config::batch_max_delay_us` — younger queues keep accumulating
+    /// for bigger batches. A delay of 0 degenerates to [`Batcher::flush`]
+    /// (every held queue drains on every tick), so a lone sub-threshold
+    /// message always departs within one delay bound plus one tick.
+    pub fn flush_due(&mut self, now: u64) -> Vec<Action<M>> {
+        if self.queued == 0 {
+            return Vec::new();
+        }
+        if self.max_delay_us == 0 {
+            return self.flush();
+        }
+        let due: Vec<ProcessId> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                !q.msgs.is_empty() && now.saturating_sub(q.oldest_at) >= self.max_delay_us
+            })
+            .map(|(&to, _)| to)
+            .collect();
+        due.into_iter()
+            .map(|to| {
+                let q = self.queues.get_mut(&to).expect("due queue exists");
+                let msgs = std::mem::take(&mut q.msgs);
+                q.bytes = 0;
+                self.queued -= msgs.len();
+                Action::send(to, self.wrap(msgs))
+            })
             .collect()
     }
 
@@ -206,7 +265,7 @@ mod tests {
     fn disabled_batcher_is_the_identity() {
         let mut b = batcher(0);
         assert!(!b.enabled());
-        let out = b.harvest(vec![send(1, 7), send(2, 8)]);
+        let out = b.harvest(vec![send(1, 7), send(2, 8)], 0);
         assert_eq!(out.len(), 2);
         assert_eq!(b.queued(), 0);
         assert!(b.flush().is_empty());
@@ -215,7 +274,7 @@ mod tests {
     #[test]
     fn size_threshold_flushes_in_fifo_order() {
         let mut b = batcher(2);
-        let out = b.harvest(vec![send(1, 1), send(2, 9), send(1, 2), send(1, 3)]);
+        let out = b.harvest(vec![send(1, 1), send(2, 9), send(1, 2), send(1, 3)], 0);
         // P1's queue hit the threshold after (1, 2); (9) and (3) stay queued.
         assert_eq!(out.len(), 1);
         match &out[0] {
@@ -234,7 +293,7 @@ mod tests {
     #[test]
     fn single_message_queues_flush_unwrapped() {
         let mut b = batcher(8);
-        assert!(b.harvest(vec![send(1, 5)]).is_empty());
+        assert!(b.harvest(vec![send(1, 5)], 0).is_empty());
         let out = b.flush();
         assert_eq!(out.len(), 1);
         assert!(
@@ -250,7 +309,7 @@ mod tests {
     fn self_sends_and_existing_batches_pass_through() {
         let mut b = batcher(4);
         let pre = TestMsg::Batch(vec![TestMsg::One(1), TestMsg::One(2)]);
-        let out = b.harvest(vec![send(0, 3), Action::send(ProcessId(2), pre.clone())]);
+        let out = b.harvest(vec![send(0, 3), Action::send(ProcessId(2), pre.clone())], 0);
         assert_eq!(out.len(), 2, "self-send and pre-batched frame pass through");
         assert_eq!(b.queued(), 0);
         assert!(matches!(&out[1], Action::Send { msg, .. } if *msg == pre));
@@ -262,7 +321,7 @@ mod tests {
         // 4 MiB soft cap and must flush as a frame the transport accepts.
         let mut b = batcher(1000);
         let big = || Action::send(ProcessId(1), TestMsg::Big(3 << 20));
-        let out = b.harvest(vec![big(), big()]);
+        let out = b.harvest(vec![big(), big()], 0);
         assert_eq!(out.len(), 1, "byte cap must force a flush");
         match &out[0] {
             Action::Send { msg: TestMsg::Batch(msgs), .. } => assert_eq!(msgs.len(), 2),
@@ -272,9 +331,62 @@ mod tests {
     }
 
     #[test]
+    fn age_based_flush_holds_until_the_delay_bound() {
+        let config =
+            Config::new(3, 1).with_batching(100).with_batch_max_delay_us(10_000);
+        let mut b: Batcher<TestMsg> = Batcher::from_config(ProcessId(0), &config);
+        assert!(b.harvest(vec![send(1, 7)], 1_000).is_empty());
+        // Younger than the delay bound: the tick keeps holding it.
+        assert!(b.flush_due(6_000).is_empty());
+        assert_eq!(b.queued(), 1);
+        // A second destination enqueued later gets its own age.
+        assert!(b.harvest(vec![send(2, 8)], 7_000).is_empty());
+        // At 11 000 µs only P1's queue (age 10 000) is due; P2 (age 4 000)
+        // keeps accumulating.
+        let out = b.flush_due(11_000);
+        assert_eq!(out.len(), 1);
+        assert!(matches!(
+            &out[0],
+            Action::Send { to, msg: TestMsg::One(7) } if *to == ProcessId(1)
+        ));
+        assert_eq!(b.queued(), 1);
+        // ... and departs itself within one delay bound of its enqueue.
+        let out = b.flush_due(17_000);
+        assert_eq!(out.len(), 1);
+        assert!(matches!(
+            &out[0],
+            Action::Send { to, msg: TestMsg::One(8) } if *to == ProcessId(2)
+        ));
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn zero_delay_flushes_every_queue_on_tick() {
+        // batch_max_delay_us == 0 (the default) preserves the PR 2
+        // behaviour: every held queue drains on every tick.
+        let config = Config::new(3, 1).with_batching(100);
+        let mut b: Batcher<TestMsg> = Batcher::from_config(ProcessId(0), &config);
+        assert!(b.harvest(vec![send(1, 7), send(2, 8)], 5_000).is_empty());
+        assert_eq!(b.flush_due(5_000).len(), 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn age_resets_once_a_queue_drains() {
+        let config = Config::new(3, 1).with_batching(100).with_batch_max_delay_us(1_000);
+        let mut b: Batcher<TestMsg> = Batcher::from_config(ProcessId(0), &config);
+        assert!(b.harvest(vec![send(1, 1)], 0).is_empty());
+        assert_eq!(b.flush_due(1_000).len(), 1);
+        // New message after the drain: age is measured from ITS enqueue.
+        assert!(b.harvest(vec![send(1, 2)], 1_500).is_empty());
+        assert!(b.flush_due(2_000).is_empty(), "age must reset after a drain");
+        assert_eq!(b.flush_due(2_500).len(), 1);
+    }
+
+    #[test]
     fn stats_count_batches_and_members() {
         let mut b = batcher(3);
-        let _ = b.harvest((0..7).map(|v| send(1, v)).collect());
+        let _ = b.harvest((0..7).map(|v| send(1, v)).collect(), 0);
         let _ = b.flush(); // 3 + 3 batched, then 1 unwrapped
         let mut c = Counters::default();
         b.record_stats(&mut c);

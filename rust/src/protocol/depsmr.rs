@@ -253,11 +253,13 @@ impl DepCore {
 
     // -- commit protocol ---------------------------------------------------
 
-    pub fn submit(&mut self, dot: Dot, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+    pub fn submit(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
         if self.bp.crashed {
             return out;
         }
+        let dot = self.bp.next_dot();
+        out.push(Action::Submitted { dot });
         let groups = cmd.shards(self.bp.config.shards);
         let quorums: Quorums = groups
             .iter()
@@ -806,19 +808,19 @@ macro_rules! dep_protocol {
                 $proto_name
             }
 
-            fn submit(&mut self, dot: Dot, cmd: Command, time: u64) -> Vec<Action<Msg>> {
-                let out = self.0.submit(dot, cmd, time);
-                self.0.outbound(out, false)
+            fn submit(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+                let out = self.0.submit(cmd, time);
+                self.0.outbound(out, false, time)
             }
 
             fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
                 let out = self.0.dispatch(from, msg, time);
-                self.0.outbound(out, false)
+                self.0.outbound(out, false, time)
             }
 
             fn tick(&mut self, time: u64) -> Vec<Action<Msg>> {
                 let out = self.0.tick(time);
-                self.0.outbound(out, true)
+                self.0.outbound(out, true, time)
             }
 
             fn crash(&mut self) {

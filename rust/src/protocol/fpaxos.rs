@@ -245,25 +245,27 @@ impl Protocol for FPaxos {
         "fpaxos"
     }
 
-    fn submit(&mut self, dot: Dot, cmd: Command, _time: u64) -> Vec<Action<Msg>> {
+    fn submit(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
         if self.bp.crashed {
             return out;
         }
+        let dot = self.bp.next_dot();
+        out.push(Action::Submitted { dot });
         if self.is_leader() {
             self.leader_order(dot, cmd, &mut out);
         } else {
             out.push(Action::send(self.leader(), Msg::MForward { dot, cmd }));
         }
-        self.outbound(out, false)
+        self.outbound(out, false, time)
     }
 
     fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
         let out = self.dispatch(from, msg, time);
-        self.outbound(out, false)
+        self.outbound(out, false, time)
     }
 
-    fn tick(&mut self, _time: u64) -> Vec<Action<Msg>> {
+    fn tick(&mut self, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
         if self.bp.crashed {
             return out;
@@ -271,7 +273,7 @@ impl Protocol for FPaxos {
         self.ticks += 1;
         let ticks = self.ticks;
         self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
-        self.outbound(out, true)
+        self.outbound(out, true, time)
     }
 
     fn crash(&mut self) {

@@ -16,7 +16,7 @@ pub mod fpaxos;
 pub mod janus;
 pub mod tempo;
 
-use crate::core::{Command, Config, Dot, ProcessId};
+use crate::core::{Command, Config, Dot, ProcessId, Response, Rid};
 
 /// Memory-footprint diagnostics: sizes of the per-command/per-key maps a
 /// protocol retains. The GC tests assert these stay bounded in long runs.
@@ -39,8 +39,18 @@ pub enum Action<M> {
     /// delivered immediately by the runtimes, matching the paper's
     /// "self-addressed messages are delivered immediately").
     Send { to: ProcessId, msg: M },
-    /// The command was applied to the local state machine (`execute_p`).
+    /// `Protocol::submit` accepted the command and renamed it to `dot`
+    /// (oracle/metrics only: the runtimes use it to correlate protocol
+    /// identities with client request ids; clients never see it).
+    Submitted { dot: Dot },
+    /// The command must be applied to the local state machine
+    /// (`execute_p`). Consumed in order by the replica's
+    /// [`crate::executor::Executor`].
     Execute { dot: Dot, cmd: Command },
+    /// The response for request `rid`, emitted by the replica's executor
+    /// at the command's coordinator (`dot.origin`) only — the runtimes
+    /// route it back to the issuing client session.
+    Reply { rid: Rid, response: Response },
     /// The command reached the COMMIT phase locally (metrics only).
     Committed { dot: Dot, fast: bool },
     /// A recovery was started for `dot` (metrics only).
@@ -64,9 +74,12 @@ pub trait Protocol: Sized {
     /// Protocol name for reporting.
     fn name() -> &'static str;
 
-    /// Client submits `cmd` at this process (which must replicate one of
-    /// the partitions the command accesses). `dot` identifies the command.
-    fn submit(&mut self, dot: Dot, cmd: Command, time_us: u64) -> Vec<Action<Self::Message>>;
+    /// A client session submits `cmd` at this process (which must
+    /// replicate one of the partitions the command accesses). The
+    /// protocol allocates the command's `Dot` internally (from the
+    /// `BaseProcess` dot generator) and reports it via
+    /// [`Action::Submitted`]; callers identify the request by `cmd.rid`.
+    fn submit(&mut self, cmd: Command, time_us: u64) -> Vec<Action<Self::Message>>;
 
     /// Handle a message from `from`.
     fn handle(

@@ -1147,13 +1147,16 @@ impl Protocol for Tempo {
         "tempo"
     }
 
-    /// Submit a command (paper line 1): pick a fast quorum per accessed
-    /// group and hand the command to the co-located coordinator of each.
-    fn submit(&mut self, dot: Dot, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+    /// Submit a command (paper line 1): rename it to a freshly allocated
+    /// dot, pick a fast quorum per accessed group and hand the command to
+    /// the co-located coordinator of each.
+    fn submit(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
         if self.bp.crashed {
             return out;
         }
+        let dot = self.bp.next_dot();
+        out.push(Action::Submitted { dot });
         let groups = cmd.shards(self.bp.config.shards);
         debug_assert!(
             groups.contains(&self.bp.group),
@@ -1171,12 +1174,12 @@ impl Protocol for Tempo {
             .map(|&g| self.bp.config.closest_in_shard(self.bp.id, g))
             .collect();
         self.broadcast(&coords, Msg::MSubmit { dot, cmd, quorums }, time, &mut out);
-        self.outbound(out, false)
+        self.outbound(out, false, time)
     }
 
     fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
         let out = self.dispatch(from, msg, time);
-        self.outbound(out, false)
+        self.outbound(out, false, time)
     }
 
     /// Periodic handler: broadcast freshly generated promises, advance
@@ -1290,7 +1293,7 @@ impl Protocol for Tempo {
                 }
             }
         }
-        self.outbound(out, true)
+        self.outbound(out, true, time)
     }
 
     fn crash(&mut self) {

@@ -7,6 +7,14 @@
 //! crash/suspect schedule for the recovery experiments. Runs are fully
 //! deterministic given the seed.
 //!
+//! Clients are real [`Session`]s: each closed-loop client allocates
+//! rifl-style request ids, `Protocol::submit(cmd, time)` renames the
+//! request to a dot internally, and every replica owns an
+//! [`Executor`] that applies `Action::Execute` to a KV store and emits
+//! `Action::Reply` at the coordinator — the reply (not origin execution)
+//! is what completes a client and is recorded, with its [`Response`],
+//! for the checker's response-validity oracle.
+//!
 //! Two distinct batching layers meet here. *Site-level client batching*
 //! (`SimOpts::batching`, Fig. 8) merges several clients' commands into one
 //! submitted command before the protocol sees them. *Message batching*
@@ -23,9 +31,14 @@ pub mod topology;
 pub use resource::{ResourceModel, ResourceState};
 pub use topology::Topology;
 
-use crate::core::{key_to_shard, ClientId, Command, Completion, Config, Dot, DotGen, ProcessId};
+use crate::client::Session;
+use crate::core::{
+    key_to_shard, ClientId, Command, Completion, Config, Dot, ProcessId, Response, Rid,
+};
+use crate::executor::Executor;
 use crate::metrics::{Counters, RunMetrics};
 use crate::protocol::{Action, Footprint, Protocol};
+use crate::store::KvStore;
 use crate::util::Rng;
 use crate::workload::batching::Batcher;
 use crate::workload::Workload;
@@ -114,6 +127,9 @@ enum Event<M> {
 type EventKey = (u64, u8, u32, u32, u64);
 
 struct InFlight {
+    /// Protocol identity the origin replica assigned at submit
+    /// (`Action::Submitted`).
+    dot: Dot,
     /// (client index, submit time) — batches carry several members.
     members: Vec<(usize, u64)>,
     site: usize,
@@ -126,7 +142,12 @@ pub struct Simulation<P: Protocol, W: Workload> {
     opts: SimOpts,
     procs: Vec<P>,
     dead: Vec<bool>,
-    dots: Vec<DotGen>,
+    /// Per-replica executors: apply `Action::Execute` to the replicated
+    /// KV store and emit `Action::Reply` at the coordinator.
+    executors: Vec<Executor<KvStore>>,
+    /// One session per closed-loop client: allocates the rifl-style
+    /// request ids commands carry.
+    sessions: Vec<Session>,
     resources: Vec<ResourceState>,
     heap: BinaryHeap<Reverse<EventKey>>,
     payloads: HashMap<EventKey, Event<P::Message>>,
@@ -138,7 +159,7 @@ pub struct Simulation<P: Protocol, W: Workload> {
     now: u64,
     workload: W,
     rng: Rng,
-    in_flight: HashMap<Dot, InFlight>,
+    in_flight: HashMap<Rid, InFlight>,
     batchers: Vec<Batcher>,
     result: SimResult,
     warmup_snapshot: Option<Vec<(f64, f64, f64)>>,
@@ -155,7 +176,11 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         );
         let n = config.n_processes();
         let procs: Vec<P> = (0..n).map(|i| P::new(ProcessId(i as u32), config.clone())).collect();
-        let dots = (0..n).map(|i| DotGen::new(ProcessId(i as u32))).collect();
+        let executors = (0..n)
+            .map(|i| Executor::new(ProcessId(i as u32), KvStore::new()))
+            .collect();
+        let n_clients = opts.clients_per_site * config.sites;
+        let sessions = (0..n_clients).map(|c| Session::new(ClientId(c as u64))).collect();
         let resources = (0..n).map(|_| ResourceState::default()).collect();
         let batchers = match opts.batching {
             Some((max, delay)) => {
@@ -172,7 +197,8 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             opts,
             procs,
             dead: vec![false; n],
-            dots,
+            executors,
+            sessions,
             resources,
             heap: BinaryHeap::new(),
             payloads: HashMap::new(),
@@ -355,22 +381,38 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             // would fail them over; unnecessary for our experiments).
             return;
         }
-        let dot = self.dots[origin.0 as usize].next();
-        let mut cmd =
-            Command::new(ClientId(members[0].0 as u64), spec.keys, spec.op, spec.payload_len);
+        // The (first) member's session allocates the request id; a
+        // site-level batch is one request whose response all members
+        // observe.
+        let rid = self.sessions[members[0].0].next_rid();
+        let mut cmd = Command::new(rid, spec.keys, spec.op, spec.payload_len);
         cmd.batched = members.len() as u32;
         let ops = cmd.batched;
-        if self.opts.record_execution {
-            self.result.submitted.push((dot, cmd.clone()));
-        }
-        self.in_flight.insert(dot, InFlight { members, site, ops });
+        // Clone only for the test oracle — the hot path moves the command.
+        let recorded = self.opts.record_execution.then(|| cmd.clone());
         // Client → local replica hop.
         let submit_at = time + self.opts.topology.local_us;
-        let actions = self.procs[origin.0 as usize].submit(dot, cmd, submit_at);
+        let actions = self.procs[origin.0 as usize].submit(cmd, submit_at);
+        // The protocol renamed the request to a dot (Action::Submitted).
+        let dot = match actions.iter().find_map(|a| match a {
+            Action::Submitted { dot } => Some(*dot),
+            _ => None,
+        }) {
+            Some(d) => d,
+            None => return, // replica refused the command (crashed)
+        };
+        debug_assert_eq!(dot.origin, origin, "submitter must be the dot origin");
+        if let Some(c) = recorded {
+            self.result.submitted.push((dot, c));
+        }
+        self.in_flight.insert(rid, InFlight { dot, members, site, ops });
         self.process_actions(origin, actions, submit_at);
     }
 
     fn process_actions(&mut self, at: ProcessId, actions: Vec<Action<P::Message>>, time: u64) {
+        // The replica's executor applies Execute upcalls in order and
+        // emits the Reply at the coordinator.
+        let actions = self.executors[at.0 as usize].absorb(actions);
         for action in actions {
             match action {
                 Action::Send { to, msg } => {
@@ -399,21 +441,25 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
                     if self.opts.record_execution {
                         self.result.execution_logs[at.0 as usize].push((dot, time));
                     }
-                    if at == dot.origin {
-                        self.complete(dot, &cmd, time);
-                    }
+                    let _ = cmd;
                 }
-                Action::Committed { .. } | Action::RecoveryStarted { .. } => {}
+                Action::Reply { rid, response } => {
+                    self.complete(rid, response, time);
+                }
+                Action::Submitted { .. }
+                | Action::Committed { .. }
+                | Action::RecoveryStarted { .. } => {}
             }
         }
     }
 
-    /// Command executed at its origin: clients observe completion one local
-    /// hop later and immediately submit their next command (closed loop).
-    fn complete(&mut self, dot: Dot, _cmd: &Command, time: u64) {
-        let inf = match self.in_flight.remove(&dot) {
+    /// The coordinator's executor replied: clients observe the response
+    /// one local hop later and immediately submit their next command
+    /// (closed loop).
+    fn complete(&mut self, rid: Rid, response: Response, time: u64) {
+        let inf = match self.in_flight.remove(&rid) {
             Some(x) => x,
-            None => return, // duplicate Execute would be a protocol bug
+            None => return, // duplicate Reply would be a protocol bug
         };
         let done_at = time + self.opts.topology.local_us;
         let in_window = done_at >= self.opts.warmup_us && done_at < self.end_time;
@@ -424,10 +470,12 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             }
             if self.opts.record_execution {
                 self.result.completions.push(Completion {
-                    dot,
+                    dot: inf.dot,
+                    rid,
                     client: ClientId(client as u64),
                     submitted_at,
                     completed_at: done_at,
+                    response: response.clone(),
                 });
             }
             self.push(done_at, Event::ClientSubmit { client });

@@ -1,9 +1,26 @@
-//! In-memory key-value store: the replicated state machine the paper's
-//! framework ships (§6.1). Executed commands are applied here through the
-//! `execute_p` upcall; determinism is what PSMR replicates.
+//! Replicated state machines: the pluggable [`StateMachine`] trait the
+//! executor applies commands to, and the in-memory key-value store the
+//! paper's framework ships (§6.1) as its first implementation. Executed
+//! commands reach a state machine through the `execute_p` upcall
+//! (`executor::Executor`); determinism is what PSMR replicates.
 
 use crate::core::{Command, Key, Op};
 use std::collections::HashMap;
+
+pub use crate::core::Response;
+
+/// A deterministic state machine replicated by the protocols. The
+/// executor applies committed commands in the agreed order; `apply` must
+/// be a pure function of the command sequence so every replica converges
+/// (and the PSMR response-validity check can replay it as an oracle).
+pub trait StateMachine {
+    /// Apply `cmd`, mutating local state, and produce the client response.
+    fn apply(&mut self, cmd: &Command) -> Response;
+
+    /// Order-sensitive digest of the current state: replicas that applied
+    /// the same command sequence must agree (tests and the e2e driver).
+    fn digest(&self) -> u64;
+}
 
 /// Value stored per key: a version counter plus the payload length that
 /// last wrote it (payload bytes themselves are irrelevant to ordering, so
@@ -12,13 +29,6 @@ use std::collections::HashMap;
 pub struct Value {
     pub version: u64,
     pub last_payload: u32,
-}
-
-/// Response returned to the client for one command.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct Response {
-    /// Per accessed key: version observed (reads) or produced (writes).
-    pub versions: Vec<(Key, u64)>,
 }
 
 /// Deterministic in-memory KV store.
@@ -95,17 +105,31 @@ impl KvStore {
     }
 }
 
+impl StateMachine for KvStore {
+    fn apply(&mut self, cmd: &Command) -> Response {
+        self.execute(cmd)
+    }
+
+    fn digest(&self) -> u64 {
+        KvStore::digest(self)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::ClientId;
+    use crate::core::{ClientId, Rid};
+
+    fn rid(c: u64) -> Rid {
+        Rid::new(ClientId(c), 1)
+    }
 
     #[test]
     fn deterministic_across_replicas() {
         let cmds: Vec<Command> = (0..100)
             .map(|i| {
                 Command::new(
-                    ClientId(i),
+                    rid(i),
                     vec![i % 7, (i * 3) % 7],
                     if i % 3 == 0 { Op::Get } else { Op::Put },
                     (i % 50) as u32,
@@ -124,8 +148,8 @@ mod tests {
 
     #[test]
     fn order_changes_digest() {
-        let w1 = Command::single(ClientId(1), 5, Op::Put, 10);
-        let w2 = Command::single(ClientId(2), 5, Op::Rmw, 20);
+        let w1 = Command::single(rid(1), 5, Op::Put, 10);
+        let w2 = Command::single(rid(2), 5, Op::Rmw, 20);
         let mut a = KvStore::new();
         a.execute(&w1);
         a.execute(&w2);
@@ -138,10 +162,22 @@ mod tests {
     #[test]
     fn reads_do_not_mutate() {
         let mut s = KvStore::new();
-        s.execute(&Command::single(ClientId(1), 9, Op::Put, 1));
+        s.execute(&Command::single(rid(1), 9, Op::Put, 1));
         let d = s.digest();
-        s.execute(&Command::single(ClientId(2), 9, Op::Get, 0));
+        s.execute(&Command::single(rid(2), 9, Op::Get, 0));
         assert_eq!(s.digest(), d);
         assert_eq!(s.get(9).unwrap().version, 1);
+    }
+
+    #[test]
+    fn state_machine_trait_matches_execute() {
+        // The trait path and the inherent path are the same computation.
+        let cmd = Command::single(rid(1), 5, Op::Rmw, 10);
+        let mut a = KvStore::new();
+        let mut b = KvStore::new();
+        let ra = a.execute(&cmd);
+        let rb = StateMachine::apply(&mut b, &cmd);
+        assert_eq!(ra, rb);
+        assert_eq!(StateMachine::digest(&a), StateMachine::digest(&b));
     }
 }

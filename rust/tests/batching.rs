@@ -159,6 +159,35 @@ fn tempo_hold_batching_preserves_psmr_and_amortizes() {
 }
 
 #[test]
+fn age_based_flush_bounds_the_delay_of_lone_messages() {
+    // Config::batch_max_delay_us holds sub-threshold queues across ticks
+    // (for bigger batches) but must flush every queued message within one
+    // delay bound: with a huge size threshold and barely any traffic,
+    // every command still completes (liveness through the age flush
+    // alone), PSMR holds, and nothing is left queued after the drain.
+    let config = Config::new(3, 1)
+        .with_batching(10_000) // count threshold never fires
+        .with_batch_max_delay_us(25_000); // 5 tick intervals
+    let mut o = SimOpts::new(Topology::ec2_three());
+    o.clients_per_site = 2; // lone messages, not bursts
+    o.warmup_us = 0;
+    o.duration_us = 4_000_000;
+    o.drain_us = 6_000_000;
+    o.seed = 41;
+    o.record_execution = true;
+    let result = run::<Tempo, _>(config.clone(), o, ConflictWorkload::new(0.1, 100));
+    assert!(result.metrics.ops > 20, "ops={}", result.metrics.ops);
+    assert_psmr(&config, &result, true);
+    for (p, fp) in result.footprints.iter().enumerate() {
+        assert_eq!(fp.queued, 0, "P{p} still holds {} queued messages", fp.queued);
+    }
+    // The delay bound is real: commands take at most the wide-area
+    // round trips plus a handful of 25 ms holds, not seconds.
+    let p99 = result.metrics.latency.quantile(0.99);
+    assert!(p99 < 1_000_000, "age flush too slow: p99={p99}µs");
+}
+
+#[test]
 fn hold_batching_is_safe_for_every_family() {
     // One drained PSMR sweep per protocol family under hold-mode batching.
     fn sweep<P: Protocol>(seed: u64) {

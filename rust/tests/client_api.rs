@@ -1,0 +1,127 @@
+//! Client service API integration tests: sessions and rifl-style request
+//! ids flow through every protocol family, replies come back as
+//! first-class protocol output, and the PSMR checker's response-validity
+//! extension actually bites.
+
+use tempo::check::{assert_psmr, check_psmr, Violation};
+use tempo::client::Session;
+use tempo::core::{ClientId, Config, Response, Rid};
+use tempo::protocol::caesar::Caesar;
+use tempo::protocol::depsmr::{Atlas, EPaxos, Janus};
+use tempo::protocol::fpaxos::FPaxos;
+use tempo::protocol::tempo::Tempo;
+use tempo::protocol::Protocol;
+use tempo::sim::{run, SimOpts, SimResult, Topology};
+use tempo::workload::ConflictWorkload;
+
+fn opts(seed: u64) -> SimOpts {
+    let mut o = SimOpts::new(Topology::ec2_three());
+    o.clients_per_site = 4;
+    o.warmup_us = 0;
+    o.duration_us = 2_000_000;
+    o.drain_us = 5_000_000;
+    o.seed = seed;
+    o.record_execution = true;
+    o
+}
+
+fn run_family<P: Protocol>(seed: u64) -> (Config, SimResult) {
+    let config = Config::new(3, 1);
+    let result = run::<P, _>(config.clone(), opts(seed), ConflictWorkload::new(0.2, 64));
+    assert!(result.metrics.ops > 40, "{}: ops={}", P::name(), result.metrics.ops);
+    (config, result)
+}
+
+/// The acceptance bar: response validity (inside `assert_psmr`) passes
+/// for all five protocol families.
+#[test]
+fn all_five_families_serve_valid_responses() {
+    let (c, r) = run_family::<Tempo>(61);
+    assert_psmr(&c, &r, true);
+    let (c, r) = run_family::<Atlas>(62);
+    assert_psmr(&c, &r, true);
+    let (c, r) = run_family::<EPaxos>(63);
+    assert_psmr(&c, &r, true);
+    let (c, r) = run_family::<Caesar>(64);
+    assert_psmr(&c, &r, true);
+    let (c, r) = run_family::<FPaxos>(65);
+    assert_psmr(&c, &r, true);
+}
+
+#[test]
+fn janus_partial_replication_serves_valid_responses() {
+    let config = Config::new(3, 1).with_shards(2);
+    let result = run::<Janus, _>(
+        config.clone(),
+        opts(66),
+        tempo::workload::YcsbWorkload::new(10_000, 0.5, 0.5),
+    );
+    assert!(result.metrics.ops > 40, "ops={}", result.metrics.ops);
+    assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn completions_carry_session_rids_and_responses() {
+    let (_, result) = run_family::<Tempo>(67);
+    assert!(!result.completions.is_empty());
+    for c in &result.completions {
+        // The rid names the issuing client and the response covers the
+        // command's keys.
+        assert_eq!(c.rid.client(), ClientId(c.client.0));
+        assert!(c.rid.seq() >= 1);
+        assert!(!c.response.versions.is_empty(), "empty response for {:?}", c.rid);
+    }
+    // Per client, observed rids are unique (each request answered once).
+    let mut seen = std::collections::HashSet::new();
+    for c in &result.completions {
+        assert!(seen.insert(c.rid), "request {:?} completed twice", c.rid);
+    }
+}
+
+#[test]
+fn response_validity_catches_a_corrupted_response() {
+    // The semantics-aware half of the checker: take a passing run and
+    // corrupt one client-observed response — the order checks still pass,
+    // ResponseMismatch must fire.
+    let (config, mut result) = run_family::<Tempo>(68);
+    assert!(check_psmr(&config, &result, true).is_empty());
+    let victim = result.completions[0].clone();
+    result.completions[0].response =
+        Response { versions: vec![(u64::MAX, u64::MAX)] };
+    let violations = check_psmr(&config, &result, true);
+    assert!(
+        violations.iter().any(|v| matches!(
+            v,
+            Violation::ResponseMismatch { rid, .. } if *rid == victim.rid
+        )),
+        "corrupted response not caught: {violations:?}"
+    );
+}
+
+#[test]
+fn submit_allocates_dots_internally_and_in_order() {
+    // Drive a protocol directly through the new submit(cmd, time) API: the
+    // caller supplies no dot; Action::Submitted reports sequential dots
+    // minted at the submitting replica.
+    use tempo::core::{Op, ProcessId};
+    use tempo::protocol::Action;
+    let config = Config::new(3, 1);
+    let mut p = Tempo::new(ProcessId(2), config);
+    let mut session = Session::new(ClientId(9));
+    for expect_seq in 1..=3u64 {
+        let cmd = session.single(7, Op::Put, 16);
+        let rid = cmd.rid;
+        let actions = p.submit(cmd, 0);
+        let dots: Vec<_> = actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::Submitted { dot } => Some(*dot),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(dots.len(), 1, "exactly one Submitted per submit");
+        assert_eq!(dots[0].origin, ProcessId(2));
+        assert_eq!(dots[0].seq, expect_seq);
+        assert_eq!(rid, Rid::new(ClientId(9), expect_seq));
+    }
+}

@@ -1,7 +1,7 @@
 //! §D pathological scenarios: the dependency-chain and blocking behaviours
 //! that motivate Tempo, demonstrated on our baseline implementations.
 
-use tempo::core::{ClientId, Command, Config, Op};
+use tempo::core::{ClientId, Command, Config, Op, Rid};
 use tempo::protocol::caesar::Caesar;
 use tempo::protocol::depsmr::Atlas;
 use tempo::protocol::tempo::Tempo;
@@ -92,5 +92,5 @@ fn multi_key_commands_respect_all_partitions() {
     let result = run::<Tempo, _>(config.clone(), opts(74), TwoKey(40));
     assert!(result.metrics.ops > 20);
     tempo::check::assert_psmr(&config, &result, true);
-    let _ = Command::new(ClientId(0), vec![0], Op::Get, 0); // keep import used
+    let _ = Command::new(Rid::new(ClientId(0), 1), vec![0], Op::Get, 0); // keep import used
 }

@@ -1,7 +1,7 @@
 //! Property-based tests over the core invariants (seeded harness in
 //! `tempo::util::prop`; replay failures with `PROP_SEED=<seed>`).
 
-use tempo::core::{ClientId, Command, Config, Dot, Op, ProcessId};
+use tempo::core::{ClientId, Command, Config, Dot, Op, ProcessId, Rid};
 use tempo::executor::DepGraph;
 use tempo::protocol::tempo::clock::Clock;
 use tempo::protocol::tempo::promises::{PromiseSet, PromiseStore, SourceTracker};
@@ -262,7 +262,7 @@ fn prop_wire_codec_roundtrips_random_messages() {
             let keys: Vec<u64> =
                 (0..1 + rng.gen_range(4)).map(|_| rng.gen_range(1 << 30)).collect();
             let cmd = Command::new(
-                ClientId(rng.gen_range(1 << 16)),
+                Rid::new(ClientId(rng.gen_range(1 << 16)), 1 + rng.gen_range(1 << 10)),
                 keys.clone(),
                 if rng.gen_bool(0.5) { Op::Put } else { Op::Get },
                 rng.gen_range(4096) as u32,
@@ -295,6 +295,82 @@ fn prop_wire_codec_roundtrips_random_messages() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_client_frames_roundtrip_and_survive_corruption() {
+    // Tags 17–18 (docs/WIRE.md): random client frames round-trip through
+    // encode_client/decode_client, and truncations/bit-flips return Err
+    // or a different frame — never a panic.
+    use tempo::core::Response;
+    use tempo::net::wire::{decode_client, encode_client, ClientFrame};
+    forall_seeds("client-frame-fuzz", |seed| {
+        let mut rng = Rng::new(seed);
+        let rid = Rid::new(ClientId(rng.gen_range(1 << 16)), 1 + rng.gen_range(1 << 20));
+        let frame = if rng.gen_bool(0.5) {
+            let keys: Vec<u64> =
+                (0..1 + rng.gen_range(4)).map(|_| rng.gen_range(1 << 30)).collect();
+            let op = match rng.gen_range(3) {
+                0 => Op::Get,
+                1 => Op::Put,
+                _ => Op::Rmw,
+            };
+            ClientFrame::Submit {
+                cmd: Command::new(rid, keys, op, rng.gen_range(512) as u32),
+            }
+        } else {
+            let versions: Vec<(u64, u64)> = (0..rng.gen_range(5))
+                .map(|_| (rng.gen_range(1 << 30), rng.gen_range(1 << 20)))
+                .collect();
+            ClientFrame::Reply { rid, response: Response { versions } }
+        };
+        let enc = encode_client(&frame);
+        let back = decode_client(&enc).map_err(|e| e.to_string())?;
+        if back != frame {
+            return Err(format!("round-trip mismatch: {frame:?} vs {back:?}"));
+        }
+        let cut = rng.gen_range(enc.len() as u64) as usize;
+        if decode_client(&enc[..cut]).is_ok() {
+            return Err(format!("truncation at {cut} decoded"));
+        }
+        let mut flipped = enc.clone();
+        let at = rng.gen_range(enc.len() as u64) as usize;
+        flipped[at] ^= 1u8 << (rng.gen_range(8) as u32);
+        let _ = decode_client(&flipped); // Err or a different frame — no panic
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batches_reject_nested_client_frames() {
+    // An MBatch member carrying a client frame (tag 17/18) is malformed
+    // the same way a nested batch is — rejected from the tag peek,
+    // whatever the member contents.
+    use tempo::core::Response;
+    use tempo::net::wire::{decode, encode_client, ClientFrame};
+    forall_seeds("batch-rejects-client-frames", |seed| {
+        let mut rng = Rng::new(seed);
+        let rid = Rid::new(ClientId(rng.gen_range(1 << 10)), 1 + rng.gen_range(1 << 10));
+        let member = if rng.gen_bool(0.5) {
+            encode_client(&ClientFrame::Submit {
+                cmd: Command::single(rid, rng.gen_range(1 << 20), Op::Put, 16),
+            })
+        } else {
+            encode_client(&ClientFrame::Reply {
+                rid,
+                response: Response { versions: vec![(rng.gen_range(1 << 20), 1)] },
+            })
+        };
+        // Hand-build: tag 16, one member, the client frame as its body.
+        let mut frame = vec![16u8];
+        frame.extend_from_slice(&1u16.to_le_bytes());
+        frame.extend_from_slice(&(member.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&member);
+        match decode(&frame) {
+            Err(_) => Ok(()),
+            Ok(m) => Err(format!("client frame inside MBatch decoded as {m:?}")),
+        }
+    });
 }
 
 #[test]
