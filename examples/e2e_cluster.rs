@@ -24,9 +24,12 @@ use tempo::util::{Rng, Zipf};
 
 fn main() -> tempo::util::error::Result<()> {
     let r = 3;
-    let config = Config::new(r, 1).with_tick_interval_us(1_000);
+    // Two worker slots per node: each node runs one protocol thread per
+    // slot, peer frames carry the worker envelope (WIRE.md tag 19), and
+    // clients route by key hash — all exercised under real TCP here.
+    let config = Config::new(r, 1).with_tick_interval_us(1_000).with_workers(2);
     let addrs = local_addrs(r)?;
-    println!("starting {r}-node Tempo cluster on {addrs:?}");
+    println!("starting {r}-node Tempo cluster (2 worker slots each) on {addrs:?}");
 
     // Nodes dial each other inside start_node, so they must boot in
     // parallel (like real processes would).
@@ -126,19 +129,38 @@ fn main() -> tempo::util::error::Result<()> {
     }
     println!("  oracle check: {checked} sequential responses match the KvStore oracle");
 
+    // Pipelining over real TCP: put a window of requests on the wire
+    // without waiting, then collect the replies in completion order —
+    // the rid-keyed reply routing (and the out-of-order completion the
+    // wire protocol always allowed) is what TcpClient now exposes.
+    let mut pc = TcpClient::connect(&addrs[1], ClientId(10_000))?;
+    pc.set_timeout(Some(Duration::from_secs(5)))?;
+    let pipeline_base = 1u64 << 41;
+    let window = 16usize;
+    let mut submitted = std::collections::HashSet::new();
+    for i in 0..window as u64 {
+        submitted.insert(pc.submit_async(vec![pipeline_base + i], Op::Put, 64)?);
+    }
+    assert_eq!(pc.in_flight(), window, "whole window must be in flight at once");
+    let mut completed = std::collections::HashSet::new();
+    for _ in 0..window {
+        let (rid, _) = pc.recv_reply()?;
+        assert!(completed.insert(rid), "duplicate reply for {rid}");
+    }
+    assert_eq!(completed, submitted, "every pipelined rid must complete exactly once");
+    assert_eq!(pc.in_flight(), 0);
+    println!("  pipelining: {window} requests in flight on one session, all completed");
+
     // Let in-flight work drain, then verify convergence.
     std::thread::sleep(Duration::from_millis(800));
-    let digests: Vec<(u64, u64)> = nodes
-        .iter()
-        .map(|n| (*n.executed.lock().unwrap(), *n.store_digest.lock().unwrap()))
-        .collect();
+    let digests: Vec<(u64, u64)> =
+        nodes.iter().map(|n| (n.executed(), n.store_digest())).collect();
     println!("  per-node (executed, digest): {digests:x?}");
-    let counters = nodes[0].counters.lock().unwrap();
+    let counters = nodes[0].counters();
     println!(
         "  node-0 counters: fast={} slow={} executed={}",
         counters.fast_path, counters.slow_path, counters.executed
     );
-    drop(counters);
 
     let max_exec = digests.iter().map(|&(e, _)| e).max().unwrap();
     let min_exec = digests.iter().map(|&(e, _)| e).min().unwrap();

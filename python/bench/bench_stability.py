@@ -96,10 +96,28 @@ def bench_incremental():
     return el / ITERS * 1e9, q.watermark
 
 
+def check_speedup_threshold():
+    """``--check-speedup X``: fail (exit 1) if the freshly measured
+    scan/incremental ratio drops below X — the CI regression gate runs
+    this in smoke mode so the gate reflects *this* machine, not just the
+    recorded baseline (which check_bench.py validates separately)."""
+    args = sys.argv[1:]
+    if "--check-speedup" not in args:
+        return None
+    return float(args[args.index("--check-speedup") + 1])
+
+
 def main():
     scan_ns, scan_wm = bench_scan()
     inc_ns, inc_wm = bench_incremental()
     assert scan_wm == inc_wm, (scan_wm, inc_wm)
+    threshold = check_speedup_threshold()
+    if threshold is not None and scan_ns / inc_ns < threshold:
+        print(
+            f"SPEEDUP GATE FAILED: measured {scan_ns / inc_ns:.2f}x "
+            f"< required {threshold}x"
+        )
+        sys.exit(1)
     result = {
         "bench": "stability_watermark",
         "unit": "ns_per_iter",

@@ -1,0 +1,90 @@
+"""Bench-regression gate for CI (ROADMAP PR 1 item: "wire a CI regression
+gate on the speedup").
+
+Validates the recorded BENCH_*.json baselines at the repo root:
+
+- BENCH_stability.json: the scan-vs-incremental stability watermark
+  speedup must be at least ``--min-stability-speedup`` (default 1.5) —
+  the PR 1 optimization must not regress, whichever harness (Rust or the
+  Python port) recorded the file.
+- BENCH_workers.json: must exist with ops/s and allocations-per-op for
+  workers 1, 2 and 4 under both contention levels.
+- BENCH_batching.json: must exist with both throughput numbers.
+
+Exit code 0 = all gates pass; 1 = a gate failed (CI turns red).
+Run from anywhere: ``python3 python/bench/check_bench.py``.
+"""
+
+import json
+import os
+import sys
+
+
+def root_path(name):
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.normpath(os.path.join(here, "..", "..", name))
+
+
+def load(name):
+    with open(root_path(name)) as f:
+        return json.load(f)
+
+
+def fail(msg):
+    print(f"BENCH GATE FAILED: {msg}")
+    sys.exit(1)
+
+
+def main():
+    min_speedup = 1.5
+    args = sys.argv[1:]
+    if "--min-stability-speedup" in args:
+        min_speedup = float(args[args.index("--min-stability-speedup") + 1])
+
+    stability = load("BENCH_stability.json")
+    speedup = float(stability.get("speedup", 0.0))
+    if speedup < min_speedup:
+        fail(
+            f"BENCH_stability.json speedup {speedup} < {min_speedup} — the "
+            "incremental stability watermark regressed"
+        )
+    print(f"stability: speedup {speedup} >= {min_speedup} ok")
+
+    workers = load("BENCH_workers.json")
+    cells = workers.get("cells", [])
+    seen = {(c.get("workers"), c.get("contention")) for c in cells}
+    for w in (1, 2, 4):
+        for contention in ("low", "high"):
+            if (w, contention) not in seen:
+                fail(f"BENCH_workers.json missing cell workers={w} {contention}")
+    for c in cells:
+        ops_key = next(
+            (k for k in ("ops_per_s_wall", "ops_per_s_single_thread") if k in c),
+            None,
+        )
+        if ops_key is None or float(c[ops_key]) <= 0:
+            fail(f"BENCH_workers.json cell {c} lacks a positive ops/s measurement")
+        if "allocs_per_op" not in c:
+            fail(f"BENCH_workers.json cell {c} lacks allocs_per_op")
+    print(f"workers: {len(cells)} cells with ops/s and allocs/op ok")
+
+    batching = load("BENCH_batching.json")
+    if "unbatched_ops_per_s" in batching:
+        # Rust harness schema (cargo bench --bench microbench).
+        for field in ("unbatched_ops_per_s", "batched_ops_per_s"):
+            if float(batching.get(field, 0.0)) <= 0:
+                fail(f"BENCH_batching.json lacks {field}")
+        ratio = batching["batched_ops_per_s"] / batching["unbatched_ops_per_s"]
+        if ratio < 1.0:
+            fail(f"BENCH_batching.json batched/unbatched throughput {ratio:.2f} < 1")
+    else:
+        # Python-port schema: batching must still reduce frames.
+        reduction = float(batching.get("frame_reduction", 0.0))
+        if reduction < 1.5:
+            fail(f"BENCH_batching.json frame_reduction {reduction} < 1.5")
+    print("batching: ok")
+    print("all bench gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -353,6 +353,8 @@ def _decode_at(r):
                 raise WireError("nested MBatch frame")
             if body[:1] in (b"\x11", b"\x12"):
                 raise WireError(f"client frame tag {body[0]} inside MBatch")
+            if body[:1] == b"\x13":
+                raise WireError("routed envelope inside MBatch")
             sub = Reader(body)
             inner = _decode_at(sub)
             if sub.pos != length:
@@ -363,7 +365,29 @@ def _decode_at(r):
         return {"t": "MBatch", "msgs": msgs}
     if tag in (17, 18):
         raise WireError(f"client frame tag {tag} in protocol stream")
+    if tag == 19:
+        raise WireError("routed envelope where a bare protocol message was expected")
     raise WireError(f"bad message tag {tag}")
+
+
+def encode_routed(worker, msg):
+    """Encode the worker-routed envelope (tag 19, docs/WIRE.md):
+    ``[19][worker u8][inner msg]`` — what peer connections carry under
+    worker sharding."""
+    w = Writer()
+    w.u8(19)
+    w.u8(worker)
+    return w.bytes() + encode(msg)
+
+
+def decode_routed(buf):
+    """Decode a worker-routed envelope into ``(worker, msg)``."""
+    r = Reader(buf)
+    tag = r.u8()
+    if tag != 19:
+        raise WireError(f"expected routed frame tag 19, got {tag}")
+    worker = r.u8()
+    return worker, _decode_at(r)
 
 
 def self_check():
@@ -462,6 +486,38 @@ def self_check():
             raise AssertionError("client frame inside MBatch decoded")
         except WireError:
             pass
+    # Worker-routed envelope (tag 19): round-trip, truncation, and strict
+    # separation from the bare-message and MBatch contexts.
+    inner = {"t": "MStable", "dot": dot}
+    for worker in (0, 1, 255):
+        enc = encode_routed(worker, inner)
+        assert enc[0] == 19
+        assert decode_routed(enc) == (worker, inner)
+        for cut in range(len(enc)):
+            try:
+                decode_routed(enc[:cut])
+                raise AssertionError(f"truncated routed frame decoded at {cut}")
+            except WireError:
+                pass
+    try:
+        decode(encode_routed(0, inner))
+        raise AssertionError("routed envelope decoded as a bare message")
+    except WireError:
+        pass
+    try:
+        decode_routed(encode(inner))
+        raise AssertionError("bare message decoded as a routed envelope")
+    except WireError:
+        pass
+    b = Writer()
+    member = encode_routed(0, inner)
+    b.u8(16), b.u16(1), b.u32(len(member))
+    b.parts.append(member)
+    try:
+        decode(b.bytes())
+        raise AssertionError("routed envelope inside MBatch decoded")
+    except WireError:
+        pass
 
 
 if __name__ == "__main__":

@@ -28,7 +28,7 @@ fn scenario(f: usize, clocks: &[u64]) -> (Vec<u64>, bool) {
             let cmd = Command::single(Rid::new(ClientId(99), 1), KEY, Op::Put, 0);
             let _ = procs[j].handle(
                 ProcessId(j as u32),
-                Msg::MCommitDirect { dot: filler, cmd, quorums: vec![], final_ts: c },
+                Msg::MCommitDirect { dot: filler, cmd, quorums: vec![].into(), final_ts: c },
                 0,
             );
         }

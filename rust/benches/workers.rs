@@ -1,0 +1,131 @@
+//! Worker-scaling bench: protocol throughput and allocation rate vs
+//! `Config::workers`, under low- and high-contention single-key zipf
+//! workloads. Writes `BENCH_workers.json` at the repo root.
+//!
+//! Two measurements per (workers, θ) cell, both over the same saturating
+//! deterministic simulation:
+//!
+//! - **ops/s (wall)**: simulated commands completed per second of *host*
+//!   wall time. The simulator is single-threaded, so this isolates the
+//!   per-op CPU cost of the sharded protocol state (smaller per-slot maps,
+//!   cheaper lookups) — it deliberately does *not* include the parallel
+//!   speedup real worker threads add on top (`net::start_node` runs one
+//!   thread per slot; the deterministic sim cannot, by design).
+//! - **allocs/op**: heap allocations per completed command, measured by a
+//!   counting global allocator — the zero-clone fan-out claim in numbers.
+//!
+//! Run with: `cargo bench --bench workers`
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+use tempo::core::Config;
+use tempo::protocol::common::Sharded;
+use tempo::protocol::tempo::Tempo;
+use tempo::sim::{run, SimOpts, Topology};
+use tempo::workload::ZipfWorkload;
+
+/// Counts every heap allocation the process makes.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+struct Cell {
+    workers: usize,
+    theta: f64,
+    ops: u64,
+    ops_per_s_wall: f64,
+    allocs_per_op: f64,
+}
+
+fn one(workers: usize, theta: f64) -> Cell {
+    let config = Config::new(5, 1).with_workers(workers);
+    let mut o = SimOpts::new(Topology::ec2());
+    o.clients_per_site = 64;
+    o.warmup_us = 500_000;
+    o.duration_us = 4_000_000;
+    o.seed = 7;
+    let workload = ZipfWorkload::new(100_000, theta, 100);
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    let result = run::<Sharded<Tempo>, _>(config, o, workload);
+    let wall = t0.elapsed().as_secs_f64();
+    let allocs = ALLOCS.load(Ordering::Relaxed) - a0;
+    let ops = result.metrics.ops;
+    Cell {
+        workers,
+        theta,
+        ops,
+        ops_per_s_wall: ops as f64 / wall,
+        allocs_per_op: allocs as f64 / ops.max(1) as f64,
+    }
+}
+
+fn main() {
+    println!("--- worker-scaling bench (tempo r=5 f=1, single-key zipf) ---");
+    let mut cells = Vec::new();
+    for &theta in &[0.5f64, 0.99] {
+        for &workers in &[1usize, 2, 4] {
+            let c = one(workers, theta);
+            println!(
+                "theta={:<4} workers={} : {:>8} ops, {:>12.0} ops/s-wall, {:>8.1} allocs/op",
+                c.theta, c.workers, c.ops, c.ops_per_s_wall, c.allocs_per_op
+            );
+            cells.push(c);
+        }
+    }
+
+    let mut rows = String::new();
+    for (i, c) in cells.iter().enumerate() {
+        let contention = if c.theta < 0.9 { "low" } else { "high" };
+        rows.push_str(&format!(
+            "    {{\"workers\": {}, \"zipf_theta\": {}, \"contention\": \"{}\", \
+             \"ops\": {}, \"ops_per_s_wall\": {:.0}, \"allocs_per_op\": {:.1}}}{}\n",
+            c.workers,
+            c.theta,
+            contention,
+            c.ops,
+            c.ops_per_s_wall,
+            c.allocs_per_op,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"worker_sharding\",\n  \
+         \"workload\": \"tempo r=5 f=1 behind Sharded router, 320 closed-loop \
+         clients, single-key zipf over 100k keys, 100B payloads, 4s window\",\n  \
+         \"note\": \"deterministic sim is single-threaded: ops_per_s_wall \
+         isolates per-op protocol CPU cost, not thread parallelism; \
+         allocs_per_op is the zero-clone fan-out measurement\",\n  \
+         \"harness\": \"rust (cargo bench --bench workers)\",\n  \
+         \"cells\": [\n{rows}  ],\n  \
+         \"regenerate\": \"cargo bench --bench workers\"\n}}\n"
+    );
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(d) => format!("{d}/../BENCH_workers.json"),
+        Err(_) => "BENCH_workers.json".to_string(),
+    };
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("worker-scaling baseline written to {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -106,7 +106,7 @@ pub fn check_psmr(
             let mut local: HashMap<Key, Vec<Dot>> = HashMap::new();
             for dot in order {
                 if let Some(cmd) = submitted.get(dot) {
-                    for &k in &cmd.keys {
+                    for &k in cmd.keys.iter() {
                         // Only this process's own partitions: a key's order
                         // is agreed among the replicas of its shard group.
                         if key_to_shard(k, cfg.shards).0 == my_shard {
@@ -187,7 +187,7 @@ pub fn check_psmr(
                 if ca.op == crate::core::Op::Get && da.op == crate::core::Op::Get {
                     continue;
                 }
-                for &k in &ca.keys {
+                for &k in ca.keys.iter() {
                     if da.keys.contains(&k) {
                         if let Some(pos) = positions.get(&k) {
                             if let (Some(&pc), Some(&pd)) = (pos.get(&c.dot), pos.get(&d.dot)) {

@@ -12,9 +12,31 @@
 //! reply carries the `Rid` back to the client.
 
 use super::id::{ClientId, Dot, Rid, ShardId};
+use std::sync::Arc;
 
 /// A state-machine key (paper: 8-byte keys).
 pub type Key = u64;
+
+/// Instrumentation for the zero-clone broadcast invariant: every fresh
+/// key-buffer allocation (the only heap storage a [`Command`] owns) bumps
+/// a process-wide counter, while `Command::clone` — an `Arc` increment —
+/// never does. Tests assert that fanning a command out to `r - 1` peers
+/// allocates O(commands), not O(commands × peers).
+pub mod clone_stats {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static KEY_BUFFER_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    pub(super) fn record_alloc() {
+        KEY_BUFFER_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total key buffers allocated by `Command` constructors so far
+    /// (process-wide, monotone; diff two readings around a workload).
+    pub fn key_buffer_allocs() -> u64 {
+        KEY_BUFFER_ALLOCS.load(Ordering::Relaxed)
+    }
+}
 
 /// Operation applied to the in-memory KV store at execution time.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -28,13 +50,22 @@ pub enum Op {
 }
 
 /// An application command submitted by a client.
+///
+/// `Command` is deliberately *cheap to clone*: the key set (its only heap
+/// storage) is `Arc`-backed, and the payload travels as a length (the wire
+/// codec materializes the bytes). Protocol broadcast fans a command out to
+/// every fast-quorum/group peer by cloning the message that carries it, so
+/// a deep copy per peer would put O(peers × keys + peers × payload)
+/// allocation on the hot path — with the `Arc` it is a reference-count
+/// bump ([`clone_stats`] instruments the invariant).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Command {
     /// Request id allocated by the issuing client's session; routes the
     /// response back to the client (and identifies retries).
     pub rid: Rid,
-    /// Keys accessed — one per partition touched. Sorted, deduplicated.
-    pub keys: Vec<Key>,
+    /// Keys accessed — one per partition touched. Sorted, deduplicated,
+    /// shared: cloning the command shares this buffer.
+    pub keys: Arc<[Key]>,
     /// Operation kind (uniform across keys; enough for YCSB+T).
     pub op: Op,
     /// Size of the payload carried by the command, in bytes. Payload
@@ -51,12 +82,14 @@ impl Command {
     pub fn new(rid: Rid, mut keys: Vec<Key>, op: Op, payload_len: u32) -> Self {
         keys.sort_unstable();
         keys.dedup();
-        Self { rid, keys, op, payload_len, batched: 1 }
+        clone_stats::record_alloc();
+        Self { rid, keys: keys.into(), op, payload_len, batched: 1 }
     }
 
     /// Single-key shorthand.
     pub fn single(rid: Rid, key: Key, op: Op, payload_len: u32) -> Self {
-        Self { rid, keys: vec![key], op, payload_len, batched: 1 }
+        clone_stats::record_alloc();
+        Self { rid, keys: vec![key].into(), op, payload_len, batched: 1 }
     }
 
     /// The issuing client (from the request id).
@@ -164,7 +197,20 @@ mod tests {
     #[test]
     fn keys_sorted_and_deduped() {
         let a = Command::new(rid(1), vec![9, 5, 9, 5], Op::Get, 0);
-        assert_eq!(a.keys, vec![5, 9]);
+        assert_eq!(&a.keys[..], &[5, 9]);
+    }
+
+    #[test]
+    fn clone_shares_the_key_buffer() {
+        let a = Command::new(rid(1), vec![5, 9], Op::Put, 100);
+        let before = clone_stats::key_buffer_allocs();
+        let clones: Vec<Command> = (0..64).map(|_| a.clone()).collect();
+        assert_eq!(
+            clone_stats::key_buffer_allocs(),
+            before,
+            "Command::clone must not allocate a key buffer"
+        );
+        assert!(clones.iter().all(|c| Arc::ptr_eq(&c.keys, &a.keys)));
     }
 
     #[test]

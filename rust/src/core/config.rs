@@ -46,6 +46,17 @@ pub struct Config {
     /// one step emits to the same destination and never delays anything
     /// (behaviour- and timing-transparent; see `rust/tests/batching.rs`).
     pub batch_hold: bool,
+    /// Number of shared-nothing protocol worker partitions per replica
+    /// (`protocol::common::shard::Sharded`): protocol state is
+    /// hash-partitioned by key across `workers` inner instances, and
+    /// worker `w` of every replica forms one complete protocol instance
+    /// over its key subset. 1 (the default) is the monolithic replica.
+    pub workers: usize,
+    /// Worker slot of *this* protocol instance within a sharded replica,
+    /// in `0..workers`. Set by the `Sharded` router when it constructs its
+    /// inner instances; leave 0 everywhere else. Drives the instance's
+    /// strided dot allocation and stride-aware GC frontiers.
+    pub worker: usize,
     /// Age bound for held batch queues, in microseconds. Under
     /// `batch_hold`, a periodic tick flushes only the queues whose oldest
     /// entry has waited at least this long — younger queues keep
@@ -69,10 +80,27 @@ impl Config {
             bump_enabled: true,
             recovery_timeout_us: u64::MAX,
             gc_interval_ticks: 16,
+            workers: 1,
+            worker: 0,
             batch_max_msgs: 0,
             batch_hold: true,
             batch_max_delay_us: 0,
         }
+    }
+
+    /// Shard protocol state across `workers` shared-nothing worker
+    /// partitions per replica (run the protocol as
+    /// `protocol::common::shard::Sharded<P>`; 1 = monolithic). At most
+    /// 256: the wire envelope names the worker slot in one byte
+    /// (docs/WIRE.md tag 19), and silently truncating would misroute
+    /// protocol traffic.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        assert!(
+            (1..=256).contains(&workers),
+            "workers must be in 1..=256 (the Routed envelope carries a u8 slot)"
+        );
+        self.workers = workers;
+        self
     }
 
     pub fn with_shards(mut self, shards: u32) -> Self {

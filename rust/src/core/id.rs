@@ -101,21 +101,97 @@ impl fmt::Display for Dot {
     }
 }
 
+/// Interleaved ownership of a 1-based sequence space, shared by every
+/// stride-aware structure (dot generation, executed-frontier GC, the
+/// worker router): worker slot `w` of `N` owns the sequences
+/// `w+1, w+1+N, w+1+2N, …`, i.e. those with `(seq - 1) % N == w`, and
+/// folds them into a dense 1-based *index* space so frontiers stay
+/// contiguous per slot. The monolithic case is the identity stride
+/// (`w = 0, N = 1`), where index space equals sequence space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Stride {
+    worker: u64,
+    workers: u64,
+}
+
+impl Stride {
+    /// Stride of worker slot `worker` among `workers` slots (clamped to
+    /// a valid slot; `workers = 0` means the identity stride).
+    pub fn new(worker: usize, workers: usize) -> Self {
+        let workers = workers.max(1) as u64;
+        Stride { worker: (worker as u64).min(workers - 1), workers }
+    }
+
+    /// The monolithic stride: every sequence, index == sequence.
+    pub fn identity() -> Self {
+        Stride::new(0, 1)
+    }
+
+    /// Is this the identity stride?
+    pub fn is_identity(&self) -> bool {
+        self.workers == 1
+    }
+
+    /// Number of slots the sequence space is interleaved across.
+    pub fn workers(&self) -> u64 {
+        self.workers
+    }
+
+    /// Dense 1-based index of `seq` within this slot's stride, or `None`
+    /// if the sequence belongs to another slot (or is 0).
+    pub fn index_of(&self, seq: u64) -> Option<u64> {
+        if seq == 0 {
+            return None;
+        }
+        let z = seq - 1;
+        (z % self.workers == self.worker).then(|| z / self.workers + 1)
+    }
+
+    /// The sequence at dense 1-based `index` of this slot — the inverse
+    /// of [`Stride::index_of`].
+    pub fn seq_at(&self, index: u64) -> u64 {
+        debug_assert!(index >= 1);
+        (index - 1) * self.workers + self.worker + 1
+    }
+
+    /// Which of `workers` slots owns `seq` (1-based).
+    pub fn owner_of(seq: u64, workers: usize) -> usize {
+        if workers <= 1 {
+            return 0;
+        }
+        debug_assert!(seq >= 1);
+        ((seq - 1) % workers as u64) as usize
+    }
+}
+
 /// Per-process dot generator (`next_id()` in the paper).
+///
+/// Under worker sharding ([`crate::protocol::common::shard`]) each worker
+/// slot of a replica mints its own [`Stride`] of the origin's sequence
+/// space, so a dot's owning worker is recoverable from the dot itself
+/// ([`Stride::owner_of`]) — acks, commits and recovery messages route
+/// back to the right worker without rehashing the command's keys.
 #[derive(Debug, Clone)]
 pub struct DotGen {
     origin: ProcessId,
     next: u64,
+    step: u64,
 }
 
 impl DotGen {
     pub fn new(origin: ProcessId) -> Self {
-        Self { origin, next: 1 }
+        Self::strided(origin, 0, 1)
+    }
+
+    /// Generator for worker slot `worker` of `workers` at `origin`.
+    pub fn strided(origin: ProcessId, worker: usize, workers: usize) -> Self {
+        let stride = Stride::new(worker, workers);
+        Self { origin, next: stride.seq_at(1), step: stride.workers() }
     }
 
     pub fn next(&mut self) -> Dot {
         let dot = Dot::new(self.origin, self.next);
-        self.next += 1;
+        self.next += self.step;
         dot
     }
 }
@@ -150,6 +226,52 @@ mod tests {
     fn display_formats() {
         assert_eq!(format!("{}", Dot::new(ProcessId(7), 42)), "P7.42");
         assert_eq!(format!("{}", Rid::new(ClientId(3), 9)), "C3.9");
+    }
+
+    #[test]
+    fn stride_index_and_seq_are_inverse() {
+        for workers in 1..=6usize {
+            for worker in 0..workers {
+                let s = Stride::new(worker, workers);
+                for index in 1..=64u64 {
+                    let seq = s.seq_at(index);
+                    assert_eq!(s.index_of(seq), Some(index));
+                    assert_eq!(Stride::owner_of(seq, workers), worker);
+                }
+                // Sequences of other slots are not ours; 0 is never valid.
+                assert_eq!(s.index_of(0), None);
+                if workers > 1 {
+                    let other = Stride::new((worker + 1) % workers, workers);
+                    assert_eq!(s.index_of(other.seq_at(1)), None);
+                }
+            }
+        }
+        assert!(Stride::identity().is_identity());
+        assert_eq!(Stride::identity().index_of(7), Some(7));
+        assert_eq!(Stride::identity().seq_at(7), 7);
+    }
+
+    #[test]
+    fn strided_dot_gens_partition_the_sequence_space() {
+        let origin = ProcessId(2);
+        let workers = 4;
+        let mut gens: Vec<DotGen> =
+            (0..workers).map(|w| DotGen::strided(origin, w, workers)).collect();
+        let mut seen = std::collections::HashSet::new();
+        for (w, g) in gens.iter_mut().enumerate() {
+            for _ in 0..16 {
+                let d = g.next();
+                // The owning worker is recoverable from the dot itself.
+                assert_eq!(((d.seq - 1) % workers as u64) as usize, w);
+                assert!(seen.insert(d.seq), "seq {} minted twice", d.seq);
+            }
+        }
+        // workers=1 stride is the plain generator.
+        let mut a = DotGen::new(origin);
+        let mut b = DotGen::strided(origin, 0, 1);
+        for _ in 0..8 {
+            assert_eq!(a.next(), b.next());
+        }
     }
 
     #[test]

@@ -4,6 +4,6 @@ pub mod command;
 pub mod config;
 pub mod id;
 
-pub use command::{key_to_shard, Command, Completion, Key, Op, Response};
+pub use command::{clone_stats, key_to_shard, Command, Completion, Key, Op, Response};
 pub use config::Config;
-pub use id::{ClientId, Dot, DotGen, ProcessId, Rid, ShardId};
+pub use id::{ClientId, Dot, DotGen, ProcessId, Rid, ShardId, Stride};

@@ -30,6 +30,14 @@ pub struct DepGraph {
 }
 
 impl DepGraph {
+    /// Graph for worker slot `worker` of `workers`: the executed-set
+    /// frontier folds the slot's interleaved dot stride into a dense index
+    /// space, so it stays contiguous (and bounded) under worker sharding.
+    /// `DepGraph::default()` is the identity stride.
+    pub fn strided(worker: usize, workers: usize) -> Self {
+        DepGraph { nodes: HashMap::new(), executed: ExecutedSet::strided(worker, workers) }
+    }
+
     /// Record a committed command with its final dependencies.
     pub fn commit(&mut self, dot: Dot, deps: Vec<Dot>) {
         if self.executed.contains(dot) {

@@ -15,6 +15,7 @@ use std::collections::HashMap;
 use tempo::bench_util::{latency_opts, throughput_opts};
 use tempo::core::{Config, ProcessId};
 use tempo::protocol::caesar::Caesar;
+use tempo::protocol::common::Sharded;
 use tempo::protocol::depsmr::{Atlas, EPaxos, Janus};
 use tempo::protocol::fpaxos::FPaxos;
 use tempo::protocol::tempo::Tempo;
@@ -69,12 +70,13 @@ fn sim_command(args: &[String]) {
     let r: usize = flag(&flags, "r", 5);
     let f: usize = flag(&flags, "f", 1);
     let shards: u32 = flag(&flags, "shards", 1);
+    let workers: usize = flag(&flags, "workers", 1);
     let clients: usize = flag(&flags, "clients", 64);
     let duration_s: u64 = flag(&flags, "duration", 10);
     let seed: u64 = flag(&flags, "seed", 1);
     let cluster_mode = flags.contains_key("cluster-mode");
 
-    let config = Config::new(r, f).with_shards(shards);
+    let config = Config::new(r, f).with_shards(shards).with_workers(workers);
     let topology = match r {
         3 => Topology::ec2_three(),
         5 => Topology::ec2(),
@@ -103,11 +105,22 @@ fn sim_command(args: &[String]) {
         W::Conflict(ConflictWorkload::new(conflicts, payload))
     };
 
+    // --workers > 1 runs the protocol behind the per-key worker router
+    // (protocol::common::shard). Commands must then live inside one worker
+    // slot — single-key workloads always do; a spanning YCSB transaction
+    // fails loudly at submit.
     macro_rules! dispatch {
         ($p:ty) => {
-            match workload {
-                W::Conflict(w) => run_sim::<$p, _>(config, opts, w),
-                W::Ycsb(w) => run_sim::<$p, _>(config, opts, w),
+            if workers > 1 {
+                match workload {
+                    W::Conflict(w) => run_sim::<Sharded<$p>, _>(config, opts, w),
+                    W::Ycsb(w) => run_sim::<Sharded<$p>, _>(config, opts, w),
+                }
+            } else {
+                match workload {
+                    W::Conflict(w) => run_sim::<$p, _>(config, opts, w),
+                    W::Ycsb(w) => run_sim::<$p, _>(config, opts, w),
+                }
             }
         };
     }
@@ -136,8 +149,14 @@ fn cluster_command(args: &[String]) {
         eprintln!("--addrs must list exactly r={r} host:port entries");
         std::process::exit(2);
     }
-    let config = Config::new(r, f).with_tick_interval_us(flag(&flags, "tick-us", 1_000));
-    println!("tempo node {id}: r={r} f={f} listening on {}", addrs[id as usize]);
+    let workers: usize = flag(&flags, "workers", 1);
+    let config = Config::new(r, f)
+        .with_tick_interval_us(flag(&flags, "tick-us", 1_000))
+        .with_workers(workers);
+    println!(
+        "tempo node {id}: r={r} f={f} workers={workers} listening on {}",
+        addrs[id as usize]
+    );
     match tempo::net::start_node(ProcessId(id), config, addrs) {
         Ok(_node) => {
             println!("node up; serving until killed (Ctrl-C)");

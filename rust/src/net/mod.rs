@@ -8,13 +8,18 @@
 //! `ClientReply` frames (tag 18) — request/response over the same
 //! listener, distinguished by the frame header's sender field
 //! ([`CLIENT_FROM`]). Each node runs (a) an acceptor thread per inbound
-//! connection that decodes frames into an event channel, (b) the protocol
-//! thread owning the Tempo state machine and an [`Executor`] over the KV
-//! store (replies are `Action::Reply`, routed back by request id), and
-//! (c) a tick timer.
+//! connection that decodes frames into per-worker event channels, (b)
+//! **one protocol thread per worker slot** (`Config::workers`,
+//! `protocol::common::shard`): each owns its own Tempo instance over the
+//! keys that hash to it, its own [`Executor`]/KV partition and its own
+//! rid→reply routing table, and (c) a tick timer fanning ticks to every
+//! worker. Peer frames travel inside the worker-routed envelope
+//! (docs/WIRE.md tag 19), so the acceptor routes by the envelope tag and
+//! client submits route by key hash — the monolithic deployment is simply
+//! `workers == 1`.
 //!
-//! With `Config::batch_max_msgs > 0` the protocol layer coalesces the
-//! messages bound for one peer into single `MBatch` frames
+//! With `Config::batch_max_msgs > 0` each worker's protocol layer
+//! coalesces the messages bound for one peer into single `MBatch` frames
 //! (`protocol::common::batch`), so this send path makes one `write_all`
 //! (one syscall, one frame header) per batch instead of one per message —
 //! the TCP layer needs no batching logic of its own beyond the codec.
@@ -26,12 +31,13 @@ use crate::client::Session;
 use crate::core::{ClientId, Command, Config, Key, Op, ProcessId, Response, Rid};
 use crate::executor::Executor;
 use crate::metrics::Counters;
+use crate::protocol::common::shard::{worker_of_cmd, Routed};
 use crate::protocol::tempo::msg::Msg;
 use crate::protocol::tempo::Tempo;
 use crate::protocol::{Action, Protocol};
 use crate::store::KvStore;
 use crate::util::error::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -44,7 +50,7 @@ use std::time::{Duration, Instant};
 /// `ProcessId` can collide — process ids are dense and small).
 pub const CLIENT_FROM: u32 = u32::MAX;
 
-/// Events fed to the protocol thread.
+/// Events fed to one worker's protocol thread.
 enum Event {
     Message { from: ProcessId, msg: Msg },
     Submit { cmd: Command, done: Sender<(Rid, Response)> },
@@ -55,30 +61,66 @@ enum Event {
 /// A completion listener registered per in-flight request id.
 type DoneMap = HashMap<Rid, Sender<(Rid, Response)>>;
 
+/// Per-worker observability shared with the [`NodeHandle`].
+#[derive(Default)]
+struct WorkerStats {
+    counters: Counters,
+    executed: u64,
+    digest: u64,
+}
+
 /// Handle to a running node.
 pub struct NodeHandle {
     pub id: ProcessId,
-    events: Sender<Event>,
+    /// One event channel per worker slot.
+    events: Vec<Sender<Event>>,
+    workers: usize,
     threads: Vec<JoinHandle<()>>,
-    pub counters: Arc<Mutex<Counters>>,
-    pub store_digest: Arc<Mutex<u64>>,
-    pub executed: Arc<Mutex<u64>>,
+    /// One independently-locked stats slot per worker: each protocol
+    /// thread writes only its own slot, so the shared-nothing workers
+    /// never contend on observability.
+    stats: Vec<Arc<Mutex<WorkerStats>>>,
 }
 
 impl NodeHandle {
     /// Submit a command from an in-process client session; the response
     /// arrives on the returned receiver once the command executes at this
-    /// node (the coordinator's executor emits `Action::Reply`).
+    /// node (the owning worker's executor emits `Action::Reply`).
     pub fn submit(&self, cmd: Command) -> Receiver<(Rid, Response)> {
         let (tx, rx) = channel();
-        let _ = self.events.send(Event::Submit { cmd, done: tx });
+        let w = worker_of_cmd(&cmd, self.workers)
+            .unwrap_or_else(|(a, b)| panic!("command spans worker slots {a} and {b}"));
+        let _ = self.events[w].send(Event::Submit { cmd, done: tx });
         rx
     }
 
-    /// Stop the protocol thread. Acceptor/tick threads are detached (they
+    /// Merged protocol counters across the node's worker slots.
+    pub fn counters(&self) -> Counters {
+        let mut c = Counters::default();
+        for slot in &self.stats {
+            c.merge(&slot.lock().unwrap().counters);
+        }
+        c
+    }
+
+    /// Commands executed across all worker slots.
+    pub fn executed(&self) -> u64 {
+        self.stats.iter().map(|s| s.lock().unwrap().executed).sum()
+    }
+
+    /// Combined store digest: XOR of the per-worker KV partition digests.
+    /// Workers partition the key space, so two replicas that executed the
+    /// same commands agree slot-wise — and therefore on the XOR.
+    pub fn store_digest(&self) -> u64 {
+        self.stats.iter().fold(0, |acc, s| acc ^ s.lock().unwrap().digest)
+    }
+
+    /// Stop the protocol threads. Acceptor/tick threads are detached (they
     /// block on the listener/timer and exit with the process).
     pub fn shutdown(self) {
-        let _ = self.events.send(Event::Shutdown);
+        for tx in &self.events {
+            let _ = tx.send(Event::Shutdown);
+        }
         drop(self.threads);
     }
 }
@@ -92,8 +134,12 @@ fn write_frame(stream: &mut TcpStream, from: u32, body: &[u8]) -> Result<()> {
     Ok(())
 }
 
-fn write_msg(stream: &mut TcpStream, from: ProcessId, msg: &Msg) -> Result<()> {
-    write_frame(stream, from.0, &wire::encode(msg))
+/// Write one routed protocol frame to a peer stream shared between the
+/// node's worker threads (the mutex keeps frames atomic on the wire).
+fn write_routed(stream: &Mutex<TcpStream>, from: ProcessId, routed: &Routed<Msg>) -> Result<()> {
+    let body = wire::encode_routed(routed);
+    let mut stream = stream.lock().unwrap();
+    write_frame(&mut stream, from.0, &body)
 }
 
 /// Upper bound on one frame body (`docs/WIRE.md`): a corrupt or hostile
@@ -105,8 +151,8 @@ fn write_msg(stream: &mut TcpStream, from: ProcessId, msg: &Msg) -> Result<()> {
 pub const MAX_FRAME_BYTES: usize = 16 << 20;
 
 /// Read one raw frame: the sender field and the undecoded body. The
-/// caller decodes as a protocol message or a client frame depending on
-/// the sender ([`CLIENT_FROM`] marks the client plane).
+/// caller decodes as a routed protocol message or a client frame
+/// depending on the sender ([`CLIENT_FROM`] marks the client plane).
 fn read_frame(stream: &mut TcpStream) -> Result<(u32, Vec<u8>)> {
     let mut hdr = [0u8; 8];
     stream.read_exact(&mut hdr)?;
@@ -120,10 +166,12 @@ fn read_frame(stream: &mut TcpStream) -> Result<(u32, Vec<u8>)> {
     Ok((from, body))
 }
 
-/// Serve one inbound connection: protocol frames go straight to the event
-/// channel; client submits lazily start a reply-writer thread for the
-/// connection and register its sender as the request's completion route.
-fn serve_connection(mut stream: TcpStream, node: ProcessId, tx: Sender<Event>) {
+/// Serve one inbound connection: routed protocol frames go to the worker
+/// slot named by their envelope; client submits route by key hash and
+/// lazily start a reply-writer thread for the connection, registering its
+/// sender as the request's completion route.
+fn serve_connection(mut stream: TcpStream, node: ProcessId, txs: Vec<Sender<Event>>) {
+    let workers = txs.len();
     let mut reply_tx: Option<Sender<(Rid, Response)>> = None;
     loop {
         let (from, body) = match read_frame(&mut stream) {
@@ -136,6 +184,13 @@ fn serve_connection(mut stream: TcpStream, node: ProcessId, tx: Sender<Event>) {
                 // A node never receives replies; malformed input drops
                 // the connection (the codec promises Err, not panic).
                 Ok(wire::ClientFrame::Reply { .. }) | Err(_) => return,
+            };
+            // A command must live inside one worker slot (see
+            // protocol::common::shard); a spanning key set is malformed
+            // for this deployment and drops the connection.
+            let w = match worker_of_cmd(&cmd, workers) {
+                Ok(w) => w,
+                Err(_) => return,
             };
             if reply_tx.is_none() {
                 let mut wstream = match stream.try_clone() {
@@ -155,15 +210,19 @@ fn serve_connection(mut stream: TcpStream, node: ProcessId, tx: Sender<Event>) {
                 reply_tx = Some(txr);
             }
             let done = reply_tx.as_ref().expect("reply writer started").clone();
-            if tx.send(Event::Submit { cmd, done }).is_err() {
+            if txs[w].send(Event::Submit { cmd, done }).is_err() {
                 return;
             }
         } else {
-            let msg = match wire::decode(&body) {
-                Ok(m) => m,
+            let routed = match wire::decode_routed(&body) {
+                Ok(r) => r,
                 Err(_) => return,
             };
-            if tx.send(Event::Message { from: ProcessId(from), msg }).is_err() {
+            let w = routed.worker as usize;
+            if w >= workers {
+                return; // hostile/mismatched deployment
+            }
+            if txs[w].send(Event::Message { from: ProcessId(from), msg: routed.msg }).is_err() {
                 return;
             }
         }
@@ -171,32 +230,45 @@ fn serve_connection(mut stream: TcpStream, node: ProcessId, tx: Sender<Event>) {
 }
 
 /// Start a Tempo node listening on `addrs[id]`, connecting to all peers.
-/// `addrs` must be identical across the cluster. The same listener serves
-/// protocol peers and [`TcpClient`]s.
+/// `addrs` must be identical across the cluster, and so must
+/// `config.workers` — worker slot `w` of this node talks only to slot `w`
+/// of its peers. The same listener serves protocol peers and
+/// [`TcpClient`]s.
 pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<NodeHandle> {
     let me = id.0 as usize;
+    let workers = config.workers.max(1);
+    // The peer-frame envelope names the worker slot in one byte; refuse a
+    // config that could not be represented instead of truncating.
+    assert!(workers <= 256, "workers must be <= 256 (u8 slot on the wire)");
     let listener =
         TcpListener::bind(&addrs[me]).with_context(|| format!("bind {}", addrs[me]))?;
-    let (events_tx, events_rx) = channel::<Event>();
+    let mut event_txs: Vec<Sender<Event>> = Vec::with_capacity(workers);
+    let mut event_rxs: Vec<Receiver<Event>> = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (tx, rx) = channel::<Event>();
+        event_txs.push(tx);
+        event_rxs.push(rx);
+    }
     let mut threads = Vec::new();
 
     // Acceptor: protocol peers and clients dial us.
     {
-        let tx = events_tx.clone();
+        let txs = event_txs.clone();
         threads.push(std::thread::spawn(move || {
             for stream in listener.incoming() {
                 let stream = match stream {
                     Ok(s) => s,
                     Err(_) => break,
                 };
-                let tx = tx.clone();
-                std::thread::spawn(move || serve_connection(stream, id, tx));
+                let txs = txs.clone();
+                std::thread::spawn(move || serve_connection(stream, id, txs));
             }
         }));
     }
 
-    // Dial every peer (retry until the whole cluster is up).
-    let mut peers: HashMap<ProcessId, TcpStream> = HashMap::new();
+    // Dial every peer (retry until the whole cluster is up). Streams are
+    // shared between the worker threads, mutex-guarded per peer.
+    let mut peers: HashMap<ProcessId, Arc<Mutex<TcpStream>>> = HashMap::new();
     for (j, addr) in addrs.iter().enumerate() {
         if j == me {
             continue;
@@ -213,36 +285,38 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
             }
         };
         stream.set_nodelay(true)?;
-        peers.insert(ProcessId(j as u32), stream);
+        peers.insert(ProcessId(j as u32), Arc::new(Mutex::new(stream)));
     }
 
-    // Tick timer.
+    // Tick timer: fan one tick to every worker slot.
     {
-        let tx = events_tx.clone();
+        let txs = event_txs.clone();
         let interval = Duration::from_micros(config.tick_interval_us.max(500));
         threads.push(std::thread::spawn(move || loop {
             std::thread::sleep(interval);
-            if tx.send(Event::Tick).is_err() {
-                break;
+            for tx in &txs {
+                if tx.send(Event::Tick).is_err() {
+                    return;
+                }
             }
         }));
     }
 
-    let counters = Arc::new(Mutex::new(Counters::default()));
-    let store_digest = Arc::new(Mutex::new(0u64));
-    let executed = Arc::new(Mutex::new(0u64));
+    let stats: Vec<Arc<Mutex<WorkerStats>>> =
+        (0..workers).map(|_| Arc::new(Mutex::new(WorkerStats::default()))).collect();
 
-    // Protocol thread: the state machine, the executor over the KV store,
-    // and the rid → reply-channel routing table.
-    {
-        let counters = counters.clone();
-        let store_digest = store_digest.clone();
-        let executed = executed.clone();
+    // One protocol thread per worker slot: the slot's state machine, its
+    // executor over its KV partition, and its rid → reply routing table.
+    for (w, events_rx) in event_rxs.into_iter().enumerate() {
+        let stats = stats[w].clone();
+        let peers = peers.clone();
+        let mut cfg = config.clone();
+        cfg.workers = workers;
+        cfg.worker = w;
         threads.push(std::thread::spawn(move || {
-            let mut proto = Tempo::new(id, config);
+            let mut proto = Tempo::new(id, cfg);
             let mut exec = Executor::new(id, KvStore::new());
             let mut done: DoneMap = HashMap::new();
-            let mut last_executed = 0u64;
             let start = Instant::now();
             let now_us = |s: Instant| s.elapsed().as_micros() as u64;
             for event in events_rx {
@@ -259,9 +333,10 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
                 for action in actions {
                     match action {
                         Action::Send { to, msg } => {
-                            if let Some(stream) = peers.get_mut(&to) {
+                            if let Some(stream) = peers.get(&to) {
                                 // A dead peer just drops its traffic.
-                                let _ = write_msg(stream, id, &msg);
+                                let routed = Routed { worker: w as u32, msg };
+                                let _ = write_routed(stream, id, &routed);
                             }
                         }
                         Action::Reply { rid, response } => {
@@ -272,24 +347,36 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
                         _ => {}
                     }
                 }
-                if exec.executed() != last_executed {
-                    last_executed = exec.executed();
-                    *executed.lock().unwrap() = last_executed;
-                    *store_digest.lock().unwrap() = exec.state().digest();
+                let mut slot = stats.lock().unwrap();
+                if exec.executed() != slot.executed {
+                    slot.executed = exec.executed();
+                    slot.digest = exec.state().digest();
                 }
-                *counters.lock().unwrap() = proto.counters();
+                slot.counters = proto.counters();
             }
         }));
     }
 
-    Ok(NodeHandle { id, events: events_tx, threads, counters, store_digest, executed })
+    Ok(NodeHandle { id, events: event_txs, workers, threads, stats })
 }
 
 /// A real request/response client: a [`Session`] speaking `ClientSubmit`
 /// / `ClientReply` frames to one node over its own TCP connection.
+///
+/// Supports **pipelining**: [`TcpClient::submit_async`] puts a request on
+/// the wire without waiting, [`TcpClient::recv_reply`] completes the next
+/// outstanding request in whatever order the node finishes them — the
+/// wire protocol routes replies by request id, so several rids may be in
+/// flight per session. [`TcpClient::submit`] remains the closed-loop
+/// convenience (submit one, block for that rid, buffering any other
+/// pipelined replies that arrive first).
 pub struct TcpClient {
     session: Session,
     stream: TcpStream,
+    /// Rids submitted and not yet completed.
+    outstanding: HashSet<Rid>,
+    /// Replies read off the socket while waiting for a different rid.
+    buffered: HashMap<Rid, Response>,
 }
 
 impl TcpClient {
@@ -298,7 +385,12 @@ impl TcpClient {
     pub fn connect(addr: &str, client: ClientId) -> Result<TcpClient> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
         stream.set_nodelay(true)?;
-        Ok(TcpClient { session: Session::new(client), stream })
+        Ok(TcpClient {
+            session: Session::new(client),
+            stream,
+            outstanding: HashSet::new(),
+            buffered: HashMap::new(),
+        })
     }
 
     /// The session identity.
@@ -306,33 +398,91 @@ impl TcpClient {
         self.session.client()
     }
 
-    /// Abort a blocked [`TcpClient::submit`] after `timeout` (None blocks
-    /// forever, the default).
+    /// Requests currently in flight (pipelined and not yet completed).
+    pub fn in_flight(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Abort a blocked receive after `timeout` (None blocks forever, the
+    /// default).
     pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<()> {
         self.stream.set_read_timeout(timeout)?;
         Ok(())
     }
 
-    /// Submit one command and block for its response (closed loop): the
-    /// session allocates the rid, the frame goes out as `ClientSubmit`,
-    /// and the matching `ClientReply` comes back once the command
-    /// executed at the node.
-    pub fn submit(&mut self, keys: Vec<Key>, op: Op, payload_len: u32) -> Result<(Rid, Response)> {
+    /// Pipeline one command: allocate its rid, put the `ClientSubmit`
+    /// frame on the wire and return immediately. Complete it (in any
+    /// order) with [`TcpClient::recv_reply`].
+    pub fn submit_async(&mut self, keys: Vec<Key>, op: Op, payload_len: u32) -> Result<Rid> {
         let cmd = self.session.command(keys, op, payload_len);
         let rid = cmd.rid;
         let body = wire::encode_client(&wire::ClientFrame::Submit { cmd });
         write_frame(&mut self.stream, CLIENT_FROM, &body)?;
+        self.outstanding.insert(rid);
+        Ok(rid)
+    }
+
+    /// Complete the next outstanding request: returns a buffered reply if
+    /// one was already read, otherwise blocks on the socket. Replies may
+    /// complete in a different order than their submissions. Replies for
+    /// rids that are no longer outstanding (an earlier request whose
+    /// `submit` timed out and was abandoned) are skipped, exactly like
+    /// the closed-loop path skips them.
+    pub fn recv_reply(&mut self) -> Result<(Rid, Response)> {
+        if let Some(&rid) = self.buffered.keys().next() {
+            let response = self.buffered.remove(&rid).expect("buffered reply");
+            self.outstanding.remove(&rid);
+            return Ok((rid, response));
+        }
+        if self.outstanding.is_empty() {
+            bail!("no outstanding requests to receive");
+        }
         loop {
-            let (_, body) = read_frame(&mut self.stream)?;
-            match wire::decode_client(&body)? {
-                wire::ClientFrame::Reply { rid: got, response } if got == rid => {
-                    return Ok((rid, response));
-                }
-                // A reply for an earlier (timed-out) request of this
-                // closed-loop session: skip it.
-                wire::ClientFrame::Reply { .. } => continue,
-                wire::ClientFrame::Submit { .. } => bail!("unexpected ClientSubmit from node"),
+            let (rid, response) = self.read_reply()?;
+            if self.outstanding.remove(&rid) {
+                return Ok((rid, response));
             }
+            // else: stale reply for an abandoned request — skip it.
+        }
+    }
+
+    /// Read one `ClientReply` frame off the socket.
+    fn read_reply(&mut self) -> Result<(Rid, Response)> {
+        let (_, body) = read_frame(&mut self.stream)?;
+        match wire::decode_client(&body)? {
+            wire::ClientFrame::Reply { rid, response } => Ok((rid, response)),
+            wire::ClientFrame::Submit { .. } => bail!("unexpected ClientSubmit from node"),
+        }
+    }
+
+    /// Submit one command and block for *its* response (closed loop over
+    /// the pipelined plumbing): replies for other in-flight rids that
+    /// arrive first are buffered, not dropped. On error (e.g. a read
+    /// timeout) the request is abandoned — its rid leaves `outstanding`,
+    /// so a late reply for it is skipped rather than mistaken for a
+    /// pipelined completion.
+    pub fn submit(&mut self, keys: Vec<Key>, op: Op, payload_len: u32) -> Result<(Rid, Response)> {
+        let rid = self.submit_async(keys, op, payload_len)?;
+        loop {
+            if let Some(response) = self.buffered.remove(&rid) {
+                self.outstanding.remove(&rid);
+                return Ok((rid, response));
+            }
+            let (got, response) = match self.read_reply() {
+                Ok(r) => r,
+                Err(e) => {
+                    self.outstanding.remove(&rid);
+                    return Err(e);
+                }
+            };
+            if got == rid {
+                self.outstanding.remove(&rid);
+                return Ok((rid, response));
+            }
+            if self.outstanding.contains(&got) {
+                self.buffered.insert(got, response);
+            }
+            // else: a reply for an earlier (timed-out) request — skip it.
         }
     }
 

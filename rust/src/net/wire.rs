@@ -13,6 +13,7 @@
 //! batch is.
 
 use crate::core::{ClientId, Command, Dot, Op, ProcessId, Response, Rid, ShardId};
+use crate::protocol::common::shard::Routed;
 use crate::protocol::tempo::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums};
 use crate::protocol::tempo::promises::PromiseSet;
 use crate::util::error::{bail, Result};
@@ -21,6 +22,12 @@ use crate::util::error::{bail, Result};
 pub const TAG_CLIENT_SUBMIT: u8 = 17;
 /// Tag of the `ClientReply` frame (docs/WIRE.md).
 pub const TAG_CLIENT_REPLY: u8 = 18;
+/// Tag of the worker-routed envelope around a protocol message
+/// (docs/WIRE.md): `[19][worker u8][inner msg]`. Peer connections under
+/// worker sharding carry only routed frames; the inner message may be
+/// anything `decode` accepts (including `MBatch`), never another
+/// envelope.
+pub const TAG_ROUTED: u8 = 19;
 
 /// Frames exchanged between a client session and a node over the client
 /// plane of the TCP runtime (never between protocol peers).
@@ -79,7 +86,7 @@ impl Writer {
         self.u32(c.payload_len);
         self.u32(c.batched);
         self.u16(c.keys.len() as u16);
-        for &k in &c.keys {
+        for &k in c.keys.iter() {
             self.u64(k);
         }
         // Materialize the payload (contents are irrelevant to ordering,
@@ -211,7 +218,7 @@ impl<'a> Reader<'a> {
             }
             q.push((s, procs));
         }
-        Ok(q)
+        Ok(q.into())
     }
     fn key_ts(&mut self) -> Result<KeyTs> {
         let n = self.u16()? as usize;
@@ -289,7 +296,7 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             w.u32(group.0);
             w.key_ts(ts);
             w.u16(promises.len() as u16);
-            for (p, kp) in promises {
+            for (p, kp) in promises.iter() {
                 w.u32(p.0);
                 w.key_promises(kp);
             }
@@ -368,6 +375,33 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
     w.buf
 }
 
+/// Encode a worker-routed protocol frame (without the length prefix):
+/// the [`TAG_ROUTED`] envelope naming the worker slot, then the inner
+/// message. This is what peer connections carry under worker sharding
+/// (`protocol::common::shard`); with one worker the tag is simply 0.
+pub fn encode_routed(routed: &Routed<Msg>) -> Vec<u8> {
+    let inner = encode(&routed.msg);
+    let mut buf = Vec::with_capacity(inner.len() + 2);
+    buf.push(TAG_ROUTED);
+    buf.push(routed.worker as u8);
+    buf.extend_from_slice(&inner);
+    buf
+}
+
+/// Decode a worker-routed protocol frame. The envelope carries exactly
+/// one inner protocol message; a nested envelope or a client tag inside
+/// is malformed.
+pub fn decode_routed(buf: &[u8]) -> Result<Routed<Msg>> {
+    let mut r = Reader::new(buf);
+    let tag = r.u8()?;
+    if tag != TAG_ROUTED {
+        bail!("expected routed frame tag {TAG_ROUTED}, got {tag}");
+    }
+    let worker = r.u8()? as u32;
+    let msg = decode_at(&mut r)?;
+    Ok(Routed { worker, msg })
+}
+
 /// Encode a client frame (without the length prefix).
 pub fn encode_client(frame: &ClientFrame) -> Vec<u8> {
     let mut w = Writer::new();
@@ -428,7 +462,7 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
                 let p = ProcessId(r.u32()?);
                 promises.push((p, r.key_promises()?));
             }
-            Msg::MCommit { dot, group, ts, promises }
+            Msg::MCommit { dot, group, ts, promises: promises.into() }
         }
         5 => Msg::MCommitDirect {
             dot: r.dot()?,
@@ -438,7 +472,7 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
         },
         6 => Msg::MConsensus { dot: r.dot()?, ts: r.key_ts()?, bal: r.u64()? },
         7 => Msg::MConsensusAck { dot: r.dot()?, bal: r.u64()? },
-        8 => Msg::MPromises { promises: r.key_promises()? },
+        8 => Msg::MPromises { promises: r.key_promises()?.into() },
         9 => Msg::MBump { dot: r.dot()?, ts: r.u64()? },
         10 => Msg::MStable { dot: r.dot()? },
         11 => Msg::MRec { dot: r.dot()?, bal: r.u64()? },
@@ -481,6 +515,7 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
                     Some(&t) if t == TAG_CLIENT_SUBMIT || t == TAG_CLIENT_REPLY => {
                         bail!("client frame tag {t} inside MBatch")
                     }
+                    Some(&TAG_ROUTED) => bail!("routed envelope inside MBatch"),
                     _ => {}
                 }
                 let mut sub = Reader::new(body);
@@ -495,6 +530,7 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
         x if x == TAG_CLIENT_SUBMIT || x == TAG_CLIENT_REPLY => {
             bail!("client frame tag {x} in protocol stream")
         }
+        TAG_ROUTED => bail!("routed envelope where a bare protocol message was expected"),
         x => bail!("bad message tag {x}"),
     };
     Ok(msg)
@@ -514,8 +550,11 @@ mod tests {
     fn all_variants_roundtrip() {
         let dot = Dot::new(ProcessId(3), 42);
         let cmd = Command::new(Rid::new(ClientId(7), 9), vec![1, 99], Op::Rmw, 512);
-        let quorums: Quorums =
-            vec![(ShardId(0), vec![ProcessId(0), ProcessId(1)]), (ShardId(1), vec![ProcessId(3)])];
+        let quorums: Quorums = vec![
+            (ShardId(0), vec![ProcessId(0), ProcessId(1)]),
+            (ShardId(1), vec![ProcessId(3)]),
+        ]
+        .into();
         let ts: KeyTs = vec![(1, 10), (99, 11)];
         let ps = PromiseSet { detached: vec![(1, 5), (7, 9)], attached: vec![(dot, 10)] };
         let kp: KeyPromises = vec![(1, ps.clone()), (99, PromiseSet::default())];
@@ -532,12 +571,12 @@ mod tests {
             dot,
             group: ShardId(1),
             ts: ts.clone(),
-            promises: vec![(ProcessId(2), kp.clone())],
+            promises: vec![(ProcessId(2), kp.clone())].into(),
         });
         roundtrip(Msg::MCommitDirect { dot, cmd, quorums, final_ts: 17 });
         roundtrip(Msg::MConsensus { dot, ts: ts.clone(), bal: 6 });
         roundtrip(Msg::MConsensusAck { dot, bal: 6 });
-        roundtrip(Msg::MPromises { promises: kp });
+        roundtrip(Msg::MPromises { promises: kp.into() });
         roundtrip(Msg::MBump { dot, ts: 12 });
         roundtrip(Msg::MStable { dot });
         roundtrip(Msg::MRec { dot, bal: 8 });
@@ -551,11 +590,40 @@ mod tests {
         roundtrip(Msg::MBatch {
             msgs: vec![
                 Msg::MStable { dot },
-                Msg::MPromises { promises: vec![(1, ps)] },
+                Msg::MPromises { promises: vec![(1, ps)].into() },
                 Msg::MGarbageCollect { executed: vec![(ProcessId(2), 3)] },
             ],
         });
         roundtrip(Msg::MBatch { msgs: vec![] });
+    }
+
+    #[test]
+    fn routed_frames_roundtrip_and_validate() {
+        let dot = Dot::new(ProcessId(1), 6); // worker 1 of 4 stride (seq-1 ≡ 1 mod 4)
+        let inner = Msg::MStable { dot };
+        for worker in [0u32, 1, 3, 255] {
+            let bytes = encode_routed(&Routed { worker, msg: inner.clone() });
+            assert_eq!(bytes[0], TAG_ROUTED);
+            let back = decode_routed(&bytes).expect("decode routed");
+            assert_eq!(back.worker, worker);
+            assert_eq!(format!("{:?}", back.msg), format!("{inner:?}"));
+        }
+        // Truncation anywhere must error, not panic.
+        let bytes = encode_routed(&Routed { worker: 2, msg: inner.clone() });
+        for cut in 0..bytes.len() {
+            assert!(decode_routed(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        // A bare message is not a routed frame and vice versa.
+        assert!(decode_routed(&encode(&inner)).is_err());
+        assert!(decode(&bytes).is_err(), "envelope must not decode as a bare Msg");
+        // Envelopes never nest inside MBatch members.
+        let mut w = Writer::new();
+        w.u8(16);
+        w.u16(1);
+        let member = encode_routed(&Routed { worker: 0, msg: inner });
+        w.u32(member.len() as u32);
+        w.buf.extend_from_slice(&member);
+        assert!(decode(&w.buf).is_err(), "routed envelope inside MBatch must fail");
     }
 
     #[test]

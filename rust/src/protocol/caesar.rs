@@ -25,9 +25,15 @@ use super::{Action, Footprint, Protocol};
 use crate::core::{Command, Config, Dot, Key, ProcessId};
 use crate::metrics::Counters;
 use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::Arc;
 
 /// Timestamps are made unique by pairing with the command identifier.
 type Ts = (u64, Dot);
+
+/// Dependency set as carried by the commit broadcast — `Arc`-backed so
+/// the per-peer message clones of `MCommit` (sent to *every* process)
+/// share one buffer instead of deep-copying an unbounded dep list.
+pub type Deps = Arc<[Dot]>;
 
 #[derive(Clone, Debug)]
 pub enum Msg {
@@ -36,7 +42,7 @@ pub enum Msg {
     MProposeNack { dot: Dot, higher_ts: u64 },
     MRetry { dot: Dot, cmd: Command, ts: u64 },
     MRetryAck { dot: Dot, ts: u64, deps: Vec<Dot> },
-    MCommit { dot: Dot, cmd: Command, ts: u64, deps: Vec<Dot> },
+    MCommit { dot: Dot, cmd: Command, ts: u64, deps: Deps },
     /// Periodic GC exchange (`protocol::common::GCTrack`).
     MGarbageCollect { executed: Vec<(ProcessId, u64)> },
     /// Batch frame (`protocol::common::batch`): several messages bound for
@@ -139,7 +145,7 @@ impl Caesar {
     /// Conflicting commands seen on the keys of `cmd`.
     fn conflicts(&self, cmd: &Command) -> Vec<(Dot, KeyEntry)> {
         let mut out = Vec::new();
-        for k in &cmd.keys {
+        for k in cmd.keys.iter() {
             if let Some(m) = self.seen.get(k) {
                 out.extend(m.iter().map(|(d, e)| (*d, *e)));
             }
@@ -150,7 +156,7 @@ impl Caesar {
     }
 
     fn register(&mut self, dot: Dot, cmd: &Command, ts: u64, committed: bool) {
-        for &k in &cmd.keys {
+        for &k in cmd.keys.iter() {
             self.seen.entry(k).or_default().insert(dot, KeyEntry { ts, committed });
         }
     }
@@ -232,7 +238,8 @@ impl Caesar {
         match decision {
             Some((true, cmd, ts)) => {
                 self.counters.fast_path += 1;
-                let deps: Vec<Dot> = self.info[&dot].ack_deps.iter().copied().collect();
+                let deps: Deps =
+                    self.info[&dot].ack_deps.iter().copied().collect::<Vec<_>>().into();
                 let targets = self.all();
                 self.broadcast(&targets, Msg::MCommit { dot, cmd, ts, deps }, time, out);
             }
@@ -259,7 +266,7 @@ impl Caesar {
         dot: Dot,
         cmd: Command,
         ts: u64,
-        deps: Vec<Dot>,
+        deps: Deps,
         out: &mut Vec<Action<Msg>>,
         time: u64,
     ) {
@@ -288,7 +295,7 @@ impl Caesar {
         info.phase = Phase::Committed;
         info.cmd = cmd;
         info.ts = ts;
-        info.deps = deps;
+        info.deps = deps.to_vec(); // one receipt-side copy, not one per peer
         self.exec_queue.insert((ts, dot), ());
         out.push(Action::Committed { dot, fast: true });
         // Unblock replies waiting on this command (wait condition).
@@ -364,10 +371,10 @@ impl GcProcess for Caesar {
     /// dependency or wait-condition blocker again.
     fn prune_executed(&mut self) {
         for (origin, lo, hi) in self.gc.safe_to_prune() {
-            for seq in lo..=hi {
-                let dot = Dot::new(origin, seq);
+            for idx in lo..=hi {
+                let dot = self.gc.dot_at(origin, idx);
                 let keys: Vec<Key> =
-                    self.info.get(&dot).map(|i| i.cmd.keys.clone()).unwrap_or_default();
+                    self.info.get(&dot).map(|i| i.cmd.keys.to_vec()).unwrap_or_default();
                 for k in keys {
                     let empty = if let Some(m) = self.seen.get_mut(&k) {
                         m.remove(&dot);
@@ -487,7 +494,12 @@ impl Protocol for Caesar {
     fn new(id: ProcessId, config: Config) -> Self {
         assert_eq!(config.shards, 1, "Caesar baseline is full-replication only");
         let bp = BaseProcess::new(id, config);
-        let gc = GCTrack::new(id, bp.group_procs.clone());
+        let gc = GCTrack::strided(
+            id,
+            bp.group_procs.clone(),
+            bp.config.worker,
+            bp.config.workers,
+        );
         Caesar {
             bp,
             clock: 0,
@@ -571,6 +583,7 @@ impl Protocol for Caesar {
             keys: self.seen.len(),
             stalled: self.bp.stalled_len() + self.exec_blocked.len(),
             queued: self.bp.batcher.queued(),
+            fragments: 0,
         }
     }
 }

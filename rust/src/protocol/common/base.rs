@@ -35,11 +35,16 @@ pub struct BaseProcess<M> {
 }
 
 impl<M> BaseProcess<M> {
-    /// Build the shared state of process `id` under `config`.
+    /// Build the shared state of process `id` under `config`. Under worker
+    /// sharding (`config.worker`/`config.workers`, set by
+    /// [`super::shard::Sharded`]) the dot generator mints this worker
+    /// slot's interleaved sequence stride, so a dot names its owning
+    /// worker; the monolithic default is the identity stride.
     pub fn new(id: ProcessId, config: Config) -> Self {
         let group = config.shard_of(id);
         let group_procs = config.shard_processes(group);
         let batcher = Batcher::from_config(id, &config);
+        let dots = DotGen::strided(id, config.worker, config.workers);
         BaseProcess {
             id,
             group,
@@ -47,7 +52,7 @@ impl<M> BaseProcess<M> {
             config,
             crashed: false,
             batcher,
-            dots: DotGen::new(id),
+            dots,
             stalled: HashMap::new(),
         }
     }

@@ -11,10 +11,19 @@
 //! that touch its keys, so foreign-shard gaps stall that origin's frontier
 //! and GC degrades to a no-op — safe, but unbounded; per-group sequence
 //! spaces are a ROADMAP item.
+//!
+//! Under worker sharding (`protocol::common::shard`) each worker slot
+//! owns an interleaved stride of every origin's sequence space (worker
+//! `w` of `N` mints `w+1, w+1+N, …`), so a per-worker tracker built with
+//! [`GCTrack::strided`] folds the stride into a dense 1-based *index*
+//! space: frontiers stay contiguous per worker, worker `w` instances
+//! exchange frontiers only with their peers' worker-`w` instances (the
+//! router tags messages), and pruning maps indices back to dots via
+//! [`GCTrack::dot_at`]. [`GCTrack::new`] is the identity stride.
 
 use super::base::Process;
 use super::stability::SourceTracker;
-use crate::core::{Dot, ProcessId};
+use crate::core::{Dot, ProcessId, Stride};
 use crate::protocol::Action;
 use std::collections::HashMap;
 
@@ -27,35 +36,59 @@ use std::collections::HashMap;
 pub struct GCTrack {
     id: ProcessId,
     group: Vec<ProcessId>,
-    /// Dots executed locally, per origin.
+    /// Worker stride: this tracker covers the slot's sequence subset.
+    stride: Stride,
+    /// Dots executed locally, per origin (in stride-index space).
     executed: HashMap<ProcessId, SourceTracker>,
     /// Latest contiguous frontier reported by each group member, per origin.
     reported: HashMap<ProcessId, HashMap<ProcessId, u64>>,
-    /// Per-origin sequence number up to which state was already pruned.
+    /// Per-origin index up to which state was already pruned.
     pruned: HashMap<ProcessId, u64>,
 }
 
 impl GCTrack {
-    /// Tracker for process `id` whose shard group is `group`.
+    /// Tracker for process `id` whose shard group is `group` (identity
+    /// stride: sequence space == index space).
     pub fn new(id: ProcessId, group: Vec<ProcessId>) -> Self {
+        Self::strided(id, group, 0, 1)
+    }
+
+    /// Tracker for worker slot `worker` of `workers` at process `id`:
+    /// covers the dots of that slot's [`Stride`] and keeps their frontier
+    /// dense despite the interleaving.
+    pub fn strided(id: ProcessId, group: Vec<ProcessId>, worker: usize, workers: usize) -> Self {
         GCTrack {
             id,
             group,
+            stride: Stride::new(worker, workers),
             executed: HashMap::new(),
             reported: HashMap::new(),
             pruned: HashMap::new(),
         }
     }
 
+    /// The dot at stride index `index` (1-based) of `origin` — the inverse
+    /// of the mapping `record_executed` applies. Pruning loops iterate
+    /// `safe_to_prune` index ranges through this.
+    pub fn dot_at(&self, origin: ProcessId, index: u64) -> Dot {
+        Dot::new(origin, self.stride.seq_at(index))
+    }
+
     /// Record a locally executed command.
     pub fn record_executed(&mut self, dot: Dot) {
-        self.executed.entry(dot.origin).or_default().add(dot.seq);
+        match self.stride.index_of(dot.seq) {
+            Some(i) => self.executed.entry(dot.origin).or_default().add(i),
+            None => debug_assert!(false, "dot {dot} outside worker stride"),
+        }
     }
 
     /// Was `dot` executed locally? Used to guard against resurrecting
     /// pruned state from stale messages and promise re-broadcasts.
+    /// Dots of other worker slots report `false`.
     pub fn was_executed(&self, dot: Dot) -> bool {
-        self.executed.get(&dot.origin).is_some_and(|t| t.contains(dot.seq))
+        self.stride
+            .index_of(dot.seq)
+            .is_some_and(|i| self.executed.get(&dot.origin).is_some_and(|t| t.contains(i)))
     }
 
     /// Our per-origin contiguous executed frontier — the `MGarbageCollect`
@@ -82,9 +115,11 @@ impl GCTrack {
         }
     }
 
-    /// Newly safe-to-prune ranges: per origin, the dots `lo..=hi` that
-    /// every group member (us included) has executed and that were not
-    /// pruned yet. Advances the internal pruned marker.
+    /// Newly safe-to-prune ranges: per origin, the stride indices
+    /// `lo..=hi` (map to dots via [`GCTrack::dot_at`]; with the identity
+    /// stride, indices *are* sequence numbers) that every group member
+    /// (us included) has executed and that were not pruned yet. Advances
+    /// the internal pruned marker.
     pub fn safe_to_prune(&mut self) -> Vec<(ProcessId, u64, u64)> {
         let mut out = Vec::new();
         for (&origin, tracker) in &self.executed {
@@ -215,6 +250,36 @@ mod tests {
         let _ = gc.safe_to_prune();
         assert!(gc.was_executed(dot(5, 1)));
         assert!(!gc.was_executed(dot(5, 2)));
+    }
+
+    #[test]
+    fn strided_tracker_keeps_dense_frontiers() {
+        // Worker 1 of 4: owns seqs 2, 6, 10, ... Executing them in order
+        // advances the frontier without gaps; foreign-stride dots are
+        // invisible; index ranges map back to the right dots.
+        let mut gc =
+            GCTrack::strided(ProcessId(0), (0..3).map(ProcessId).collect(), 1, 4);
+        let origin = ProcessId(5);
+        for seq in [2u64, 6, 10] {
+            gc.record_executed(Dot::new(origin, seq));
+        }
+        assert_eq!(gc.snapshot(), vec![(origin, 3)], "dense despite the stride");
+        assert!(gc.was_executed(Dot::new(origin, 6)));
+        assert!(!gc.was_executed(Dot::new(origin, 3)), "foreign stride is not ours");
+        gc.update_from(ProcessId(1), &[(origin, 3)]);
+        gc.update_from(ProcessId(2), &[(origin, 2)]);
+        assert_eq!(gc.safe_to_prune(), vec![(origin, 1, 2)]);
+        assert_eq!(gc.dot_at(origin, 1), Dot::new(origin, 2));
+        assert_eq!(gc.dot_at(origin, 2), Dot::new(origin, 6));
+        assert_eq!(gc.dot_at(origin, 3), Dot::new(origin, 10));
+    }
+
+    #[test]
+    fn identity_stride_indices_are_sequence_numbers() {
+        let gc = track();
+        for seq in 1..10 {
+            assert_eq!(gc.dot_at(ProcessId(7), seq), Dot::new(ProcessId(7), seq));
+        }
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! batching ([`batch`]), generic per-command bookkeeping
 //! ([`CommandsInfo`]), group-wide garbage collection of executed commands
 //! ([`GCTrack`]), the stability kernel shared with the runtime
-//! ([`stability`]), and wire-size accounting ([`wire`]).
+//! ([`stability`]), per-key worker sharding of whole replicas
+//! ([`shard`]), and wire-size accounting ([`wire`]).
 //!
 //! Layering: `core` → `protocol/common` → protocol implementations
 //! (`tempo`, `depsmr`, `caesar`, `fpaxos`) → `executor`/`runtime` →
@@ -17,6 +18,7 @@ pub mod base;
 pub mod batch;
 pub mod gc;
 pub mod info;
+pub mod shard;
 pub mod stability;
 pub mod wire;
 
@@ -24,4 +26,5 @@ pub use base::{BaseProcess, Process};
 pub use batch::{BatchMsg, Batcher};
 pub use gc::{GCTrack, GcProcess};
 pub use info::CommandsInfo;
+pub use shard::{worker_of_cmd, worker_of_dot, worker_of_key, Routed, Sharded};
 pub use stability::{majority_watermark, ExecutedSet, QuorumFrontier, SourceTracker};

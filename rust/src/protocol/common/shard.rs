@@ -1,0 +1,299 @@
+//! Per-key worker sharding of protocol state (the fantoch parallel-worker
+//! idea, adapted to this crate's shared-nothing state machines).
+//!
+//! Tempo's timestamping is per-key by construction (paper §2, §6.3), so a
+//! replica's protocol state partitions cleanly by key. [`Sharded`] splits
+//! one replica into `Config::workers` *worker slots*, each a complete,
+//! unmodified inner protocol instance over the keys that hash to it:
+//!
+//! ```text
+//!                 ┌────────────────────── replica p ──────────────────────┐
+//!   submit(cmd) ──┤ route: worker_of_key(keys[0])                         │
+//!                 │   ┌─────────┐  ┌─────────┐        ┌─────────┐         │
+//!   handle(m)  ───┤──▶│ inner 0 │  │ inner 1 │  ...   │ inner N-1│        │
+//!  (by msg.worker)│   └────┬────┘  └────┬────┘        └────┬────┘         │
+//!                 │        └─ actions merged in worker order ─┘           │
+//!                 └── Send{to, msg} lifted to Send{to, Routed{w, msg}} ───┘
+//! ```
+//!
+//! **Sharding invariants.** The key→worker map ([`worker_of_key`]) is a
+//! pure global hash, identical at every replica, so worker `w` of all
+//! replicas forms one complete protocol instance over its key subset —
+//! quorums, promise stores, GC exchanges and recovery all stay within a
+//! slot. Each slot mints dots on its own interleaved sequence stride
+//! (`DotGen::strided`), so a dot names its owning worker
+//! ([`worker_of_dot`]) and acks/commits/recovery messages route without
+//! rehashing keys; outbound messages additionally carry the sender
+//! slot in a [`Routed`] envelope, which routes *every* message kind
+//! (promise broadcasts and GC frontier exchanges included) with one rule.
+//!
+//! **What is and is not shared.** Nothing is shared between slots: each
+//! inner instance owns its clocks, promise stores, command info, batcher,
+//! GC tracker and dot generator. The runtimes own what is genuinely
+//! per-replica: the executor/KV store (commands of different slots never
+//! share a key, so their state-machine effects commute) and the
+//! client-session plumbing.
+//!
+//! **Determinism.** `tick` drives the slots round-robin in worker order
+//! and concatenates their actions; `handle` touches exactly one slot.
+//! Under the simulator's canonical intra-timestamp event ordering
+//! (`sim::EventKey`) this makes a sharded run a pure function of the
+//! delivered-message multiset — `rust/tests/workers.rs` proves
+//! `workers=1 == workers=4` execution equivalence for Tempo, EPaxos,
+//! Atlas, Janus* and Caesar the way `rust/tests/batching.rs` proved
+//! batched == unbatched (Caesar's globally-coupled proposal clock makes
+//! its byte-exact claim hold on co-hashing key sets; under multi-slot
+//! traffic it is safe but legitimately re-times — see the test).
+//!
+//! **Limits.** A command must live entirely inside one slot: every key it
+//! accesses has to hash to the same worker (single-key commands — the
+//! paper's microbenchmark shape — always do). Commands whose keys span
+//! slots would need the cross-partition commit/stability machinery *within*
+//! a replica; that is the ROADMAP follow-up, and [`Sharded::submit`]
+//! rejects such commands loudly rather than corrupting per-key order.
+//! FPaxos can run under the router (each slot is an independent leader
+//! log; PSMR still holds), but its single total-order log is *not*
+//! execution-equivalent to a monolithic run by design.
+
+use super::super::{Action, Footprint, Protocol};
+use crate::core::{Command, Config, Dot, Key, ProcessId, Stride};
+use crate::metrics::Counters;
+
+/// Worker slot owning `key` among `workers` slots: a global pure hash
+/// (SplitMix64 finalizer — decorrelated from [`crate::core::key_to_shard`]
+/// so worker partitions cut across shard partitions evenly).
+pub fn worker_of_key(key: Key, workers: usize) -> usize {
+    if workers <= 1 {
+        return 0;
+    }
+    let mut z = key.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    (z % workers as u64) as usize
+}
+
+/// Worker slot that minted `dot`: slots allocate interleaved sequence
+/// strides (`DotGen::strided`), so ownership is carried by the dot itself
+/// and survives recovery (any process can compute it without the command
+/// payload).
+pub fn worker_of_dot(dot: Dot, workers: usize) -> usize {
+    Stride::owner_of(dot.seq, workers)
+}
+
+/// Worker slot of `cmd`, if all its keys co-locate; `Err((a, b))` names
+/// two slots the key set spans otherwise.
+pub fn worker_of_cmd(cmd: &Command, workers: usize) -> Result<usize, (usize, usize)> {
+    let w = cmd.keys.first().map_or(0, |&k| worker_of_key(k, workers));
+    for &k in cmd.keys.iter() {
+        let wk = worker_of_key(k, workers);
+        if wk != w {
+            return Err((w, wk));
+        }
+    }
+    Ok(w)
+}
+
+/// Envelope around an inner protocol message naming the worker slot it
+/// belongs to. Sender slot `w` talks only to receiver slot `w`, so the
+/// tag routes every message kind uniformly (wire form: docs/WIRE.md
+/// tag 19).
+#[derive(Clone, Debug)]
+pub struct Routed<M> {
+    /// Worker slot index of the sending (and therefore receiving) instance.
+    pub worker: u32,
+    /// The inner protocol message.
+    pub msg: M,
+}
+
+/// A replica sharded into `Config::workers` shared-nothing inner protocol
+/// instances; implements [`Protocol`] itself, so the simulator, the TCP
+/// runtime, the checker and the benches run it unchanged.
+pub struct Sharded<P: Protocol> {
+    slots: Vec<P>,
+}
+
+impl<P: Protocol> Sharded<P> {
+    fn lift(worker: u32, actions: Vec<Action<P::Message>>) -> Vec<Action<Routed<P::Message>>> {
+        actions
+            .into_iter()
+            .map(|a| match a {
+                Action::Send { to, msg } => Action::Send { to, msg: Routed { worker, msg } },
+                Action::Submitted { dot } => Action::Submitted { dot },
+                Action::Execute { dot, cmd } => Action::Execute { dot, cmd },
+                Action::Reply { rid, response } => Action::Reply { rid, response },
+                Action::Committed { dot, fast } => Action::Committed { dot, fast },
+                Action::RecoveryStarted { dot } => Action::RecoveryStarted { dot },
+            })
+            .collect()
+    }
+
+    /// Number of worker slots.
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The inner instance of worker slot `w` (tests/diagnostics).
+    pub fn slot(&self, w: usize) -> &P {
+        &self.slots[w]
+    }
+}
+
+impl<P: Protocol> Protocol for Sharded<P> {
+    type Message = Routed<P::Message>;
+
+    fn new(id: ProcessId, config: Config) -> Self {
+        let n = config.workers.max(1);
+        // The wire envelope names the slot in one byte; a silent u8
+        // truncation would misroute traffic, so refuse loudly here too
+        // (for configs built without `with_workers`).
+        assert!(n <= 256, "workers must be <= 256 (u8 slot on the wire)");
+        let slots = (0..n)
+            .map(|w| {
+                let mut c = config.clone();
+                c.workers = n;
+                c.worker = w;
+                P::new(id, c)
+            })
+            .collect();
+        Sharded { slots }
+    }
+
+    fn name() -> &'static str {
+        P::name()
+    }
+
+    /// Route the command to the worker slot owning its keys. All keys
+    /// must co-locate (see the module docs); a spanning key set is a
+    /// routing error, rejected loudly.
+    fn submit(&mut self, cmd: Command, time_us: u64) -> Vec<Action<Self::Message>> {
+        let n = self.slots.len();
+        let w = match worker_of_cmd(&cmd, n) {
+            Ok(w) => w,
+            Err((a, b)) => panic!(
+                "command {:?} spans worker slots {a} and {b} (workers={n}): \
+                 cross-worker commands need the in-replica multi-partition \
+                 protocol (ROADMAP); route them with workers=1",
+                cmd.rid
+            ),
+        };
+        Self::lift(w as u32, self.slots[w].submit(cmd, time_us))
+    }
+
+    /// Route by the envelope tag: sender slot `w` talks to our slot `w`.
+    /// An out-of-range tag (hostile wire input) is dropped.
+    fn handle(
+        &mut self,
+        from: ProcessId,
+        msg: Self::Message,
+        time_us: u64,
+    ) -> Vec<Action<Self::Message>> {
+        let w = msg.worker as usize;
+        if w >= self.slots.len() {
+            return Vec::new();
+        }
+        Self::lift(msg.worker, self.slots[w].handle(from, msg.msg, time_us))
+    }
+
+    /// Drive every slot, round-robin in worker order, and concatenate
+    /// their actions (the deterministic merge the equivalence proof
+    /// relies on).
+    fn tick(&mut self, time_us: u64) -> Vec<Action<Self::Message>> {
+        let mut out = Vec::new();
+        for (w, slot) in self.slots.iter_mut().enumerate() {
+            out.extend(Self::lift(w as u32, slot.tick(time_us)));
+        }
+        out
+    }
+
+    fn crash(&mut self) {
+        for s in &mut self.slots {
+            s.crash();
+        }
+    }
+
+    fn suspect(&mut self, p: ProcessId) {
+        for s in &mut self.slots {
+            s.suspect(p);
+        }
+    }
+
+    fn counters(&self) -> Counters {
+        let mut c = Counters::default();
+        for s in &self.slots {
+            c.merge(&s.counters());
+        }
+        c
+    }
+
+    /// The envelope costs two wire bytes on top of the inner message —
+    /// the tag-19 byte plus the worker-slot byte (`net::wire::encode_routed`).
+    fn msg_size(msg: &Self::Message) -> u64 {
+        2 + P::msg_size(&msg.msg)
+    }
+
+    fn footprint(&self) -> Footprint {
+        let mut f = Footprint::default();
+        for s in &self.slots {
+            let sf = s.footprint();
+            f.infos += sf.infos;
+            f.keys += sf.keys;
+            f.stalled += sf.stalled;
+            f.queued += sf.queued;
+            f.fragments += sf.fragments;
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ClientId, Op, Rid};
+
+    #[test]
+    fn worker_of_key_is_total_stable_and_balanced() {
+        for workers in 1..=8 {
+            let mut counts = vec![0u32; workers];
+            for key in 0..8_000u64 {
+                let w = worker_of_key(key, workers);
+                assert!(w < workers);
+                assert_eq!(w, worker_of_key(key, workers), "must be stable");
+                counts[w] += 1;
+            }
+            let fair = 8_000 / workers as u32;
+            for &c in &counts {
+                assert!(
+                    c > fair / 2 && c < fair * 2,
+                    "unbalanced at {workers} workers: {counts:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn worker_of_dot_matches_the_strided_generator() {
+        use crate::core::DotGen;
+        for workers in 1..=5 {
+            for w in 0..workers {
+                let mut g = DotGen::strided(ProcessId(3), w, workers);
+                for _ in 0..20 {
+                    assert_eq!(worker_of_dot(g.next(), workers), w);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_of_cmd_detects_spanning_key_sets() {
+        let workers = 4;
+        // Find two keys in different slots and two in the same slot.
+        let k0 = (0..).find(|&k| worker_of_key(k, workers) == 0).unwrap();
+        let k0b = (k0 + 1..).find(|&k| worker_of_key(k, workers) == 0).unwrap();
+        let k1 = (0..).find(|&k| worker_of_key(k, workers) == 1).unwrap();
+        let same = Command::new(Rid::new(ClientId(1), 1), vec![k0, k0b], Op::Put, 0);
+        assert_eq!(worker_of_cmd(&same, workers), Ok(0));
+        let span = Command::new(Rid::new(ClientId(1), 2), vec![k0, k1], Op::Put, 0);
+        assert!(worker_of_cmd(&span, workers).is_err());
+    }
+}

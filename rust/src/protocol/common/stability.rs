@@ -12,7 +12,7 @@
 //! - `runtime::stability` (the batched kernel reference) computes the same
 //!   order statistic over a promise bitmap via [`majority_watermark`].
 
-use crate::core::{Dot, ProcessId};
+use crate::core::{Dot, ProcessId, Stride};
 use std::collections::{BTreeSet, HashMap};
 
 /// Set of known values (promises, executed sequence numbers...) from a
@@ -159,20 +159,54 @@ impl QuorumFrontier {
 /// plus sparse overflow — bounded in steady state, unlike a `HashSet` of
 /// every dot ever executed. Tolerates 0-based sequence numbers (tests use
 /// them) by offsetting into the 1-based [`SourceTracker`] space.
-#[derive(Clone, Debug, Default)]
+///
+/// Under worker sharding a per-worker instance sees only the interleaved
+/// sequence stride its worker slot owns; [`ExecutedSet::strided`] folds
+/// that stride into a dense index space so the frontier still advances
+/// contiguously (the default is the identity stride).
+#[derive(Clone, Debug)]
 pub struct ExecutedSet {
     per_origin: HashMap<ProcessId, SourceTracker>,
+    stride: Stride,
+}
+
+impl Default for ExecutedSet {
+    fn default() -> Self {
+        Self::strided(0, 1)
+    }
 }
 
 impl ExecutedSet {
-    /// Record `dot` as executed.
-    pub fn insert(&mut self, dot: Dot) {
-        self.per_origin.entry(dot.origin).or_default().add(dot.seq.saturating_add(1));
+    /// Set covering worker slot `worker` of `workers` (the dots of that
+    /// slot's [`Stride`]).
+    pub fn strided(worker: usize, workers: usize) -> Self {
+        ExecutedSet { per_origin: HashMap::new(), stride: Stride::new(worker, workers) }
     }
 
-    /// Was `dot` recorded as executed?
+    /// Dense 1-based index of `dot` within the stride, or `None` for dots
+    /// of other worker slots. The identity stride keeps the historical +1
+    /// offset so 0-based test sequences keep working; real strides cover
+    /// the 1-based sequences `DotGen::strided` mints.
+    fn index_of(&self, dot: Dot) -> Option<u64> {
+        if self.stride.is_identity() {
+            return Some(dot.seq.saturating_add(1));
+        }
+        self.stride.index_of(dot.seq)
+    }
+
+    /// Record `dot` as executed.
+    pub fn insert(&mut self, dot: Dot) {
+        match self.index_of(dot) {
+            Some(i) => self.per_origin.entry(dot.origin).or_default().add(i),
+            None => debug_assert!(false, "dot {dot} outside worker stride"),
+        }
+    }
+
+    /// Was `dot` recorded as executed? Dots of other worker slots report
+    /// `false`.
     pub fn contains(&self, dot: Dot) -> bool {
-        self.per_origin.get(&dot.origin).is_some_and(|t| t.contains(dot.seq.saturating_add(1)))
+        self.index_of(dot)
+            .is_some_and(|i| self.per_origin.get(&dot.origin).is_some_and(|t| t.contains(i)))
     }
 
     /// Out-of-order entries buffered across all origins (diagnostics).
@@ -272,6 +306,22 @@ mod tests {
         let unconfigured = QuorumFrontier::default();
         assert!(!unconfigured.is_configured());
         assert_eq!(unconfigured.watermark(), 0);
+    }
+
+    #[test]
+    fn strided_executed_set_is_dense_within_its_slot() {
+        // Worker 2 of 4 owns seqs 3, 7, 11, ...: inserting them in order
+        // leaves nothing buffered out of order, and foreign-stride dots
+        // read as not-executed.
+        let mut s = ExecutedSet::strided(2, 4);
+        let origin = ProcessId(3);
+        for seq in [3u64, 7, 11, 15] {
+            s.insert(Dot::new(origin, seq));
+        }
+        assert_eq!(s.pending(), 0, "stride must stay contiguous");
+        assert!(s.contains(Dot::new(origin, 7)));
+        assert!(!s.contains(Dot::new(origin, 4)));
+        assert!(!s.contains(Dot::new(origin, 19)));
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::core::{key_to_shard, Command, Config, Dot, Key, Op, ProcessId, ShardI
 use crate::executor::DepGraph;
 use crate::metrics::Counters;
 use std::collections::{BTreeSet, HashMap};
+use std::sync::Arc;
 
 /// Which protocol this core instance implements.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,8 +51,16 @@ impl Variant {
     }
 }
 
-/// Fast quorum mapping per accessed group.
-pub type Quorums = Vec<(ShardId, Vec<ProcessId>)>;
+/// Fast quorum mapping per accessed group. `Arc`-backed: it rides in the
+/// payload fan-out (`MPropose`/`MPayload` to every group member), so
+/// per-peer message clones share it instead of deep-copying.
+pub type Quorums = Arc<[(ShardId, Vec<ProcessId>)]>;
+
+/// A dependency set as carried by messages. Dependency sets are the bulk
+/// of every `MCommit`/`MConsensus` broadcast (unbounded under contention,
+/// §D), so messages share one `Arc` buffer across the fan-out; handlers
+/// that mutate copy once on receipt, never once per peer.
+pub type Deps = Arc<[Dot]>;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Phase {
@@ -65,11 +74,11 @@ enum Phase {
 #[derive(Clone, Debug)]
 pub enum Msg {
     MSubmit { dot: Dot, cmd: Command, quorums: Quorums },
-    MPropose { dot: Dot, cmd: Command, quorums: Quorums, deps: Vec<Dot> },
-    MProposeAck { dot: Dot, deps: Vec<Dot> },
+    MPropose { dot: Dot, cmd: Command, quorums: Quorums, deps: Deps },
+    MProposeAck { dot: Dot, deps: Deps },
     MPayload { dot: Dot, cmd: Command, quorums: Quorums },
-    MCommit { dot: Dot, group: ShardId, deps: Vec<Dot> },
-    MConsensus { dot: Dot, deps: Vec<Dot>, bal: u64 },
+    MCommit { dot: Dot, group: ShardId, deps: Deps },
+    MConsensus { dot: Dot, deps: Deps, bal: u64 },
     MConsensusAck { dot: Dot, bal: u64 },
     /// Janus* cross-group execution barrier: this group is ready to
     /// execute `dot` (its local dependency closure is committed).
@@ -113,13 +122,129 @@ impl Msg {
     }
 }
 
+/// A set of [`Dot`]s stored as per-origin coalesced, inclusive sequence
+/// ranges. Built for `reads_since_write`: on a write-free hot key every
+/// read between two GC rounds used to append one `Dot` to a `Vec`, so the
+/// conflict table grew linearly with read throughput (ROADMAP PR 1 item).
+/// Reads from one origin arrive with (near-)monotone sequence numbers, so
+/// contiguous bursts collapse into single `(lo, hi)` fragments: memory is
+/// O(origins × fragments), bounded by the interleaving rather than by the
+/// read count. Exact membership is preserved — dependency enumeration
+/// expands ranges back into dots.
+#[derive(Clone, Debug, Default)]
+pub struct DotRanges {
+    /// Per origin: disjoint, sorted, inclusive `(lo, hi)` seq ranges.
+    per_origin: Vec<(ProcessId, Vec<(u64, u64)>)>,
+}
+
+impl DotRanges {
+    /// Insert `dot`, coalescing with adjacent fragments.
+    pub fn add(&mut self, dot: Dot) {
+        let ranges = match self.per_origin.iter_mut().find(|(o, _)| *o == dot.origin) {
+            Some((_, r)) => r,
+            None => {
+                self.per_origin.push((dot.origin, Vec::new()));
+                &mut self.per_origin.last_mut().expect("just pushed").1
+            }
+        };
+        let s = dot.seq;
+        // First fragment starting after `s`; the one that could contain or
+        // left-extend to `s` is at `i - 1`.
+        let i = ranges.partition_point(|&(lo, _)| lo <= s);
+        if i > 0 {
+            let (_, hi) = ranges[i - 1];
+            if s <= hi {
+                return; // already present
+            }
+            if s == hi + 1 {
+                ranges[i - 1].1 = s;
+                if i < ranges.len() && ranges[i].0 == s + 1 {
+                    let (_, rhi) = ranges.remove(i);
+                    ranges[i - 1].1 = rhi;
+                }
+                return;
+            }
+        }
+        if i < ranges.len() && ranges[i].0 == s + 1 {
+            ranges[i].0 = s;
+            return;
+        }
+        ranges.insert(i, (s, s));
+    }
+
+    /// Remove `dot` if present (GC scrub), splitting its fragment.
+    pub fn remove(&mut self, dot: Dot) {
+        let Some(slot) = self.per_origin.iter_mut().position(|(o, _)| *o == dot.origin) else {
+            return;
+        };
+        let ranges = &mut self.per_origin[slot].1;
+        let s = dot.seq;
+        let i = ranges.partition_point(|&(lo, _)| lo <= s);
+        if i == 0 {
+            return;
+        }
+        let (lo, hi) = ranges[i - 1];
+        if s > hi {
+            return;
+        }
+        match (s == lo, s == hi) {
+            (true, true) => {
+                ranges.remove(i - 1);
+            }
+            (true, false) => ranges[i - 1].0 = s + 1,
+            (false, true) => ranges[i - 1].1 = s - 1,
+            (false, false) => {
+                ranges[i - 1].1 = s - 1;
+                ranges.insert(i, (s + 1, hi));
+            }
+        }
+        if self.per_origin[slot].1.is_empty() {
+            self.per_origin.remove(slot);
+        }
+    }
+
+    /// No dots stored?
+    pub fn is_empty(&self) -> bool {
+        self.per_origin.is_empty()
+    }
+
+    /// Number of dots stored (expanded).
+    pub fn len(&self) -> usize {
+        self.per_origin
+            .iter()
+            .flat_map(|(_, rs)| rs.iter())
+            .map(|&(lo, hi)| (hi - lo + 1) as usize)
+            .sum()
+    }
+
+    /// Number of `(lo, hi)` fragments held — the actual memory footprint
+    /// (the boundedness tests assert on this, not on [`Self::len`]).
+    pub fn fragments(&self) -> usize {
+        self.per_origin.iter().map(|(_, rs)| rs.len()).sum()
+    }
+
+    /// Iterate the stored dots (dependency enumeration).
+    pub fn iter(&self) -> impl Iterator<Item = Dot> + '_ {
+        self.per_origin.iter().flat_map(|&(o, ref rs)| {
+            rs.iter().flat_map(move |&(lo, hi)| (lo..=hi).map(move |s| Dot::new(o, s)))
+        })
+    }
+
+    /// Drop everything (a write supersedes the reads before it).
+    pub fn clear(&mut self) {
+        self.per_origin.clear();
+    }
+}
+
 /// Per-key conflict bookkeeping: dependencies are the most recent write and
 /// the reads since it (reads don't conflict with reads — the feature that
 /// gives EPaxos/Janus an edge on read-heavy workloads, §3.3 "Limitations").
+/// Reads are held as coalesced ranges ([`DotRanges`]) so write-free keys
+/// stay compact between GC rounds.
 #[derive(Clone, Debug, Default)]
 struct KeyDeps {
     last_write: Option<Dot>,
-    reads_since_write: Vec<Dot>,
+    reads_since_write: DotRanges,
 }
 
 #[derive(Clone, Debug)]
@@ -132,10 +257,11 @@ struct Info {
     bal: u64,
     coordinator: bool,
     decided: bool,
-    acks: Vec<(ProcessId, Vec<Dot>)>,
+    /// Quorum replies, holding the shared wire buffers directly.
+    acks: Vec<(ProcessId, Deps)>,
     consensus_acks: BTreeSet<ProcessId>,
     /// Committed dependency sets per accessed group.
-    group_deps: Vec<(ShardId, Vec<Dot>)>,
+    group_deps: Vec<(ShardId, Deps)>,
     /// Cross-group execution barrier.
     ready_acks: BTreeSet<ShardId>,
     announced: bool,
@@ -146,7 +272,7 @@ impl Info {
         Info {
             phase: Phase::Start,
             cmd: None,
-            quorums: Vec::new(),
+            quorums: Vec::new().into(),
             deps: Vec::new(),
             bal: 0,
             coordinator: false,
@@ -183,13 +309,21 @@ impl DepCore {
             assert_eq!(config.shards, 1, "EPaxos/Atlas are full-replication baselines");
         }
         let bp = BaseProcess::new(id, config);
-        let gc = GCTrack::new(id, bp.group_procs.clone());
+        // Stride-aware frontiers: a worker slot only ever sees dots of its
+        // own sequence stride (identity stride when unsharded).
+        let gc = GCTrack::strided(
+            id,
+            bp.group_procs.clone(),
+            bp.config.worker,
+            bp.config.workers,
+        );
+        let graph = DepGraph::strided(bp.config.worker, bp.config.workers);
         DepCore {
             bp,
             variant,
             conflicts: HashMap::new(),
             info: CommandsInfo::default(),
-            graph: DepGraph::default(),
+            graph,
             pending_roots: BTreeSet::new(),
             blocked_on: HashMap::new(),
             gc,
@@ -223,11 +357,11 @@ impl DepCore {
                 deps.push(w);
             }
             if write {
-                deps.extend(slot.reads_since_write.iter().copied());
+                deps.extend(slot.reads_since_write.iter());
                 slot.last_write = Some(dot);
                 slot.reads_since_write.clear();
             } else {
-                slot.reads_since_write.push(dot);
+                slot.reads_since_write.add(dot);
             }
         }
         deps.sort_unstable();
@@ -273,7 +407,8 @@ impl DepCore {
                     .collect();
                 (g, q)
             })
-            .collect();
+            .collect::<Vec<_>>()
+            .into();
         let coords: Vec<ProcessId> = groups
             .iter()
             .map(|&g| self.bp.config.closest_in_shard(self.bp.id, g))
@@ -297,14 +432,16 @@ impl DepCore {
         }
         let deps = self.conflicts_and_register(dot, &cmd);
         let me = self.bp.id;
+        // One shared buffer for the whole fast-quorum fan-out.
+        let shared: Deps = deps.clone().into();
         {
             let info = self.info.ensure(dot, Info::new);
             info.phase = Phase::Propose;
             info.cmd = Some(cmd.clone());
             info.quorums = quorums.clone();
-            info.deps = deps.clone();
+            info.deps = deps;
             info.coordinator = true;
-            info.acks.push((me, deps.clone()));
+            info.acks.push((me, shared.clone()));
         }
         let fq = self.fast_quorum_of(&self.info[&dot]).expect("own quorum");
         for &p in &fq {
@@ -315,7 +452,7 @@ impl DepCore {
                         dot,
                         cmd: cmd.clone(),
                         quorums: quorums.clone(),
-                        deps: deps.clone(),
+                        deps: shared.clone(),
                     },
                 ));
             }
@@ -339,7 +476,7 @@ impl DepCore {
         dot: Dot,
         cmd: Command,
         quorums: Quorums,
-        coord_deps: Vec<Dot>,
+        coord_deps: Deps,
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
@@ -349,18 +486,19 @@ impl DepCore {
             return;
         }
         let mut deps = self.conflicts_and_register(dot, &cmd);
-        deps.extend(coord_deps);
+        deps.extend(coord_deps.iter().copied());
         deps.sort_unstable();
         deps.dedup();
         deps.retain(|&d| d != dot);
+        let shared: Deps = deps.clone().into();
         {
             let info = self.info.ensure(dot, Info::new);
             info.phase = Phase::Propose;
             info.cmd = Some(cmd);
             info.quorums = quorums;
-            info.deps = deps.clone();
+            info.deps = deps;
         }
-        out.push(Action::send(from, Msg::MProposeAck { dot, deps }));
+        out.push(Action::send(from, Msg::MProposeAck { dot, deps: shared }));
         self.drain_stalled(dot, time, out);
     }
 
@@ -368,7 +506,7 @@ impl DepCore {
         &mut self,
         from: ProcessId,
         dot: Dot,
-        deps: Vec<Dot>,
+        deps: Deps,
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
@@ -417,7 +555,7 @@ impl DepCore {
             let fast = match variant {
                 // EPaxos: every reply reported the same dependencies.
                 Variant::EPaxos => info.acks.iter().all(|(_, d)| {
-                    let mut d = d.clone();
+                    let mut d = d.to_vec();
                     d.sort_unstable();
                     d == union
                 }),
@@ -432,6 +570,7 @@ impl DepCore {
             (union, fast, info.cmd.clone().unwrap())
         };
         let (deps, fast, cmd) = decision;
+        let deps: Deps = deps.into(); // one buffer for the whole fan-out
         if fast {
             self.counters.fast_path += 1;
             let targets = self.all_processes_of(&cmd);
@@ -449,7 +588,7 @@ impl DepCore {
         from: ProcessId,
         dot: Dot,
         group: ShardId,
-        deps: Vec<Dot>,
+        deps: Deps,
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
@@ -495,7 +634,7 @@ impl DepCore {
             info.group_deps
                 .iter()
                 .find(|(g, _)| *g == self.bp.group)
-                .map(|(_, d)| d.clone())
+                .map(|(_, d)| d.to_vec())
                 .unwrap_or_default()
         };
         {
@@ -520,7 +659,7 @@ impl DepCore {
         &mut self,
         from: ProcessId,
         dot: Dot,
-        deps: Vec<Dot>,
+        deps: Deps,
         bal: u64,
         _time: u64,
         out: &mut Vec<Action<Msg>>,
@@ -532,7 +671,7 @@ impl DepCore {
         if info.bal > bal {
             return;
         }
-        info.deps = deps;
+        info.deps = deps.to_vec();
         info.bal = bal;
         out.push(Action::send(from, Msg::MConsensusAck { dot, bal }));
     }
@@ -570,7 +709,7 @@ impl DepCore {
         };
         let group = self.bp.group;
         let targets = self.all_processes_of(&cmd);
-        self.broadcast(&targets, Msg::MCommit { dot, group, deps }, time, out);
+        self.broadcast(&targets, Msg::MCommit { dot, group, deps: deps.into() }, time, out);
     }
 
     // -- execution ----------------------------------------------------------
@@ -679,6 +818,11 @@ impl DepCore {
             keys: self.conflicts.len(),
             stalled: self.bp.stalled_len() + self.blocked_on.len(),
             queued: self.bp.batcher.queued(),
+            fragments: self
+                .conflicts
+                .values()
+                .map(|kd| kd.reads_since_write.fragments())
+                .sum(),
         }
     }
 }
@@ -690,8 +834,8 @@ impl GcProcess for DepCore {
 
     fn prune_executed(&mut self) {
         for (origin, lo, hi) in self.gc.safe_to_prune() {
-            for seq in lo..=hi {
-                let dot = Dot::new(origin, seq);
+            for idx in lo..=hi {
+                let dot = self.gc.dot_at(origin, idx);
                 // Scrub the conflict tables: a group-wide-executed command
                 // executed everywhere before any future conflicting command
                 // commits, so it need not appear as a dependency again (the
@@ -707,7 +851,7 @@ impl GcProcess for DepCore {
                         if slot.last_write == Some(dot) {
                             slot.last_write = None;
                         }
-                        slot.reads_since_write.retain(|&d| d != dot);
+                        slot.reads_since_write.remove(dot);
                         slot.last_write.is_none() && slot.reads_since_write.is_empty()
                     } else {
                         false
@@ -847,3 +991,90 @@ macro_rules! dep_protocol {
 dep_protocol!(EPaxos, Variant::EPaxos, "epaxos");
 dep_protocol!(Atlas, Variant::Atlas, "atlas");
 dep_protocol!(Janus, Variant::Janus, "janus*");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dot(p: u32, s: u64) -> Dot {
+        Dot::new(ProcessId(p), s)
+    }
+
+    #[test]
+    fn dot_ranges_coalesce_contiguous_reads() {
+        let mut r = DotRanges::default();
+        for s in 1..=1000u64 {
+            r.add(dot(0, s));
+        }
+        assert_eq!(r.len(), 1000);
+        assert_eq!(r.fragments(), 1, "a contiguous burst is one fragment");
+        // Out-of-order arrival still coalesces.
+        let mut r = DotRanges::default();
+        for s in [5u64, 3, 1, 4, 2] {
+            r.add(dot(0, s));
+        }
+        assert_eq!((r.len(), r.fragments()), (5, 1));
+    }
+
+    #[test]
+    fn dot_ranges_membership_is_exact() {
+        let mut r = DotRanges::default();
+        for s in [1u64, 2, 3, 7, 8, 20] {
+            r.add(dot(4, s));
+        }
+        r.add(dot(9, 2));
+        let mut got: Vec<Dot> = r.iter().collect();
+        got.sort_unstable();
+        let mut want: Vec<Dot> = [1u64, 2, 3, 7, 8, 20]
+            .iter()
+            .map(|&s| dot(4, s))
+            .chain(std::iter::once(dot(9, 2)))
+            .collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
+        assert_eq!(r.fragments(), 4);
+        // Duplicates are no-ops.
+        r.add(dot(4, 7));
+        assert_eq!(r.len(), 7);
+    }
+
+    #[test]
+    fn dot_ranges_remove_splits_and_drains() {
+        let mut r = DotRanges::default();
+        for s in 1..=5u64 {
+            r.add(dot(0, s));
+        }
+        r.remove(dot(0, 3)); // split 1..=5 → 1..=2, 4..=5
+        assert_eq!((r.len(), r.fragments()), (4, 2));
+        assert!(!r.iter().any(|d| d == dot(0, 3)));
+        r.remove(dot(0, 1)); // shrink left edge
+        r.remove(dot(0, 5)); // shrink right edge
+        assert_eq!((r.len(), r.fragments()), (2, 2));
+        r.remove(dot(0, 2));
+        r.remove(dot(0, 4));
+        assert!(r.is_empty(), "fully drained set must be empty");
+        // Removing absent dots is a no-op.
+        r.remove(dot(0, 9));
+        r.remove(dot(7, 1));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn write_free_key_state_is_bounded_by_fragments_not_reads() {
+        // The ROADMAP pathology: thousands of reads on a write-free key
+        // between GC rounds. Three origins issue contiguous read bursts;
+        // the per-key state must stay O(origins), not O(reads).
+        let mut slot = KeyDeps::default();
+        for origin in 0..3u32 {
+            for s in 1..=10_000u64 {
+                slot.reads_since_write.add(dot(origin, s));
+            }
+        }
+        assert_eq!(slot.reads_since_write.len(), 30_000);
+        assert!(
+            slot.reads_since_write.fragments() <= 3,
+            "write-free key fragmented: {} fragments for 30k reads",
+            slot.reads_since_write.fragments()
+        );
+    }
+}

@@ -296,6 +296,7 @@ impl Protocol for FPaxos {
             keys: 0,
             stalled: self.bp.stalled_len() + self.acks.len(),
             queued: self.bp.batcher.queued(),
+            fragments: 0,
         }
     }
 }

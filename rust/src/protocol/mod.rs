@@ -30,6 +30,10 @@ pub struct Footprint {
     pub stalled: usize,
     /// Outgoing messages currently held in the batcher's queues.
     pub queued: usize,
+    /// Range fragments held by compacted per-key read sets (the depsmr
+    /// `reads_since_write` ranges): the real memory cost of read tracking,
+    /// bounded by interleaving rather than read count.
+    pub fragments: usize,
 }
 
 /// Output of a protocol step.

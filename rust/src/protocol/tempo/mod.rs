@@ -28,7 +28,7 @@ pub mod msg;
 pub mod promises;
 
 use self::clock::Clock;
-use self::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums};
+use self::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums, SharedPromises};
 use self::promises::{PromiseSet, PromiseStore};
 use super::common::{BaseProcess, CommandsInfo, GCTrack, GcProcess, Process};
 use super::{ballot, Action, Footprint, Protocol};
@@ -99,7 +99,7 @@ impl Info {
         Info {
             phase: Phase::Start,
             cmd: None,
-            quorums: Vec::new(),
+            quorums: Vec::new().into(),
             ts: Vec::new(),
             final_ts: 0,
             bal: 0,
@@ -189,7 +189,7 @@ impl Tempo {
     /// Incorporate a per-key promise batch from `source`, gating attached
     /// promises on local commits (Algorithm 2 line 47). Promises attached
     /// to group-wide-executed (GC'd) commands count as committed.
-    fn add_promises(&mut self, source: ProcessId, batches: &KeyPromises, time: u64) {
+    fn add_promises(&mut self, source: ProcessId, batches: &[(Key, PromiseSet)], time: u64) {
         let majority = self.bp.config.majority();
         let shards = self.bp.config.shards;
         let group = self.bp.group;
@@ -449,7 +449,7 @@ impl Tempo {
             let targets = self.all_processes_of(&cmd);
             self.broadcast(
                 &targets,
-                Msg::MCommit { dot, group, ts, promises: collected },
+                Msg::MCommit { dot, group, ts, promises: collected.into() },
                 time,
                 out,
             );
@@ -468,14 +468,15 @@ impl Tempo {
         dot: Dot,
         group: ShardId,
         ts: KeyTs,
-        promises: Vec<(ProcessId, KeyPromises)>,
+        promises: msg::Collected,
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
         // Incorporate the piggybacked promise batches (our keys only).
-        for (src, batches) in &promises {
-            let b = batches.clone();
-            self.add_promises(*src, &b, time);
+        // `promises` is a shared (Arc) buffer owned by this call frame, so
+        // ingesting it borrows rather than deep-copying per source.
+        for (src, batches) in promises.iter() {
+            self.add_promises(*src, batches, time);
         }
         if self.gc.was_executed(dot) {
             return; // late duplicate for a long-executed, GC'd command
@@ -617,7 +618,12 @@ impl Tempo {
         };
         let group = self.bp.group;
         let targets = self.all_processes_of(&cmd);
-        self.broadcast(&targets, Msg::MCommit { dot, group, ts, promises: collected }, time, out);
+        self.broadcast(
+            &targets,
+            Msg::MCommit { dot, group, ts, promises: collected.into() },
+            time,
+            out,
+        );
     }
 
     // ------------------------------------------------------------------
@@ -751,7 +757,7 @@ impl Tempo {
     fn handle_promises(
         &mut self,
         from: ProcessId,
-        promises: KeyPromises,
+        promises: SharedPromises,
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
@@ -803,8 +809,8 @@ impl GcProcess for Tempo {
         }
         let mut pruned: HashSet<Dot> = HashSet::new();
         for (origin, lo, hi) in ranges {
-            for seq in lo..=hi {
-                let dot = Dot::new(origin, seq);
+            for idx in lo..=hi {
+                let dot = self.gc.dot_at(origin, idx);
                 if self.info.prune(&dot) {
                     self.counters.gc_pruned += 1;
                 }
@@ -1127,7 +1133,14 @@ impl Protocol for Tempo {
 
     fn new(id: ProcessId, config: Config) -> Self {
         let bp = BaseProcess::new(id, config);
-        let gc = GCTrack::new(id, bp.group_procs.clone());
+        // Stride-aware executed frontier: a worker slot sees only the dots
+        // of its own sequence stride (identity stride when unsharded).
+        let gc = GCTrack::strided(
+            id,
+            bp.group_procs.clone(),
+            bp.config.worker,
+            bp.config.workers,
+        );
         Tempo {
             bp,
             keys: HashMap::new(),
@@ -1168,7 +1181,8 @@ impl Protocol for Tempo {
                 let coord = self.bp.config.closest_in_shard(self.bp.id, g);
                 (g, self.bp.config.fast_quorum(coord))
             })
-            .collect();
+            .collect::<Vec<_>>()
+            .into();
         let coords: Vec<ProcessId> = groups
             .iter()
             .map(|&g| self.bp.config.closest_in_shard(self.bp.id, g))
@@ -1209,9 +1223,12 @@ impl Protocol for Tempo {
             if !batches.is_empty() {
                 let me = self.bp.id;
                 self.add_promises(me, &batches, time);
+                // Share one buffer across the group fan-out: per-peer
+                // clones bump a refcount instead of copying the batches.
+                let shared: SharedPromises = batches.into();
                 for p in self.bp.group_procs.clone() {
                     if p != me {
-                        out.push(Action::send(p, Msg::MPromises { promises: batches.clone() }));
+                        out.push(Action::send(p, Msg::MPromises { promises: shared.clone() }));
                     }
                 }
             }
@@ -1230,9 +1247,10 @@ impl Protocol for Tempo {
             }
             if !full.is_empty() {
                 full.sort_unstable_by_key(|&(k, _)| k);
+                let shared: SharedPromises = full.into();
                 for p in self.bp.group_procs.clone() {
                     if p != self.bp.id {
-                        out.push(Action::send(p, Msg::MPromises { promises: full.clone() }));
+                        out.push(Action::send(p, Msg::MPromises { promises: shared.clone() }));
                     }
                 }
             }
@@ -1320,6 +1338,7 @@ impl Protocol for Tempo {
             keys: self.keys.len(),
             stalled: self.bp.stalled_len() + self.missing.len(),
             queued: self.bp.batcher.queued(),
+            fragments: 0,
         }
     }
 }

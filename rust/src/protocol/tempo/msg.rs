@@ -12,15 +12,31 @@
 
 use super::promises::PromiseSet;
 use crate::core::{Command, Dot, Key, ProcessId, ShardId};
+use std::sync::Arc;
 
-/// Fast-quorum mapping `Q`: the fast quorum chosen per accessed shard group.
-pub type Quorums = Vec<(ShardId, Vec<ProcessId>)>;
+/// Fast-quorum mapping `Q`: the fast quorum chosen per accessed shard
+/// group. `Arc`-backed: the mapping rides inside `MSubmit`, `MPropose`
+/// and `MPayload`, which fan out to every group member — cloning the
+/// message per peer must share the mapping, not deep-copy it.
+pub type Quorums = Arc<[(ShardId, Vec<ProcessId>)]>;
 
-/// Per-key timestamps for the keys of one group.
+/// Per-key timestamps for the keys of one group (small: one entry per
+/// key the command touches at the group, so messages carry it by value).
 pub type KeyTs = Vec<(Key, u64)>;
 
-/// Per-key promise batches.
+/// Per-key promise batches (built locally, shipped point-to-point in
+/// `MProposeAck`).
 pub type KeyPromises = Vec<(Key, PromiseSet)>;
+
+/// Per-key promise batches shared across a fan-out: `MPromises` goes to
+/// every group peer and promise histories can be large, so broadcast
+/// messages share one buffer instead of deep-copying per peer.
+pub type SharedPromises = Arc<[(Key, PromiseSet)]>;
+
+/// The promise batches a coordinator collected from its fast quorum,
+/// rebroadcast to every process in `MCommit` (§3.2 piggybacking) —
+/// `Arc`-backed for the same zero-clone fan-out reason.
+pub type Collected = Arc<[(ProcessId, KeyPromises)]>;
 
 /// Command phase at a process (paper Figure 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,7 +75,7 @@ pub enum Msg {
     MPayload { dot: Dot, cmd: Command, quorums: Quorums },
     /// Group coordinator → `I_c`: per-key timestamps decided at this group,
     /// with the promise batches collected from the fast quorum.
-    MCommit { dot: Dot, group: ShardId, ts: KeyTs, promises: Vec<(ProcessId, KeyPromises)> },
+    MCommit { dot: Dot, group: ShardId, ts: KeyTs, promises: Collected },
     /// Catch-up commit (reply to MCommitRequest): payload + final
     /// timestamp in one step (§B liveness, condensing MPayload+MCommit).
     MCommitDirect { dot: Dot, cmd: Command, quorums: Quorums, final_ts: u64 },
@@ -67,8 +83,9 @@ pub enum Msg {
     /// per-key timestamps of this group.
     MConsensus { dot: Dot, ts: KeyTs, bal: u64 },
     MConsensusAck { dot: Dot, bal: u64 },
-    /// Periodic promise broadcast within the group (per-key deltas).
-    MPromises { promises: KeyPromises },
+    /// Periodic promise broadcast within the group (per-key deltas),
+    /// shared across the group fan-out.
+    MPromises { promises: SharedPromises },
     /// Faster multi-partition stability (§4): a fast-quorum process tells
     /// co-located replicas of sibling groups to bump their clocks to its
     /// highest proposal.
@@ -111,7 +128,7 @@ impl Msg {
     /// resource model (header + payload-bearing fields).
     pub fn wire_size(&self) -> u64 {
         use crate::protocol::common::wire::{key_vals, proc_vals, HDR};
-        fn kp_size(kp: &KeyPromises) -> u64 {
+        fn kp_size(kp: &[(Key, PromiseSet)]) -> u64 {
             kp.iter()
                 .map(|(_, p)| 8 + 16 * (p.detached.len() + p.attached.len()) as u64)
                 .sum()

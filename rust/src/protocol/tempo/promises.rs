@@ -30,14 +30,37 @@ pub struct PromiseSet {
     pub attached: Vec<(Dot, u64)>,
 }
 
+/// Merge auto-compaction granularity: [`PromiseSet::merge`] coalesces the
+/// set whenever the detached range list crosses a multiple of this many
+/// fragments. Long-lived promise histories (the §B full re-broadcast set)
+/// therefore stay compact even when callers never invoke
+/// [`PromiseSet::coalesce`] — without it a history merged once per tick
+/// grew by one fragment per delta forever.
+const AUTO_COALESCE_FRAGMENTS: usize = 32;
+
 impl PromiseSet {
     pub fn is_empty(&self) -> bool {
         self.detached.is_empty() && self.attached.is_empty()
     }
 
+    /// Fold `other` into this set. Self-compacting: a merge that crosses
+    /// a multiple of [`AUTO_COALESCE_FRAGMENTS`] triggers
+    /// [`PromiseSet::coalesce`], so merge-heavy call sites stay O(live
+    /// ranges) without calling it themselves. Firing on boundary
+    /// *crossings* (not on size alone) keeps the cost amortized: a set
+    /// whose ranges are genuinely disjoint (incompressible) pays the
+    /// O(n log n) sort once per 32 merges, not on every merge, while the
+    /// list stays within one granule of its live size.
     pub fn merge(&mut self, other: &PromiseSet) {
+        let before = self.detached.len();
         self.detached.extend_from_slice(&other.detached);
         self.attached.extend_from_slice(&other.attached);
+        let after = self.detached.len();
+        if after >= AUTO_COALESCE_FRAGMENTS
+            && after / AUTO_COALESCE_FRAGMENTS > before / AUTO_COALESCE_FRAGMENTS
+        {
+            self.coalesce();
+        }
     }
 
     /// Coalesce overlapping/adjacent detached ranges and dedup attached
@@ -302,6 +325,40 @@ mod tests {
         assert_eq!(s.gated_dots().collect::<Vec<_>>(), vec![dot]);
         s.on_commit(dot);
         assert_eq!(s.gated_dots().count(), 0);
+    }
+
+    #[test]
+    fn merge_auto_coalesces_growing_histories() {
+        // Simulates the §B history path without any explicit coalesce():
+        // one adjacent delta merged per tick. The fragment list must stay
+        // below the auto-coalesce threshold instead of growing linearly.
+        let mut history = PromiseSet::default();
+        for i in 1..=10_000u64 {
+            let delta = PromiseSet { detached: vec![(i, i)], attached: vec![] };
+            history.merge(&delta);
+            assert!(
+                history.detached.len() <= AUTO_COALESCE_FRAGMENTS,
+                "history fragmented: {} ranges after {i} merges",
+                history.detached.len()
+            );
+        }
+        // All 10k adjacent singletons collapse to one range in the end.
+        history.coalesce();
+        assert_eq!(history.detached, vec![(1, 10_000)]);
+    }
+
+    #[test]
+    fn merge_auto_coalesce_preserves_disjoint_ranges() {
+        // Genuinely disjoint ranges must survive auto-coalescing intact.
+        let mut s = PromiseSet::default();
+        for i in 0..100u64 {
+            let lo = i * 10 + 1; // 1..=5, 11..=15, ... (real gaps in between)
+            let delta = PromiseSet { detached: vec![(lo, lo + 4)], attached: vec![] };
+            s.merge(&delta);
+        }
+        s.coalesce();
+        assert_eq!(s.detached.len(), 100, "disjoint ranges must not be merged away");
+        assert!(s.detached.iter().all(|&(lo, hi)| hi - lo == 4));
     }
 
     #[test]

@@ -47,7 +47,7 @@ impl KvStore {
     pub fn execute(&mut self, cmd: &Command) -> Response {
         self.applied += 1;
         let mut versions = Vec::with_capacity(cmd.keys.len());
-        for &k in &cmd.keys {
+        for &k in cmd.keys.iter() {
             let v = self.data.entry(k).or_default();
             match cmd.op {
                 Op::Get => versions.push((k, v.version)),

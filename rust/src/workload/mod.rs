@@ -52,6 +52,32 @@ impl Workload for ConflictWorkload {
     }
 }
 
+/// Single-key zipfian workload: every command writes one key drawn from a
+/// zipf(θ) distribution over `n_keys` keys. The worker-scaling benches
+/// use it because contention is tunable through θ while every command
+/// trivially lives inside one worker slot (`protocol::common::shard`).
+#[derive(Clone, Debug)]
+pub struct ZipfWorkload {
+    zipf: Zipf,
+    /// Payload carried by each command, in bytes.
+    pub payload_len: u32,
+}
+
+impl ZipfWorkload {
+    /// Single-key Put workload over `n_keys` keys at skew `theta`
+    /// (0 = uniform / low contention; 0.99 = YCSB-hot / high contention).
+    pub fn new(n_keys: u64, theta: f64, payload_len: u32) -> Self {
+        Self { zipf: Zipf::new(n_keys, theta), payload_len }
+    }
+}
+
+impl Workload for ZipfWorkload {
+    fn next(&mut self, _client: ClientId, rng: &mut Rng) -> CommandSpec {
+        let key = self.zipf.sample(rng);
+        CommandSpec { keys: vec![key], op: Op::Put, payload_len: self.payload_len }
+    }
+}
+
 /// YCSB+T (§6.4): every transaction accesses two keys drawn from a
 /// scrambled-zipfian distribution; a fraction `write_ratio` of commands are
 /// updates (read-modify-write), the rest reads. Workloads A/B/C of YCSB
@@ -140,6 +166,18 @@ mod tests {
         let a = w.next(ClientId(1), &mut rng).keys[0];
         let b = w.next(ClientId(2), &mut rng).keys[0];
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn zipf_workload_is_single_key_and_in_range() {
+        let mut w = ZipfWorkload::new(1_000, 0.99, 64);
+        let mut rng = Rng::new(5);
+        for _ in 0..1_000 {
+            let spec = w.next(ClientId(1), &mut rng);
+            assert_eq!(spec.keys.len(), 1);
+            assert!(spec.keys[0] < 1_000);
+            assert_eq!(spec.op, Op::Put);
+        }
     }
 
     #[test]

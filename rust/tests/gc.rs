@@ -5,14 +5,15 @@
 //! executed commands when GC is on, and provably grow when it is off.
 
 use tempo::check::assert_psmr;
-use tempo::core::Config;
+use tempo::core::{ClientId, Config, Op};
 use tempo::protocol::caesar::Caesar;
 use tempo::protocol::depsmr::{Atlas, EPaxos};
 use tempo::protocol::fpaxos::FPaxos;
 use tempo::protocol::tempo::Tempo;
 use tempo::protocol::Protocol;
 use tempo::sim::{run, SimOpts, SimResult, Topology};
-use tempo::workload::ConflictWorkload;
+use tempo::util::Rng;
+use tempo::workload::{CommandSpec, ConflictWorkload, Workload};
 
 fn opts(seed: u64) -> SimOpts {
     let mut o = SimOpts::new(Topology::ec2_three());
@@ -124,6 +125,42 @@ fn fpaxos_log_stays_bounded_under_gc() {
     let result = run::<FPaxos, _>(config.clone(), opts(86), ConflictWorkload::new(0.2, 100));
     assert_psmr(&config, &result, true);
     assert_bounded(&result, 400);
+}
+
+/// Every client reads the same hot key forever — the regime where
+/// `reads_since_write` used to grow without bound between GC rounds
+/// (ROADMAP PR 1 item).
+#[derive(Clone)]
+struct HotKeyReads;
+
+impl Workload for HotKeyReads {
+    fn next(&mut self, _client: ClientId, _rng: &mut Rng) -> CommandSpec {
+        CommandSpec { keys: vec![0], op: Op::Get, payload_len: 16 }
+    }
+}
+
+#[test]
+fn read_heavy_hot_key_state_is_bounded_by_fragments() {
+    // GC off: nothing scrubs the read sets, so the *representation* alone
+    // must bound memory. Each origin's reads on the hot key carry
+    // contiguous sequence numbers (every command of the run touches it),
+    // so the coalesced ranges collapse to a handful of fragments per
+    // replica while the read count grows with the run.
+    let config = Config::new(3, 1).with_gc_interval_ticks(0);
+    let mut o = opts(90);
+    o.duration_us = 6_000_000;
+    let result = run::<EPaxos, _>(config.clone(), o, HotKeyReads);
+    let ops = result.metrics.ops as usize;
+    assert!(ops > 400, "need real read traffic, ops={ops}");
+    assert_psmr(&config, &result, true);
+    for (p, fp) in result.footprints.iter().enumerate() {
+        assert!(
+            fp.fragments <= 3 * 4,
+            "P{p} holds {} read-range fragments after {ops} reads — \
+             reads_since_write is growing again",
+            fp.fragments
+        );
+    }
 }
 
 #[test]

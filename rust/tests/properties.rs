@@ -230,7 +230,8 @@ fn prop_wire_decode_never_panics_on_corrupt_input() {
                         detached: vec![(1, rng.gen_range(50) + 1)],
                         attached: vec![(dot, rng.gen_range(50) + 1)],
                     },
-                )],
+                )]
+                .into(),
             },
             3 => Msg::MBatch {
                 msgs: vec![
@@ -270,8 +271,13 @@ fn prop_wire_codec_roundtrips_random_messages() {
             let ts: Vec<(u64, u64)> =
                 keys.iter().map(|&k| (k, rng.gen_range(1 << 16))).collect();
             match rng.gen_range(4) {
-                0 => Msg::MPropose { dot, cmd, quorums: vec![], ts },
-                1 => Msg::MCommit { dot, group: tempo::core::ShardId(0), ts, promises: vec![] },
+                0 => Msg::MPropose { dot, cmd, quorums: vec![].into(), ts },
+                1 => Msg::MCommit {
+                    dot,
+                    group: tempo::core::ShardId(0),
+                    ts,
+                    promises: vec![].into(),
+                },
                 2 => Msg::MProposeAck {
                     dot,
                     ts,
