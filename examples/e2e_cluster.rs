@@ -5,11 +5,22 @@
 //! client is a `TcpClient` session on its own socket, sending
 //! `ClientSubmit` frames (docs/WIRE.md tag 17) and blocking for the
 //! matching `ClientReply` (tag 18). We report throughput and the latency
-//! distribution, verify the replicas' stores converged, and — the
-//! response-validity half — check a sequential client's responses
-//! byte-for-byte against a local KvStore oracle.
+//! distribution, verify the replicas' stores converged (Merkle-rooted
+//! per-slot digests), check the steady-state frame pool actually hits,
+//! and — the response-validity half — check a sequential client's
+//! responses byte-for-byte against a local KvStore oracle.
 //!
 //! Run with: `cargo run --release --example e2e_cluster`
+//!
+//! **`--sweep-workers`**: the e2e TCP benchmark the deterministic
+//! simulator cannot provide (it drives worker slots round-robin on one
+//! thread): boot the same cluster at `--workers` 1/2/4 with per-slot
+//! batching on, drive pipelined load over real sockets, and report
+//! ops/s plus the byte-path counters — `frames_merged` verifying that
+//! the per-peer outbound merger collapses the ≤ workers per-slot MBatch
+//! flushes of a tick back into ~1 wire frame per (peer, tick),
+//! regardless of `--workers`.
+//!
 //! Results recorded in EXPERIMENTS.md §E2E.
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -18,19 +29,15 @@ use std::time::{Duration, Instant};
 use tempo::client::Session;
 use tempo::core::{ClientId, Command, Config, Op, ProcessId};
 use tempo::metrics::Histogram;
-use tempo::net::{local_addrs, start_node, TcpClient};
+use tempo::net::{local_addrs, start_node, NodeHandle, TcpClient};
 use tempo::store::KvStore;
 use tempo::util::{Rng, Zipf};
 
-fn main() -> tempo::util::error::Result<()> {
-    let r = 3;
-    // Two worker slots per node: each node runs one protocol thread per
-    // slot, peer frames carry the worker envelope (WIRE.md tag 19), and
-    // clients route by key hash — all exercised under real TCP here.
-    let config = Config::new(r, 1).with_tick_interval_us(1_000).with_workers(2);
+fn boot_cluster(
+    r: usize,
+    config: &Config,
+) -> tempo::util::error::Result<(Vec<NodeHandle>, Vec<String>)> {
     let addrs = local_addrs(r)?;
-    println!("starting {r}-node Tempo cluster (2 worker slots each) on {addrs:?}");
-
     // Nodes dial each other inside start_node, so they must boot in
     // parallel (like real processes would).
     let nodes: Vec<_> = (0..r as u32)
@@ -47,20 +54,23 @@ fn main() -> tempo::util::error::Result<()> {
         .map(|t| t.join().unwrap())
         .collect();
     std::thread::sleep(Duration::from_millis(300)); // mesh up
+    Ok((nodes, addrs))
+}
 
-    // Closed-loop TCP clients: 8 per node, each a real socket speaking
-    // ClientSubmit/ClientReply; zipfian keys, 50% RMW.
-    let clients_per_node = 8;
-    let duration = Duration::from_secs(10);
+/// Closed-loop zipfian load from `clients_per_node` TCP clients per node
+/// for `duration`; returns total completed ops.
+fn drive_load(
+    addrs: &[String],
+    clients_per_node: usize,
+    duration: Duration,
+    hist: Option<&Arc<std::sync::Mutex<Histogram>>>,
+) -> u64 {
     let ops = Arc::new(AtomicU64::new(0));
-    let hist = Arc::new(std::sync::Mutex::new(Histogram::new()));
     let deadline = Instant::now() + duration;
-
     std::thread::scope(|scope| {
         for (n, addr) in addrs.iter().enumerate() {
             for c in 0..clients_per_node {
                 let ops = ops.clone();
-                let hist = hist.clone();
                 scope.spawn(move || {
                     let client = ClientId((n * 100 + c) as u64);
                     let mut tc = match TcpClient::connect(addr, client) {
@@ -77,7 +87,11 @@ fn main() -> tempo::util::error::Result<()> {
                         match tc.submit_single(key, op, 100) {
                             Ok(_) => {
                                 ops.fetch_add(1, Ordering::Relaxed);
-                                hist.lock().unwrap().record(t0.elapsed().as_micros() as u64);
+                                if let Some(h) = hist {
+                                    h.lock()
+                                        .unwrap()
+                                        .record(t0.elapsed().as_micros() as u64);
+                                }
                             }
                             Err(e) => {
                                 eprintln!("client {client:?}: {e:#}; stopping");
@@ -89,8 +103,100 @@ fn main() -> tempo::util::error::Result<()> {
             }
         }
     });
+    ops.load(Ordering::Relaxed)
+}
 
-    let total = ops.load(Ordering::Relaxed);
+/// `--sweep-workers`: real-thread scaling + frame-merging validation
+/// over TCP, the measurement the single-threaded simulator cannot make.
+fn sweep_workers() -> tempo::util::error::Result<()> {
+    let r = 3usize;
+    let duration = Duration::from_secs(3);
+    let clients_per_node = 8;
+    println!(
+        "--- e2e --sweep-workers ({r} nodes, {} closed-loop TCP clients, \
+         {}s per cell, per-slot batching on) ---",
+        r * clients_per_node,
+        duration.as_secs()
+    );
+    println!(
+        "{:>7} {:>10} {:>12} {:>12} {:>14} {:>12}",
+        "workers", "ops/s", "wire frames", "merged away", "members/frame", "pool hit%"
+    );
+    for workers in [1usize, 2, 4] {
+        // Batching gives each worker slot one MBatch per (peer, tick);
+        // the per-peer merger below the slots must then restore ~one
+        // frame per (peer, tick) regardless of the worker count.
+        let config = Config::new(r, 1)
+            .with_tick_interval_us(1_000)
+            .with_workers(workers)
+            .with_batching(64);
+        // Pool counters are process-wide and monotone; snapshot before
+        // the cell so the hit rate below is this cell's alone.
+        let hits0 = tempo::net::wire::pool_stats::hits();
+        let misses0 = tempo::net::wire::pool_stats::misses();
+        let (nodes, addrs) = boot_cluster(r, &config)?;
+        let total = drive_load(&addrs, clients_per_node, duration, None);
+        std::thread::sleep(Duration::from_millis(500)); // drain
+        let mut wire_frames = 0u64;
+        let mut merged = 0u64;
+        for n in &nodes {
+            wire_frames += n.wire_frames();
+            merged += n.counters().frames_merged;
+        }
+        let pool_pct = {
+            let hits = (tempo::net::wire::pool_stats::hits() - hits0) as f64;
+            let misses = (tempo::net::wire::pool_stats::misses() - misses0) as f64;
+            100.0 * hits / (hits + misses).max(1.0)
+        };
+        let members_per_frame = (wire_frames + merged) as f64 / wire_frames.max(1) as f64;
+        println!(
+            "{workers:>7} {:>10.0} {wire_frames:>12} {merged:>12} \
+             {members_per_frame:>14.2} {pool_pct:>11.1}%",
+            total as f64 / duration.as_secs_f64()
+        );
+        assert!(total > 0, "no ops at workers={workers}");
+        if workers > 1 {
+            // The acceptance claim: per-worker batchers emit up to
+            // `workers` MBatch frames per (peer, tick); the per-peer
+            // merger coalesces them, so merged frames must be observed
+            // and carry >1 member on average once slots multiply.
+            assert!(
+                merged > 0,
+                "workers={workers}: the per-peer merger never coalesced frames"
+            );
+        }
+        for n in nodes {
+            n.shutdown();
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    println!(
+        "sweep OK: members/frame grows with --workers while wire frames per \
+         (peer, tick) stay ~1 — the merger undoes the per-slot frame split."
+    );
+    Ok(())
+}
+
+fn main() -> tempo::util::error::Result<()> {
+    if std::env::args().any(|a| a == "--sweep-workers") {
+        sweep_workers()?;
+        std::process::exit(0); // acceptor threads block on listener
+    }
+    let r = 3;
+    // Two worker slots per node: each node runs one protocol thread per
+    // slot, peer frames carry the worker envelope (WIRE.md tag 19), and
+    // clients route by key hash — all exercised under real TCP here.
+    let config = Config::new(r, 1).with_tick_interval_us(1_000).with_workers(2);
+    println!("starting {r}-node Tempo cluster (2 worker slots each)");
+    let (nodes, addrs) = boot_cluster(r, &config)?;
+
+    // Closed-loop TCP clients: 8 per node, each a real socket speaking
+    // ClientSubmit/ClientReply; zipfian keys, 50% RMW.
+    let clients_per_node = 8;
+    let duration = Duration::from_secs(10);
+    let hist = Arc::new(std::sync::Mutex::new(Histogram::new()));
+    let total = drive_load(&addrs, clients_per_node, duration, Some(&hist));
+
     let h = hist.lock().unwrap();
     let t = h.tail_summary();
     println!(
@@ -151,15 +257,38 @@ fn main() -> tempo::util::error::Result<()> {
     assert_eq!(pc.in_flight(), 0);
     println!("  pipelining: {window} requests in flight on one session, all completed");
 
-    // Let in-flight work drain, then verify convergence.
+    // Let in-flight work drain, then verify convergence: the Merkle root
+    // over the per-worker-slot digests (equal roots ⇔ equal slot
+    // partitions; a mismatch would localize via store_digests()).
     std::thread::sleep(Duration::from_millis(800));
     let digests: Vec<(u64, u64)> =
         nodes.iter().map(|n| (n.executed(), n.store_digest())).collect();
-    println!("  per-node (executed, digest): {digests:x?}");
+    println!("  per-node (executed, merkle root): {digests:x?}");
+    println!("  node-0 per-slot leaves: {:x?}", nodes[0].store_digests());
     let counters = nodes[0].counters();
     println!(
-        "  node-0 counters: fast={} slow={} executed={}",
-        counters.fast_path, counters.slow_path, counters.executed
+        "  node-0 counters: fast={} slow={} executed={} bytes_sent={} \
+         frames_merged={} pooled_hits={}",
+        counters.fast_path,
+        counters.slow_path,
+        counters.executed,
+        counters.bytes_sent,
+        counters.frames_merged,
+        counters.pooled_hits
+    );
+
+    // Steady-state frames must hit the pool: after tens of thousands of
+    // frames over these connections, reads land in recycled capacity —
+    // the per-frame allocation the seed paid is gone.
+    let hits = counters.pooled_hits;
+    let misses = tempo::net::wire::pool_stats::misses();
+    assert!(
+        hits > 1_000 && hits > 10 * misses.max(1),
+        "frame pool barely hitting: {hits} hits vs {misses} misses"
+    );
+    println!(
+        "  frame pool: {hits} hits / {misses} misses ({:.2}% hit rate)",
+        100.0 * hits as f64 / (hits + misses).max(1) as f64
     );
 
     let max_exec = digests.iter().map(|&(e, _)| e).max().unwrap();

@@ -10,6 +10,12 @@ Validates the recorded BENCH_*.json baselines at the repo root:
 - BENCH_workers.json: must exist with ops/s and allocations-per-op for
   workers 1, 2 and 4 under both contention levels.
 - BENCH_batching.json: must exist with both throughput numbers.
+- BENCH_wire.json: the encode-once fan-out must stay O(1) — for every
+  message shape, ``encode_once_allocs_per_op`` at fan-out 8 must be at
+  most fan-out 1 + 2 (an O(1) slack), and ``encode_once_ns_per_op`` at
+  fan-out 8 must not exceed 2x fan-out 1 (flat serialize cost), while
+  the recorded legacy path documents the fan-out-proportional cost the
+  runtime no longer pays.
 
 Exit code 0 = all gates pass; 1 = a gate failed (CI turns red).
 Run from anywhere: ``python3 python/bench/check_bench.py``.
@@ -67,6 +73,31 @@ def main():
         if "allocs_per_op" not in c:
             fail(f"BENCH_workers.json cell {c} lacks allocs_per_op")
     print(f"workers: {len(cells)} cells with ops/s and allocs/op ok")
+
+    wire = load("BENCH_wire.json")
+    msgs = wire.get("messages", [])
+    if not msgs:
+        fail("BENCH_wire.json has no message cells")
+    for m in msgs:
+        cells = {c["fanout"]: c for c in m.get("fanout_cells", [])}
+        for fanout in (1, 4, 8):
+            if fanout not in cells:
+                fail(f"BENCH_wire.json {m.get('msg')} missing fanout={fanout}")
+        a1 = float(cells[1]["encode_once_allocs_per_op"])
+        a8 = float(cells[8]["encode_once_allocs_per_op"])
+        if a8 > a1 + 2.0:
+            fail(
+                f"BENCH_wire.json {m['msg']}: encode-once allocs/op grew with "
+                f"fan-out ({a1} -> {a8}) — the shared-body path regressed"
+            )
+        n1 = float(cells[1]["encode_once_ns_per_op"])
+        n8 = float(cells[8]["encode_once_ns_per_op"])
+        if n8 > 2.0 * n1:
+            fail(
+                f"BENCH_wire.json {m['msg']}: encode-once ns/op not flat "
+                f"({n1} -> {n8} across fan-out 1 -> 8)"
+            )
+    print(f"wire: {len(msgs)} message shapes, encode-once flat across fan-out ok")
 
     batching = load("BENCH_batching.json")
     if "unbatched_ops_per_s" in batching:

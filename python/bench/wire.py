@@ -355,6 +355,8 @@ def _decode_at(r):
                 raise WireError(f"client frame tag {body[0]} inside MBatch")
             if body[:1] == b"\x13":
                 raise WireError("routed envelope inside MBatch")
+            if body[:1] == b"\x14":
+                raise WireError("merged frame inside MBatch")
             sub = Reader(body)
             inner = _decode_at(sub)
             if sub.pos != length:
@@ -367,6 +369,8 @@ def _decode_at(r):
         raise WireError(f"client frame tag {tag} in protocol stream")
     if tag == 19:
         raise WireError("routed envelope where a bare protocol message was expected")
+    if tag == 20:
+        raise WireError("merged frame where a bare protocol message was expected")
     raise WireError(f"bad message tag {tag}")
 
 
@@ -388,6 +392,47 @@ def decode_routed(buf):
         raise WireError(f"expected routed frame tag 19, got {tag}")
     worker = r.u8()
     return worker, _decode_at(r)
+
+
+def encode_merged(bodies):
+    """Encode the merged transport frame (tag 20, docs/WIRE.md):
+    ``[20][n: u16][n x (len: u32, routed envelope bytes)]`` — the
+    per-peer outbound merger's frame, coalescing several already-encoded
+    routed envelopes bound for one peer. Members are referenced as-is:
+    merging never re-serializes (the Rust writer emits these exact bytes
+    with one vectored write)."""
+    w = Writer()
+    w.u8(20)
+    w.u16(len(bodies))
+    for b in bodies:
+        w.u32(len(b))
+        w.parts.append(b)
+    return w.bytes()
+
+
+def decode_merged(buf):
+    """Decode a merged frame into its ``[(worker, msg), ...]`` members,
+    in wire order. Every member must be a routed envelope consuming its
+    declared length exactly."""
+    r = Reader(buf)
+    tag = r.u8()
+    if tag != 20:
+        raise WireError(f"expected merged frame tag 20, got {tag}")
+    members = []
+    for _ in range(r.u16()):
+        length = r.u32()
+        body = r.take(length)
+        sub = Reader(body)
+        if sub.u8() != 19:
+            raise WireError("merged member is not a routed envelope")
+        worker = sub.u8()
+        msg = _decode_at(sub)
+        if sub.pos != length:
+            raise WireError(
+                f"merged member declared {length} bytes, used {sub.pos}"
+            )
+        members.append((worker, msg))
+    return members
 
 
 def self_check():
@@ -518,6 +563,49 @@ def self_check():
         raise AssertionError("routed envelope inside MBatch decoded")
     except WireError:
         pass
+    # Merged transport frame (tag 20): members are routed envelopes,
+    # recovered in wire order (per-slot send order is preserved);
+    # truncation, non-routed members, padding and nesting all reject.
+    members = [
+        (0, {"t": "MStable", "dot": dot}),
+        (1, {"t": "MBatch", "msgs": [{"t": "MBump", "dot": dot, "ts": 9},
+                                     {"t": "MStable", "dot": dot}]}),
+        (0, {"t": "MRec", "dot": dot, "bal": 3}),
+    ]
+    bodies = [encode_routed(w, m) for w, m in members]
+    frame = encode_merged(bodies)
+    assert frame[0] == 20
+    assert decode_merged(frame) == members, "merged members must round-trip in order"
+    for cut in range(len(frame)):
+        try:
+            decode_merged(frame[:cut])
+            raise AssertionError(f"truncated merged frame decoded at {cut}")
+        except WireError:
+            pass
+    for bad_ctx in (decode, decode_routed):
+        try:
+            bad_ctx(frame)
+            raise AssertionError("merged frame decoded outside its position")
+        except WireError:
+            pass
+    b = Writer()
+    b.u8(16), b.u16(1), b.u32(len(frame))
+    b.parts.append(frame)
+    try:
+        decode(b.bytes())
+        raise AssertionError("merged frame inside MBatch decoded")
+    except WireError:
+        pass
+    for bad_member in (
+        encode({"t": "MStable", "dot": dot}),  # bare message
+        frame,  # nested merged frame
+        encode_routed(0, inner) + b"\xee",  # padding inside declared length
+    ):
+        try:
+            decode_merged(encode_merged([bad_member]))
+            raise AssertionError("malformed merged member decoded")
+        except WireError:
+            pass
 
 
 if __name__ == "__main__":

@@ -60,19 +60,25 @@ fn collect(
     saw_consensus: &mut bool,
     committed: &mut bool,
 ) {
-    for a in actions {
-        if let Action::Send { to, msg } = a {
-            if let Msg::MProposeAck { ts, .. } = &msg {
-                proposals.push(ts[0].1);
-            }
-            if matches!(&msg, Msg::MConsensus { .. }) {
-                *saw_consensus = true;
-            }
-            if matches!(&msg, Msg::MCommit { .. }) {
-                *committed = true;
-            }
-            queue.push((at, to, msg));
+    // Flatten shared fan-outs into the per-destination sends they model.
+    let sends = actions.into_iter().flat_map(|a| match a {
+        Action::Send { to, msg } => vec![(to, msg)],
+        Action::SendShared { to, msg } => {
+            to.into_iter().map(|d| (d, msg.clone())).collect()
         }
+        _ => vec![],
+    });
+    for (to, msg) in sends {
+        if let Msg::MProposeAck { ts, .. } = &msg {
+            proposals.push(ts[0].1);
+        }
+        if matches!(&msg, Msg::MConsensus { .. }) {
+            *saw_consensus = true;
+        }
+        if matches!(&msg, Msg::MCommit { .. }) {
+            *committed = true;
+        }
+        queue.push((at, to, msg));
     }
 }
 

@@ -84,6 +84,17 @@ pub struct Counters {
     pub batches_sent: u64,
     /// Protocol messages carried inside those `MBatch` frames.
     pub batched_msgs: u64,
+    /// Bytes written to peer sockets by the TCP runtime (frame headers
+    /// included).
+    pub bytes_sent: u64,
+    /// Peer frames coalesced away by the per-peer outbound merger: each
+    /// merged wire frame carrying `k` routed frames counts `k - 1` here
+    /// (0 when every frame went out alone).
+    pub frames_merged: u64,
+    /// Wire buffers served from the frame pool without allocating
+    /// (`net::wire::pool_stats`; process-wide, so node-level counters
+    /// report the runtime's pooling behaviour as a whole).
+    pub pooled_hits: u64,
 }
 
 impl Counters {
@@ -106,6 +117,9 @@ impl Counters {
         self.wm_advances += o.wm_advances;
         self.batches_sent += o.batches_sent;
         self.batched_msgs += o.batched_msgs;
+        self.bytes_sent += o.bytes_sent;
+        self.frames_merged += o.frames_merged;
+        self.pooled_hits += o.pooled_hits;
     }
 
     /// Mean number of messages per flushed batch (0 when batching never

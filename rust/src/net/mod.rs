@@ -18,12 +18,28 @@
 //! client submits route by key hash — the monolithic deployment is simply
 //! `workers == 1`.
 //!
+//! **Send path (encode-once + per-peer frame merging).** A protocol
+//! step's outbound actions are lowered to bytes exactly once: a
+//! point-to-point `Action::Send` encodes into a pooled buffer
+//! (`wire::FrameBuf`, recycled after the write), and a broadcast
+//! `Action::SendShared` is serialized a **single time** into an
+//! `Arc<[u8]>` body shared by every destination (`Action::SendBytes` —
+//! the fan-out cost the paper amortizes is paid once, not per peer).
+//! Below the per-slot batchers sits a **per-peer outbound stage**: one
+//! writer thread per peer drains a channel of encoded frames and, when
+//! several are pending (typically the ≤ `Config::workers` per-slot
+//! `MBatch` flushes of one tick), coalesces them into a single merged
+//! wire frame (`wire::TAG_MERGED`) written with one vectored syscall of
+//! `[len-prefix, shared bodies…]` — no re-encoding, no copying of the
+//! bodies. `Counters::{bytes_sent, frames_merged, pooled_hits}` make
+//! the path observable.
+//!
 //! With `Config::batch_max_msgs > 0` each worker's protocol layer
-//! coalesces the messages bound for one peer into single `MBatch` frames
-//! (`protocol::common::batch`), so this send path makes one `write_all`
-//! (one syscall, one frame header) per batch instead of one per message —
-//! the TCP layer needs no batching logic of its own beyond the codec.
-//! Frame layout and limits are documented in `docs/WIRE.md`.
+//! additionally coalesces the messages bound for one peer into single
+//! `MBatch` frames (`protocol::common::batch`); the frame merger then
+//! restores the one-frame-per-(peer, tick) send that per-worker
+//! batchers alone cannot provide. Frame layout and limits are
+//! documented in `docs/WIRE.md`.
 
 pub mod wire;
 
@@ -31,16 +47,17 @@ use crate::client::Session;
 use crate::core::{ClientId, Command, Config, Key, Op, ProcessId, Response, Rid};
 use crate::executor::Executor;
 use crate::metrics::Counters;
-use crate::protocol::common::shard::{worker_of_cmd, Routed};
+use crate::protocol::common::shard::worker_of_cmd;
 use crate::protocol::tempo::msg::Msg;
 use crate::protocol::tempo::Tempo;
 use crate::protocol::{Action, Protocol};
-use crate::store::KvStore;
+use crate::store::{merkle_root, KvStore};
 use crate::util::error::{bail, Context, Result};
 use std::collections::{HashMap, HashSet};
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -80,6 +97,8 @@ pub struct NodeHandle {
     /// thread writes only its own slot, so the shared-nothing workers
     /// never contend on observability.
     stats: Vec<Arc<Mutex<WorkerStats>>>,
+    /// Byte-level send-path stats, written by the per-peer writers.
+    net: Arc<NetStats>,
 }
 
 impl NodeHandle {
@@ -94,13 +113,26 @@ impl NodeHandle {
         rx
     }
 
-    /// Merged protocol counters across the node's worker slots.
+    /// Merged protocol counters across the node's worker slots, plus the
+    /// node's byte-level send-path counters (`bytes_sent`,
+    /// `frames_merged`) and the frame pool's hit count (`pooled_hits` —
+    /// process-wide, like the pool itself).
     pub fn counters(&self) -> Counters {
         let mut c = Counters::default();
         for slot in &self.stats {
             c.merge(&slot.lock().unwrap().counters);
         }
+        c.bytes_sent = self.net.bytes_sent.load(Ordering::Relaxed);
+        c.frames_merged = self.net.frames_merged.load(Ordering::Relaxed);
+        c.pooled_hits = wire::pool_stats::hits();
         c
+    }
+
+    /// Wire frames this node actually wrote to peers (a merged frame
+    /// counts once) — with `counters().frames_merged` this gives the
+    /// mean members-per-frame of the outbound merger.
+    pub fn wire_frames(&self) -> u64 {
+        self.net.wire_frames.load(Ordering::Relaxed)
     }
 
     /// Commands executed across all worker slots.
@@ -108,11 +140,21 @@ impl NodeHandle {
         self.stats.iter().map(|s| s.lock().unwrap().executed).sum()
     }
 
-    /// Combined store digest: XOR of the per-worker KV partition digests.
-    /// Workers partition the key space, so two replicas that executed the
-    /// same commands agree slot-wise — and therefore on the XOR.
+    /// Per-worker-slot KV partition digests — the Merkle leaves, in slot
+    /// order. Two replicas that executed the same commands agree
+    /// slot-wise; comparing leaf vectors localizes a divergence to the
+    /// worker slot that caused it (`store::diverging_slots`).
+    pub fn store_digests(&self) -> Vec<u64> {
+        self.stats.iter().map(|s| s.lock().unwrap().digest).collect()
+    }
+
+    /// Combined store digest: the Merkle-style root over the per-slot
+    /// partition digests (`store::merkle_root`). Equal roots ⇔ equal
+    /// leaf vectors (unlike the old XOR, which a pair of compensating
+    /// slot differences could fool), and an unequal root is localized by
+    /// [`NodeHandle::store_digests`].
     pub fn store_digest(&self) -> u64 {
-        self.stats.iter().fold(0, |acc, s| acc ^ s.lock().unwrap().digest)
+        merkle_root(&self.store_digests())
     }
 
     /// Stop the protocol threads. Acceptor/tick threads are detached (they
@@ -134,26 +176,23 @@ fn write_frame(stream: &mut TcpStream, from: u32, body: &[u8]) -> Result<()> {
     Ok(())
 }
 
-/// Write one routed protocol frame to a peer stream shared between the
-/// node's worker threads (the mutex keeps frames atomic on the wire).
-fn write_routed(stream: &Mutex<TcpStream>, from: ProcessId, routed: &Routed<Msg>) -> Result<()> {
-    let body = wire::encode_routed(routed);
-    let mut stream = stream.lock().unwrap();
-    write_frame(&mut stream, from.0, &body)
-}
-
 /// Upper bound on one frame body (`docs/WIRE.md`): a corrupt or hostile
 /// length header must not make a node allocate gigabytes before the codec
 /// ever sees the bytes. The sender side cooperates: the batching layer
 /// flushes a destination queue at `BATCH_SOFT_MAX_BYTES` (4 MiB of
 /// estimated encoding, `protocol::common::batch`), keeping legitimate
-/// `MBatch` frames far below this cap.
+/// `MBatch` frames far below this cap, and the per-peer frame merger
+/// stops adding members before a merged frame would cross it.
 pub const MAX_FRAME_BYTES: usize = 16 << 20;
 
-/// Read one raw frame: the sender field and the undecoded body. The
-/// caller decodes as a routed protocol message or a client frame
-/// depending on the sender ([`CLIENT_FROM`] marks the client plane).
-fn read_frame(stream: &mut TcpStream) -> Result<(u32, Vec<u8>)> {
+/// Read one raw frame into `buf` — a pooled, per-connection buffer that
+/// is **reused across frames** instead of allocated per frame. Returns
+/// the sender field; the body is `buf`'s contents. The caller decodes as
+/// a routed protocol message (or a merged frame of them) or a client
+/// frame depending on the sender ([`CLIENT_FROM`] marks the client
+/// plane). A frame that fits in the buffer's existing capacity counts as
+/// a pool hit (steady state: every frame after warm-up).
+fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<u32> {
     let mut hdr = [0u8; 8];
     stream.read_exact(&mut hdr)?;
     let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
@@ -161,25 +200,243 @@ fn read_frame(stream: &mut TcpStream) -> Result<(u32, Vec<u8>)> {
         bail!("frame of {len} bytes exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})");
     }
     let from = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
-    let mut body = vec![0u8; len];
-    stream.read_exact(&mut body)?;
-    Ok((from, body))
+    if buf.capacity() >= len {
+        wire::pool_stats::hit();
+    } else {
+        wire::pool_stats::miss();
+    }
+    buf.clear();
+    buf.resize(len, 0);
+    stream.read_exact(buf)?;
+    Ok(from)
 }
 
-/// Serve one inbound connection: routed protocol frames go to the worker
-/// slot named by their envelope; client submits route by key hash and
-/// lazily start a reply-writer thread for the connection, registering its
-/// sender as the request's completion route.
+/// Per-node observability of the byte-level send path, shared between
+/// the per-peer writer threads and the [`NodeHandle`].
+#[derive(Default)]
+struct NetStats {
+    /// Bytes written to peer sockets, frame headers included.
+    bytes_sent: AtomicU64,
+    /// Wire frames actually written (merged frames count once).
+    wire_frames: AtomicU64,
+    /// Frames coalesced away by merging: a merged frame of `k` members
+    /// adds `k - 1`.
+    frames_merged: AtomicU64,
+}
+
+/// Bound on frames queued per peer writer. The channel is *bounded* on
+/// purpose: the pre-merger send path blocked on the shared peer socket,
+/// so a slow-but-alive peer throttled its senders (TCP backpressure).
+/// The queue keeps that property — senders block once a peer falls this
+/// far behind — while still giving the merger a window to coalesce.
+const PEER_QUEUE_FRAMES: usize = 1024;
+
+/// One encoded frame queued for a peer's writer thread.
+enum OutFrame {
+    /// Encode-once broadcast body, shared (`Arc`) by every destination
+    /// of the fan-out.
+    Shared(Arc<[u8]>),
+    /// Exclusively-owned pooled body (point-to-point send); the writer
+    /// recycles it after the bytes leave the process.
+    Owned(wire::FrameBuf),
+}
+
+impl OutFrame {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            OutFrame::Shared(b) => b,
+            OutFrame::Owned(b) => b.bytes(),
+        }
+    }
+}
+
+/// Lower a typed fan-out to the encode-once byte path: serialize the
+/// routed frame a **single time** and emit one [`Action::SendBytes`] per
+/// destination, all sharing the same body.
+pub fn encode_fanout(worker: u32, to: Vec<ProcessId>, msg: &Msg) -> Vec<Action<Msg>> {
+    let body = wire::encode_routed_shared(worker, msg);
+    to.into_iter().map(|dest| Action::SendBytes { to: dest, body: body.clone() }).collect()
+}
+
+/// Write every part of a logically-contiguous frame with vectored
+/// writes, advancing across partial writes (the stable-toolchain spelling
+/// of `write_all_vectored`). Retries `ErrorKind::Interrupted` like
+/// `write_all` does — a stray signal must not sever the connection.
+fn write_all_vectored<W: Write>(w: &mut W, parts: &[&[u8]]) -> Result<()> {
+    let mut idx = 0; // first incomplete part
+    let mut off = 0; // bytes of parts[idx] already written
+    while idx < parts.len() {
+        if parts[idx].len() == off {
+            idx += 1;
+            off = 0;
+            continue;
+        }
+        let mut slices = Vec::with_capacity(parts.len() - idx);
+        slices.push(IoSlice::new(&parts[idx][off..]));
+        for p in &parts[idx + 1..] {
+            slices.push(IoSlice::new(p));
+        }
+        let mut n = match w.write_vectored(&slices) {
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        };
+        if n == 0 {
+            bail!("socket closed mid-frame");
+        }
+        while idx < parts.len() && n > 0 {
+            let rem = parts[idx].len() - off;
+            if n >= rem {
+                n -= rem;
+                idx += 1;
+                off = 0;
+            } else {
+                off += n;
+                n = 0;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Write one merged wire frame — `[len][from][TAG_MERGED][n][len_i,
+/// body_i…]` — as a single vectored write: the member-length prefixes
+/// live in `scratch` (reused across calls) and the bodies are referenced
+/// in place, never copied or re-encoded. Produces exactly the bytes of
+/// `wire::encode_merged` behind the transport header (pinned by a unit
+/// test below). Returns the total bytes written.
+fn write_merged_frame<W: Write>(
+    w: &mut W,
+    from: u32,
+    bodies: &[&[u8]],
+    scratch: &mut Vec<u8>,
+) -> Result<usize> {
+    let body_len = 3 + bodies.iter().map(|b| 4 + b.len()).sum::<usize>();
+    scratch.clear();
+    scratch.extend_from_slice(&(body_len as u32).to_le_bytes());
+    scratch.extend_from_slice(&from.to_le_bytes());
+    scratch.push(wire::TAG_MERGED);
+    scratch.extend_from_slice(&(bodies.len() as u16).to_le_bytes());
+    for b in bodies {
+        scratch.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    }
+    // Scatter list: [hdr + tag + count + len_0], body_0, [len_1],
+    // body_1, … — the len_i prefixes are consecutive 4-byte windows of
+    // `scratch` starting at offset 11.
+    let mut parts: Vec<&[u8]> = Vec::with_capacity(2 * bodies.len());
+    parts.push(&scratch[0..11 + 4]);
+    for (i, b) in bodies.iter().copied().enumerate() {
+        if i > 0 {
+            parts.push(&scratch[11 + 4 * i..11 + 4 * (i + 1)]);
+        }
+        parts.push(b);
+    }
+    write_all_vectored(w, &parts)?;
+    Ok(8 + body_len)
+}
+
+/// The per-peer outbound stage: drain encoded frames bound for one peer
+/// and put them on the wire, merging everything immediately available
+/// (typically the ≤ `workers` per-slot `MBatch` flushes of one tick)
+/// into a single merged frame per write. Exits when every sender hung up
+/// (node shutdown) or the peer died (its traffic is simply dropped).
+fn peer_writer(mut stream: TcpStream, rx: Receiver<OutFrame>, from: u32, stats: Arc<NetStats>) {
+    let mut scratch: Vec<u8> = Vec::with_capacity(256);
+    let mut carry: Option<OutFrame> = None;
+    loop {
+        let first = match carry.take() {
+            Some(f) => f,
+            None => match rx.recv() {
+                Ok(f) => f,
+                Err(_) => return,
+            },
+        };
+        let mut batch = vec![first];
+        let mut body_len = 3 + 4 + batch[0].bytes().len();
+        while batch.len() < u16::MAX as usize {
+            match rx.try_recv() {
+                Ok(f) => {
+                    let add = 4 + f.bytes().len();
+                    if body_len + add > MAX_FRAME_BYTES {
+                        carry = Some(f); // flush what we have first
+                        break;
+                    }
+                    body_len += add;
+                    batch.push(f);
+                }
+                Err(_) => break,
+            }
+        }
+        let wrote = if batch.len() == 1 {
+            // A lone frame goes out unmerged: [len][from][body].
+            let body = batch[0].bytes();
+            let mut hdr = [0u8; 8];
+            hdr[0..4].copy_from_slice(&(body.len() as u32).to_le_bytes());
+            hdr[4..8].copy_from_slice(&from.to_le_bytes());
+            write_all_vectored(&mut stream, &[&hdr[..], body]).map(|()| 8 + body.len())
+        } else {
+            let bodies: Vec<&[u8]> = batch.iter().map(|f| f.bytes()).collect();
+            stats.frames_merged.fetch_add(bodies.len() as u64 - 1, Ordering::Relaxed);
+            write_merged_frame(&mut stream, from, &bodies, &mut scratch)
+        };
+        for f in batch {
+            if let OutFrame::Owned(b) = f {
+                b.recycle();
+            }
+        }
+        match wrote {
+            Ok(n) => {
+                stats.bytes_sent.fetch_add(n as u64, Ordering::Relaxed);
+                stats.wire_frames.fetch_add(1, Ordering::Relaxed);
+            }
+            // A dead peer just drops its traffic.
+            Err(_) => return,
+        }
+    }
+}
+
+/// Serve one inbound connection: routed protocol frames (bare or merged)
+/// go to the worker slot named by their envelope; client submits route by
+/// key hash and lazily start a reply-writer thread for the connection,
+/// registering its sender as the request's completion route. The
+/// connection reads every frame into one pooled buffer (recycled when
+/// the connection drops), so steady-state receive allocates nothing.
 fn serve_connection(mut stream: TcpStream, node: ProcessId, txs: Vec<Sender<Event>>) {
+    let mut rbuf = wire::FrameBuf::take();
+    serve_connection_inner(&mut stream, node, &txs, &mut rbuf);
+    rbuf.recycle();
+}
+
+/// Route one decoded routed frame to its worker slot. `Err` drops the
+/// connection (hostile/mismatched deployment or shutdown).
+fn route_peer_frame(
+    txs: &[Sender<Event>],
+    from: ProcessId,
+    routed: crate::protocol::common::shard::Routed<Msg>,
+) -> std::result::Result<(), ()> {
+    let w = routed.worker as usize;
+    if w >= txs.len() {
+        return Err(());
+    }
+    txs[w].send(Event::Message { from, msg: routed.msg }).map_err(|_| ())
+}
+
+fn serve_connection_inner(
+    stream: &mut TcpStream,
+    node: ProcessId,
+    txs: &[Sender<Event>],
+    rbuf: &mut wire::FrameBuf,
+) {
     let workers = txs.len();
     let mut reply_tx: Option<Sender<(Rid, Response)>> = None;
     loop {
-        let (from, body) = match read_frame(&mut stream) {
+        let from = match read_frame(stream, rbuf.vec()) {
             Ok(f) => f,
             Err(_) => return,
         };
+        let body = rbuf.bytes();
         if from == CLIENT_FROM {
-            let cmd = match wire::decode_client(&body) {
+            let cmd = match wire::decode_client(body) {
                 Ok(wire::ClientFrame::Submit { cmd }) => cmd,
                 // A node never receives replies; malformed input drops
                 // the connection (the codec promises Err, not panic).
@@ -213,16 +470,26 @@ fn serve_connection(mut stream: TcpStream, node: ProcessId, txs: Vec<Sender<Even
             if txs[w].send(Event::Submit { cmd, done }).is_err() {
                 return;
             }
+        } else if body.first() == Some(&wire::TAG_MERGED) {
+            // The per-peer merger coalesced several routed frames into
+            // one wire frame; route the members in wire order (per-slot
+            // FIFO is preserved: a slot's frames enter the merge queue
+            // in send order).
+            let members = match wire::decode_merged(body) {
+                Ok(m) => m,
+                Err(_) => return,
+            };
+            for routed in members {
+                if route_peer_frame(txs, ProcessId(from), routed).is_err() {
+                    return;
+                }
+            }
         } else {
-            let routed = match wire::decode_routed(&body) {
+            let routed = match wire::decode_routed(body) {
                 Ok(r) => r,
                 Err(_) => return,
             };
-            let w = routed.worker as usize;
-            if w >= workers {
-                return; // hostile/mismatched deployment
-            }
-            if txs[w].send(Event::Message { from: ProcessId(from), msg: routed.msg }).is_err() {
+            if route_peer_frame(txs, ProcessId(from), routed).is_err() {
                 return;
             }
         }
@@ -266,9 +533,12 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
         }));
     }
 
-    // Dial every peer (retry until the whole cluster is up). Streams are
-    // shared between the worker threads, mutex-guarded per peer.
-    let mut peers: HashMap<ProcessId, Arc<Mutex<TcpStream>>> = HashMap::new();
+    // Dial every peer (retry until the whole cluster is up). Each peer
+    // gets its own writer thread — the per-peer outbound stage — fed by
+    // a channel the worker threads share; the writer merges whatever is
+    // queued into single wire frames (one vectored write per flush).
+    let net_stats = Arc::new(NetStats::default());
+    let mut peers: HashMap<ProcessId, SyncSender<OutFrame>> = HashMap::new();
     for (j, addr) in addrs.iter().enumerate() {
         if j == me {
             continue;
@@ -285,7 +555,11 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
             }
         };
         stream.set_nodelay(true)?;
-        peers.insert(ProcessId(j as u32), Arc::new(Mutex::new(stream)));
+        let (tx, rx) = sync_channel::<OutFrame>(PEER_QUEUE_FRAMES);
+        let stats = net_stats.clone();
+        let from = id.0;
+        threads.push(std::thread::spawn(move || peer_writer(stream, rx, from, stats)));
+        peers.insert(ProcessId(j as u32), tx);
     }
 
     // Tick timer: fan one tick to every worker slot.
@@ -333,10 +607,31 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
                 for action in actions {
                     match action {
                         Action::Send { to, msg } => {
-                            if let Some(stream) = peers.get(&to) {
-                                // A dead peer just drops its traffic.
-                                let routed = Routed { worker: w as u32, msg };
-                                let _ = write_routed(stream, id, &routed);
+                            if let Some(link) = peers.get(&to) {
+                                // Point-to-point: encode into a pooled
+                                // buffer; the peer's writer recycles it
+                                // after the write. (A dead peer just
+                                // drops its traffic.)
+                                let body = wire::encode_routed_pooled(w as u32, &msg);
+                                let _ = link.send(OutFrame::Owned(body));
+                            }
+                        }
+                        Action::SendShared { to, msg } => {
+                            // Encode-once fan-out: one shared body for
+                            // every destination — the loop body is
+                            // `Action::SendBytes` lowering (see
+                            // `encode_fanout`, which pins the sharing)
+                            // without the intermediate action vector.
+                            let body = wire::encode_routed_shared(w as u32, &msg);
+                            for dest in to {
+                                if let Some(link) = peers.get(&dest) {
+                                    let _ = link.send(OutFrame::Shared(body.clone()));
+                                }
+                            }
+                        }
+                        Action::SendBytes { to, body } => {
+                            if let Some(link) = peers.get(&to) {
+                                let _ = link.send(OutFrame::Shared(body));
                             }
                         }
                         Action::Reply { rid, response } => {
@@ -357,7 +652,7 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
         }));
     }
 
-    Ok(NodeHandle { id, events: event_txs, workers, threads, stats })
+    Ok(NodeHandle { id, events: event_txs, workers, threads, stats, net: net_stats })
 }
 
 /// A real request/response client: a [`Session`] speaking `ClientSubmit`
@@ -377,6 +672,8 @@ pub struct TcpClient {
     outstanding: HashSet<Rid>,
     /// Replies read off the socket while waiting for a different rid.
     buffered: HashMap<Rid, Response>,
+    /// Pooled receive buffer, reused across reply frames.
+    rbuf: wire::FrameBuf,
 }
 
 impl TcpClient {
@@ -390,6 +687,7 @@ impl TcpClient {
             stream,
             outstanding: HashSet::new(),
             buffered: HashMap::new(),
+            rbuf: wire::FrameBuf::take(),
         })
     }
 
@@ -446,10 +744,11 @@ impl TcpClient {
         }
     }
 
-    /// Read one `ClientReply` frame off the socket.
+    /// Read one `ClientReply` frame off the socket (into the session's
+    /// pooled buffer — no per-frame allocation).
     fn read_reply(&mut self) -> Result<(Rid, Response)> {
-        let (_, body) = read_frame(&mut self.stream)?;
-        match wire::decode_client(&body)? {
+        read_frame(&mut self.stream, self.rbuf.vec())?;
+        match wire::decode_client(self.rbuf.bytes())? {
             wire::ClientFrame::Reply { rid, response } => Ok((rid, response)),
             wire::ClientFrame::Submit { .. } => bail!("unexpected ClientSubmit from node"),
         }
@@ -501,4 +800,96 @@ pub fn local_addrs(n: usize) -> Result<Vec<String>> {
         addrs.push(format!("127.0.0.1:{}", l.local_addr()?.port()));
     }
     Ok(addrs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Dot;
+
+    #[test]
+    fn vectored_merged_frame_matches_the_reference_encoding() {
+        // The scatter-gather writer must produce exactly
+        // [len][from][wire::encode_merged(bodies)] — the receiver's
+        // decode path and the Python mirror are pinned to that layout.
+        let dot = Dot::new(ProcessId(1), 5);
+        let bodies_owned: Vec<Vec<u8>> = vec![
+            wire::encode_routed(&crate::protocol::common::shard::Routed {
+                worker: 0,
+                msg: Msg::MStable { dot },
+            }),
+            wire::encode_routed(&crate::protocol::common::shard::Routed {
+                worker: 1,
+                msg: Msg::MBatch {
+                    msgs: vec![Msg::MBump { dot, ts: 3 }, Msg::MStable { dot }],
+                },
+            }),
+            wire::encode_routed(&crate::protocol::common::shard::Routed {
+                worker: 2,
+                msg: Msg::MRec { dot, bal: 9 },
+            }),
+        ];
+        let bodies: Vec<&[u8]> = bodies_owned.iter().map(|b| b.as_slice()).collect();
+        let mut out: Vec<u8> = Vec::new();
+        let mut scratch = Vec::new();
+        let wrote = write_merged_frame(&mut out, 7, &bodies, &mut scratch).expect("write");
+        assert_eq!(wrote, out.len());
+        let reference = wire::encode_merged(&bodies);
+        assert_eq!(
+            u32::from_le_bytes(out[0..4].try_into().unwrap()) as usize,
+            reference.len()
+        );
+        assert_eq!(u32::from_le_bytes(out[4..8].try_into().unwrap()), 7);
+        assert_eq!(&out[8..], &reference[..], "vectored layout != reference encoding");
+        // And the receiver recovers the members in per-slot send order.
+        let members = wire::decode_merged(&out[8..]).expect("decode");
+        assert_eq!(members.len(), 3);
+        assert_eq!(
+            members.iter().map(|m| m.worker).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn write_all_vectored_handles_empty_and_tiny_parts() {
+        let mut out: Vec<u8> = Vec::new();
+        let parts: [&[u8]; 5] = [&[], &[1], &[], &[2, 3], &[]];
+        write_all_vectored(&mut out, &parts).expect("write");
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn encode_fanout_shares_one_body_across_destinations() {
+        let dot = Dot::new(ProcessId(2), 9);
+        let msg = Msg::MStable { dot };
+        let to: Vec<ProcessId> = (0..4).map(ProcessId).collect();
+        let actions = encode_fanout(3, to.clone(), &msg);
+        assert_eq!(actions.len(), 4);
+        let mut first: Option<Arc<[u8]>> = None;
+        for (action, expect) in actions.iter().zip(&to) {
+            match action {
+                Action::SendBytes { to, body } => {
+                    assert_eq!(to, expect);
+                    match &first {
+                        None => {
+                            // The body is the routed encoding, produced once.
+                            let legacy = wire::encode_routed(
+                                &crate::protocol::common::shard::Routed {
+                                    worker: 3,
+                                    msg: msg.clone(),
+                                },
+                            );
+                            assert_eq!(&body[..], &legacy[..]);
+                            first = Some(body.clone());
+                        }
+                        Some(f) => assert!(
+                            Arc::ptr_eq(f, body),
+                            "fan-out destinations must share one encoded body"
+                        ),
+                    }
+                }
+                other => panic!("expected SendBytes, got {other:?}"),
+            }
+        }
+    }
 }

@@ -11,12 +11,30 @@
 //! frame can never cross from one plane into the other, and an `MBatch`
 //! member carrying a client frame is malformed the same way a nested
 //! batch is.
+//!
+//! **Send path (encode-once, zero-alloc).** Every encoder comes in an
+//! append-into form — [`encode_into`], [`encode_routed_into`],
+//! [`encode_client_into`] — that writes into a caller-owned [`Writer`]
+//! with no intermediate buffers (`MBatch` members are encoded in place
+//! behind a backfilled length prefix), plus an exact size function
+//! ([`encoded_len`] and friends) so callers reserve once and never
+//! reallocate mid-encode. The legacy `encode*` functions are thin
+//! wrappers. Buffers themselves come from the [`FrameBuf`] pool (a
+//! thread-local free list with a global overflow, shared by the send and
+//! receive ends of the TCP runtime), and a broadcast encodes **once**
+//! into an `Arc<[u8]>` body shared by every destination
+//! ([`encode_routed_shared`]). The merged transport frame
+//! ([`TAG_MERGED`]) coalesces several routed envelopes bound for one
+//! peer into a single wire frame without re-encoding any of them.
 
 use crate::core::{ClientId, Command, Dot, Op, ProcessId, Response, Rid, ShardId};
 use crate::protocol::common::shard::Routed;
 use crate::protocol::tempo::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums};
 use crate::protocol::tempo::promises::PromiseSet;
 use crate::util::error::{bail, Result};
+use std::cell::RefCell;
+use std::sync::Arc;
+use std::sync::Mutex;
 
 /// Tag of the `ClientSubmit` frame (docs/WIRE.md).
 pub const TAG_CLIENT_SUBMIT: u8 = 17;
@@ -28,6 +46,15 @@ pub const TAG_CLIENT_REPLY: u8 = 18;
 /// anything `decode` accepts (including `MBatch`), never another
 /// envelope.
 pub const TAG_ROUTED: u8 = 19;
+/// Tag of the merged transport frame (docs/WIRE.md):
+/// `[20][n: u16][n × (len: u32, routed envelope bytes)]`. The per-peer
+/// outbound stage of the TCP runtime coalesces the routed frames queued
+/// for one peer (typically the ≤ `workers` per-slot `MBatch` flushes of
+/// one tick) into a single wire frame. Members are *already-encoded*
+/// routed envelopes — merging never re-serializes — and the envelope
+/// appears only at the top of a peer frame body, exactly like
+/// [`TAG_ROUTED`]: never bare, never inside `MBatch`, never nested.
+pub const TAG_MERGED: u8 = 20;
 
 /// Frames exchanged between a client session and a node over the client
 /// plane of the TCP runtime (never between protocol peers).
@@ -54,6 +81,18 @@ impl Default for Writer {
 impl Writer {
     pub fn new() -> Self {
         Writer { buf: Vec::with_capacity(256) }
+    }
+
+    /// A writer whose buffer holds `n` bytes without reallocating — pair
+    /// with the exact [`encoded_len`] family for single-allocation
+    /// encodes.
+    pub fn with_capacity(n: usize) -> Self {
+        Writer { buf: Vec::with_capacity(n) }
+    }
+
+    /// Wrap an existing (e.g. pooled) buffer; encoding appends to it.
+    pub fn from_vec(buf: Vec<u8>) -> Self {
+        Writer { buf }
     }
 
     fn u8(&mut self, v: u8) {
@@ -135,6 +174,153 @@ impl Writer {
         for (k, p) in kp {
             self.u64(*k);
             self.promise_set(p);
+        }
+    }
+}
+
+/// Observability for the [`FrameBuf`] pool: process-wide monotone
+/// counters (like `core::clone_stats`), surfaced through
+/// `metrics::Counters::pooled_hits` by the TCP runtime. A *hit* is any
+/// frame served without a fresh heap allocation — a recycled buffer
+/// taken from the pool, or a read/encode that fit in a kept buffer's
+/// existing capacity; a *miss* had to allocate.
+pub mod pool_stats {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static HITS: AtomicU64 = AtomicU64::new(0);
+    static MISSES: AtomicU64 = AtomicU64::new(0);
+
+    pub(crate) fn hit() {
+        HITS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn miss() {
+        MISSES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Frames served from recycled capacity (no allocation), so far.
+    pub fn hits() -> u64 {
+        HITS.load(Ordering::Relaxed)
+    }
+
+    /// Frames that had to allocate, so far.
+    pub fn misses() -> u64 {
+        MISSES.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-thread free list size; beyond it buffers overflow to the global
+/// list (bounded too), then are dropped.
+const POOL_LOCAL_CAP: usize = 32;
+const POOL_GLOBAL_CAP: usize = 128;
+/// How many buffers a take pulls from the global list in one lock
+/// acquisition when its local list is empty (one to use, the rest cached
+/// locally) — amortizes the global lock across refills.
+const POOL_REFILL: usize = 8;
+/// A recycled buffer keeps at most this much capacity; larger ones are
+/// shrunk on recycle so one jumbo frame cannot pin memory forever. With
+/// the list caps this bounds pinned pool memory at ~32 MiB global plus
+/// 8 MiB per long-lived thread, worst case — typical frames are a few
+/// hundred bytes, so the real footprint is kilobytes.
+const POOL_MAX_RETAIN: usize = 256 << 10;
+
+thread_local! {
+    static LOCAL_POOL: RefCell<Vec<Vec<u8>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Buffers recycled by a different thread than the one that will take
+/// them next — the dominant flow: the TCP runtime's send path hands
+/// buffers from protocol threads to per-peer writer threads, which only
+/// ever recycle. `recycle` therefore returns buffers **here first** (the
+/// local list is the overflow), so the protocol threads' takes keep
+/// hitting instead of the buffers stranding in a writer's local list.
+static GLOBAL_POOL: Mutex<Vec<Vec<u8>>> = Mutex::new(Vec::new());
+
+/// A wire buffer drawn from the frame pool: a thread-local free list
+/// with a global overflow shared across threads. Both ends of the TCP
+/// runtime use it — `read_frame` refills one per connection instead of
+/// allocating per frame, and the send path encodes point-to-point
+/// frames into one, recycling it after the write. **A pooled buffer is
+/// never observable across frames**: `take` hands out cleared buffers
+/// exclusively owned by the caller, and recycling happens only after
+/// the frame's bytes left the process (written to a socket) or were
+/// fully decoded.
+#[derive(Debug, Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    /// Take a cleared buffer: thread-local pool first; on a local miss,
+    /// refill a small batch from the shared global list under one lock
+    /// ([`POOL_REFILL`] — recycling is global-first, so takes amortize
+    /// the lock instead of paying it per frame); else a fresh allocation
+    /// (a pool miss).
+    pub fn take() -> FrameBuf {
+        let recycled = LOCAL_POOL.with(|p| {
+            let mut p = p.borrow_mut();
+            if let Some(buf) = p.pop() {
+                return Some(buf);
+            }
+            let mut g = GLOBAL_POOL.lock().unwrap();
+            let first = g.pop();
+            for _ in 1..POOL_REFILL {
+                match g.pop() {
+                    Some(buf) => p.push(buf),
+                    None => break,
+                }
+            }
+            first
+        });
+        match recycled {
+            Some(mut buf) => {
+                buf.clear();
+                pool_stats::hit();
+                FrameBuf { buf }
+            }
+            None => {
+                pool_stats::miss();
+                FrameBuf { buf: Vec::new() }
+            }
+        }
+    }
+
+    /// The underlying buffer (cleared on `take`; callers append/resize).
+    pub fn vec(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+
+    /// Current contents as a slice.
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Return the buffer to the pool: the shared global list first (the
+    /// threads that recycle most — per-peer writers — are not the
+    /// threads that take, so local-first recycling would strand buffers),
+    /// the recycler's local list as overflow, dropped when both are
+    /// full. Oversized buffers shrink to [`POOL_MAX_RETAIN`] first.
+    pub fn recycle(mut self) {
+        if self.buf.capacity() > POOL_MAX_RETAIN {
+            self.buf = Vec::with_capacity(POOL_MAX_RETAIN);
+        }
+        let buf = std::mem::take(&mut self.buf);
+        let overflow = {
+            let mut g = GLOBAL_POOL.lock().unwrap();
+            if g.len() < POOL_GLOBAL_CAP {
+                g.push(buf);
+                None
+            } else {
+                Some(buf)
+            }
+        };
+        if let Some(buf) = overflow {
+            LOCAL_POOL.with(|p| {
+                let mut p = p.borrow_mut();
+                if p.len() < POOL_LOCAL_CAP {
+                    p.push(buf);
+                }
+            });
         }
     }
 }
@@ -261,9 +447,84 @@ const PHASES: [Phase; 7] = [
     Phase::Execute,
 ];
 
-/// Encode a message (without the length prefix).
+/// Exact encoded size of a command (`Command::wire_size` is exact by
+/// contract, pinned by `command_wire_size_matches_codec`).
+fn cmd_len(c: &Command) -> usize {
+    c.wire_size() as usize
+}
+
+fn quorums_len(q: &[(ShardId, Vec<ProcessId>)]) -> usize {
+    1 + q.iter().map(|(_, procs)| 4 + 1 + 4 * procs.len()).sum::<usize>()
+}
+
+fn key_ts_len(ts: &[(u64, u64)]) -> usize {
+    2 + 16 * ts.len()
+}
+
+fn promise_set_len(p: &PromiseSet) -> usize {
+    2 + 16 * p.detached.len() + 2 + 20 * p.attached.len()
+}
+
+fn key_promises_len(kp: &[(u64, PromiseSet)]) -> usize {
+    2 + kp.iter().map(|(_, p)| 8 + promise_set_len(p)).sum::<usize>()
+}
+
+fn response_len(r: &Response) -> usize {
+    2 + 16 * r.versions.len()
+}
+
+/// Exact encoded size of `msg` in bytes — equal to `encode(msg).len()`
+/// byte-for-byte (fuzzed in `rust/tests/properties.rs`). Callers use it
+/// to reserve a buffer once so [`encode_into`] never reallocates.
+pub fn encoded_len(msg: &Msg) -> usize {
+    match msg {
+        Msg::MSubmit { cmd, quorums, .. } | Msg::MPayload { cmd, quorums, .. } => {
+            1 + 12 + cmd_len(cmd) + quorums_len(quorums)
+        }
+        Msg::MPropose { cmd, quorums, ts, .. } => {
+            1 + 12 + cmd_len(cmd) + quorums_len(quorums) + key_ts_len(ts)
+        }
+        Msg::MProposeAck { ts, promises, .. } => {
+            1 + 12 + key_ts_len(ts) + key_promises_len(promises)
+        }
+        Msg::MCommit { ts, promises, .. } => {
+            1 + 12
+                + 4
+                + key_ts_len(ts)
+                + 2
+                + promises.iter().map(|(_, kp)| 4 + key_promises_len(kp)).sum::<usize>()
+        }
+        Msg::MCommitDirect { cmd, quorums, .. } => {
+            1 + 12 + cmd_len(cmd) + quorums_len(quorums) + 8
+        }
+        Msg::MConsensus { ts, .. } => 1 + 12 + key_ts_len(ts) + 8,
+        Msg::MConsensusAck { .. } => 1 + 12 + 8,
+        Msg::MPromises { promises } => 1 + key_promises_len(promises),
+        Msg::MBump { .. } => 1 + 12 + 8,
+        Msg::MStable { .. } => 1 + 12,
+        Msg::MRec { .. } => 1 + 12 + 8,
+        Msg::MRecAck { ts, .. } => 1 + 12 + key_ts_len(ts) + 1 + 8 + 8,
+        Msg::MRecNAck { .. } => 1 + 12 + 8,
+        Msg::MCommitRequest { .. } => 1 + 12,
+        Msg::MGarbageCollect { executed } => 1 + 2 + 12 * executed.len(),
+        Msg::MBatch { msgs } => {
+            1 + 2 + msgs.iter().map(|m| 4 + encoded_len(m)).sum::<usize>()
+        }
+    }
+}
+
+/// Encode a message (without the length prefix) into a fresh buffer:
+/// a thin wrapper over [`encode_into`] with exact pre-reservation.
 pub fn encode(msg: &Msg) -> Vec<u8> {
-    let mut w = Writer::new();
+    let mut w = Writer::with_capacity(encoded_len(msg));
+    encode_into(&mut w, msg);
+    w.buf
+}
+
+/// Append the encoding of `msg` to `w` — single pass, no intermediate
+/// buffers (`MBatch` members are encoded in place behind a backfilled
+/// length prefix). Produces exactly the bytes of [`encode`].
+pub fn encode_into(w: &mut Writer, msg: &Msg) {
     match msg {
         Msg::MSubmit { dot, cmd, quorums } => {
             w.u8(0);
@@ -366,26 +627,62 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             w.u8(16);
             w.u16(msgs.len() as u16);
             for m in msgs {
-                let body = encode(m);
-                w.u32(body.len() as u32);
-                w.buf.extend_from_slice(&body);
+                // Backfilled length prefix: encode the member in place,
+                // then write its measured size — no per-member Vec.
+                let at = w.buf.len();
+                w.u32(0);
+                encode_into(w, m);
+                let len = (w.buf.len() - at - 4) as u32;
+                w.buf[at..at + 4].copy_from_slice(&len.to_le_bytes());
             }
         }
     }
+}
+
+/// Exact encoded size of a routed frame: envelope (tag + worker byte)
+/// plus the inner message.
+pub fn routed_encoded_len(routed: &Routed<Msg>) -> usize {
+    2 + encoded_len(&routed.msg)
+}
+
+/// Append a worker-routed protocol frame to `w`: the [`TAG_ROUTED`]
+/// envelope naming the worker slot, then the inner message.
+pub fn encode_routed_into(w: &mut Writer, routed: &Routed<Msg>) {
+    w.u8(TAG_ROUTED);
+    w.u8(routed.worker as u8);
+    encode_into(w, &routed.msg);
+}
+
+/// Encode a worker-routed protocol frame (without the length prefix).
+/// This is what peer connections carry under worker sharding
+/// (`protocol::common::shard`); with one worker the tag is simply 0.
+/// Thin wrapper over [`encode_routed_into`].
+pub fn encode_routed(routed: &Routed<Msg>) -> Vec<u8> {
+    let mut w = Writer::with_capacity(routed_encoded_len(routed));
+    encode_routed_into(&mut w, routed);
     w.buf
 }
 
-/// Encode a worker-routed protocol frame (without the length prefix):
-/// the [`TAG_ROUTED`] envelope naming the worker slot, then the inner
-/// message. This is what peer connections carry under worker sharding
-/// (`protocol::common::shard`); with one worker the tag is simply 0.
-pub fn encode_routed(routed: &Routed<Msg>) -> Vec<u8> {
-    let inner = encode(&routed.msg);
-    let mut buf = Vec::with_capacity(inner.len() + 2);
-    buf.push(TAG_ROUTED);
-    buf.push(routed.worker as u8);
-    buf.extend_from_slice(&inner);
-    buf
+/// Encode-once broadcast body: serialize the routed frame a single time
+/// into an exactly-sized shared buffer. The TCP runtime hands one of
+/// these to every destination of a fan-out (`Action::SendBytes`), so
+/// the serialization cost is paid once, not once per peer.
+pub fn encode_routed_shared(worker: u32, msg: &Msg) -> Arc<[u8]> {
+    let mut w = Writer::with_capacity(2 + encoded_len(msg));
+    w.u8(TAG_ROUTED);
+    w.u8(worker as u8);
+    encode_into(&mut w, msg);
+    w.buf.into()
+}
+
+fn decode_routed_at(r: &mut Reader) -> Result<Routed<Msg>> {
+    let tag = r.u8()?;
+    if tag != TAG_ROUTED {
+        bail!("expected routed frame tag {TAG_ROUTED}, got {tag}");
+    }
+    let worker = r.u8()? as u32;
+    let msg = decode_at(r)?;
+    Ok(Routed { worker, msg })
 }
 
 /// Decode a worker-routed protocol frame. The envelope carries exactly
@@ -393,18 +690,78 @@ pub fn encode_routed(routed: &Routed<Msg>) -> Vec<u8> {
 /// is malformed.
 pub fn decode_routed(buf: &[u8]) -> Result<Routed<Msg>> {
     let mut r = Reader::new(buf);
-    let tag = r.u8()?;
-    if tag != TAG_ROUTED {
-        bail!("expected routed frame tag {TAG_ROUTED}, got {tag}");
-    }
-    let worker = r.u8()? as u32;
-    let msg = decode_at(&mut r)?;
-    Ok(Routed { worker, msg })
+    decode_routed_at(&mut r)
 }
 
-/// Encode a client frame (without the length prefix).
-pub fn encode_client(frame: &ClientFrame) -> Vec<u8> {
-    let mut w = Writer::new();
+/// Encode a routed frame into a pooled buffer (zero heap allocations
+/// once the pool is warm): the point-to-point leg of the send path. The
+/// caller recycles the buffer after the bytes leave the process.
+pub fn encode_routed_pooled(worker: u32, msg: &Msg) -> FrameBuf {
+    let mut b = FrameBuf::take();
+    b.buf.reserve(2 + encoded_len(msg));
+    let mut w = Writer::from_vec(std::mem::take(&mut b.buf));
+    w.u8(TAG_ROUTED);
+    w.u8(worker as u8);
+    encode_into(&mut w, msg);
+    b.buf = w.buf;
+    b
+}
+
+/// Exact merged-frame size for the already-encoded member `bodies`.
+pub fn merged_encoded_len(bodies: &[&[u8]]) -> usize {
+    1 + 2 + bodies.iter().map(|b| 4 + b.len()).sum::<usize>()
+}
+
+/// Reference (contiguous) encoding of the merged transport frame
+/// ([`TAG_MERGED`]): the per-peer writer produces exactly these bytes
+/// with a vectored write instead of copying the bodies (the unit tests
+/// pin the two layouts to each other). Members must be routed envelopes.
+pub fn encode_merged(bodies: &[&[u8]]) -> Vec<u8> {
+    let mut w = Writer::with_capacity(merged_encoded_len(bodies));
+    w.u8(TAG_MERGED);
+    w.u16(bodies.len() as u16);
+    for b in bodies {
+        w.u32(b.len() as u32);
+        w.buf.extend_from_slice(b);
+    }
+    w.buf
+}
+
+/// Decode a merged transport frame into its member routed frames, in
+/// wire order. Every member must be a well-formed routed envelope that
+/// consumes its declared length exactly; anything else — a bare
+/// message, a client frame, a nested merged frame — is malformed.
+pub fn decode_merged(buf: &[u8]) -> Result<Vec<Routed<Msg>>> {
+    let mut r = Reader::new(buf);
+    let tag = r.u8()?;
+    if tag != TAG_MERGED {
+        bail!("expected merged frame tag {TAG_MERGED}, got {tag}");
+    }
+    let n = r.u16()? as usize;
+    let mut out = Vec::with_capacity(n.min(256));
+    for _ in 0..n {
+        let len = r.u32()? as usize;
+        let body = r.take(len)?;
+        let mut sub = Reader::new(body);
+        let routed = decode_routed_at(&mut sub)?;
+        if sub.pos != len {
+            bail!("merged member declared {len} bytes, used {}", sub.pos);
+        }
+        out.push(routed);
+    }
+    Ok(out)
+}
+
+/// Exact encoded size of a client frame.
+pub fn client_encoded_len(frame: &ClientFrame) -> usize {
+    match frame {
+        ClientFrame::Submit { cmd } => 1 + cmd_len(cmd),
+        ClientFrame::Reply { response, .. } => 1 + 16 + response_len(response),
+    }
+}
+
+/// Append a client frame to `w`.
+pub fn encode_client_into(w: &mut Writer, frame: &ClientFrame) {
     match frame {
         ClientFrame::Submit { cmd } => {
             w.u8(TAG_CLIENT_SUBMIT);
@@ -416,6 +773,13 @@ pub fn encode_client(frame: &ClientFrame) -> Vec<u8> {
             w.response(response);
         }
     }
+}
+
+/// Encode a client frame (without the length prefix): thin wrapper over
+/// [`encode_client_into`] with exact pre-reservation.
+pub fn encode_client(frame: &ClientFrame) -> Vec<u8> {
+    let mut w = Writer::with_capacity(client_encoded_len(frame));
+    encode_client_into(&mut w, frame);
     w.buf
 }
 
@@ -516,6 +880,7 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
                         bail!("client frame tag {t} inside MBatch")
                     }
                     Some(&TAG_ROUTED) => bail!("routed envelope inside MBatch"),
+                    Some(&TAG_MERGED) => bail!("merged frame inside MBatch"),
                     _ => {}
                 }
                 let mut sub = Reader::new(body);
@@ -531,6 +896,7 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
             bail!("client frame tag {x} in protocol stream")
         }
         TAG_ROUTED => bail!("routed envelope where a bare protocol message was expected"),
+        TAG_MERGED => bail!("merged frame where a bare protocol message was expected"),
         x => bail!("bad message tag {x}"),
     };
     Ok(msg)
@@ -815,6 +1181,164 @@ mod tests {
         // Layout: tag(1) + rid(16) + op(1) → payload_len at offset 18.
         bytes[18..22].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_client(&bytes).is_err(), "hostile payload_len must fail");
+    }
+
+    fn sample_msgs() -> Vec<Msg> {
+        let dot = Dot::new(ProcessId(3), 42);
+        let cmd = Command::new(Rid::new(ClientId(7), 9), vec![1, 99], Op::Rmw, 512);
+        let quorums: Quorums =
+            vec![(ShardId(0), vec![ProcessId(0), ProcessId(1)]), (ShardId(1), vec![ProcessId(3)])]
+                .into();
+        let ts: KeyTs = vec![(1, 10), (99, 11)];
+        let ps = PromiseSet { detached: vec![(1, 5), (7, 9)], attached: vec![(dot, 10)] };
+        let kp: KeyPromises = vec![(1, ps.clone()), (99, PromiseSet::default())];
+        vec![
+            Msg::MSubmit { dot, cmd: cmd.clone(), quorums: quorums.clone() },
+            Msg::MPropose { dot, cmd: cmd.clone(), quorums: quorums.clone(), ts: ts.clone() },
+            Msg::MProposeAck { dot, ts: ts.clone(), promises: kp.clone() },
+            Msg::MPayload { dot, cmd: cmd.clone(), quorums: quorums.clone() },
+            Msg::MCommit {
+                dot,
+                group: ShardId(1),
+                ts: ts.clone(),
+                promises: vec![(ProcessId(2), kp.clone())].into(),
+            },
+            Msg::MCommitDirect { dot, cmd, quorums, final_ts: 17 },
+            Msg::MConsensus { dot, ts: ts.clone(), bal: 6 },
+            Msg::MConsensusAck { dot, bal: 6 },
+            Msg::MPromises { promises: kp.into() },
+            Msg::MBump { dot, ts: 12 },
+            Msg::MStable { dot },
+            Msg::MRec { dot, bal: 8 },
+            Msg::MRecAck { dot, ts, phase: Phase::RecoverP, abal: 0, bal: 8 },
+            Msg::MRecNAck { dot, bal: 9 },
+            Msg::MCommitRequest { dot },
+            Msg::MGarbageCollect { executed: vec![(ProcessId(0), 41), (ProcessId(4), 7)] },
+            Msg::MBatch {
+                msgs: vec![
+                    Msg::MStable { dot },
+                    Msg::MPromises { promises: vec![(1, ps)].into() },
+                ],
+            },
+            Msg::MBatch { msgs: vec![] },
+        ]
+    }
+
+    #[test]
+    fn encoded_len_is_exact_for_every_variant() {
+        for msg in sample_msgs() {
+            let bytes = encode(&msg);
+            assert_eq!(
+                encoded_len(&msg),
+                bytes.len(),
+                "encoded_len out of sync with the encoder for {msg:?}"
+            );
+            // The into-form appends to existing content without
+            // disturbing it and produces exactly the wrapper's bytes.
+            let mut w = Writer::from_vec(vec![0xAA, 0xBB]);
+            encode_into(&mut w, &msg);
+            assert_eq!(&w.buf[..2], &[0xAA, 0xBB]);
+            assert_eq!(&w.buf[2..], &bytes[..], "encode_into != encode for {msg:?}");
+            let routed = Routed { worker: 3, msg };
+            assert_eq!(routed_encoded_len(&routed), encode_routed(&routed).len());
+        }
+    }
+
+    #[test]
+    fn encode_routed_shared_matches_the_per_peer_encoding() {
+        for msg in sample_msgs() {
+            let shared = encode_routed_shared(2, &msg);
+            let legacy = encode_routed(&Routed { worker: 2, msg });
+            assert_eq!(&shared[..], &legacy[..], "shared body must be byte-identical");
+        }
+    }
+
+    #[test]
+    fn client_encoded_len_is_exact() {
+        let cmd = Command::new(Rid::new(ClientId(7), 3), vec![1, 99], Op::Put, 256);
+        for frame in [
+            ClientFrame::Submit { cmd },
+            ClientFrame::Reply {
+                rid: Rid::new(ClientId(7), 3),
+                response: Response { versions: vec![(1, 4), (99, 17)] },
+            },
+        ] {
+            assert_eq!(client_encoded_len(&frame), encode_client(&frame).len());
+        }
+    }
+
+    #[test]
+    fn merged_frames_roundtrip_in_order() {
+        let dot = Dot::new(ProcessId(1), 2);
+        let members: Vec<Routed<Msg>> = vec![
+            Routed { worker: 0, msg: Msg::MStable { dot } },
+            Routed {
+                worker: 1,
+                msg: Msg::MBatch {
+                    msgs: vec![Msg::MBump { dot, ts: 9 }, Msg::MStable { dot }],
+                },
+            },
+            Routed { worker: 0, msg: Msg::MRec { dot, bal: 3 } },
+        ];
+        let bodies: Vec<Vec<u8>> = members.iter().map(encode_routed).collect();
+        let body_refs: Vec<&[u8]> = bodies.iter().map(|b| b.as_slice()).collect();
+        let frame = encode_merged(&body_refs);
+        assert_eq!(frame.len(), merged_encoded_len(&body_refs));
+        assert_eq!(frame[0], TAG_MERGED);
+        let back = decode_merged(&frame).expect("decode merged");
+        assert_eq!(back.len(), members.len());
+        for (a, b) in members.iter().zip(&back) {
+            assert_eq!(a.worker, b.worker, "member slot order must be preserved");
+            assert_eq!(format!("{:?}", a.msg), format!("{:?}", b.msg));
+        }
+    }
+
+    #[test]
+    fn merged_frames_fail_cleanly_on_malformed_input() {
+        let dot = Dot::new(ProcessId(1), 2);
+        let body = encode_routed(&Routed { worker: 0, msg: Msg::MStable { dot } });
+        let frame = encode_merged(&[&body]);
+        // Truncation anywhere must error, not panic.
+        for cut in 0..frame.len() {
+            assert!(decode_merged(&frame[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        // A merged frame never appears in the bare-message position, in
+        // the routed position, or inside an MBatch member.
+        assert!(decode(&frame).is_err(), "merged frame must not decode as a Msg");
+        assert!(decode_routed(&frame).is_err(), "merged frame is not a routed frame");
+        let mut w = Writer::new();
+        w.u8(16);
+        w.u16(1);
+        w.u32(frame.len() as u32);
+        w.buf.extend_from_slice(&frame);
+        assert!(decode(&w.buf).is_err(), "merged frame inside MBatch must fail");
+        // Members must be routed envelopes (a bare message is not)...
+        let bare = encode(&Msg::MStable { dot });
+        assert!(decode_merged(&encode_merged(&[&bare])).is_err());
+        // ... never nested merged frames ...
+        assert!(decode_merged(&encode_merged(&[&frame])).is_err());
+        // ... and must consume their declared length exactly.
+        let mut padded = body.clone();
+        padded.push(0xEE);
+        assert!(decode_merged(&encode_merged(&[&padded])).is_err());
+    }
+
+    #[test]
+    fn frame_pool_recycles_buffers() {
+        let mut b = FrameBuf::take();
+        b.vec().extend_from_slice(&[1, 2, 3]);
+        let cap = b.vec().capacity();
+        b.recycle();
+        let hits_before = pool_stats::hits();
+        let mut b2 = FrameBuf::take();
+        // Either our buffer came back (same thread-local pool) or a
+        // concurrent test took it; in the former case it is cleared and
+        // keeps its capacity, and the take counted as a hit.
+        assert!(b2.bytes().is_empty(), "pooled buffers are handed out cleared");
+        if b2.vec().capacity() == cap {
+            assert!(pool_stats::hits() >= hits_before + 1, "recycled take must count as a hit");
+        }
+        b2.recycle();
     }
 
     #[test]

@@ -112,7 +112,12 @@ pub trait Process: Sized {
     ) -> Vec<Action<Self::Msg>>;
 
     /// Send `msg` to every process in `to` except ourselves; handle our own
-    /// copy inline.
+    /// copy inline. The peer fan-out is emitted as **one**
+    /// [`Action::SendShared`] carrying the message a single time — the
+    /// runtimes share it across all destinations (the TCP runtime
+    /// serializes it once; the simulator expands it into the identical
+    /// per-destination deliveries). A single peer degenerates to a plain
+    /// point-to-point [`Action::Send`].
     fn broadcast(
         &mut self,
         to: &[ProcessId],
@@ -122,16 +127,28 @@ pub trait Process: Sized {
     ) {
         let me = self.base().id;
         let mut to_self = false;
+        let mut peers = Vec::with_capacity(to.len());
         for &p in to {
             if p == me {
                 to_self = true;
             } else {
-                out.push(Action::send(p, msg.clone()));
+                peers.push(p);
             }
         }
         if to_self {
+            match peers.len() {
+                0 => {}
+                1 => out.push(Action::send(peers[0], msg.clone())),
+                _ => out.push(Action::SendShared { to: peers, msg: msg.clone() }),
+            }
             let actions = self.dispatch(me, msg, time);
             out.extend(actions);
+        } else {
+            match peers.len() {
+                0 => {}
+                1 => out.push(Action::send(peers[0], msg)),
+                _ => out.push(Action::SendShared { to: peers, msg }),
+            }
         }
     }
 
@@ -217,9 +234,29 @@ mod tests {
         let mut out = Vec::new();
         let to: Vec<ProcessId> = (0..3).map(ProcessId).collect();
         p.broadcast(&to, TestMsg::Ping, 0, &mut out);
-        // Two sends (P0, P2) and one inline self-delivery.
-        assert_eq!(out.len(), 2);
+        // One shared fan-out to (P0, P2) and one inline self-delivery.
+        assert_eq!(out.len(), 1);
+        match &out[0] {
+            Action::SendShared { to, msg } => {
+                assert_eq!(to, &vec![ProcessId(0), ProcessId(2)]);
+                assert_eq!(*msg, TestMsg::Ping);
+            }
+            other => panic!("expected a shared fan-out, got {other:?}"),
+        }
         assert_eq!(p.handled, vec![(ProcessId(1), TestMsg::Ping)]);
+    }
+
+    #[test]
+    fn broadcast_to_one_peer_stays_point_to_point() {
+        let config = Config::new(3, 1);
+        let mut p = Echo { bp: BaseProcess::new(ProcessId(1), config), handled: Vec::new() };
+        let mut out = Vec::new();
+        p.broadcast(&[ProcessId(0)], TestMsg::Pong, 0, &mut out);
+        assert!(
+            matches!(&out[0], Action::Send { to, msg: TestMsg::Pong } if *to == ProcessId(0)),
+            "a single-peer fan-out must not be wrapped: {out:?}"
+        );
+        assert!(p.handled.is_empty());
     }
 
     #[test]

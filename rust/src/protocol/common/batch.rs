@@ -128,7 +128,10 @@ impl<M> Batcher<M> {
     }
 }
 
-impl<M: BatchMsg> Batcher<M> {
+// `Clone` alongside `BatchMsg`: a shared fan-out enqueues one copy per
+// destination (cheap — protocol messages are `Arc`-backed), and every
+// protocol `Msg` is `Clone` already (`Process::Msg: Clone`).
+impl<M: BatchMsg + Clone> Batcher<M> {
     /// Route one protocol step's actions through the batcher: remote sends
     /// are queued per destination (emitting a batch whenever a queue
     /// reaches the size threshold); everything else passes through in
@@ -143,25 +146,47 @@ impl<M: BatchMsg> Batcher<M> {
         for action in actions {
             match action {
                 Action::Send { to, msg } if to != self.me && !msg.is_batch() => {
-                    let bytes = msg.approx_wire_bytes();
-                    let q = self.queues.entry(to).or_default();
-                    if q.msgs.is_empty() {
-                        q.oldest_at = now;
-                    }
-                    q.msgs.push(msg);
-                    q.bytes += bytes;
-                    self.queued += 1;
-                    if q.msgs.len() >= self.max_msgs || q.bytes >= BATCH_SOFT_MAX_BYTES {
-                        let msgs = std::mem::take(&mut q.msgs);
-                        q.bytes = 0;
-                        self.queued -= msgs.len();
-                        out.push(Action::send(to, self.wrap(msgs)));
+                    self.enqueue(to, msg, now, &mut out);
+                }
+                // A shared fan-out queues per destination like the
+                // equivalent sequence of point-to-point sends (clones
+                // are cheap: broadcast payloads are `Arc`-backed). The
+                // per-peer frame merger downstream restores the
+                // single-frame send the batcher splits here. A self
+                // destination (broadcast promises `to` never holds one)
+                // passes through unbatched, exactly like a self `Send`.
+                Action::SendShared { to, msg } if !msg.is_batch() => {
+                    for &dest in &to {
+                        if dest == self.me {
+                            out.push(Action::send(dest, msg.clone()));
+                        } else {
+                            self.enqueue(dest, msg.clone(), now, &mut out);
+                        }
                     }
                 }
                 other => out.push(other),
             }
         }
         out
+    }
+
+    /// Queue one message for `to`, flushing the destination's queue as a
+    /// batch if it reached the message-count or byte threshold.
+    fn enqueue(&mut self, to: ProcessId, msg: M, now: u64, out: &mut Vec<Action<M>>) {
+        let bytes = msg.approx_wire_bytes();
+        let q = self.queues.entry(to).or_default();
+        if q.msgs.is_empty() {
+            q.oldest_at = now;
+        }
+        q.msgs.push(msg);
+        q.bytes += bytes;
+        self.queued += 1;
+        if q.msgs.len() >= self.max_msgs || q.bytes >= BATCH_SOFT_MAX_BYTES {
+            let msgs = std::mem::take(&mut q.msgs);
+            q.bytes = 0;
+            self.queued -= msgs.len();
+            out.push(Action::send(to, self.wrap(msgs)));
+        }
     }
 
     /// Flush every queue: one send per destination holding messages.
@@ -313,6 +338,31 @@ mod tests {
         assert_eq!(out.len(), 2, "self-send and pre-batched frame pass through");
         assert_eq!(b.queued(), 0);
         assert!(matches!(&out[1], Action::Send { msg, .. } if *msg == pre));
+    }
+
+    #[test]
+    fn shared_fanouts_queue_per_destination() {
+        let mut b = batcher(2);
+        let fan = Action::SendShared {
+            to: vec![ProcessId(1), ProcessId(2)],
+            msg: TestMsg::One(7),
+        };
+        // One shared fan-out counts toward every destination's queue,
+        // exactly like the equivalent per-peer sends would.
+        let out = b.harvest(vec![fan, send(1, 8)], 0);
+        assert_eq!(out.len(), 1, "P1 reached the threshold: {out:?}");
+        match &out[0] {
+            Action::Send { to, msg: TestMsg::Batch(msgs) } => {
+                assert_eq!(*to, ProcessId(1));
+                assert_eq!(*msgs, vec![TestMsg::One(7), TestMsg::One(8)]);
+            }
+            other => panic!("expected a batch to P1, got {other:?}"),
+        }
+        assert_eq!(b.queued(), 1, "P2 still holds its copy");
+        let flushed = b.flush();
+        assert!(
+            matches!(&flushed[0], Action::Send { to, msg: TestMsg::One(7) } if *to == ProcessId(2))
+        );
     }
 
     #[test]

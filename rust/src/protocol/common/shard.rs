@@ -119,6 +119,12 @@ impl<P: Protocol> Sharded<P> {
             .into_iter()
             .map(|a| match a {
                 Action::Send { to, msg } => Action::Send { to, msg: Routed { worker, msg } },
+                Action::SendShared { to, msg } => {
+                    Action::SendShared { to, msg: Routed { worker, msg } }
+                }
+                // Already-encoded bodies carry their envelope in the
+                // bytes; nothing to lift.
+                Action::SendBytes { to, body } => Action::SendBytes { to, body },
                 Action::Submitted { dot } => Action::Submitted { dot },
                 Action::Execute { dot, cmd } => Action::Execute { dot, cmd },
                 Action::Reply { rid, response } => Action::Reply { rid, response },

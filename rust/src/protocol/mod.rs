@@ -43,6 +43,24 @@ pub enum Action<M> {
     /// delivered immediately by the runtimes, matching the paper's
     /// "self-addressed messages are delivered immediately").
     Send { to: ProcessId, msg: M },
+    /// The same message fanned out to several destinations
+    /// (`protocol::common::Process::broadcast`): one action, one shared
+    /// in-memory payload, no per-peer clones. The simulator expands it
+    /// into per-destination typed deliveries identical to the equivalent
+    /// sequence of `Send`s — determinism proofs are untouched — while
+    /// the TCP runtime serializes the message **once** and shares the
+    /// encoded body across every destination (lowered to [`Action::SendBytes`]).
+    /// `to` never contains the sender (self-copies dispatch inline).
+    SendShared { to: Vec<ProcessId>, msg: M },
+    /// An already-encoded wire body bound for `to` — the encode-once
+    /// byte path: the byte-level lowering of a [`Action::SendShared`]
+    /// fan-out (`net::encode_fanout` — the routed frame is serialized a
+    /// single time and every destination's `SendBytes` shares the same
+    /// `Arc`). The TCP runtime performs this same lowering inline on its
+    /// hot send path and writes any `SendBytes` handed to it verbatim as
+    /// `[len-prefix, body]` through the per-peer writer. Protocols and
+    /// the simulator never produce or consume this variant.
+    SendBytes { to: ProcessId, body: std::sync::Arc<[u8]> },
     /// `Protocol::submit` accepted the command and renamed it to `dot`
     /// (oracle/metrics only: the runtimes use it to correlate protocol
     /// identities with client request ids; clients never see it).

@@ -409,6 +409,23 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         self.process_actions(origin, actions, submit_at);
     }
 
+    /// Put one message on the (modeled) wire: charge the sender's
+    /// CPU/NIC resources and schedule the delivery.
+    fn send_one(&mut self, at: ProcessId, to: ProcessId, msg: P::Message, time: u64) {
+        let bytes = P::msg_size(&msg);
+        let from_site = self.config.site_of(at);
+        let to_site = self.config.site_of(to);
+        let depart = if let Some(model) = self.opts.resources {
+            let res = &mut self.resources[at.0 as usize];
+            let cpu_done = res.use_cpu(time as f64, model.cpu_cost_us(bytes));
+            res.use_out(cpu_done, model.wire_us(bytes)) as u64
+        } else {
+            time
+        };
+        let latency = self.opts.topology.latency_us(from_site, to_site, self.rng.gen_f64());
+        self.push(depart + latency, Event::Deliver { from: at, to, msg, bytes });
+    }
+
     fn process_actions(&mut self, at: ProcessId, actions: Vec<Action<P::Message>>, time: u64) {
         // The replica's executor applies Execute upcalls in order and
         // emits the Reply at the coordinator.
@@ -423,19 +440,29 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
                         self.process_actions(at, acts, time);
                         continue;
                     }
-                    let bytes = P::msg_size(&msg);
-                    let from_site = self.config.site_of(at);
-                    let to_site = self.config.site_of(to);
-                    let depart = if let Some(model) = self.opts.resources {
-                        let res = &mut self.resources[at.0 as usize];
-                        let cpu_done = res.use_cpu(time as f64, model.cpu_cost_us(bytes));
-                        res.use_out(cpu_done, model.wire_us(bytes)) as u64
-                    } else {
-                        time
-                    };
-                    let latency =
-                        self.opts.topology.latency_us(from_site, to_site, self.rng.gen_f64());
-                    self.push(depart + latency, Event::Deliver { from: at, to, msg, bytes });
+                    self.send_one(at, to, msg, time);
+                }
+                Action::SendShared { to, msg } => {
+                    // Expand the fan-out into per-destination typed
+                    // deliveries, identical (same order, same per-message
+                    // resource charges, same event keys) to the
+                    // equivalent sequence of `Send`s — so the
+                    // determinism/equivalence proofs see no difference.
+                    // The sim deliberately does not credit the TCP
+                    // runtime's encode-once saving; its resource model
+                    // stays conservative.
+                    for dest in to {
+                        if dest == at {
+                            let acts = self.procs[at.0 as usize].handle(at, msg.clone(), time);
+                            self.process_actions(at, acts, time);
+                        } else {
+                            self.send_one(at, dest, msg.clone(), time);
+                        }
+                    }
+                }
+                Action::SendBytes { .. } => {
+                    // Net-runtime-only lowering; protocols never emit it.
+                    debug_assert!(false, "SendBytes reached the simulator");
                 }
                 Action::Execute { dot, cmd } => {
                     if self.opts.record_execution {

@@ -115,6 +115,57 @@ impl StateMachine for KvStore {
     }
 }
 
+/// FNV-1a over the two children, with distinct seeds for leaves and odd
+/// promotions so the tree shape is part of the hash.
+fn merkle_mix(a: u64, b: u64) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for x in [a, b] {
+        for byte in x.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+const MERKLE_LEAF_SEED: u64 = 0x6c6561_66; // "leaf"
+const MERKLE_ODD_SEED: u64 = 0x6f6464; // "odd"
+
+/// Merkle-style root over per-worker-slot digests: hash each leaf with
+/// its position implied by tree shape, then combine pairwise up the
+/// tree. Unlike the XOR the TCP runtime used before, equal roots mean
+/// equal **leaf vectors** — two compensating slot differences cannot
+/// cancel — and an unequal root is localized to the diverging worker
+/// slot(s) by comparing the leaves directly ([`diverging_slots`]).
+pub fn merkle_root(leaves: &[u64]) -> u64 {
+    if leaves.is_empty() {
+        return 0;
+    }
+    let mut level: Vec<u64> =
+        leaves.iter().map(|&l| merkle_mix(MERKLE_LEAF_SEED, l)).collect();
+    while level.len() > 1 {
+        level = level
+            .chunks(2)
+            .map(|c| {
+                if c.len() == 2 {
+                    merkle_mix(c[0], c[1])
+                } else {
+                    merkle_mix(c[0], MERKLE_ODD_SEED)
+                }
+            })
+            .collect();
+    }
+    level[0]
+}
+
+/// Which worker slots two replicas disagree on, given their per-slot
+/// digest vectors (a length mismatch reports the tail slots of the
+/// longer vector). Empty ⇔ the vectors (and so the Merkle roots) agree.
+pub fn diverging_slots(a: &[u64], b: &[u64]) -> Vec<usize> {
+    let n = a.len().max(b.len());
+    (0..n).filter(|&i| a.get(i) != b.get(i)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +218,34 @@ mod tests {
         s.execute(&Command::single(rid(2), 9, Op::Get, 0));
         assert_eq!(s.digest(), d);
         assert_eq!(s.get(9).unwrap().version, 1);
+    }
+
+    #[test]
+    fn merkle_root_localizes_and_never_cancels() {
+        let slots = vec![11u64, 22, 33, 44];
+        assert_eq!(merkle_root(&slots), merkle_root(&slots.clone()), "deterministic");
+        // Single-slot divergence flips the root and is localized.
+        let mut bad = slots.clone();
+        bad[2] ^= 1;
+        assert_ne!(merkle_root(&slots), merkle_root(&bad));
+        assert_eq!(diverging_slots(&slots, &bad), vec![2]);
+        // The XOR pitfall: two compensating slot differences XOR to the
+        // same combined value but must NOT produce the same root.
+        let mut swapped = slots.clone();
+        swapped[0] ^= 0xFF;
+        swapped[1] ^= 0xFF;
+        assert_eq!(
+            slots.iter().fold(0u64, |acc, d| acc ^ d),
+            swapped.iter().fold(0u64, |acc, d| acc ^ d),
+            "XOR cannot tell these apart...",
+        );
+        assert_ne!(merkle_root(&slots), merkle_root(&swapped), "...the Merkle root can");
+        assert_eq!(diverging_slots(&slots, &swapped), vec![0, 1]);
+        // Tree-shape sensitivity: odd leaf counts, prefixes, empty.
+        assert_ne!(merkle_root(&slots), merkle_root(&slots[..3]));
+        assert_ne!(merkle_root(&[0]), merkle_root(&[0, 0]));
+        assert_eq!(merkle_root(&[]), 0);
+        assert!(diverging_slots(&slots, &slots[..3]).contains(&3));
     }
 
     #[test]

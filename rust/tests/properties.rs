@@ -379,6 +379,200 @@ fn prop_batches_reject_nested_client_frames() {
     });
 }
 
+/// Random message over every wire tag 0–16 (nested `MBatch` members
+/// included when `allow_batch`).
+fn random_msg(rng: &mut Rng, allow_batch: bool) -> tempo::protocol::tempo::msg::Msg {
+    use tempo::protocol::tempo::msg::{Msg, Phase};
+    use tempo::protocol::tempo::promises::PromiseSet;
+    let dot = Dot::new(ProcessId(rng.gen_range(16) as u32), 1 + rng.gen_range(1 << 20));
+    let keys: Vec<u64> = (0..1 + rng.gen_range(4)).map(|_| rng.gen_range(1 << 30)).collect();
+    let cmd = Command::new(
+        Rid::new(ClientId(rng.gen_range(1 << 16)), 1 + rng.gen_range(1 << 10)),
+        keys.clone(),
+        match rng.gen_range(3) {
+            0 => Op::Get,
+            1 => Op::Put,
+            _ => Op::Rmw,
+        },
+        rng.gen_range(512) as u32,
+    );
+    let quorums: tempo::protocol::tempo::msg::Quorums = vec![(
+        tempo::core::ShardId(0),
+        (0..1 + rng.gen_range(4)).map(|i| ProcessId(i as u32)).collect(),
+    )]
+    .into();
+    let ts: Vec<(u64, u64)> = keys.iter().map(|&k| (k, rng.gen_range(1 << 16))).collect();
+    let ps = |rng: &mut Rng| PromiseSet {
+        detached: (0..rng.gen_range(3)).map(|i| (20 * i + 1, 20 * i + 9)).collect(),
+        attached: if rng.gen_bool(0.5) { vec![(dot, rng.gen_range(100) + 1)] } else { vec![] },
+    };
+    let kp = |rng: &mut Rng| -> Vec<(u64, PromiseSet)> {
+        keys.iter().map(|&k| (k, ps(rng))).collect()
+    };
+    let phases = [
+        Phase::Start,
+        Phase::Payload,
+        Phase::Propose,
+        Phase::RecoverR,
+        Phase::RecoverP,
+        Phase::Commit,
+        Phase::Execute,
+    ];
+    match rng.gen_range(if allow_batch { 17 } else { 16 }) {
+        0 => Msg::MSubmit { dot, cmd, quorums },
+        1 => Msg::MPropose { dot, cmd, quorums, ts },
+        2 => Msg::MProposeAck { dot, ts, promises: kp(rng) },
+        3 => Msg::MPayload { dot, cmd, quorums },
+        4 => Msg::MCommit {
+            dot,
+            group: tempo::core::ShardId(rng.gen_range(4) as u32),
+            ts,
+            promises: (0..rng.gen_range(3))
+                .map(|i| (ProcessId(i as u32), kp(rng)))
+                .collect::<Vec<_>>()
+                .into(),
+        },
+        5 => Msg::MCommitDirect { dot, cmd, quorums, final_ts: rng.gen_range(1 << 16) },
+        6 => Msg::MConsensus { dot, ts, bal: rng.gen_range(1 << 10) },
+        7 => Msg::MConsensusAck { dot, bal: rng.gen_range(1 << 10) },
+        8 => Msg::MPromises { promises: kp(rng).into() },
+        9 => Msg::MBump { dot, ts: rng.gen_range(1 << 16) },
+        10 => Msg::MStable { dot },
+        11 => Msg::MRec { dot, bal: rng.gen_range(1 << 10) },
+        12 => Msg::MRecAck {
+            dot,
+            ts,
+            phase: phases[rng.gen_range(7) as usize],
+            abal: rng.gen_range(1 << 10),
+            bal: rng.gen_range(1 << 10),
+        },
+        13 => Msg::MRecNAck { dot, bal: rng.gen_range(1 << 10) },
+        14 => Msg::MCommitRequest { dot },
+        15 => Msg::MGarbageCollect {
+            executed: (0..rng.gen_range(5))
+                .map(|i| (ProcessId(i as u32), rng.gen_range(1 << 20)))
+                .collect(),
+        },
+        _ => Msg::MBatch {
+            msgs: (0..rng.gen_range(4)).map(|_| random_msg(rng, false)).collect(),
+        },
+    }
+}
+
+#[test]
+fn prop_encode_into_matches_encode_byte_for_byte() {
+    // The tentpole equivalence pin: for every tag 0–19 — nested MBatch
+    // members and Routed envelopes included — the append-into encoders
+    // produce exactly the legacy wrappers' bytes, the exact-size
+    // functions equal the measured lengths, and the encode-once shared
+    // broadcast body is the per-peer encoding byte-for-byte.
+    use tempo::net::wire::{
+        client_encoded_len, encode, encode_client, encode_client_into, encode_into,
+        encode_routed, encode_routed_shared, encoded_len, routed_encoded_len, ClientFrame,
+        Writer,
+    };
+    use tempo::protocol::common::shard::Routed;
+    forall_seeds("encode-into-equivalence", |seed| {
+        let mut rng = Rng::new(seed);
+        for _ in 0..20 {
+            let msg = random_msg(&mut rng, true);
+            let legacy = encode(&msg);
+            if encoded_len(&msg) != legacy.len() {
+                return Err(format!(
+                    "encoded_len {} != encode().len() {} for {msg:?}",
+                    encoded_len(&msg),
+                    legacy.len()
+                ));
+            }
+            // Appending must reproduce the wrapper bytes after any prefix.
+            let prefix_len = rng.gen_range(4) as usize;
+            let mut w = Writer::from_vec(vec![0xA5; prefix_len]);
+            encode_into(&mut w, &msg);
+            if w.buf[prefix_len..] != legacy[..] {
+                return Err(format!("encode_into != encode for {msg:?}"));
+            }
+            // Routed envelope (tag 19) and the shared broadcast body.
+            let worker = rng.gen_range(256) as u32;
+            let routed = Routed { worker, msg: msg.clone() };
+            let renc = encode_routed(&routed);
+            if routed_encoded_len(&routed) != renc.len() {
+                return Err("routed_encoded_len out of sync".into());
+            }
+            let shared = encode_routed_shared(worker, &msg);
+            if shared[..] != renc[..] {
+                return Err("encode_routed_shared != encode_routed".into());
+            }
+        }
+        // Client frames (tags 17–18).
+        let rid = Rid::new(ClientId(rng.gen_range(1 << 16)), 1 + rng.gen_range(1 << 10));
+        let frame = if rng.gen_bool(0.5) {
+            ClientFrame::Submit {
+                cmd: Command::single(rid, rng.gen_range(1 << 20), Op::Put, 32),
+            }
+        } else {
+            ClientFrame::Reply {
+                rid,
+                response: tempo::core::Response {
+                    versions: (0..rng.gen_range(4)).map(|i| (i, i + 1)).collect(),
+                },
+            }
+        };
+        let legacy = encode_client(&frame);
+        if client_encoded_len(&frame) != legacy.len() {
+            return Err("client_encoded_len out of sync".into());
+        }
+        let mut w = Writer::new();
+        encode_client_into(&mut w, &frame);
+        if w.buf != legacy {
+            return Err("encode_client_into != encode_client".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merged_frames_decode_to_the_same_members_in_slot_order() {
+    // The per-peer merger's frame (tag 20): whatever routed frames go
+    // in, the decoder returns the same member multiset in the same
+    // order — so each worker slot's per-peer FIFO survives merging —
+    // and truncations/bit-flips never panic.
+    use tempo::net::wire::{decode_merged, encode_merged, encode_routed};
+    use tempo::protocol::common::shard::Routed;
+    forall_seeds("merged-frame-multiset", |seed| {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.gen_range(6) as usize;
+        let members: Vec<Routed<_>> = (0..n)
+            .map(|_| Routed {
+                worker: rng.gen_range(4) as u32,
+                msg: random_msg(&mut rng, true),
+            })
+            .collect();
+        let bodies: Vec<Vec<u8>> = members.iter().map(encode_routed).collect();
+        let body_refs: Vec<&[u8]> = bodies.iter().map(|b| b.as_slice()).collect();
+        let frame = encode_merged(&body_refs);
+        let back = decode_merged(&frame).map_err(|e| e.to_string())?;
+        if back.len() != members.len() {
+            return Err(format!("{} members in, {} out", members.len(), back.len()));
+        }
+        for (i, (a, b)) in members.iter().zip(&back).enumerate() {
+            if a.worker != b.worker || format!("{:?}", a.msg) != format!("{:?}", b.msg) {
+                return Err(format!("member {i} changed across the merge"));
+            }
+        }
+        // Malformed inputs: truncation and bit flips error or decode
+        // differently — never panic.
+        let cut = rng.gen_range(frame.len() as u64) as usize;
+        if decode_merged(&frame[..cut]).is_ok() {
+            return Err(format!("truncation at {cut} decoded"));
+        }
+        let mut flipped = frame.clone();
+        let at = rng.gen_range(frame.len() as u64) as usize;
+        flipped[at] ^= 1u8 << (rng.gen_range(8) as u32);
+        let _ = decode_merged(&flipped);
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_tempo_sim_agreement_across_seeds() {
     // End-to-end safety sweep: random seeds, random conflict rates — the

@@ -29,6 +29,7 @@ use tempo::protocol::fpaxos::FPaxos;
 use tempo::protocol::tempo::Tempo;
 use tempo::protocol::Protocol;
 use tempo::sim::{run, SimOpts, SimResult, Topology};
+use tempo::store::{diverging_slots, merkle_root, KvStore};
 use tempo::util::prop::forall_seeds;
 use tempo::util::Rng;
 use tempo::workload::{CommandSpec, ConflictWorkload, Workload};
@@ -271,6 +272,60 @@ fn workers_gc_keeps_footprints_bounded() {
         );
     }
     assert_psmr(&config, &result, true);
+}
+
+#[test]
+fn merkle_store_digest_localizes_divergence_to_a_worker_slot() {
+    // The TCP runtime's NodeHandle::store_digest is a Merkle-style root
+    // over the per-worker-slot KV partition digests. Reconstruct the
+    // per-slot partitions from a sharded sim run (replay every process's
+    // execution log into one KvStore per slot, routed by the same
+    // worker_of_key hash the runtime uses): converged replicas must
+    // agree leaf-wise and on the root, and a corrupted slot must flip
+    // the root while diverging_slots names exactly that slot — the
+    // debugging story the XOR digest could not offer.
+    let workers = 4;
+    let config = Config::new(3, 1).with_workers(workers);
+    let mut o = SimOpts::new(Topology::ec2_three());
+    o.clients_per_site = 4;
+    o.warmup_us = 0;
+    o.duration_us = 2_000_000;
+    o.drain_us = 6_000_000;
+    o.seed = 51;
+    o.record_execution = true;
+    let result = run::<Sharded<Tempo>, _>(config, o, ConflictWorkload::new(0.2, 100));
+    assert!(result.metrics.ops > 40, "ops={}", result.metrics.ops);
+    let cmd_of: HashMap<Dot, _> =
+        result.submitted.iter().map(|(d, c)| (*d, c.clone())).collect();
+    let leaves_of = |log: &[(Dot, u64)]| -> Vec<u64> {
+        let mut slots: Vec<KvStore> = (0..workers).map(|_| KvStore::new()).collect();
+        for &(dot, _) in log {
+            let cmd = &cmd_of[&dot];
+            let w = worker_of_key(cmd.keys[0], workers);
+            slots[w].execute(cmd);
+        }
+        slots.iter().map(|s| s.digest()).collect()
+    };
+    let all_leaves: Vec<Vec<u64>> =
+        result.execution_logs.iter().map(|l| leaves_of(l.as_slice())).collect();
+    let roots: Vec<u64> = all_leaves.iter().map(|l| merkle_root(l)).collect();
+    for (p, leaves) in all_leaves.iter().enumerate() {
+        assert_eq!(
+            diverging_slots(&all_leaves[0], leaves),
+            Vec::<usize>::new(),
+            "P{p} disagrees with P0 on a slot partition"
+        );
+        assert_eq!(roots[p], roots[0], "equal leaves must give equal roots");
+    }
+    // Every slot saw traffic (the workload spreads keys across slots),
+    // so the localization below is meaningful.
+    let busy = all_leaves[0].iter().filter(|&&d| d != KvStore::new().digest()).count();
+    assert!(busy >= 2, "want multiple busy slots, got {busy}");
+    // Corrupt one slot of one replica: root flips, divergence localizes.
+    let mut bad = all_leaves[1].clone();
+    bad[2] = bad[2].wrapping_add(1);
+    assert_ne!(merkle_root(&bad), roots[0], "a diverged slot must flip the root");
+    assert_eq!(diverging_slots(&all_leaves[0], &bad), vec![2]);
 }
 
 #[test]
