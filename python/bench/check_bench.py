@@ -10,6 +10,12 @@ Validates the recorded BENCH_*.json baselines at the repo root:
 - BENCH_workers.json: must exist with ops/s and allocations-per-op for
   workers 1, 2 and 4 under both contention levels.
 - BENCH_batching.json: must exist with both throughput numbers.
+- BENCH_reads.json: stability-powered local reads must pay ~zero wire
+  bytes (``wire_bytes_per_local_read < 1``) and beat the write-path
+  baseline by at least ``--min-read-speedup`` (default 5.0), with mix
+  cells recorded for both the 95/5 and 50/50 read mixes and every read
+  served locally (``local_reads > 0``), whichever harness (Rust or the
+  Python port) recorded the file.
 - BENCH_wire.json: the encode-once fan-out must stay O(1) — for every
   message shape, ``encode_once_allocs_per_op`` at fan-out 8 must be at
   most fan-out 1 + 2 (an O(1) slack), and ``encode_once_ns_per_op`` at
@@ -43,9 +49,12 @@ def fail(msg):
 
 def main():
     min_speedup = 1.5
+    min_read_speedup = 5.0
     args = sys.argv[1:]
     if "--min-stability-speedup" in args:
         min_speedup = float(args[args.index("--min-stability-speedup") + 1])
+    if "--min-read-speedup" in args:
+        min_read_speedup = float(args[args.index("--min-read-speedup") + 1])
 
     stability = load("BENCH_stability.json")
     speedup = float(stability.get("speedup", 0.0))
@@ -114,6 +123,36 @@ def main():
         if reduction < 1.5:
             fail(f"BENCH_batching.json frame_reduction {reduction} < 1.5")
     print("batching: ok")
+
+    reads = load("BENCH_reads.json")
+    read_speedup = float(reads.get("read_speedup_vs_write_path", 0.0))
+    if read_speedup < min_read_speedup:
+        fail(
+            f"BENCH_reads.json read_speedup_vs_write_path {read_speedup} < "
+            f"{min_read_speedup} — local reads no longer beat the ordering path"
+        )
+    read_bytes = float(reads.get("wire_bytes_per_local_read", 1e9))
+    if read_bytes >= 1.0:
+        fail(
+            f"BENCH_reads.json wire_bytes_per_local_read {read_bytes} >= 1 — "
+            "a local read must not touch the wire"
+        )
+    if float(reads.get("local_read_ops_per_s", 0.0)) <= 0:
+        fail("BENCH_reads.json lacks a positive local_read_ops_per_s")
+    read_cells = reads.get("cells", [])
+    seen = {c.get("read_pct") for c in read_cells}
+    for pct in (95, 50):
+        if pct not in seen:
+            fail(f"BENCH_reads.json missing mix cell read_pct={pct}")
+    for c in read_cells:
+        if float(c.get("ops_per_s_wall", 0.0)) <= 0:
+            fail(f"BENCH_reads.json cell {c} lacks a positive ops/s measurement")
+        if int(c.get("local_reads", 0)) <= 0:
+            fail(f"BENCH_reads.json cell {c} served no local reads")
+    print(
+        f"reads: speedup {read_speedup} >= {min_read_speedup}, "
+        f"{read_bytes} wire B/read, {len(read_cells)} mix cells ok"
+    )
     print("all bench gates passed")
 
 

@@ -19,9 +19,11 @@ Messages are dicts with a ``t`` tag key, e.g.::
     {"t": "ClientReply", "rid": (7, 3), "response": [(1, 4)]}
 
 Dots are ``(origin, seq)`` tuples; rids are ``(client, seq)`` tuples;
-commands are dicts with ``rid``, ``op`` (0 Get / 1 Put / 2 Rmw),
-``payload_len``, ``batched`` and ``keys`` (the codec materializes
-``payload_len`` zero bytes of payload).
+commands are dicts with ``rid``, ``op`` (0 Get / 1 Put / 2 Rmw /
+3 Read), ``payload_len``, ``batched`` and ``keys`` (the codec
+materializes ``payload_len`` zero bytes of payload). Op 3 is the
+stability-served local read: same command layout, only the tag differs,
+so a read-flagged ``ClientSubmit`` costs exactly as many bytes as a Get.
 """
 
 import struct
@@ -139,7 +141,7 @@ class Reader:
     def cmd(self):
         rid = self.rid()
         op = self.u8()
-        if op > 2:
+        if op > 3:
             raise WireError(f"bad op tag {op}")
         payload_len = self.u32()
         batched = self.u32()
@@ -518,6 +520,57 @@ def self_check():
     try:
         decode_client(encode({"t": "MStable", "dot": dot}))
         raise AssertionError("protocol message decoded as a client frame")
+    except WireError:
+        pass
+    # Read-flagged ClientSubmit (op tag 3, the stability-served local
+    # read): exact round-trip at zero payload, truncation at every cut,
+    # bit-flips never escape WireError, and the frame stays on the client
+    # plane — both bare and smuggled inside an MBatch (mirrors the Rust
+    # prop_read_flagged_submits_roundtrip_and_stay_on_the_client_plane).
+    read_cmd = {"rid": (11, 3), "op": 3, "payload_len": 0, "batched": 0,
+                "keys": [4, 17, 99]}
+    read_submit = {"t": "ClientSubmit", "cmd": read_cmd}
+    enc = encode_client(read_submit)
+    got = decode_client(enc)
+    assert got == read_submit, got
+    assert got["cmd"]["op"] == 3 and got["cmd"]["payload_len"] == 0
+    for cut in range(len(enc)):
+        try:
+            decode_client(enc[:cut])
+            raise AssertionError(f"truncated read submit decoded at {cut}")
+        except WireError:
+            pass
+    for i in range(len(enc)):
+        for bit in range(8):
+            flipped = bytearray(enc)
+            flipped[i] ^= 1 << bit
+            try:
+                d = decode_client(bytes(flipped))
+                # A surviving decode must still be a well-formed frame —
+                # flips in key/rid bytes are indistinguishable from other
+                # valid values; what matters is: never a crash.
+                assert d["t"] in ("ClientSubmit", "ClientReply")
+            except WireError:
+                pass
+    try:
+        decode(enc)
+        raise AssertionError("read submit decoded as a protocol message")
+    except WireError:
+        pass
+    b = Writer()
+    b.u8(16), b.u16(1), b.u32(len(enc))
+    b.parts.append(enc)
+    try:
+        decode(b.bytes())
+        raise AssertionError("read submit inside MBatch decoded")
+    except WireError:
+        pass
+    # An op tag past Read (4+) is malformed in both planes.
+    bad_op = bytearray(enc)
+    bad_op[1 + 16] = 4  # frame tag + rid(16) puts the op byte at offset 17
+    try:
+        decode_client(bytes(bad_op))
+        raise AssertionError("op tag 4 decoded")
     except WireError:
         pass
     # An MBatch member carrying a client frame is rejected from the tag

@@ -1,0 +1,198 @@
+//! Stability-powered local-read bench: the cost of serving a read at the
+//! coordinator from the stability frontier vs ordering a command through
+//! the full write path. Writes `BENCH_reads.json` at the repo root.
+//!
+//! Three measurements:
+//!
+//! - **local-read service rate**: a hot loop of `Protocol::submit_read`
+//!   calls against one Tempo replica (frontier covering, so every read
+//!   serves instantly), absorbed through a real `Executor` so the number
+//!   includes the KV apply and reply construction — ns/read and reads/s.
+//!   Outbound protocol bytes are *counted*, not assumed: the gate wants
+//!   ~zero wire bytes per local read.
+//! - **write-path baseline**: ops/s-wall of an all-write single-key zipf
+//!   run through the deterministic simulator — the cost of the ordering
+//!   path a read skips. The headline ratio (local-read rate / write-path
+//!   rate) is what "coordination-free" buys per operation.
+//! - **mix cells**: 95/5 and 50/50 read mixes at low/high zipf contention
+//!   through the simulator, reporting the local-read share and the
+//!   degraded (slow) read count — all reads must serve locally.
+//!
+//! Run with: `cargo bench --bench reads`
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+use tempo::client::Session;
+use tempo::core::{ClientId, Config, ProcessId};
+use tempo::executor::Executor;
+use tempo::protocol::tempo::Tempo;
+use tempo::protocol::{Action, Protocol};
+use tempo::sim::{run, SimOpts, Topology};
+use tempo::store::KvStore;
+use tempo::workload::ZipfWorkload;
+
+/// Counts every heap allocation the process makes (same harness as
+/// `benches/workers.rs`).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Hot loop: `n` instant local reads against one replica, through the
+/// executor. Returns (reads/s, wire bytes/read, allocs/read).
+fn micro_local_reads(n: u64) -> (f64, f64, f64) {
+    let mut p = Tempo::new(ProcessId(0), Config::new(3, 1));
+    let mut exec = Executor::new(ProcessId(0), KvStore::new());
+    let mut session = Session::new(ClientId(1));
+    let mut wire_bytes = 0u64;
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for i in 0..n {
+        let cmd = session.read_single(i % 1024);
+        let actions = exec.absorb(p.submit_read(cmd, i));
+        for action in &actions {
+            match action {
+                Action::Send { msg, .. } => wire_bytes += Tempo::msg_size(msg),
+                Action::SendShared { to, msg } => {
+                    wire_bytes += to.len() as u64 * Tempo::msg_size(msg)
+                }
+                _ => {}
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let allocs = ALLOCS.load(Ordering::Relaxed) - a0;
+    assert_eq!(exec.reads_served(), n, "every read must serve locally");
+    assert_eq!(p.counters.local_reads, n);
+    (n as f64 / wall, wire_bytes as f64 / n as f64, allocs as f64 / n as f64)
+}
+
+struct MixCell {
+    read_pct: u32,
+    theta: f64,
+    ops: u64,
+    ops_per_s_wall: f64,
+    local_reads: u64,
+    slow_reads: u64,
+}
+
+fn sim_opts() -> SimOpts {
+    let mut o = SimOpts::new(Topology::ec2_three());
+    o.clients_per_site = 32;
+    o.warmup_us = 500_000;
+    o.duration_us = 4_000_000;
+    o.seed = 7;
+    o
+}
+
+fn mix(read_ratio: f64, theta: f64) -> MixCell {
+    let config = Config::new(3, 1);
+    let workload = ZipfWorkload::new(10_000, theta, 100).with_read_ratio(read_ratio);
+    let t0 = Instant::now();
+    let result = run::<Tempo, _>(config, sim_opts(), workload);
+    let wall = t0.elapsed().as_secs_f64();
+    MixCell {
+        read_pct: (read_ratio * 100.0) as u32,
+        theta,
+        ops: result.metrics.ops,
+        ops_per_s_wall: result.metrics.ops as f64 / wall,
+        local_reads: result.metrics.counters.local_reads,
+        slow_reads: result.metrics.counters.slow_reads,
+    }
+}
+
+fn main() {
+    println!("--- local-read bench (tempo r=3 f=1) ---");
+
+    let n = 2_000_000;
+    let (reads_per_s, bytes_per_read, allocs_per_read) = micro_local_reads(n);
+    println!(
+        "local reads : {reads_per_s:>12.0} reads/s, {bytes_per_read:.4} wire B/read, \
+         {allocs_per_read:.1} allocs/read"
+    );
+
+    // Write-path baseline: the same zipf shape, every command ordered.
+    let baseline = mix(0.0, 0.5);
+    println!(
+        "write path  : {:>12.0} ops/s-wall ({} ops)",
+        baseline.ops_per_s_wall, baseline.ops
+    );
+    let speedup = reads_per_s / baseline.ops_per_s_wall;
+    println!("read speedup vs write path: {speedup:.1}x");
+
+    let mut cells = Vec::new();
+    for &(ratio, theta) in &[(0.95, 0.5), (0.95, 0.99), (0.5, 0.5), (0.5, 0.99)] {
+        let c = mix(ratio, theta);
+        println!(
+            "mix {}/{} theta={:<4}: {:>8} ops, {:>10.0} ops/s-wall, {} local reads, {} slow",
+            c.read_pct,
+            100 - c.read_pct,
+            c.theta,
+            c.ops,
+            c.ops_per_s_wall,
+            c.local_reads,
+            c.slow_reads
+        );
+        cells.push(c);
+    }
+
+    let mut rows = String::new();
+    for (i, c) in cells.iter().enumerate() {
+        let contention = if c.theta < 0.9 { "low" } else { "high" };
+        rows.push_str(&format!(
+            "    {{\"read_pct\": {}, \"zipf_theta\": {}, \"contention\": \"{}\", \
+             \"ops\": {}, \"ops_per_s_wall\": {:.0}, \"local_reads\": {}, \
+             \"slow_reads\": {}}}{}\n",
+            c.read_pct,
+            c.theta,
+            contention,
+            c.ops,
+            c.ops_per_s_wall,
+            c.local_reads,
+            c.slow_reads,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"local_reads\",\n  \
+         \"workload\": \"tempo r=3 f=1; micro loop of {n} instant local reads \
+         through a real Executor; write baseline and read mixes are single-key \
+         zipf over 10k keys, 96 closed-loop clients, 4s sim window\",\n  \
+         \"local_read_ops_per_s\": {reads_per_s:.0},\n  \
+         \"wire_bytes_per_local_read\": {bytes_per_read:.4},\n  \
+         \"allocs_per_local_read\": {allocs_per_read:.1},\n  \
+         \"write_path_ops_per_s\": {base:.0},\n  \
+         \"read_speedup_vs_write_path\": {speedup:.1},\n  \
+         \"harness\": \"rust (cargo bench --bench reads)\",\n  \
+         \"cells\": [\n{rows}  ],\n  \
+         \"regenerate\": \"cargo bench --bench reads\"\n}}\n",
+        base = baseline.ops_per_s_wall,
+    );
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(d) => format!("{d}/../BENCH_reads.json"),
+        Err(_) => "BENCH_reads.json".to_string(),
+    };
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("local-read baseline written to {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -20,7 +20,7 @@
 //!   perfectly ordered yet reply garbage; this catches it.
 
 use crate::core::{key_to_shard, Command, Dot, Key, ProcessId, Rid};
-use crate::sim::SimResult;
+use crate::sim::{ReadAudit, SimResult};
 use crate::store::KvStore;
 use std::collections::{HashMap, HashSet};
 
@@ -37,6 +37,16 @@ pub enum Violation {
     /// sequential oracle computes at `process` (the coordinator) for the
     /// command's position in that replica's execution order.
     ResponseMismatch { process: ProcessId, dot: Dot, rid: Rid },
+    /// A locally-served read at `process` missed a write on `key`: the
+    /// write's decided timestamp is at or below the timestamp the read's
+    /// release claimed was `covered`, yet the write executed only after
+    /// the read's audit position — the stale read the stability argument
+    /// (Theorem 1) forbids.
+    StaleLocalRead { process: ProcessId, key: Key, write: Dot, write_ts: u64, covered: u64 },
+    /// The response a local read's client observed differs from the
+    /// sequential oracle's replay of the serving replica's log up to the
+    /// read's audit position.
+    ReadResponseMismatch { process: ProcessId, rid: Rid },
 }
 
 /// Configuration view the checker needs.
@@ -98,7 +108,7 @@ pub fn check_psmr(
     // baselines exploit this; Tempo orders everything, which also passes).
     let mut key_order: HashMap<Key, Vec<Dot>> = HashMap::new();
     {
-        let is_write = |dot: &Dot| submitted.get(dot).is_none_or(|c| c.op != crate::core::Op::Get);
+        let is_write = |dot: &Dot| submitted.get(dot).is_none_or(|c| !c.op.is_read());
         // key → per-process projected sequences
         let mut projections: HashMap<Key, Vec<(ProcessId, Vec<Dot>)>> = HashMap::new();
         for (p, order) in per_proc.iter().enumerate() {
@@ -184,7 +194,7 @@ pub fn check_psmr(
                     _ => continue,
                 };
                 // Only conflicting pairs constrain the order.
-                if ca.op == crate::core::Op::Get && da.op == crate::core::Op::Get {
+                if ca.op.is_read() && da.op.is_read() {
                     continue;
                 }
                 for &k in ca.keys.iter() {
@@ -210,7 +220,7 @@ pub fn check_psmr(
     // Union of per-key execution orders (consecutive edges); a cycle means
     // two partitions ordered two commands in contradictory ways.
     {
-        let is_write = |dot: &Dot| submitted.get(dot).is_none_or(|c| c.op != crate::core::Op::Get);
+        let is_write = |dot: &Dot| submitted.get(dot).is_none_or(|c| !c.op.is_read());
         let mut indeg: HashMap<Dot, usize> = HashMap::new();
         let mut adj: HashMap<Dot, Vec<Dot>> = HashMap::new();
         let mut edge = |a: Dot, b: Dot, adj: &mut HashMap<Dot, Vec<Dot>>,
@@ -296,6 +306,82 @@ pub fn check_psmr(
                                 });
                             }
                         }
+                    }
+                }
+            }
+        }
+    }
+
+    // --- Local-read linearizability (stability-powered reads) -------------
+    // A locally-served read observed exactly the writes in the serving
+    // replica's log prefix [..pos] (the audit point). The release claimed
+    // the frontier covered timestamp `covered`, i.e. "every write stably
+    // ordered at or below `covered` on the read's keys has executed":
+    // such a write appearing *after* the audit point is a stale read.
+    // Additionally, the response the client observed must equal a
+    // sequential oracle's replay of that prefix — this also pins the
+    // bounded-staleness semantics (a slack read returns the state as of
+    // its audit point, never a state that existed at no point).
+    {
+        let mut ts_of: HashMap<Dot, u64> = HashMap::new();
+        for &(dot, ts) in &result.decided_ts {
+            ts_of.insert(dot, ts);
+        }
+        let mut observed: HashMap<Rid, &crate::core::Response> = HashMap::new();
+        for c in &result.completions {
+            observed.entry(c.rid).or_insert(&c.response);
+        }
+        for (p, audits) in result.read_audits.iter().enumerate() {
+            if audits.is_empty() {
+                continue;
+            }
+            let process = ProcessId(p as u32);
+            let log = &result.execution_logs[p];
+            for audit in audits {
+                for &(dot, _) in &log[audit.pos..] {
+                    let cmd = match submitted.get(&dot) {
+                        Some(c) if !c.op.is_read() => c,
+                        _ => continue,
+                    };
+                    let wts = match ts_of.get(&dot) {
+                        Some(&t) if t > 0 && t <= audit.covered => t,
+                        _ => continue,
+                    };
+                    if let Some(&k) = cmd.keys.iter().find(|k| audit.cmd.keys.contains(k)) {
+                        violations.push(Violation::StaleLocalRead {
+                            process,
+                            key: k,
+                            write: dot,
+                            write_ts: wts,
+                            covered: audit.covered,
+                        });
+                    }
+                }
+            }
+            // Replay the log, serving each read at its audit position
+            // (reads never mutate the oracle, so same-position reads
+            // cannot disturb each other).
+            let mut by_pos: Vec<&ReadAudit> = audits.iter().collect();
+            by_pos.sort_by_key(|a| a.pos);
+            let mut next = 0usize;
+            let mut oracle = KvStore::new();
+            for i in 0..=log.len() {
+                while next < by_pos.len() && by_pos[next].pos == i {
+                    let audit = by_pos[next];
+                    next += 1;
+                    let resp = oracle.execute(&audit.cmd);
+                    if let Some(&obs) = observed.get(&audit.cmd.rid) {
+                        if *obs != resp {
+                            violations.push(Violation::ReadResponseMismatch {
+                                process,
+                                rid: audit.cmd.rid,
+                            });
+                        }
+                    }
+                }
+                if i < log.len() {
+                    if let Some(cmd) = submitted.get(&log[i].0) {
+                        oracle.execute(cmd);
                     }
                 }
             }

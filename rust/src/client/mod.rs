@@ -66,6 +66,22 @@ impl Session {
     pub fn single(&mut self, key: Key, op: Op, payload_len: u32) -> Command {
         Command::single(self.next_rid(), key, op, payload_len)
     }
+
+    /// Build a read-only command over `keys` ([`Op::Read`], the
+    /// stability-powered read class): submitted via
+    /// `Protocol::submit_read`, it is served at the contacted replica with
+    /// zero protocol messages once the stability frontier covers its
+    /// timestamp (on protocol families without a frontier it degrades to
+    /// the ordinary ordering path). On the wire it is a `ClientSubmit`
+    /// frame whose command carries op tag 3 (docs/WIRE.md).
+    pub fn read(&mut self, keys: Vec<Key>) -> Command {
+        Command::read(self.next_rid(), keys)
+    }
+
+    /// Single-key shorthand for [`Session::read`].
+    pub fn read_single(&mut self, key: Key) -> Command {
+        Command::read(self.next_rid(), vec![key])
+    }
 }
 
 #[cfg(test)]

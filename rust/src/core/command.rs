@@ -47,6 +47,19 @@ pub enum Op {
     Put,
     /// Read-modify-write (always conflicting, used by YCSB+T updates).
     Rmw,
+    /// Stability-powered read: executes locally at the coordinator with
+    /// no broadcast once its timestamp is covered by the stability
+    /// frontier (`Protocol::submit_read`). Observes state like [`Op::Get`]
+    /// but never enters the ordering protocol on families that support
+    /// local reads; the others degrade it to an ordinary command.
+    Read,
+}
+
+impl Op {
+    /// Ops that never mutate state (Get and the local-read class).
+    pub fn is_read(&self) -> bool {
+        matches!(self, Op::Get | Op::Read)
+    }
 }
 
 /// An application command submitted by a client.
@@ -90,6 +103,13 @@ impl Command {
     pub fn single(rid: Rid, key: Key, op: Op, payload_len: u32) -> Self {
         clone_stats::record_alloc();
         Self { rid, keys: vec![key].into(), op, payload_len, batched: 1 }
+    }
+
+    /// A read-only command over `keys` ([`Op::Read`]): eligible for the
+    /// coordination-free local-read path where the protocol supports it.
+    /// Reads carry no payload.
+    pub fn read(rid: Rid, keys: Vec<Key>) -> Self {
+        Self::new(rid, keys, Op::Read, 0)
     }
 
     /// The issuing client (from the request id).

@@ -65,6 +65,21 @@ pub struct Config {
     /// (plus one tick of quantization). 0 (the default) flushes every
     /// held queue on every tick.
     pub batch_max_delay_us: u64,
+    /// Bounded-staleness slack for the local-read path, in timestamp
+    /// units. A local read assigned timestamp `ts` normally waits until
+    /// the stability frontier covers `ts`; with slack `s` it is served as
+    /// soon as the frontier covers `ts - s` — i.e. it observes state as
+    /// of `frontier` and may miss the writes in the last `s` timestamps.
+    /// 0 (the default) is the strict stable-read level.
+    pub read_slack: u64,
+    /// TEST KNOB — artificially inflate the stability frontier the
+    /// local-read path consults by this many timestamp units. A non-zero
+    /// skew releases reads *before* the writes ordered under them have
+    /// stabilized, which is exactly the bug the checker's
+    /// read-linearizability oracle exists to catch (the negative test in
+    /// `rust/tests/reads.rs` proves the oracle bites). Never set this
+    /// outside tests. 0 (the default) is the sound frontier.
+    pub read_frontier_skew: u64,
 }
 
 impl Config {
@@ -85,6 +100,8 @@ impl Config {
             batch_max_msgs: 0,
             batch_hold: true,
             batch_max_delay_us: 0,
+            read_slack: 0,
+            read_frontier_skew: 0,
         }
     }
 
@@ -146,6 +163,21 @@ impl Config {
     /// [`Config::batch_max_delay_us`]; 0 flushes every tick).
     pub fn with_batch_max_delay_us(mut self, us: u64) -> Self {
         self.batch_max_delay_us = us;
+        self
+    }
+
+    /// Bounded-staleness slack for local reads (see
+    /// [`Config::read_slack`]; 0 = strict stable reads).
+    pub fn with_read_slack(mut self, slack: u64) -> Self {
+        self.read_slack = slack;
+        self
+    }
+
+    /// TEST KNOB: artificially inflate the local-read stability frontier
+    /// (see [`Config::read_frontier_skew`]). Exists so the negative
+    /// oracle test can prove unsound early release is caught.
+    pub fn with_read_frontier_skew(mut self, skew: u64) -> Self {
+        self.read_frontier_skew = skew;
         self
     }
 

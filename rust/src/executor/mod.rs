@@ -31,12 +31,13 @@ pub struct Executor<S: StateMachine = KvStore> {
     id: ProcessId,
     sm: S,
     executed: u64,
+    reads_served: u64,
 }
 
 impl<S: StateMachine> Executor<S> {
     /// Build the executor of replica `id` over state machine `sm`.
     pub fn new(id: ProcessId, sm: S) -> Self {
-        Executor { id, sm, executed: 0 }
+        Executor { id, sm, executed: 0, reads_served: 0 }
     }
 
     /// The wrapped state machine (digest checks, test oracles).
@@ -44,9 +45,17 @@ impl<S: StateMachine> Executor<S> {
         &self.sm
     }
 
-    /// Commands applied so far.
+    /// Commands applied so far. Local reads are counted separately
+    /// ([`Executor::reads_served`]): they execute only at their
+    /// coordinator, so folding them in here would make replicas'
+    /// executed counts diverge on read-heavy workloads.
     pub fn executed(&self) -> u64 {
         self.executed
+    }
+
+    /// Local reads served by this replica (`Action::ExecuteRead`).
+    pub fn reads_served(&self) -> u64 {
+        self.reads_served
     }
 
     /// Apply one executed command; returns the reply to route to the
@@ -63,19 +72,32 @@ impl<S: StateMachine> Executor<S> {
     /// everything else passes through untouched. Runtimes call this on
     /// every action batch a protocol step returns.
     pub fn absorb<M>(&mut self, actions: Vec<Action<M>>) -> Vec<Action<M>> {
-        if !actions.iter().any(|a| matches!(a, Action::Execute { .. })) {
+        if !actions
+            .iter()
+            .any(|a| matches!(a, Action::Execute { .. } | Action::ExecuteRead { .. }))
+        {
             return actions;
         }
         let mut out = Vec::with_capacity(actions.len() + 1);
         for action in actions {
             match action {
-                Action::Execute { dot, cmd } => {
+                Action::Execute { dot, cmd, ts } => {
                     let reply = self.apply(dot, &cmd);
                     let rid = cmd.rid;
-                    out.push(Action::Execute { dot, cmd });
+                    out.push(Action::Execute { dot, cmd, ts });
                     if let Some(response) = reply {
                         out.push(Action::Reply { rid, response });
                     }
+                }
+                Action::ExecuteRead { cmd, covered, slack } => {
+                    // A local read exists only at its coordinator (it was
+                    // never broadcast and never acquired a dot), so the
+                    // reply is unconditional.
+                    let response = self.sm.apply(&cmd);
+                    self.reads_served += 1;
+                    let rid = cmd.rid;
+                    out.push(Action::ExecuteRead { cmd, covered, slack });
+                    out.push(Action::Reply { rid, response });
                 }
                 other => out.push(other),
             }
@@ -102,8 +124,10 @@ mod tests {
         let mut other = Executor::new(ProcessId(2), KvStore::new());
         let c = cmd(7, 1, 5);
         let dot = Dot::new(origin, 1);
-        let at_coord = coord.absorb::<TestMsg>(vec![Action::Execute { dot, cmd: c.clone() }]);
-        let at_other = other.absorb::<TestMsg>(vec![Action::Execute { dot, cmd: c.clone() }]);
+        let at_coord =
+            coord.absorb::<TestMsg>(vec![Action::Execute { dot, cmd: c.clone(), ts: 1 }]);
+        let at_other =
+            other.absorb::<TestMsg>(vec![Action::Execute { dot, cmd: c.clone(), ts: 1 }]);
         assert_eq!(at_coord.len(), 2, "coordinator must emit the reply");
         match &at_coord[1] {
             Action::Reply { rid, response } => {
@@ -127,8 +151,8 @@ mod tests {
         let c2 = cmd(1, 2, 9);
         let actions: Vec<Action<TestMsg>> = vec![
             Action::Committed { dot: Dot::new(me, 1), fast: true },
-            Action::Execute { dot: Dot::new(me, 1), cmd: c1.clone() },
-            Action::Execute { dot: Dot::new(me, 2), cmd: c2.clone() },
+            Action::Execute { dot: Dot::new(me, 1), cmd: c1.clone(), ts: 1 },
+            Action::Execute { dot: Dot::new(me, 2), cmd: c2.clone(), ts: 2 },
         ];
         let out = e.absorb(actions);
         assert_eq!(out.len(), 5);
@@ -142,6 +166,37 @@ mod tests {
             }
             other => panic!("replies misplaced: {other:?}"),
         }
+    }
+
+    #[test]
+    fn local_reads_always_reply_and_never_mutate() {
+        let me = ProcessId(0);
+        let mut e = Executor::new(me, KvStore::new());
+        e.absorb::<TestMsg>(vec![Action::Execute {
+            dot: Dot::new(me, 1),
+            cmd: cmd(1, 1, 5),
+            ts: 1,
+        }]);
+        let digest = e.state().digest();
+        // The read carries no dot — the reply must come anyway, the
+        // store must not change, and `executed` must not move.
+        let read = Command::read(Rid::new(ClientId(2), 1), vec![5]);
+        let out = e.absorb::<TestMsg>(vec![Action::ExecuteRead {
+            cmd: read.clone(),
+            covered: 1,
+            slack: false,
+        }]);
+        assert_eq!(out.len(), 2);
+        match &out[1] {
+            Action::Reply { rid, response } => {
+                assert_eq!(*rid, read.rid);
+                assert_eq!(response.versions, vec![(5, 1)]);
+            }
+            other => panic!("expected a reply, got {other:?}"),
+        }
+        assert_eq!(e.state().digest(), digest);
+        assert_eq!(e.executed(), 1);
+        assert_eq!(e.reads_served(), 1);
     }
 
     #[test]

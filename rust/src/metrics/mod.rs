@@ -95,6 +95,21 @@ pub struct Counters {
     /// (`net::wire::pool_stats`; process-wide, so node-level counters
     /// report the runtime's pooling behaviour as a whole).
     pub pooled_hits: u64,
+    /// Reads served by the coordination-free local path (released by the
+    /// stability frontier, zero protocol messages).
+    pub local_reads: u64,
+    /// Reads degraded to the full ordering path (multi-group key sets,
+    /// or a protocol family without a stability frontier).
+    pub slow_reads: u64,
+    /// Local reads whose release needed the bounded-staleness slack
+    /// (`Config::read_slack`): the strict frontier had not reached their
+    /// timestamp yet, the slackened one had.
+    pub read_slack_served: u64,
+    /// Bytes of peer wire traffic caused by the read path (the TCP
+    /// runtime attributes the encoded protocol frames a read submission
+    /// produced; a local read contributes 0 — the observable
+    /// zero-wire-traffic claim).
+    pub read_path_bytes: u64,
 }
 
 impl Counters {
@@ -120,6 +135,10 @@ impl Counters {
         self.bytes_sent += o.bytes_sent;
         self.frames_merged += o.frames_merged;
         self.pooled_hits += o.pooled_hits;
+        self.local_reads += o.local_reads;
+        self.slow_reads += o.slow_reads;
+        self.read_slack_served += o.read_slack_served;
+        self.read_path_bytes += o.read_path_bytes;
     }
 
     /// Mean number of messages per flushed batch (0 when batching never

@@ -121,6 +121,9 @@ impl Writer {
             Op::Get => 0,
             Op::Put => 1,
             Op::Rmw => 2,
+            // The read flag of the local-read path: op tag 3 marks a
+            // `ClientSubmit` as eligible for `Protocol::submit_read`.
+            Op::Read => 3,
         });
         self.u32(c.payload_len);
         self.u32(c.batched);
@@ -367,6 +370,7 @@ impl<'a> Reader<'a> {
             0 => Op::Get,
             1 => Op::Put,
             2 => Op::Rmw,
+            3 => Op::Read,
             x => bail!("bad op tag {x}"),
         };
         let payload_len = self.u32()?;

@@ -351,7 +351,8 @@ impl Caesar {
             info.phase = Phase::Executed;
             self.gc.record_executed(dot);
             self.counters.executed += 1;
-            out.push(Action::Execute { dot, cmd: info.cmd.clone() });
+            let cmd = info.cmd.clone();
+            out.push(Action::Execute { dot, cmd, ts });
             // Wake commands blocked on this one.
             if let Some(waiters) = self.exec_blocked.remove(&dot) {
                 queue.extend(waiters);
@@ -561,6 +562,13 @@ impl Protocol for Caesar {
         let ticks = self.ticks;
         self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
         self.outbound(out, true, time)
+    }
+
+    /// Caesar's whitelist watermark is not a read frontier: reads run
+    /// through the full timestamp-consensus path (counted as slow reads).
+    fn submit_read(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+        self.counters.slow_reads += 1;
+        self.submit(cmd, time)
     }
 
     fn crash(&mut self) {

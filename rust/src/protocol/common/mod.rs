@@ -5,7 +5,8 @@
 //! batching ([`batch`]), generic per-command bookkeeping
 //! ([`CommandsInfo`]), group-wide garbage collection of executed commands
 //! ([`GCTrack`]), the stability kernel shared with the runtime
-//! ([`stability`]), per-key worker sharding of whole replicas
+//! ([`stability`]), parking for stability-powered local reads
+//! ([`read`]), per-key worker sharding of whole replicas
 //! ([`shard`]), and wire-size accounting ([`wire`]).
 //!
 //! Layering: `core` → `protocol/common` → protocol implementations
@@ -18,6 +19,7 @@ pub mod base;
 pub mod batch;
 pub mod gc;
 pub mod info;
+pub mod read;
 pub mod shard;
 pub mod stability;
 pub mod wire;
@@ -26,5 +28,6 @@ pub use base::{BaseProcess, Process};
 pub use batch::{BatchMsg, Batcher};
 pub use gc::{GCTrack, GcProcess};
 pub use info::CommandsInfo;
+pub use read::{ParkedRead, ReadStash};
 pub use shard::{worker_of_cmd, worker_of_dot, worker_of_key, Routed, Sharded};
 pub use stability::{majority_watermark, ExecutedSet, QuorumFrontier, SourceTracker};

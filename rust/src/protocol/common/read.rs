@@ -1,0 +1,155 @@
+//! The read stash: parking for stability-powered local reads.
+//!
+//! A read-only command (`Op::Read`) submitted at its coordinator is
+//! assigned the replica's *current* timestamp for its keys — no clock
+//! bump, no proposal, no quorum. The read can execute the moment the
+//! slot's stability frontier covers that timestamp: by timestamp
+//! stability (paper §3.2, Theorem 1) no write can ever again acquire a
+//! timestamp at or below the frontier, so the read is already ordered
+//! against every write that can precede it. Until then the read parks
+//! here, keyed by `(release target timestamp, arrival order)` — each
+//! protocol worker slot owns one stash, so the `(worker slot, timestamp)`
+//! key of the design is the (instance, BTreeMap key) pair.
+//!
+//! The stash is deliberately protocol-agnostic: it stores commands and
+//! release targets and asks the owning protocol — via a predicate over
+//! `(command, target)` — which entries its frontier covers. Tempo answers
+//! from `PromiseStore`'s cached majority watermark in O(1) per key
+//! (`protocol::tempo`); families without a frontier never construct a
+//! stash (their `submit_read` degrades to the ordinary ordering path).
+
+use crate::core::{Command, Key};
+use std::collections::BTreeMap;
+
+/// One parked (or just-released) read.
+#[derive(Clone, Debug)]
+pub struct ParkedRead {
+    /// The read-only command (op `Op::Read`).
+    pub cmd: Command,
+    /// Release target: the timestamp the frontier must cover. For strict
+    /// reads this is the read's assigned timestamp `ts`; under bounded
+    /// staleness (`Config::read_slack = s`) it is `ts - s` — the read
+    /// then provably observes every write up to `target` and may miss
+    /// writes in `(target, ts]`.
+    pub target: u64,
+    /// The read's assigned timestamp (max of its keys' clock values at
+    /// submission). `target < ts` iff slack was configured.
+    pub ts: u64,
+}
+
+impl ParkedRead {
+    /// Was this read's release target lowered by the staleness slack?
+    pub fn slackened(&self) -> bool {
+        self.target < self.ts
+    }
+}
+
+/// Parked reads of one protocol worker slot, ordered by release target so
+/// frontier advances release the longest-waiting timestamps first.
+#[derive(Debug, Default)]
+pub struct ReadStash {
+    parked: BTreeMap<(u64, u64), ParkedRead>,
+    next_seq: u64,
+}
+
+impl ReadStash {
+    /// Park a read until the frontier covers `target`.
+    pub fn park(&mut self, cmd: Command, target: u64, ts: u64) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.parked.insert((target, seq), ParkedRead { cmd, target, ts });
+    }
+
+    /// Release every parked read whose `(command, target)` the owning
+    /// protocol's frontier now covers, preserving arrival order within a
+    /// release target. Reads on still-uncovered keys stay parked — a
+    /// blocked read on a hot key must not hold back a ready read on a
+    /// quiet one, so each entry is tested independently.
+    pub fn release(&mut self, mut covered: impl FnMut(&Command, u64) -> bool) -> Vec<ParkedRead> {
+        if self.parked.is_empty() {
+            return Vec::new();
+        }
+        let ready: Vec<(u64, u64)> = self
+            .parked
+            .iter()
+            .filter(|((target, _), p)| covered(&p.cmd, *target))
+            .map(|(&k, _)| k)
+            .collect();
+        ready.iter().map(|k| self.parked.remove(k).expect("key just listed")).collect()
+    }
+
+    /// Number of reads currently parked (footprint diagnostics).
+    pub fn len(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Is the stash empty? (Cheap fast-path guard for release sweeps.)
+    pub fn is_empty(&self) -> bool {
+        self.parked.is_empty()
+    }
+
+    /// Keys some parked read is waiting on (diagnostics/tests).
+    pub fn waiting_keys(&self) -> Vec<Key> {
+        let mut keys: Vec<Key> =
+            self.parked.values().flat_map(|p| p.cmd.keys.iter().copied()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ClientId, Op, Rid};
+
+    fn read(c: u64, keys: Vec<u64>) -> Command {
+        Command::new(Rid::new(ClientId(c), 1), keys, Op::Read, 0)
+    }
+
+    #[test]
+    fn releases_in_target_order_when_frontier_advances() {
+        let mut stash = ReadStash::default();
+        stash.park(read(1, vec![7]), 5, 5);
+        stash.park(read(2, vec![7]), 3, 3);
+        stash.park(read(3, vec![7]), 9, 9);
+        assert_eq!(stash.len(), 3);
+        // Frontier at 5: targets 3 and 5 release (ascending), 9 stays.
+        let out = stash.release(|_, target| target <= 5);
+        assert_eq!(out.iter().map(|p| p.target).collect::<Vec<_>>(), vec![3, 5]);
+        assert_eq!(stash.len(), 1);
+        let out = stash.release(|_, target| target <= 10);
+        assert_eq!(out.len(), 1);
+        assert!(stash.is_empty());
+    }
+
+    #[test]
+    fn blocked_key_does_not_hold_back_ready_key() {
+        let mut stash = ReadStash::default();
+        stash.park(read(1, vec![1]), 4, 4); // hot key: frontier lagging
+        stash.park(read(2, vec![2]), 8, 8); // quiet key: frontier caught up
+        let out = stash.release(|cmd, _| cmd.keys[0] == 2);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].cmd.rid.client(), ClientId(2));
+        assert_eq!(stash.waiting_keys(), vec![1]);
+    }
+
+    #[test]
+    fn same_target_preserves_arrival_order() {
+        let mut stash = ReadStash::default();
+        for c in 0..4 {
+            stash.park(read(c, vec![9]), 2, 2);
+        }
+        let out = stash.release(|_, _| true);
+        let clients: Vec<u64> = out.iter().map(|p| p.cmd.rid.client().0).collect();
+        assert_eq!(clients, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn slackened_reads_know_their_lowered_target() {
+        let p = ParkedRead { cmd: read(1, vec![1]), target: 7, ts: 10 };
+        assert!(p.slackened());
+        let q = ParkedRead { cmd: read(1, vec![1]), target: 10, ts: 10 };
+        assert!(!q.slackened());
+    }
+}

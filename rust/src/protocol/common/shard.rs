@@ -126,7 +126,10 @@ impl<P: Protocol> Sharded<P> {
                 // bytes; nothing to lift.
                 Action::SendBytes { to, body } => Action::SendBytes { to, body },
                 Action::Submitted { dot } => Action::Submitted { dot },
-                Action::Execute { dot, cmd } => Action::Execute { dot, cmd },
+                Action::Execute { dot, cmd, ts } => Action::Execute { dot, cmd, ts },
+                Action::ExecuteRead { cmd, covered, slack } => {
+                    Action::ExecuteRead { cmd, covered, slack }
+                }
                 Action::Reply { rid, response } => Action::Reply { rid, response },
                 Action::Committed { dot, fast } => Action::Committed { dot, fast },
                 Action::RecoveryStarted { dot } => Action::RecoveryStarted { dot },
@@ -184,6 +187,25 @@ impl<P: Protocol> Protocol for Sharded<P> {
             ),
         };
         Self::lift(w as u32, self.slots[w].submit(cmd, time_us))
+    }
+
+    /// Route the read to the worker slot owning its keys — the stash and
+    /// the stability frontier that releases it both live inside that
+    /// slot's inner instance, so the `(worker slot, timestamp)` parking
+    /// key of the design falls out of the routing. Spanning key sets are
+    /// rejected loudly, exactly like [`Sharded::submit`].
+    fn submit_read(&mut self, cmd: Command, time_us: u64) -> Vec<Action<Self::Message>> {
+        let n = self.slots.len();
+        let w = match worker_of_cmd(&cmd, n) {
+            Ok(w) => w,
+            Err((a, b)) => panic!(
+                "read {:?} spans worker slots {a} and {b} (workers={n}): \
+                 cross-worker commands need the in-replica multi-partition \
+                 protocol (ROADMAP); route them with workers=1",
+                cmd.rid
+            ),
+        };
+        Self::lift(w as u32, self.slots[w].submit_read(cmd, time_us))
     }
 
     /// Route by the envelope tag: sender slot `w` talks to our slot `w`.

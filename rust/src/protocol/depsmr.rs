@@ -340,7 +340,9 @@ impl DepCore {
     }
 
     fn is_write(cmd: &Command) -> bool {
-        cmd.op != Op::Get
+        // `Op::Read` reads travel this slow path too (no stability
+        // frontier here) and must commute like `Op::Get`.
+        !cmd.op.is_read()
     }
 
     /// Dependencies of `cmd` on our local keys, then register `dot` in the
@@ -749,7 +751,8 @@ impl DepCore {
                     info.phase = Phase::Execute;
                     let cmd = info.cmd.clone().unwrap();
                     self.counters.executed += 1;
-                    out.push(Action::Execute { dot: m, cmd });
+                    // Dependency-ordered families have no timestamp order.
+                    out.push(Action::Execute { dot: m, cmd, ts: 0 });
                     // Wake commands that were blocked on `m`.
                     if let Some(waiters) = self.blocked_on.remove(&m) {
                         queue.extend(waiters);
@@ -955,6 +958,13 @@ macro_rules! dep_protocol {
             fn submit(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
                 let out = self.0.submit(cmd, time);
                 self.0.outbound(out, false, time)
+            }
+
+            /// No stability frontier: reads run through the full
+            /// dependency-ordering path (counted as slow reads).
+            fn submit_read(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+                self.0.counters.slow_reads += 1;
+                self.submit(cmd, time)
             }
 
             fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {

@@ -109,7 +109,8 @@ impl FPaxos {
                 break;
             }
             self.counters.executed += 1;
-            out.push(Action::Execute { dot: entry.dot, cmd: entry.cmd.clone() });
+            // Slot order, not a timestamp order.
+            out.push(Action::Execute { dot: entry.dot, cmd: entry.cmd.clone(), ts: 0 });
             let slot = self.exec_from;
             self.gc.record_executed(self.slot_dot(slot));
             self.exec_from += 1;
@@ -274,6 +275,13 @@ impl Protocol for FPaxos {
         let ticks = self.ticks;
         self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
         self.outbound(out, true, time)
+    }
+
+    /// No stability frontier: reads run through the leader's log like any
+    /// other command (counted as slow reads).
+    fn submit_read(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+        self.counters.slow_reads += 1;
+        self.submit(cmd, time)
     }
 
     fn crash(&mut self) {

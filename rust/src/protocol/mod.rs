@@ -67,8 +67,20 @@ pub enum Action<M> {
     Submitted { dot: Dot },
     /// The command must be applied to the local state machine
     /// (`execute_p`). Consumed in order by the replica's
-    /// [`crate::executor::Executor`].
-    Execute { dot: Dot, cmd: Command },
+    /// [`crate::executor::Executor`]. `ts` is the decided ordering
+    /// timestamp where the protocol has one (Tempo's final timestamp —
+    /// the read-linearizability oracle audits local reads against it);
+    /// families without a timestamp order pass 0.
+    Execute { dot: Dot, cmd: Command, ts: u64 },
+    /// A local read released by the stability frontier: apply `cmd`
+    /// (read-only) to the local state machine *now* and reply. Emitted
+    /// only at the read's coordinator — the read never acquired a dot,
+    /// never traveled, and executes nowhere else. `covered` is the
+    /// timestamp the frontier provably covered at release (every write
+    /// with decided timestamp <= `covered` on the read's keys has already
+    /// executed locally); `slack` records whether the bounded-staleness
+    /// level (`Config::read_slack`) allowed an earlier release.
+    ExecuteRead { cmd: Command, covered: u64, slack: bool },
     /// The response for request `rid`, emitted by the replica's executor
     /// at the command's coordinator (`dot.origin`) only — the runtimes
     /// route it back to the issuing client session.
@@ -102,6 +114,17 @@ pub trait Protocol: Sized {
     /// `BaseProcess` dot generator) and reports it via
     /// [`Action::Submitted`]; callers identify the request by `cmd.rid`.
     fn submit(&mut self, cmd: Command, time_us: u64) -> Vec<Action<Self::Message>>;
+
+    /// A client session submits a *read-only* command (`Op::Read`).
+    /// Protocols with a stability frontier (Tempo) override this to serve
+    /// the read locally — no broadcast, no quorum, no dot — releasing it
+    /// via [`Action::ExecuteRead`] once the frontier covers its
+    /// timestamp. The default degrades to [`Protocol::submit`]: the read
+    /// runs as an ordinary command through the full ordering path (a
+    /// "slow read"), which is correct for every family.
+    fn submit_read(&mut self, cmd: Command, time_us: u64) -> Vec<Action<Self::Message>> {
+        self.submit(cmd, time_us)
+    }
 
     /// Handle a message from `from`.
     fn handle(

@@ -30,7 +30,7 @@ pub mod promises;
 use self::clock::Clock;
 use self::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums, SharedPromises};
 use self::promises::{PromiseSet, PromiseStore};
-use super::common::{BaseProcess, CommandsInfo, GCTrack, GcProcess, Process};
+use super::common::{BaseProcess, CommandsInfo, GCTrack, GcProcess, Process, ReadStash};
 use super::{ballot, Action, Footprint, Protocol};
 use crate::core::{key_to_shard, Command, Config, Dot, Key, ProcessId, ShardId};
 use crate::metrics::Counters;
@@ -139,6 +139,9 @@ pub struct Tempo {
     suspected: BTreeSet<ProcessId>,
     /// Executed-command frontiers + group exchange state (GC).
     gc: GCTrack,
+    /// Local reads parked until a key frontier covers their timestamp
+    /// (`submit_read`); swept on every execution advance.
+    stash: ReadStash,
     ticks: u64,
     pub counters: Counters,
 }
@@ -663,6 +666,73 @@ impl Tempo {
                 }
             }
         }
+        // Frontiers may have advanced: sweep the parked local reads.
+        self.release_reads(out);
+    }
+
+    /// Is the stability frontier of every key of `cmd` provably at or
+    /// beyond `target`? Exact, not conservative: at watermark `w` every
+    /// committed command with timestamp <= `w` sits in the key's queue,
+    /// and no uncommitted command can still acquire a timestamp <= `w`
+    /// (Theorem 1) — so "watermark covers `target` and no queue entry at
+    /// or below it" means every such write already executed locally.
+    ///
+    /// `Config::read_frontier_skew` inflates the observed watermark; it
+    /// breaks exactly this argument (proposed-not-yet-committed writes
+    /// are invisible to the queue check) and exists only so the
+    /// read-linearizability oracle's negative test has a fault to catch.
+    fn read_covered(&mut self, cmd: &Command, target: u64) -> bool {
+        let skew = self.bp.config.read_frontier_skew;
+        for &k in &cmd.keys {
+            match self.keys.get_mut(&k) {
+                Some(state) => {
+                    let w = state.store.watermark();
+                    if w > state.stable {
+                        state.stable = w;
+                        self.counters.wm_advances += 1;
+                    }
+                    if state.stable + skew < target {
+                        return false;
+                    }
+                    // Committed-but-unexecuted writes at or below the
+                    // target must apply before the read can observe them.
+                    let max_dot = Dot::new(ProcessId(u32::MAX), u64::MAX);
+                    if state.queue.range(..=(target, max_dot)).next().is_some() {
+                        return false;
+                    }
+                }
+                // No state: this key was never written here, but a fresh
+                // write could still acquire any timestamp >= 1 — only
+                // target 0 (nothing to observe) is covered.
+                None => {
+                    if target > skew {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Emit `Action::ExecuteRead` for every parked read whose release
+    /// target the frontier now covers.
+    fn release_reads(&mut self, out: &mut Vec<Action<Msg>>) {
+        if self.stash.is_empty() {
+            return;
+        }
+        let mut stash = std::mem::take(&mut self.stash);
+        let released = stash.release(|cmd, target| self.read_covered(cmd, target));
+        self.stash = stash;
+        for p in released {
+            // `slack` is decided at release: the slackened target let the
+            // read go while the strict frontier still lagged its timestamp.
+            let slack = p.slackened() && !self.read_covered(&p.cmd, p.ts);
+            if slack {
+                self.counters.read_slack_served += 1;
+            }
+            self.counters.local_reads += 1;
+            out.push(Action::ExecuteRead { cmd: p.cmd, covered: p.target, slack });
+        }
     }
 
     /// Try to execute `dot` (committed with final timestamp `ts`). Returns
@@ -723,7 +793,7 @@ impl Tempo {
         self.info.get_mut(&dot).unwrap().phase = Phase::Execute;
         self.gc.record_executed(dot);
         self.counters.executed += 1;
-        out.push(Action::Execute { dot, cmd });
+        out.push(Action::Execute { dot, cmd, ts });
         true
     }
 
@@ -1151,6 +1221,7 @@ impl Protocol for Tempo {
             pending: BTreeSet::new(),
             suspected: BTreeSet::new(),
             gc,
+            stash: ReadStash::default(),
             ticks: 0,
             counters: Counters::default(),
         }
@@ -1189,6 +1260,59 @@ impl Protocol for Tempo {
             .collect();
         self.broadcast(&coords, Msg::MSubmit { dot, cmd, quorums }, time, &mut out);
         self.outbound(out, false, time)
+    }
+
+    /// Stability-powered local read (the tentpole of the read path): the
+    /// read is assigned the *current* clock value of its key — no bump,
+    /// no proposal, no quorum, no dot — and executes locally the moment
+    /// the key's stability frontier covers that timestamp. Zero protocol
+    /// messages in both the instant and the parked case.
+    ///
+    /// Degradations (counted in `Counters::slow_reads`):
+    /// - multi-group key sets: stability is per group; a coordination-free
+    ///   snapshot across groups would need the MStable handshake anyway;
+    /// - multi-key reads that cannot be served instantly: a quiet key's
+    ///   frontier only advances with write traffic, so parking on the max
+    ///   timestamp across keys could stall forever — the ordering path
+    ///   guarantees liveness instead.
+    ///
+    /// Single-key parked reads are live: a clock value `v` was reached by
+    /// proposals/bumps of writes that eventually commit with final
+    /// timestamp >= `v`, and their commit bumps push every group member's
+    /// promises — and hence the majority watermark — to `v`.
+    fn submit_read(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+        let mut out = Vec::new();
+        if self.bp.crashed {
+            return out;
+        }
+        debug_assert!(cmd.op.is_read(), "submit_read takes read-only commands");
+        let groups = cmd.shards(self.bp.config.shards);
+        if groups.len() > 1 || !groups.contains(&self.bp.group) {
+            self.counters.slow_reads += 1;
+            return self.submit(cmd, time);
+        }
+        let ts = cmd
+            .keys
+            .iter()
+            .map(|&k| self.keys.get(&k).map_or(0, |s| s.clock.value()))
+            .max()
+            .unwrap_or(0);
+        let target = ts.saturating_sub(self.bp.config.read_slack);
+        if self.read_covered(&cmd, target) {
+            let slack = target < ts && !self.read_covered(&cmd, ts);
+            if slack {
+                self.counters.read_slack_served += 1;
+            }
+            self.counters.local_reads += 1;
+            out.push(Action::ExecuteRead { cmd, covered: target, slack });
+            return out;
+        }
+        if cmd.keys.len() > 1 {
+            self.counters.slow_reads += 1;
+            return self.submit(cmd, time);
+        }
+        self.stash.park(cmd, target, ts);
+        out
     }
 
     fn handle(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
@@ -1336,7 +1460,7 @@ impl Protocol for Tempo {
         Footprint {
             infos: self.info.len(),
             keys: self.keys.len(),
-            stalled: self.bp.stalled_len() + self.missing.len(),
+            stalled: self.bp.stalled_len() + self.missing.len() + self.stash.len(),
             queued: self.bp.batcher.queued(),
             fragments: 0,
         }

@@ -33,7 +33,7 @@ pub use topology::Topology;
 
 use crate::client::Session;
 use crate::core::{
-    key_to_shard, ClientId, Command, Completion, Config, Dot, ProcessId, Response, Rid,
+    key_to_shard, ClientId, Command, Completion, Config, Dot, Op, ProcessId, Response, Rid,
 };
 use crate::executor::Executor;
 use crate::metrics::{Counters, RunMetrics};
@@ -69,6 +69,12 @@ pub struct SimOpts {
     pub crashes: Vec<(u64, ProcessId)>,
     /// Failure-detection delay after a crash.
     pub suspect_delay_us: u64,
+    /// Credit the TCP runtime's encode-once broadcast in the resource
+    /// model: a `SendShared` fan-out charges the serialize CPU cost once
+    /// and only the NIC per destination. Off by default — the legacy
+    /// model conservatively re-charged CPU per destination, and existing
+    /// saturation results are pinned against it.
+    pub encode_once: bool,
 }
 
 impl SimOpts {
@@ -85,8 +91,27 @@ impl SimOpts {
             record_execution: false,
             crashes: Vec::new(),
             suspect_delay_us: 500_000,
+            encode_once: false,
         }
     }
+}
+
+/// One locally-served read (`Action::ExecuteRead`), recorded for the
+/// read-linearizability oracle (when `record_execution`).
+#[derive(Clone, Debug)]
+pub struct ReadAudit {
+    /// Length of the serving replica's execution log at the instant the
+    /// read executed: entries `[..pos]` are exactly the writes the read
+    /// observed.
+    pub pos: usize,
+    /// The timestamp the protocol claimed the frontier covered: every
+    /// write with decided timestamp <= `covered` on the read's keys must
+    /// appear in `[..pos]`.
+    pub covered: u64,
+    /// Whether the bounded-staleness slack enabled the release.
+    pub slack: bool,
+    /// The read command itself.
+    pub cmd: Command,
 }
 
 /// Result of a run: metrics plus optional test-oracle material.
@@ -99,6 +124,12 @@ pub struct SimResult {
     pub completions: Vec<Completion>,
     /// All submitted dots with their commands (when `record_execution`).
     pub submitted: Vec<(Dot, Command)>,
+    /// Per-process locally-served reads (when `record_execution`).
+    pub read_audits: Vec<Vec<ReadAudit>>,
+    /// Decided ordering timestamps observed on `Action::Execute` upcalls,
+    /// `(dot, ts)`, duplicated per replica (when `record_execution`);
+    /// 0 for protocol families without a timestamp order.
+    pub decided_ts: Vec<(Dot, u64)>,
     /// End-of-run memory footprint of each process (GC diagnostics).
     pub footprints: Vec<Footprint>,
 }
@@ -216,6 +247,7 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         };
         if record {
             sim.result.execution_logs = vec![Vec::new(); n];
+            sim.result.read_audits = vec![Vec::new(); n];
         }
         sim
     }
@@ -352,6 +384,13 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         let site = client % self.config.sites;
         let cid = ClientId(client as u64);
         let spec = self.workload.next(cid, &mut self.rng);
+        if spec.op == Op::Read {
+            // Reads take the local path (`Protocol::submit_read`) and
+            // bypass site-level batching: there is no broadcast for a
+            // batch to amortize.
+            self.submit_read(site, spec, client, time);
+            return;
+        }
         if self.batchers.is_empty() {
             self.submit_batch(site, spec, vec![(client, time)], time);
         } else {
@@ -409,6 +448,46 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         self.process_actions(origin, actions, submit_at);
     }
 
+    /// Submit a read-only command at the client's local replica via
+    /// `Protocol::submit_read`. A local read never acquires a dot (it
+    /// never travels), so the in-flight entry uses the sentinel
+    /// `Dot::new(origin, 0)` — sequence 0 is never minted by a `DotGen`;
+    /// a degraded (slow) read announces a real dot via `Submitted` and is
+    /// tracked like any ordinary command.
+    fn submit_read(
+        &mut self,
+        site: usize,
+        spec: crate::workload::CommandSpec,
+        client: usize,
+        time: u64,
+    ) {
+        let shard = key_to_shard(spec.keys[0], self.config.shards);
+        let origin = ProcessId(shard.0 * self.config.r as u32 + site as u32);
+        if self.dead[origin.0 as usize] {
+            return;
+        }
+        let rid = self.sessions[client].next_rid();
+        let cmd = Command::new(rid, spec.keys, spec.op, spec.payload_len);
+        let recorded = self.opts.record_execution.then(|| cmd.clone());
+        let submit_at = time + self.opts.topology.local_us;
+        let actions = self.procs[origin.0 as usize].submit_read(cmd, submit_at);
+        let dot = actions
+            .iter()
+            .find_map(|a| match a {
+                Action::Submitted { dot } => Some(*dot),
+                _ => None,
+            })
+            .unwrap_or_else(|| Dot::new(origin, 0));
+        if let Some(c) = recorded {
+            if dot.seq != 0 {
+                self.result.submitted.push((dot, c));
+            }
+        }
+        self.in_flight
+            .insert(rid, InFlight { dot, members: vec![(client, time)], site, ops: 1 });
+        self.process_actions(origin, actions, submit_at);
+    }
+
     /// Put one message on the (modeled) wire: charge the sender's
     /// CPU/NIC resources and schedule the delivery.
     fn send_one(&mut self, at: ProcessId, to: ProcessId, msg: P::Message, time: u64) {
@@ -424,6 +503,34 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         };
         let latency = self.opts.topology.latency_us(from_site, to_site, self.rng.gen_f64());
         self.push(depart + latency, Event::Deliver { from: at, to, msg, bytes });
+    }
+
+    /// Encode-once fan-out charging (`SimOpts::encode_once`): one
+    /// serialize-CPU charge for the whole broadcast, then the NIC per
+    /// destination — the TCP runtime's actual cost shape
+    /// (`net::encode_fanout` serializes once and shares the bytes).
+    /// Deliveries are otherwise identical to the per-`Send` expansion.
+    fn send_fanout(&mut self, at: ProcessId, to: Vec<ProcessId>, msg: P::Message, time: u64) {
+        let model = self.opts.resources.expect("fan-out charging needs a resource model");
+        let bytes = P::msg_size(&msg);
+        let from_site = self.config.site_of(at);
+        let cpu_done =
+            self.resources[at.0 as usize].use_cpu(time as f64, model.cpu_cost_us(bytes));
+        for dest in to {
+            if dest == at {
+                let acts = self.procs[at.0 as usize].handle(at, msg.clone(), time);
+                self.process_actions(at, acts, time);
+                continue;
+            }
+            let depart =
+                self.resources[at.0 as usize].use_out(cpu_done, model.wire_us(bytes)) as u64;
+            let to_site = self.config.site_of(dest);
+            let latency = self.opts.topology.latency_us(from_site, to_site, self.rng.gen_f64());
+            self.push(
+                depart + latency,
+                Event::Deliver { from: at, to: dest, msg: msg.clone(), bytes },
+            );
+        }
     }
 
     fn process_actions(&mut self, at: ProcessId, actions: Vec<Action<P::Message>>, time: u64) {
@@ -448,15 +555,22 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
                     // resource charges, same event keys) to the
                     // equivalent sequence of `Send`s — so the
                     // determinism/equivalence proofs see no difference.
-                    // The sim deliberately does not credit the TCP
-                    // runtime's encode-once saving; its resource model
-                    // stays conservative.
-                    for dest in to {
-                        if dest == at {
-                            let acts = self.procs[at.0 as usize].handle(at, msg.clone(), time);
-                            self.process_actions(at, acts, time);
-                        } else {
-                            self.send_one(at, dest, msg.clone(), time);
+                    // By default the sim does not credit the TCP runtime's
+                    // encode-once saving (the legacy conservative model);
+                    // `SimOpts::encode_once` switches to charging the
+                    // serialize CPU once and the NIC per destination, the
+                    // cost shape the runtime actually has.
+                    if self.opts.encode_once && self.opts.resources.is_some() {
+                        self.send_fanout(at, to, msg, time);
+                    } else {
+                        for dest in to {
+                            if dest == at {
+                                let acts =
+                                    self.procs[at.0 as usize].handle(at, msg.clone(), time);
+                                self.process_actions(at, acts, time);
+                            } else {
+                                self.send_one(at, dest, msg.clone(), time);
+                            }
                         }
                     }
                 }
@@ -464,11 +578,25 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
                     // Net-runtime-only lowering; protocols never emit it.
                     debug_assert!(false, "SendBytes reached the simulator");
                 }
-                Action::Execute { dot, cmd } => {
+                Action::Execute { dot, cmd, ts } => {
                     if self.opts.record_execution {
                         self.result.execution_logs[at.0 as usize].push((dot, time));
+                        self.result.decided_ts.push((dot, ts));
                     }
                     let _ = cmd;
+                }
+                Action::ExecuteRead { cmd, covered, slack } => {
+                    // The executor already applied the read and emitted
+                    // its Reply; record the audit point for the oracle.
+                    if self.opts.record_execution {
+                        let pos = self.result.execution_logs[at.0 as usize].len();
+                        self.result.read_audits[at.0 as usize].push(ReadAudit {
+                            pos,
+                            covered,
+                            slack,
+                            cmd,
+                        });
+                    }
                 }
                 Action::Reply { rid, response } => {
                     self.complete(rid, response, time);

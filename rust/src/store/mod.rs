@@ -50,7 +50,9 @@ impl KvStore {
         for &k in cmd.keys.iter() {
             let v = self.data.entry(k).or_default();
             match cmd.op {
-                Op::Get => versions.push((k, v.version)),
+                // The local-read class observes exactly what a Get
+                // observes; neither mutates.
+                Op::Get | Op::Read => versions.push((k, v.version)),
                 Op::Put => {
                     v.version += 1;
                     v.last_payload = cmd.payload_len;
@@ -218,6 +220,17 @@ mod tests {
         s.execute(&Command::single(rid(2), 9, Op::Get, 0));
         assert_eq!(s.digest(), d);
         assert_eq!(s.get(9).unwrap().version, 1);
+    }
+
+    #[test]
+    fn local_read_class_observes_what_get_observes() {
+        let mut s = KvStore::new();
+        s.execute(&Command::single(rid(1), 9, Op::Put, 1));
+        let d = s.digest();
+        let get = s.execute(&Command::single(rid(2), 9, Op::Get, 0));
+        let read = s.execute(&Command::read(rid(3), vec![9]));
+        assert_eq!(get.versions, read.versions);
+        assert_eq!(s.digest(), d, "Op::Read must not mutate");
     }
 
     #[test]

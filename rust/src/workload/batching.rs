@@ -77,7 +77,7 @@ impl Batcher {
         keys.sort_unstable();
         keys.dedup();
         let payload: u64 = buf.iter().map(|b| b.spec.payload_len as u64).sum();
-        let any_write = buf.iter().any(|b| b.spec.op != Op::Get);
+        let any_write = buf.iter().any(|b| !b.spec.op.is_read());
         let spec = CommandSpec {
             keys,
             op: if any_write { Op::Put } else { Op::Get },

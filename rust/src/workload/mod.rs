@@ -61,19 +61,35 @@ pub struct ZipfWorkload {
     zipf: Zipf,
     /// Payload carried by each command, in bytes.
     pub payload_len: u32,
+    /// Fraction of commands that are `Op::Read` (the stability-powered
+    /// local-read class); 0.0 keeps the classic all-Put shape.
+    pub read_ratio: f64,
 }
 
 impl ZipfWorkload {
     /// Single-key Put workload over `n_keys` keys at skew `theta`
     /// (0 = uniform / low contention; 0.99 = YCSB-hot / high contention).
     pub fn new(n_keys: u64, theta: f64, payload_len: u32) -> Self {
-        Self { zipf: Zipf::new(n_keys, theta), payload_len }
+        Self { zipf: Zipf::new(n_keys, theta), payload_len, read_ratio: 0.0 }
+    }
+
+    /// Turn a fraction of commands into `Op::Read` local-read candidates
+    /// (e.g. 0.95 for the paper-style 95/5 read-heavy mix). Keys still
+    /// come from the same zipf distribution, so reads and writes contend
+    /// on the same hot set.
+    pub fn with_read_ratio(mut self, read_ratio: f64) -> Self {
+        assert!((0.0..=1.0).contains(&read_ratio));
+        self.read_ratio = read_ratio;
+        self
     }
 }
 
 impl Workload for ZipfWorkload {
     fn next(&mut self, _client: ClientId, rng: &mut Rng) -> CommandSpec {
         let key = self.zipf.sample(rng);
+        if self.read_ratio > 0.0 && rng.gen_bool(self.read_ratio) {
+            return CommandSpec { keys: vec![key], op: Op::Read, payload_len: 0 };
+        }
         CommandSpec { keys: vec![key], op: Op::Put, payload_len: self.payload_len }
     }
 }

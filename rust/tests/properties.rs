@@ -265,7 +265,11 @@ fn prop_wire_codec_roundtrips_random_messages() {
             let cmd = Command::new(
                 Rid::new(ClientId(rng.gen_range(1 << 16)), 1 + rng.gen_range(1 << 10)),
                 keys.clone(),
-                if rng.gen_bool(0.5) { Op::Put } else { Op::Get },
+                match rng.gen_range(3) {
+                    0 => Op::Put,
+                    1 => Op::Get,
+                    _ => Op::Read,
+                },
                 rng.gen_range(4096) as u32,
             );
             let ts: Vec<(u64, u64)> =
@@ -316,10 +320,11 @@ fn prop_client_frames_roundtrip_and_survive_corruption() {
         let frame = if rng.gen_bool(0.5) {
             let keys: Vec<u64> =
                 (0..1 + rng.gen_range(4)).map(|_| rng.gen_range(1 << 30)).collect();
-            let op = match rng.gen_range(3) {
+            let op = match rng.gen_range(4) {
                 0 => Op::Get,
                 1 => Op::Put,
-                _ => Op::Rmw,
+                2 => Op::Rmw,
+                _ => Op::Read,
             };
             ClientFrame::Submit {
                 cmd: Command::new(rid, keys, op, rng.gen_range(512) as u32),
@@ -343,6 +348,58 @@ fn prop_client_frames_roundtrip_and_survive_corruption() {
         let at = rng.gen_range(enc.len() as u64) as usize;
         flipped[at] ^= 1u8 << (rng.gen_range(8) as u32);
         let _ = decode_client(&flipped); // Err or a different frame — no panic
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_read_flagged_submits_roundtrip_and_stay_on_the_client_plane() {
+    // The local-read class on the wire: a `ClientSubmit` whose command
+    // carries op tag 3 (`Op::Read`, docs/WIRE.md). Round-trips exactly
+    // (payload length included — reads carry 0), every truncation is an
+    // Err, bit-flips never panic, and the frame stays on the client
+    // plane: the peer decoder must reject it whole and as a nested
+    // `MBatch` member.
+    use tempo::net::wire::{decode, decode_client, encode_client, ClientFrame};
+    forall_seeds("read-submit-fuzz", |seed| {
+        let mut rng = Rng::new(seed);
+        let rid = Rid::new(ClientId(rng.gen_range(1 << 16)), 1 + rng.gen_range(1 << 20));
+        let keys: Vec<u64> =
+            (0..1 + rng.gen_range(4)).map(|_| rng.gen_range(1 << 30)).collect();
+        let frame = ClientFrame::Submit { cmd: Command::read(rid, keys) };
+        let enc = encode_client(&frame);
+        let back = decode_client(&enc).map_err(|e| e.to_string())?;
+        if back != frame {
+            return Err(format!("round-trip mismatch: {frame:?} vs {back:?}"));
+        }
+        match &back {
+            ClientFrame::Submit { cmd } => {
+                if cmd.op != Op::Read || cmd.payload_len != 0 {
+                    return Err(format!("read flag lost: {cmd:?}"));
+                }
+            }
+            other => return Err(format!("decoded as {other:?}")),
+        }
+        let cut = rng.gen_range(enc.len() as u64) as usize;
+        if decode_client(&enc[..cut]).is_ok() {
+            return Err(format!("truncation at {cut} decoded"));
+        }
+        let mut flipped = enc.clone();
+        let at = rng.gen_range(enc.len() as u64) as usize;
+        flipped[at] ^= 1u8 << (rng.gen_range(8) as u32);
+        let _ = decode_client(&flipped); // Err or a different frame — no panic
+        // Plane separation: the peer decoder rejects the client frame...
+        if decode(&enc).is_ok() {
+            return Err("read submit decoded on the peer plane".into());
+        }
+        // ...including smuggled inside an MBatch (tag 16).
+        let mut batch = vec![16u8];
+        batch.extend_from_slice(&1u16.to_le_bytes());
+        batch.extend_from_slice(&(enc.len() as u32).to_le_bytes());
+        batch.extend_from_slice(&enc);
+        if decode(&batch).is_ok() {
+            return Err("read submit decoded inside an MBatch".into());
+        }
         Ok(())
     });
 }
@@ -389,10 +446,11 @@ fn random_msg(rng: &mut Rng, allow_batch: bool) -> tempo::protocol::tempo::msg::
     let cmd = Command::new(
         Rid::new(ClientId(rng.gen_range(1 << 16)), 1 + rng.gen_range(1 << 10)),
         keys.clone(),
-        match rng.gen_range(3) {
+        match rng.gen_range(4) {
             0 => Op::Get,
             1 => Op::Put,
-            _ => Op::Rmw,
+            2 => Op::Rmw,
+            _ => Op::Read,
         },
         rng.gen_range(512) as u32,
     );
