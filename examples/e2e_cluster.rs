@@ -21,6 +21,17 @@
 //! flushes of a tick back into ~1 wire frame per (peer, tick),
 //! regardless of `--workers`.
 //!
+//! **`--kill-node`**: client-failover mode — a pipelined `TcpClient`
+//! drives RMW traffic at node 0, node 0 is shut down with a full window
+//! of requests unacked, and the session fails over to node 1 re-issuing
+//! the lot with their original rids. The replicas' per-client dedup
+//! window (`Config::dedup_window`) must absorb every copy the dead
+//! coordinator already pushed through the protocol: the mode proves
+//! exactly-once end to end by checking that a private RMW counter key
+//! advanced by exactly one step per acknowledged request — no lost and
+//! no duplicate executions — and that every rid completed exactly once
+//! at the client.
+//!
 //! **`--read-pct N`**: the stability-powered local-read mode — a
 //! read-heavy zipf mix (`ZipfWorkload::with_read_ratio`) over real TCP
 //! with 2 worker slots per node, asserting that every `Op::Read` is
@@ -277,7 +288,130 @@ fn read_mix(read_pct: u32) -> tempo::util::error::Result<()> {
     Ok(())
 }
 
+/// `--kill-node`: kill the client's node and prove the failover path is
+/// exactly-once over real TCP.
+///
+/// Two duplicate-risk paths are exercised:
+/// - a request the cluster **already executed** is re-issued (the reply
+///   was lost with the old connection) — the replicas' dedup window must
+///   absorb the copy and replay the cached response;
+/// - a window of requests that **died with the node** is re-issued — the
+///   re-issues must each execute exactly once at the survivor.
+///
+/// The proof is a private RMW counter key only this client touches:
+/// payload 0 keeps the KvStore RMW step at exactly +1, so the final
+/// version counts executions — a lost one leaves it short, a duplicated
+/// one overshoots. (The node is stopped *before* the window is written:
+/// the TCP runtime has no failure detector, so a proposal orphaned by a
+/// dying coordinator would stall its key forever — recovering that case
+/// needs the suspect/Ω machinery the simulator harness covers.)
+fn kill_node() -> tempo::util::error::Result<()> {
+    let r = 3usize;
+    let config = Config::new(r, 1).with_tick_interval_us(1_000).with_workers(2);
+    println!("--- e2e --kill-node ({r} nodes, 2 worker slots each) ---");
+    let (mut nodes, addrs) = boot_cluster(r, &config)?;
+
+    let key = 1u64 << 42;
+    let mut tc = TcpClient::connect(&addrs[0], ClientId(7_777))?;
+    tc.set_timeout(Some(Duration::from_secs(5)))?;
+    let mut submitted = std::collections::HashSet::new();
+    let mut completed = std::collections::HashSet::new();
+
+    // Warm phase: closed loop against node 0, all acked.
+    for _ in 0..20 {
+        let rid = tc.submit_async(vec![key], Op::Rmw, 0)?;
+        submitted.insert(rid);
+        let (done, _) = tc.recv_reply()?;
+        assert!(completed.insert(done), "duplicate reply for {done}");
+    }
+
+    // Dedup phase: submit one more, give the cluster time to order and
+    // execute it everywhere, then fail over to node 1 *without reading
+    // the reply* — the rid is unacked from the session's point of view,
+    // so it is re-issued even though every replica already applied it.
+    // The dedup window must absorb the copy (the counter advances once)
+    // and node 1 must replay the cached response.
+    let dup_rid = tc.submit_async(vec![key], Op::Rmw, 0)?;
+    submitted.insert(dup_rid);
+    std::thread::sleep(Duration::from_millis(600));
+    let reissued = tc.failover(&addrs[1])?;
+    assert_eq!(reissued, 1, "exactly the unread rid must be re-issued");
+    let (done, _) = tc.recv_reply()?;
+    assert_eq!(done, dup_rid, "the re-issue must complete under its rid");
+    completed.insert(done);
+    println!("  executed-but-unacked rid re-issued at node 1 and absorbed");
+
+    // Kill phase: stop node 1 (the node this session is now on), then
+    // race a window of submissions into the dying connection. None of
+    // them can execute there — the shutdown event precedes them in every
+    // worker's queue — so the survivor-side re-issues are their only
+    // executions.
+    let victim = nodes.remove(1);
+    victim.shutdown();
+    for _ in 0..19 {
+        match tc.submit_async(vec![key], Op::Rmw, 0) {
+            Ok(rid) => {
+                submitted.insert(rid);
+            }
+            Err(_) => break, // connection already reset; re-issue the rest below
+        }
+    }
+    println!(
+        "  node 1 killed; {} requests unacked",
+        submitted.len() - completed.len()
+    );
+
+    let mut failovers = 0u32;
+    while completed.len() < submitted.len() {
+        match tc.recv_reply() {
+            Ok((rid, _)) => {
+                assert!(completed.insert(rid), "duplicate reply for {rid}");
+            }
+            Err(e) => {
+                failovers += 1;
+                assert!(failovers <= 5, "failover loop not converging: {e:#}");
+                let n = tc.failover(&addrs[2])?;
+                println!("  failover #{failovers}: re-issued {n} rids at node 2");
+            }
+        }
+    }
+    assert_eq!(completed, submitted, "every rid must complete exactly once");
+    assert!(failovers > 0, "node death never surfaced to the client");
+
+    // Exactly-once proof at the state machine.
+    let expected = submitted.len() as u64;
+    let mut check = TcpClient::connect(&addrs[2], ClientId(7_778))?;
+    check.set_timeout(Some(Duration::from_secs(5)))?;
+    let (_, response) = check.submit_single(key, Op::Get, 0)?;
+    assert_eq!(
+        response.versions,
+        vec![(key, expected)],
+        "counter key must show exactly {expected} executions"
+    );
+    let mut dedup_hits = 0u64;
+    for n in &nodes {
+        dedup_hits += n.counters().dedup_hits;
+    }
+    assert!(
+        dedup_hits > 0,
+        "the surviving replicas absorbed no duplicate delivery"
+    );
+    println!(
+        "  all {expected} rids completed exactly once; counter key at \
+         version {expected}; {dedup_hits} duplicate deliveries absorbed \
+         by the dedup window"
+    );
+    for n in nodes {
+        n.shutdown();
+    }
+    Ok(())
+}
+
 fn main() -> tempo::util::error::Result<()> {
+    if std::env::args().any(|a| a == "--kill-node") {
+        kill_node()?;
+        std::process::exit(0); // acceptor threads block on listener
+    }
     if std::env::args().any(|a| a == "--sweep-workers") {
         sweep_workers()?;
         std::process::exit(0); // acceptor threads block on listener

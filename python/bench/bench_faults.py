@@ -1,0 +1,310 @@
+"""Fault-path bench: crash -> suspect -> evict -> heal, measured via a
+Python port.
+
+Faithful port of what the nemesis PR adds (no Rust toolchain in this
+container; the numbers are Python-speed but measured for real): the full
+ordering path of bench_reads.py extended with the fault machinery —
+
+1. **Healthy phase**: ops/s of the 3-replica write path, every frame
+   through the real ``wire.py`` codec, fast quorums rotating across both
+   peers.
+
+2. **Degraded phase**: replica 2 crashes mid-run. Commands whose fast
+   quorum targets the dead peer time out and retransmit toward the
+   survivor (the port of ``Config::retry_interval_ticks``), the dead
+   member's executed frontier freezes GC (per-command info records pile
+   up), and the requests in flight at the crash are failed over by their
+   client — re-issued at the survivor under the same rid, absorbed by
+   the per-client dedup window (``Config::dedup_window``).
+
+3. **Reconfiguration**: after the suspect delay the survivors vote the
+   victim out (``MEpoch`` frames, WIRE.md tag 21) and install epoch 1.
+   The GC frontier drops the evicted member and prunes the frozen
+   backlog — the unfreeze the epoch subsystem exists for.
+
+4. **Post-eviction phase**: ops/s with quorums drawn from the survivor
+   set only — the recovered throughput the gate compares against the
+   healthy baseline.
+
+Reported: per-phase ops/s, retransmits, dedup hits, MEpoch frames,
+reconfiguration latency, and the info-record footprint at the crash, at
+its frozen peak, and after the unfreeze.
+
+Run from anywhere: ``python3 python/bench/bench_faults.py``.
+``--smoke`` (or ``SMOKE=1``) runs reduced iterations and leaves the
+recorded BENCH_faults.json untouched (for cargo-less CI).
+"""
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import wire  # noqa: E402
+
+SMOKE = "--smoke" in sys.argv[1:] or os.environ.get("SMOKE") == "1"
+R, MAJORITY = 3, 2  # r=3 f=1
+N_KEYS = 1_000
+PHASE_OPS = 5_000 if SMOKE else 30_000
+SUSPECT_AFTER_OPS = 500 if SMOKE else 3_000  # ports SimOpts.suspect_delay_us
+GC_EVERY = 64  # ports Config::gc_interval_ticks
+DEDUP_WINDOW = 64  # ports Config::dedup_window
+PAYLOAD = 100
+IN_FLIGHT_AT_CRASH = 16  # client pipeline depth failed over at the crash
+
+
+class Replica:
+    __slots__ = ("clock", "executed_wm", "infos", "dedup", "dedup_hits", "alive")
+
+    def __init__(self):
+        self.clock = 0
+        self.executed_wm = 0  # executed frontier shared via MGarbageCollect
+        self.infos = {}  # seq -> per-command info record (GC prunes these)
+        self.dedup = []  # most-recent executed rids (per the one client)
+        self.dedup_hits = 0
+        self.alive = True
+
+    def execute(self, rid, seq):
+        """Apply at this replica; absorb an in-window duplicate rid."""
+        if DEDUP_WINDOW and rid in self.dedup:
+            self.dedup_hits += 1
+            return False
+        self.dedup.append(rid)
+        if len(self.dedup) > DEDUP_WINDOW:
+            self.dedup.pop(0)
+        self.executed_wm = seq
+        return True
+
+
+class Cluster:
+    def __init__(self):
+        self.replicas = [Replica() for _ in range(R)]
+        self.epoch = 0
+        self.evicted = []
+        self.wire_bytes = 0
+        self.retransmits = 0
+        self.epoch_frames = 0
+        self.seq = 0
+
+    def group(self):
+        return [i for i in range(R) if i not in self.evicted]
+
+    def fast_peer(self, attempt_dead):
+        """Rotate the non-coordinator fast-quorum slot over the current
+        group; before eviction a dead peer is still drawn (and costs a
+        retransmission), after eviction it cannot be."""
+        peers = [p for p in self.group() if p != 0]
+        return peers[attempt_dead % len(peers)]
+
+    def write_op(self, rid):
+        """One command through the ordering path; returns True when it
+        needed a retransmission (its first quorum pick was dead)."""
+        self.seq += 1
+        seq = self.seq
+        coord = self.replicas[0]
+        coord.clock += 1
+        key = seq % N_KEYS
+        cmd = {"rid": rid, "op": 1, "payload_len": PAYLOAD, "batched": 0,
+               "keys": [key]}
+        dot = (0, seq)
+        retried = False
+        peer_id = self.fast_peer(seq)
+        propose = wire.encode(
+            {"t": "MPropose", "dot": dot, "cmd": cmd,
+             "quorums": [(0, self.group())], "ts": [(key, coord.clock)]}
+        )
+        self.wire_bytes += len(propose)
+        if not self.replicas[peer_id].alive:
+            # Timeout toward the dead peer; re-drive at a survivor (the
+            # retry_interval_ticks path).
+            self.retransmits += 1
+            retried = True
+            peer_id = next(p for p in self.group()
+                           if p != 0 and self.replicas[p].alive)
+            self.wire_bytes += len(propose)
+        peer = self.replicas[peer_id]
+        msg = wire.decode(propose)
+        proposed = msg["ts"][0][1]
+        if proposed > peer.clock:
+            peer.clock = proposed
+        ack = wire.encode(
+            {"t": "MProposeAck", "dot": dot, "ts": [(key, peer.clock)],
+             "promises": [(key, ([(peer.clock, peer.clock)], []))]}
+        )
+        self.wire_bytes += len(ack)
+        final_ts = max(coord.clock, wire.decode(ack)["ts"][0][1])
+        commit = wire.encode(
+            {"t": "MCommit", "dot": dot, "group": 0,
+             "ts": [(key, final_ts)],
+             "promises": [(0, [(key, ([(final_ts, final_ts)], []))])]}
+        )
+        for p in self.group():
+            if p == 0:
+                continue
+            self.wire_bytes += len(commit)
+            if self.replicas[p].alive:
+                wire.decode(commit)
+        # Execute at every live group member; each keeps the command's
+        # info record until the GC exchange proves group-wide execution.
+        for p in self.group():
+            rep = self.replicas[p]
+            if rep.alive:
+                rep.infos[seq] = (dot, final_ts)
+                rep.execute(rid, seq)
+        if seq % GC_EVERY == 0:
+            self.gc_exchange()
+        return retried
+
+    def gc_exchange(self):
+        """Port of MGarbageCollect: share executed frontiers across the
+        current group and prune infos up to the minimum. A crashed
+        member's frozen frontier pins the minimum until it is evicted."""
+        frames = [
+            wire.encode({"t": "MGarbageCollect",
+                         "executed": [(p, self.replicas[p].executed_wm)]})
+            for p in self.group()
+        ]
+        for f in frames:
+            self.wire_bytes += len(f) * (len(self.group()) - 1)
+            wire.decode(f)
+        frontier = min(self.replicas[p].executed_wm for p in self.group())
+        for p in self.group():
+            rep = self.replicas[p]
+            if rep.alive:
+                rep.infos = {s: i for s, i in rep.infos.items() if s > frontier}
+
+    def evict(self, victim):
+        """Survivor vote: every live member broadcasts its MEpoch vote
+        for (epoch+1, evicted+victim); a majority installs it."""
+        proposal = {"t": "MEpoch", "epoch": self.epoch + 1,
+                    "evicted": sorted(self.evicted + [victim])}
+        votes = 0
+        for p in self.group():
+            if not self.replicas[p].alive:
+                continue
+            frame = wire.encode(proposal)
+            self.epoch_frames += 1
+            self.wire_bytes += len(frame) * (len(self.group()) - 1)
+            decoded = wire.decode(frame)
+            assert decoded == proposal
+            votes += 1
+        assert votes >= MAJORITY, "survivors cannot form an epoch majority"
+        self.epoch = proposal["epoch"]
+        self.evicted = proposal["evicted"]
+
+
+def run_phase(cluster, ops, rid_base):
+    start = time.perf_counter()
+    retried = 0
+    for i in range(ops):
+        if cluster.write_op((1, rid_base + i)):
+            retried += 1
+    elapsed = time.perf_counter() - start
+    return {"ops": ops, "ops_per_s_wall": round(ops / elapsed)}, retried
+
+
+def main():
+    cluster = Cluster()
+
+    healthy, _ = run_phase(cluster, PHASE_OPS, 0)
+    print(f"healthy       : {healthy['ops_per_s_wall']:>9} ops/s "
+          f"({R} replicas, quorums over both peers)")
+
+    # Crash replica 2. The client had IN_FLIGHT_AT_CRASH requests
+    # pipelined through it; it fails over and re-issues them at the
+    # survivor coordinator under their original rids. The cluster
+    # already executed them (their commits landed before the crash), so
+    # the dedup window must absorb every copy.
+    crash_wall = time.perf_counter()
+    cluster.replicas[2].alive = False
+    infos_at_crash = len(cluster.replicas[0].infos)
+    for i in range(IN_FLIGHT_AT_CRASH):
+        cluster.write_op((1, cluster.seq - 1 - i))  # re-issue, same rid
+    dedup_hits = sum(r.dedup_hits for r in cluster.replicas if r.alive)
+    assert dedup_hits >= IN_FLIGHT_AT_CRASH, (
+        f"failover re-issues not absorbed: {dedup_hits}"
+    )
+
+    # Degraded window until the failure detector fires: dead-peer quorum
+    # picks retransmit, and the frozen frontier pins GC.
+    retrans0 = cluster.retransmits
+    degraded, _ = run_phase(cluster, SUSPECT_AFTER_OPS, PHASE_OPS + 100)
+    degraded["retransmits"] = cluster.retransmits - retrans0
+    infos_peak_frozen = len(cluster.replicas[0].infos)
+    print(f"degraded      : {degraded['ops_per_s_wall']:>9} ops/s "
+          f"({degraded['retransmits']} retransmits, "
+          f"{infos_peak_frozen} info records frozen, "
+          f"{dedup_hits} failover re-issues absorbed)")
+
+    # Suspect -> evict: survivors vote replica 2 into epoch 1, the GC
+    # frontier drops it, and the frozen backlog prunes.
+    cluster.evict(2)
+    cluster.gc_exchange()
+    reconfigure_ms = (time.perf_counter() - crash_wall) * 1e3
+    infos_after_unfreeze = len(cluster.replicas[0].infos)
+    assert cluster.epoch == 1 and cluster.evicted == [2]
+    assert infos_after_unfreeze < infos_peak_frozen, (
+        f"eviction did not unfreeze GC: {infos_peak_frozen} -> "
+        f"{infos_after_unfreeze}"
+    )
+    print(f"reconfigure   : epoch {cluster.epoch} evicting {cluster.evicted} "
+          f"after {reconfigure_ms:.1f} ms wall "
+          f"({cluster.epoch_frames} MEpoch frames); "
+          f"info records {infos_peak_frozen} -> {infos_after_unfreeze}")
+
+    post, post_retried = run_phase(cluster, PHASE_OPS, 2 * PHASE_OPS + 100)
+    assert post_retried == 0, "post-eviction quorums must avoid the victim"
+    print(f"post-eviction : {post['ops_per_s_wall']:>9} ops/s "
+          f"(quorums over the survivor set)")
+
+    result = {
+        "bench": "faults",
+        "harness": "python port (python/bench/bench_faults.py); no Rust "
+        "toolchain in this container — numbers are Python-speed but "
+        "measured for real: the bench_reads.py ordering path with every "
+        "frame through the wire.py codec, extended with crash, "
+        "retransmission, client failover + dedup, the MEpoch eviction "
+        "vote, and frontier GC. The Rust nemesis harness "
+        "(rust/tests/nemesis.rs) asserts the same machinery under the "
+        "deterministic simulator",
+        "workload": f"single-key writes over {N_KEYS} keys, {PHASE_OPS} ops "
+        f"per steady phase, crash of replica 2 with "
+        f"{IN_FLIGHT_AT_CRASH} requests failed over, suspect after "
+        f"{SUSPECT_AFTER_OPS} ops, r={R} majority={MAJORITY}",
+        "phases": [
+            {"phase": "healthy", **healthy},
+            {"phase": "degraded", **degraded},
+            {"phase": "post_eviction", **post},
+        ],
+        "recovery": {
+            "suspect_after_ops": SUSPECT_AFTER_OPS,
+            "epoch_installed": cluster.epoch,
+            "evicted": cluster.evicted,
+            "epoch_frames": cluster.epoch_frames,
+            "time_to_reconfigure_ms": round(reconfigure_ms, 1),
+            "failover_reissues": IN_FLIGHT_AT_CRASH,
+            "dedup_hits": dedup_hits,
+            "gc_info_records": {
+                "at_crash": infos_at_crash,
+                "peak_frozen": infos_peak_frozen,
+                "after_unfreeze": infos_after_unfreeze,
+            },
+        },
+        "wire_bytes_total": cluster.wire_bytes,
+        "regenerate": "python3 python/bench/bench_faults.py",
+    }
+    if SMOKE:
+        print(json.dumps(result, indent=2))
+        print("smoke mode: BENCH_faults.json left untouched")
+        return
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+    path = os.path.normpath(os.path.join(root, "BENCH_faults.json"))
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"written to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,13 @@ Validates the recorded BENCH_*.json baselines at the repo root:
   cells recorded for both the 95/5 and 50/50 read mixes and every read
   served locally (``local_reads > 0``), whichever harness (Rust or the
   Python port) recorded the file.
+- BENCH_faults.json: the fault path must recover — all three phases
+  (healthy, degraded, post_eviction) recorded with positive ops/s,
+  post-eviction throughput at least half of healthy, retransmissions
+  observed while a quorum peer is dead, the eviction vote recorded
+  (epoch 1 installed over real MEpoch frames), every failover re-issue
+  absorbed by the dedup window, and the GC info-record backlog pruned
+  below its frozen peak once the victim leaves the frontier.
 - BENCH_wire.json: the encode-once fan-out must stay O(1) — for every
   message shape, ``encode_once_allocs_per_op`` at fan-out 8 must be at
   most fan-out 1 + 2 (an O(1) slack), and ``encode_once_ns_per_op`` at
@@ -152,6 +159,54 @@ def main():
     print(
         f"reads: speedup {read_speedup} >= {min_read_speedup}, "
         f"{read_bytes} wire B/read, {len(read_cells)} mix cells ok"
+    )
+
+    faults = load("BENCH_faults.json")
+    phases = {p.get("phase"): p for p in faults.get("phases", [])}
+    for name in ("healthy", "degraded", "post_eviction"):
+        if name not in phases:
+            fail(f"BENCH_faults.json missing phase {name}")
+        if float(phases[name].get("ops_per_s_wall", 0.0)) <= 0:
+            fail(f"BENCH_faults.json phase {name} lacks a positive ops/s")
+    healthy = float(phases["healthy"]["ops_per_s_wall"])
+    recovered = float(phases["post_eviction"]["ops_per_s_wall"])
+    if recovered < 0.5 * healthy:
+        fail(
+            f"BENCH_faults.json post-eviction throughput {recovered} < half "
+            f"of healthy {healthy} — the cluster did not recover"
+        )
+    if int(phases["degraded"].get("retransmits", 0)) <= 0:
+        fail(
+            "BENCH_faults.json degraded phase saw no retransmits — the "
+            "dead quorum peer was never re-driven"
+        )
+    recovery = faults.get("recovery", {})
+    if int(recovery.get("epoch_installed", 0)) < 1 or not recovery.get("evicted"):
+        fail("BENCH_faults.json recovery did not install an eviction epoch")
+    if int(recovery.get("epoch_frames", 0)) <= 0:
+        fail("BENCH_faults.json records no MEpoch frames for the vote")
+    if float(recovery.get("time_to_reconfigure_ms", 0.0)) <= 0:
+        fail("BENCH_faults.json lacks a positive time_to_reconfigure_ms")
+    reissues = int(recovery.get("failover_reissues", 0))
+    if reissues <= 0 or int(recovery.get("dedup_hits", 0)) < reissues:
+        fail(
+            "BENCH_faults.json failover re-issues were not all absorbed by "
+            f"the dedup window ({recovery.get('dedup_hits')} hits for "
+            f"{reissues} re-issues)"
+        )
+    gc = recovery.get("gc_info_records", {})
+    frozen = int(gc.get("peak_frozen", 0))
+    after = int(gc.get("after_unfreeze", frozen))
+    if frozen <= 0 or after >= frozen:
+        fail(
+            f"BENCH_faults.json eviction did not unfreeze GC (info records "
+            f"{frozen} frozen -> {after} after)"
+        )
+    print(
+        f"faults: recovered {recovered:.0f}/{healthy:.0f} ops/s, "
+        f"{phases['degraded']['retransmits']} retransmits, epoch "
+        f"{recovery['epoch_installed']} evicting {recovery['evicted']}, "
+        f"gc {frozen} -> {after} ok"
     )
     print("all bench gates passed")
 

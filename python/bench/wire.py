@@ -8,7 +8,8 @@ machine and as an executable cross-check of the WIRE.md spec: every frame
 produced here must decode to the same message, and malformed frames must
 raise ``WireError`` (mirroring the Rust codec returning ``Err`` — never a
 panic). The protocol and client planes are strictly separated:
-``decode`` rejects tags 17–18, ``decode_client`` rejects tags 0–16, and
+``decode`` rejects tags 17–18, ``decode_client`` rejects tags 0–16
+and 21, and
 an ``MBatch`` member carrying a client frame is malformed the same way a
 nested batch is.
 
@@ -229,6 +230,12 @@ def encode(msg):
             body = encode(m)
             w.u32(len(body))
             w.parts.append(body)
+    elif t == "MEpoch":
+        w.u8(21)
+        w.u64(msg["epoch"])
+        w.u16(len(msg["evicted"]))
+        for p in msg["evicted"]:
+            w.u32(p)
     else:
         raise ValueError(f"unknown message {t}")
     return w.bytes()
@@ -367,6 +374,10 @@ def _decode_at(r):
                 )
             msgs.append(inner)
         return {"t": "MBatch", "msgs": msgs}
+    if tag == 21:
+        epoch = r.u64()
+        evicted = [r.u32() for _ in range(r.u16())]
+        return {"t": "MEpoch", "epoch": epoch, "evicted": evicted}
     if tag in (17, 18):
         raise WireError(f"client frame tag {tag} in protocol stream")
     if tag == 19:
@@ -451,6 +462,8 @@ def self_check():
         {"t": "MRecAck", "dot": dot, "ts": [], "phase": "Commit", "abal": 1, "bal": 2},
         {"t": "MGarbageCollect", "executed": [(0, 41), (4, 7)]},
         {"t": "MStable", "dot": dot},
+        {"t": "MEpoch", "epoch": 3, "evicted": [2, 4]},
+        {"t": "MEpoch", "epoch": 0, "evicted": []},
         {"t": "MBatch", "msgs": [{"t": "MStable", "dot": dot}, {"t": "MBump", "dot": dot, "ts": 9}]},
     ]
     for m in msgs:
@@ -483,6 +496,29 @@ def self_check():
         raise AssertionError("padded member decoded")
     except WireError:
         pass
+    # Epoch vote (tag 21): a protocol-plane message — truncation at
+    # every cut rejects, it is a legal MBatch member (unlike tags
+    # 16–20), and it never decodes on the client plane (mirrors the Rust
+    # prop_epoch_frames_roundtrip_and_stay_on_the_protocol_plane).
+    epoch_msg = {"t": "MEpoch", "epoch": 7, "evicted": [1, 3]}
+    enc = encode(epoch_msg)
+    assert enc[0] == 21 and len(enc) == 1 + 8 + 2 + 4 * 2, enc
+    for cut in range(len(enc)):
+        try:
+            decode(enc[:cut])
+            raise AssertionError(f"truncated epoch vote decoded at {cut}")
+        except WireError:
+            pass
+    try:
+        decode_client(enc)
+        raise AssertionError("epoch vote decoded on the client plane")
+    except WireError:
+        pass
+    ebatch = Writer()
+    ebatch.u8(16), ebatch.u16(1), ebatch.u32(len(enc))
+    ebatch.parts.append(enc)
+    got = decode(ebatch.bytes())
+    assert got == {"t": "MBatch", "msgs": [epoch_msg]}, got
     frame = encode({"t": "MStable", "dot": dot})
     for _ in range(5000):  # depth well past any recursion limit
         deep = Writer()

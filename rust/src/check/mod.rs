@@ -47,6 +47,20 @@ pub enum Violation {
     /// sequential oracle's replay of the serving replica's log up to the
     /// read's audit position.
     ReadResponseMismatch { process: ProcessId, rid: Rid },
+    /// `process` executed two *different* dots carrying the same request
+    /// id — a client-failover re-issue applied twice (exactly-once
+    /// broken). The executor's per-client dedup window prevents this;
+    /// `Config::dedup_window == 0` is the knob that lets it through.
+    DuplicateRequest { process: ProcessId, rid: Rid, first: Dot, second: Dot },
+    /// `process` installed a non-monotonic epoch history (epoch numbers
+    /// must strictly increase and evicted sets must only grow). The
+    /// `Config::epoch_fence_off` knob lets a stale epoch install land
+    /// after a newer one, which is exactly this regression.
+    EpochRegression { process: ProcessId, position: usize },
+    /// Two processes installed the *same* epoch number with different
+    /// evicted sets — the membership views diverged instead of forming
+    /// prefix-compatible histories.
+    EpochDivergence { a: ProcessId, b: ProcessId, epoch: u64 },
 }
 
 /// Configuration view the checker needs.
@@ -97,6 +111,32 @@ pub fn check_psmr(
             order.push(dot);
         }
         per_proc.push(order);
+    }
+
+    // --- Exactly-once per request id ---------------------------------------
+    // A client-failover re-issue carries the same rid under a fresh dot;
+    // the executors' dedup window must absorb the second delivery. Two
+    // *distinct* executed dots with one rid at one process means the
+    // request applied twice.
+    for (p, order) in per_proc.iter().enumerate() {
+        let mut rid_dot: HashMap<Rid, Dot> = HashMap::new();
+        for dot in order {
+            let Some(cmd) = submitted.get(dot) else { continue };
+            match rid_dot.get(&cmd.rid) {
+                None => {
+                    rid_dot.insert(cmd.rid, *dot);
+                }
+                Some(&first) if first != *dot => {
+                    violations.push(Violation::DuplicateRequest {
+                        process: ProcessId(p as u32),
+                        rid: cmd.rid,
+                        first,
+                        second: *dot,
+                    });
+                }
+                Some(_) => {} // same dot twice is DuplicateExecution above
+            }
+        }
     }
 
     // --- Per-partition (per-key) agreement --------------------------------
@@ -290,6 +330,20 @@ pub fn check_psmr(
         for c in &result.completions {
             observed.entry(c.dot).or_insert((c.rid, &c.response));
         }
+        // Completions whose dot never executed anywhere: a failover
+        // re-issue the executors absorbed, answered with the cached
+        // response of the rid's *original* dot. Their response is checked
+        // against the oracle at the rid's executed dot instead (at the
+        // re-issue's coordinator — the replica whose cache produced the
+        // reply).
+        let any_executed: HashSet<Dot> =
+            per_proc.iter().flat_map(|v| v.iter().copied()).collect();
+        let mut replayed: HashMap<Rid, (Dot, &crate::core::Response)> = HashMap::new();
+        for c in &result.completions {
+            if !any_executed.contains(&c.dot) && c.dot.seq != 0 {
+                replayed.entry(c.rid).or_insert((c.dot, &c.response));
+            }
+        }
         for (p, log) in result.execution_logs.iter().enumerate() {
             let process = ProcessId(p as u32);
             let mut oracle = KvStore::new();
@@ -305,6 +359,15 @@ pub fn check_psmr(
                                     rid,
                                 });
                             }
+                        }
+                    }
+                    if let Some(&(cdot, obs)) = replayed.get(&cmd.rid) {
+                        if cdot.origin == process && *obs != resp {
+                            violations.push(Violation::ResponseMismatch {
+                                process,
+                                dot: cdot,
+                                rid: cmd.rid,
+                            });
                         }
                     }
                 }
@@ -389,18 +452,70 @@ pub fn check_psmr(
     }
 
     // --- Liveness ----------------------------------------------------------
+    // Grouped by request id: a failover re-issue gives one rid several
+    // dots, and exactly-once delivery means each process executes exactly
+    // one of them — requiring every dot individually would flag the
+    // absorbed duplicate. A process is live for the rid if it executed
+    // *any* of the rid's dots; the reported dot is the group's first
+    // (the original submission).
     if require_liveness {
         let executed_sets: Vec<HashSet<Dot>> =
             per_proc.iter().map(|v| v.iter().copied().collect()).collect();
-        for (dot, cmd) in &result.submitted {
+        let mut by_rid: HashMap<Rid, Vec<usize>> = HashMap::new();
+        for (i, (_, cmd)) in result.submitted.iter().enumerate() {
+            by_rid.entry(cmd.rid).or_default().push(i);
+        }
+        let mut groups: Vec<(Rid, Vec<usize>)> = by_rid.into_iter().collect();
+        groups.sort_unstable_by_key(|(rid, _)| *rid);
+        for (_, idxs) in groups {
+            let (first_dot, cmd) = &result.submitted[idxs[0]];
             for s in cmd.shards(cfg.shards) {
                 for p in cfg.shard_procs(s.0) {
-                    if !executed_sets[p].contains(dot) {
+                    let any =
+                        idxs.iter().any(|&i| executed_sets[p].contains(&result.submitted[i].0));
+                    if !any {
                         violations.push(Violation::NotExecuted {
                             process: ProcessId(p as u32),
-                            dot: *dot,
+                            dot: *first_dot,
                         });
                     }
+                }
+            }
+        }
+    }
+
+    // --- Epoch histories ----------------------------------------------------
+    // Per process: epochs strictly increase and evicted sets only grow
+    // (cumulative). Across processes: the same epoch number always names
+    // the same evicted set — installed histories are prefix-compatible.
+    {
+        for (p, view) in result.epoch_views.iter().enumerate() {
+            for (i, w) in view.windows(2).enumerate() {
+                let ((e0, s0), (e1, s1)) = (&w[0], &w[1]);
+                let grows = e1 > e0 && s0.iter().all(|m| s1.contains(m));
+                if !grows {
+                    violations.push(Violation::EpochRegression {
+                        process: ProcessId(p as u32),
+                        position: i + 1,
+                    });
+                }
+            }
+        }
+        let mut canonical: HashMap<u64, (ProcessId, &Vec<ProcessId>)> = HashMap::new();
+        for (p, view) in result.epoch_views.iter().enumerate() {
+            for (e, set) in view {
+                match canonical.get(e) {
+                    None => {
+                        canonical.insert(*e, (ProcessId(p as u32), set));
+                    }
+                    Some(&(a, s)) if s != set => {
+                        violations.push(Violation::EpochDivergence {
+                            a,
+                            b: ProcessId(p as u32),
+                            epoch: *e,
+                        });
+                    }
+                    Some(_) => {}
                 }
             }
         }

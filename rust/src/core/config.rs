@@ -80,9 +80,43 @@ pub struct Config {
     /// `rust/tests/reads.rs` proves the oracle bites). Never set this
     /// outside tests. 0 (the default) is the sound frontier.
     pub read_frontier_skew: u64,
+    /// Epoch-based membership reconfiguration: when enabled, survivors
+    /// vote a suspected member into an eviction, install a new epoch,
+    /// exclude the evicted member from the GC frontier (so executed
+    /// frontier GC unfreezes under faults), and fence off messages from
+    /// evicted members. On by default; fault-free runs never trigger a
+    /// vote so their behaviour is unchanged.
+    pub epochs_enabled: bool,
+    /// TEST KNOB — accept stale epoch installs (skip the monotonicity
+    /// guard when applying a remote epoch vote result). This re-enters
+    /// an old epoch after a newer one was installed, which is exactly
+    /// the regression the checker's `EpochRegression` oracle exists to
+    /// catch (the negative test in `rust/tests/nemesis.rs` proves the
+    /// oracle bites). Never set this outside tests.
+    pub epoch_fence_off: bool,
+    /// Per-client executor dedup window: each replica remembers the
+    /// last `dedup_window` request ids it executed per client and
+    /// absorbs re-submissions of those rids (exactly-once across
+    /// client failover). 0 disables dedup entirely — the negative
+    /// knob for the checker's `DuplicateRequest` oracle.
+    pub dedup_window: usize,
+    /// Retransmission cadence for in-flight coordinator state, in
+    /// ticks. Every `retry_interval_ticks` ticks a coordinator
+    /// re-broadcasts proposals that have not yet reached quorum and
+    /// re-broadcasts commits that peers may have missed, so dropped
+    /// links heal once the nemesis window closes. 0 (the default)
+    /// disables retransmission and keeps existing seeded runs
+    /// bit-identical.
+    pub retry_interval_ticks: u64,
 }
 
 impl Config {
+    /// Default per-client executor dedup window (see
+    /// [`Config::dedup_window`]). Large enough that a re-issued request
+    /// lands well inside the window under any realistic client pipeline
+    /// depth.
+    pub const DEFAULT_DEDUP_WINDOW: usize = 64;
+
     pub fn new(r: usize, f: usize) -> Self {
         assert!(r >= 3, "need at least 3 replicas (r={r})");
         assert!(f >= 1 && f <= (r - 1) / 2, "need 1 <= f <= ⌊(r-1)/2⌋ (r={r}, f={f})");
@@ -102,6 +136,10 @@ impl Config {
             batch_max_delay_us: 0,
             read_slack: 0,
             read_frontier_skew: 0,
+            epochs_enabled: true,
+            epoch_fence_off: false,
+            dedup_window: Self::DEFAULT_DEDUP_WINDOW,
+            retry_interval_ticks: 0,
         }
     }
 
@@ -178,6 +216,35 @@ impl Config {
     /// oracle test can prove unsound early release is caught.
     pub fn with_read_frontier_skew(mut self, skew: u64) -> Self {
         self.read_frontier_skew = skew;
+        self
+    }
+
+    /// Enable or disable epoch-based membership reconfiguration (see
+    /// [`Config::epochs_enabled`]; on by default).
+    pub fn with_epochs(mut self, enabled: bool) -> Self {
+        self.epochs_enabled = enabled;
+        self
+    }
+
+    /// TEST KNOB: disable epoch fencing (see
+    /// [`Config::epoch_fence_off`]). Exists so the negative oracle test
+    /// can prove stale-epoch acceptance is caught.
+    pub fn with_epoch_fence_off(mut self, off: bool) -> Self {
+        self.epoch_fence_off = off;
+        self
+    }
+
+    /// Per-client dedup window at the executors (see
+    /// [`Config::dedup_window`]; 0 disables — the negative-oracle knob).
+    pub fn with_dedup_window(mut self, window: usize) -> Self {
+        self.dedup_window = window;
+        self
+    }
+
+    /// Retransmission cadence in ticks (see
+    /// [`Config::retry_interval_ticks`]; 0 disables).
+    pub fn with_retry_interval_ticks(mut self, ticks: u64) -> Self {
+        self.retry_interval_ticks = ticks;
         self
     }
 

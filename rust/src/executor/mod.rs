@@ -19,25 +19,64 @@ pub mod graph;
 
 pub use graph::DepGraph;
 
-use crate::core::{Command, Dot, ProcessId, Response};
+use crate::core::{ClientId, Command, Dot, ProcessId, Response};
 use crate::protocol::Action;
 use crate::store::{KvStore, StateMachine};
+use std::collections::{BTreeMap, HashMap};
 
 /// Per-replica execution engine: applies `Action::Execute` upcalls to a
 /// pluggable [`StateMachine`] in order and emits `Action::Reply` for
 /// commands this replica coordinates (`dot.origin == id`).
+///
+/// ## Exactly-once across client failover
+///
+/// A client that loses its replica re-issues unacked requests at another
+/// replica under the *same* [`crate::core::Rid`] — the re-issue gets a
+/// fresh dot, so the protocol orders and delivers it a second time. The
+/// executor absorbs the duplicate with a per-client dedup window
+/// (`Config::dedup_window`, [`Executor::with_dedup_window`]): the second
+/// delivery of an in-window rid skips the state machine, its `Execute`
+/// action is dropped from the stream, and the cached response is replayed
+/// at the duplicate's coordinator so the failed-over client still gets
+/// its answer. The skip decision depends only on per-client rid history
+/// (never on cross-client interleaving), so all replicas — which each see
+/// both deliveries — agree on which copy applied and stay convergent.
+/// A window of `n` tolerates up to `n` newer same-client commands between
+/// the two deliveries; window 0 disables dedup (the checker's
+/// `DuplicateRequest` negative knob).
 #[derive(Clone, Debug)]
 pub struct Executor<S: StateMachine = KvStore> {
     id: ProcessId,
     sm: S,
     executed: u64,
     reads_served: u64,
+    /// Per-client window of recently applied rids → their responses.
+    dedup: HashMap<ClientId, BTreeMap<u64, Response>>,
+    dedup_window: usize,
+    dedup_hits: u64,
 }
 
 impl<S: StateMachine> Executor<S> {
-    /// Build the executor of replica `id` over state machine `sm`.
+    /// Build the executor of replica `id` over state machine `sm` with
+    /// the default dedup window.
     pub fn new(id: ProcessId, sm: S) -> Self {
-        Executor { id, sm, executed: 0, reads_served: 0 }
+        Executor {
+            id,
+            sm,
+            executed: 0,
+            reads_served: 0,
+            dedup: HashMap::new(),
+            dedup_window: crate::core::Config::DEFAULT_DEDUP_WINDOW,
+            dedup_hits: 0,
+        }
+    }
+
+    /// Override the per-client dedup window (0 disables deduplication —
+    /// re-issued requests then apply twice, which `check_psmr` flags as
+    /// `DuplicateRequest`).
+    pub fn with_dedup_window(mut self, window: usize) -> Self {
+        self.dedup_window = window;
+        self
     }
 
     /// The wrapped state machine (digest checks, test oracles).
@@ -58,12 +97,40 @@ impl<S: StateMachine> Executor<S> {
         self.reads_served
     }
 
+    /// Re-submitted requests absorbed by the per-client dedup window.
+    pub fn dedup_hits(&self) -> u64 {
+        self.dedup_hits
+    }
+
     /// Apply one executed command; returns the reply to route to the
     /// client if this replica is the command's coordinator.
     pub fn apply(&mut self, dot: Dot, cmd: &Command) -> Option<Response> {
+        let (response, _fresh) = self.apply_dedup(cmd);
+        (dot.origin == self.id).then_some(response)
+    }
+
+    /// Apply with duplicate detection: returns the response plus whether
+    /// the command was *fresh* (actually applied to the state machine).
+    /// A duplicate rid inside the window returns its cached response and
+    /// `false` without touching the store.
+    fn apply_dedup(&mut self, cmd: &Command) -> (Response, bool) {
+        let (client, seq) = (cmd.rid.client(), cmd.rid.seq());
+        if self.dedup_window > 0 {
+            if let Some(cached) = self.dedup.get(&client).and_then(|w| w.get(&seq)) {
+                self.dedup_hits += 1;
+                return (cached.clone(), false);
+            }
+        }
         let response = self.sm.apply(cmd);
         self.executed += 1;
-        (dot.origin == self.id).then_some(response)
+        if self.dedup_window > 0 {
+            let w = self.dedup.entry(client).or_default();
+            w.insert(seq, response.clone());
+            while w.len() > self.dedup_window {
+                w.pop_first();
+            }
+        }
+        (response, true)
     }
 
     /// Run one protocol step's action stream through the executor:
@@ -82,10 +149,20 @@ impl<S: StateMachine> Executor<S> {
         for action in actions {
             match action {
                 Action::Execute { dot, cmd, ts } => {
-                    let reply = self.apply(dot, &cmd);
+                    let (response, fresh) = self.apply_dedup(&cmd);
                     let rid = cmd.rid;
-                    out.push(Action::Execute { dot, cmd, ts });
-                    if let Some(response) = reply {
+                    if fresh {
+                        out.push(Action::Execute { dot, cmd, ts });
+                        if dot.origin == self.id {
+                            out.push(Action::Reply { rid, response });
+                        }
+                    } else if dot.origin == self.id {
+                        // Duplicate delivery (client failover re-issue):
+                        // the state machine was skipped, but the re-issue's
+                        // coordinator still owes the client its answer —
+                        // replay the cached response. The duplicate
+                        // `Execute` is dropped from the stream so recorded
+                        // executions stay exactly-once.
                         out.push(Action::Reply { rid, response });
                     }
                 }
@@ -197,6 +274,77 @@ mod tests {
         assert_eq!(e.state().digest(), digest);
         assert_eq!(e.executed(), 1);
         assert_eq!(e.reads_served(), 1);
+    }
+
+    #[test]
+    fn duplicate_rids_are_absorbed_and_replayed() {
+        // Client failover: the same rid arrives twice under two dots —
+        // first via the crashed coordinator P1, then re-issued at P2.
+        let c = cmd(7, 1, 5);
+        let first = Dot::new(ProcessId(1), 1);
+        let reissue = Dot::new(ProcessId(2), 1);
+        let mut e = Executor::new(ProcessId(2), KvStore::new());
+        let out1 = e.absorb::<TestMsg>(vec![Action::Execute { dot: first, cmd: c.clone(), ts: 1 }]);
+        assert_eq!(out1.len(), 1, "P2 does not coordinate the first copy");
+        let digest = e.state().digest();
+        let out2 =
+            e.absorb::<TestMsg>(vec![Action::Execute { dot: reissue, cmd: c.clone(), ts: 2 }]);
+        // The duplicate Execute is dropped; only the replayed Reply remains.
+        assert_eq!(out2.len(), 1);
+        match &out2[0] {
+            Action::Reply { rid, response } => {
+                assert_eq!(*rid, c.rid);
+                assert_eq!(response.versions, vec![(5, 1)], "cached, not re-applied");
+            }
+            other => panic!("expected a replayed reply, got {other:?}"),
+        }
+        assert_eq!(e.state().digest(), digest, "store must not change");
+        assert_eq!(e.executed(), 1);
+        assert_eq!(e.dedup_hits(), 1);
+    }
+
+    #[test]
+    fn dedup_window_zero_applies_duplicates() {
+        // The negative knob: with the window off, the duplicate applies
+        // twice (state divergence the checker's DuplicateRequest oracle
+        // exists to catch).
+        let c = cmd(7, 1, 5);
+        let mut e = Executor::new(ProcessId(1), KvStore::new()).with_dedup_window(0);
+        e.absorb::<TestMsg>(vec![Action::Execute { dot: Dot::new(ProcessId(1), 1), cmd: c.clone(), ts: 1 }]);
+        let out =
+            e.absorb::<TestMsg>(vec![Action::Execute { dot: Dot::new(ProcessId(2), 1), cmd: c.clone(), ts: 2 }]);
+        assert_eq!(out.len(), 1, "duplicate Execute passes through");
+        assert!(matches!(out[0], Action::Execute { .. }));
+        assert_eq!(e.executed(), 2);
+        assert_eq!(e.dedup_hits(), 0);
+    }
+
+    #[test]
+    fn dedup_window_evicts_oldest_entries() {
+        let mut e = Executor::new(ProcessId(1), KvStore::new()).with_dedup_window(2);
+        for seq in 1..=3u64 {
+            e.absorb::<TestMsg>(vec![Action::Execute {
+                dot: Dot::new(ProcessId(1), seq),
+                cmd: cmd(7, seq, seq),
+                ts: seq,
+            }]);
+        }
+        // seq 1 fell out of the window: its duplicate re-applies.
+        e.absorb::<TestMsg>(vec![Action::Execute {
+            dot: Dot::new(ProcessId(1), 4),
+            cmd: cmd(7, 1, 1),
+            ts: 4,
+        }]);
+        assert_eq!(e.executed(), 4);
+        assert_eq!(e.dedup_hits(), 0);
+        // seq 3 is still inside: absorbed.
+        e.absorb::<TestMsg>(vec![Action::Execute {
+            dot: Dot::new(ProcessId(2), 1),
+            cmd: cmd(7, 3, 3),
+            ts: 5,
+        }]);
+        assert_eq!(e.executed(), 4);
+        assert_eq!(e.dedup_hits(), 1);
     }
 
     #[test]

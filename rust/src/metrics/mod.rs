@@ -110,6 +110,16 @@ pub struct Counters {
     /// produced; a local read contributes 0 — the observable
     /// zero-wire-traffic claim).
     pub read_path_bytes: u64,
+    /// Members evicted into a new epoch by the reconfiguration vote
+    /// (counted once per (process, evicted member) pair).
+    pub evictions: u64,
+    /// Re-submitted requests absorbed by the executor's per-client dedup
+    /// window (exactly-once across client failover).
+    pub dedup_hits: u64,
+    /// Protocol-level retransmissions sent by the opt-in retry timer
+    /// (`config.retry_interval_ticks`): re-proposals to silent quorum
+    /// members plus commit re-broadcasts.
+    pub retransmits: u64,
 }
 
 impl Counters {
@@ -139,6 +149,9 @@ impl Counters {
         self.slow_reads += o.slow_reads;
         self.read_slack_served += o.read_slack_served;
         self.read_path_bytes += o.read_path_bytes;
+        self.evictions += o.evictions;
+        self.dedup_hits += o.dedup_hits;
+        self.retransmits += o.retransmits;
     }
 
     /// Mean number of messages per flushed batch (0 when batching never

@@ -53,7 +53,7 @@ use crate::protocol::tempo::Tempo;
 use crate::protocol::{Action, Protocol};
 use crate::store::{merkle_root, KvStore};
 use crate::util::error::{bail, Context, Result};
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -588,8 +588,9 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
         cfg.workers = workers;
         cfg.worker = w;
         threads.push(std::thread::spawn(move || {
+            let dedup_window = cfg.dedup_window;
             let mut proto = Tempo::new(id, cfg);
-            let mut exec = Executor::new(id, KvStore::new());
+            let mut exec = Executor::new(id, KvStore::new()).with_dedup_window(dedup_window);
             let mut done: DoneMap = HashMap::new();
             let start = Instant::now();
             let now_us = |s: Instant| s.elapsed().as_micros() as u64;
@@ -673,6 +674,9 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
                     slot.digest = exec.state().digest();
                 }
                 slot.counters = proto.counters();
+                // Executor-side counters live outside the protocol: fold
+                // them in so `NodeHandle::counters()` reports them.
+                slot.counters.dedup_hits = exec.dedup_hits();
                 slot.counters.read_path_bytes = read_bytes;
             }
         }));
@@ -691,11 +695,24 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
 /// flight per session. [`TcpClient::submit`] remains the closed-loop
 /// convenience (submit one, block for that rid, buffering any other
 /// pipelined replies that arrive first).
+///
+/// Supports **failover**: every unacked submission is retained (rid →
+/// command) until its reply arrives, so when the contacted node dies the
+/// session can dial a survivor and re-issue the lot with
+/// [`TcpClient::failover`] — same rids, so the replicas' per-client
+/// dedup window (`Config::dedup_window`) absorbs any copy the old
+/// coordinator already ordered and replays the cached response instead
+/// of executing twice. Exactly-once end to end: a request is lost only
+/// if it never reached any surviving quorum, and it is never applied
+/// twice no matter how many times it is re-issued.
 pub struct TcpClient {
     session: Session,
     stream: TcpStream,
-    /// Rids submitted and not yet completed.
-    outstanding: HashSet<Rid>,
+    /// Unacked submissions, retained for failover re-issue: every rid
+    /// submitted and not yet completed, with the exact command bytes it
+    /// carried (re-issuing must not re-allocate a rid — the dedup window
+    /// keys on it).
+    outstanding: HashMap<Rid, Command>,
     /// Replies read off the socket while waiting for a different rid.
     buffered: HashMap<Rid, Response>,
     /// Pooled receive buffer, reused across reply frames.
@@ -711,10 +728,39 @@ impl TcpClient {
         Ok(TcpClient {
             session: Session::new(client),
             stream,
-            outstanding: HashSet::new(),
+            outstanding: HashMap::new(),
             buffered: HashMap::new(),
             rbuf: wire::FrameBuf::take(),
         })
+    }
+
+    /// Fail over to the node at `addr`: dial it, then re-issue every
+    /// unacked submission **with its original rid** in rid order.
+    /// Returns the number of requests re-issued. The replicas' per-client
+    /// dedup window makes the re-issue exactly-once: a copy the old
+    /// coordinator already pushed through the protocol is absorbed at
+    /// execution and its cached response is replayed from the new
+    /// coordinator, so the client cannot observe a double execution.
+    /// Replies already buffered are kept (their requests completed; only
+    /// the delivery to the caller is pending), and the failed stream's
+    /// unread bytes are abandoned with it.
+    pub fn failover(&mut self, addr: &str) -> Result<usize> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true)?;
+        self.stream = stream;
+        let mut unacked: Vec<&Command> = self
+            .outstanding
+            .iter()
+            .filter(|(rid, _)| !self.buffered.contains_key(rid))
+            .map(|(_, cmd)| cmd)
+            .collect();
+        unacked.sort_by_key(|cmd| cmd.rid);
+        let n = unacked.len();
+        for cmd in unacked {
+            let body = wire::encode_client(&wire::ClientFrame::Submit { cmd: cmd.clone() });
+            write_frame(&mut self.stream, CLIENT_FROM, &body)?;
+        }
+        Ok(n)
     }
 
     /// The session identity.
@@ -740,9 +786,9 @@ impl TcpClient {
     pub fn submit_async(&mut self, keys: Vec<Key>, op: Op, payload_len: u32) -> Result<Rid> {
         let cmd = self.session.command(keys, op, payload_len);
         let rid = cmd.rid;
-        let body = wire::encode_client(&wire::ClientFrame::Submit { cmd });
+        let body = wire::encode_client(&wire::ClientFrame::Submit { cmd: cmd.clone() });
         write_frame(&mut self.stream, CLIENT_FROM, &body)?;
-        self.outstanding.insert(rid);
+        self.outstanding.insert(rid, cmd);
         Ok(rid)
     }
 
@@ -763,7 +809,7 @@ impl TcpClient {
         }
         loop {
             let (rid, response) = self.read_reply()?;
-            if self.outstanding.remove(&rid) {
+            if self.outstanding.remove(&rid).is_some() {
                 return Ok((rid, response));
             }
             // else: stale reply for an abandoned request — skip it.
@@ -804,7 +850,7 @@ impl TcpClient {
                 self.outstanding.remove(&rid);
                 return Ok((rid, response));
             }
-            if self.outstanding.contains(&got) {
+            if self.outstanding.contains_key(&got) {
                 self.buffered.insert(got, response);
             }
             // else: a reply for an earlier (timed-out) request — skip it.

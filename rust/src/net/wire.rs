@@ -1,5 +1,6 @@
-//! Binary wire codec for Tempo protocol messages (tags 0–16) and the
-//! client service frames (tags 17–18). The offline registry has no serde,
+//! Binary wire codec for Tempo protocol messages (tags 0–16 plus the
+//! epoch reconfiguration vote, tag 21) and the client service frames
+//! (tags 17–18). The offline registry has no serde,
 //! so framing is hand-rolled: length-prefixed frames, little-endian
 //! fixed-width integers, u8 message tags. The complete frame layout —
 //! every tag, every compound encoding, and the malformed-input error
@@ -55,6 +56,11 @@ pub const TAG_ROUTED: u8 = 19;
 /// appears only at the top of a peer frame body, exactly like
 /// [`TAG_ROUTED`]: never bare, never inside `MBatch`, never nested.
 pub const TAG_MERGED: u8 = 20;
+/// Tag of the `MEpoch` reconfiguration vote (docs/WIRE.md):
+/// `[21][epoch: u64][n: u16][n × member: u32]`. A protocol-plane
+/// message like tags 0–16: legal bare, inside `MBatch`, and under a
+/// routed envelope; never on the client plane.
+pub const TAG_EPOCH: u8 = 21;
 
 /// Frames exchanged between a client session and a node over the client
 /// plane of the TCP runtime (never between protocol peers).
@@ -511,6 +517,7 @@ pub fn encoded_len(msg: &Msg) -> usize {
         Msg::MRecNAck { .. } => 1 + 12 + 8,
         Msg::MCommitRequest { .. } => 1 + 12,
         Msg::MGarbageCollect { executed } => 1 + 2 + 12 * executed.len(),
+        Msg::MEpoch { evicted, .. } => 1 + 8 + 2 + 4 * evicted.len(),
         Msg::MBatch { msgs } => {
             1 + 2 + msgs.iter().map(|m| 4 + encoded_len(m)).sum::<usize>()
         }
@@ -625,6 +632,14 @@ pub fn encode_into(w: &mut Writer, msg: &Msg) {
             for &(p, wm) in executed {
                 w.u32(p.0);
                 w.u64(wm);
+            }
+        }
+        Msg::MEpoch { epoch, evicted } => {
+            w.u8(TAG_EPOCH);
+            w.u64(*epoch);
+            w.u16(evicted.len() as u16);
+            for p in evicted {
+                w.u32(p.0);
             }
         }
         Msg::MBatch { msgs } => {
@@ -896,6 +911,15 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
             }
             Msg::MBatch { msgs }
         }
+        TAG_EPOCH => {
+            let epoch = r.u64()?;
+            let n = r.u16()? as usize;
+            let mut evicted = Vec::with_capacity(n);
+            for _ in 0..n {
+                evicted.push(ProcessId(r.u32()?));
+            }
+            Msg::MEpoch { epoch, evicted }
+        }
         x if x == TAG_CLIENT_SUBMIT || x == TAG_CLIENT_REPLY => {
             bail!("client frame tag {x} in protocol stream")
         }
@@ -957,11 +981,14 @@ mod tests {
             executed: vec![(ProcessId(0), 41), (ProcessId(4), 7)],
         });
         roundtrip(Msg::MGarbageCollect { executed: vec![] });
+        roundtrip(Msg::MEpoch { epoch: 3, evicted: vec![ProcessId(2), ProcessId(4)] });
+        roundtrip(Msg::MEpoch { epoch: 0, evicted: vec![] });
         roundtrip(Msg::MBatch {
             msgs: vec![
                 Msg::MStable { dot },
                 Msg::MPromises { promises: vec![(1, ps)].into() },
                 Msg::MGarbageCollect { executed: vec![(ProcessId(2), 3)] },
+                Msg::MEpoch { epoch: 1, evicted: vec![ProcessId(2)] },
             ],
         });
         roundtrip(Msg::MBatch { msgs: vec![] });
@@ -1061,6 +1088,7 @@ mod tests {
                 abal: 1,
                 bal: 2,
             },
+            Msg::MEpoch { epoch: 2, evicted: vec![ProcessId(4)] },
         ] {
             let bytes = encode(&msg);
             for cut in 0..bytes.len() {
@@ -1218,6 +1246,8 @@ mod tests {
             Msg::MRecNAck { dot, bal: 9 },
             Msg::MCommitRequest { dot },
             Msg::MGarbageCollect { executed: vec![(ProcessId(0), 41), (ProcessId(4), 7)] },
+            Msg::MEpoch { epoch: 5, evicted: vec![ProcessId(1), ProcessId(3)] },
+            Msg::MEpoch { epoch: 0, evicted: vec![] },
             Msg::MBatch {
                 msgs: vec![
                     Msg::MStable { dot },

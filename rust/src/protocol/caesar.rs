@@ -20,7 +20,9 @@
 //! (the paper never crashes baseline processes), and the retry round
 //! accepts unconditionally — both simplifications favour Caesar.
 
-use super::common::{wire, BaseProcess, CommandsInfo, GCTrack, GcProcess, Process};
+use super::common::{
+    wire, BaseProcess, CommandsInfo, EpochManager, EpochProcess, GCTrack, GcProcess, Process,
+};
 use super::{Action, Footprint, Protocol};
 use crate::core::{Command, Config, Dot, Key, ProcessId};
 use crate::metrics::Counters;
@@ -45,6 +47,8 @@ pub enum Msg {
     MCommit { dot: Dot, cmd: Command, ts: u64, deps: Deps },
     /// Periodic GC exchange (`protocol::common::GCTrack`).
     MGarbageCollect { executed: Vec<(ProcessId, u64)> },
+    /// Epoch reconfiguration vote (`protocol::common::epoch`).
+    MEpoch { epoch: u64, evicted: Vec<ProcessId> },
     /// Batch frame (`protocol::common::batch`): several messages bound for
     /// the same destination; unbatched inside `Process::dispatch`.
     MBatch { msgs: Vec<Msg> },
@@ -75,6 +79,7 @@ impl Msg {
             }
             Msg::MProposeNack { .. } => HDR + 16,
             Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
+            Msg::MEpoch { evicted, .. } => HDR + 8 + 4 * evicted.len() as u64,
             Msg::MBatch { msgs } => {
                 HDR + msgs.iter().map(|m| 4 + m.wire_size()).sum::<u64>()
             }
@@ -95,9 +100,11 @@ struct Info {
     cmd: Command,
     ts: u64,
     deps: Vec<Dot>,
-    /// Coordinator bookkeeping.
+    /// Coordinator bookkeeping. Acks are a *voter set*, not a counter:
+    /// nemesis-duplicated (or retransmitted) replies must not complete a
+    /// quorum twice over.
     coordinator: bool,
-    acks: usize,
+    ack_from: BTreeSet<ProcessId>,
     ack_deps: BTreeSet<Dot>,
     nack_ts: u64,
     nacked: bool,
@@ -125,6 +132,14 @@ pub struct Caesar {
     /// (§Perf: avoids rescanning the whole queue per event).
     exec_blocked: HashMap<Dot, Vec<Dot>>,
     gc: GCTrack,
+    /// Epoch reconfiguration: eviction votes, installed history, fencing.
+    epochs: EpochManager,
+    /// Coordinator dots awaiting quorum — re-proposed every
+    /// `retry_interval_ticks` ticks so dropped links heal.
+    retry_pending: BTreeSet<Dot>,
+    /// Coordinator dots committed but not yet group-wide pruned — their
+    /// MCommit is re-broadcast on the same cadence.
+    retry_commits: BTreeSet<Dot>,
     ticks: u64,
     pub counters: Counters,
 }
@@ -173,6 +188,11 @@ impl Caesar {
         if self.gc.was_executed(dot) {
             return;
         }
+        // A retransmitted/duplicated MPropose must never downgrade the
+        // conflict-table entry of an already-committed command.
+        if self.info.get(&dot).is_some_and(|i| i.phase != Phase::Pending) {
+            return;
+        }
         self.clock = self.clock.max(ts);
         let conflicts = self.conflicts(&cmd);
         // Wait condition: a conflicting command with a *higher* proposed
@@ -218,7 +238,7 @@ impl Caesar {
             if !info.coordinator || info.decided || info.phase != Phase::Pending {
                 return;
             }
-            if info.acks + (info.nacked as usize) == 0 {
+            if info.ack_from.is_empty() && !info.nacked {
                 return;
             }
             if info.nacked {
@@ -228,7 +248,7 @@ impl Caesar {
                 }
                 info.retrying = true;
                 Some((false, info.cmd.clone(), info.nack_ts))
-            } else if info.acks >= quorum {
+            } else if info.ack_from.len() >= quorum {
                 info.decided = true;
                 Some((true, info.cmd.clone(), info.ts))
             } else {
@@ -250,7 +270,7 @@ impl Caesar {
                 {
                     let info = self.info.get_mut(&dot).unwrap();
                     info.ts = ts;
-                    info.acks = 0;
+                    info.ack_from.clear();
                     info.ack_deps.clear();
                     info.nacked = false;
                 }
@@ -285,7 +305,7 @@ impl Caesar {
             ts,
             deps: Vec::new(),
             coordinator: false,
-            acks: 0,
+            ack_from: BTreeSet::new(),
             ack_deps: BTreeSet::new(),
             nack_ts: 0,
             nacked: false,
@@ -296,6 +316,9 @@ impl Caesar {
         info.cmd = cmd;
         info.ts = ts;
         info.deps = deps.to_vec(); // one receipt-side copy, not one per peer
+        if self.retry_pending.remove(&dot) {
+            self.retry_commits.insert(dot);
+        }
         self.exec_queue.insert((ts, dot), ());
         out.push(Action::Committed { dot, fast: true });
         // Unblock replies waiting on this command (wait condition).
@@ -305,6 +328,65 @@ impl Caesar {
             queue.extend(waiters);
         }
         self.advance(queue, out);
+    }
+
+    /// Retransmission (opt-in via `config.retry_interval_ticks`): re-send
+    /// the current round's proposal to quorum members that have not voted,
+    /// and re-broadcast commits until group-wide pruning confirms receipt.
+    /// Receivers are idempotent (duplicate proposals re-ack, duplicate
+    /// commits are dropped) and the coordinator counts voter *sets*, so
+    /// retransmission under nemesis duplication stays safe.
+    fn retry_tick(&mut self, time: u64, out: &mut Vec<Action<Msg>>) {
+        let every = self.bp.config.retry_interval_ticks;
+        if every == 0 || self.ticks % every != 0 {
+            return;
+        }
+        for dot in self.retry_pending.clone() {
+            let (cmd, ts, retrying, acked) = match self.info.get(&dot) {
+                Some(i) if i.coordinator && i.phase == Phase::Pending && !i.decided => {
+                    (i.cmd.clone(), i.ts, i.retrying, i.ack_from.clone())
+                }
+                _ => {
+                    self.retry_pending.remove(&dot);
+                    continue;
+                }
+            };
+            let targets: Vec<ProcessId> = self
+                .fast_quorum()
+                .into_iter()
+                .filter(|p| *p != self.bp.id && !acked.contains(p))
+                .collect();
+            if targets.is_empty() {
+                continue;
+            }
+            let msg = if retrying {
+                Msg::MRetry { dot, cmd, ts }
+            } else {
+                Msg::MPropose { dot, cmd, ts }
+            };
+            self.counters.retransmits += 1;
+            self.broadcast(&targets, msg, time, out);
+        }
+        for dot in self.retry_commits.clone() {
+            let (cmd, ts, deps) = match self.info.get(&dot) {
+                Some(i) if i.phase == Phase::Committed || i.phase == Phase::Executed => {
+                    (i.cmd.clone(), i.ts, i.deps.clone())
+                }
+                _ => {
+                    self.retry_commits.remove(&dot);
+                    continue;
+                }
+            };
+            let targets: Vec<ProcessId> =
+                self.all().into_iter().filter(|p| *p != self.bp.id).collect();
+            self.counters.retransmits += 1;
+            self.broadcast(
+                &targets,
+                Msg::MCommit { dot, cmd, ts, deps: deps.into() },
+                time,
+                out,
+            );
+        }
     }
 
     /// Execute committed commands in ⟨ts, dot⟩ order; a command waits for
@@ -391,6 +473,7 @@ impl GcProcess for Caesar {
                     self.counters.gc_pruned += 1;
                 }
                 self.exec_blocked.remove(&dot);
+                self.retry_commits.remove(&dot);
                 self.bp.drop_stalled(dot);
             }
         }
@@ -413,6 +496,11 @@ impl Process for Caesar {
         if self.bp.crashed {
             return out;
         }
+        // Epoch fencing: drop messages from members the installed epoch
+        // evicted (late by definition).
+        if self.epochs.rejects(from) {
+            return out;
+        }
         match msg {
             Msg::MPropose { dot, cmd, ts } => {
                 self.handle_propose(from, dot, cmd, ts, time, &mut out)
@@ -425,7 +513,7 @@ impl Process for Caesar {
                                 && info.phase == Phase::Pending
                                 && info.ts == ts =>
                         {
-                            info.acks += 1;
+                            info.ack_from.insert(from);
                             info.ack_deps.extend(deps);
                             true
                         }
@@ -459,7 +547,9 @@ impl Process for Caesar {
                 }
             }
             Msg::MRetry { dot, cmd, ts } => {
-                if self.gc.was_executed(dot) {
+                if self.gc.was_executed(dot)
+                    || self.info.get(&dot).is_some_and(|i| i.phase != Phase::Pending)
+                {
                     return out;
                 }
                 // Retry round: accept unconditionally (simplification, see
@@ -478,6 +568,13 @@ impl Process for Caesar {
                 self.handle_commit(dot, cmd, ts, deps, &mut out, time)
             }
             Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
+            Msg::MEpoch { epoch, evicted } => self.handle_epoch(
+                from,
+                epoch,
+                evicted,
+                |epoch, evicted| Msg::MEpoch { epoch, evicted },
+                &mut out,
+            ),
             Msg::MBatch { msgs } => {
                 for m in msgs {
                     let actions = self.dispatch(from, m, time);
@@ -486,6 +583,17 @@ impl Process for Caesar {
             }
         }
         out
+    }
+}
+
+impl EpochProcess for Caesar {
+    fn epoch_mgr(&mut self) -> &mut EpochManager {
+        &mut self.epochs
+    }
+
+    fn on_evicted(&mut self, member: ProcessId) {
+        self.gc.evict(member);
+        self.counters.evictions += 1;
     }
 }
 
@@ -501,6 +609,8 @@ impl Protocol for Caesar {
             bp.config.worker,
             bp.config.workers,
         );
+        let epochs =
+            EpochManager::new(id, bp.group_procs.clone(), bp.config.epoch_fence_off);
         Caesar {
             bp,
             clock: 0,
@@ -509,6 +619,9 @@ impl Protocol for Caesar {
             exec_queue: BTreeMap::new(),
             exec_blocked: HashMap::new(),
             gc,
+            epochs,
+            retry_pending: BTreeSet::new(),
+            retry_commits: BTreeSet::new(),
             ticks: 0,
             counters: Counters::default(),
         }
@@ -535,7 +648,7 @@ impl Protocol for Caesar {
                 ts,
                 deps: Vec::new(),
                 coordinator: true,
-                acks: 0,
+                ack_from: BTreeSet::new(),
                 ack_deps: BTreeSet::new(),
                 nack_ts: 0,
                 nacked: false,
@@ -543,6 +656,9 @@ impl Protocol for Caesar {
                 decided: false,
             },
         );
+        if self.bp.config.retry_interval_ticks > 0 {
+            self.retry_pending.insert(dot);
+        }
         let q = self.fast_quorum();
         self.broadcast(&q, Msg::MPropose { dot, cmd, ts }, time, &mut out);
         self.outbound(out, false, time)
@@ -561,6 +677,8 @@ impl Protocol for Caesar {
         self.ticks += 1;
         let ticks = self.ticks;
         self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
+        self.epoch_tick(|epoch, evicted| Msg::MEpoch { epoch, evicted }, &mut out);
+        self.retry_tick(time, &mut out);
         self.outbound(out, true, time)
     }
 
@@ -573,6 +691,14 @@ impl Protocol for Caesar {
 
     fn crash(&mut self) {
         self.bp.crashed = true;
+    }
+
+    fn suspect(&mut self, p: ProcessId) {
+        self.epochs.suspect(p);
+    }
+
+    fn epoch_view(&self) -> Vec<(u64, Vec<ProcessId>)> {
+        self.epochs.history().to_vec()
     }
 
     fn counters(&self) -> Counters {

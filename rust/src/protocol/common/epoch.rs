@@ -1,0 +1,321 @@
+//! Epoch-based membership reconfiguration: surviving replicas agree to
+//! evict a suspected member into a new epoch so that (a) the executed-
+//! frontier GC stops waiting for the dead member's reports
+//! ([`GCTrack::evict`](super::GCTrack) — memory stays bounded under
+//! faults) and (b) messages from evicted members are fenced off at
+//! dispatch.
+//!
+//! The agreement is deliberately lightweight — it is a *view change*, not
+//! a consensus instance: every survivor that suspects a member broadcasts
+//! a vote `MEpoch { epoch: current+1, evicted }` for the exact next-epoch
+//! eviction set, re-broadcasting each tick until installed. Receiving a
+//! vote for the next epoch endorses it (the receiver adopts the suspicion
+//! and starts voting for the same set), so votes converge on the union of
+//! all suspicions. A process installs the new epoch once a **majority of
+//! the original group** voted for the exact `(epoch, set)` pair; because
+//! eviction sets are cumulative (each proposal is `evicted ∪ suspected`),
+//! any two installed histories are prefix-compatible — the checker's
+//! `EpochDivergence` oracle verifies exactly this.
+//!
+//! Votes for epochs at or below the current one are stale and ignored;
+//! the `Config::epoch_fence_off` test knob disables that guard and pushes
+//! stale installs straight into the history, which makes the history
+//! non-monotonic — the seeded violation for the checker's
+//! `EpochRegression` oracle.
+
+use super::base::Process;
+use crate::core::ProcessId;
+use crate::protocol::Action;
+use std::collections::{BTreeSet, HashMap};
+
+/// Per-process epoch state: the installed history, the suspicion set, and
+/// the vote tally for pending proposals.
+#[derive(Clone, Debug)]
+pub struct EpochManager {
+    id: ProcessId,
+    /// The original (epoch-0) shard group; majorities are counted against
+    /// its size so eviction can never be decided by a minority island.
+    group: Vec<ProcessId>,
+    /// TEST KNOB — accept stale installs (see `Config::epoch_fence_off`).
+    fence_off: bool,
+    /// Installed `(epoch, evicted members)` pairs, oldest first. Starts
+    /// at `(0, [])`; eviction sets are cumulative and sorted.
+    history: Vec<(u64, Vec<ProcessId>)>,
+    /// Members this process currently suspects (never itself).
+    suspected: BTreeSet<ProcessId>,
+    /// Votes per exact `(epoch, eviction set)` pair.
+    votes: HashMap<(u64, Vec<ProcessId>), BTreeSet<ProcessId>>,
+    /// Members evicted by the currently installed epoch.
+    evicted: BTreeSet<ProcessId>,
+}
+
+impl EpochManager {
+    /// Manager for process `id` whose epoch-0 group is `group`.
+    pub fn new(id: ProcessId, group: Vec<ProcessId>, fence_off: bool) -> Self {
+        EpochManager {
+            id,
+            group,
+            fence_off,
+            history: vec![(0, Vec::new())],
+            suspected: BTreeSet::new(),
+            votes: HashMap::new(),
+            evicted: BTreeSet::new(),
+        }
+    }
+
+    /// The currently installed epoch number.
+    pub fn epoch(&self) -> u64 {
+        self.history.last().expect("history starts at epoch 0").0
+    }
+
+    /// The full installed history (for `Protocol::epoch_view`).
+    pub fn history(&self) -> &[(u64, Vec<ProcessId>)] {
+        &self.history
+    }
+
+    /// Is `p` evicted under the current epoch? Dispatch fencing: drop
+    /// messages whose sender this returns `true` for.
+    pub fn rejects(&self, p: ProcessId) -> bool {
+        self.evicted.contains(&p)
+    }
+
+    /// Failure-detector input: start suspecting `p`. Self-suspicion and
+    /// already-evicted members are ignored.
+    pub fn suspect(&mut self, p: ProcessId) {
+        if p != self.id && !self.evicted.contains(&p) {
+            self.suspected.insert(p);
+        }
+    }
+
+    /// The proposal this process should currently vote for, if any: the
+    /// next epoch with the cumulative eviction set `evicted ∪ suspected`.
+    /// `None` once every suspicion is covered by the installed epoch.
+    pub fn proposal(&self) -> Option<(u64, Vec<ProcessId>)> {
+        if self.suspected.is_subset(&self.evicted) {
+            return None;
+        }
+        let set: Vec<ProcessId> =
+            self.evicted.union(&self.suspected).copied().collect();
+        // BTreeSet union iterates in order, so `set` is sorted — exact-match
+        // vote counting and deterministic wire bytes both rely on this.
+        Some((self.epoch() + 1, set))
+    }
+
+    /// Record `from`'s vote for evicting `set` into `epoch`. Returns the
+    /// newly evicted members when this vote installs the epoch (the
+    /// caller must then evict them from GC and count the eviction).
+    pub fn vote(
+        &mut self,
+        from: ProcessId,
+        epoch: u64,
+        set: Vec<ProcessId>,
+    ) -> Option<Vec<ProcessId>> {
+        if set.contains(&self.id) {
+            // Never endorse our own eviction; if a majority installs it
+            // anyway, their fencing handles us.
+            return None;
+        }
+        if epoch <= self.epoch() {
+            if self.fence_off {
+                // TEST KNOB: a stale install re-enters an old epoch —
+                // the history stops being monotonic and the checker's
+                // EpochRegression oracle must flag it.
+                self.history.push((epoch, set));
+            }
+            return None;
+        }
+        // Endorse: adopt the proposal's suspicions so our own next vote
+        // converges on the same set.
+        for &p in &set {
+            self.suspect(p);
+        }
+        let voters = self.votes.entry((epoch, set.clone())).or_default();
+        voters.insert(from);
+        if voters.len() < self.group.len() / 2 + 1 {
+            return None;
+        }
+        let delta: Vec<ProcessId> =
+            set.iter().copied().filter(|p| !self.evicted.contains(p)).collect();
+        self.evicted = set.iter().copied().collect();
+        self.history.push((epoch, set));
+        self.votes.retain(|(e, _), _| *e > epoch);
+        Some(delta)
+    }
+}
+
+/// Protocols that reconfigure through [`EpochManager`]. Implementors
+/// provide the manager and the protocol-specific reaction to an eviction
+/// (GC exclusion, counter bump); the vote ingest and the periodic
+/// proposal re-broadcast live here once, shared by all families.
+pub trait EpochProcess: Process {
+    /// The protocol's [`EpochManager`] instance.
+    fn epoch_mgr(&mut self) -> &mut EpochManager;
+
+    /// `member` was just evicted by a newly installed epoch: exclude it
+    /// from the GC frontier and drop any per-member protocol state.
+    fn on_evicted(&mut self, member: ProcessId);
+
+    /// Ingest a peer's epoch vote (the `MEpoch` handler). Installs the
+    /// epoch and applies evictions when the vote completes a majority;
+    /// also casts our own (possibly newly adopted) vote back out so
+    /// agreement completes without waiting for the next tick.
+    fn handle_epoch(
+        &mut self,
+        from: ProcessId,
+        epoch: u64,
+        evicted: Vec<ProcessId>,
+        wrap: impl Fn(u64, Vec<ProcessId>) -> Self::Msg,
+        out: &mut Vec<Action<Self::Msg>>,
+    ) {
+        if !self.base().config.epochs_enabled {
+            return;
+        }
+        if let Some(delta) = self.epoch_mgr().vote(from, epoch, evicted) {
+            for member in delta {
+                self.on_evicted(member);
+            }
+            return;
+        }
+        // Not installed yet: make sure our own endorsement is tallied and
+        // visible to peers (ours may be the completing majority vote).
+        self.epoch_tick(&wrap, out);
+    }
+
+    /// One periodic reconfiguration step: while a proposal is pending,
+    /// tally our own vote and re-broadcast it to the group (re-sending
+    /// every tick rides out lossy links — and guarantees stale arrivals
+    /// after the install, which the fence must reject).
+    fn epoch_tick(
+        &mut self,
+        wrap: impl Fn(u64, Vec<ProcessId>) -> Self::Msg,
+        out: &mut Vec<Action<Self::Msg>>,
+    ) {
+        if !self.base().config.epochs_enabled {
+            return;
+        }
+        let me = self.base().id;
+        let Some((epoch, set)) = self.epoch_mgr().proposal() else {
+            return;
+        };
+        if let Some(delta) = self.epoch_mgr().vote(me, epoch, set.clone()) {
+            for member in delta {
+                self.on_evicted(member);
+            }
+            return;
+        }
+        for p in self.base().group_procs.clone() {
+            if p != me {
+                out.push(Action::send(p, wrap(epoch, set.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(id: u32) -> EpochManager {
+        EpochManager::new(ProcessId(id), (0..5).map(ProcessId).collect(), false)
+    }
+
+    #[test]
+    fn majority_installs_and_reports_delta() {
+        let mut m = mgr(0);
+        m.suspect(ProcessId(4));
+        let (e, set) = m.proposal().expect("suspicion pending");
+        assert_eq!((e, set.clone()), (1, vec![ProcessId(4)]));
+        assert!(m.vote(ProcessId(0), e, set.clone()).is_none(), "1 of 3 needed");
+        assert!(m.vote(ProcessId(1), e, set.clone()).is_none(), "2 of 3 needed");
+        let delta = m.vote(ProcessId(2), e, set.clone()).expect("majority reached");
+        assert_eq!(delta, vec![ProcessId(4)]);
+        assert_eq!(m.epoch(), 1);
+        assert!(m.rejects(ProcessId(4)));
+        assert!(m.proposal().is_none(), "suspicion covered by the install");
+    }
+
+    #[test]
+    fn duplicate_votes_do_not_count_twice() {
+        let mut m = mgr(0);
+        m.suspect(ProcessId(4));
+        let (e, set) = m.proposal().unwrap();
+        for _ in 0..10 {
+            assert!(m.vote(ProcessId(1), e, set.clone()).is_none());
+        }
+        assert_eq!(m.epoch(), 0, "one voter however often it repeats");
+    }
+
+    #[test]
+    fn stale_votes_are_fenced() {
+        let mut m = mgr(0);
+        m.suspect(ProcessId(4));
+        let (e, set) = m.proposal().unwrap();
+        for p in 0..3 {
+            m.vote(ProcessId(p), e, set.clone());
+        }
+        assert_eq!(m.epoch(), 1);
+        let before = m.history().to_vec();
+        assert!(m.vote(ProcessId(3), e, set).is_none(), "stale epoch");
+        assert_eq!(m.history(), &before[..], "stale install rejected");
+    }
+
+    #[test]
+    fn fence_off_knob_regresses_the_history() {
+        let mut m = EpochManager::new(
+            ProcessId(0),
+            (0..5).map(ProcessId).collect(),
+            true,
+        );
+        m.suspect(ProcessId(4));
+        let (e, set) = m.proposal().unwrap();
+        for p in 0..3 {
+            m.vote(ProcessId(p), e, set.clone());
+        }
+        assert_eq!(m.epoch(), 1);
+        m.vote(ProcessId(3), e, set);
+        let epochs: Vec<u64> = m.history().iter().map(|&(e, _)| e).collect();
+        assert_eq!(epochs, vec![0, 1, 1], "stale install entered the history");
+    }
+
+    #[test]
+    fn votes_adopt_suspicions_and_sets_stay_cumulative() {
+        let mut m = mgr(0);
+        // We suspect nobody, but a peer proposes evicting P4.
+        m.vote(ProcessId(1), 1, vec![ProcessId(4)]);
+        let (e, set) = m.proposal().expect("adopted the suspicion");
+        assert_eq!((e, set), (1, vec![ProcessId(4)]));
+        // Install epoch 1, then suspect P3: the next set is cumulative.
+        let (e, set) = m.proposal().unwrap();
+        for p in [0u32, 2, 3] {
+            m.vote(ProcessId(p), e, set.clone());
+        }
+        m.suspect(ProcessId(3));
+        let (e, set) = m.proposal().unwrap();
+        assert_eq!((e, set), (2, vec![ProcessId(3), ProcessId(4)]));
+    }
+
+    #[test]
+    fn never_endorses_own_eviction() {
+        let mut m = mgr(4);
+        for p in 0..5 {
+            assert!(m.vote(ProcessId(p), 1, vec![ProcessId(4)]).is_none());
+        }
+        assert_eq!(m.epoch(), 0);
+        assert!(m.proposal().is_none(), "did not adopt self-suspicion");
+    }
+
+    #[test]
+    fn split_proposals_converge_via_adoption() {
+        // A votes {4}, B votes {3, 4}: after hearing B, A's proposal is
+        // the union and exact-match counting can reach a majority on it.
+        let mut m = mgr(0);
+        m.suspect(ProcessId(4));
+        m.vote(ProcessId(0), 1, vec![ProcessId(4)]);
+        m.vote(ProcessId(1), 1, vec![ProcessId(3), ProcessId(4)]);
+        let (e, set) = m.proposal().unwrap();
+        assert_eq!((e, set.clone()), (1, vec![ProcessId(3), ProcessId(4)]));
+        m.vote(ProcessId(0), e, set.clone());
+        let delta = m.vote(ProcessId(2), e, set).expect("3 exact votes");
+        assert_eq!(delta, vec![ProcessId(3), ProcessId(4)]);
+    }
+}

@@ -104,6 +104,14 @@ impl GCTrack {
         v
     }
 
+    /// Evict `member` from the group: the prune decision stops waiting
+    /// for its frontier reports, so a crashed member no longer freezes
+    /// the GC frontier (epoch reconfiguration calls this on install).
+    pub fn evict(&mut self, member: ProcessId) {
+        self.group.retain(|&m| m != member);
+        self.reported.remove(&member);
+    }
+
     /// Incorporate a member's frontier report (frontiers only advance).
     pub fn update_from(&mut self, member: ProcessId, frontiers: &[(ProcessId, u64)]) {
         let slot = self.reported.entry(member).or_default();
@@ -250,6 +258,18 @@ mod tests {
         let _ = gc.safe_to_prune();
         assert!(gc.was_executed(dot(5, 1)));
         assert!(!gc.was_executed(dot(5, 2)));
+    }
+
+    #[test]
+    fn evicting_a_silent_member_unfreezes_the_frontier() {
+        let mut gc = track();
+        gc.record_executed(dot(5, 1));
+        gc.update_from(ProcessId(1), &[(ProcessId(5), 1)]);
+        // P2 crashed before reporting: nothing is ever safe...
+        assert!(gc.safe_to_prune().is_empty(), "frozen on the dead member");
+        // ...until the epoch layer evicts it.
+        gc.evict(ProcessId(2));
+        assert_eq!(gc.safe_to_prune(), vec![(ProcessId(5), 1, 1)]);
     }
 
     #[test]

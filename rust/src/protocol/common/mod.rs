@@ -17,6 +17,7 @@
 
 pub mod base;
 pub mod batch;
+pub mod epoch;
 pub mod gc;
 pub mod info;
 pub mod read;
@@ -26,6 +27,7 @@ pub mod wire;
 
 pub use base::{BaseProcess, Process};
 pub use batch::{BatchMsg, Batcher};
+pub use epoch::{EpochManager, EpochProcess};
 pub use gc::{GCTrack, GcProcess};
 pub use info::CommandsInfo;
 pub use read::{ParkedRead, ReadStash};

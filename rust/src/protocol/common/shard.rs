@@ -272,6 +272,14 @@ impl<P: Protocol> Protocol for Sharded<P> {
         }
         f
     }
+
+    /// Every slot receives the same suspicion inputs and runs the same
+    /// deterministic vote, so slot 0's view speaks for the replica (the
+    /// checker's cross-process divergence oracle still audits all
+    /// replicas against each other).
+    fn epoch_view(&self) -> Vec<(u64, Vec<ProcessId>)> {
+        self.slots[0].epoch_view()
+    }
 }
 
 #[cfg(test)]

@@ -24,7 +24,9 @@
 //! inquiry protocol — faithful for transactions whose conflicts are
 //! per-key, which YCSB+T's are.
 
-use super::common::{wire, BaseProcess, CommandsInfo, GCTrack, GcProcess, Process};
+use super::common::{
+    wire, BaseProcess, CommandsInfo, EpochManager, EpochProcess, GCTrack, GcProcess, Process,
+};
 use super::{Action, Footprint, Protocol};
 use crate::core::{key_to_shard, Command, Config, Dot, Key, Op, ProcessId, ShardId};
 use crate::executor::DepGraph;
@@ -85,6 +87,8 @@ pub enum Msg {
     MReady { dot: Dot },
     /// Periodic GC exchange (`protocol::common::GCTrack`).
     MGarbageCollect { executed: Vec<(ProcessId, u64)> },
+    /// Epoch reconfiguration vote (`protocol::common::epoch`).
+    MEpoch { epoch: u64, evicted: Vec<ProcessId> },
     /// Batch frame (`protocol::common::batch`): several messages bound for
     /// the same destination; unbatched inside `Process::dispatch`.
     MBatch { msgs: Vec<Msg> },
@@ -114,6 +118,7 @@ impl Msg {
             | Msg::MCommit { deps, .. }
             | Msg::MConsensus { deps, .. } => HDR + dots(deps.len()),
             Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
+            Msg::MEpoch { evicted, .. } => HDR + 8 + 4 * evicted.len() as u64,
             Msg::MBatch { msgs } => {
                 HDR + msgs.iter().map(|m| 4 + m.wire_size()).sum::<u64>()
             }
@@ -299,6 +304,15 @@ pub struct DepCore {
     /// whose closure is blocked on it.
     blocked_on: HashMap<Dot, Vec<Dot>>,
     gc: GCTrack,
+    /// Epoch reconfiguration: eviction votes, installed history, fencing.
+    epochs: EpochManager,
+    /// Coordinator dots not yet locally committed — re-proposed every
+    /// `retry_interval_ticks` ticks so dropped links heal.
+    retry_pending: BTreeSet<Dot>,
+    /// Coordinator dots committed but not yet group-wide pruned — their
+    /// MCommit is re-broadcast on the same cadence for peers that missed
+    /// it (handle_commit is idempotent).
+    retry_commits: BTreeSet<Dot>,
     ticks: u64,
     pub counters: Counters,
 }
@@ -318,6 +332,8 @@ impl DepCore {
             bp.config.workers,
         );
         let graph = DepGraph::strided(bp.config.worker, bp.config.workers);
+        let epochs =
+            EpochManager::new(id, bp.group_procs.clone(), bp.config.epoch_fence_off);
         DepCore {
             bp,
             variant,
@@ -327,6 +343,9 @@ impl DepCore {
             pending_roots: BTreeSet::new(),
             blocked_on: HashMap::new(),
             gc,
+            epochs,
+            retry_pending: BTreeSet::new(),
+            retry_commits: BTreeSet::new(),
             ticks: 0,
             counters: Counters::default(),
         }
@@ -445,6 +464,9 @@ impl DepCore {
             info.coordinator = true;
             info.acks.push((me, shared.clone()));
         }
+        if self.bp.config.retry_interval_ticks > 0 {
+            self.retry_pending.insert(dot);
+        }
         let fq = self.fast_quorum_of(&self.info[&dot]).expect("own quorum");
         for &p in &fq {
             if p != me {
@@ -482,10 +504,22 @@ impl DepCore {
         time: u64,
         out: &mut Vec<Action<Msg>>,
     ) {
-        if self.gc.was_executed(dot)
-            || self.info.get(&dot).is_some_and(|i| i.phase != Phase::Start)
-        {
+        if self.gc.was_executed(dot) {
             return;
+        }
+        if let Some(i) = self.info.get(&dot) {
+            if i.phase != Phase::Start {
+                // Duplicate/re-transmitted MPropose: if we are still in the
+                // propose phase (our original ack may have been dropped),
+                // re-send the recorded reply; conflicts are NOT registered
+                // twice. `bal > 0` means consensus overwrote `deps` — the
+                // slow path is in charge, nothing to re-ack.
+                if i.phase == Phase::Propose && !i.coordinator && i.bal == 0 {
+                    let shared: Deps = i.deps.clone().into();
+                    out.push(Action::send(from, Msg::MProposeAck { dot, deps: shared }));
+                }
+                return;
+            }
         }
         let mut deps = self.conflicts_and_register(dot, &cmd);
         deps.extend(coord_deps.iter().copied());
@@ -642,6 +676,9 @@ impl DepCore {
         {
             let info = self.info.get_mut(&dot).unwrap();
             info.phase = Phase::Commit;
+            if self.retry_pending.remove(&dot) && info.coordinator {
+                self.retry_commits.insert(dot);
+            }
         }
         self.graph.commit(dot, local_deps);
         self.pending_roots.insert(dot);
@@ -799,7 +836,90 @@ impl DepCore {
         self.try_execute_roots(vec![dot], out);
     }
 
-    /// Periodic handler: the GC frontier exchange (common::GcProcess).
+    /// Retransmission (`Config::retry_interval_ticks`): re-propose the
+    /// coordinator's uncommitted dots and re-broadcast its committed,
+    /// not-yet-pruned MCommits. Every receiver path is idempotent
+    /// (duplicate MPropose re-acks, duplicate MConsensus re-acks,
+    /// duplicate MCommit is dropped), so dropped links heal once the
+    /// nemesis window closes without double-counting anything.
+    fn retry_tick(&mut self, out: &mut Vec<Action<Msg>>) {
+        let every = self.bp.config.retry_interval_ticks;
+        if every == 0 || self.ticks % every != 0 {
+            return;
+        }
+        let me = self.bp.id;
+        let group = self.bp.group;
+        for dot in self.retry_pending.clone() {
+            let Some(info) = self.info.get(&dot) else { continue };
+            let Some(cmd) = info.cmd.clone() else { continue };
+            if info.decided {
+                // Slow path in flight: re-broadcast the consensus round.
+                let msg = Msg::MConsensus {
+                    dot,
+                    deps: info.deps.clone().into(),
+                    bal: info.bal.max(1),
+                };
+                self.counters.retransmits += 1;
+                for p in self.bp.group_procs.clone() {
+                    if p != me {
+                        out.push(Action::send(p, msg.clone()));
+                    }
+                }
+                continue;
+            }
+            // Fast path in flight: re-send MPropose to quorum members that
+            // have not acked yet (they re-ack if the original reply was
+            // the casualty).
+            let own_deps: Deps = info
+                .acks
+                .iter()
+                .find(|(p, _)| *p == me)
+                .map(|(_, d)| d.clone())
+                .unwrap_or_else(|| Vec::new().into());
+            let acked: Vec<ProcessId> = info.acks.iter().map(|&(p, _)| p).collect();
+            let quorums = info.quorums.clone();
+            let Some(fq) = self.fast_quorum_of(&self.info[&dot]) else { continue };
+            self.counters.retransmits += 1;
+            for p in fq {
+                if p != me && !acked.contains(&p) {
+                    out.push(Action::send(
+                        p,
+                        Msg::MPropose {
+                            dot,
+                            cmd: cmd.clone(),
+                            quorums: quorums.clone(),
+                            deps: own_deps.clone(),
+                        },
+                    ));
+                }
+            }
+        }
+        for dot in self.retry_commits.clone() {
+            let Some(info) = self.info.get(&dot) else {
+                self.retry_commits.remove(&dot);
+                continue;
+            };
+            let Some(cmd) = info.cmd.clone() else { continue };
+            let Some(deps) =
+                info.group_deps.iter().find(|(g, _)| *g == group).map(|(_, d)| d.clone())
+            else {
+                continue;
+            };
+            let targets = self.all_processes_of(&cmd);
+            self.counters.retransmits += 1;
+            for p in targets {
+                if p != me {
+                    out.push(Action::send(
+                        p,
+                        Msg::MCommit { dot, group, deps: deps.clone() },
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Periodic handler: the GC frontier exchange (common::GcProcess),
+    /// the epoch reconfiguration vote, and retransmission.
     pub fn tick(&mut self, _time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
         if self.bp.crashed {
@@ -808,7 +928,13 @@ impl DepCore {
         self.ticks += 1;
         let ticks = self.ticks;
         self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
+        self.epoch_tick(|epoch, evicted| Msg::MEpoch { epoch, evicted }, &mut out);
+        self.retry_tick(&mut out);
         out
+    }
+
+    pub fn suspect(&mut self, p: ProcessId) {
+        self.epochs.suspect(p);
     }
 
     pub fn crash(&mut self) {
@@ -867,9 +993,21 @@ impl GcProcess for DepCore {
                     self.counters.gc_pruned += 1;
                 }
                 self.blocked_on.remove(&dot);
+                self.retry_commits.remove(&dot);
                 self.bp.drop_stalled(dot);
             }
         }
+    }
+}
+
+impl EpochProcess for DepCore {
+    fn epoch_mgr(&mut self) -> &mut EpochManager {
+        &mut self.epochs
+    }
+
+    fn on_evicted(&mut self, member: ProcessId) {
+        self.gc.evict(member);
+        self.counters.evictions += 1;
     }
 }
 
@@ -887,6 +1025,11 @@ impl Process for DepCore {
     fn dispatch(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
         if self.bp.crashed {
+            return out;
+        }
+        // Epoch fencing: drop messages from members the installed epoch
+        // evicted (late by definition).
+        if self.epochs.rejects(from) {
             return out;
         }
         match msg {
@@ -922,6 +1065,13 @@ impl Process for DepCore {
             }
             Msg::MReady { dot } => self.handle_ready(from, dot, &mut out),
             Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
+            Msg::MEpoch { epoch, evicted } => self.handle_epoch(
+                from,
+                epoch,
+                evicted,
+                |epoch, evicted| Msg::MEpoch { epoch, evicted },
+                &mut out,
+            ),
             Msg::MBatch { msgs } => {
                 for m in msgs {
                     let actions = self.dispatch(from, m, time);
@@ -981,10 +1131,18 @@ macro_rules! dep_protocol {
                 self.0.crash();
             }
 
+            fn suspect(&mut self, p: ProcessId) {
+                self.0.suspect(p);
+            }
+
             fn counters(&self) -> Counters {
                 let mut c = self.0.counters;
                 self.0.bp.batcher.record_stats(&mut c);
                 c
+            }
+
+            fn epoch_view(&self) -> Vec<(u64, Vec<ProcessId>)> {
+                self.0.epochs.history().to_vec()
             }
 
             fn msg_size(msg: &Msg) -> u64 {

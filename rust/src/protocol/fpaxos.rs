@@ -14,11 +14,13 @@
 //! shared frontier exchange prunes every log prefix the whole group
 //! executed.
 
-use super::common::{wire, BaseProcess, GCTrack, GcProcess, Process};
+use super::common::{
+    wire, BaseProcess, EpochManager, EpochProcess, GCTrack, GcProcess, Process,
+};
 use super::{Action, Footprint, Protocol};
 use crate::core::{Command, Config, Dot, ProcessId};
 use crate::metrics::Counters;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 #[derive(Clone, Debug)]
 pub enum Msg {
@@ -32,6 +34,8 @@ pub enum Msg {
     MCommit { slot: u64 },
     /// Periodic GC exchange (`protocol::common::GCTrack`).
     MGarbageCollect { executed: Vec<(ProcessId, u64)> },
+    /// Epoch reconfiguration vote (`protocol::common::epoch`).
+    MEpoch { epoch: u64, evicted: Vec<ProcessId> },
     /// Batch frame (`protocol::common::batch`): several messages bound for
     /// the same destination; unbatched inside `Process::dispatch`.
     MBatch { msgs: Vec<Msg> },
@@ -57,6 +61,7 @@ impl Msg {
         match self {
             Msg::MForward { cmd, .. } | Msg::MAccept { cmd, .. } => HDR + cmd.wire_size(),
             Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
+            Msg::MEpoch { evicted, .. } => HDR + 8 + 4 * evicted.len() as u64,
             Msg::MBatch { msgs } => {
                 HDR + msgs.iter().map(|m| 4 + m.wire_size()).sum::<u64>()
             }
@@ -78,11 +83,30 @@ pub struct FPaxos {
     log: BTreeMap<u64, Slot>,
     /// Leader only: next slot to assign.
     next_slot: u64,
-    /// Leader only: ack counts per slot (dropped once the slot commits).
-    acks: HashMap<u64, usize>,
+    /// Leader only: per-slot acceptor *voter sets* (dropped once the slot
+    /// commits). Sets, not counters: nemesis-duplicated or retransmitted
+    /// `MAccepted` replies must not complete a quorum twice over.
+    acks: HashMap<u64, BTreeSet<ProcessId>>,
+    /// Leader only: dedup of forwarded commands — a retransmitted or
+    /// nemesis-duplicated `MForward` must not be ordered into a second
+    /// slot. Entries are pruned with their slot; a post-prune duplicate
+    /// (possible only through extreme delay) is absorbed by the
+    /// executor's per-client dedup window.
+    ordered: HashMap<Dot, u64>,
+    /// Submitter side: own commands forwarded to the leader but not yet
+    /// executed locally — re-forwarded every `retry_interval_ticks` so a
+    /// dropped `MForward` (the single point of loss for remote
+    /// submissions) heals.
+    forwarded: HashMap<Dot, Command>,
+    /// Leader only: committed slots not yet group-wide pruned — their
+    /// `MAccept`+`MCommit` pair is re-broadcast on the retry cadence so
+    /// followers that missed either message catch up.
+    retry_commits: BTreeSet<u64>,
     /// Next slot to execute (all below are executed).
     exec_from: u64,
     gc: GCTrack,
+    /// Epoch reconfiguration: eviction votes, installed history, fencing.
+    epochs: EpochManager,
     ticks: u64,
     counters: Counters,
 }
@@ -109,6 +133,11 @@ impl FPaxos {
                 break;
             }
             self.counters.executed += 1;
+            if !self.forwarded.is_empty() {
+                // Own forwarded command made it into the log and executed:
+                // stop re-forwarding it.
+                self.forwarded.remove(&entry.dot);
+            }
             // Slot order, not a timestamp order.
             out.push(Action::Execute { dot: entry.dot, cmd: entry.cmd.clone(), ts: 0 });
             let slot = self.exec_from;
@@ -118,10 +147,16 @@ impl FPaxos {
     }
 
     fn leader_order(&mut self, dot: Dot, cmd: Command, out: &mut Vec<Action<Msg>>) {
+        // Retransmitted/duplicated forwards must not claim a second slot.
+        if self.ordered.contains_key(&dot) {
+            return;
+        }
         let slot = self.next_slot;
         self.next_slot += 1;
+        self.ordered.insert(dot, slot);
         self.log.insert(slot, Slot { dot, cmd: cmd.clone(), committed: false });
-        self.acks.insert(slot, 1); // the leader accepts its own proposal
+        // The leader accepts its own proposal.
+        self.acks.insert(slot, BTreeSet::from([self.bp.id]));
         self.counters.fast_path += 1; // every command takes the same path
         for p in 0..self.bp.config.r as u32 {
             if p != self.bp.id.0 {
@@ -138,7 +173,75 @@ impl FPaxos {
             }
         }
         self.acks.remove(&slot);
+        if self.is_leader() && self.bp.config.retry_interval_ticks > 0 {
+            self.retry_commits.insert(slot);
+        }
         self.advance(out);
+    }
+
+    /// Retransmission (opt-in via `config.retry_interval_ticks`): the
+    /// leader re-runs phase 2 for uncommitted slots towards silent
+    /// acceptors and re-broadcasts `MAccept`+`MCommit` for committed,
+    /// not-yet-pruned slots (payload first, so a follower that missed
+    /// the original accept can still commit); submitters re-forward own
+    /// commands until they execute locally. Every receiver path is
+    /// idempotent (accepts never downgrade a committed entry, ack voter
+    /// sets dedup, `ordered` dedups forwards), so retransmission under
+    /// nemesis duplication stays safe.
+    fn retry_tick(&mut self, out: &mut Vec<Action<Msg>>) {
+        let every = self.bp.config.retry_interval_ticks;
+        if every == 0 || self.ticks % every != 0 {
+            return;
+        }
+        let me = self.bp.id;
+        if !self.is_leader() {
+            for (dot, cmd) in &self.forwarded {
+                self.counters.retransmits += 1;
+                out.push(Action::send(
+                    self.leader(),
+                    Msg::MForward { dot: *dot, cmd: cmd.clone() },
+                ));
+            }
+            return;
+        }
+        // Uncommitted slots: re-accept towards acceptors that have not
+        // voted yet.
+        let pending: Vec<(u64, BTreeSet<ProcessId>)> =
+            self.acks.iter().map(|(s, v)| (*s, v.clone())).collect();
+        for (slot, voted) in pending {
+            let Some(e) = self.log.get(&slot) else { continue };
+            let (dot, cmd) = (e.dot, e.cmd.clone());
+            self.counters.retransmits += 1;
+            for p in 0..self.bp.config.r as u32 {
+                let p = ProcessId(p);
+                if p != me && !voted.contains(&p) {
+                    out.push(Action::send(
+                        p,
+                        Msg::MAccept { slot, dot, cmd: cmd.clone() },
+                    ));
+                }
+            }
+        }
+        // Committed slots: re-broadcast payload + commit until group-wide
+        // pruning confirms everyone executed.
+        for slot in self.retry_commits.clone() {
+            let Some(e) = self.log.get(&slot) else {
+                self.retry_commits.remove(&slot);
+                continue;
+            };
+            let (dot, cmd) = (e.dot, e.cmd.clone());
+            self.counters.retransmits += 1;
+            for p in 0..self.bp.config.r as u32 {
+                let p = ProcessId(p);
+                if p != me {
+                    out.push(Action::send(
+                        p,
+                        Msg::MAccept { slot, dot, cmd: cmd.clone() },
+                    ));
+                    out.push(Action::send(p, Msg::MCommit { slot }));
+                }
+            }
+        }
     }
 }
 
@@ -152,10 +255,12 @@ impl GcProcess for FPaxos {
         for (_origin, lo, hi) in self.gc.safe_to_prune() {
             for seq in lo..=hi {
                 let slot = seq - 1;
-                if self.log.remove(&slot).is_some() {
+                if let Some(e) = self.log.remove(&slot) {
                     self.counters.gc_pruned += 1;
+                    self.ordered.remove(&e.dot);
                 }
                 self.acks.remove(&slot);
+                self.retry_commits.remove(&slot);
             }
         }
     }
@@ -177,6 +282,11 @@ impl Process for FPaxos {
         if self.bp.crashed {
             return out;
         }
+        // Epoch fencing: drop messages from members the installed epoch
+        // evicted (late by definition).
+        if self.epochs.rejects(from) {
+            return out;
+        }
         match msg {
             Msg::MForward { dot, cmd } => {
                 if self.is_leader() {
@@ -184,7 +294,10 @@ impl Process for FPaxos {
                 }
             }
             Msg::MAccept { slot, dot, cmd } => {
-                if slot >= self.exec_from {
+                // Insert-if-absent: a retransmitted/duplicated accept must
+                // never downgrade an already-committed entry. The ack is
+                // re-sent either way (the original may have been lost).
+                if slot >= self.exec_from && !self.log.contains_key(&slot) {
                     self.log.insert(slot, Slot { dot, cmd, committed: false });
                 }
                 out.push(Action::send(from, Msg::MAccepted { slot }));
@@ -197,9 +310,9 @@ impl Process for FPaxos {
                     Some(a) => a,
                     None => return out, // already committed (acks dropped)
                 };
-                *acks += 1;
+                acks.insert(from);
                 // Flexible Paxos phase-2 quorum: f+1 (leader included).
-                if *acks == self.bp.config.slow_quorum_size() {
+                if acks.len() == self.bp.config.slow_quorum_size() {
                     self.commit_slot(slot, &mut out);
                     for p in 0..self.bp.config.r as u32 {
                         if p != self.bp.id.0 {
@@ -212,6 +325,13 @@ impl Process for FPaxos {
                 self.commit_slot(slot, &mut out);
             }
             Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
+            Msg::MEpoch { epoch, evicted } => self.handle_epoch(
+                from,
+                epoch,
+                evicted,
+                |epoch, evicted| Msg::MEpoch { epoch, evicted },
+                &mut out,
+            ),
             Msg::MBatch { msgs } => {
                 for m in msgs {
                     let actions = self.dispatch(from, m, _time);
@@ -223,6 +343,17 @@ impl Process for FPaxos {
     }
 }
 
+impl EpochProcess for FPaxos {
+    fn epoch_mgr(&mut self) -> &mut EpochManager {
+        &mut self.epochs
+    }
+
+    fn on_evicted(&mut self, member: ProcessId) {
+        self.gc.evict(member);
+        self.counters.evictions += 1;
+    }
+}
+
 impl Protocol for FPaxos {
     type Message = Msg;
 
@@ -230,13 +361,19 @@ impl Protocol for FPaxos {
         assert_eq!(config.shards, 1, "FPaxos baseline is full-replication only");
         let bp = BaseProcess::new(id, config);
         let gc = GCTrack::new(id, bp.group_procs.clone());
+        let epochs =
+            EpochManager::new(id, bp.group_procs.clone(), bp.config.epoch_fence_off);
         FPaxos {
             bp,
             log: BTreeMap::new(),
             next_slot: 0,
             acks: HashMap::new(),
+            ordered: HashMap::new(),
+            forwarded: HashMap::new(),
+            retry_commits: BTreeSet::new(),
             exec_from: 0,
             gc,
+            epochs,
             ticks: 0,
             counters: Counters::default(),
         }
@@ -256,6 +393,9 @@ impl Protocol for FPaxos {
         if self.is_leader() {
             self.leader_order(dot, cmd, &mut out);
         } else {
+            if self.bp.config.retry_interval_ticks > 0 {
+                self.forwarded.insert(dot, cmd.clone());
+            }
             out.push(Action::send(self.leader(), Msg::MForward { dot, cmd }));
         }
         self.outbound(out, false, time)
@@ -274,6 +414,8 @@ impl Protocol for FPaxos {
         self.ticks += 1;
         let ticks = self.ticks;
         self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
+        self.epoch_tick(|epoch, evicted| Msg::MEpoch { epoch, evicted }, &mut out);
+        self.retry_tick(&mut out);
         self.outbound(out, true, time)
     }
 
@@ -286,6 +428,17 @@ impl Protocol for FPaxos {
 
     fn crash(&mut self) {
         self.bp.crashed = true;
+    }
+
+    /// Note: the fixed leader (process 0) is outside the eviction vote's
+    /// reach — leader election is out of scope for this baseline, so
+    /// nemesis scenarios crash followers only.
+    fn suspect(&mut self, p: ProcessId) {
+        self.epochs.suspect(p);
+    }
+
+    fn epoch_view(&self) -> Vec<(u64, Vec<ProcessId>)> {
+        self.epochs.history().to_vec()
     }
 
     fn counters(&self) -> Counters {

@@ -161,6 +161,14 @@ pub trait Protocol: Sized {
     fn footprint(&self) -> Footprint {
         Footprint::default()
     }
+
+    /// The process's installed epoch history — `(epoch, evicted members)`
+    /// pairs, oldest first, starting at `(0, [])`. The checker's
+    /// `EpochRegression`/`EpochDivergence` oracles audit these; protocols
+    /// without reconfiguration report the static epoch-0 view.
+    fn epoch_view(&self) -> Vec<(u64, Vec<ProcessId>)> {
+        vec![(0, Vec::new())]
+    }
 }
 
 /// Paxos-style ballot numbering shared by Tempo, FPaxos and the

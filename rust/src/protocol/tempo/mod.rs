@@ -30,7 +30,9 @@ pub mod promises;
 use self::clock::Clock;
 use self::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums, SharedPromises};
 use self::promises::{PromiseSet, PromiseStore};
-use super::common::{BaseProcess, CommandsInfo, GCTrack, GcProcess, Process, ReadStash};
+use super::common::{
+    BaseProcess, CommandsInfo, EpochManager, EpochProcess, GCTrack, GcProcess, Process, ReadStash,
+};
 use super::{ballot, Action, Footprint, Protocol};
 use crate::core::{key_to_shard, Command, Config, Dot, Key, ProcessId, ShardId};
 use crate::metrics::Counters;
@@ -136,7 +138,14 @@ pub struct Tempo {
     missing: HashMap<Dot, u64>,
     /// Dots currently pending (for the recovery timer).
     pending: BTreeSet<Dot>,
+    /// Own committed dots not yet group-wide executed — their MCommit is
+    /// re-broadcast every `retry_interval_ticks` ticks for peers that
+    /// missed it (`handle_commit` is idempotent). Empty when the opt-in
+    /// retry timer is off.
+    retry_commits: BTreeSet<Dot>,
     suspected: BTreeSet<ProcessId>,
+    /// Epoch reconfiguration: eviction votes, installed history, fencing.
+    epochs: EpochManager,
     /// Executed-command frontiers + group exchange state (GC).
     gc: GCTrack,
     /// Local reads parked until a key frontier covers their timestamp
@@ -336,6 +345,22 @@ impl Tempo {
             // Already recovered/committed — the MPropose precondition
             // (line 13) fails; dropping the message prevents the initial
             // coordinator from taking the fast path after recovery started.
+            // One exception: a *retransmitted* MPropose while our propose
+            // phase still owns the command (our original ack may have been
+            // dropped by a lossy link) re-sends the recorded ack verbatim.
+            // Conflicts are NOT registered twice — `info.ts` is the
+            // proposal we already promised — and `bal > 0` means consensus
+            // or recovery overwrote it, so there is nothing to re-ack.
+            if let Some(info) = self.info.get(&dot) {
+                if info.phase == Phase::Propose && !info.coordinator && info.bal == 0 {
+                    let ts = info.ts.clone();
+                    self.counters.retransmits += 1;
+                    out.push(Action::send(
+                        from,
+                        Msg::MProposeAck { dot, ts, promises: Vec::new() },
+                    ));
+                }
+            }
             return;
         }
         let me = self.bp.id;
@@ -535,6 +560,11 @@ impl Tempo {
             info.phase = Phase::Commit;
             self.pending.remove(&dot);
             self.missing.remove(&dot);
+            if info.coordinator && self.bp.config.retry_interval_ticks > 0 {
+                // Keep re-broadcasting this commit until the group-wide
+                // executed frontier proves every peer has it.
+                self.retry_commits.insert(dot);
+            }
             info.cmd.clone().expect("commit without payload")
         };
         let majority = self.bp.config.majority();
@@ -899,6 +929,21 @@ impl GcProcess for Tempo {
     }
 }
 
+impl EpochProcess for Tempo {
+    fn epoch_mgr(&mut self) -> &mut EpochManager {
+        &mut self.epochs
+    }
+
+    fn on_evicted(&mut self, member: ProcessId) {
+        // The GC frontier stops waiting for the evicted member — this is
+        // what unfreezes pruning after a crash (bounded memory, tested by
+        // the nemesis sweep's footprint oracle).
+        self.gc.evict(member);
+        self.suspected.insert(member);
+        self.counters.evictions += 1;
+    }
+}
+
 impl Process for Tempo {
     type Msg = Msg;
 
@@ -913,6 +958,11 @@ impl Process for Tempo {
     fn dispatch(&mut self, from: ProcessId, msg: Msg, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
         if self.bp.crashed {
+            return out;
+        }
+        // Epoch fencing: messages from members the installed epoch evicted
+        // are late by definition — reject them wholesale.
+        if self.epochs.rejects(from) {
             return out;
         }
         match msg {
@@ -950,6 +1000,13 @@ impl Process for Tempo {
             Msg::MRecNAck { dot, bal } => self.handle_rec_nack(dot, bal, time, &mut out),
             Msg::MCommitRequest { dot } => self.handle_commit_request(from, dot, &mut out),
             Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
+            Msg::MEpoch { epoch, evicted } => self.handle_epoch(
+                from,
+                epoch,
+                evicted,
+                |epoch, evicted| Msg::MEpoch { epoch, evicted },
+                &mut out,
+            ),
             // Unbatching lives here, not in the handlers: a batch frame
             // re-dispatches its members in order (protocol::common::batch).
             Msg::MBatch { msgs } => {
@@ -1196,6 +1253,108 @@ impl Tempo {
         }
         self.commit(dot, final_ts, time, out);
     }
+
+    /// Opt-in retransmission (`Config::retry_interval_ticks`): re-drive own
+    /// in-flight proposals and re-broadcast own commits over lossy links.
+    ///
+    /// Recovery timers (§B) only cover dots the Ω leader has in its local
+    /// `pending` set, and `MCommitRequest` only serves *committed* dots —
+    /// so a single dropped MPropose to the leader itself, or a dropped
+    /// MCommit to a payload-less replica with promise gossip off, stalls a
+    /// command with no timer left to save it. The coordinator still knows
+    /// everything needed to finish, so it periodically re-sends. Every
+    /// retransmit is idempotent at the receiver: a duplicate MPropose
+    /// re-acks the recorded proposal without re-registering conflicts,
+    /// MPayload/MCommit dedup on phase, and MConsensus acks re-collect
+    /// into a voter set.
+    fn retry_tick(&mut self, time: u64, out: &mut Vec<Action<Msg>>) {
+        let every = self.bp.config.retry_interval_ticks;
+        if every == 0 || self.ticks % every != 0 {
+            return;
+        }
+        let me = self.bp.id;
+        let group = self.bp.group;
+        let own_bal = (me.0 - self.bp.group_base()) as u64 + 1;
+        for dot in self.pending.clone() {
+            let plan = {
+                let Some(info) = self.info.get(&dot) else { continue };
+                if !info.coordinator || info.phase != Phase::Propose {
+                    continue;
+                }
+                let Some(cmd) = info.cmd.clone() else { continue };
+                let Some(fq) = info.fast_quorum(group) else { continue };
+                let fq = fq.to_vec();
+                let acked: Vec<ProcessId> =
+                    info.proposals.iter().map(|&(p, _)| p).collect();
+                (cmd, info.quorums.clone(), info.ts.clone(), fq, acked, info.decided, info.bal)
+            };
+            let (cmd, quorums, ts, fq, acked, decided, bal) = plan;
+            if !decided {
+                // Fast round still collecting: `info.ts` is our original
+                // proposal until the decision overwrites it, so the
+                // retransmit is bit-identical to the first MPropose.
+                for &p in &fq {
+                    if p != me && !acked.contains(&p) {
+                        self.counters.retransmits += 1;
+                        out.push(Action::send(
+                            p,
+                            Msg::MPropose {
+                                dot,
+                                cmd: cmd.clone(),
+                                quorums: quorums.clone(),
+                                ts: ts.clone(),
+                            },
+                        ));
+                    }
+                }
+                for p in self.bp.group_procs.clone() {
+                    if p != me && !fq.contains(&p) {
+                        self.counters.retransmits += 1;
+                        out.push(Action::send(
+                            p,
+                            Msg::MPayload { dot, cmd: cmd.clone(), quorums: quorums.clone() },
+                        ));
+                    }
+                }
+            } else if bal == own_bal {
+                // Slow round in flight and still ours (recovery would have
+                // claimed a higher ballot): re-run our consensus round.
+                // Receivers with `bal >= info.bal` re-ack; the coordinator's
+                // ack set fires once at f+1 distinct voters.
+                self.counters.retransmits += 1;
+                let msg = Msg::MConsensus { dot, ts, bal: own_bal };
+                self.broadcast(&self.bp.group_procs.clone(), msg, time, out);
+            }
+        }
+        // Own committed dots: re-broadcast MCommit until the group-wide
+        // executed frontier proves everyone has it. The promise batches
+        // piggybacked on the original commit flow separately (periodic
+        // MPromises); the retransmit carries none.
+        for dot in self.retry_commits.clone() {
+            if self.gc.was_executed(dot) {
+                self.retry_commits.remove(&dot);
+                continue;
+            }
+            let redo = {
+                let Some(info) = self.info.get(&dot) else {
+                    self.retry_commits.remove(&dot);
+                    continue;
+                };
+                let Some(cmd) = info.cmd.clone() else { continue };
+                (cmd, info.ts.clone())
+            };
+            let (cmd, ts) = redo;
+            let targets = self.all_processes_of(&cmd);
+            self.counters.retransmits += 1;
+            let none: Vec<(ProcessId, KeyPromises)> = Vec::new();
+            self.broadcast(
+                &targets,
+                Msg::MCommit { dot, group, ts, promises: none.into() },
+                time,
+                out,
+            );
+        }
+    }
 }
 
 impl Protocol for Tempo {
@@ -1211,6 +1370,8 @@ impl Protocol for Tempo {
             bp.config.worker,
             bp.config.workers,
         );
+        let epochs =
+            EpochManager::new(id, bp.group_procs.clone(), bp.config.epoch_fence_off);
         Tempo {
             bp,
             keys: HashMap::new(),
@@ -1219,7 +1380,9 @@ impl Protocol for Tempo {
             info: CommandsInfo::default(),
             missing: HashMap::new(),
             pending: BTreeSet::new(),
+            retry_commits: BTreeSet::new(),
             suspected: BTreeSet::new(),
+            epochs,
             gc,
             stash: ReadStash::default(),
             ticks: 0,
@@ -1385,6 +1548,11 @@ impl Protocol for Tempo {
         //     prune everything the whole group executed (common::GcProcess).
         let ticks = self.ticks;
         self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
+        // 2c. Epoch reconfiguration: while an eviction proposal is pending,
+        //     vote and re-broadcast it until a majority installs the epoch.
+        self.epoch_tick(|epoch, evicted| Msg::MEpoch { epoch, evicted }, &mut out);
+        // 2d. Opt-in retransmission of own proposals/commits (lossy links).
+        self.retry_tick(time, &mut out);
         // 3. Recovery timers (only the Ω leader calls recover()).
         if self.bp.config.recovery_timeout_us != u64::MAX && self.leader() == self.bp.id {
             let timeout = self.bp.config.recovery_timeout_us;
@@ -1444,12 +1612,17 @@ impl Protocol for Tempo {
 
     fn suspect(&mut self, p: ProcessId) {
         self.suspected.insert(p);
+        self.epochs.suspect(p);
     }
 
     fn counters(&self) -> Counters {
         let mut c = self.counters;
         self.bp.batcher.record_stats(&mut c);
         c
+    }
+
+    fn epoch_view(&self) -> Vec<(u64, Vec<ProcessId>)> {
+        self.epochs.history().to_vec()
     }
 
     fn msg_size(msg: &Msg) -> u64 {

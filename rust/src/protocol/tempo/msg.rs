@@ -103,6 +103,10 @@ pub enum Msg {
     /// Periodic GC exchange (`protocol::common::GCTrack`): the sender's
     /// per-origin contiguous frontier of executed commands.
     MGarbageCollect { executed: Vec<(ProcessId, u64)> },
+    /// Epoch reconfiguration vote (`protocol::common::epoch`): the sender
+    /// endorses evicting exactly `evicted` (cumulative, sorted) into
+    /// `epoch`; a majority of exact-match votes installs the epoch.
+    MEpoch { epoch: u64, evicted: Vec<ProcessId> },
     /// Batch frame (`protocol::common::batch`): several messages bound for
     /// the same destination in one frame. Never nested; unbatched inside
     /// `Process::dispatch`, so handlers never see it.
@@ -149,6 +153,7 @@ impl Msg {
                 HDR + 8 + key_vals(ts.len())
             }
             Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
+            Msg::MEpoch { evicted, .. } => HDR + 8 + 4 * evicted.len() as u64,
             // One frame header amortized over the members (each inner size
             // already includes its own HDR; 4 bytes of length prefix each).
             Msg::MBatch { msgs } => {

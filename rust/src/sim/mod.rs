@@ -25,9 +25,11 @@
 //! one per-message CPU cost instead of many, and `SimResult::footprints`
 //! plus `Counters::{batches_sent, batched_msgs}` report what batching did.
 
+pub mod nemesis;
 pub mod resource;
 pub mod topology;
 
+pub use nemesis::{FaultKind, FaultWindow, LinkFate, Nemesis};
 pub use resource::{ResourceModel, ResourceState};
 pub use topology::Topology;
 
@@ -69,6 +71,12 @@ pub struct SimOpts {
     pub crashes: Vec<(u64, ProcessId)>,
     /// Failure-detection delay after a crash.
     pub suspect_delay_us: u64,
+    /// Link-fault plan (partitions, delay spikes, reorder, duplicate,
+    /// drop) plus extra crashes; empty by default. Fault decisions draw
+    /// from the run's seeded RNG only while a window is active, so a run
+    /// with an empty plan is bit-identical to one before this field
+    /// existed (see [`nemesis`]).
+    pub nemesis: Nemesis,
     /// Credit the TCP runtime's encode-once broadcast in the resource
     /// model: a `SendShared` fan-out charges the serialize CPU cost once
     /// and only the NIC per destination. Off by default — the legacy
@@ -91,6 +99,7 @@ impl SimOpts {
             record_execution: false,
             crashes: Vec::new(),
             suspect_delay_us: 500_000,
+            nemesis: Nemesis::default(),
             encode_once: false,
         }
     }
@@ -132,6 +141,10 @@ pub struct SimResult {
     pub decided_ts: Vec<(Dot, u64)>,
     /// End-of-run memory footprint of each process (GC diagnostics).
     pub footprints: Vec<Footprint>,
+    /// Per-process epoch install history (`Protocol::epoch_view`): the
+    /// `(epoch, cumulative evicted set)` entries each process installed,
+    /// in install order. Fault-free runs report `[(0, [])]` everywhere.
+    pub epoch_views: Vec<Vec<(u64, Vec<ProcessId>)>>,
 }
 
 #[derive(Clone, Debug)]
@@ -142,6 +155,9 @@ enum Event<M> {
     BatchFlush { site: usize },
     Crash { p: ProcessId },
     Suspect { at: ProcessId, suspected: ProcessId },
+    /// Session failover: the client re-issues an unacked rid at a
+    /// surviving replica after its coordinator crashed.
+    ClientRetry { rid: Rid },
 }
 
 /// Heap key: `(time, kind rank, actor, co-actor, sequence)`.
@@ -165,6 +181,9 @@ struct InFlight {
     members: Vec<(usize, u64)>,
     site: usize,
     ops: u32,
+    /// The command as submitted (`Arc`-backed, cheap to keep): a session
+    /// re-issues it verbatim — same rid — if its coordinator crashes.
+    cmd: Command,
 }
 
 /// The simulator.
@@ -208,7 +227,10 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         let n = config.n_processes();
         let procs: Vec<P> = (0..n).map(|i| P::new(ProcessId(i as u32), config.clone())).collect();
         let executors = (0..n)
-            .map(|i| Executor::new(ProcessId(i as u32), KvStore::new()))
+            .map(|i| {
+                Executor::new(ProcessId(i as u32), KvStore::new())
+                    .with_dedup_window(config.dedup_window)
+            })
             .collect();
         let n_clients = opts.clients_per_site * config.sites;
         let sessions = (0..n_clients).map(|c| Session::new(ClientId(c as u64))).collect();
@@ -278,6 +300,13 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
                 self.aux_seq += 1;
                 (time, 5, at.0, suspected.0, self.aux_seq)
             }
+            // A closed-loop client has at most one in-flight rid, so
+            // (client, seq) identifies the retry without an aux rank —
+            // keeping the key a pure function of the event (insertion
+            // order from the crash scan cannot leak into the schedule).
+            Event::ClientRetry { rid } => {
+                (time, 6, rid.client().0 as u32, rid.seq() as u32, rid.seq() >> 32)
+            }
         };
         self.heap.push(Reverse(key));
         self.payloads.insert(key, ev);
@@ -297,7 +326,9 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             let offset = (c as u64 * 131) % 1_000;
             self.push(offset + 1, Event::ClientSubmit { client: c });
         }
-        for (t, p) in self.opts.crashes.clone() {
+        let mut crashes = self.opts.crashes.clone();
+        crashes.extend(self.opts.nemesis.crashes.iter().copied());
+        for (t, p) in crashes {
             self.push(t, Event::Crash { p });
         }
 
@@ -371,13 +402,97 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
                         );
                     }
                 }
+                // Session failover: rids coordinated by the dead process
+                // are re-issued once the failure is detected. Collect and
+                // sort so the schedule does not depend on map iteration
+                // order.
+                if delay < u64::MAX - time {
+                    let mut orphans: Vec<Rid> = self
+                        .in_flight
+                        .iter()
+                        .filter(|(_, inf)| inf.dot.origin == p)
+                        .map(|(rid, _)| *rid)
+                        .collect();
+                    orphans.sort_unstable();
+                    for rid in orphans {
+                        self.push(time + delay, Event::ClientRetry { rid });
+                    }
+                }
             }
             Event::Suspect { at, suspected } => {
                 if !self.dead[at.0 as usize] {
                     self.procs[at.0 as usize].suspect(suspected);
                 }
             }
+            Event::ClientRetry { rid } => {
+                self.client_retry(rid, time);
+            }
         }
+    }
+
+    /// Re-issue an unacked rid whose coordinator died: the session sends
+    /// the *same command* (same rid) to a surviving replica of the shard.
+    /// The per-client dedup window at the executors keeps the retry
+    /// exactly-once if the original submission also survives (e.g. it was
+    /// committed just before the crash and recovery finishes it).
+    fn client_retry(&mut self, rid: Rid, time: u64) {
+        let (cmd, site) = match self.in_flight.get(&rid) {
+            // Replied (or superseded) in the meantime: nothing to do.
+            None => return,
+            Some(inf) => {
+                // Only retry while the current coordinator is dead; a
+                // live one may still reply.
+                if !self.dead[inf.dot.origin.0 as usize] {
+                    return;
+                }
+                (inf.cmd.clone(), inf.site)
+            }
+        };
+        let shard = key_to_shard(cmd.keys[0], self.config.shards);
+        let origin = match self.live_origin(shard.0, site) {
+            Some(o) => o,
+            None => return, // whole shard down; nothing can serve this rid
+        };
+        let submit_at = time + self.opts.topology.local_us;
+        let is_read = cmd.op == Op::Read;
+        let recorded = self.opts.record_execution.then(|| cmd.clone());
+        let actions = if is_read {
+            self.procs[origin.0 as usize].submit_read(cmd, submit_at)
+        } else {
+            self.procs[origin.0 as usize].submit(cmd, submit_at)
+        };
+        let dot = actions
+            .iter()
+            .find_map(|a| match a {
+                Action::Submitted { dot } => Some(*dot),
+                _ => None,
+            })
+            .unwrap_or_else(|| Dot::new(origin, 0));
+        if let Some(c) = recorded {
+            // Local reads keep the sentinel seq-0 dot and are not part of
+            // the liveness universe, exactly like first submissions.
+            if dot.seq != 0 {
+                self.result.submitted.push((dot, c));
+            }
+        }
+        if let Some(inf) = self.in_flight.get_mut(&rid) {
+            inf.dot = dot; // the retry's identity supersedes the orphan
+        }
+        self.process_actions(origin, actions, submit_at);
+    }
+
+    /// The replica a client of `site` should talk to in `shard`: its own
+    /// site's replica when alive, otherwise the lowest-id surviving
+    /// member (deterministic failover target).
+    fn live_origin(&self, shard: u32, site: usize) -> Option<ProcessId> {
+        let base = shard * self.config.r as u32;
+        let preferred = ProcessId(base + site as u32);
+        if !self.dead[preferred.0 as usize] {
+            return Some(preferred);
+        }
+        (0..self.config.r as u32)
+            .map(|i| ProcessId(base + i))
+            .find(|q| !self.dead[q.0 as usize])
     }
 
     fn client_submit(&mut self, client: usize, time: u64) {
@@ -412,14 +527,14 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         time: u64,
     ) {
         // The origin process: the replica at the client's site of the shard
-        // holding the first key (i ∈ I_c as PSMR requires).
+        // holding the first key (i ∈ I_c as PSMR requires) — or, when that
+        // replica is dead, the deterministic failover target (session
+        // failover; the paper's clients do the same).
         let shard = key_to_shard(spec.keys[0], self.config.shards);
-        let origin = ProcessId(shard.0 * self.config.r as u32 + site as u32);
-        if self.dead[origin.0 as usize] {
-            // Site lost its replica: clients of this site stop (the paper
-            // would fail them over; unnecessary for our experiments).
-            return;
-        }
+        let origin = match self.live_origin(shard.0, site) {
+            Some(o) => o,
+            None => return, // whole shard down: clients of this shard stop
+        };
         // The (first) member's session allocates the request id; a
         // site-level batch is one request whose response all members
         // observe.
@@ -427,7 +542,9 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         let mut cmd = Command::new(rid, spec.keys, spec.op, spec.payload_len);
         cmd.batched = members.len() as u32;
         let ops = cmd.batched;
-        // Clone only for the test oracle — the hot path moves the command.
+        // Cheap clones (`Arc`-backed): one for the test oracle, one kept
+        // in flight for crash re-issue.
+        let kept = cmd.clone();
         let recorded = self.opts.record_execution.then(|| cmd.clone());
         // Client → local replica hop.
         let submit_at = time + self.opts.topology.local_us;
@@ -444,7 +561,7 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         if let Some(c) = recorded {
             self.result.submitted.push((dot, c));
         }
-        self.in_flight.insert(rid, InFlight { dot, members, site, ops });
+        self.in_flight.insert(rid, InFlight { dot, members, site, ops, cmd: kept });
         self.process_actions(origin, actions, submit_at);
     }
 
@@ -462,12 +579,13 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         time: u64,
     ) {
         let shard = key_to_shard(spec.keys[0], self.config.shards);
-        let origin = ProcessId(shard.0 * self.config.r as u32 + site as u32);
-        if self.dead[origin.0 as usize] {
-            return;
-        }
+        let origin = match self.live_origin(shard.0, site) {
+            Some(o) => o,
+            None => return,
+        };
         let rid = self.sessions[client].next_rid();
         let cmd = Command::new(rid, spec.keys, spec.op, spec.payload_len);
+        let kept = cmd.clone();
         let recorded = self.opts.record_execution.then(|| cmd.clone());
         let submit_at = time + self.opts.topology.local_us;
         let actions = self.procs[origin.0 as usize].submit_read(cmd, submit_at);
@@ -484,12 +602,16 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             }
         }
         self.in_flight
-            .insert(rid, InFlight { dot, members: vec![(client, time)], site, ops: 1 });
+            .insert(rid, InFlight { dot, members: vec![(client, time)], site, ops: 1, cmd: kept });
         self.process_actions(origin, actions, submit_at);
     }
 
     /// Put one message on the (modeled) wire: charge the sender's
-    /// CPU/NIC resources and schedule the delivery.
+    /// CPU/NIC resources, consult the nemesis plan, and schedule the
+    /// delivery (or eat it). Fault decisions apply at *send* time — the
+    /// sender pays CPU/NIC for dropped messages (they left the process;
+    /// the link ate them), which also keeps resource accounting identical
+    /// in shape to a fault-free run.
     fn send_one(&mut self, at: ProcessId, to: ProcessId, msg: P::Message, time: u64) {
         let bytes = P::msg_size(&msg);
         let from_site = self.config.site_of(at);
@@ -501,8 +623,25 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         } else {
             time
         };
+        let fate = if self.opts.nemesis.is_empty() {
+            LinkFate::CLEAN
+        } else {
+            self.opts.nemesis.fate(time, at, to, &mut self.rng)
+        };
+        let (extra_us, duplicate) = match fate {
+            LinkFate::Drop => return,
+            LinkFate::Deliver { extra_us, duplicate } => (extra_us, duplicate),
+        };
         let latency = self.opts.topology.latency_us(from_site, to_site, self.rng.gen_f64());
-        self.push(depart + latency, Event::Deliver { from: at, to, msg, bytes });
+        if duplicate {
+            // A second, independent delivery of the same bytes (same
+            // arrival instant, distinct FIFO rank).
+            self.push(
+                depart + latency + extra_us,
+                Event::Deliver { from: at, to, msg: msg.clone(), bytes },
+            );
+        }
+        self.push(depart + latency + extra_us, Event::Deliver { from: at, to, msg, bytes });
     }
 
     /// Encode-once fan-out charging (`SimOpts::encode_once`): one
@@ -524,10 +663,25 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             }
             let depart =
                 self.resources[at.0 as usize].use_out(cpu_done, model.wire_us(bytes)) as u64;
+            let fate = if self.opts.nemesis.is_empty() {
+                LinkFate::CLEAN
+            } else {
+                self.opts.nemesis.fate(time, at, dest, &mut self.rng)
+            };
+            let (extra_us, duplicate) = match fate {
+                LinkFate::Drop => continue,
+                LinkFate::Deliver { extra_us, duplicate } => (extra_us, duplicate),
+            };
             let to_site = self.config.site_of(dest);
             let latency = self.opts.topology.latency_us(from_site, to_site, self.rng.gen_f64());
+            if duplicate {
+                self.push(
+                    depart + latency + extra_us,
+                    Event::Deliver { from: at, to: dest, msg: msg.clone(), bytes },
+                );
+            }
             self.push(
-                depart + latency,
+                depart + latency + extra_us,
                 Event::Deliver { from: at, to: dest, msg: msg.clone(), bytes },
             );
         }
@@ -667,7 +821,10 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             counters.merge(&p.counters());
         }
         self.result.metrics.counters = counters;
+        self.result.metrics.counters.dedup_hits =
+            self.executors.iter().map(|e| e.dedup_hits()).sum();
         self.result.footprints = self.procs.iter().map(|p| p.footprint()).collect();
+        self.result.epoch_views = self.procs.iter().map(|p| p.epoch_view()).collect();
         self.result
     }
 }

@@ -1,0 +1,353 @@
+//! Deterministic link-fault injection ("nemesis") plans for the
+//! simulator.
+//!
+//! A [`Nemesis`] composes *fault windows* over the run's timeline —
+//! partitions (symmetric and asymmetric), delay spikes, reordering,
+//! duplication, probabilistic drop — plus a crash schedule, e.g.
+//! "partition {0,1}|{2,3,4} from t=1s to t=2.5s, heal, then crash P2".
+//! The simulator consults the plan once per message *send*
+//! ([`Nemesis::fate`]); every probabilistic decision draws from the
+//! simulation's seeded [`Rng`], so a run under a fault plan is exactly as
+//! reproducible as a fault-free one: same plan + same seed ⇒ bit-identical
+//! schedule (`rust/tests/nemesis.rs` pins this).
+//!
+//! **Determinism discipline.** `fate` consumes random draws *only* for
+//! probabilistic windows (reorder/duplicate/drop) that are active at the
+//! send instant and do not sit behind a partition block. When no window
+//! is active — in particular, for every run without a nemesis — it
+//! returns without touching the RNG at all, so adding this layer cannot
+//! perturb the draw sequence of existing seeded runs (the batching and
+//! worker-sharding equivalence proofs depend on that).
+
+use crate::core::ProcessId;
+use crate::util::Rng;
+
+/// One fault, active on the half-open interval `[from_us, until_us)`.
+#[derive(Clone, Debug)]
+pub struct FaultWindow {
+    /// Window start (inclusive), in simulated µs.
+    pub from_us: u64,
+    /// Window end (exclusive) — the fault *heals* at this instant.
+    pub until_us: u64,
+    /// What the fault does to links while active.
+    pub kind: FaultKind,
+}
+
+impl FaultWindow {
+    fn active(&self, now: u64) -> bool {
+        self.from_us <= now && now < self.until_us
+    }
+}
+
+/// The injectable link faults.
+#[derive(Clone, Debug)]
+pub enum FaultKind {
+    /// Symmetric partition: processes in different groups cannot reach
+    /// each other in either direction. A process named in no group
+    /// communicates freely (it is on "both sides" — useful for modelling
+    /// a partial partition).
+    Partition { groups: Vec<Vec<ProcessId>> },
+    /// Asymmetric partition: messages from any process in `from` to any
+    /// process in `to` are dropped; the reverse direction is untouched.
+    Isolate { from: Vec<ProcessId>, to: Vec<ProcessId> },
+    /// Delay spike: every delivery gains `extra_us` of latency.
+    Delay { extra_us: u64 },
+    /// Reordering: every delivery gains an *independent uniform* extra
+    /// latency in `[0, spread_us)`, scrambling arrival order across the
+    /// spread (consumes one RNG draw per affected send).
+    Reorder { spread_us: u64 },
+    /// Duplicate each message with probability `prob` (the copy arrives
+    /// at the same instant as the original but as a distinct delivery;
+    /// consumes one RNG draw per affected send).
+    Duplicate { prob: f64 },
+    /// Drop each message with probability `prob` (consumes one RNG draw
+    /// per affected send).
+    Drop { prob: f64 },
+}
+
+/// What the nemesis decided for one message send.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkFate {
+    /// Deliver, with `extra_us` added to the link latency; `duplicate`
+    /// schedules a second, independent delivery of the same message.
+    Deliver { extra_us: u64, duplicate: bool },
+    /// The link eats the message.
+    Drop,
+}
+
+impl LinkFate {
+    /// The fate of a send no fault touches.
+    pub const CLEAN: LinkFate = LinkFate::Deliver { extra_us: 0, duplicate: false };
+}
+
+/// A composed fault plan: link-fault windows plus a crash schedule
+/// (merged with `SimOpts::crashes` by the simulator).
+#[derive(Clone, Debug, Default)]
+pub struct Nemesis {
+    /// Link-fault windows, evaluated in order (see [`Nemesis::fate`]).
+    pub windows: Vec<FaultWindow>,
+    /// Crash schedule: (time, process), same semantics as
+    /// `SimOpts::crashes`.
+    pub crashes: Vec<(u64, ProcessId)>,
+}
+
+fn pids(raw: &[u32]) -> Vec<ProcessId> {
+    raw.iter().copied().map(ProcessId).collect()
+}
+
+impl Nemesis {
+    /// An empty plan (injects nothing).
+    pub fn new() -> Self {
+        Nemesis::default()
+    }
+
+    /// Add a symmetric partition window; `groups` lists the process ids
+    /// of each side, e.g. `&[&[0, 1], &[2, 3, 4]]`.
+    pub fn partition(mut self, from_us: u64, until_us: u64, groups: &[&[u32]]) -> Self {
+        let groups = groups.iter().map(|g| pids(g)).collect();
+        self.windows.push(FaultWindow {
+            from_us,
+            until_us,
+            kind: FaultKind::Partition { groups },
+        });
+        self
+    }
+
+    /// Add an asymmetric partition window: `from` → `to` messages drop,
+    /// the reverse direction still flows.
+    pub fn isolate(mut self, from_us: u64, until_us: u64, from: &[u32], to: &[u32]) -> Self {
+        self.windows.push(FaultWindow {
+            from_us,
+            until_us,
+            kind: FaultKind::Isolate { from: pids(from), to: pids(to) },
+        });
+        self
+    }
+
+    /// Add a delay-spike window: all links gain `extra_us`.
+    pub fn delay(mut self, from_us: u64, until_us: u64, extra_us: u64) -> Self {
+        self.windows
+            .push(FaultWindow { from_us, until_us, kind: FaultKind::Delay { extra_us } });
+        self
+    }
+
+    /// Add a reordering window: deliveries gain uniform extra latency in
+    /// `[0, spread_us)`.
+    pub fn reorder(mut self, from_us: u64, until_us: u64, spread_us: u64) -> Self {
+        self.windows
+            .push(FaultWindow { from_us, until_us, kind: FaultKind::Reorder { spread_us } });
+        self
+    }
+
+    /// Add a duplication window: each message is duplicated with
+    /// probability `prob`.
+    pub fn duplicate(mut self, from_us: u64, until_us: u64, prob: f64) -> Self {
+        self.windows
+            .push(FaultWindow { from_us, until_us, kind: FaultKind::Duplicate { prob } });
+        self
+    }
+
+    /// Add a probabilistic-drop window: each message is dropped with
+    /// probability `prob`.
+    pub fn drop_prob(mut self, from_us: u64, until_us: u64, prob: f64) -> Self {
+        self.windows
+            .push(FaultWindow { from_us, until_us, kind: FaultKind::Drop { prob } });
+        self
+    }
+
+    /// Crash `p` at `at_us` (composes with the link windows; the
+    /// simulator merges these with `SimOpts::crashes`).
+    pub fn crash(mut self, at_us: u64, p: u32) -> Self {
+        self.crashes.push((at_us, ProcessId(p)));
+        self
+    }
+
+    /// True when the plan injects nothing at all (the simulator's cheap
+    /// fast-path guard).
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// Decide the fate of a message sent `from → to` at `now`.
+    ///
+    /// Evaluation order is fixed (so the draw sequence is a pure function
+    /// of the plan, the send, and the RNG state): first the draw-free
+    /// blocking windows (partition / isolate) — a blocked link returns
+    /// [`LinkFate::Drop`] without consuming randomness; then delay and
+    /// reorder extras accumulate; then drop windows (a hit returns
+    /// immediately, skipping later draws); then duplication.
+    pub fn fate(&self, now: u64, from: ProcessId, to: ProcessId, rng: &mut Rng) -> LinkFate {
+        if from == to {
+            return LinkFate::CLEAN; // self-delivery is never faulted
+        }
+        // Pass 1: blocking windows, no randomness.
+        for w in &self.windows {
+            if !w.active(now) {
+                continue;
+            }
+            match &w.kind {
+                FaultKind::Partition { groups } => {
+                    let side = |p: ProcessId| groups.iter().position(|g| g.contains(&p));
+                    if let (Some(a), Some(b)) = (side(from), side(to)) {
+                        if a != b {
+                            return LinkFate::Drop;
+                        }
+                    }
+                }
+                FaultKind::Isolate { from: f, to: t } => {
+                    if f.contains(&from) && t.contains(&to) {
+                        return LinkFate::Drop;
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Pass 2: latency shaping and probabilistic faults, in window
+        // order within each class.
+        let mut extra_us = 0u64;
+        for w in &self.windows {
+            if !w.active(now) {
+                continue;
+            }
+            match &w.kind {
+                FaultKind::Delay { extra_us: e } => extra_us += e,
+                FaultKind::Reorder { spread_us } => {
+                    extra_us += (rng.gen_f64() * *spread_us as f64) as u64;
+                }
+                _ => {}
+            }
+        }
+        for w in &self.windows {
+            if w.active(now) {
+                if let FaultKind::Drop { prob } = &w.kind {
+                    if rng.gen_f64() < *prob {
+                        return LinkFate::Drop;
+                    }
+                }
+            }
+        }
+        let mut duplicate = false;
+        for w in &self.windows {
+            if w.active(now) {
+                if let FaultKind::Duplicate { prob } = &w.kind {
+                    if rng.gen_f64() < *prob {
+                        duplicate = true;
+                    }
+                }
+            }
+        }
+        LinkFate::Deliver { extra_us, duplicate }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(i: u32) -> ProcessId {
+        ProcessId(i)
+    }
+
+    #[test]
+    fn partition_blocks_both_directions_and_heals() {
+        let n = Nemesis::new().partition(1_000, 2_000, &[&[0, 1], &[2, 3, 4]]);
+        let mut rng = Rng::new(7);
+        // Across the cut, both directions, while active.
+        assert_eq!(n.fate(1_000, p(0), p(2), &mut rng), LinkFate::Drop);
+        assert_eq!(n.fate(1_500, p(4), p(1), &mut rng), LinkFate::Drop);
+        // Same side flows.
+        assert_eq!(n.fate(1_500, p(0), p(1), &mut rng), LinkFate::CLEAN);
+        assert_eq!(n.fate(1_500, p(2), p(4), &mut rng), LinkFate::CLEAN);
+        // Before the window and at/after the heal instant: clean.
+        assert_eq!(n.fate(999, p(0), p(2), &mut rng), LinkFate::CLEAN);
+        assert_eq!(n.fate(2_000, p(0), p(2), &mut rng), LinkFate::CLEAN);
+    }
+
+    #[test]
+    fn isolate_blocks_one_direction_only() {
+        let n = Nemesis::new().isolate(0, 100, &[0], &[1, 2]);
+        let mut rng = Rng::new(7);
+        assert_eq!(n.fate(50, p(0), p(1), &mut rng), LinkFate::Drop);
+        assert_eq!(n.fate(50, p(0), p(2), &mut rng), LinkFate::Drop);
+        assert_eq!(n.fate(50, p(1), p(0), &mut rng), LinkFate::CLEAN);
+        assert_eq!(n.fate(50, p(2), p(0), &mut rng), LinkFate::CLEAN);
+        assert_eq!(n.fate(50, p(1), p(2), &mut rng), LinkFate::CLEAN);
+    }
+
+    #[test]
+    fn delay_windows_accumulate_without_randomness() {
+        let n = Nemesis::new().delay(0, 100, 250).delay(50, 100, 100);
+        let mut rng = Rng::new(7);
+        assert_eq!(
+            n.fate(10, p(0), p(1), &mut rng),
+            LinkFate::Deliver { extra_us: 250, duplicate: false }
+        );
+        assert_eq!(
+            n.fate(60, p(0), p(1), &mut rng),
+            LinkFate::Deliver { extra_us: 350, duplicate: false }
+        );
+        // No draw was consumed: a fresh RNG from the same seed agrees on
+        // the next value.
+        let mut fresh = Rng::new(7);
+        assert_eq!(rng.gen_f64(), fresh.gen_f64());
+    }
+
+    #[test]
+    fn inactive_plan_consumes_no_randomness() {
+        let n = Nemesis::new()
+            .drop_prob(1_000, 2_000, 0.5)
+            .duplicate(1_000, 2_000, 0.5)
+            .reorder(1_000, 2_000, 10_000);
+        let mut rng = Rng::new(42);
+        // Outside every window: clean, draw-free.
+        assert_eq!(n.fate(500, p(0), p(1), &mut rng), LinkFate::CLEAN);
+        assert_eq!(n.fate(2_000, p(0), p(1), &mut rng), LinkFate::CLEAN);
+        let mut fresh = Rng::new(42);
+        assert_eq!(rng.gen_f64(), fresh.gen_f64());
+    }
+
+    #[test]
+    fn blocked_links_skip_probabilistic_draws() {
+        // A partitioned pair returns Drop before any probabilistic window
+        // is consulted, so the draw sequence is independent of them.
+        let n = Nemesis::new()
+            .partition(0, 100, &[&[0], &[1]])
+            .drop_prob(0, 100, 0.5)
+            .duplicate(0, 100, 0.5);
+        let mut rng = Rng::new(9);
+        assert_eq!(n.fate(10, p(0), p(1), &mut rng), LinkFate::Drop);
+        let mut fresh = Rng::new(9);
+        assert_eq!(rng.gen_f64(), fresh.gen_f64());
+    }
+
+    #[test]
+    fn drop_and_duplicate_follow_the_seeded_rng() {
+        let n = Nemesis::new().drop_prob(0, 100, 1.0);
+        let mut rng = Rng::new(3);
+        assert_eq!(n.fate(10, p(0), p(1), &mut rng), LinkFate::Drop);
+        let n = Nemesis::new().duplicate(0, 100, 1.0);
+        assert_eq!(
+            n.fate(10, p(0), p(1), &mut rng),
+            LinkFate::Deliver { extra_us: 0, duplicate: true }
+        );
+        // prob 0.0 never fires.
+        let n = Nemesis::new().drop_prob(0, 100, 0.0).duplicate(0, 100, 0.0);
+        assert_eq!(n.fate(10, p(0), p(1), &mut rng), LinkFate::CLEAN);
+    }
+
+    #[test]
+    fn same_seed_same_fates() {
+        let n = Nemesis::new()
+            .drop_prob(0, 1_000, 0.3)
+            .duplicate(0, 1_000, 0.3)
+            .reorder(0, 1_000, 5_000);
+        let run = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..200)
+                .map(|i| n.fate(i * 5, p((i % 3) as u32), p(((i + 1) % 3) as u32), &mut rng))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(11), run(11));
+        assert_ne!(run(11), run(12), "different seeds should differ somewhere");
+    }
+}

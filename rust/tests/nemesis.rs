@@ -1,0 +1,462 @@
+//! Adversarial nemesis sweep: seeded link faults, crash + epoch
+//! eviction, and client failover, checked against the PSMR oracles.
+//!
+//! Layers of evidence:
+//!
+//! 1. **Fault sweep**: four nemesis plans (symmetric partition,
+//!    asymmetric isolation, delay + reordering, probabilistic
+//!    drop + duplication) run against all six protocol families,
+//!    monolithic and behind the 4-worker router. Every run must stay
+//!    safe *and live* — once the window closes, retransmission
+//!    (`Config::retry_interval_ticks`) and recovery must finish every
+//!    submitted request — and end with a bounded memory footprint.
+//! 2. **Determinism**: the same composed plan and seed produce
+//!    bit-identical `SimResult`s; a different seed does not; a plan
+//!    whose windows never activate is bit-identical to no plan at all
+//!    (inactive windows draw nothing from the RNG).
+//! 3. **Crash + eviction**: a crashed replica is suspected, voted out,
+//!    and the survivors install epoch 1 with the victim in the evicted
+//!    set — in every family — while clients keep completing requests.
+//! 4. **Eviction unfreezes GC**: with epochs enabled a crash does not
+//!    freeze the executed-frontier GC; survivor footprints stay
+//!    strictly below the epochs-off run of the same seed.
+//! 5. **Negative oracles**: the `epoch_fence_off` and `dedup_window=0`
+//!    knobs each produce the violation their oracle exists to catch
+//!    (`EpochRegression`, `DuplicateRequest`), and the default
+//!    configuration does not.
+
+use std::collections::{HashMap, HashSet};
+use tempo::check::{check_psmr, Violation};
+use tempo::core::{Config, Dot, ProcessId, Rid};
+use tempo::protocol::caesar::Caesar;
+use tempo::protocol::common::Sharded;
+use tempo::protocol::depsmr::{Atlas, EPaxos, Janus};
+use tempo::protocol::fpaxos::FPaxos;
+use tempo::protocol::tempo::Tempo;
+use tempo::protocol::Protocol;
+use tempo::sim::{run, Nemesis, SimOpts, SimResult, Topology};
+use tempo::workload::ZipfWorkload;
+
+/// Every fault window in the plans below closes by 1.4 s; liveness
+/// assertions demand completions after this point.
+const HEAL_BY: u64 = 1_400_000;
+
+fn opts(seed: u64, plan: &Nemesis) -> SimOpts {
+    let mut o = SimOpts::new(Topology::ec2_three());
+    o.clients_per_site = 3;
+    o.warmup_us = 0;
+    o.duration_us = 3_000_000;
+    o.drain_us = 8_000_000; // retries + recovery need room after heal
+    o.seed = seed;
+    o.record_execution = true;
+    o.suspect_delay_us = 300_000;
+    o.nemesis = plan.clone();
+    o
+}
+
+fn config(workers: usize) -> Config {
+    let c = Config::new(3, 1)
+        .with_recovery_timeout_us(1_000_000)
+        .with_retry_interval_ticks(4);
+    if workers > 1 {
+        c.with_workers(workers)
+    } else {
+        c
+    }
+}
+
+fn workload() -> ZipfWorkload {
+    ZipfWorkload::new(100, 0.5, 64).with_read_ratio(0.2)
+}
+
+/// The four link-fault plans of the sweep. Each window opens after
+/// traffic is flowing and closes before `HEAL_BY`.
+fn fault_plans() -> Vec<(&'static str, Nemesis)> {
+    vec![
+        (
+            "partition-heal",
+            Nemesis::new().partition(300_000, 1_100_000, &[&[0], &[1, 2]]),
+        ),
+        (
+            "asym-isolate",
+            Nemesis::new().isolate(300_000, 1_000_000, &[0], &[1, 2]),
+        ),
+        (
+            "delay-reorder",
+            Nemesis::new()
+                .delay(200_000, 1_200_000, 50_000)
+                .reorder(200_000, 1_200_000, 30_000),
+        ),
+        (
+            "flaky-links",
+            Nemesis::new()
+                .drop_prob(300_000, 1_400_000, 0.05)
+                .duplicate(300_000, 1_400_000, 0.10),
+        ),
+    ]
+}
+
+/// PSMR violations that survive the precise crash excuse (the same rule
+/// `rust/tests/recovery.rs` enforces): a `NotExecuted` is excused only
+/// at a victim, or for a victim-origin request no survivor executed.
+fn unexcused_violations(
+    config: &Config,
+    result: &SimResult,
+    victims: &[u32],
+) -> Vec<Violation> {
+    let violations = check_psmr(config, result, true);
+    let executed: Vec<HashSet<Dot>> = result
+        .execution_logs
+        .iter()
+        .map(|log| log.iter().map(|&(d, _)| d).collect())
+        .collect();
+    let mut rid_dots: HashMap<Rid, Vec<Dot>> = HashMap::new();
+    for (dot, cmd) in &result.submitted {
+        rid_dots.entry(cmd.rid).or_default().push(*dot);
+    }
+    let dot_rid: HashMap<Dot, Rid> =
+        result.submitted.iter().map(|(d, c)| (*d, c.rid)).collect();
+    let survivor_executed_rid = |dot: &Dot| -> bool {
+        let Some(dots) = dot_rid.get(dot).and_then(|r| rid_dots.get(r)) else {
+            return false;
+        };
+        dots.iter().any(|d| {
+            executed
+                .iter()
+                .enumerate()
+                .any(|(p, ex)| !victims.contains(&(p as u32)) && ex.contains(d))
+        })
+    };
+    violations
+        .into_iter()
+        .filter(|v| match v {
+            Violation::NotExecuted { process, dot } => {
+                if victims.contains(&process.0) {
+                    return false;
+                }
+                if victims.contains(&dot.origin.0) {
+                    return survivor_executed_rid(dot);
+                }
+                true
+            }
+            _ => true,
+        })
+        .collect()
+}
+
+// --- Layer 1: fault sweep -------------------------------------------------
+
+/// One family under one plan: safe, live after heal, bounded footprint.
+fn survives_plan<P: Protocol>(seed: u64, workers: usize, plan_name: &str, plan: &Nemesis) {
+    let config = config(workers);
+    let result = run::<P, _>(config.clone(), opts(seed, plan), workload());
+    let label = format!("{} under {plan_name} (workers={workers}, seed={seed})", P::name());
+    assert!(result.metrics.ops > 15, "{label}: ops={}", result.metrics.ops);
+    let violations = check_psmr(&config, &result, true);
+    assert!(
+        violations.is_empty(),
+        "{label}: {} violation(s): {:#?}",
+        violations.len(),
+        violations.iter().take(8).collect::<Vec<_>>()
+    );
+    assert!(
+        result.completions.iter().any(|c| c.completed_at >= HEAL_BY),
+        "{label}: no completion after the fault window closed"
+    );
+    for (p, fp) in result.footprints.iter().enumerate() {
+        assert!(
+            fp.infos < 128,
+            "{label}: P{p} footprint not GC-bounded after drain: {fp:?}"
+        );
+    }
+}
+
+fn sweep_plan(plan_idx: usize, workers: usize) {
+    let (plan_name, plan) = &fault_plans()[plan_idx];
+    let base = 110 + (plan_idx as u64) * 10 + if workers > 1 { 50 } else { 0 };
+    if workers > 1 {
+        survives_plan::<Sharded<Tempo>>(base, workers, plan_name, plan);
+        survives_plan::<Sharded<Atlas>>(base + 1, workers, plan_name, plan);
+        survives_plan::<Sharded<EPaxos>>(base + 2, workers, plan_name, plan);
+        survives_plan::<Sharded<Janus>>(base + 3, workers, plan_name, plan);
+        survives_plan::<Sharded<Caesar>>(base + 4, workers, plan_name, plan);
+        survives_plan::<Sharded<FPaxos>>(base + 5, workers, plan_name, plan);
+    } else {
+        survives_plan::<Tempo>(base, workers, plan_name, plan);
+        survives_plan::<Atlas>(base + 1, workers, plan_name, plan);
+        survives_plan::<EPaxos>(base + 2, workers, plan_name, plan);
+        survives_plan::<Janus>(base + 3, workers, plan_name, plan);
+        survives_plan::<Caesar>(base + 4, workers, plan_name, plan);
+        survives_plan::<FPaxos>(base + 5, workers, plan_name, plan);
+    }
+}
+
+#[test]
+fn all_families_survive_a_symmetric_partition() {
+    sweep_plan(0, 1);
+}
+
+#[test]
+fn all_families_survive_asymmetric_isolation() {
+    sweep_plan(1, 1);
+}
+
+#[test]
+fn all_families_survive_delay_and_reordering() {
+    sweep_plan(2, 1);
+}
+
+#[test]
+fn all_families_survive_drops_and_duplication() {
+    sweep_plan(3, 1);
+}
+
+#[test]
+fn all_families_survive_a_symmetric_partition_sharded() {
+    sweep_plan(0, 4);
+}
+
+#[test]
+fn all_families_survive_asymmetric_isolation_sharded() {
+    sweep_plan(1, 4);
+}
+
+#[test]
+fn all_families_survive_delay_and_reordering_sharded() {
+    sweep_plan(2, 4);
+}
+
+#[test]
+fn all_families_survive_drops_and_duplication_sharded() {
+    sweep_plan(3, 4);
+}
+
+// --- Layer 2: determinism -------------------------------------------------
+
+/// Everything observable about a run, as one comparable string. Debug
+/// formatting is stable for a fixed binary, which is all bit-identical
+/// replay needs.
+fn fingerprint(r: &SimResult) -> String {
+    format!(
+        "{:?}",
+        (
+            &r.execution_logs,
+            &r.completions,
+            &r.submitted,
+            &r.decided_ts,
+            &r.epoch_views,
+            &r.footprints,
+            &r.metrics.counters,
+            r.metrics.ops,
+        )
+    )
+}
+
+fn composed_plan() -> Nemesis {
+    Nemesis::new()
+        .partition(250_000, 700_000, &[&[0], &[1, 2]])
+        .delay(700_000, 900_000, 40_000)
+        .reorder(700_000, 1_000_000, 25_000)
+        .drop_prob(1_000_000, 1_300_000, 0.08)
+        .duplicate(1_000_000, 1_300_000, 0.15)
+        .crash(1_500_000, 2)
+}
+
+#[test]
+fn same_plan_and_seed_replay_bit_identically() {
+    let plan = composed_plan();
+    let a = run::<Tempo, _>(config(1), opts(140, &plan), workload());
+    let b = run::<Tempo, _>(config(1), opts(140, &plan), workload());
+    assert_eq!(fingerprint(&a), fingerprint(&b), "same plan+seed diverged");
+    let c = run::<Tempo, _>(config(1), opts(141, &plan), workload());
+    assert_ne!(
+        fingerprint(&a),
+        fingerprint(&c),
+        "different seeds produced identical runs"
+    );
+}
+
+#[test]
+fn inactive_fault_windows_draw_nothing() {
+    // Windows that never open must not perturb the RNG: the run is
+    // bit-identical to one with no nemesis at all, even though the
+    // non-empty plan takes the full fate-evaluation path per message.
+    let dormant = Nemesis::new()
+        .drop_prob(50_000_000, 60_000_000, 0.5)
+        .reorder(50_000_000, 60_000_000, 10_000);
+    let clean = Nemesis::new();
+    let a = run::<Tempo, _>(config(1), opts(145, &dormant), workload());
+    let b = run::<Tempo, _>(config(1), opts(145, &clean), workload());
+    assert_eq!(
+        fingerprint(&a),
+        fingerprint(&b),
+        "a dormant plan perturbed the run"
+    );
+}
+
+// --- Layer 3: crash + epoch eviction, every family ------------------------
+
+/// Crash P2 (never P0: it is FPaxos's leader and Tempo's initial Ω
+/// leader). Survivors must vote the victim into epoch 1, keep the run
+/// safe, and keep completing requests. `precise_liveness` additionally
+/// applies the recovery-grade excuse filter (Tempo only: the dep-graph
+/// families can commit a dead coordinator's proposal as a dependency
+/// without ever recovering it, so for them the crash sweep asserts
+/// safety + progress, not completion of every orphan).
+fn crash_evicts_victim<P: Protocol>(seed: u64, workers: usize, precise_liveness: bool) {
+    let plan = Nemesis::new().crash(600_000, 2);
+    let config = config(workers);
+    let result =
+        run::<P, _>(config.clone(), opts(seed, &plan), ZipfWorkload::new(100, 0.5, 64));
+    let label = format!("{} crash+evict (workers={workers}, seed={seed})", P::name());
+    let violations = if precise_liveness {
+        unexcused_violations(&config, &result, &[2])
+    } else {
+        check_psmr(&config, &result, false)
+    };
+    assert!(
+        violations.is_empty(),
+        "{label}: {} violation(s): {:#?}",
+        violations.len(),
+        violations.iter().take(8).collect::<Vec<_>>()
+    );
+    assert!(
+        result.metrics.counters.evictions >= 1,
+        "{label}: no eviction counted: {:?}",
+        result.metrics.counters
+    );
+    for p in [0usize, 1] {
+        assert_eq!(
+            result.epoch_views[p].last(),
+            Some(&(1, vec![ProcessId(2)])),
+            "{label}: P{p} did not install epoch 1 evicting P2: {:?}",
+            result.epoch_views[p]
+        );
+    }
+    assert_eq!(
+        result.epoch_views[2],
+        vec![(0, Vec::new())],
+        "{label}: the crashed victim moved epochs"
+    );
+    assert!(
+        result.completions.iter().any(|c| c.completed_at > 1_500_000),
+        "{label}: no client progress after suspicion + eviction"
+    );
+}
+
+#[test]
+fn crash_leads_to_eviction_in_every_family() {
+    crash_evicts_victim::<Tempo>(170, 1, true);
+    crash_evicts_victim::<Atlas>(171, 1, false);
+    crash_evicts_victim::<EPaxos>(172, 1, false);
+    crash_evicts_victim::<Janus>(173, 1, false);
+    crash_evicts_victim::<Caesar>(174, 1, false);
+    crash_evicts_victim::<FPaxos>(175, 1, false);
+    crash_evicts_victim::<Sharded<Tempo>>(176, 4, true);
+}
+
+// --- Layer 4: eviction unfreezes GC ---------------------------------------
+
+#[test]
+fn eviction_unfreezes_gc_and_bounds_survivor_footprints() {
+    // Same seed, same crash; the only difference is whether epochs may
+    // remove the dead member from the GC frontier.
+    let plan = Nemesis::new().crash(600_000, 2);
+    let base = config(1).with_gc_interval_ticks(8);
+    let on = run::<Tempo, _>(base.clone(), opts(190, &plan), ZipfWorkload::new(100, 0.5, 64));
+    let off = run::<Tempo, _>(
+        base.clone().with_epochs(false),
+        opts(190, &plan),
+        ZipfWorkload::new(100, 0.5, 64),
+    );
+    assert!(on.metrics.counters.evictions > 0, "{:?}", on.metrics.counters);
+    assert_eq!(off.metrics.counters.evictions, 0, "{:?}", off.metrics.counters);
+    let on_infos = on.footprints[0].infos + on.footprints[1].infos;
+    let off_infos = off.footprints[0].infos + off.footprints[1].infos;
+    assert!(
+        on_infos < off_infos,
+        "eviction did not shrink survivor footprints: epochs-on {on_infos} \
+         vs epochs-off {off_infos} ({:?} vs {:?})",
+        &on.footprints[..2],
+        &off.footprints[..2]
+    );
+    assert!(
+        on.metrics.counters.gc_pruned > off.metrics.counters.gc_pruned,
+        "GC did not unfreeze after eviction: pruned {} (epochs on) vs {} (off)",
+        on.metrics.counters.gc_pruned,
+        off.metrics.counters.gc_pruned
+    );
+    let filtered = unexcused_violations(&base, &on, &[2]);
+    assert!(filtered.is_empty(), "{:#?}", filtered.iter().take(8).collect::<Vec<_>>());
+}
+
+// --- Layer 5: negative oracles --------------------------------------------
+
+#[test]
+fn fence_off_knob_is_caught_by_the_epoch_oracle() {
+    // With fencing disabled, the stale votes still in flight when the
+    // survivors install epoch 1 re-land in the history and break
+    // monotonicity — exactly what `EpochRegression` watches for.
+    let plan = Nemesis::new().crash(600_000, 2);
+    let unfenced = config(1).with_epoch_fence_off(true);
+    let bad = run::<Tempo, _>(unfenced.clone(), opts(195, &plan), ZipfWorkload::new(100, 0.5, 64));
+    let violations = check_psmr(&unfenced, &bad, false);
+    assert!(
+        violations.iter().any(|v| matches!(v, Violation::EpochRegression { .. })),
+        "fence-off run produced no EpochRegression: {:?}",
+        violations.iter().take(8).collect::<Vec<_>>()
+    );
+    // Positive twin: same seed with fencing on is epoch-clean.
+    let fenced = config(1);
+    let good = run::<Tempo, _>(fenced.clone(), opts(195, &plan), ZipfWorkload::new(100, 0.5, 64));
+    let violations = check_psmr(&fenced, &good, false);
+    assert!(
+        !violations.iter().any(|v| matches!(
+            v,
+            Violation::EpochRegression { .. } | Violation::EpochDivergence { .. }
+        )),
+        "fenced run violated the epoch oracle: {violations:?}"
+    );
+}
+
+#[test]
+fn dedup_window_zero_is_caught_and_the_default_is_exactly_once() {
+    // A crash orphans in-flight requests; the simulator's clients fail
+    // over and re-issue them at a survivor. Without a dedup window the
+    // recovered original AND the re-issue both execute — the checker
+    // must call that out. With the default window the re-issues are
+    // absorbed (counted as dedup_hits) and no duplicate ever executes.
+    let plan = Nemesis::new().crash(600_000, 2);
+    let mut duplicate_seen = false;
+    let mut dedup_hits = 0;
+    for seed in [201, 202, 203] {
+        let undeduped = config(1).with_dedup_window(0);
+        let bad = run::<Tempo, _>(
+            undeduped.clone(),
+            opts(seed, &plan),
+            ZipfWorkload::new(100, 0.5, 64),
+        );
+        duplicate_seen |= check_psmr(&undeduped, &bad, false)
+            .iter()
+            .any(|v| matches!(v, Violation::DuplicateRequest { .. }));
+
+        let deduped = config(1);
+        let good = run::<Tempo, _>(
+            deduped.clone(),
+            opts(seed, &plan),
+            ZipfWorkload::new(100, 0.5, 64),
+        );
+        let violations = check_psmr(&deduped, &good, false);
+        assert!(
+            violations.is_empty(),
+            "seed {seed}: default dedup window left violations: {:#?}",
+            violations.iter().take(8).collect::<Vec<_>>()
+        );
+        dedup_hits += good.metrics.counters.dedup_hits;
+    }
+    assert!(
+        duplicate_seen,
+        "dedup_window=0 never produced a DuplicateRequest across the seeds"
+    );
+    assert!(dedup_hits > 0, "failover re-issues never hit the dedup window");
+}

@@ -436,8 +436,8 @@ fn prop_batches_reject_nested_client_frames() {
     });
 }
 
-/// Random message over every wire tag 0–16 (nested `MBatch` members
-/// included when `allow_batch`).
+/// Random message over every wire tag 0–16 plus the epoch vote (tag
+/// 21; nested `MBatch` members included when `allow_batch`).
 fn random_msg(rng: &mut Rng, allow_batch: bool) -> tempo::protocol::tempo::msg::Msg {
     use tempo::protocol::tempo::msg::{Msg, Phase};
     use tempo::protocol::tempo::promises::PromiseSet;
@@ -476,7 +476,7 @@ fn random_msg(rng: &mut Rng, allow_batch: bool) -> tempo::protocol::tempo::msg::
         Phase::Commit,
         Phase::Execute,
     ];
-    match rng.gen_range(if allow_batch { 17 } else { 16 }) {
+    match rng.gen_range(if allow_batch { 18 } else { 17 }) {
         0 => Msg::MSubmit { dot, cmd, quorums },
         1 => Msg::MPropose { dot, cmd, quorums, ts },
         2 => Msg::MProposeAck { dot, ts, promises: kp(rng) },
@@ -510,6 +510,10 @@ fn random_msg(rng: &mut Rng, allow_batch: bool) -> tempo::protocol::tempo::msg::
             executed: (0..rng.gen_range(5))
                 .map(|i| (ProcessId(i as u32), rng.gen_range(1 << 20)))
                 .collect(),
+        },
+        16 => Msg::MEpoch {
+            epoch: 1 + rng.gen_range(1 << 20),
+            evicted: (0..rng.gen_range(4)).map(|i| ProcessId(i as u32)).collect(),
         },
         _ => Msg::MBatch {
             msgs: (0..rng.gen_range(4)).map(|_| random_msg(rng, false)).collect(),
@@ -627,6 +631,58 @@ fn prop_merged_frames_decode_to_the_same_members_in_slot_order() {
         let at = rng.gen_range(frame.len() as u64) as usize;
         flipped[at] ^= 1u8 << (rng.gen_range(8) as u32);
         let _ = decode_merged(&flipped);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_epoch_frames_roundtrip_and_stay_on_the_protocol_plane() {
+    // The reconfiguration vote on the wire (tag 21, docs/WIRE.md):
+    // random `MEpoch` frames round-trip exactly, every truncation is an
+    // Err, bit-flips never panic, the client decoder rejects the frame
+    // whole, and the frame is a *legal* MBatch member (it is a
+    // protocol-plane message, unlike tags 16–20).
+    use tempo::net::wire::{decode, decode_client, encode};
+    use tempo::protocol::tempo::msg::Msg;
+    forall_seeds("epoch-frame-fuzz", |seed| {
+        let mut rng = Rng::new(seed);
+        let msg = Msg::MEpoch {
+            epoch: rng.gen_range(1 << 40),
+            evicted: (0..rng.gen_range(5))
+                .map(|_| ProcessId(rng.gen_range(16) as u32))
+                .collect(),
+        };
+        let enc = encode(&msg);
+        let back = decode(&enc).map_err(|e| e.to_string())?;
+        if format!("{msg:?}") != format!("{back:?}") {
+            return Err(format!("round-trip mismatch: {msg:?} vs {back:?}"));
+        }
+        let cut = rng.gen_range(enc.len() as u64) as usize;
+        if decode(&enc[..cut]).is_ok() {
+            return Err(format!("truncation at {cut} decoded"));
+        }
+        let mut flipped = enc.clone();
+        let at = rng.gen_range(enc.len() as u64) as usize;
+        flipped[at] ^= 1u8 << (rng.gen_range(8) as u32);
+        let _ = decode(&flipped); // Err or a different message — no panic
+        // Plane separation: never a client frame.
+        if decode_client(&enc).is_ok() {
+            return Err("epoch vote decoded on the client plane".into());
+        }
+        // A protocol-plane message batches like any other: tag 21 inside
+        // an MBatch member must decode back to the same vote.
+        let mut batch = vec![16u8];
+        batch.extend_from_slice(&1u16.to_le_bytes());
+        batch.extend_from_slice(&(enc.len() as u32).to_le_bytes());
+        batch.extend_from_slice(&enc);
+        match decode(&batch) {
+            Ok(Msg::MBatch { msgs }) if msgs.len() == 1 => {
+                if format!("{:?}", msgs[0]) != format!("{msg:?}") {
+                    return Err("batched epoch vote changed in transit".into());
+                }
+            }
+            other => return Err(format!("batched epoch vote decoded as {other:?}")),
+        }
         Ok(())
     });
 }
