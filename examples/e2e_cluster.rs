@@ -42,13 +42,14 @@
 //!
 //! Results recorded in EXPERIMENTS.md §E2E.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tempo::client::Session;
-use tempo::core::{ClientId, Command, Config, Op, ProcessId};
+use tempo::core::{ClientId, Command, Config, Op, ProcessId, StorageMode};
 use tempo::metrics::Histogram;
-use tempo::net::{local_addrs, start_node, NodeHandle, TcpClient};
+use tempo::net::{local_addrs, start_node, start_node_in, NodeHandle, TcpClient};
 use tempo::store::KvStore;
 use tempo::util::{Rng, Zipf};
 
@@ -407,7 +408,350 @@ fn kill_node() -> tempo::util::error::Result<()> {
     Ok(())
 }
 
+/// `--kill-restart`: the durability acceptance run — a REAL crash-recovery
+/// cycle over TCP. Three nodes journal executions under
+/// `StorageMode::Disk` (per-slot WAL + content-addressed snapshots,
+/// `store::storage`); node 0 is stopped mid-session with an
+/// executed-but-unacked request outstanding, restarted from its data
+/// directory, and must:
+///
+/// - recover snapshot + WAL tail locally and fetch whatever pages it is
+///   missing from a survivor over the transfer plane (tags 22–24);
+/// - absorb the client's re-issue of the unacked rid via the dedup
+///   window recovered **from disk** (exactly-once across restart);
+/// - keep serving ordered traffic afterwards (the survivors redial it);
+/// - converge to per-slot Merkle digests byte-identical to the replicas
+///   that never crashed, with a private RMW counter key proving zero
+///   lost and zero duplicated executions.
+fn kill_restart() -> tempo::util::error::Result<()> {
+    let r = 3usize;
+    // Small snapshot cadence + fsync window so the run exercises
+    // checkpoints, WAL-tail replay AND group commit, not just one.
+    let config = Config::new(r, 1)
+        .with_tick_interval_us(1_000)
+        .with_workers(2)
+        .with_retry_interval_ticks(20)
+        .with_storage(StorageMode::Disk)
+        .with_wal_fsync_batch(4)
+        .with_snapshot_every(32);
+    let base = std::env::temp_dir().join(format!("tempo-e2e-restart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let dirs: Vec<PathBuf> = (0..r).map(|i| base.join(format!("node{i}"))).collect();
+    println!(
+        "--- e2e --kill-restart ({r} durable nodes, 2 worker slots each, \
+         data under {}) ---",
+        base.display()
+    );
+
+    let addrs = local_addrs(r)?;
+    let mut nodes: Vec<NodeHandle> = {
+        let addrs = &addrs;
+        let dirs = &dirs;
+        let config = &config;
+        std::thread::scope(|scope| {
+            (0..r as u32)
+                .map(|i| {
+                    scope.spawn(move || {
+                        start_node_in(
+                            ProcessId(i),
+                            config.clone(),
+                            addrs.clone(),
+                            Some(dirs[i as usize].clone()),
+                        )
+                        .unwrap_or_else(|e| panic!("node {i}: {e:#}"))
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|t| t.join().unwrap())
+                .collect()
+        })
+    };
+    std::thread::sleep(Duration::from_millis(300)); // mesh up
+
+    // Spray writes across both worker slots so the stores are populated
+    // and the snapshot cadence (32) fires several times per slot.
+    let mut spray = TcpClient::connect(&addrs[0], ClientId(4_241))?;
+    spray.set_timeout(Some(Duration::from_secs(5)))?;
+    for i in 0..200u64 {
+        spray.submit_single(i, Op::Put, 32)?;
+    }
+
+    // The counter session: a private RMW key only this client touches
+    // (payload 0 keeps the KvStore RMW step at exactly +1, so the final
+    // version counts executions).
+    let key = 1u64 << 42;
+    let mut tc = TcpClient::connect(&addrs[0], ClientId(4_242))?;
+    tc.set_timeout(Some(Duration::from_secs(5)))?;
+    let mut submitted = std::collections::HashSet::new();
+    let mut completed = std::collections::HashSet::new();
+    for _ in 0..40 {
+        let rid = tc.submit_async(vec![key], Op::Rmw, 0)?;
+        submitted.insert(rid);
+        let (done, _) = tc.recv_reply()?;
+        assert!(completed.insert(done), "duplicate reply for {done}");
+    }
+
+    // One more RMW, executed everywhere but *never acked to the client*:
+    // after the restart its re-issue must be absorbed by the dedup
+    // window recovered from disk — exactly-once across restart.
+    let dup_rid = tc.submit_async(vec![key], Op::Rmw, 0)?;
+    submitted.insert(dup_rid);
+    std::thread::sleep(Duration::from_millis(800)); // order + execute + journal
+
+    let executed_before = nodes[0].executed();
+    let victim = nodes.remove(0);
+    victim.shutdown(); // drains the workers (WAL flushed) and frees the port
+    println!("  node 0 stopped at executed={executed_before}");
+
+    // Mid-outage traffic at a survivor: the cluster keeps ordering with
+    // a quorum of 2 while node 0 is down, so when it comes back its
+    // snapshot + WAL recovery genuinely LAGS the survivors and the
+    // manifest diff must pull the newer pages over tags 22–24.
+    let mut outage = TcpClient::connect(&addrs[1], ClientId(4_244))?;
+    outage.set_timeout(Some(Duration::from_secs(5)))?;
+    for i in 0..60u64 {
+        outage.submit_single(1_000 + i, Op::Put, 32)?;
+    }
+    println!("  60 writes ordered by the survivors during the outage");
+
+    let restarted = start_node_in(
+        ProcessId(0),
+        config.clone(),
+        addrs.clone(),
+        Some(dirs[0].clone()),
+    )?;
+    std::thread::sleep(Duration::from_millis(500)); // recover + transfer + re-mesh
+    let fetched = restarted.counters().chunks_fetched;
+    assert!(
+        fetched > 0,
+        "the restarted node was behind the survivors but fetched no pages"
+    );
+    println!("  node 0 recovered from disk and fetched {fetched} pages over tags 22–24");
+    nodes.insert(0, restarted);
+
+    // Failover back to the restarted node itself: exactly the unacked
+    // rid is re-issued, and the recovered dedup window must answer it
+    // with the cached response instead of double-executing.
+    let reissued = tc.failover(&addrs[0])?;
+    assert_eq!(reissued, 1, "exactly the unacked rid must be re-issued");
+    let (done, _) = tc.recv_reply()?;
+    assert_eq!(done, dup_rid, "the re-issue must complete under its rid");
+    completed.insert(done);
+    let dedup_hits = nodes[0].counters().dedup_hits;
+    assert!(
+        dedup_hits > 0,
+        "the restarted node did not absorb the re-issue from its recovered dedup window"
+    );
+    println!("  executed-but-unacked rid absorbed after restart ({dedup_hits} dedup hits)");
+
+    // The restarted node must keep coordinating ordered traffic: the
+    // survivors' peer writers redial it, its own retry timer re-drives
+    // anything dropped while the mesh healed.
+    for _ in 0..20 {
+        let rid = tc.submit_async(vec![key], Op::Rmw, 0)?;
+        submitted.insert(rid);
+    }
+    let mut failovers = 0u32;
+    while completed.len() < submitted.len() {
+        match tc.recv_reply() {
+            Ok((rid, _)) => {
+                assert!(completed.insert(rid), "duplicate reply for {rid}");
+            }
+            Err(e) => {
+                failovers += 1;
+                assert!(failovers <= 5, "post-restart traffic not converging: {e:#}");
+                let n = tc.failover(&addrs[2])?;
+                println!("  failover #{failovers}: re-issued {n} rids at node 2");
+            }
+        }
+    }
+    assert_eq!(completed, submitted, "every rid must complete exactly once");
+
+    // Exactly-once proof at the state machine: the counter key advanced
+    // by exactly one step per acknowledged request.
+    let expected = submitted.len() as u64;
+    let mut check = TcpClient::connect(&addrs[2], ClientId(4_243))?;
+    check.set_timeout(Some(Duration::from_secs(5)))?;
+    let (_, response) = check.submit_single(key, Op::Get, 0)?;
+    assert_eq!(
+        response.versions,
+        vec![(key, expected)],
+        "counter key must show exactly {expected} executions"
+    );
+
+    // Convergence: the restarted replica's per-slot Merkle digests must
+    // become byte-identical to the never-crashed replicas'.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let digests = loop {
+        let views: Vec<Vec<u64>> = nodes.iter().map(|n| n.store_digests()).collect();
+        if views.windows(2).all(|w| w[0] == w[1]) {
+            break views;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "replicas did not converge after the restart: {views:x?}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    println!("  per-slot digests byte-identical across the restart: {:x?}", digests[0]);
+
+    // Durability counters: the run must have journaled, checkpointed and
+    // group-committed for real, and the restart must have fetched at
+    // least its peers' newer pages over the transfer plane.
+    let c = nodes[1].counters();
+    assert!(c.wal_records > 0, "no WAL records journaled: {c:?}");
+    assert!(c.wal_fsyncs > 0, "no group-commit fsyncs: {c:?}");
+    assert!(c.snapshots_taken > 0, "the snapshot cadence never fired: {c:?}");
+    let fetched = nodes[0].counters().chunks_fetched;
+    println!(
+        "  survivor journaled {} WAL records / {} fsyncs / {} snapshots; \
+         restart fetched {fetched} pages over tags 22–24",
+        c.wal_records, c.wal_fsyncs, c.snapshots_taken
+    );
+    println!(
+        "\ne2e kill-restart OK: {expected} counter executions exactly once \
+         across a crash-restart; digests byte-identical."
+    );
+    for n in nodes {
+        n.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&base);
+    Ok(())
+}
+
+/// `--bench-batching`: the carried-forward batching validation — batched
+/// vs unbatched over REAL TCP sockets, the syscall-cost comparison the
+/// simulator's amortization model (BENCH_batching.json, `cargo bench
+/// --bench microbench`) predicts but cannot measure. Pipelined clients
+/// keep a request window in flight so the comparison measures the wire
+/// path, not the closed-loop round-trip a 1 ms flush tick would dominate.
+fn bench_batching() -> tempo::util::error::Result<()> {
+    let r = 3usize;
+    let duration = Duration::from_secs(3);
+    let clients_per_node = 4;
+    let window = 32usize;
+    println!(
+        "--- e2e --bench-batching ({r} nodes, {} pipelined TCP clients, \
+         window {window}, {}s per cell) ---",
+        r * clients_per_node,
+        duration.as_secs()
+    );
+    let mut cells: Vec<(String, u64, f64, u64, u64)> = Vec::new();
+    for &(mode, batch) in &[("unbatched", 0usize), ("batched", 64)] {
+        let mut config = Config::new(r, 1).with_tick_interval_us(1_000).with_workers(2);
+        if batch > 0 {
+            config = config.with_batching(batch);
+        }
+        let (nodes, addrs) = boot_cluster(r, &config)?;
+        let ops = Arc::new(AtomicU64::new(0));
+        let deadline = Instant::now() + duration;
+        std::thread::scope(|scope| {
+            for (n, addr) in addrs.iter().enumerate() {
+                for c in 0..clients_per_node {
+                    let ops = ops.clone();
+                    scope.spawn(move || {
+                        let client = ClientId((n * 100 + c) as u64);
+                        let mut tc = TcpClient::connect(addr, client).expect("connect");
+                        tc.set_timeout(Some(Duration::from_secs(5))).expect("timeout");
+                        let mut rng = Rng::new((n * 100 + c) as u64 + 1);
+                        let zipf = Zipf::new(10_000, 0.7);
+                        for _ in 0..window {
+                            let _ = tc.submit_async(vec![zipf.sample(&mut rng)], Op::Put, 100);
+                        }
+                        while Instant::now() < deadline {
+                            match tc.recv_reply() {
+                                Ok(_) => {
+                                    ops.fetch_add(1, Ordering::Relaxed);
+                                    let key = zipf.sample(&mut rng);
+                                    if tc.submit_async(vec![key], Op::Put, 100).is_err() {
+                                        break;
+                                    }
+                                }
+                                Err(e) => {
+                                    eprintln!("client {client:?}: {e:#}; stopping");
+                                    break;
+                                }
+                            }
+                        }
+                    });
+                }
+            }
+        });
+        let total = ops.load(Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(500)); // drain
+        let (mut bytes, mut frames) = (0u64, 0u64);
+        for n in &nodes {
+            let c = n.counters();
+            bytes += c.bytes_sent;
+            frames += n.wire_frames();
+        }
+        let ops_per_s = total as f64 / duration.as_secs_f64();
+        println!(
+            "  {mode:>9}: {ops_per_s:>10.0} ops/s, {frames} wire frames, \
+             {bytes} peer bytes, {:.1} frames/op",
+            frames as f64 / total.max(1) as f64
+        );
+        assert!(total > 0, "no ops in the {mode} cell");
+        cells.push((mode.to_string(), total, ops_per_s, frames, bytes));
+        for n in nodes {
+            n.shutdown();
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    let ratio = cells[1].2 / cells[0].2;
+    println!("  batched/unbatched throughput ratio over TCP: {ratio:.2}");
+    let rows: String = cells
+        .iter()
+        .enumerate()
+        .map(|(i, (mode, ops, ops_per_s, frames, bytes))| {
+            format!(
+                "    {{\"mode\": \"{mode}\", \"ops\": {ops}, \"ops_per_s\": \
+                 {ops_per_s:.0}, \"wire_frames\": {frames}, \"peer_bytes\": {bytes}, \
+                 \"frames_per_op\": {:.2}}}{}\n",
+                *frames as f64 / (*ops).max(1) as f64,
+                if i + 1 == cells.len() { "" } else { "," }
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"batching_e2e_tcp\",\n  \
+         \"workload\": \"3-node Tempo over real TCP, {} pipelined clients x \
+         window {window}, zipf(10k, 0.7) puts, {}s per cell; batched cell = \
+         batch_max_msgs 64\",\n  \
+         \"harness\": \"rust (cargo run --release --example e2e_cluster -- \
+         --bench-batching)\",\n  \
+         \"cells\": [\n{rows}  ],\n  \
+         \"batched_vs_unbatched_ops_ratio\": {ratio:.3},\n  \
+         \"regenerate\": \"cargo run --release --example e2e_cluster -- \
+         --bench-batching\"\n}}\n",
+        r * clients_per_node,
+        duration.as_secs()
+    );
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(d) => format!("{d}/../BENCH_batching_tcp.json"),
+        Err(_) => "BENCH_batching_tcp.json".to_string(),
+    };
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("e2e TCP batching cells written to {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+    assert!(
+        ratio >= 1.0,
+        "batching must not cost throughput over TCP (ratio {ratio:.3})"
+    );
+    Ok(())
+}
+
 fn main() -> tempo::util::error::Result<()> {
+    if std::env::args().any(|a| a == "--kill-restart") {
+        kill_restart()?;
+        std::process::exit(0); // stray client reply-writer threads may linger
+    }
+    if std::env::args().any(|a| a == "--bench-batching") {
+        bench_batching()?;
+        std::process::exit(0);
+    }
     if std::env::args().any(|a| a == "--kill-node") {
         kill_node()?;
         std::process::exit(0); // acceptor threads block on listener

@@ -1,23 +1,39 @@
-"""Batched vs unbatched framing, measured through the wire-codec port.
+"""Batched vs unbatched framing, measured through the wire-codec port
+AND over a real localhost TCP socket pair.
 
 The container this repo grows in has no Rust toolchain, so the
 authoritative simulator comparison (``cargo bench --bench microbench``,
 which overwrites BENCH_batching.json with throughput numbers from the
 CPU/NIC resource model) cannot run here. This script measures what *can*
-be measured for real on this machine: for a realistic mix of protocol
-messages bound for one peer, the frames, bytes and encode+decode time of
-one-frame-per-message vs ``MBatch`` coalescing (docs/WIRE.md tag 16),
-including the runtime's 8-byte per-frame header (len + sender).
+be measured for real on this machine, and records both:
+
+- **codec section**: for a realistic mix of protocol messages bound for
+  one peer, the frames, bytes and encode+decode time of
+  one-frame-per-message vs ``MBatch`` coalescing (docs/WIRE.md tag 16),
+  including the runtime's 8-byte per-frame header (len + sender). Pure
+  CPU: batching is allowed to be a slight *loss* here — the tag-16
+  envelope is extra bytes and the codec work is the same.
+- **tcp section**: the same frame streams pumped through a real
+  ``AF_INET`` loopback connection with ``TCP_NODELAY``, one ``send(2)``
+  per frame and framing-level accounting on the receiver — the shape of
+  the runtime's write path (net/mod.rs writes one frame per queued
+  message unless the batcher coalesced them). This is where batching
+  must win: 16× fewer syscalls and frames for the same payload. The CI
+  gate (check_bench.py) holds batched ≥ unbatched over TCP.
 
 Run from anywhere: ``python3 python/bench/bench_batching.py``.
 ``--smoke`` (or ``SMOKE=1``) runs a fast regression pass — the codec
-round-trip and batching equivalence checks at reduced iteration counts —
-without overwriting the recorded BENCH_batching.json (for cargo-less CI).
+round-trip, batching equivalence and TCP comparison at reduced iteration
+counts — without overwriting the recorded BENCH_batching.json (for
+cargo-less CI).
 """
 
 import json
 import os
+import socket
+import struct
 import sys
+import threading
 import time
 
 from wire import decode, encode
@@ -86,6 +102,67 @@ def measure(frames, rounds):
     return time.perf_counter() - start, wire_bytes, len(frames)
 
 
+def tcp_sink(listener, n_msgs, rounds, ready):
+    """Accept one connection and, per round, read frames until `n_msgs`
+    messages arrived, then ack with one byte (the round barrier the
+    closed-loop client waits on). Accounting is framing-level only — the
+    tag byte, plus the member count for an ``MBatch`` (tag 16, ``u16``
+    count) — because this cell isolates the *transport*: the codec
+    section above already measures the full decode, where Python's
+    per-byte overhead would swamp the syscall savings being compared."""
+    ready.set()
+    conn, _ = listener.accept()
+    with conn:
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        for _ in range(rounds):
+            seen = 0
+            while seen < n_msgs:
+                hdr = b""
+                while len(hdr) < FRAME_HDR:
+                    chunk = conn.recv(FRAME_HDR - len(hdr))
+                    assert chunk, "peer closed mid-header"
+                    hdr += chunk
+                (length, _sender) = struct.unpack("<II", hdr)
+                body = b""
+                while len(body) < length:
+                    chunk = conn.recv(length - len(body))
+                    assert chunk, "peer closed mid-body"
+                    body += chunk
+                if body[0] == 16:  # MBatch: u16 member count after the tag
+                    (members,) = struct.unpack_from("<H", body, 1)
+                    seen += members
+                else:
+                    seen += 1
+            conn.sendall(b"\x01")
+
+
+def tcp_cell(frames, n_msgs, rounds):
+    """Pump pre-encoded frames through a loopback TCP connection, one
+    send(2) per frame (the unbatched runtime's write shape), and wait for
+    the sink's ack each round. Returns messages/s of wall time."""
+    wire = [struct.pack("<II", len(b), 0) + b for b in (encode(f) for f in frames)]
+    listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(1)
+    ready = threading.Event()
+    sink = threading.Thread(target=tcp_sink, args=(listener, n_msgs, rounds, ready), daemon=True)
+    sink.start()
+    ready.wait()
+    conn = socket.create_connection(listener.getsockname())
+    conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    start = time.perf_counter()
+    with conn:
+        for _ in range(rounds):
+            for frame in wire:
+                conn.sendall(frame)
+            assert conn.recv(1) == b"\x01", "sink did not ack the round"
+    elapsed = time.perf_counter() - start
+    sink.join(timeout=10)
+    listener.close()
+    return n_msgs * rounds / elapsed
+
+
 def main():
     n_msgs, rounds = (192, 3) if SMOKE else (960, 30)
     msgs = message_mix(n_msgs)
@@ -94,6 +171,10 @@ def main():
 
     unb_s, unb_bytes, unb_frames = measure(msgs, rounds)
     bat_s, bat_bytes, bat_frames = measure(list(batches(msgs, BATCH_MAX)), rounds)
+
+    tcp_rounds = rounds if SMOKE else rounds * 2
+    tcp_unb = tcp_cell(msgs, n_msgs, tcp_rounds)
+    tcp_bat = tcp_cell(list(batches(msgs, BATCH_MAX)), n_msgs, tcp_rounds)
 
     total = n_msgs * rounds
     result = {
@@ -112,6 +193,14 @@ def main():
         "unbatched_us_per_msg": round(unb_s / total * 1e6, 3),
         "batched_us_per_msg": round(bat_s / total * 1e6, 3),
         "codec_speedup": round(unb_s / bat_s, 2),
+        "tcp": {
+            "transport": "real 127.0.0.1 socket pair, TCP_NODELAY, one send(2) "
+            "per frame, receiver counts framed messages and acks each round",
+            "rounds": tcp_rounds,
+            "unbatched_msgs_per_s": round(tcp_unb),
+            "batched_msgs_per_s": round(tcp_bat),
+            "tcp_speedup": round(tcp_bat / tcp_unb, 2),
+        },
         "regenerate": "python3 python/bench/bench_batching.py "
         "(or cargo bench --bench microbench for the simulator numbers)",
     }

@@ -29,6 +29,17 @@ Validates the recorded BENCH_*.json baselines at the repo root:
   fan-out 8 must not exceed 2x fan-out 1 (flat serialize cost), while
   the recorded legacy path documents the fan-out-proportional cost the
   runtime no longer pays.
+- BENCH_durability.json: the WAL + snapshot write path must keep
+  write amplification at or under 3x per disk cell (the CRC framing and
+  dot/ts headers are the only overhead — payload bytes are journaled
+  once), and every recovery cell must replay the full WAL tail
+  (``snapshot_applied + wal_replayed == applied``) and rebuild a store
+  whose digest matches the pre-crash one (``digest_match``), including
+  at least one cell where a snapshot shortened the tail.
+- BENCH_batching.json ``tcp`` section: over a real loopback TCP socket
+  pair, batched framing must be at least as fast as unbatched
+  (``batched_msgs_per_s >= unbatched_msgs_per_s``) — the syscall/frame
+  reduction is the whole point of the batcher.
 
 Exit code 0 = all gates pass; 1 = a gate failed (CI turns red).
 Run from anywhere: ``python3 python/bench/check_bench.py``.
@@ -129,7 +140,72 @@ def main():
         reduction = float(batching.get("frame_reduction", 0.0))
         if reduction < 1.5:
             fail(f"BENCH_batching.json frame_reduction {reduction} < 1.5")
-    print("batching: ok")
+    tcp = batching.get("tcp", {})
+    if tcp:
+        unb = float(tcp.get("unbatched_msgs_per_s", 0.0))
+        bat = float(tcp.get("batched_msgs_per_s", 0.0))
+        if unb <= 0 or bat <= 0:
+            fail("BENCH_batching.json tcp section lacks positive msgs/s")
+        if bat < unb:
+            fail(
+                f"BENCH_batching.json batched {bat:.0f} msgs/s < unbatched "
+                f"{unb:.0f} over real TCP — frame coalescing regressed"
+            )
+        print(f"batching: tcp {bat / unb:.2f}x ok")
+    else:
+        print("batching: ok (no tcp section recorded)")
+    # The Rust e2e harness (examples/e2e_cluster.rs --bench-batching)
+    # records the same comparison over a real 3-node cluster; gate it
+    # when the file exists (it needs a Rust toolchain to regenerate).
+    if os.path.exists(root_path("BENCH_batching_tcp.json")):
+        e2e = load("BENCH_batching_tcp.json")
+        ratio = float(e2e.get("batched_vs_unbatched_ops_ratio", 0.0))
+        if ratio < 1.0:
+            fail(
+                f"BENCH_batching_tcp.json batched/unbatched ratio {ratio} < 1 "
+                "— batching cost throughput over the real cluster"
+            )
+        print(f"batching e2e tcp: ratio {ratio:.2f} >= 1 ok")
+
+    durability = load("BENCH_durability.json")
+    d_cells = durability.get("cells", [])
+    disk_cells = [c for c in d_cells if c.get("mode") == "disk"]
+    if not disk_cells:
+        fail("BENCH_durability.json has no disk cells")
+    if not any(c.get("mode") == "memory" for c in d_cells):
+        fail("BENCH_durability.json has no in-memory baseline cell")
+    for c in disk_cells:
+        amp = float(c.get("write_amp", 1e9))
+        if amp > 3.0:
+            fail(
+                f"BENCH_durability.json disk cell fsync_batch="
+                f"{c.get('fsync_batch')} write_amp {amp} > 3.0 — the WAL/"
+                "snapshot framing overhead regressed"
+            )
+        if float(c.get("ops_per_s_wall", 0.0)) <= 0 or int(c.get("fsyncs", 0)) <= 0:
+            fail(f"BENCH_durability.json disk cell {c} lacks ops/s or fsyncs")
+    recoveries = durability.get("recovery", [])
+    if not recoveries:
+        fail("BENCH_durability.json has no recovery cells")
+    for r in recoveries:
+        if not r.get("digest_match"):
+            fail(f"BENCH_durability.json recovery cell {r} diverged from the pre-crash store")
+        applied = int(r.get("applied", 0))
+        accounted = int(r.get("snapshot_applied", 0)) + int(r.get("wal_replayed", 0))
+        if applied <= 0 or accounted != applied:
+            fail(
+                f"BENCH_durability.json recovery cell {r} did not replay the "
+                f"full WAL tail ({accounted} accounted for {applied} applied)"
+            )
+        if float(r.get("recovery_us", 0.0)) <= 0:
+            fail(f"BENCH_durability.json recovery cell {r} lacks a recovery time")
+    if not any(int(r.get("snapshot_applied", 0)) > 0 for r in recoveries):
+        fail("BENCH_durability.json has no recovery cell where a snapshot shortened the tail")
+    max_amp = max(float(c["write_amp"]) for c in disk_cells)
+    print(
+        f"durability: write amp {max_amp:.2f}x <= 3.0, "
+        f"{len(recoveries)} recovery cells replay fully with matching digests ok"
+    )
 
     reads = load("BENCH_reads.json")
     read_speedup = float(reads.get("read_speedup_vs_write_path", 0.0))

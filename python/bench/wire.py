@@ -2,16 +2,19 @@
 
 Byte-for-byte faithful to docs/WIRE.md: little-endian fixed-width
 integers, u8 message tags, length-prefixed ``MBatch`` members, and the
-client service frames (``ClientSubmit`` tag 17 / ``ClientReply`` tag 18).
-Used by ``bench_batching.py`` to measure framing amortization on this
-machine and as an executable cross-check of the WIRE.md spec: every frame
+client service frames (``ClientSubmit`` tag 17, carrying the session's
+read floor / ``ClientReply`` tag 18, carrying the decided timestamp) and
+the state-transfer frames (``ManifestRequest`` tag 22 /
+``ManifestReply`` tag 23 / ``Chunk`` tag 24). Used by
+``bench_batching.py`` to measure framing amortization on this machine
+and as an executable cross-check of the WIRE.md spec: every frame
 produced here must decode to the same message, and malformed frames must
 raise ``WireError`` (mirroring the Rust codec returning ``Err`` — never a
-panic). The protocol and client planes are strictly separated:
-``decode`` rejects tags 17–18, ``decode_client`` rejects tags 0–16
-and 21, and
-an ``MBatch`` member carrying a client frame is malformed the same way a
-nested batch is.
+panic). The protocol, client and transfer planes are strictly separated:
+``decode`` rejects tags 17–18 and 22–24, ``decode_client`` rejects tags
+0–16, 21 and 22–24, ``decode_transfer`` rejects everything at or below
+tag 21, and an ``MBatch`` member carrying a client or transfer frame is
+malformed the same way a nested batch is.
 
 Messages are dicts with a ``t`` tag key, e.g.::
 
@@ -242,37 +245,118 @@ def encode(msg):
 
 
 def encode_client(frame):
-    """Encode a client frame (tags 17–18, without the length prefix)."""
+    """Encode a client frame (tags 17–18, without the length prefix).
+
+    ``ClientSubmit`` carries the session's read floor (u64, trailing) —
+    the lowest stability timestamp a failover read may serve at;
+    ``ClientReply`` carries the decided ordering timestamp (u64,
+    trailing) the session folds into that floor after a write.
+    """
     w = Writer()
     t = frame["t"]
     if t == "ClientSubmit":
-        w.u8(17), w.cmd(frame["cmd"])
+        w.u8(17), w.cmd(frame["cmd"]), w.u64(frame["floor"])
     elif t == "ClientReply":
         w.u8(18), w.rid(frame["rid"])
         w.u16(len(frame["response"]))
         for k, v in frame["response"]:
             w.u64(k)
             w.u64(v)
+        w.u64(frame["ts"])
     else:
         raise ValueError(f"unknown client frame {t}")
     return w.bytes()
 
 
 def decode_client(buf):
-    """Decode a client frame; a protocol tag (0–16) here is an error."""
+    """Decode a client frame; a protocol tag (0–16, 21) or a transfer
+    tag (22–24) here is an error."""
     r = Reader(buf)
     tag = r.u8()
     if tag == 17:
-        return {"t": "ClientSubmit", "cmd": r.cmd()}
+        cmd = r.cmd()
+        return {"t": "ClientSubmit", "cmd": cmd, "floor": r.u64()}
     if tag == 18:
-        return {
-            "t": "ClientReply",
-            "rid": r.rid(),
-            "response": [(r.u64(), r.u64()) for _ in range(r.u16())],
-        }
-    if tag <= 16:
+        rid = r.rid()
+        response = [(r.u64(), r.u64()) for _ in range(r.u16())]
+        return {"t": "ClientReply", "rid": rid, "response": response, "ts": r.u64()}
+    if tag <= 16 or tag == 21:
         raise WireError(f"protocol frame tag {tag} in client stream")
+    if 22 <= tag <= 24:
+        raise WireError(f"transfer frame tag {tag} in client stream")
     raise WireError(f"bad client frame tag {tag}")
+
+
+def encode_transfer(frame):
+    """Encode a state-transfer frame (tags 22–24, docs/WIRE.md):
+
+    - ``ManifestRequest``: ``[22][slot u32]``
+    - ``ManifestReply``: ``[23][slot u32][applied u64][n u32][n x hash
+      u64][f u16][f x (origin u32, floor u64)][dlen u32][dedup bytes]``
+    - ``Chunk``: ``[24][slot u32][hash u64][present u8][len u32][data]``
+    """
+    w = Writer()
+    t = frame["t"]
+    if t == "ManifestRequest":
+        w.u8(22), w.u32(frame["slot"])
+    elif t == "ManifestReply":
+        w.u8(23), w.u32(frame["slot"]), w.u64(frame["applied"])
+        w.u32(len(frame["chunks"]))
+        for h in frame["chunks"]:
+            w.u64(h)
+        w.u16(len(frame["dot_floors"]))
+        for p, floor in frame["dot_floors"]:
+            w.u32(p)
+            w.u64(floor)
+        w.u32(len(frame["dedup"]))
+        w.parts.append(bytes(frame["dedup"]))
+    elif t == "Chunk":
+        w.u8(24), w.u32(frame["slot"]), w.u64(frame["hash"])
+        w.u8(1 if frame["present"] else 0)
+        w.u32(len(frame["data"]))
+        w.parts.append(bytes(frame["data"]))
+    else:
+        raise ValueError(f"unknown transfer frame {t}")
+    return w.bytes()
+
+
+def decode_transfer(buf):
+    """Decode a state-transfer frame (tags 22–24). Any other plane's tag
+    — protocol, client, routed, merged — is an error: the transfer plane
+    is as strictly separated as the others."""
+    r = Reader(buf)
+    tag = r.u8()
+    if tag == 22:
+        return {"t": "ManifestRequest", "slot": r.u32()}
+    if tag == 23:
+        slot, applied = r.u32(), r.u64()
+        chunks = [r.u64() for _ in range(r.u32())]
+        dot_floors = [(r.u32(), r.u64()) for _ in range(r.u16())]
+        dedup = r.take(r.u32())
+        return {
+            "t": "ManifestReply",
+            "slot": slot,
+            "applied": applied,
+            "chunks": chunks,
+            "dot_floors": dot_floors,
+            "dedup": dedup,
+        }
+    if tag == 24:
+        slot, hash_ = r.u32(), r.u64()
+        present = r.u8()
+        if present > 1:
+            raise WireError(f"bad chunk present byte {present}")
+        data = r.take(r.u32())
+        return {
+            "t": "Chunk",
+            "slot": slot,
+            "hash": hash_,
+            "present": present == 1,
+            "data": data,
+        }
+    if tag <= 21:
+        raise WireError(f"non-transfer frame tag {tag} in transfer stream")
+    raise WireError(f"bad transfer frame tag {tag}")
 
 
 def decode(buf):
@@ -366,6 +450,8 @@ def _decode_at(r):
                 raise WireError("routed envelope inside MBatch")
             if body[:1] == b"\x14":
                 raise WireError("merged frame inside MBatch")
+            if body[:1] in (b"\x16", b"\x17", b"\x18"):
+                raise WireError(f"transfer frame tag {body[0]} inside MBatch")
             sub = Reader(body)
             inner = _decode_at(sub)
             if sub.pos != length:
@@ -384,6 +470,8 @@ def _decode_at(r):
         raise WireError("routed envelope where a bare protocol message was expected")
     if tag == 20:
         raise WireError("merged frame where a bare protocol message was expected")
+    if 22 <= tag <= 24:
+        raise WireError(f"transfer frame tag {tag} in protocol stream")
     raise WireError(f"bad message tag {tag}")
 
 
@@ -537,8 +625,9 @@ def self_check():
     assert len(w.bytes()) == 27 + 8 * len(cmd["keys"]) + cmd["payload_len"], len(w.bytes())
     # Client frames (tags 17–18): round-trip, truncation, and the strict
     # separation of the protocol and client planes.
-    submit = {"t": "ClientSubmit", "cmd": cmd}
-    reply = {"t": "ClientReply", "rid": (7, 9), "response": [(1, 4), (99, 17)]}
+    submit = {"t": "ClientSubmit", "cmd": cmd, "floor": (1 << 40) + 17}
+    reply = {"t": "ClientReply", "rid": (7, 9), "response": [(1, 4), (99, 17)],
+             "ts": (1 << 41) + 3}
     for f in (submit, reply):
         enc = encode_client(f)
         assert decode_client(enc) == f, f
@@ -565,7 +654,7 @@ def self_check():
     # prop_read_flagged_submits_roundtrip_and_stay_on_the_client_plane).
     read_cmd = {"rid": (11, 3), "op": 3, "payload_len": 0, "batched": 0,
                 "keys": [4, 17, 99]}
-    read_submit = {"t": "ClientSubmit", "cmd": read_cmd}
+    read_submit = {"t": "ClientSubmit", "cmd": read_cmd, "floor": 42}
     enc = encode_client(read_submit)
     got = decode_client(enc)
     assert got == read_submit, got
@@ -693,6 +782,86 @@ def self_check():
         try:
             decode_merged(encode_merged([bad_member]))
             raise AssertionError("malformed merged member decoded")
+        except WireError:
+            pass
+    # State-transfer plane (tags 22–24): round-trip, truncation at every
+    # cut, bit-flip resilience, and strict separation from every other
+    # plane — including MBatch smuggling (mirrors the Rust
+    # prop_transfer_frames_roundtrip_and_stay_on_the_transfer_plane).
+    manifest = {
+        "t": "ManifestReply",
+        "slot": 1,
+        "applied": (1 << 33) + 5,
+        "chunks": [0xDEAD, 0xBEEF, 0xDEAD],
+        "dot_floors": [(0, 41), (2, 7)],
+        "dedup": b"\x01\x02\x03\xff",
+    }
+    transfers = [
+        {"t": "ManifestRequest", "slot": 3},
+        manifest,
+        {"t": "ManifestReply", "slot": 0, "applied": 0, "chunks": [],
+         "dot_floors": [], "dedup": b""},
+        {"t": "Chunk", "slot": 2, "hash": 0xFACE, "present": False, "data": b""},
+        {"t": "Chunk", "slot": 2, "hash": 0xFACE, "present": True,
+         "data": bytes(range(256)) * 2},
+    ]
+    for f in transfers:
+        enc = encode_transfer(f)
+        assert decode_transfer(enc) == f, f
+        for cut in range(len(enc)):
+            try:
+                decode_transfer(enc[:cut])
+                raise AssertionError(f"truncated transfer frame decoded at {cut}")
+            except WireError:
+                pass
+        for ctx in (decode, decode_client):
+            try:
+                ctx(enc)
+                raise AssertionError("transfer frame decoded on another plane")
+            except WireError:
+                pass
+        b = Writer()
+        b.u8(16), b.u16(1), b.u32(len(enc))
+        b.parts.append(enc)
+        try:
+            decode(b.bytes())
+            raise AssertionError("transfer frame inside MBatch decoded")
+        except WireError:
+            pass
+    # Encoded size matches the Rust transfer_encoded_len arithmetic.
+    enc = encode_transfer(manifest)
+    assert len(enc) == 1 + 4 + 8 + 4 + 8 * 3 + 2 + 12 * 2 + 4 + 4, len(enc)
+    for i in range(len(enc)):
+        for bit in range(8):
+            flipped = bytearray(enc)
+            flipped[i] ^= 1 << bit
+            try:
+                d = decode_transfer(bytes(flipped))
+                # Same stance as the client plane: a surviving decode is
+                # a well-formed frame; what matters is never a crash.
+                assert d["t"] in ("ManifestRequest", "ManifestReply", "Chunk")
+            except WireError:
+                pass
+    # A chunk present byte other than 0/1 is malformed.
+    bad = bytearray(encode_transfer(transfers[-1]))
+    bad[1 + 4 + 8] = 2
+    try:
+        decode_transfer(bytes(bad))
+        raise AssertionError("present byte 2 decoded")
+    except WireError:
+        pass
+    # No other plane decodes as a transfer frame — protocol, epoch vote,
+    # client reply, routed, merged.
+    for other in (
+        encode({"t": "MStable", "dot": dot}),
+        encode({"t": "MEpoch", "epoch": 1, "evicted": []}),
+        encode_client(reply),
+        encode_routed(0, inner),
+        encode_merged([encode_routed(0, inner)]),
+    ):
+        try:
+            decode_transfer(other)
+            raise AssertionError("non-transfer frame decoded as transfer")
         except WireError:
             pass
 

@@ -1,0 +1,227 @@
+//! Durability bench: what the WAL + snapshot subsystem (`store::storage`,
+//! `StorageMode::Disk`) costs on the write path and buys at recovery.
+//! Writes `BENCH_durability.json` at the repo root.
+//!
+//! Three measurements:
+//!
+//! - **throughput cells**: the same zipf workload through the
+//!   deterministic simulator under `Memory` and under `Disk` at several
+//!   group-commit batch sizes; ops/s-wall plus the physical bytes the
+//!   modelled disk absorbed (WAL appends + snapshot pages + manifests).
+//! - **write amplification**: physical bytes / logical payload bytes per
+//!   disk cell — the CI gate wants ≤ 3×, i.e. the CRC framing, dot/ts
+//!   headers and content-addressed checkpoint reuse keep overhead small.
+//! - **recovery sweep**: `Durable::recover` wall time vs WAL-tail length
+//!   against a backend populated through a real `Executor` — the full
+//!   tail must replay and the recovered digest must equal the pre-crash
+//!   store's, with and without a snapshot shortening the tail.
+//!
+//! Run with: `cargo bench --bench durability`
+
+use std::time::Instant;
+use tempo::core::{ClientId, Command, Config, Dot, Op, ProcessId, Rid, StorageMode};
+use tempo::executor::Executor;
+use tempo::protocol::tempo::Tempo;
+use tempo::protocol::Action;
+use tempo::sim::{run, SimOpts, Topology};
+use tempo::store::storage::{Durable, MemBackend};
+use tempo::store::{KvStore, StateMachine};
+use tempo::workload::ZipfWorkload;
+
+const PAYLOAD: u32 = 256;
+
+struct Cell {
+    mode: String,
+    fsync_batch: usize,
+    ops: u64,
+    ops_per_s_wall: f64,
+    wal_records: u64,
+    fsyncs: u64,
+    snapshots: u64,
+    physical_bytes: u64,
+    logical_bytes: u64,
+    write_amp: f64,
+}
+
+fn sim_opts() -> SimOpts {
+    let mut o = SimOpts::new(Topology::ec2_three());
+    o.clients_per_site = 16;
+    o.warmup_us = 500_000;
+    o.duration_us = 4_000_000;
+    o.seed = 11;
+    o
+}
+
+fn throughput_cell(mode: &str, storage: StorageMode, fsync_batch: usize) -> Cell {
+    let config = Config::new(3, 1)
+        .with_storage(storage)
+        .with_wal_fsync_batch(fsync_batch)
+        .with_snapshot_every(1024);
+    let workload = ZipfWorkload::new(10_000, 0.5, PAYLOAD);
+    let t0 = Instant::now();
+    let result = run::<Tempo, _>(config, sim_opts(), workload);
+    let wall = t0.elapsed().as_secs_f64();
+    let c = &result.metrics.counters;
+    // Logical: the payload every *replica* applied (wal_records counts
+    // per-replica executions, so physical and logical are on the same
+    // side of the replication factor).
+    let logical = c.wal_records * PAYLOAD as u64;
+    Cell {
+        mode: mode.to_string(),
+        fsync_batch,
+        ops: result.metrics.ops,
+        ops_per_s_wall: result.metrics.ops as f64 / wall,
+        wal_records: c.wal_records,
+        fsyncs: c.wal_fsyncs,
+        snapshots: c.snapshots_taken,
+        physical_bytes: c.wal_bytes,
+        logical_bytes: logical,
+        write_amp: if logical > 0 { c.wal_bytes as f64 / logical as f64 } else { 0.0 },
+    }
+}
+
+struct RecoveryCell {
+    wal_tail: u64,
+    snapshot_every: u64,
+    applied: u64,
+    snapshot_applied: u64,
+    wal_replayed: u64,
+    recovery_us: u64,
+    us_per_record: f64,
+    digest_match: bool,
+}
+
+/// Populate a shared [`MemBackend`] by pushing `n` ordered executions
+/// through a real `Executor<Durable<KvStore>>` (the production write
+/// path: apply → dedup → WAL append → group commit → checkpoint), then
+/// time `Durable::recover` against it.
+fn recovery_cell(n: u64, fsync_batch: usize, snapshot_every: u64) -> RecoveryCell {
+    let backend = MemBackend::new();
+    let durable =
+        Durable::new(KvStore::new(), Box::new(backend.clone()), fsync_batch, snapshot_every);
+    let mut exec = Executor::new(ProcessId(0), durable);
+    for i in 0..n {
+        let cmd = Command::single(Rid::new(ClientId(i % 64), i / 64 + 1), i % 4096, Op::Put, 64);
+        let _ = exec.absorb(vec![Action::Execute {
+            dot: Dot::new(ProcessId(0), i + 1),
+            cmd,
+            ts: i + 1,
+        }]);
+    }
+    exec.state_mut().flush(); // drain the group-commit window
+    let digest_before = exec.state().digest();
+    let snapshot_applied_expect = if snapshot_every == 0 {
+        0
+    } else {
+        n - n % snapshot_every
+    };
+
+    let t0 = Instant::now();
+    let (durable, recovery) =
+        Durable::<KvStore>::recover(Box::new(backend.clone()), fsync_batch, snapshot_every);
+    let dt = t0.elapsed();
+    assert_eq!(recovery.snapshot_applied, snapshot_applied_expect);
+    assert_eq!(
+        recovery.snapshot_applied + recovery.wal_replayed,
+        n,
+        "recovery must account for every flushed execution"
+    );
+    RecoveryCell {
+        wal_tail: n - snapshot_applied_expect,
+        snapshot_every,
+        applied: durable.applied(),
+        snapshot_applied: recovery.snapshot_applied,
+        wal_replayed: recovery.wal_replayed,
+        recovery_us: dt.as_micros() as u64,
+        us_per_record: if recovery.wal_replayed > 0 {
+            dt.as_micros() as f64 / recovery.wal_replayed as f64
+        } else {
+            0.0
+        },
+        digest_match: durable.digest() == digest_before,
+    }
+}
+
+fn main() {
+    println!("--- durability bench (tempo r=3 f=1, zipf 10k keys, {PAYLOAD} B payload) ---");
+
+    let mut cells = vec![throughput_cell("memory", StorageMode::Memory, 1)];
+    for batch in [1usize, 8, 64] {
+        cells.push(throughput_cell("disk", StorageMode::Disk, batch));
+    }
+    for c in &cells {
+        println!(
+            "{:>6} fsync_batch={:<3}: {:>8} ops, {:>10.0} ops/s-wall, {:>9} wal B, \
+             amp {:.2}x, {} records / {} fsyncs / {} snapshots",
+            c.mode, c.fsync_batch, c.ops, c.ops_per_s_wall, c.physical_bytes, c.write_amp,
+            c.wal_records, c.fsyncs, c.snapshots
+        );
+    }
+    let mem_rate = cells[0].ops_per_s_wall;
+    let disk_rate = cells[1..].iter().map(|c| c.ops_per_s_wall).fold(f64::MAX, f64::min);
+    let slowdown = mem_rate / disk_rate;
+    println!("worst disk cell vs memory: {slowdown:.2}x slower");
+
+    // Recovery: pure WAL tails of increasing length, then a snapshot
+    // cell where only the tail past the checkpoint replays.
+    let mut recoveries = Vec::new();
+    for n in [1_000u64, 10_000, 50_000] {
+        recoveries.push(recovery_cell(n, 8, 0));
+    }
+    recoveries.push(recovery_cell(50_000, 8, 4_096));
+    for r in &recoveries {
+        assert!(r.digest_match, "recovered digest diverged (tail {})", r.wal_tail);
+        println!(
+            "recover: snapshot@{:<5} + {:>6}-record tail -> {:>8} us ({:.2} us/record), \
+             applied={}, digest match",
+            r.snapshot_every, r.wal_tail, r.recovery_us, r.us_per_record, r.applied
+        );
+    }
+
+    let mut cell_rows = String::new();
+    for (i, c) in cells.iter().enumerate() {
+        cell_rows.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"fsync_batch\": {}, \"ops\": {}, \
+             \"ops_per_s_wall\": {:.0}, \"wal_records\": {}, \"fsyncs\": {}, \
+             \"snapshots\": {}, \"physical_bytes\": {}, \"logical_bytes\": {}, \
+             \"write_amp\": {:.3}}}{}\n",
+            c.mode, c.fsync_batch, c.ops, c.ops_per_s_wall, c.wal_records, c.fsyncs,
+            c.snapshots, c.physical_bytes, c.logical_bytes, c.write_amp,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    let mut rec_rows = String::new();
+    for (i, r) in recoveries.iter().enumerate() {
+        rec_rows.push_str(&format!(
+            "    {{\"wal_tail\": {}, \"snapshot_every\": {}, \"applied\": {}, \
+             \"snapshot_applied\": {}, \"wal_replayed\": {}, \"recovery_us\": {}, \
+             \"us_per_record\": {:.3}, \"digest_match\": {}}}{}\n",
+            r.wal_tail, r.snapshot_every, r.applied, r.snapshot_applied, r.wal_replayed,
+            r.recovery_us, r.us_per_record, r.digest_match,
+            if i + 1 == recoveries.len() { "" } else { "," }
+        ));
+    }
+    let max_amp =
+        cells.iter().filter(|c| c.mode == "disk").map(|c| c.write_amp).fold(0.0f64, f64::max);
+    let json = format!(
+        "{{\n  \"bench\": \"durability\",\n  \
+         \"workload\": \"tempo r=3 f=1; zipf theta=0.5 over 10k keys, {PAYLOAD} B \
+         payload, 48 closed-loop clients, 4s sim window; recovery sweep \
+         drives a real Executor<Durable<KvStore>> and times \
+         Durable::recover\",\n  \
+         \"write_amp_disk_max\": {max_amp:.3},\n  \
+         \"disk_slowdown_vs_memory\": {slowdown:.3},\n  \
+         \"harness\": \"rust (cargo bench --bench durability)\",\n  \
+         \"cells\": [\n{cell_rows}  ],\n  \
+         \"recovery\": [\n{rec_rows}  ],\n  \
+         \"regenerate\": \"cargo bench --bench durability\"\n}}\n"
+    );
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(d) => format!("{d}/../BENCH_durability.json"),
+        Err(_) => "BENCH_durability.json".to_string(),
+    };
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("durability baseline written to {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

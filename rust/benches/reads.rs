@@ -68,7 +68,7 @@ fn micro_local_reads(n: u64) -> (f64, f64, f64) {
     let t0 = Instant::now();
     for i in 0..n {
         let cmd = session.read_single(i % 1024);
-        let actions = exec.absorb(p.submit_read(cmd, i));
+        let actions = exec.absorb(p.submit_read(cmd, 0, i));
         for action in &actions {
             match action {
                 Action::Send { msg, .. } => wire_bytes += Tempo::msg_size(msg),

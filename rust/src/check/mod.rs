@@ -61,6 +61,26 @@ pub enum Violation {
     /// evicted sets — the membership views diverged instead of forming
     /// prefix-compatible histories.
     EpochDivergence { a: ProcessId, b: ProcessId, epoch: u64 },
+    /// A restarted process rejoined with a store digest different from
+    /// its state-transfer donor's — recovery + manifest-diff transfer
+    /// must reproduce the donor's state byte-for-byte. The
+    /// `transfer_on_restart = false` knob lets a stale rejoin through,
+    /// which is exactly this divergence.
+    RecoveryDivergence { process: ProcessId, peer: ProcessId, post: u64, peer_digest: u64 },
+    /// Local recovery's arithmetic broke: the applied count after
+    /// snapshot + WAL-tail replay must equal the snapshot's applied count
+    /// plus the records replayed.
+    RecoveryReplayGap {
+        process: ProcessId,
+        recovered_applied: u64,
+        snapshot_applied: u64,
+        wal_replayed: u64,
+    },
+    /// The crash destroyed a WAL record the configuration promised was
+    /// durable: with `wal_fsync_batch == 1` every logged record is synced
+    /// before the executor moves on, so a lost record means the
+    /// group-commit contract is broken.
+    RecoveryLostDurableRecord { process: ProcessId, wal_lost: u64 },
 }
 
 /// Configuration view the checker needs.
@@ -524,11 +544,67 @@ pub fn check_psmr(
     violations
 }
 
+/// Check the crash-restart recoveries of a run ([`SimResult::recoveries`])
+/// against the durability contract:
+///
+/// - **No divergent rejoin** — when a restart state-transferred from a
+///   donor, the rejoining store digest equals the donor's digest at
+///   transfer time (byte-identical state).
+/// - **Replay arithmetic** — local recovery applied exactly
+///   `snapshot_applied + wal_replayed` commands: the WAL tail was neither
+///   partially skipped nor double-applied.
+/// - **Group-commit contract** — a crash may only destroy WAL records
+///   still inside the fsync batch window; with `wal_fsync_batch == 1`
+///   nothing may ever be lost.
+pub fn check_recovery(config: &crate::core::Config, result: &SimResult) -> Vec<Violation> {
+    let mut violations = Vec::new();
+    for rec in &result.recoveries {
+        if let Some(peer) = rec.peer {
+            if rec.post_digest != rec.peer_digest {
+                violations.push(Violation::RecoveryDivergence {
+                    process: rec.process,
+                    peer,
+                    post: rec.post_digest,
+                    peer_digest: rec.peer_digest,
+                });
+            }
+        }
+        if rec.recovered_applied != rec.snapshot_applied + rec.wal_replayed {
+            violations.push(Violation::RecoveryReplayGap {
+                process: rec.process,
+                recovered_applied: rec.recovered_applied,
+                snapshot_applied: rec.snapshot_applied,
+                wal_replayed: rec.wal_replayed,
+            });
+        }
+        if rec.wal_lost > 0 && config.wal_fsync_batch <= 1 {
+            violations.push(Violation::RecoveryLostDurableRecord {
+                process: rec.process,
+                wal_lost: rec.wal_lost,
+            });
+        }
+    }
+    violations
+}
+
 /// Assert no violations, with a readable report.
 pub fn assert_psmr(config: &crate::core::Config, result: &SimResult, require_liveness: bool) {
     let violations = check_psmr(config, result, require_liveness);
     if !violations.is_empty() {
         let shown: Vec<_> = violations.iter().take(10).collect();
         panic!("PSMR violated: {} violation(s); first 10: {:#?}", violations.len(), shown);
+    }
+}
+
+/// Assert the recovery contract holds, with a readable report.
+pub fn assert_recovery(config: &crate::core::Config, result: &SimResult) {
+    let violations = check_recovery(config, result);
+    if !violations.is_empty() {
+        let shown: Vec<_> = violations.iter().take(10).collect();
+        panic!(
+            "recovery contract violated: {} violation(s); first 10: {:#?}",
+            violations.len(),
+            shown
+        );
     }
 }

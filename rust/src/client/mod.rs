@@ -32,12 +32,15 @@ use crate::core::{ClientId, Command, Key, Op, Rid};
 pub struct Session {
     client: ClientId,
     next_seq: u64,
+    /// Read-your-writes watermark: the highest decided timestamp among
+    /// this session's acknowledged writes (0 before the first ack).
+    write_watermark: u64,
 }
 
 impl Session {
     /// Open a session for `client`.
     pub fn new(client: ClientId) -> Self {
-        Session { client, next_seq: 1 }
+        Session { client, next_seq: 1, write_watermark: 0 }
     }
 
     /// The session's client identity.
@@ -48,6 +51,22 @@ impl Session {
     /// Number of request ids allocated so far.
     pub fn issued(&self) -> u64 {
         self.next_seq - 1
+    }
+
+    /// A write of this session was acknowledged with decided timestamp
+    /// `ts` (`Action::Reply::ts`): raise the read-your-writes watermark.
+    /// Timestamp-free protocol families report 0, which leaves the floor
+    /// untouched — their ordering path serializes reads after writes
+    /// anyway.
+    pub fn note_write(&mut self, ts: u64) {
+        self.write_watermark = self.write_watermark.max(ts);
+    }
+
+    /// The floor to pass to `Protocol::submit_read`: reads of this session
+    /// must observe state at least as fresh as its last acknowledged
+    /// write.
+    pub fn read_floor(&self) -> u64 {
+        self.write_watermark
     }
 
     /// Allocate the next request id.
@@ -108,6 +127,17 @@ mod tests {
         assert_eq!(c1.rid, Rid::new(ClientId(3), 1));
         assert_eq!(c2.rid, Rid::new(ClientId(3), 2));
         assert_ne!(c1.rid, c2.rid);
+    }
+
+    #[test]
+    fn read_floor_tracks_the_highest_acked_write() {
+        let mut s = Session::new(ClientId(1));
+        assert_eq!(s.read_floor(), 0);
+        s.note_write(40);
+        s.note_write(25); // a late, lower ack must not lower the floor
+        assert_eq!(s.read_floor(), 40);
+        s.note_write(0); // timestamp-free families are a no-op
+        assert_eq!(s.read_floor(), 40);
     }
 
     #[test]

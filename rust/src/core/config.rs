@@ -3,6 +3,17 @@
 
 use super::id::{ProcessId, ShardId};
 
+/// Which durability backend a replica's executors run on (see
+/// `store::storage`). `Memory` — the default — wires the no-op backend
+/// in, keeping every pre-existing run byte-identical; `Disk` gives the
+/// TCP runtime a real per-worker-slot WAL + snapshot directory, and the
+/// simulator its deterministic in-memory equivalent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StorageMode {
+    Memory,
+    Disk,
+}
+
 /// Static configuration of a (P)SMR deployment.
 ///
 /// Following Flexible Paxos (and the paper §2), the allowed number of
@@ -108,6 +119,20 @@ pub struct Config {
     /// disables retransmission and keeps existing seeded runs
     /// bit-identical.
     pub retry_interval_ticks: u64,
+    /// Durability backend for the executors' state machines (see
+    /// [`StorageMode`]); `Memory` is the default.
+    pub storage: StorageMode,
+    /// Group-commit window of the write-ahead log: WAL records are
+    /// fsynced once this many have accumulated, so a crash loses at most
+    /// `wal_fsync_batch - 1` *acked-to-nobody* tail records (recovery
+    /// replays everything durable and state transfer refills the rest).
+    /// 1 = sync every record.
+    pub wal_fsync_batch: usize,
+    /// Checkpoint cadence: after this many logged executions the store is
+    /// snapshotted (content-addressed chunks + manifest) and the WAL
+    /// resets. 0 disables snapshots (recovery then replays the whole
+    /// WAL).
+    pub snapshot_every: u64,
 }
 
 impl Config {
@@ -140,6 +165,9 @@ impl Config {
             epoch_fence_off: false,
             dedup_window: Self::DEFAULT_DEDUP_WINDOW,
             retry_interval_ticks: 0,
+            storage: StorageMode::Memory,
+            wal_fsync_batch: 8,
+            snapshot_every: 1024,
         }
     }
 
@@ -245,6 +273,25 @@ impl Config {
     /// [`Config::retry_interval_ticks`]; 0 disables).
     pub fn with_retry_interval_ticks(mut self, ticks: u64) -> Self {
         self.retry_interval_ticks = ticks;
+        self
+    }
+
+    /// Durability backend selection (see [`Config::storage`]).
+    pub fn with_storage(mut self, mode: StorageMode) -> Self {
+        self.storage = mode;
+        self
+    }
+
+    /// WAL group-commit window (see [`Config::wal_fsync_batch`];
+    /// clamped to ≥ 1 by the storage layer).
+    pub fn with_wal_fsync_batch(mut self, batch: usize) -> Self {
+        self.wal_fsync_batch = batch;
+        self
+    }
+
+    /// Checkpoint cadence (see [`Config::snapshot_every`]; 0 disables).
+    pub fn with_snapshot_every(mut self, every: u64) -> Self {
+        self.snapshot_every = every;
         self
     }
 

@@ -194,6 +194,18 @@ impl DotGen {
         self.next += self.step;
         dot
     }
+
+    /// Advance the generator so every dot minted afterwards has
+    /// `seq > floor`, staying on this slot's stride. A crash-restarted
+    /// replica calls this with the highest own-origin sequence recovered
+    /// from its WAL/snapshot (plus slack for in-flight proposals) so it
+    /// never re-mints a dot its peers may already hold state for.
+    pub fn advance_past(&mut self, floor: u64) {
+        if self.next <= floor {
+            let gap = floor - self.next;
+            self.next += (gap / self.step + 1) * self.step;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -272,6 +284,27 @@ mod tests {
         for _ in 0..8 {
             assert_eq!(a.next(), b.next());
         }
+    }
+
+    #[test]
+    fn advance_past_stays_on_stride_and_never_reuses() {
+        for workers in 1..=4usize {
+            for worker in 0..workers {
+                let mut g = DotGen::strided(ProcessId(1), worker, workers);
+                for floor in [0u64, 1, 7, 64, 65, 1000] {
+                    g.advance_past(floor);
+                    let d = g.next();
+                    assert!(d.seq > floor, "seq {} <= floor {}", d.seq, floor);
+                    assert_eq!(Stride::owner_of(d.seq, workers), worker);
+                }
+            }
+        }
+        // A floor below the current position is a no-op.
+        let mut g = DotGen::new(ProcessId(0));
+        g.next();
+        g.next();
+        g.advance_past(1);
+        assert_eq!(g.next().seq, 3);
     }
 
     #[test]

@@ -5,5 +5,5 @@ pub mod config;
 pub mod id;
 
 pub use command::{clone_stats, key_to_shard, Command, Completion, Key, Op, Response};
-pub use config::Config;
+pub use config::{Config, StorageMode};
 pub use id::{ClientId, Dot, DotGen, ProcessId, Rid, ShardId, Stride};

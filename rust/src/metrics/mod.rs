@@ -120,6 +120,18 @@ pub struct Counters {
     /// (`config.retry_interval_ticks`): re-proposals to silent quorum
     /// members plus commit re-broadcasts.
     pub retransmits: u64,
+    /// WAL records appended by the durability layer (fresh ordered
+    /// executions under `StorageMode::Disk`; 0 in Memory mode).
+    pub wal_records: u64,
+    /// Group-commit fsync calls issued by the WAL.
+    pub wal_fsyncs: u64,
+    /// Bytes written by the storage backend (WAL + chunks + manifests).
+    pub wal_bytes: u64,
+    /// Content-addressed snapshots (checkpoints) taken.
+    pub snapshots_taken: u64,
+    /// Snapshot pages fetched from a donor during restart state transfer
+    /// (pages the recovering replica could not produce locally).
+    pub chunks_fetched: u64,
 }
 
 impl Counters {
@@ -152,6 +164,11 @@ impl Counters {
         self.evictions += o.evictions;
         self.dedup_hits += o.dedup_hits;
         self.retransmits += o.retransmits;
+        self.wal_records += o.wal_records;
+        self.wal_fsyncs += o.wal_fsyncs;
+        self.wal_bytes += o.wal_bytes;
+        self.snapshots_taken += o.snapshots_taken;
+        self.chunks_fetched += o.chunks_fetched;
     }
 
     /// Mean number of messages per flushed batch (0 when batching never

@@ -44,18 +44,22 @@
 pub mod wire;
 
 use crate::client::Session;
-use crate::core::{ClientId, Command, Config, Key, Op, ProcessId, Response, Rid};
+use crate::core::{
+    ClientId, Command, Config, Key, Op, ProcessId, Response, Rid, StorageMode,
+};
 use crate::executor::Executor;
 use crate::metrics::Counters;
 use crate::protocol::common::shard::worker_of_cmd;
 use crate::protocol::tempo::msg::Msg;
 use crate::protocol::tempo::Tempo;
-use crate::protocol::{Action, Protocol};
+use crate::protocol::{Action, Protocol, RESTART_DOT_SLACK};
+use crate::store::storage::{assemble, plan_transfer, Durable, FileBackend, Manifest};
 use crate::store::{merkle_root, KvStore};
 use crate::util::error::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -67,16 +71,28 @@ use std::time::{Duration, Instant};
 /// `ProcessId` can collide — process ids are dense and small).
 pub const CLIENT_FROM: u32 = u32::MAX;
 
+/// Sender field of frames on the state-transfer plane (docs/WIRE.md tags
+/// 22–24): a recovering replica dialing a donor. Like [`CLIENT_FROM`], no
+/// real `ProcessId` can collide with it.
+pub const TRANSFER_FROM: u32 = u32::MAX - 1;
+
 /// Events fed to one worker's protocol thread.
 enum Event {
     Message { from: ProcessId, msg: Msg },
-    Submit { cmd: Command, done: Sender<(Rid, Response)> },
+    /// A client submission; `floor` is the session's read-your-writes
+    /// floor (consumed by `Protocol::submit_read`, 0 for writes).
+    Submit { cmd: Command, floor: u64, done: Sender<(Rid, Response, u64)> },
+    /// A state-transfer connection asks for this slot's current manifest
+    /// and pages (served from the worker's executor so the snapshot is
+    /// taken between protocol steps, never mid-execution).
+    Manifest { done: Sender<(Manifest, Vec<Vec<u8>>)> },
     Tick,
     Shutdown,
 }
 
-/// A completion listener registered per in-flight request id.
-type DoneMap = HashMap<Rid, Sender<(Rid, Response)>>;
+/// A completion listener registered per in-flight request id; completions
+/// carry the command's decided timestamp (`Action::Reply::ts`).
+type DoneMap = HashMap<Rid, Sender<(Rid, Response, u64)>>;
 
 /// Per-worker observability shared with the [`NodeHandle`].
 #[derive(Default)]
@@ -93,6 +109,12 @@ pub struct NodeHandle {
     events: Vec<Sender<Event>>,
     workers: usize,
     threads: Vec<JoinHandle<()>>,
+    /// This node's own listen address plus the acceptor's stop flag:
+    /// `shutdown` raises the flag and dials itself to unblock `accept`,
+    /// so the listener is dropped and the port is free for a restart
+    /// (`start_node_in` on the same address).
+    addr: String,
+    closing: Arc<std::sync::atomic::AtomicBool>,
     /// One independently-locked stats slot per worker: each protocol
     /// thread writes only its own slot, so the shared-nothing workers
     /// never contend on observability.
@@ -103,13 +125,21 @@ pub struct NodeHandle {
 
 impl NodeHandle {
     /// Submit a command from an in-process client session; the response
-    /// arrives on the returned receiver once the command executes at this
-    /// node (the owning worker's executor emits `Action::Reply`).
-    pub fn submit(&self, cmd: Command) -> Receiver<(Rid, Response)> {
+    /// (with its decided timestamp) arrives on the returned receiver once
+    /// the command executes at this node (the owning worker's executor
+    /// emits `Action::Reply`).
+    pub fn submit(&self, cmd: Command) -> Receiver<(Rid, Response, u64)> {
+        self.submit_with_floor(cmd, 0)
+    }
+
+    /// [`NodeHandle::submit`] with an explicit read-your-writes floor: a
+    /// read is released only once the stability frontier covers `floor`
+    /// (`Protocol::submit_read`); writes ignore it.
+    pub fn submit_with_floor(&self, cmd: Command, floor: u64) -> Receiver<(Rid, Response, u64)> {
         let (tx, rx) = channel();
         let w = worker_of_cmd(&cmd, self.workers)
             .unwrap_or_else(|(a, b)| panic!("command spans worker slots {a} and {b}"));
-        let _ = self.events[w].send(Event::Submit { cmd, done: tx });
+        let _ = self.events[w].send(Event::Submit { cmd, floor, done: tx });
         rx
     }
 
@@ -157,13 +187,22 @@ impl NodeHandle {
         merkle_root(&self.store_digests())
     }
 
-    /// Stop the protocol threads. Acceptor/tick threads are detached (they
-    /// block on the listener/timer and exit with the process).
+    /// Stop the node: drain the protocol threads (each flushes its WAL),
+    /// close the listener (the port is immediately rebindable, so a
+    /// crash-restart can boot the node again on the same address), and
+    /// join every thread the node owns. Handlers of still-open inbound
+    /// connections exit on their next frame — their worker channels are
+    /// gone — which severs the sockets and lets surviving peers notice.
     pub fn shutdown(self) {
+        self.closing.store(true, Ordering::SeqCst);
         for tx in &self.events {
             let _ = tx.send(Event::Shutdown);
         }
-        drop(self.threads);
+        // Unblock the acceptor's `accept` so it observes the flag.
+        let _ = TcpStream::connect(&self.addr);
+        for t in self.threads {
+            let _ = t.join();
+        }
     }
 }
 
@@ -339,10 +378,15 @@ fn write_merged_frame<W: Write>(
 /// and put them on the wire, merging everything immediately available
 /// (typically the ≤ `workers` per-slot `MBatch` flushes of one tick)
 /// into a single merged frame per write. Exits when every sender hung up
-/// (node shutdown) or the peer died (its traffic is simply dropped).
-fn peer_writer(mut stream: TcpStream, rx: Receiver<OutFrame>, from: u32, stats: Arc<NetStats>) {
+/// (node shutdown). A dead peer drops its traffic, but the writer
+/// **redials once per flush** — so a killed-and-restarted replica
+/// (crash-recovery fault model) rejoins the mesh without the survivors
+/// restarting; the frames lost while it was down are covered by the
+/// protocol retry timer and client failover.
+fn peer_writer(stream: TcpStream, addr: String, rx: Receiver<OutFrame>, from: u32, stats: Arc<NetStats>) {
     let mut scratch: Vec<u8> = Vec::with_capacity(256);
     let mut carry: Option<OutFrame> = None;
+    let mut stream: Option<TcpStream> = Some(stream);
     loop {
         let first = match carry.take() {
             Some(f) => f,
@@ -367,17 +411,32 @@ fn peer_writer(mut stream: TcpStream, rx: Receiver<OutFrame>, from: u32, stats: 
                 Err(_) => break,
             }
         }
-        let wrote = if batch.len() == 1 {
-            // A lone frame goes out unmerged: [len][from][body].
-            let body = batch[0].bytes();
-            let mut hdr = [0u8; 8];
-            hdr[0..4].copy_from_slice(&(body.len() as u32).to_le_bytes());
-            hdr[4..8].copy_from_slice(&from.to_le_bytes());
-            write_all_vectored(&mut stream, &[&hdr[..], body]).map(|()| 8 + body.len())
-        } else {
-            let bodies: Vec<&[u8]> = batch.iter().map(|f| f.bytes()).collect();
-            stats.frames_merged.fetch_add(bodies.len() as u64 - 1, Ordering::Relaxed);
-            write_merged_frame(&mut stream, from, &bodies, &mut scratch)
+        if stream.is_none() {
+            // The peer died earlier: one redial attempt per flush (on a
+            // LAN a dead peer refuses instantly). Until it answers, its
+            // traffic is dropped, exactly as before.
+            if let Ok(s) = TcpStream::connect(&addr) {
+                let _ = s.set_nodelay(true);
+                stream = Some(s);
+            }
+        }
+        let wrote = match stream.as_mut() {
+            // 0 is unambiguous for "dropped": a real write is ≥ 9 bytes.
+            None => Ok(0),
+            Some(s) => {
+                if batch.len() == 1 {
+                    // A lone frame goes out unmerged: [len][from][body].
+                    let body = batch[0].bytes();
+                    let mut hdr = [0u8; 8];
+                    hdr[0..4].copy_from_slice(&(body.len() as u32).to_le_bytes());
+                    hdr[4..8].copy_from_slice(&from.to_le_bytes());
+                    write_all_vectored(s, &[&hdr[..], body]).map(|()| 8 + body.len())
+                } else {
+                    let bodies: Vec<&[u8]> = batch.iter().map(|f| f.bytes()).collect();
+                    stats.frames_merged.fetch_add(bodies.len() as u64 - 1, Ordering::Relaxed);
+                    write_merged_frame(s, from, &bodies, &mut scratch)
+                }
+            }
         };
         for f in batch {
             if let OutFrame::Owned(b) = f {
@@ -385,12 +444,13 @@ fn peer_writer(mut stream: TcpStream, rx: Receiver<OutFrame>, from: u32, stats: 
             }
         }
         match wrote {
+            Ok(0) => {} // peer down, traffic dropped
             Ok(n) => {
                 stats.bytes_sent.fetch_add(n as u64, Ordering::Relaxed);
                 stats.wire_frames.fetch_add(1, Ordering::Relaxed);
             }
-            // A dead peer just drops its traffic.
-            Err(_) => return,
+            // A write error severs the connection; redial next flush.
+            Err(_) => stream = None,
         }
     }
 }
@@ -428,7 +488,12 @@ fn serve_connection_inner(
     rbuf: &mut wire::FrameBuf,
 ) {
     let workers = txs.len();
-    let mut reply_tx: Option<Sender<(Rid, Response)>> = None;
+    let mut reply_tx: Option<Sender<(Rid, Response, u64)>> = None;
+    // Pages cached per slot for the transfer plane: a `ManifestRequest`
+    // snapshots the slot's store once (one worker round-trip); the
+    // follow-up `Chunk` fetches are served from the cache, so a transfer
+    // costs the worker a single event no matter how many pages move.
+    let mut transfer_pages: HashMap<u32, HashMap<u64, Vec<u8>>> = HashMap::new();
     loop {
         let from = match read_frame(stream, rbuf.vec()) {
             Ok(f) => f,
@@ -436,8 +501,8 @@ fn serve_connection_inner(
         };
         let body = rbuf.bytes();
         if from == CLIENT_FROM {
-            let cmd = match wire::decode_client(body) {
-                Ok(wire::ClientFrame::Submit { cmd }) => cmd,
+            let (cmd, floor) = match wire::decode_client(body) {
+                Ok(wire::ClientFrame::Submit { cmd, floor }) => (cmd, floor),
                 // A node never receives replies; malformed input drops
                 // the connection (the codec promises Err, not panic).
                 Ok(wire::ClientFrame::Reply { .. }) | Err(_) => return,
@@ -454,11 +519,14 @@ fn serve_connection_inner(
                     Ok(s) => s,
                     Err(_) => return,
                 };
-                let (txr, rxr) = channel::<(Rid, Response)>();
+                let (txr, rxr) = channel::<(Rid, Response, u64)>();
                 std::thread::spawn(move || {
-                    for (rid, response) in rxr {
-                        let body =
-                            wire::encode_client(&wire::ClientFrame::Reply { rid, response });
+                    for (rid, response, ts) in rxr {
+                        let body = wire::encode_client(&wire::ClientFrame::Reply {
+                            rid,
+                            response,
+                            ts,
+                        });
                         if write_frame(&mut wstream, node.0, &body).is_err() {
                             return;
                         }
@@ -467,8 +535,51 @@ fn serve_connection_inner(
                 reply_tx = Some(txr);
             }
             let done = reply_tx.as_ref().expect("reply writer started").clone();
-            if txs[w].send(Event::Submit { cmd, done }).is_err() {
+            if txs[w].send(Event::Submit { cmd, floor, done }).is_err() {
                 return;
+            }
+        } else if from == TRANSFER_FROM {
+            match wire::decode_transfer(body) {
+                Ok(wire::TransferFrame::ManifestRequest { slot }) => {
+                    if slot as usize >= workers {
+                        return;
+                    }
+                    let (txm, rxm) = channel();
+                    if txs[slot as usize].send(Event::Manifest { done: txm }).is_err() {
+                        return;
+                    }
+                    let (manifest, pages) = match rxm.recv() {
+                        Ok(v) => v,
+                        Err(_) => return,
+                    };
+                    let reply = wire::TransferFrame::ManifestReply {
+                        slot,
+                        applied: manifest.applied,
+                        chunks: manifest.chunks.clone(),
+                        dot_floors: manifest.dot_floors.clone(),
+                        dedup: manifest.dedup.clone(),
+                    };
+                    transfer_pages
+                        .insert(slot, manifest.chunks.iter().copied().zip(pages).collect());
+                    if write_frame(stream, node.0, &wire::encode_transfer(&reply)).is_err() {
+                        return;
+                    }
+                }
+                Ok(wire::TransferFrame::Chunk { slot, hash, present: false, .. }) => {
+                    let data = transfer_pages.get(&slot).and_then(|m| m.get(&hash)).cloned();
+                    let reply = wire::TransferFrame::Chunk {
+                        slot,
+                        hash,
+                        present: data.is_some(),
+                        data: data.unwrap_or_default(),
+                    };
+                    if write_frame(stream, node.0, &wire::encode_transfer(&reply)).is_err() {
+                        return;
+                    }
+                }
+                // A donor never receives replies; malformed input drops
+                // the connection.
+                Ok(_) | Err(_) => return,
             }
         } else if body.first() == Some(&wire::TAG_MERGED) {
             // The per-peer merger coalesced several routed frames into
@@ -496,12 +607,85 @@ fn serve_connection_inner(
     }
 }
 
+/// Dial `addr`'s transfer plane and fetch worker slot `slot`'s state:
+/// the donor's manifest, plus every page the local (recovered) store
+/// cannot produce itself — the manifest-diff transfer of
+/// `store::storage::plan_transfer`. Returns the manifest, a page lookup
+/// covering all of its chunks, and how many pages actually crossed the
+/// wire. `None` if the donor is unreachable or answers garbage (the
+/// caller tries the next peer or continues with local state only).
+fn fetch_slot_state(
+    addr: &str,
+    slot: u32,
+    local: &KvStore,
+) -> Option<(Manifest, HashMap<u64, Vec<u8>>, u64)> {
+    let mut stream = TcpStream::connect(addr).ok()?;
+    stream.set_nodelay(true).ok()?;
+    let req = wire::encode_transfer(&wire::TransferFrame::ManifestRequest { slot });
+    write_frame(&mut stream, TRANSFER_FROM, &req).ok()?;
+    let mut buf = Vec::new();
+    read_frame(&mut stream, &mut buf).ok()?;
+    let manifest = match wire::decode_transfer(&buf).ok()? {
+        wire::TransferFrame::ManifestReply { slot: s, applied, chunks, dot_floors, dedup }
+            if s == slot =>
+        {
+            Manifest { applied, chunks, dedup, dot_floors }
+        }
+        _ => return None,
+    };
+    let plan = plan_transfer(local, &manifest);
+    let mut pages = plan.local;
+    let fetched = plan.need.len() as u64;
+    for hash in plan.need {
+        let req = wire::encode_transfer(&wire::TransferFrame::Chunk {
+            slot,
+            hash,
+            present: false,
+            data: vec![],
+        });
+        write_frame(&mut stream, TRANSFER_FROM, &req).ok()?;
+        read_frame(&mut stream, &mut buf).ok()?;
+        match wire::decode_transfer(&buf).ok()? {
+            wire::TransferFrame::Chunk { hash: h, present: true, data, .. } if h == hash => {
+                pages.insert(hash, data);
+            }
+            // The donor no longer holds the page (it checkpointed past
+            // the manifest we hold): abort — the caller retries or keeps
+            // local state.
+            _ => return None,
+        }
+    }
+    Some((manifest, pages, fetched))
+}
+
 /// Start a Tempo node listening on `addrs[id]`, connecting to all peers.
 /// `addrs` must be identical across the cluster, and so must
 /// `config.workers` — worker slot `w` of this node talks only to slot `w`
-/// of its peers. The same listener serves protocol peers and
-/// [`TcpClient`]s.
+/// of its peers. The same listener serves protocol peers,
+/// [`TcpClient`]s, and the restart state-transfer plane.
+///
+/// This variant runs in `StorageMode::Memory` regardless of
+/// `config.storage` (no storage root to journal into); use
+/// [`start_node_in`] for the crash-recovery fault model.
 pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<NodeHandle> {
+    start_node_in(id, config, addrs, None)
+}
+
+/// [`start_node`] with a durable storage root. Under `StorageMode::Disk`
+/// worker slot `w` journals executions to `<data_dir>/slot<w>/` (WAL +
+/// content-addressed snapshot chunks, `store::storage`). When the slot
+/// directories already exist the node is **restarting**: each worker
+/// first rebuilds snapshot + WAL tail locally, then dials a survivor's
+/// transfer plane (docs/WIRE.md tags 22–24) to fetch the pages it is
+/// missing, re-seeds its executor's dedup windows from the recovered
+/// blob, and advances its dot generator past everything it ever minted
+/// before rejoining the mesh.
+pub fn start_node_in(
+    id: ProcessId,
+    config: Config,
+    addrs: Vec<String>,
+    data_dir: Option<PathBuf>,
+) -> Result<NodeHandle> {
     let me = id.0 as usize;
     let workers = config.workers.max(1);
     // The peer-frame envelope names the worker slot in one byte; refuse a
@@ -518,11 +702,19 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
     }
     let mut threads = Vec::new();
 
-    // Acceptor: protocol peers and clients dial us.
+    // Acceptor: protocol peers and clients dial us. The closing flag is
+    // raised by `NodeHandle::shutdown`, which then dials the listener to
+    // unblock `accept`; breaking drops the listener and frees the port
+    // for an in-process restart.
+    let closing = Arc::new(std::sync::atomic::AtomicBool::new(false));
     {
         let txs = event_txs.clone();
+        let closing = closing.clone();
         threads.push(std::thread::spawn(move || {
             for stream in listener.incoming() {
+                if closing.load(Ordering::SeqCst) {
+                    break;
+                }
                 let stream = match stream {
                     Ok(s) => s,
                     Err(_) => break,
@@ -558,7 +750,9 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
         let (tx, rx) = sync_channel::<OutFrame>(PEER_QUEUE_FRAMES);
         let stats = net_stats.clone();
         let from = id.0;
-        threads.push(std::thread::spawn(move || peer_writer(stream, rx, from, stats)));
+        let peer_addr = addr.clone();
+        threads
+            .push(std::thread::spawn(move || peer_writer(stream, peer_addr, rx, from, stats)));
         peers.insert(ProcessId(j as u32), tx);
     }
 
@@ -580,17 +774,106 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
         (0..workers).map(|_| Arc::new(Mutex::new(WorkerStats::default()))).collect();
 
     // One protocol thread per worker slot: the slot's state machine, its
-    // executor over its KV partition, and its rid → reply routing table.
+    // executor over its KV partition (wrapped in the durability layer),
+    // and its rid → reply routing table.
     for (w, events_rx) in event_rxs.into_iter().enumerate() {
         let stats = stats[w].clone();
         let peers = peers.clone();
         let mut cfg = config.clone();
         cfg.workers = workers;
         cfg.worker = w;
+        let addrs = addrs.clone();
+        let slot_dir = match (&data_dir, config.storage) {
+            (Some(dir), StorageMode::Disk) => Some(dir.join(format!("slot{w}"))),
+            _ => None,
+        };
         threads.push(std::thread::spawn(move || {
             let dedup_window = cfg.dedup_window;
+            let fsync_batch = cfg.wal_fsync_batch;
+            let snapshot_every = cfg.snapshot_every;
             let mut proto = Tempo::new(id, cfg);
-            let mut exec = Executor::new(id, KvStore::new()).with_dedup_window(dedup_window);
+            // Snapshot pages fetched from a donor at startup (0 unless
+            // this is a crash-restart that needed state transfer).
+            let mut chunks_fetched: u64 = 0;
+            let (mut exec, restart_floor) = match slot_dir {
+                Some(dir) => {
+                    // An existing slot directory means this process is
+                    // *restarting* (crash-recovery); a fresh one is the
+                    // initial boot and skips state transfer.
+                    let restarting = dir.exists();
+                    let backend = FileBackend::open(&dir).expect("open slot storage dir");
+                    let (mut durable, recovery) = Durable::<KvStore>::recover(
+                        Box::new(backend),
+                        fsync_batch,
+                        snapshot_every,
+                    );
+                    let mut dedup_blob = recovery.dedup.clone();
+                    let mut floor = recovery.dot_floor(id);
+                    if restarting {
+                        // Catch up from the first survivor that answers:
+                        // manifest diff, fetch only the missing pages,
+                        // adopt the donor's dedup windows and dot floors.
+                        for (j, addr) in addrs.iter().enumerate() {
+                            if j == me {
+                                continue;
+                            }
+                            let got = fetch_slot_state(addr, w as u32, durable.store());
+                            let (manifest, pages, fetched) = match got {
+                                Some(v) => v,
+                                None => continue,
+                            };
+                            // Never regress below locally recovered state
+                            // (a donor that lags our WAL tail).
+                            if manifest.applied > durable.store().applied() {
+                                let store =
+                                    assemble::<KvStore>(&manifest, |h| pages.get(&h).cloned());
+                                if let Some(store) = store {
+                                    durable.install(
+                                        store,
+                                        &manifest.dedup,
+                                        &manifest.dot_floors,
+                                    );
+                                    dedup_blob = manifest.dedup.clone();
+                                    floor = floor.max(
+                                        manifest
+                                            .dot_floors
+                                            .iter()
+                                            .find(|(p, _)| *p == id)
+                                            .map_or(0, |(_, s)| *s),
+                                    );
+                                    chunks_fetched = fetched;
+                                }
+                            }
+                            break;
+                        }
+                    }
+                    let exec = Executor::recovered(
+                        id,
+                        durable,
+                        dedup_window,
+                        &dedup_blob,
+                        &recovery.replayed,
+                    );
+                    (exec, floor)
+                }
+                None => (
+                    Executor::new(id, Durable::memory(KvStore::new()))
+                        .with_dedup_window(dedup_window),
+                    0,
+                ),
+            };
+            if restart_floor > 0 {
+                // Floors only cover *executed* dots; the slack covers
+                // proposals that were in flight when we crashed.
+                proto.note_restart(restart_floor + RESTART_DOT_SLACK);
+            }
+            {
+                // Publish the recovered state before the first event, so
+                // digests are comparable even if no new traffic arrives.
+                let mut slot = stats.lock().unwrap();
+                slot.executed = exec.executed();
+                slot.digest = exec.state().digest();
+            }
             let mut done: DoneMap = HashMap::new();
             let start = Instant::now();
             let now_us = |s: Instant| s.elapsed().as_micros() as u64;
@@ -604,21 +887,35 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
                     matches!(&event, Event::Submit { cmd, .. } if cmd.op == Op::Read);
                 let actions = match event {
                     Event::Message { from, msg } => proto.handle(from, msg, now_us(start)),
-                    Event::Submit { cmd, done: tx } => {
+                    Event::Submit { cmd, floor, done: tx } => {
                         done.insert(cmd.rid, tx);
                         if read_submit {
                             // The local-read path: served at this replica
                             // with zero protocol messages once covered by
                             // the stability frontier (or parked until it
                             // is); only degraded reads fall back to
-                            // `submit` internally.
-                            proto.submit_read(cmd, now_us(start))
+                            // `submit` internally. The floor pins the
+                            // read no staler than the session's last
+                            // acknowledged write.
+                            proto.submit_read(cmd, floor, now_us(start))
                         } else {
                             proto.submit(cmd, now_us(start))
                         }
                     }
+                    Event::Manifest { done } => {
+                        // Serve a recovering peer: snapshot this slot's
+                        // store + dedup windows between protocol steps.
+                        let blob = exec.dedup_blob();
+                        let _ = done.send(exec.state().serve_manifest(blob));
+                        Vec::new()
+                    }
                     Event::Tick => proto.tick(now_us(start)),
-                    Event::Shutdown => break,
+                    Event::Shutdown => {
+                        // Clean shutdown syncs the group-commit window
+                        // (a kill test bypasses this, by design).
+                        exec.state_mut().flush();
+                        break;
+                    }
                 };
                 let actions = exec.absorb(actions);
                 for action in actions {
@@ -660,9 +957,9 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
                                 let _ = link.send(OutFrame::Shared(body));
                             }
                         }
-                        Action::Reply { rid, response } => {
+                        Action::Reply { rid, response, ts } => {
                             if let Some(tx) = done.remove(&rid) {
-                                let _ = tx.send((rid, response));
+                                let _ = tx.send((rid, response, ts));
                             }
                         }
                         _ => {}
@@ -678,11 +975,27 @@ pub fn start_node(id: ProcessId, config: Config, addrs: Vec<String>) -> Result<N
                 // them in so `NodeHandle::counters()` reports them.
                 slot.counters.dedup_hits = exec.dedup_hits();
                 slot.counters.read_path_bytes = read_bytes;
+                // Durability-layer counters (all 0 in Memory mode).
+                let ds = exec.state().stats();
+                slot.counters.wal_records = ds.wal_records;
+                slot.counters.snapshots_taken = ds.snapshots;
+                slot.counters.wal_fsyncs = exec.state().backend_syncs();
+                slot.counters.wal_bytes = exec.state().backend_bytes_written();
+                slot.counters.chunks_fetched = chunks_fetched;
             }
         }));
     }
 
-    Ok(NodeHandle { id, events: event_txs, workers, threads, stats, net: net_stats })
+    Ok(NodeHandle {
+        id,
+        events: event_txs,
+        workers,
+        threads,
+        addr: addrs[me].clone(),
+        closing,
+        stats,
+        net: net_stats,
+    })
 }
 
 /// A real request/response client: a [`Session`] speaking `ClientSubmit`
@@ -713,8 +1026,9 @@ pub struct TcpClient {
     /// carried (re-issuing must not re-allocate a rid — the dedup window
     /// keys on it).
     outstanding: HashMap<Rid, Command>,
-    /// Replies read off the socket while waiting for a different rid.
-    buffered: HashMap<Rid, Response>,
+    /// Replies (with their decided timestamps) read off the socket while
+    /// waiting for a different rid.
+    buffered: HashMap<Rid, (Response, u64)>,
     /// Pooled receive buffer, reused across reply frames.
     rbuf: wire::FrameBuf,
 }
@@ -756,8 +1070,12 @@ impl TcpClient {
             .collect();
         unacked.sort_by_key(|cmd| cmd.rid);
         let n = unacked.len();
+        let floor = self.session.read_floor();
         for cmd in unacked {
-            let body = wire::encode_client(&wire::ClientFrame::Submit { cmd: cmd.clone() });
+            let body = wire::encode_client(&wire::ClientFrame::Submit {
+                cmd: cmd.clone(),
+                floor: if cmd.op == Op::Read { floor } else { 0 },
+            });
             write_frame(&mut self.stream, CLIENT_FROM, &body)?;
         }
         Ok(n)
@@ -766,6 +1084,24 @@ impl TcpClient {
     /// The session identity.
     pub fn client(&self) -> ClientId {
         self.session.client()
+    }
+
+    /// The session's read-your-writes floor: the decided timestamp of its
+    /// last acknowledged write (`Session::read_floor`). Every read this
+    /// client submits is pinned no staler than this.
+    pub fn read_floor(&self) -> u64 {
+        self.session.read_floor()
+    }
+
+    /// Complete `rid`: drop it from the outstanding set and, if it was a
+    /// write, raise the session's read-your-writes floor to its decided
+    /// timestamp.
+    fn finish(&mut self, rid: Rid, ts: u64) {
+        if let Some(cmd) = self.outstanding.remove(&rid) {
+            if cmd.op != Op::Read {
+                self.session.note_write(ts);
+            }
+        }
     }
 
     /// Requests currently in flight (pipelined and not yet completed).
@@ -782,11 +1118,14 @@ impl TcpClient {
 
     /// Pipeline one command: allocate its rid, put the `ClientSubmit`
     /// frame on the wire and return immediately. Complete it (in any
-    /// order) with [`TcpClient::recv_reply`].
+    /// order) with [`TcpClient::recv_reply`]. A read carries the
+    /// session's read-your-writes floor so the node never serves it
+    /// staler than this session's last acknowledged write.
     pub fn submit_async(&mut self, keys: Vec<Key>, op: Op, payload_len: u32) -> Result<Rid> {
         let cmd = self.session.command(keys, op, payload_len);
         let rid = cmd.rid;
-        let body = wire::encode_client(&wire::ClientFrame::Submit { cmd: cmd.clone() });
+        let floor = if op == Op::Read { self.session.read_floor() } else { 0 };
+        let body = wire::encode_client(&wire::ClientFrame::Submit { cmd: cmd.clone(), floor });
         write_frame(&mut self.stream, CLIENT_FROM, &body)?;
         self.outstanding.insert(rid, cmd);
         Ok(rid)
@@ -800,16 +1139,17 @@ impl TcpClient {
     /// the closed-loop path skips them.
     pub fn recv_reply(&mut self) -> Result<(Rid, Response)> {
         if let Some(&rid) = self.buffered.keys().next() {
-            let response = self.buffered.remove(&rid).expect("buffered reply");
-            self.outstanding.remove(&rid);
+            let (response, ts) = self.buffered.remove(&rid).expect("buffered reply");
+            self.finish(rid, ts);
             return Ok((rid, response));
         }
         if self.outstanding.is_empty() {
             bail!("no outstanding requests to receive");
         }
         loop {
-            let (rid, response) = self.read_reply()?;
-            if self.outstanding.remove(&rid).is_some() {
+            let (rid, response, ts) = self.read_reply()?;
+            if self.outstanding.contains_key(&rid) {
+                self.finish(rid, ts);
                 return Ok((rid, response));
             }
             // else: stale reply for an abandoned request — skip it.
@@ -818,10 +1158,10 @@ impl TcpClient {
 
     /// Read one `ClientReply` frame off the socket (into the session's
     /// pooled buffer — no per-frame allocation).
-    fn read_reply(&mut self) -> Result<(Rid, Response)> {
+    fn read_reply(&mut self) -> Result<(Rid, Response, u64)> {
         read_frame(&mut self.stream, self.rbuf.vec())?;
         match wire::decode_client(self.rbuf.bytes())? {
-            wire::ClientFrame::Reply { rid, response } => Ok((rid, response)),
+            wire::ClientFrame::Reply { rid, response, ts } => Ok((rid, response, ts)),
             wire::ClientFrame::Submit { .. } => bail!("unexpected ClientSubmit from node"),
         }
     }
@@ -835,11 +1175,11 @@ impl TcpClient {
     pub fn submit(&mut self, keys: Vec<Key>, op: Op, payload_len: u32) -> Result<(Rid, Response)> {
         let rid = self.submit_async(keys, op, payload_len)?;
         loop {
-            if let Some(response) = self.buffered.remove(&rid) {
-                self.outstanding.remove(&rid);
+            if let Some((response, ts)) = self.buffered.remove(&rid) {
+                self.finish(rid, ts);
                 return Ok((rid, response));
             }
-            let (got, response) = match self.read_reply() {
+            let (got, response, ts) = match self.read_reply() {
                 Ok(r) => r,
                 Err(e) => {
                     self.outstanding.remove(&rid);
@@ -847,11 +1187,11 @@ impl TcpClient {
                 }
             };
             if got == rid {
-                self.outstanding.remove(&rid);
+                self.finish(rid, ts);
                 return Ok((rid, response));
             }
             if self.outstanding.contains_key(&got) {
-                self.buffered.insert(got, response);
+                self.buffered.insert(got, (response, ts));
             }
             // else: a reply for an earlier (timed-out) request — skip it.
         }

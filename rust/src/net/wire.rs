@@ -1,17 +1,19 @@
 //! Binary wire codec for Tempo protocol messages (tags 0–16 plus the
-//! epoch reconfiguration vote, tag 21) and the client service frames
-//! (tags 17–18). The offline registry has no serde,
+//! epoch reconfiguration vote, tag 21), the client service frames
+//! (tags 17–18), and the state-transfer frames (tags 22–24). The
+//! offline registry has no serde,
 //! so framing is hand-rolled: length-prefixed frames, little-endian
 //! fixed-width integers, u8 message tags. The complete frame layout —
 //! every tag, every compound encoding, and the malformed-input error
 //! contract — is documented in `docs/WIRE.md`; keep the two in sync.
 //!
-//! The two tag ranges are *strictly separated streams*: [`decode`]
-//! (protocol messages, peer connections) rejects a client tag, and
-//! [`decode_client`] (client connections) rejects a protocol tag — a
-//! frame can never cross from one plane into the other, and an `MBatch`
-//! member carrying a client frame is malformed the same way a nested
-//! batch is.
+//! The tag ranges are *strictly separated streams*: [`decode`]
+//! (protocol messages, peer connections) rejects a client or transfer
+//! tag, [`decode_client`] (client connections) rejects a protocol or
+//! transfer tag, and [`decode_transfer`] (restart state transfer)
+//! rejects everything else — a frame can never cross from one plane
+//! into another, and an `MBatch` member carrying a client or transfer
+//! frame is malformed the same way a nested batch is.
 //!
 //! **Send path (encode-once, zero-alloc).** Every encoder comes in an
 //! append-into form — [`encode_into`], [`encode_routed_into`],
@@ -61,17 +63,74 @@ pub const TAG_MERGED: u8 = 20;
 /// message like tags 0–16: legal bare, inside `MBatch`, and under a
 /// routed envelope; never on the client plane.
 pub const TAG_EPOCH: u8 = 21;
+/// Tag of the `ManifestRequest` state-transfer frame (docs/WIRE.md):
+/// `[22][slot: u32]`. Transfer-plane only — never a protocol message,
+/// never a client frame, never inside `MBatch`.
+pub const TAG_MANIFEST_REQUEST: u8 = 22;
+/// Tag of the `ManifestReply` state-transfer frame (docs/WIRE.md):
+/// `[23][slot: u32][applied: u64][n: u32][n × hash: u64][f: u16]
+/// [f × (origin: u32, floor: u64)][dlen: u32][dlen dedup bytes]`.
+pub const TAG_MANIFEST_REPLY: u8 = 23;
+/// Tag of the `Chunk` state-transfer frame (docs/WIRE.md):
+/// `[24][slot: u32][hash: u64][present: u8][len: u32][len page bytes]`.
+/// Bidirectional: a fetch request carries `present = 0` and no bytes;
+/// the donor's reply carries `present = 1` plus the page (or
+/// `present = 0` if the donor no longer holds that hash).
+pub const TAG_CHUNK: u8 = 24;
 
 /// Frames exchanged between a client session and a node over the client
 /// plane of the TCP runtime (never between protocol peers).
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClientFrame {
     /// Client → node: submit `cmd` (which carries its `Rid`) at this
-    /// replica. Tag 17.
-    Submit { cmd: Command },
+    /// replica. `floor` is the session's read-your-writes floor (the
+    /// decided timestamp of its last acknowledged write; 0 when the
+    /// session never wrote or the command is a write — only
+    /// `Protocol::submit_read` consumes it). Tag 17.
+    Submit { cmd: Command, floor: u64 },
     /// Node → client: the response for request `rid`, produced by the
-    /// coordinator's executor at execution time. Tag 18.
-    Reply { rid: Rid, response: Response },
+    /// coordinator's executor at execution time. `ts` is the command's
+    /// decided timestamp (the covering frontier value for local reads, 0
+    /// on timestamp-free protocol families) — the session raises its
+    /// read-your-writes floor to the `ts` of each acknowledged write.
+    /// Tag 18.
+    Reply { rid: Rid, response: Response, ts: u64 },
+}
+
+/// Frames of the state-transfer plane (docs/WIRE.md tags 22–24): a
+/// recovering replica dials a donor with the [`TRANSFER_FROM`] sender
+/// marker, requests the donor's per-slot snapshot manifest, diffs it
+/// against its own recovered chunks, and fetches only the pages it
+/// cannot produce locally. Strictly separated from the protocol and
+/// client planes, exactly like tags 17–20.
+///
+/// [`TRANSFER_FROM`]: super::TRANSFER_FROM
+#[derive(Clone, Debug, PartialEq)]
+pub enum TransferFrame {
+    /// Recovering replica → donor: send me worker slot `slot`'s current
+    /// manifest. Tag 22.
+    ManifestRequest { slot: u32 },
+    /// Donor → recovering replica: slot `slot`'s content-addressed
+    /// manifest — applied count, page hashes in chunk order, per-origin
+    /// dot floors, and the executor's serialized dedup windows. Tag 23.
+    ManifestReply {
+        /// Worker slot the manifest describes.
+        slot: u32,
+        /// Commands applied by the donor's store at manifest time.
+        applied: u64,
+        /// Page hashes, in `Snapshottable::to_chunks` order.
+        chunks: Vec<u64>,
+        /// Highest dot sequence the donor has durably seen per origin.
+        dot_floors: Vec<(ProcessId, u64)>,
+        /// `Executor::dedup_blob` of the donor at manifest time.
+        dedup: Vec<u8>,
+    },
+    /// Page fetch (both directions, distinguished by role): the
+    /// recovering replica sends `present = false` with empty `data` to
+    /// request `hash`; the donor replies `present = true` with the page
+    /// bytes, or `present = false` if it no longer holds the hash. Tag
+    /// 24.
+    Chunk { slot: u32, hash: u64, present: bool, data: Vec<u8> },
 }
 
 pub struct Writer {
@@ -774,22 +833,24 @@ pub fn decode_merged(buf: &[u8]) -> Result<Vec<Routed<Msg>>> {
 /// Exact encoded size of a client frame.
 pub fn client_encoded_len(frame: &ClientFrame) -> usize {
     match frame {
-        ClientFrame::Submit { cmd } => 1 + cmd_len(cmd),
-        ClientFrame::Reply { response, .. } => 1 + 16 + response_len(response),
+        ClientFrame::Submit { cmd, .. } => 1 + cmd_len(cmd) + 8,
+        ClientFrame::Reply { response, .. } => 1 + 16 + response_len(response) + 8,
     }
 }
 
 /// Append a client frame to `w`.
 pub fn encode_client_into(w: &mut Writer, frame: &ClientFrame) {
     match frame {
-        ClientFrame::Submit { cmd } => {
+        ClientFrame::Submit { cmd, floor } => {
             w.u8(TAG_CLIENT_SUBMIT);
             w.cmd(cmd);
+            w.u64(*floor);
         }
-        ClientFrame::Reply { rid, response } => {
+        ClientFrame::Reply { rid, response, ts } => {
             w.u8(TAG_CLIENT_REPLY);
             w.rid(*rid);
             w.response(response);
+            w.u64(*ts);
         }
     }
 }
@@ -802,16 +863,119 @@ pub fn encode_client(frame: &ClientFrame) -> Vec<u8> {
     w.buf
 }
 
-/// Decode a client frame (tags 17–18). A protocol tag here is an error:
-/// the client plane never carries protocol messages.
+/// Decode a client frame (tags 17–18). A protocol or transfer tag here
+/// is an error: the client plane never carries either.
 pub fn decode_client(buf: &[u8]) -> Result<ClientFrame> {
     let mut r = Reader::new(buf);
     let tag = r.u8()?;
     match tag {
-        TAG_CLIENT_SUBMIT => Ok(ClientFrame::Submit { cmd: r.cmd()? }),
-        TAG_CLIENT_REPLY => Ok(ClientFrame::Reply { rid: r.rid()?, response: r.response()? }),
+        TAG_CLIENT_SUBMIT => {
+            let cmd = r.cmd()?;
+            let floor = r.u64()?;
+            Ok(ClientFrame::Submit { cmd, floor })
+        }
+        TAG_CLIENT_REPLY => {
+            let rid = r.rid()?;
+            let response = r.response()?;
+            let ts = r.u64()?;
+            Ok(ClientFrame::Reply { rid, response, ts })
+        }
         x if x <= 16 => bail!("protocol frame tag {x} in client stream"),
+        x if (TAG_MANIFEST_REQUEST..=TAG_CHUNK).contains(&x) => {
+            bail!("transfer frame tag {x} in client stream")
+        }
         x => bail!("bad client frame tag {x}"),
+    }
+}
+
+/// Exact encoded size of a transfer frame.
+pub fn transfer_encoded_len(frame: &TransferFrame) -> usize {
+    match frame {
+        TransferFrame::ManifestRequest { .. } => 1 + 4,
+        TransferFrame::ManifestReply { chunks, dot_floors, dedup, .. } => {
+            1 + 4 + 8 + 4 + 8 * chunks.len() + 2 + 12 * dot_floors.len() + 4 + dedup.len()
+        }
+        TransferFrame::Chunk { data, .. } => 1 + 4 + 8 + 1 + 4 + data.len(),
+    }
+}
+
+/// Encode a state-transfer frame (without the length prefix).
+pub fn encode_transfer(frame: &TransferFrame) -> Vec<u8> {
+    let mut w = Writer::with_capacity(transfer_encoded_len(frame));
+    match frame {
+        TransferFrame::ManifestRequest { slot } => {
+            w.u8(TAG_MANIFEST_REQUEST);
+            w.u32(*slot);
+        }
+        TransferFrame::ManifestReply { slot, applied, chunks, dot_floors, dedup } => {
+            w.u8(TAG_MANIFEST_REPLY);
+            w.u32(*slot);
+            w.u64(*applied);
+            w.u32(chunks.len() as u32);
+            for &h in chunks {
+                w.u64(h);
+            }
+            w.u16(dot_floors.len() as u16);
+            for &(p, floor) in dot_floors {
+                w.u32(p.0);
+                w.u64(floor);
+            }
+            w.u32(dedup.len() as u32);
+            w.buf.extend_from_slice(dedup);
+        }
+        TransferFrame::Chunk { slot, hash, present, data } => {
+            w.u8(TAG_CHUNK);
+            w.u32(*slot);
+            w.u64(*hash);
+            w.u8(*present as u8);
+            w.u32(data.len() as u32);
+            w.buf.extend_from_slice(data);
+        }
+    }
+    w.buf
+}
+
+/// Decode a state-transfer frame (tags 22–24). Any other plane's tag —
+/// protocol, client, routed, merged — is an error: the transfer plane is
+/// as strictly separated as the others.
+pub fn decode_transfer(buf: &[u8]) -> Result<TransferFrame> {
+    let mut r = Reader::new(buf);
+    let tag = r.u8()?;
+    match tag {
+        TAG_MANIFEST_REQUEST => Ok(TransferFrame::ManifestRequest { slot: r.u32()? }),
+        TAG_MANIFEST_REPLY => {
+            let slot = r.u32()?;
+            let applied = r.u64()?;
+            let n = r.u32()? as usize;
+            // Bounds-checked up front: a hostile count larger than the
+            // frame is a truncation error before any allocation.
+            let mut chunks = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                chunks.push(r.u64()?);
+            }
+            let f = r.u16()? as usize;
+            let mut dot_floors = Vec::with_capacity(f);
+            for _ in 0..f {
+                dot_floors.push((ProcessId(r.u32()?), r.u64()?));
+            }
+            let dlen = r.u32()? as usize;
+            let dedup = r.take(dlen)?.to_vec();
+            Ok(TransferFrame::ManifestReply { slot, applied, chunks, dot_floors, dedup })
+        }
+        TAG_CHUNK => {
+            let slot = r.u32()?;
+            let hash = r.u64()?;
+            let present = match r.u8()? {
+                0 => false,
+                1 => true,
+                x => bail!("bad chunk present byte {x}"),
+            };
+            let len = r.u32()? as usize;
+            let data = r.take(len)?.to_vec();
+            Ok(TransferFrame::Chunk { slot, hash, present, data })
+        }
+        x if x <= TAG_EPOCH => bail!("non-transfer frame tag {x} in transfer stream"),
+        x => bail!("bad transfer frame tag {x}"),
     }
 }
 
@@ -900,6 +1064,9 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
                     }
                     Some(&TAG_ROUTED) => bail!("routed envelope inside MBatch"),
                     Some(&TAG_MERGED) => bail!("merged frame inside MBatch"),
+                    Some(&t) if (TAG_MANIFEST_REQUEST..=TAG_CHUNK).contains(&t) => {
+                        bail!("transfer frame tag {t} inside MBatch")
+                    }
                     _ => {}
                 }
                 let mut sub = Reader::new(body);
@@ -925,6 +1092,9 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
         }
         TAG_ROUTED => bail!("routed envelope where a bare protocol message was expected"),
         TAG_MERGED => bail!("merged frame where a bare protocol message was expected"),
+        x if (TAG_MANIFEST_REQUEST..=TAG_CHUNK).contains(&x) => {
+            bail!("transfer frame tag {x} in protocol stream")
+        }
         x => bail!("bad message tag {x}"),
     };
     Ok(msg)
@@ -1128,7 +1298,7 @@ mod tests {
     #[test]
     fn client_frames_roundtrip() {
         let cmd = Command::new(Rid::new(ClientId(7), 3), vec![1, 99], Op::Put, 256);
-        let submit = ClientFrame::Submit { cmd };
+        let submit = ClientFrame::Submit { cmd, floor: 41 };
         let bytes = encode_client(&submit);
         assert_eq!(bytes[0], TAG_CLIENT_SUBMIT);
         assert_eq!(decode_client(&bytes).expect("decode submit"), submit);
@@ -1136,6 +1306,7 @@ mod tests {
         let reply = ClientFrame::Reply {
             rid: Rid::new(ClientId(7), 3),
             response: Response { versions: vec![(1, 4), (99, 17)] },
+            ts: 77,
         };
         let bytes = encode_client(&reply);
         assert_eq!(bytes[0], TAG_CLIENT_REPLY);
@@ -1143,6 +1314,7 @@ mod tests {
         let empty = ClientFrame::Reply {
             rid: Rid::new(ClientId(0), 1),
             response: Response { versions: vec![] },
+            ts: 0,
         };
         assert_eq!(decode_client(&encode_client(&empty)).unwrap(), empty);
     }
@@ -1151,10 +1323,11 @@ mod tests {
     fn client_frames_fail_cleanly_on_malformed_input() {
         let cmd = Command::new(Rid::new(ClientId(7), 3), vec![1, 99], Op::Put, 64);
         for frame in [
-            ClientFrame::Submit { cmd },
+            ClientFrame::Submit { cmd, floor: 9 },
             ClientFrame::Reply {
                 rid: Rid::new(ClientId(2), 9),
                 response: Response { versions: vec![(5, 1)] },
+                ts: 3,
             },
         ] {
             let bytes = encode_client(&frame);
@@ -1170,11 +1343,12 @@ mod tests {
         let dot = Dot::new(ProcessId(1), 2);
         let cmd = Command::new(Rid::new(ClientId(7), 3), vec![1], Op::Put, 8);
         // A client frame in the protocol stream is an error...
-        let submit = encode_client(&ClientFrame::Submit { cmd });
+        let submit = encode_client(&ClientFrame::Submit { cmd, floor: 0 });
         assert!(decode(&submit).is_err(), "ClientSubmit must not decode as a Msg");
         let reply = encode_client(&ClientFrame::Reply {
             rid: Rid::new(ClientId(1), 1),
             response: Response { versions: vec![] },
+            ts: 0,
         });
         assert!(decode(&reply).is_err(), "ClientReply must not decode as a Msg");
         // ... and a protocol frame in the client stream is an error.
@@ -1189,10 +1363,12 @@ mod tests {
         for member in [
             encode_client(&ClientFrame::Submit {
                 cmd: Command::new(Rid::new(ClientId(1), 1), vec![3], Op::Put, 4),
+                floor: 0,
             }),
             encode_client(&ClientFrame::Reply {
                 rid: Rid::new(ClientId(1), 1),
                 response: Response { versions: vec![(3, 1)] },
+                ts: 5,
             }),
         ] {
             let mut w = Writer::new();
@@ -1209,7 +1385,7 @@ mod tests {
         // A cmd whose payload_len claims more bytes than the frame holds
         // must error without allocating.
         let cmd = Command::new(Rid::new(ClientId(1), 1), vec![3], Op::Put, 8);
-        let mut bytes = encode_client(&ClientFrame::Submit { cmd });
+        let mut bytes = encode_client(&ClientFrame::Submit { cmd, floor: 0 });
         // Layout: tag(1) + rid(16) + op(1) → payload_len at offset 18.
         bytes[18..22].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_client(&bytes).is_err(), "hostile payload_len must fail");
@@ -1291,13 +1467,110 @@ mod tests {
     fn client_encoded_len_is_exact() {
         let cmd = Command::new(Rid::new(ClientId(7), 3), vec![1, 99], Op::Put, 256);
         for frame in [
-            ClientFrame::Submit { cmd },
+            ClientFrame::Submit { cmd, floor: 12 },
             ClientFrame::Reply {
                 rid: Rid::new(ClientId(7), 3),
                 response: Response { versions: vec![(1, 4), (99, 17)] },
+                ts: 7,
             },
         ] {
             assert_eq!(client_encoded_len(&frame), encode_client(&frame).len());
+        }
+    }
+
+    fn sample_transfer_frames() -> Vec<TransferFrame> {
+        vec![
+            TransferFrame::ManifestRequest { slot: 3 },
+            TransferFrame::ManifestReply {
+                slot: 1,
+                applied: 4096,
+                chunks: vec![0xDEAD_BEEF, 0, u64::MAX],
+                dot_floors: vec![(ProcessId(0), 17), (ProcessId(4), 99)],
+                dedup: vec![1, 2, 3, 4, 5],
+            },
+            TransferFrame::ManifestReply {
+                slot: 0,
+                applied: 0,
+                chunks: vec![],
+                dot_floors: vec![],
+                dedup: vec![],
+            },
+            TransferFrame::Chunk { slot: 2, hash: 0xFACE, present: false, data: vec![] },
+            TransferFrame::Chunk { slot: 2, hash: 0xFACE, present: true, data: vec![9; 300] },
+        ]
+    }
+
+    #[test]
+    fn transfer_frames_roundtrip_with_exact_lengths() {
+        for frame in sample_transfer_frames() {
+            let bytes = encode_transfer(&frame);
+            assert_eq!(
+                transfer_encoded_len(&frame),
+                bytes.len(),
+                "transfer_encoded_len out of sync for {frame:?}"
+            );
+            assert_eq!(decode_transfer(&bytes).expect("decode transfer"), frame);
+        }
+    }
+
+    #[test]
+    fn transfer_frames_fail_cleanly_on_malformed_input() {
+        for frame in sample_transfer_frames() {
+            let bytes = encode_transfer(&frame);
+            for cut in 0..bytes.len() {
+                assert!(decode_transfer(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+            }
+        }
+        assert!(decode_transfer(&[200]).is_err(), "unknown tag must fail");
+        // A hostile chunk count larger than the frame is a truncation
+        // error, not an allocation.
+        let mut bytes = encode_transfer(&TransferFrame::ManifestReply {
+            slot: 0,
+            applied: 1,
+            chunks: vec![7],
+            dot_floors: vec![],
+            dedup: vec![],
+        });
+        // Layout: tag(1) + slot(4) + applied(8) → chunk count at 13.
+        bytes[13..17].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_transfer(&bytes).is_err(), "hostile chunk count must fail");
+        // A corrupt present byte must error, not decode as a bool.
+        let mut bytes =
+            encode_transfer(&TransferFrame::Chunk { slot: 0, hash: 1, present: true, data: vec![] });
+        bytes[13] = 9; // tag(1) + slot(4) + hash(8) → present byte at 13
+        assert!(decode_transfer(&bytes).is_err(), "bad present byte must fail");
+    }
+
+    #[test]
+    fn transfer_plane_is_strictly_separated() {
+        let dot = Dot::new(ProcessId(1), 2);
+        for frame in sample_transfer_frames() {
+            let bytes = encode_transfer(&frame);
+            // A transfer frame decodes on no other plane...
+            assert!(decode(&bytes).is_err(), "transfer frame must not decode as a Msg");
+            assert!(decode_client(&bytes).is_err(), "transfer frame is not a client frame");
+            assert!(decode_routed(&bytes).is_err(), "transfer frame is not a routed frame");
+            assert!(decode_merged(&bytes).is_err(), "transfer frame is not a merged frame");
+            // ... and an MBatch member with a transfer tag fails from the
+            // tag peek, exactly like nested batches and client frames.
+            let mut w = Writer::new();
+            w.u8(16);
+            w.u16(1);
+            w.u32(bytes.len() as u32);
+            w.buf.extend_from_slice(&bytes);
+            assert!(decode(&w.buf).is_err(), "transfer frame inside MBatch must fail");
+        }
+        // No other plane's frame decodes as a transfer frame.
+        for bytes in [
+            encode(&Msg::MStable { dot }),
+            encode(&Msg::MEpoch { epoch: 1, evicted: vec![] }),
+            encode_client(&ClientFrame::Submit {
+                cmd: Command::new(Rid::new(ClientId(1), 1), vec![3], Op::Put, 4),
+                floor: 0,
+            }),
+            encode_routed(&Routed { worker: 0, msg: Msg::MStable { dot } }),
+        ] {
+            assert!(decode_transfer(&bytes).is_err(), "cross-plane frame must not decode");
         }
     }
 

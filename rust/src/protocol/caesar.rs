@@ -683,8 +683,9 @@ impl Protocol for Caesar {
     }
 
     /// Caesar's whitelist watermark is not a read frontier: reads run
-    /// through the full timestamp-consensus path (counted as slow reads).
-    fn submit_read(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+    /// through the full timestamp-consensus path (counted as slow reads),
+    /// which serializes them after the session's writes — floor moot.
+    fn submit_read(&mut self, cmd: Command, _floor: u64, time: u64) -> Vec<Action<Msg>> {
         self.counters.slow_reads += 1;
         self.submit(cmd, time)
     }

@@ -62,6 +62,12 @@ impl<M> BaseProcess<M> {
         self.dots.next()
     }
 
+    /// Crash-recovery guard: never mint a dot with sequence `<= floor`
+    /// again (see [`crate::protocol::Protocol::note_restart`]).
+    pub fn advance_dots_past(&mut self, floor: u64) {
+        self.dots.advance_past(floor);
+    }
+
     /// Shard-local process-id base (`group * r`).
     pub fn group_base(&self) -> u32 {
         self.group.0 * self.config.r as u32

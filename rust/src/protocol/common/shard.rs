@@ -130,7 +130,7 @@ impl<P: Protocol> Sharded<P> {
                 Action::ExecuteRead { cmd, covered, slack } => {
                     Action::ExecuteRead { cmd, covered, slack }
                 }
-                Action::Reply { rid, response } => Action::Reply { rid, response },
+                Action::Reply { rid, response, ts } => Action::Reply { rid, response, ts },
                 Action::Committed { dot, fast } => Action::Committed { dot, fast },
                 Action::RecoveryStarted { dot } => Action::RecoveryStarted { dot },
             })
@@ -194,7 +194,12 @@ impl<P: Protocol> Protocol for Sharded<P> {
     /// slot's inner instance, so the `(worker slot, timestamp)` parking
     /// key of the design falls out of the routing. Spanning key sets are
     /// rejected loudly, exactly like [`Sharded::submit`].
-    fn submit_read(&mut self, cmd: Command, time_us: u64) -> Vec<Action<Self::Message>> {
+    fn submit_read(
+        &mut self,
+        cmd: Command,
+        floor: u64,
+        time_us: u64,
+    ) -> Vec<Action<Self::Message>> {
         let n = self.slots.len();
         let w = match worker_of_cmd(&cmd, n) {
             Ok(w) => w,
@@ -205,7 +210,7 @@ impl<P: Protocol> Protocol for Sharded<P> {
                 cmd.rid
             ),
         };
-        Self::lift(w as u32, self.slots[w].submit_read(cmd, time_us))
+        Self::lift(w as u32, self.slots[w].submit_read(cmd, floor, time_us))
     }
 
     /// Route by the envelope tag: sender slot `w` talks to our slot `w`.
@@ -243,6 +248,12 @@ impl<P: Protocol> Protocol for Sharded<P> {
     fn suspect(&mut self, p: ProcessId) {
         for s in &mut self.slots {
             s.suspect(p);
+        }
+    }
+
+    fn note_restart(&mut self, dot_floor: u64) {
+        for s in &mut self.slots {
+            s.note_restart(dot_floor);
         }
     }
 

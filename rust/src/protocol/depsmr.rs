@@ -1111,8 +1111,9 @@ macro_rules! dep_protocol {
             }
 
             /// No stability frontier: reads run through the full
-            /// dependency-ordering path (counted as slow reads).
-            fn submit_read(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+            /// dependency-ordering path (counted as slow reads), which
+            /// serializes them after the session's writes — floor moot.
+            fn submit_read(&mut self, cmd: Command, _floor: u64, time: u64) -> Vec<Action<Msg>> {
                 self.0.counters.slow_reads += 1;
                 self.submit(cmd, time)
             }

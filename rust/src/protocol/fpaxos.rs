@@ -420,8 +420,9 @@ impl Protocol for FPaxos {
     }
 
     /// No stability frontier: reads run through the leader's log like any
-    /// other command (counted as slow reads).
-    fn submit_read(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+    /// other command (counted as slow reads). The ordering path serializes
+    /// the read after the session's own writes, so the floor is moot.
+    fn submit_read(&mut self, cmd: Command, _floor: u64, time: u64) -> Vec<Action<Msg>> {
         self.counters.slow_reads += 1;
         self.submit(cmd, time)
     }

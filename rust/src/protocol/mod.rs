@@ -83,8 +83,11 @@ pub enum Action<M> {
     ExecuteRead { cmd: Command, covered: u64, slack: bool },
     /// The response for request `rid`, emitted by the replica's executor
     /// at the command's coordinator (`dot.origin`) only — the runtimes
-    /// route it back to the issuing client session.
-    Reply { rid: Rid, response: Response },
+    /// route it back to the issuing client session. `ts` is the decided
+    /// timestamp the command executed under (a local read reports its
+    /// covered target, timestamp-free families report 0): sessions use it
+    /// as their read-your-writes floor.
+    Reply { rid: Rid, response: Response, ts: u64 },
     /// The command reached the COMMIT phase locally (metrics only).
     Committed { dot: Dot, fast: bool },
     /// A recovery was started for `dot` (metrics only).
@@ -96,6 +99,16 @@ impl<M> Action<M> {
         Action::Send { to, msg }
     }
 }
+
+/// Safety margin the runtimes add on top of the recovered dot floor when
+/// restarting a replica ([`Protocol::note_restart`]). The WAL and peer
+/// manifests only prove floors for dots that *executed*; a dot minted and
+/// broadcast just before the crash may live on in peers' consensus state
+/// without appearing in any floor. Skipping this many extra sequence
+/// numbers makes re-minting such a dot (and binding it to a different
+/// command) impossible in practice — sequences are u64, so the skip costs
+/// nothing.
+pub const RESTART_DOT_SLACK: u64 = 1 << 20;
 
 /// A deterministic message-driven replication protocol.
 pub trait Protocol: Sized {
@@ -119,10 +132,21 @@ pub trait Protocol: Sized {
     /// Protocols with a stability frontier (Tempo) override this to serve
     /// the read locally — no broadcast, no quorum, no dot — releasing it
     /// via [`Action::ExecuteRead`] once the frontier covers its
-    /// timestamp. The default degrades to [`Protocol::submit`]: the read
-    /// runs as an ordinary command through the full ordering path (a
-    /// "slow read"), which is correct for every family.
-    fn submit_read(&mut self, cmd: Command, time_us: u64) -> Vec<Action<Self::Message>> {
+    /// timestamp. `floor` is the session's read-your-writes watermark
+    /// (the decided timestamp of its last acknowledged write, 0 for
+    /// none): the read must observe state at least that fresh, so a
+    /// frontier-serving protocol clamps the read's target timestamp up to
+    /// it. The default degrades to [`Protocol::submit`]: the read runs as
+    /// an ordinary command through the full ordering path (a "slow
+    /// read"), which serializes after the session's own writes and so
+    /// satisfies any floor for free.
+    fn submit_read(
+        &mut self,
+        cmd: Command,
+        floor: u64,
+        time_us: u64,
+    ) -> Vec<Action<Self::Message>> {
+        let _ = floor;
         self.submit(cmd, time_us)
     }
 
@@ -141,6 +165,14 @@ pub trait Protocol: Sized {
     /// Marks a process as crashed for the rest of the run. Runtimes stop
     /// delivering to it; the default needs no protocol action.
     fn crash(&mut self) {}
+
+    /// Crash-*recovery* hook: a freshly constructed instance is told the
+    /// highest own-origin dot sequence its pre-crash incarnation is known
+    /// to have minted (from the recovered WAL/snapshot floors plus peer
+    /// manifests). The instance must never re-mint a dot `<= floor` —
+    /// peers may hold state for those. The default is a no-op for
+    /// protocols whose runtimes never restart them.
+    fn note_restart(&mut self, _dot_floor: u64) {}
 
     /// Failure-detector input: `p` is suspected to have crashed
     /// (drives Ω leader election where the protocol needs it).

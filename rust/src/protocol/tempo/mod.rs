@@ -1443,7 +1443,7 @@ impl Protocol for Tempo {
     /// proposals/bumps of writes that eventually commit with final
     /// timestamp >= `v`, and their commit bumps push every group member's
     /// promises — and hence the majority watermark — to `v`.
-    fn submit_read(&mut self, cmd: Command, time: u64) -> Vec<Action<Msg>> {
+    fn submit_read(&mut self, cmd: Command, floor: u64, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
         if self.bp.crashed {
             return out;
@@ -1454,13 +1454,18 @@ impl Protocol for Tempo {
             self.counters.slow_reads += 1;
             return self.submit(cmd, time);
         }
+        // Read-your-writes: the session's last acked write decided at
+        // `floor`, so the read's timestamp — and, below, its release
+        // target — must not sit under it, whatever the local clock or the
+        // staleness slack would otherwise allow.
         let ts = cmd
             .keys
             .iter()
             .map(|&k| self.keys.get(&k).map_or(0, |s| s.clock.value()))
             .max()
-            .unwrap_or(0);
-        let target = ts.saturating_sub(self.bp.config.read_slack);
+            .unwrap_or(0)
+            .max(floor);
+        let target = ts.saturating_sub(self.bp.config.read_slack).max(floor);
         if self.read_covered(&cmd, target) {
             let slack = target < ts && !self.read_covered(&cmd, ts);
             if slack {
@@ -1608,6 +1613,17 @@ impl Protocol for Tempo {
 
     fn crash(&mut self) {
         self.bp.crashed = true;
+    }
+
+    fn note_restart(&mut self, dot_floor: u64) {
+        // Never re-mint a dot the pre-crash incarnation may have proposed:
+        // peers hold per-dot commands/promises keyed by (origin, seq), and
+        // a recycled seq would attach a *different* command to an existing
+        // identity. The floor comes from the recovered WAL/snapshot plus
+        // peer manifests and so covers every *executed* dot; proposals
+        // still in flight at the crash are covered by the runtime's slack
+        // (`crate::protocol::RESTART_DOT_SLACK`).
+        self.bp.advance_dots_past(dot_floor);
     }
 
     fn suspect(&mut self, p: ProcessId) {

@@ -36,11 +36,13 @@ pub use topology::Topology;
 use crate::client::Session;
 use crate::core::{
     key_to_shard, ClientId, Command, Completion, Config, Dot, Op, ProcessId, Response, Rid,
+    StorageMode,
 };
 use crate::executor::Executor;
 use crate::metrics::{Counters, RunMetrics};
-use crate::protocol::{Action, Footprint, Protocol};
-use crate::store::KvStore;
+use crate::protocol::{Action, Footprint, Protocol, RESTART_DOT_SLACK};
+use crate::store::storage::{assemble, plan_transfer, Durable, MemBackend, Recovery};
+use crate::store::{KvStore, StateMachine};
 use crate::util::Rng;
 use crate::workload::batching::Batcher;
 use crate::workload::Workload;
@@ -69,8 +71,21 @@ pub struct SimOpts {
     pub record_execution: bool,
     /// Crash schedule: (time, process).
     pub crashes: Vec<(u64, ProcessId)>,
+    /// Restart schedule: (time, process) — each restarts a previously
+    /// crashed process from its storage backend (crash-recovery fault
+    /// model; merged with `nemesis.restarts`). Under `StorageMode::Disk`
+    /// the process recovers snapshot + WAL tail from its surviving
+    /// [`MemBackend`]; under `Memory` it comes back empty. Either way it
+    /// then state-transfers the diff from a live shard peer (unless
+    /// `transfer_on_restart` is off) and rejoins.
+    pub restarts: Vec<(u64, ProcessId)>,
     /// Failure-detection delay after a crash.
     pub suspect_delay_us: u64,
+    /// Negative knob: skip the manifest-diff state transfer on restart.
+    /// A replica that crashed with unsynced WAL records (or snapshots
+    /// behind its peers) then rejoins stale — the recovery oracle's
+    /// divergence check exists to catch exactly this.
+    pub transfer_on_restart: bool,
     /// Link-fault plan (partitions, delay spikes, reorder, duplicate,
     /// drop) plus extra crashes; empty by default. Fault decisions draw
     /// from the run's seeded RNG only while a window is active, so a run
@@ -98,7 +113,9 @@ impl SimOpts {
             batching: None,
             record_execution: false,
             crashes: Vec::new(),
+            restarts: Vec::new(),
             suspect_delay_us: 500_000,
+            transfer_on_restart: true,
             nemesis: Nemesis::default(),
             encode_once: false,
         }
@@ -123,6 +140,43 @@ pub struct ReadAudit {
     pub cmd: Command,
 }
 
+/// One crash-restart recovery, recorded for the recovery oracle
+/// (`check::check_recovery`). Captures what the replica lost at the
+/// crash, what it rebuilt locally from snapshot + WAL tail, and what the
+/// manifest-diff state transfer contributed.
+#[derive(Clone, Debug)]
+pub struct RecoveryAudit {
+    /// The restarted process and the simulated restart instant.
+    pub process: ProcessId,
+    pub at_us: u64,
+    /// Store digest / applied count at the crash instant (what a
+    /// loss-free recovery would reproduce).
+    pub pre_crash_digest: u64,
+    pub pre_crash_applied: u64,
+    /// WAL records in the group-commit window the crash destroyed.
+    pub wal_lost: u64,
+    /// Store digest / applied count after *local* recovery only
+    /// (snapshot + valid WAL tail, before any state transfer).
+    pub recovered_digest: u64,
+    pub recovered_applied: u64,
+    /// Applied count the snapshot manifest claimed.
+    pub snapshot_applied: u64,
+    /// WAL tail records replayed on top of the snapshot.
+    pub wal_replayed: u64,
+    /// The donor replica (None: no live shard peer, or transfer disabled)
+    /// and its store digest at transfer time.
+    pub peer: Option<ProcessId>,
+    pub peer_digest: u64,
+    /// Donor pages fetched vs. produced locally during the transfer.
+    pub chunks_fetched: u64,
+    pub chunks_reused: u64,
+    /// Store digest after recovery + transfer — what the replica rejoins
+    /// with; must equal `peer_digest` when a transfer happened.
+    pub post_digest: u64,
+    /// Rids re-seeded into the executor's dedup windows (blob + replay).
+    pub dedup_seeded: usize,
+}
+
 /// Result of a run: metrics plus optional test-oracle material.
 #[derive(Clone, Debug, Default)]
 pub struct SimResult {
@@ -145,6 +199,9 @@ pub struct SimResult {
     /// `(epoch, cumulative evicted set)` entries each process installed,
     /// in install order. Fault-free runs report `[(0, [])]` everywhere.
     pub epoch_views: Vec<Vec<(u64, Vec<ProcessId>)>>,
+    /// One entry per crash-restart recovery, in restart order (always
+    /// recorded — restarts are rare and the audit is small).
+    pub recoveries: Vec<RecoveryAudit>,
 }
 
 #[derive(Clone, Debug)]
@@ -158,6 +215,9 @@ enum Event<M> {
     /// Session failover: the client re-issues an unacked rid at a
     /// surviving replica after its coordinator crashed.
     ClientRetry { rid: Rid },
+    /// Crash-recovery: the process comes back, recovers from its storage
+    /// backend, state-transfers the diff from a live peer, and rejoins.
+    Restart { p: ProcessId },
 }
 
 /// Heap key: `(time, kind rank, actor, co-actor, sequence)`.
@@ -193,8 +253,19 @@ pub struct Simulation<P: Protocol, W: Workload> {
     procs: Vec<P>,
     dead: Vec<bool>,
     /// Per-replica executors: apply `Action::Execute` to the replicated
-    /// KV store and emit `Action::Reply` at the coordinator.
-    executors: Vec<Executor<KvStore>>,
+    /// KV store and emit `Action::Reply` at the coordinator. The store is
+    /// always wrapped in [`Durable`] — under `StorageMode::Memory` (the
+    /// default) with an inert backend, so nothing changes; under `Disk`
+    /// with a deterministic in-memory [`MemBackend`] that models the
+    /// machine's disk (survives the crash, loses the unsynced WAL tail).
+    executors: Vec<Executor<Durable<KvStore>>>,
+    /// The simulated disks, indexed like `procs`; kept outside the
+    /// executors so a crash can destroy the executor while the disk
+    /// survives for [`Durable::recover`].
+    backends: Vec<MemBackend>,
+    /// (digest, applied, wal_lost) captured at each crash instant, for
+    /// the recovery audit of a later restart.
+    pre_crash: HashMap<ProcessId, (u64, u64, u64)>,
     /// One session per closed-loop client: allocates the rifl-style
     /// request ids commands carry.
     sessions: Vec<Session>,
@@ -226,9 +297,19 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         );
         let n = config.n_processes();
         let procs: Vec<P> = (0..n).map(|i| P::new(ProcessId(i as u32), config.clone())).collect();
+        let backends: Vec<MemBackend> = (0..n).map(|_| MemBackend::new()).collect();
         let executors = (0..n)
             .map(|i| {
-                Executor::new(ProcessId(i as u32), KvStore::new())
+                let sm = match config.storage {
+                    StorageMode::Memory => Durable::memory(KvStore::new()),
+                    StorageMode::Disk => Durable::new(
+                        KvStore::new(),
+                        Box::new(backends[i].clone()),
+                        config.wal_fsync_batch,
+                        config.snapshot_every,
+                    ),
+                };
+                Executor::new(ProcessId(i as u32), sm)
                     .with_dedup_window(config.dedup_window)
             })
             .collect();
@@ -251,6 +332,8 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             procs,
             dead: vec![false; n],
             executors,
+            backends,
+            pre_crash: HashMap::new(),
             sessions,
             resources,
             heap: BinaryHeap::new(),
@@ -307,6 +390,13 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             Event::ClientRetry { rid } => {
                 (time, 6, rid.client().0 as u32, rid.seq() as u32, rid.seq() >> 32)
             }
+            // A restart happens after everything else at its instant: the
+            // recovered state observes all same-instant deliveries to the
+            // rest of the cluster.
+            Event::Restart { p } => {
+                self.aux_seq += 1;
+                (time, 7, p.0, 0, self.aux_seq)
+            }
         };
         self.heap.push(Reverse(key));
         self.payloads.insert(key, ev);
@@ -330,6 +420,11 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         crashes.extend(self.opts.nemesis.crashes.iter().copied());
         for (t, p) in crashes {
             self.push(t, Event::Crash { p });
+        }
+        let mut restarts = self.opts.restarts.clone();
+        restarts.extend(self.opts.nemesis.restarts.iter().copied());
+        for (t, p) in restarts {
+            self.push(t, Event::Restart { p });
         }
 
         while let Some(Reverse(key)) = self.heap.pop() {
@@ -393,6 +488,17 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             Event::Crash { p } => {
                 self.dead[p.0 as usize] = true;
                 self.procs[p.0 as usize].crash();
+                // The machine's memory is gone; its disk survives minus
+                // the unsynced group-commit window. Capture what a
+                // loss-free recovery would have to reproduce.
+                let idx = p.0 as usize;
+                let digest = self.executors[idx].state().digest();
+                let applied = self.executors[idx].state().applied();
+                let lost = match self.config.storage {
+                    StorageMode::Disk => self.backends[idx].crash(),
+                    StorageMode::Memory => 0,
+                };
+                self.pre_crash.insert(p, (digest, applied, lost));
                 let delay = self.opts.suspect_delay_us;
                 for q in 0..self.procs.len() {
                     if !self.dead[q] {
@@ -427,6 +533,119 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             Event::ClientRetry { rid } => {
                 self.client_retry(rid, time);
             }
+            Event::Restart { p } => {
+                self.restart_process(p, time);
+            }
+        }
+    }
+
+    /// Crash-recovery: rebuild the executor of `p` from its surviving
+    /// backend (snapshot + valid WAL tail), fetch the state diff from a
+    /// live shard peer via a manifest diff, re-seed the dedup windows, and
+    /// hand a *fresh* protocol instance a dot floor it must never re-mint
+    /// under. The pre-crash protocol state is gone — exactly the
+    /// crash-recovery model: disks survive, memory does not.
+    fn restart_process(&mut self, p: ProcessId, time: u64) {
+        let idx = p.0 as usize;
+        if !self.dead[idx] {
+            return; // restarting a live process is a no-op
+        }
+        let (pre_digest, pre_applied, wal_lost) =
+            self.pre_crash.remove(&p).unwrap_or((0, 0, 0));
+        // 1. Local recovery from the surviving disk.
+        let (mut durable, recovery) = match self.config.storage {
+            StorageMode::Disk => Durable::<KvStore>::recover(
+                Box::new(self.backends[idx].clone()),
+                self.config.wal_fsync_batch,
+                self.config.snapshot_every,
+            ),
+            StorageMode::Memory => (Durable::memory(KvStore::new()), Recovery::default()),
+        };
+        let recovered_digest = durable.digest();
+        let recovered_applied = durable.applied();
+        // 2. Manifest-diff state transfer from a live peer of the shard.
+        let shard = self.config.shard_of(p);
+        let donor = self
+            .config
+            .shard_processes(shard)
+            .into_iter()
+            .find(|q| *q != p && !self.dead[q.0 as usize])
+            .filter(|_| self.opts.transfer_on_restart);
+        let mut audit = RecoveryAudit {
+            process: p,
+            at_us: time,
+            pre_crash_digest: pre_digest,
+            pre_crash_applied: pre_applied,
+            wal_lost,
+            recovered_digest,
+            recovered_applied,
+            snapshot_applied: recovery.snapshot_applied,
+            wal_replayed: recovery.wal_replayed,
+            peer: donor,
+            peer_digest: 0,
+            chunks_fetched: 0,
+            chunks_reused: 0,
+            post_digest: recovered_digest,
+            dedup_seeded: 0,
+        };
+        let mut dedup_blob = recovery.dedup;
+        let mut dot_floor = recovery.dot_floor(p);
+        if let Some(q) = donor {
+            let qi = q.0 as usize;
+            audit.peer_digest = self.executors[qi].state().digest();
+            let donor_blob = self.executors[qi].dedup_blob();
+            let (manifest, pages) = self.executors[qi].state().serve_manifest(donor_blob);
+            let plan = plan_transfer(durable.store(), &manifest);
+            audit.chunks_fetched = plan.need.len() as u64;
+            audit.chunks_reused = (manifest.chunks.len() - plan.need.len()) as u64;
+            let donor_pages: HashMap<u64, &Vec<u8>> =
+                manifest.chunks.iter().copied().zip(pages.iter()).collect();
+            let store: KvStore = assemble(&manifest, |h| {
+                plan.local.get(&h).cloned().or_else(|| donor_pages.get(&h).map(|pg| (*pg).clone()))
+            })
+            .expect("the donor serves every page of its own manifest");
+            for (origin, seq) in &manifest.dot_floors {
+                if *origin == p {
+                    dot_floor = dot_floor.max(*seq);
+                }
+            }
+            durable.install(store, &manifest.dedup, &manifest.dot_floors);
+            // The donor's windows are the freshest exactly-once state:
+            // they cover everything the cluster applied, including the
+            // records our own WAL lost.
+            dedup_blob = manifest.dedup;
+        }
+        audit.post_digest = durable.digest();
+        // 3. Rebuild the executor around the recovered machine.
+        let exec = Executor::recovered(
+            p,
+            durable,
+            self.config.dedup_window,
+            &dedup_blob,
+            &recovery.replayed,
+        );
+        audit.dedup_seeded = exec.dedup_len();
+        self.executors[idx] = exec;
+        // 4. A fresh protocol instance that will never re-mint a dot its
+        // pre-crash incarnation minted (floor from WAL + peer manifests,
+        // plus slack for in-flight proposals the floors cannot see).
+        let mut proc = P::new(p, self.config.clone());
+        proc.note_restart(dot_floor + RESTART_DOT_SLACK);
+        self.procs[idx] = proc;
+        self.dead[idx] = false; // ticks resume at the next interval
+        self.result.recoveries.push(audit);
+        // 5. Unacked rids this replica coordinated died with its protocol
+        // state: their sessions re-issue now (same rid; the re-seeded
+        // dedup windows keep any copy that *did* survive exactly-once).
+        let mut orphans: Vec<Rid> = self
+            .in_flight
+            .iter()
+            .filter(|(_, inf)| inf.dot.origin == p)
+            .map(|(rid, _)| *rid)
+            .collect();
+        orphans.sort_unstable();
+        for rid in orphans {
+            self.reissue(rid, time);
         }
     }
 
@@ -436,17 +655,27 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
     /// exactly-once if the original submission also survives (e.g. it was
     /// committed just before the crash and recovery finishes it).
     fn client_retry(&mut self, rid: Rid, time: u64) {
-        let (cmd, site) = match self.in_flight.get(&rid) {
+        match self.in_flight.get(&rid) {
             // Replied (or superseded) in the meantime: nothing to do.
             None => return,
             Some(inf) => {
                 // Only retry while the current coordinator is dead; a
-                // live one may still reply.
+                // live one may still reply. (A *restarted* coordinator
+                // re-issues its orphans itself, see `restart_process`.)
                 if !self.dead[inf.dot.origin.0 as usize] {
                     return;
                 }
-                (inf.cmd.clone(), inf.site)
             }
+        }
+        self.reissue(rid, time);
+    }
+
+    /// The re-issue itself (shared by the failover retry and the restart
+    /// path, which skips the dead-coordinator guard).
+    fn reissue(&mut self, rid: Rid, time: u64) {
+        let (cmd, site) = match self.in_flight.get(&rid) {
+            None => return,
+            Some(inf) => (inf.cmd.clone(), inf.site),
         };
         let shard = key_to_shard(cmd.keys[0], self.config.shards);
         let origin = match self.live_origin(shard.0, site) {
@@ -457,7 +686,11 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         let is_read = cmd.op == Op::Read;
         let recorded = self.opts.record_execution.then(|| cmd.clone());
         let actions = if is_read {
-            self.procs[origin.0 as usize].submit_read(cmd, submit_at)
+            let floor = self
+                .sessions
+                .get(rid.client().0 as usize)
+                .map_or(0, |s| s.read_floor());
+            self.procs[origin.0 as usize].submit_read(cmd, floor, submit_at)
         } else {
             self.procs[origin.0 as usize].submit(cmd, submit_at)
         };
@@ -588,7 +821,10 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         let kept = cmd.clone();
         let recorded = self.opts.record_execution.then(|| cmd.clone());
         let submit_at = time + self.opts.topology.local_us;
-        let actions = self.procs[origin.0 as usize].submit_read(cmd, submit_at);
+        // Read-your-writes: the session's reads must observe at least its
+        // last acknowledged write's decided timestamp.
+        let floor = self.sessions[client].read_floor();
+        let actions = self.procs[origin.0 as usize].submit_read(cmd, floor, submit_at);
         let dot = actions
             .iter()
             .find_map(|a| match a {
@@ -752,8 +988,8 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
                         });
                     }
                 }
-                Action::Reply { rid, response } => {
-                    self.complete(rid, response, time);
+                Action::Reply { rid, response, ts } => {
+                    self.complete(rid, response, ts, time);
                 }
                 Action::Submitted { .. }
                 | Action::Committed { .. }
@@ -765,14 +1001,20 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
     /// The coordinator's executor replied: clients observe the response
     /// one local hop later and immediately submit their next command
     /// (closed loop).
-    fn complete(&mut self, rid: Rid, response: Response, time: u64) {
+    fn complete(&mut self, rid: Rid, response: Response, ts: u64, time: u64) {
         let inf = match self.in_flight.remove(&rid) {
             Some(x) => x,
             None => return, // duplicate Reply would be a protocol bug
         };
         let done_at = time + self.opts.topology.local_us;
         let in_window = done_at >= self.opts.warmup_us && done_at < self.end_time;
+        let is_write = inf.cmd.op != Op::Read;
         for &(client, submitted_at) in &inf.members {
+            if is_write {
+                // Raise every member session's read-your-writes floor to
+                // the batch's decided timestamp.
+                self.sessions[client].note_write(ts);
+            }
             let latency = done_at.saturating_sub(submitted_at);
             if in_window {
                 self.result.metrics.record_completion(inf.site, latency, 1);
@@ -823,6 +1065,17 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         self.result.metrics.counters = counters;
         self.result.metrics.counters.dedup_hits =
             self.executors.iter().map(|e| e.dedup_hits()).sum();
+        for e in &self.executors {
+            let d = e.state();
+            let s = d.stats();
+            let c = &mut self.result.metrics.counters;
+            c.wal_records += s.wal_records;
+            c.snapshots_taken += s.snapshots;
+            c.wal_fsyncs += d.backend_syncs();
+            c.wal_bytes += d.backend_bytes_written();
+        }
+        self.result.metrics.counters.chunks_fetched =
+            self.result.recoveries.iter().map(|r| r.chunks_fetched).sum();
         self.result.footprints = self.procs.iter().map(|p| p.footprint()).collect();
         self.result.epoch_views = self.procs.iter().map(|p| p.epoch_view()).collect();
         self.result

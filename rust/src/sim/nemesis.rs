@@ -89,6 +89,12 @@ pub struct Nemesis {
     /// Crash schedule: (time, process), same semantics as
     /// `SimOpts::crashes`.
     pub crashes: Vec<(u64, ProcessId)>,
+    /// Restart schedule: (time, process). A restarted process recovers
+    /// from its storage backend (snapshot + WAL tail under
+    /// `StorageMode::Disk`, nothing under `Memory`), state-transfers the
+    /// diff from a live shard peer, and rejoins — the crash-*recovery*
+    /// fault model (see `store::storage`).
+    pub restarts: Vec<(u64, ProcessId)>,
 }
 
 fn pids(raw: &[u32]) -> Vec<ProcessId> {
@@ -159,6 +165,13 @@ impl Nemesis {
     /// simulator merges these with `SimOpts::crashes`).
     pub fn crash(mut self, at_us: u64, p: u32) -> Self {
         self.crashes.push((at_us, ProcessId(p)));
+        self
+    }
+
+    /// Restart `p` at `at_us`: recover from its storage backend and
+    /// rejoin via state transfer (no-op if `p` is alive at that instant).
+    pub fn restart(mut self, at_us: u64, p: u32) -> Self {
+        self.restarts.push((at_us, ProcessId(p)));
         self
     }
 

@@ -4,8 +4,10 @@
 //! commands reach a state machine through the `execute_p` upcall
 //! (`executor::Executor`); determinism is what PSMR replicates.
 
-use crate::core::{Command, Key, Op};
+use crate::core::{Command, Dot, Key, Op};
 use std::collections::HashMap;
+
+pub mod storage;
 
 pub use crate::core::Response;
 
@@ -20,6 +22,46 @@ pub trait StateMachine {
     /// Order-sensitive digest of the current state: replicas that applied
     /// the same command sequence must agree (tests and the e2e driver).
     fn digest(&self) -> u64;
+
+    /// Durability hook: called by the executor after a *fresh* ordered
+    /// execution (never for dedup replays or local reads) with the dot and
+    /// decided timestamp under which `cmd` executed. The in-memory store
+    /// ignores it; [`storage::Durable`] appends a WAL record.
+    fn log_execution(&mut self, _dot: Dot, _ts: u64, _cmd: &Command) {}
+
+    /// Durability hook: does the machine want a checkpoint now? The
+    /// executor polls this after each batch of executions and passes its
+    /// serialized dedup windows to [`StateMachine::checkpoint`].
+    fn wants_checkpoint(&self) -> bool {
+        false
+    }
+
+    /// Durability hook: take a snapshot capturing current state plus the
+    /// executor's dedup-window blob (so exactly-once survives restart).
+    fn checkpoint(&mut self, _dedup: &[u8]) {}
+}
+
+/// Maximum entries per content-addressed snapshot page. Small enough that
+/// a localized write invalidates one page, large enough that manifests
+/// stay compact (a 64k-key store is ~1k chunk hashes).
+pub const CHUNK_KEYS: usize = 64;
+
+/// A state machine that can be serialized as sorted, content-addressable
+/// pages and rebuilt from any replica's pages — the snapshot / state
+/// transfer seam. Page boundaries depend only on the sorted key set, so
+/// two replicas with mostly-equal state produce mostly-equal pages and a
+/// manifest diff transfers only what differs.
+pub trait Snapshottable: StateMachine + Sized {
+    /// Total commands applied (replay bookkeeping for recovery).
+    fn applied(&self) -> u64;
+
+    /// Serialize as pages of at most [`CHUNK_KEYS`] entries, in sorted key
+    /// order. Must be a pure function of state: equal stores chunk equally.
+    fn to_chunks(&self) -> Vec<Vec<u8>>;
+
+    /// Rebuild from pages produced by `to_chunks` (this machine's or a
+    /// remote's), adopting `applied` as the replay position.
+    fn from_chunks(chunks: &[Vec<u8>], applied: u64) -> Self;
 }
 
 /// Value stored per key: a version counter plus the payload length that
@@ -114,6 +156,59 @@ impl StateMachine for KvStore {
 
     fn digest(&self) -> u64 {
         KvStore::digest(self)
+    }
+}
+
+impl Snapshottable for KvStore {
+    fn applied(&self) -> u64 {
+        self.applied
+    }
+
+    /// Page format (LE): `count u16`, then per entry `key u64`,
+    /// `version u64`, `last_payload u32`. Entries are globally sorted by
+    /// key and paged [`CHUNK_KEYS`] at a time, so page contents (and thus
+    /// their content hashes) are a pure function of store state.
+    fn to_chunks(&self) -> Vec<Vec<u8>> {
+        let mut entries: Vec<(Key, Value)> =
+            self.data.iter().map(|(k, v)| (*k, *v)).collect();
+        entries.sort_by_key(|(k, _)| *k);
+        entries
+            .chunks(CHUNK_KEYS)
+            .map(|page| {
+                let mut buf = Vec::with_capacity(2 + page.len() * 20);
+                buf.extend_from_slice(&(page.len() as u16).to_le_bytes());
+                for (k, v) in page {
+                    buf.extend_from_slice(&k.to_le_bytes());
+                    buf.extend_from_slice(&v.version.to_le_bytes());
+                    buf.extend_from_slice(&v.last_payload.to_le_bytes());
+                }
+                buf
+            })
+            .collect()
+    }
+
+    fn from_chunks(chunks: &[Vec<u8>], applied: u64) -> Self {
+        let mut data = HashMap::new();
+        for chunk in chunks {
+            if chunk.len() < 2 {
+                continue;
+            }
+            let count = u16::from_le_bytes([chunk[0], chunk[1]]) as usize;
+            let mut at = 2;
+            for _ in 0..count {
+                if at + 20 > chunk.len() {
+                    break;
+                }
+                let k = u64::from_le_bytes(chunk[at..at + 8].try_into().unwrap());
+                let version =
+                    u64::from_le_bytes(chunk[at + 8..at + 16].try_into().unwrap());
+                let last_payload =
+                    u32::from_le_bytes(chunk[at + 16..at + 20].try_into().unwrap());
+                data.insert(k, Value { version, last_payload });
+                at += 20;
+            }
+        }
+        KvStore { data, applied }
     }
 }
 
@@ -259,6 +354,29 @@ mod tests {
         assert_ne!(merkle_root(&[0]), merkle_root(&[0, 0]));
         assert_eq!(merkle_root(&[]), 0);
         assert!(diverging_slots(&slots, &slots[..3]).contains(&3));
+    }
+
+    #[test]
+    fn chunk_roundtrip_preserves_digest_and_localizes_change() {
+        let mut s = KvStore::new();
+        for i in 0..(3 * CHUNK_KEYS as u64 + 17) {
+            s.execute(&Command::single(rid(i), i, Op::Put, (i % 9) as u32));
+        }
+        let chunks = s.to_chunks();
+        assert_eq!(chunks.len(), 4, "ceil(209 keys / 64 per page)");
+        let back = KvStore::from_chunks(&chunks, s.applied());
+        assert_eq!(back.digest(), s.digest());
+        assert_eq!(back.applied(), s.applied());
+        // Updating one existing key changes only the page holding it:
+        // content addressing makes incremental snapshots/transfer cheap.
+        s.execute(&Command::single(rid(999), 5, Op::Put, 3));
+        let after = s.to_chunks();
+        let differing = chunks
+            .iter()
+            .zip(after.iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert_eq!(differing, 1, "stable key set => one dirty page");
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Crash-*recovery* fault model: replicas journal executions to a
+//! per-slot WAL under `StorageMode::Disk` (`store::storage`), checkpoint
+//! content-addressed snapshots, and on restart rebuild from the surviving
+//! disk before fetching the manifest diff from a live peer. These tests
+//! drive the deterministic simulator through kill-and-restart schedules
+//! and hold the recoveries to the durability contract
+//! (`check::check_recovery`):
+//!
+//! - local replay arithmetic is exact (`snapshot_applied + wal_replayed`),
+//! - a crash can only destroy records still inside the group-commit
+//!   window (`wal_fsync_batch == 1` ⇒ zero loss),
+//! - a transferred rejoin is byte-identical to its donor's store.
+//!
+//! Safety (`check_psmr` without the liveness arm) must hold across every
+//! schedule: a restarted replica executes a *suffix* of the history —
+//! transferred state installs results without execution-log entries — so
+//! the liveness oracle does not apply, but agreement and per-key order do.
+
+use tempo::check::{assert_recovery, check_psmr, check_recovery};
+use tempo::core::{Config, ProcessId, StorageMode};
+use tempo::protocol::tempo::Tempo;
+use tempo::sim::{run, SimOpts, SimResult, Topology};
+use tempo::util::prop::forall_seeds;
+use tempo::workload::ZipfWorkload;
+
+/// A schedule that crashes `victim` and restarts it later in the same
+/// run. Suspicion is pushed past the end of the run so the *restart*
+/// (not an epoch eviction) is what brings the replica back — the
+/// restarted process re-issues its own orphaned rids.
+fn restart_opts(seed: u64, crash_at_us: u64, restart_at_us: u64, victim: u32) -> SimOpts {
+    assert!(crash_at_us < restart_at_us);
+    let mut o = SimOpts::new(Topology::ec2_three());
+    o.clients_per_site = 4;
+    o.warmup_us = 0;
+    o.duration_us = 2_000_000;
+    o.drain_us = 6_000_000;
+    o.seed = seed;
+    o.record_execution = true;
+    o.crashes = vec![(crash_at_us, ProcessId(victim))];
+    o.restarts = vec![(restart_at_us, ProcessId(victim))];
+    o.suspect_delay_us = 60_000_000; // never fires: restart precedes eviction
+    o
+}
+
+fn disk_config() -> Config {
+    Config::new(3, 1)
+        .with_recovery_timeout_us(1_000_000)
+        .with_storage(StorageMode::Disk)
+        .with_wal_fsync_batch(4)
+        .with_snapshot_every(32)
+}
+
+fn assert_safety(config: &Config, result: &SimResult) {
+    let violations = check_psmr(config, result, false);
+    assert!(
+        violations.is_empty(),
+        "safety violated across the restart: {:#?}",
+        violations.iter().take(8).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn crash_restart_recovers_from_disk_and_rejoins_byte_identical() {
+    let config = disk_config();
+    let result = run::<Tempo, _>(
+        config.clone(),
+        restart_opts(71, 900_000, 1_600_000, 0),
+        ZipfWorkload::new(1_000, 0.5, 64),
+    );
+    assert_eq!(result.recoveries.len(), 1, "exactly one restart scheduled");
+    let rec = &result.recoveries[0];
+    assert_eq!(rec.process, ProcessId(0));
+    // The victim executed real work before the crash, and the disk gave
+    // most of it back: a snapshot fired (cadence 32) and a WAL tail
+    // replayed on top of it.
+    assert!(rec.pre_crash_applied > 0, "no pre-crash executions: {rec:?}");
+    assert!(rec.snapshot_applied > 0, "the snapshot cadence never fired: {rec:?}");
+    assert!(rec.recovered_applied > 0, "local recovery rebuilt nothing: {rec:?}");
+    // The survivors kept executing during the outage, so the manifest
+    // diff must pull the newer pages — and leave the rejoining store
+    // byte-identical to the donor's (assert_recovery checks the digest).
+    assert!(rec.peer.is_some(), "no live donor found for the transfer");
+    assert!(rec.chunks_fetched > 0, "the rejoin was behind but fetched no pages: {rec:?}");
+    assert!(rec.dedup_seeded > 0, "no exactly-once state recovered: {rec:?}");
+    assert_recovery(&config, &result);
+    assert_safety(&config, &result);
+    // The storage counters surface in the run metrics like any other.
+    let c = &result.metrics.counters;
+    assert!(c.wal_records > 0, "no WAL records journaled: {c:?}");
+    assert!(c.wal_fsyncs > 0, "no group commits: {c:?}");
+    assert!(c.snapshots_taken > 0, "no snapshots taken: {c:?}");
+    assert_eq!(c.chunks_fetched, rec.chunks_fetched);
+}
+
+#[test]
+fn fsync_every_record_loses_nothing_across_a_crash() {
+    // wal_fsync_batch == 1: every executed command is on disk before the
+    // crash can happen, so local recovery alone reproduces the exact
+    // pre-crash store — digest and applied count — before any transfer.
+    let config = disk_config().with_wal_fsync_batch(1);
+    let result = run::<Tempo, _>(
+        config.clone(),
+        restart_opts(72, 700_000, 1_500_000, 1),
+        ZipfWorkload::new(500, 0.5, 64),
+    );
+    let rec = &result.recoveries[0];
+    assert_eq!(rec.wal_lost, 0, "fsync-per-record must never lose a record: {rec:?}");
+    assert_eq!(
+        rec.recovered_applied, rec.pre_crash_applied,
+        "local recovery must reproduce every pre-crash execution: {rec:?}"
+    );
+    assert_eq!(
+        rec.recovered_digest, rec.pre_crash_digest,
+        "local recovery must reproduce the exact pre-crash store: {rec:?}"
+    );
+    assert_recovery(&config, &result);
+    assert_safety(&config, &result);
+}
+
+#[test]
+fn group_commit_window_loss_is_legal_and_bounded() {
+    // The flip side of the group-commit bargain: with a huge fsync batch
+    // and snapshots disabled, a crash destroys the entire unsynced tail.
+    // That loss is LEGAL — the contract only promises what fsync
+    // acknowledged — so the recovery oracle stays quiet, the rejoin is
+    // visibly stale (transfer disabled to expose it), and safety still
+    // holds because the replica re-executes forward from what survived.
+    let config = disk_config().with_wal_fsync_batch(1 << 20).with_snapshot_every(u64::MAX);
+    let mut o = restart_opts(73, 900_000, 1_600_000, 2);
+    o.transfer_on_restart = false;
+    let result = run::<Tempo, _>(config.clone(), o, ZipfWorkload::new(500, 0.5, 64));
+    let rec = &result.recoveries[0];
+    assert!(rec.pre_crash_applied > 0, "no pre-crash executions: {rec:?}");
+    assert!(rec.wal_lost > 0, "the unsynced tail should have died with the crash: {rec:?}");
+    assert_eq!(rec.snapshot_applied, 0, "snapshots were disabled: {rec:?}");
+    assert!(
+        rec.recovered_applied < rec.pre_crash_applied,
+        "without fsync or transfer the rejoin must be stale: {rec:?}"
+    );
+    assert!(rec.peer.is_none(), "transfer was disabled: {rec:?}");
+    assert!(
+        check_recovery(&config, &result).is_empty(),
+        "losing only the unsynced window is within the durability contract"
+    );
+    assert_safety(&config, &result);
+}
+
+#[test]
+fn memory_mode_restart_is_healed_entirely_by_state_transfer() {
+    // Under `StorageMode::Memory` (the default) the disk model is inert:
+    // a restarted replica comes back EMPTY and owes everything to the
+    // manifest-diff transfer — the crash-stop model upgraded to
+    // crash-recovery purely by the wire protocol (tags 22–24 in the TCP
+    // runtime). assert_recovery still holds: the rejoin must be
+    // byte-identical to the donor.
+    let config = Config::new(3, 1).with_recovery_timeout_us(1_000_000);
+    assert!(matches!(config.storage, StorageMode::Memory));
+    let result = run::<Tempo, _>(
+        config.clone(),
+        restart_opts(74, 600_000, 1_400_000, 0),
+        ZipfWorkload::new(500, 0.5, 64),
+    );
+    let rec = &result.recoveries[0];
+    assert_eq!(rec.snapshot_applied, 0, "memory mode has no snapshots: {rec:?}");
+    assert_eq!(rec.wal_replayed, 0, "memory mode has no WAL: {rec:?}");
+    assert_eq!(rec.recovered_applied, 0, "memory mode recovers empty: {rec:?}");
+    assert!(rec.peer.is_some() && rec.chunks_fetched > 0, "transfer must heal it: {rec:?}");
+    assert_recovery(&config, &result);
+    assert_safety(&config, &result);
+}
+
+#[test]
+fn repeated_crash_restart_of_the_same_replica() {
+    // Two full kill/recover cycles in one run: the second recovery reads
+    // a disk state that itself was produced by a recovery (snapshot +
+    // WAL + installed transfer pages). Both must satisfy the contract.
+    let config = disk_config().with_snapshot_every(32);
+    let mut o = restart_opts(75, 500_000, 1_100_000, 0);
+    o.crashes.push((1_700_000, ProcessId(0)));
+    o.restarts.push((2_300_000, ProcessId(0)));
+    let result = run::<Tempo, _>(config.clone(), o, ZipfWorkload::new(1_000, 0.5, 64));
+    assert_eq!(result.recoveries.len(), 2, "both restarts must recover");
+    assert!(
+        result.recoveries[1].recovered_applied > 0,
+        "the second recovery must replay state the first recovery persisted: {:?}",
+        result.recoveries[1]
+    );
+    assert_recovery(&config, &result);
+    assert_safety(&config, &result);
+}
+
+#[test]
+fn crash_restart_sweep_holds_the_durability_contract_across_seeds() {
+    // Property: whatever the victim, crash/restart instants, fsync batch
+    // and snapshot cadence, every recovery satisfies the durability
+    // contract and the run stays safe.
+    forall_seeds("tempo-crash-restart-sweep", |seed| {
+        let victim = (seed % 3) as u32;
+        let crash_at = 300_000 + (seed % 5) * 200_000;
+        let restart_at = crash_at + 400_000 + (seed % 3) * 300_000;
+        let config = disk_config()
+            .with_wal_fsync_batch([1, 4, 64][(seed % 3) as usize])
+            .with_snapshot_every([16, 64, 1024][((seed / 3) % 3) as usize]);
+        let result = run::<Tempo, _>(
+            config.clone(),
+            restart_opts(seed, crash_at, restart_at, victim),
+            ZipfWorkload::new(1_000, 0.5, 64),
+        );
+        if result.recoveries.len() != 1 {
+            return Err(format!("expected one recovery, got {}", result.recoveries.len()));
+        }
+        let violations = check_recovery(&config, &result);
+        if !violations.is_empty() {
+            return Err(format!(
+                "victim=P{victim} crash={crash_at} restart={restart_at}: {:?}",
+                violations.iter().take(4).collect::<Vec<_>>()
+            ));
+        }
+        let safety = check_psmr(&config, &result, false);
+        if !safety.is_empty() {
+            return Err(format!(
+                "safety violated: {:?}",
+                safety.iter().take(4).collect::<Vec<_>>()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nemesis_crash_restart_under_link_faults() {
+    // The nemesis schedules the same crash/restart cycle while the links
+    // between the survivors jitter and duplicate — recovery must still
+    // hand back a byte-identical rejoin once a donor is reachable.
+    use tempo::sim::nemesis::Nemesis;
+    let config = disk_config();
+    let mut o = restart_opts(76, 600_000, 1_500_000, 1);
+    o.nemesis = Nemesis::new()
+        .crash(600_000, 1)
+        .restart(1_500_000, 1)
+        .delay(800_000, 1_200_000, 20_000)
+        .duplicate(1_200_000, 1_600_000, 0.2);
+    o.crashes.clear(); // the nemesis owns the schedule in this run
+    o.restarts.clear();
+    let result = run::<Tempo, _>(config.clone(), o, ZipfWorkload::new(1_000, 0.5, 64));
+    assert_eq!(result.recoveries.len(), 1);
+    assert!(result.recoveries[0].peer.is_some());
+    assert_recovery(&config, &result);
+    assert_safety(&config, &result);
+}

@@ -328,12 +328,13 @@ fn prop_client_frames_roundtrip_and_survive_corruption() {
             };
             ClientFrame::Submit {
                 cmd: Command::new(rid, keys, op, rng.gen_range(512) as u32),
+                floor: rng.gen_range(1 << 40),
             }
         } else {
             let versions: Vec<(u64, u64)> = (0..rng.gen_range(5))
                 .map(|_| (rng.gen_range(1 << 30), rng.gen_range(1 << 20)))
                 .collect();
-            ClientFrame::Reply { rid, response: Response { versions } }
+            ClientFrame::Reply { rid, response: Response { versions }, ts: rng.gen_range(1 << 40) }
         };
         let enc = encode_client(&frame);
         let back = decode_client(&enc).map_err(|e| e.to_string())?;
@@ -366,14 +367,17 @@ fn prop_read_flagged_submits_roundtrip_and_stay_on_the_client_plane() {
         let rid = Rid::new(ClientId(rng.gen_range(1 << 16)), 1 + rng.gen_range(1 << 20));
         let keys: Vec<u64> =
             (0..1 + rng.gen_range(4)).map(|_| rng.gen_range(1 << 30)).collect();
-        let frame = ClientFrame::Submit { cmd: Command::read(rid, keys) };
+        let frame = ClientFrame::Submit {
+            cmd: Command::read(rid, keys),
+            floor: rng.gen_range(1 << 40),
+        };
         let enc = encode_client(&frame);
         let back = decode_client(&enc).map_err(|e| e.to_string())?;
         if back != frame {
             return Err(format!("round-trip mismatch: {frame:?} vs {back:?}"));
         }
         match &back {
-            ClientFrame::Submit { cmd } => {
+            ClientFrame::Submit { cmd, .. } => {
                 if cmd.op != Op::Read || cmd.payload_len != 0 {
                     return Err(format!("read flag lost: {cmd:?}"));
                 }
@@ -417,11 +421,13 @@ fn prop_batches_reject_nested_client_frames() {
         let member = if rng.gen_bool(0.5) {
             encode_client(&ClientFrame::Submit {
                 cmd: Command::single(rid, rng.gen_range(1 << 20), Op::Put, 16),
+                floor: rng.gen_range(1 << 30),
             })
         } else {
             encode_client(&ClientFrame::Reply {
                 rid,
                 response: Response { versions: vec![(rng.gen_range(1 << 20), 1)] },
+                ts: rng.gen_range(1 << 30),
             })
         };
         // Hand-build: tag 16, one member, the client frame as its body.
@@ -570,6 +576,7 @@ fn prop_encode_into_matches_encode_byte_for_byte() {
         let frame = if rng.gen_bool(0.5) {
             ClientFrame::Submit {
                 cmd: Command::single(rid, rng.gen_range(1 << 20), Op::Put, 32),
+                floor: rng.gen_range(1 << 40),
             }
         } else {
             ClientFrame::Reply {
@@ -577,6 +584,7 @@ fn prop_encode_into_matches_encode_byte_for_byte() {
                 response: tempo::core::Response {
                     versions: (0..rng.gen_range(4)).map(|i| (i, i + 1)).collect(),
                 },
+                ts: rng.gen_range(1 << 40),
             }
         };
         let legacy = encode_client(&frame);
@@ -682,6 +690,93 @@ fn prop_epoch_frames_roundtrip_and_stay_on_the_protocol_plane() {
                 }
             }
             other => return Err(format!("batched epoch vote decoded as {other:?}")),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transfer_frames_roundtrip_and_stay_on_the_transfer_plane() {
+    // State-transfer frames (tags 22–24, docs/WIRE.md): random manifest
+    // requests, manifest replies, and chunk frames round-trip exactly
+    // through encode_transfer/decode_transfer; every truncation is an
+    // Err; bit-flips never panic; and the transfer plane is strictly
+    // separated — the peer and client decoders reject the frames whole
+    // and as smuggled MBatch members, while decode_transfer rejects
+    // every other plane's frames.
+    use tempo::core::Response;
+    use tempo::net::wire::{
+        decode, decode_client, decode_transfer, encode, encode_client, encode_transfer,
+        transfer_encoded_len, ClientFrame, TransferFrame,
+    };
+    forall_seeds("transfer-frame-fuzz", |seed| {
+        let mut rng = Rng::new(seed);
+        let frame = match rng.gen_range(3) {
+            0 => TransferFrame::ManifestRequest { slot: rng.gen_range(64) as u32 },
+            1 => TransferFrame::ManifestReply {
+                slot: rng.gen_range(64) as u32,
+                applied: rng.gen_range(1 << 40),
+                chunks: (0..rng.gen_range(8)).map(|_| rng.gen_range(1 << 60)).collect(),
+                dot_floors: (0..rng.gen_range(5))
+                    .map(|i| (ProcessId(i as u32), rng.gen_range(1 << 30)))
+                    .collect(),
+                dedup: (0..rng.gen_range(64)).map(|_| rng.gen_range(256) as u8).collect(),
+            },
+            _ => TransferFrame::Chunk {
+                slot: rng.gen_range(64) as u32,
+                hash: rng.gen_range(1 << 60),
+                present: rng.gen_bool(0.5),
+                data: (0..rng.gen_range(128)).map(|_| rng.gen_range(256) as u8).collect(),
+            },
+        };
+        let enc = encode_transfer(&frame);
+        if transfer_encoded_len(&frame) != enc.len() {
+            return Err(format!(
+                "transfer_encoded_len {} != encode_transfer().len() {}",
+                transfer_encoded_len(&frame),
+                enc.len()
+            ));
+        }
+        let back = decode_transfer(&enc).map_err(|e| e.to_string())?;
+        if back != frame {
+            return Err(format!("round-trip mismatch: {frame:?} vs {back:?}"));
+        }
+        let cut = rng.gen_range(enc.len() as u64) as usize;
+        if decode_transfer(&enc[..cut]).is_ok() {
+            return Err(format!("truncation at {cut} decoded"));
+        }
+        let mut flipped = enc.clone();
+        let at = rng.gen_range(enc.len() as u64) as usize;
+        flipped[at] ^= 1u8 << (rng.gen_range(8) as u32);
+        let _ = decode_transfer(&flipped); // Err or a different frame — no panic
+        // Plane separation, outbound: never a peer or client frame...
+        if decode(&enc).is_ok() {
+            return Err("transfer frame decoded on the peer plane".into());
+        }
+        if decode_client(&enc).is_ok() {
+            return Err("transfer frame decoded on the client plane".into());
+        }
+        // ...including smuggled inside an MBatch member (tag 16).
+        let mut batch = vec![16u8];
+        batch.extend_from_slice(&1u16.to_le_bytes());
+        batch.extend_from_slice(&(enc.len() as u32).to_le_bytes());
+        batch.extend_from_slice(&enc);
+        if decode(&batch).is_ok() {
+            return Err("transfer frame decoded inside an MBatch".into());
+        }
+        // Plane separation, inbound: a protocol or client frame never
+        // decodes as a transfer frame.
+        let other = random_msg(&mut rng, true);
+        if decode_transfer(&encode(&other)).is_ok() {
+            return Err("peer frame decoded on the transfer plane".into());
+        }
+        let client = ClientFrame::Reply {
+            rid: Rid::new(ClientId(1), 1),
+            response: Response { versions: vec![] },
+            ts: rng.gen_range(1 << 30),
+        };
+        if decode_transfer(&encode_client(&client)).is_ok() {
+            return Err("client frame decoded on the transfer plane".into());
         }
         Ok(())
     });

@@ -17,6 +17,11 @@
 //! 4. **Encode-once crediting** (`SimOpts::encode_once`): the flag is a
 //!    pure *charging* change (identical executions without a resource
 //!    model) and charges strictly less sender CPU per op with one.
+//! 5. **Read-your-writes sessions**: the client `Session` tracks the
+//!    highest decided write timestamp and passes it as the read floor;
+//!    a failed-over read parks until the frontier covers that floor
+//!    (positive), and demonstrably serves stale state without it
+//!    (negative).
 
 use tempo::check::{assert_psmr, check_psmr, Violation};
 use tempo::client::Session;
@@ -50,7 +55,7 @@ fn instant_local_read_sends_no_messages() {
     // served in the submit call itself, with no outbound traffic.
     let mut p = Tempo::new(ProcessId(0), Config::new(3, 1));
     let mut s = Session::new(ClientId(1));
-    let actions = p.submit_read(s.read_single(42), 0);
+    let actions = p.submit_read(s.read_single(42), 0, 0);
     assert_eq!(actions.len(), 1, "expected exactly one action: {actions:?}");
     match &actions[0] {
         Action::ExecuteRead { cmd, covered, slack } => {
@@ -108,7 +113,7 @@ fn parked_read_is_released_when_the_frontier_catches_up() {
     // covered, so it parks: no actions at all, and no local-read credit.
     let read = session.read_single(7);
     let rid = read.rid;
-    let parked = procs[0].submit_read(read, 0);
+    let parked = procs[0].submit_read(read, 0, 0);
     assert!(parked.is_empty(), "read must park, got {parked:?}");
     assert_eq!(procs[0].counters.local_reads, 0);
 
@@ -306,6 +311,84 @@ fn encode_once_charges_less_sender_cpu_per_op() {
         cpu_per_op(&flagged),
         cpu_per_op(&legacy)
     );
+}
+
+// --- Layer 5: read-your-writes sessions ------------------------------------
+
+#[test]
+fn session_floor_parks_a_failed_over_read_until_the_write_is_covered() {
+    // RYW, positive case. A client writes key 7 at replica 0 and records
+    // the decided timestamp in its session watermark. It then fails over
+    // and reads the same key at replica 1, whose key state is still bare
+    // (the write's traffic has not been delivered). The session floor
+    // must force the read to park — serving instantly would return state
+    // older than the client's own acked write.
+    let config = Config::new(3, 1);
+    let mut procs: Vec<Tempo> =
+        (0..3).map(|i| Tempo::new(ProcessId(i), config.clone())).collect();
+    let mut session = Session::new(ClientId(1));
+    let mut reads = Vec::new();
+
+    let write_actions = procs[0].submit(session.single(7, Op::Put, 9), 0);
+    // The decided timestamp of the first write on a fresh key is 1; in
+    // the runtimes this value arrives on the client's write ack.
+    session.note_write(1);
+    assert_eq!(session.read_floor(), 1);
+
+    let read = session.read_single(7);
+    let rid = read.rid;
+    let parked = procs[1].submit_read(read, session.read_floor(), 0);
+    assert!(parked.is_empty(), "read below the floor must park, got {parked:?}");
+    assert_eq!(procs[1].counters.local_reads, 0);
+
+    // Deliver the write and tick until the promise exchange lifts the
+    // majority watermark over the floor: the read releases at replica 1,
+    // covering the session's write.
+    drain(&mut procs, ProcessId(0), write_actions, 1, &mut reads);
+    let mut t = 1_000;
+    while reads.is_empty() && t < 100_000 {
+        for i in 0..3 {
+            let acts = procs[i].tick(t);
+            let at = ProcessId(i as u32);
+            drain(&mut procs, at, acts, t, &mut reads);
+        }
+        t += 1_000;
+    }
+    assert_eq!(reads.len(), 1, "floored read never released");
+    let (at, cmd, covered) = &reads[0];
+    assert_eq!(*at, ProcessId(1), "read must serve at the failover replica");
+    assert_eq!(cmd.rid, rid);
+    assert!(
+        *covered >= session.read_floor(),
+        "release must cover the session watermark: covered={covered}"
+    );
+    assert_eq!(procs[1].counters.local_reads, 1);
+    assert_eq!(procs[1].counters.slow_reads, 0);
+}
+
+#[test]
+fn without_the_floor_the_failed_over_read_serves_stale_state() {
+    // RYW, negative case — why the floor exists. Identical scenario with
+    // the floor omitted: replica 1's bare frontier trivially covers
+    // timestamp 0, so the read is served instantly *below* the session's
+    // write watermark. This is precisely the stale read the session floor
+    // turns into the park above.
+    let config = Config::new(3, 1);
+    let mut procs: Vec<Tempo> =
+        (0..3).map(|i| Tempo::new(ProcessId(i), config.clone())).collect();
+    let mut session = Session::new(ClientId(1));
+    let _in_flight = procs[0].submit(session.single(7, Op::Put, 9), 0);
+    session.note_write(1);
+
+    let served = procs[1].submit_read(session.read_single(7), 0, 0);
+    match &served[..] {
+        [Action::ExecuteRead { covered, .. }] => assert!(
+            *covered < session.read_floor(),
+            "expected a stale serve below the watermark, covered={covered}"
+        ),
+        other => panic!("expected an instant (stale) ExecuteRead, got {other:?}"),
+    }
+    assert_eq!(procs[1].counters.local_reads, 1);
 }
 
 // --- Workload plumbing ----------------------------------------------------
