@@ -743,7 +743,230 @@ fn bench_batching() -> tempo::util::error::Result<()> {
     Ok(())
 }
 
+/// `--sweep-clients`: the client-plane scaling cell — thousands of
+/// concurrent TCP sessions multiplexed on each node's **fixed** pool of
+/// event-loop threads (`Config::client_event_threads`; no per-connection
+/// threads node-side), driven in closed-loop waves. Reports ops/s, p99
+/// wave latency and replies-per-flush (the event loop's reply batching),
+/// then exercises admission control for real: a tiny per-session window
+/// plus one over-pipelining client must produce explicit `ClientBusy`
+/// sheds that `resubmit` recovers from. Writes BENCH_clients_tcp.json.
+fn sweep_clients() -> tempo::util::error::Result<()> {
+    use tempo::client::is_busy_error;
+    let r = 3usize;
+    let driver_threads = 8usize;
+    let wave = 4usize; // submits in flight per session per wave
+    let duration = Duration::from_secs(3);
+    println!(
+        "--- e2e --sweep-clients ({r} nodes, 2 event-loop threads each, \
+         wave window {wave}, {}s per cell) ---",
+        duration.as_secs()
+    );
+    let mut cells: Vec<(usize, f64, u64, f64, u64)> = Vec::new();
+    for &sessions in &[1_000usize, 10_000] {
+        let config = Config::new(r, 1)
+            .with_tick_interval_us(1_000)
+            .with_workers(2)
+            .with_batching(64)
+            .with_client_event_threads(2);
+        let (nodes, addrs) = boot_cluster(r, &config)?;
+        let ops = Arc::new(AtomicU64::new(0));
+        let hist = Arc::new(std::sync::Mutex::new(Histogram::new()));
+        let deadline = Instant::now() + duration;
+        std::thread::scope(|scope| {
+            for t in 0..driver_threads {
+                let ops = ops.clone();
+                let hist = hist.clone();
+                let addrs = &addrs;
+                scope.spawn(move || {
+                    // The driver threads exist only because one OS thread
+                    // cannot pump thousands of blocking client sockets;
+                    // the *node* side runs them all on its fixed loops.
+                    let mut clients: Vec<TcpClient> = Vec::new();
+                    for s in (t..sessions).step_by(driver_threads) {
+                        let addr = &addrs[s % r];
+                        let id = ClientId((1_000_000 + s) as u64);
+                        let tc = (0..50)
+                            .find_map(|_| match TcpClient::connect(addr, id) {
+                                Ok(tc) => Some(tc),
+                                Err(_) => {
+                                    // Accept backlog overflow under the
+                                    // connect storm: back off and redial.
+                                    std::thread::sleep(Duration::from_millis(10));
+                                    None
+                                }
+                            })
+                            .unwrap_or_else(|| panic!("client {id:?}: connect"));
+                        tc.set_timeout(Some(Duration::from_secs(30))).expect("timeout");
+                        clients.push(tc);
+                    }
+                    let mut rng = Rng::new(t as u64 + 1);
+                    let zipf = Zipf::new(100_000, 0.7);
+                    let mut lat: Vec<u64> = Vec::new();
+                    let mut t0s: Vec<Instant> = Vec::with_capacity(clients.len());
+                    while Instant::now() < deadline {
+                        // One wave: every session pipelines `wave`
+                        // submits, then the replies are drained — so the
+                        // whole shard is in flight at the node at once.
+                        t0s.clear();
+                        for tc in clients.iter_mut() {
+                            t0s.push(Instant::now());
+                            for _ in 0..wave {
+                                let key = zipf.sample(&mut rng);
+                                tc.submit_async(vec![key], Op::Put, 64).expect("submit");
+                            }
+                        }
+                        for (tc, t0) in clients.iter_mut().zip(&t0s) {
+                            for _ in 0..wave {
+                                tc.recv_reply().expect("reply");
+                            }
+                            lat.push(t0.elapsed().as_micros() as u64);
+                        }
+                        ops.fetch_add((clients.len() * wave) as u64, Ordering::Relaxed);
+                    }
+                    let mut h = hist.lock().unwrap();
+                    for v in lat {
+                        h.record(v);
+                    }
+                });
+            }
+        });
+        let total = ops.load(Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(500)); // drain
+        let (mut conns, mut replies, mut flushes, mut wakeups) = (0u64, 0u64, 0u64, 0u64);
+        for n in &nodes {
+            let c = n.counters();
+            conns += c.client_connections;
+            replies += c.client_replies;
+            flushes += c.client_flushes;
+            wakeups += c.client_wakeups;
+        }
+        let p99 = hist.lock().unwrap().quantile(0.99);
+        let ops_per_s = total as f64 / duration.as_secs_f64();
+        let rpf = replies as f64 / flushes.max(1) as f64;
+        println!(
+            "  {sessions:>6} sessions: {ops_per_s:>10.0} ops/s, p99 wave {p99} us, \
+             {replies} replies / {flushes} flushes ({rpf:.2}/flush), \
+             {wakeups} wakeups, {conns} connections"
+        );
+        assert!(total > 0, "no ops at {sessions} sessions");
+        assert_eq!(
+            conns, sessions as u64,
+            "every session must land on the event-loop plane (no thread-per-conn)"
+        );
+        if sessions >= 10_000 {
+            assert!(
+                rpf > 1.0,
+                "the event loop never batched replies per flush at {sessions} sessions"
+            );
+        }
+        cells.push((sessions, ops_per_s, p99, rpf, conns));
+        for n in nodes {
+            n.shutdown();
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    let ratio = cells[1].1 / cells[0].1;
+    println!("  10k/1k throughput ratio: {ratio:.2}");
+
+    // Admission control for real: per-session window 4, one client
+    // pipelines 64 — the node must shed with explicit ClientBusy frames
+    // and `resubmit` (same rids) must recover every shed request.
+    let config = Config::new(r, 1)
+        .with_tick_interval_us(1_000)
+        .with_workers(2)
+        .with_client_event_threads(1)
+        .with_max_inflight_per_session(4);
+    let (nodes, addrs) = boot_cluster(r, &config)?;
+    let mut tc = TcpClient::connect(&addrs[0], ClientId(999_999))?;
+    tc.set_timeout(Some(Duration::from_secs(5)))?;
+    let burst = 64u64;
+    let mut submitted = std::collections::HashSet::new();
+    for i in 0..burst {
+        submitted.insert(tc.submit_async(vec![1 << 30 | i], Op::Put, 32)?);
+    }
+    let mut busy_errors = 0u64;
+    let mut completed = std::collections::HashSet::new();
+    while tc.in_flight() > 0 {
+        match tc.recv_reply() {
+            Ok((rid, _)) => {
+                assert!(completed.insert(rid), "duplicate reply for {rid}");
+            }
+            Err(e) if is_busy_error(&e) => {
+                busy_errors += 1;
+                let rid = tc.last_busy().expect("busy rid recorded");
+                // The shed request was neither executed nor queued:
+                // back off and re-issue it under its original rid.
+                std::thread::sleep(Duration::from_millis(2));
+                tc.resubmit(rid)?;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    assert_eq!(completed, submitted, "every shed rid must eventually complete");
+    let busy_shed: u64 = nodes.iter().map(|n| n.counters().busy_shed).sum();
+    assert!(busy_errors > 0, "pipelining 64 into a window of 4 never surfaced busy");
+    assert!(busy_shed > 0, "the node edge never counted a shed");
+    println!(
+        "  admission control: {burst} pipelined into window 4 -> {busy_shed} \
+         sheds at the edge, {busy_errors} busy errors at the client, all \
+         {} rids recovered via resubmit",
+        completed.len()
+    );
+    for n in nodes {
+        n.shutdown();
+    }
+
+    let rows: String = cells
+        .iter()
+        .enumerate()
+        .map(|(i, (sessions, ops_per_s, p99, rpf, conns))| {
+            format!(
+                "    {{\"sessions\": {sessions}, \"ops_per_s\": {ops_per_s:.0}, \
+                 \"p99_wave_us\": {p99}, \"replies_per_flush\": {rpf:.2}, \
+                 \"client_connections\": {conns}}}{}\n",
+                if i + 1 == cells.len() { "" } else { "," }
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"clients_e2e_tcp\",\n  \
+         \"workload\": \"3-node Tempo over real TCP, N concurrent sessions in \
+         closed-loop waves of {wave} zipf(100k, 0.7) puts, {}s per cell; \
+         2 client event-loop threads per node; busy cell = window 4, one \
+         client pipelining 64\",\n  \
+         \"harness\": \"rust (cargo run --release --example e2e_cluster -- \
+         --sweep-clients)\",\n  \
+         \"cells\": [\n{rows}  ],\n  \
+         \"ratio_10k_vs_1k_ops\": {ratio:.3},\n  \
+         \"busy\": {{\"shed_at_edge\": {busy_shed}, \"busy_errors_at_client\": \
+         {busy_errors}, \"recovered\": {}}},\n  \
+         \"regenerate\": \"ulimit -n 65536 && cargo run --release --example \
+         e2e_cluster -- --sweep-clients\"\n}}\n",
+        duration.as_secs(),
+        completed.len()
+    );
+    let path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(d) => format!("{d}/../BENCH_clients_tcp.json"),
+        Err(_) => "BENCH_clients_tcp.json".to_string(),
+    };
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("e2e TCP client-plane cells written to {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+    println!(
+        "\nsweep-clients OK: 10k sessions multiplexed on fixed event-loop \
+         pools at {ratio:.2}x the 1k-session throughput; admission control \
+         sheds and recovers explicitly."
+    );
+    Ok(())
+}
+
 fn main() -> tempo::util::error::Result<()> {
+    if std::env::args().any(|a| a == "--sweep-clients") {
+        sweep_clients()?;
+        std::process::exit(0);
+    }
     if std::env::args().any(|a| a == "--kill-restart") {
         kill_restart()?;
         std::process::exit(0); // stray client reply-writer threads may linger

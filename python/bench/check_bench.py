@@ -40,6 +40,15 @@ Validates the recorded BENCH_*.json baselines at the repo root:
   pair, batched framing must be at least as fast as unbatched
   (``batched_msgs_per_s >= unbatched_msgs_per_s``) — the syscall/frame
   reduction is the whole point of the batcher.
+- BENCH_clients.json: the event-loop client plane must hold its cost
+  flat as the session table grows — ops/s at 10k sessions at least
+  0.8x ops/s at 1k sessions on the same fixed loop pool — every sweep
+  cell must batch replies (``replies_per_flush > 1``), and the
+  admission-control cell must have shed (``busy_shed > 0``) while
+  completing every burst command exactly once. The real-TCP companion
+  BENCH_clients_tcp.json (examples/e2e_cluster.rs --sweep-clients) is
+  gated the same way when present (it needs a Rust toolchain and a
+  raised fd limit to regenerate).
 
 Exit code 0 = all gates pass; 1 = a gate failed (CI turns red).
 Run from anywhere: ``python3 python/bench/check_bench.py``.
@@ -166,6 +175,68 @@ def main():
                 "— batching cost throughput over the real cluster"
             )
         print(f"batching e2e tcp: ratio {ratio:.2f} >= 1 ok")
+
+    clients = load("BENCH_clients.json")
+    c_cells = {c.get("sessions"): c for c in clients.get("cells", [])}
+    for sessions in (1_000, 10_000):
+        if sessions not in c_cells:
+            fail(f"BENCH_clients.json missing cell sessions={sessions}")
+    for c in c_cells.values():
+        if float(c.get("ops_per_s", 0.0)) <= 0:
+            fail(f"BENCH_clients.json cell {c} lacks a positive ops/s")
+        if float(c.get("replies_per_flush", 0.0)) <= 1.0:
+            fail(
+                f"BENCH_clients.json cell sessions={c.get('sessions')} "
+                f"replies_per_flush {c.get('replies_per_flush')} <= 1 — the "
+                "event loop stopped batching replies per wakeup"
+            )
+    c_ratio = c_cells[10_000]["ops_per_s"] / c_cells[1_000]["ops_per_s"]
+    if c_ratio < 0.8:
+        fail(
+            f"BENCH_clients.json 10k/1k sessions ops/s ratio {c_ratio:.2f} < "
+            "0.8 — per-op cost grew with the session table (the loop must "
+            "pay per event, not per connection)"
+        )
+    c_busy = clients.get("busy", {})
+    if int(c_busy.get("busy_shed", 0)) <= 0:
+        fail("BENCH_clients.json admission control never shed — busy_shed == 0")
+    if int(c_busy.get("completed", 0)) != int(c_busy.get("burst", -1)):
+        fail(
+            f"BENCH_clients.json busy cell completed {c_busy.get('completed')} "
+            f"of {c_busy.get('burst')} — sheds lost or duplicated commands"
+        )
+    print(
+        f"clients: 10k/1k ratio {c_ratio:.2f} >= 0.8, replies/flush > 1 in "
+        f"{len(c_cells)} cells, {c_busy['busy_shed']} busy sheds ok"
+    )
+    # The Rust e2e harness (examples/e2e_cluster.rs --sweep-clients)
+    # records the same sweep over real TCP sockets; gate it when the
+    # file exists (needs a Rust toolchain + ulimit -n 65536).
+    if os.path.exists(root_path("BENCH_clients_tcp.json")):
+        e2e = load("BENCH_clients_tcp.json")
+        t_cells = {c.get("sessions"): c for c in e2e.get("cells", [])}
+        for sessions, c in t_cells.items():
+            if int(c.get("client_connections", 0)) != sessions:
+                fail(
+                    f"BENCH_clients_tcp.json sessions={sessions} counted "
+                    f"{c.get('client_connections')} event-loop connections — "
+                    "sessions leaked off the event-loop plane"
+                )
+            if sessions >= 10_000 and float(c.get("replies_per_flush", 0.0)) <= 1.0:
+                fail(
+                    f"BENCH_clients_tcp.json sessions={sessions} "
+                    "replies_per_flush <= 1 over real TCP"
+                )
+        t_ratio = float(e2e.get("ratio_10k_vs_1k_ops", 0.0))
+        if t_ratio < 0.8:
+            fail(
+                f"BENCH_clients_tcp.json 10k/1k ops ratio {t_ratio:.2f} < 0.8 "
+                "over real TCP"
+            )
+        t_busy = e2e.get("busy", {})
+        if int(t_busy.get("shed_at_edge", 0)) <= 0:
+            fail("BENCH_clients_tcp.json admission control never shed")
+        print(f"clients e2e tcp: ratio {t_ratio:.2f} >= 0.8, sheds observed ok")
 
     durability = load("BENCH_durability.json")
     d_cells = durability.get("cells", [])

@@ -3,18 +3,25 @@
 Byte-for-byte faithful to docs/WIRE.md: little-endian fixed-width
 integers, u8 message tags, length-prefixed ``MBatch`` members, and the
 client service frames (``ClientSubmit`` tag 17, carrying the session's
-read floor / ``ClientReply`` tag 18, carrying the decided timestamp) and
-the state-transfer frames (``ManifestRequest`` tag 22 /
+read floor / ``ClientReply`` tag 18, carrying the decided timestamp /
+``ClientBusy`` tag 25, the admission-control shed) and the
+state-transfer frames (``ManifestRequest`` tag 22 /
 ``ManifestReply`` tag 23 / ``Chunk`` tag 24). Used by
 ``bench_batching.py`` to measure framing amortization on this machine
 and as an executable cross-check of the WIRE.md spec: every frame
 produced here must decode to the same message, and malformed frames must
 raise ``WireError`` (mirroring the Rust codec returning ``Err`` — never a
 panic). The protocol, client and transfer planes are strictly separated:
-``decode`` rejects tags 17–18 and 22–24, ``decode_client`` rejects tags
-0–16, 21 and 22–24, ``decode_transfer`` rejects everything at or below
-tag 21, and an ``MBatch`` member carrying a client or transfer frame is
-malformed the same way a nested batch is.
+``decode`` rejects tags 17–18, 22–24 and 25, ``decode_client`` rejects
+tags 0–16, 21 and 22–24, ``decode_transfer`` rejects everything at or
+below tag 21 plus 25, and an ``MBatch`` member carrying a client or
+transfer frame is malformed the same way a nested batch is.
+
+``FrameDecoder`` mirrors the Rust event loop's incremental transport
+decoder (``[len u32][from u32][body]``): feed arbitrary byte chunks,
+get complete frames out — byte-for-byte equivalent to reading whole
+frames, whatever the chunking (the Rust side pins this with
+``prop_incremental_decode_matches_whole_frame_decode_on_any_split``).
 
 Messages are dicts with a ``t`` tag key, e.g.::
 
@@ -245,12 +252,14 @@ def encode(msg):
 
 
 def encode_client(frame):
-    """Encode a client frame (tags 17–18, without the length prefix).
+    """Encode a client frame (tags 17–18, 25; without the length prefix).
 
     ``ClientSubmit`` carries the session's read floor (u64, trailing) —
     the lowest stability timestamp a failover read may serve at;
     ``ClientReply`` carries the decided ordering timestamp (u64,
-    trailing) the session folds into that floor after a write.
+    trailing) the session folds into that floor after a write;
+    ``ClientBusy`` carries only the shed request's rid — the node's
+    admission control rejected the submit at the edge (retryable).
     """
     w = Writer()
     t = frame["t"]
@@ -263,6 +272,8 @@ def encode_client(frame):
             w.u64(k)
             w.u64(v)
         w.u64(frame["ts"])
+    elif t == "ClientBusy":
+        w.u8(25), w.rid(frame["rid"])
     else:
         raise ValueError(f"unknown client frame {t}")
     return w.bytes()
@@ -280,6 +291,8 @@ def decode_client(buf):
         rid = r.rid()
         response = [(r.u64(), r.u64()) for _ in range(r.u16())]
         return {"t": "ClientReply", "rid": rid, "response": response, "ts": r.u64()}
+    if tag == 25:
+        return {"t": "ClientBusy", "rid": r.rid()}
     if tag <= 16 or tag == 21:
         raise WireError(f"protocol frame tag {tag} in client stream")
     if 22 <= tag <= 24:
@@ -444,7 +457,7 @@ def _decode_at(r):
             # never travel between protocol peers.
             if body[:1] == b"\x10":
                 raise WireError("nested MBatch frame")
-            if body[:1] in (b"\x11", b"\x12"):
+            if body[:1] in (b"\x11", b"\x12", b"\x19"):
                 raise WireError(f"client frame tag {body[0]} inside MBatch")
             if body[:1] == b"\x13":
                 raise WireError("routed envelope inside MBatch")
@@ -464,7 +477,7 @@ def _decode_at(r):
         epoch = r.u64()
         evicted = [r.u32() for _ in range(r.u16())]
         return {"t": "MEpoch", "epoch": epoch, "evicted": evicted}
-    if tag in (17, 18):
+    if tag in (17, 18, 25):
         raise WireError(f"client frame tag {tag} in protocol stream")
     if tag == 19:
         raise WireError("routed envelope where a bare protocol message was expected")
@@ -534,6 +547,61 @@ def decode_merged(buf):
             )
         members.append((worker, msg))
     return members
+
+
+MAX_FRAME_BYTES = 16 << 20
+
+
+class FrameDecoder:
+    """Incremental transport-frame decoder (``[len u32][from u32][body]``),
+    mirroring ``rust/src/net/wire.rs FrameDecoder``: feed arbitrary byte
+    chunks with :meth:`feed`; it returns ``(consumed, complete)`` and
+    stops at each frame boundary. Read the completed frame with
+    :attr:`sender`/:attr:`body`, then :meth:`clear` before feeding on.
+    Raises ``WireError`` only on a length header above
+    ``MAX_FRAME_BYTES`` — a truncated stream just stays incomplete."""
+
+    def __init__(self):
+        self.hdr = b""
+        self.body = b""
+        self.body_len = 0
+        self.complete = False
+
+    def feed(self, chunk):
+        if self.complete:
+            return 0, True
+        used = 0
+        if len(self.hdr) < 8:
+            n = min(8 - len(self.hdr), len(chunk))
+            self.hdr += chunk[:n]
+            used += n
+            if len(self.hdr) < 8:
+                return used, False
+            length = struct.unpack("<I", self.hdr[0:4])[0]
+            if length > MAX_FRAME_BYTES:
+                raise WireError(
+                    f"frame of {length} bytes exceeds MAX_FRAME_BYTES"
+                )
+            self.body = b""
+            self.body_len = length
+            if length == 0:
+                self.complete = True
+                return used, True
+        take = min(self.body_len - len(self.body), len(chunk) - used)
+        self.body += chunk[used : used + take]
+        used += take
+        self.complete = len(self.body) == self.body_len
+        return used, self.complete
+
+    @property
+    def sender(self):
+        return struct.unpack("<I", self.hdr[4:8])[0]
+
+    def clear(self):
+        self.hdr = b""
+        self.body = b""
+        self.body_len = 0
+        self.complete = False
 
 
 def self_check():
@@ -647,6 +715,37 @@ def self_check():
         raise AssertionError("protocol message decoded as a client frame")
     except WireError:
         pass
+    # ClientBusy (tag 25, the admission-control shed): minimal frame —
+    # tag + rid, 17 bytes — that round-trips, truncates to WireError at
+    # every cut, and stays strictly on the client plane.
+    busy = {"t": "ClientBusy", "rid": (7, 9)}
+    enc = encode_client(busy)
+    assert enc[0] == 25 and len(enc) == 1 + 16, enc
+    assert decode_client(enc) == busy
+    for cut in range(len(enc)):
+        try:
+            decode_client(enc[:cut])
+            raise AssertionError(f"truncated busy frame decoded at {cut}")
+        except WireError:
+            pass
+    try:
+        decode(enc)
+        raise AssertionError("busy frame decoded as a protocol message")
+    except WireError:
+        pass
+    b = Writer()
+    b.u8(16), b.u16(1), b.u32(len(enc))
+    b.parts.append(enc)
+    try:
+        decode(b.bytes())
+        raise AssertionError("busy frame inside MBatch decoded")
+    except WireError:
+        pass
+    try:
+        decode_transfer(enc)
+        raise AssertionError("busy frame decoded on the transfer plane")
+    except WireError:
+        pass
     # Read-flagged ClientSubmit (op tag 3, the stability-served local
     # read): exact round-trip at zero payload, truncation at every cut,
     # bit-flips never escape WireError, and the frame stays on the client
@@ -673,8 +772,9 @@ def self_check():
                 d = decode_client(bytes(flipped))
                 # A surviving decode must still be a well-formed frame —
                 # flips in key/rid bytes are indistinguishable from other
-                # valid values; what matters is: never a crash.
-                assert d["t"] in ("ClientSubmit", "ClientReply")
+                # valid values (tag 17 ^ bit 3 is tag 25, a ClientBusy);
+                # what matters is: never a crash.
+                assert d["t"] in ("ClientSubmit", "ClientReply", "ClientBusy")
             except WireError:
                 pass
     try:
@@ -864,6 +964,49 @@ def self_check():
             raise AssertionError("non-transfer frame decoded as transfer")
         except WireError:
             pass
+    # Incremental transport decode ≡ whole-frame decode, whatever the
+    # chunking (mirrors the Rust incremental-decode property): client
+    # frames wrapped in [len][from][body], fed byte-by-byte, in awkward
+    # 7-byte chunks, and all at once.
+    client_from = (1 << 32) - 1
+    frames = [submit, reply, busy, read_submit]
+    stream = b""
+    for f in frames:
+        body = encode_client(f)
+        stream += struct.pack("<I", len(body)) + struct.pack("<I", client_from) + body
+
+    def run_chunked(size):
+        dec = FrameDecoder()
+        out = []
+        for off in range(0, len(stream), size):
+            chunk = stream[off : off + size]
+            while chunk:
+                used, done = dec.feed(chunk)
+                chunk = chunk[used:]
+                if done:
+                    assert dec.sender == client_from
+                    out.append(decode_client(dec.body))
+                    dec.clear()
+        assert not dec.complete, "stream fully consumed but a frame pending"
+        return out
+
+    for size in (1, 7, len(stream)):
+        assert run_chunked(size) == frames, f"chunk size {size} changed the frames"
+    # A truncated stream waits (incomplete) instead of erroring; an
+    # oversized length header errors instead of buffering.
+    dec = FrameDecoder()
+    rest = stream[: len(stream) - 3]
+    while rest:
+        used, done = dec.feed(rest)
+        rest = rest[used:]
+        if done:
+            dec.clear()
+    assert not dec.complete
+    try:
+        FrameDecoder().feed(struct.pack("<I", MAX_FRAME_BYTES + 1) + b"\xff" * 4)
+        raise AssertionError("oversized frame header accepted")
+    except WireError:
+        pass
 
 
 if __name__ == "__main__":

@@ -22,6 +22,22 @@
 #![warn(missing_docs)]
 
 use crate::core::{ClientId, Command, Key, Op, Rid};
+use crate::util::error::Error;
+
+/// Prefix of every busy-shed error a client can observe: a node whose
+/// per-session in-flight window (`Config::max_inflight_per_session`) is
+/// full sheds the submit at the edge with a `ClientBusy` frame
+/// (docs/WIRE.md tag 25), and `net::TcpClient` surfaces it as an
+/// `Error` carrying this prefix. Classify with [`is_busy_error`].
+pub const BUSY_ERROR_PREFIX: &str = "busy:";
+
+/// True iff `e` is an admission-control busy shed (retryable): the
+/// command was **not** executed and was **not** queued — re-issuing it
+/// with the same request id is safe (the executors' dedup window
+/// absorbs the duplicate if a race ever executes both).
+pub fn is_busy_error(e: &Error) -> bool {
+    e.to_string().starts_with(BUSY_ERROR_PREFIX)
+}
 
 /// A client session: the identity and request-id allocator behind every
 /// command a client submits. Sequence numbers start at 1 and never repeat
@@ -138,6 +154,16 @@ mod tests {
         assert_eq!(s.read_floor(), 40);
         s.note_write(0); // timestamp-free families are a no-op
         assert_eq!(s.read_floor(), 40);
+    }
+
+    #[test]
+    fn busy_errors_classify_by_prefix() {
+        let rid = Rid::new(ClientId(4), 2);
+        let busy = Error::msg(format!("{BUSY_ERROR_PREFIX} node shed rid {rid:?}"));
+        assert!(is_busy_error(&busy));
+        assert!(!is_busy_error(&Error::msg("connection reset by peer")));
+        // A busy mention elsewhere in the message is not a busy shed.
+        assert!(!is_busy_error(&Error::msg("peer busy: backoff")));
     }
 
     #[test]

@@ -133,6 +133,27 @@ pub struct Config {
     /// resets. 0 disables snapshots (recovery then replays the whole
     /// WAL).
     pub snapshot_every: u64,
+    /// Number of client-plane event-loop threads in the TCP runtime.
+    /// Every client connection is multiplexed onto one of these loops
+    /// (round-robin at accept) — connection count no longer costs
+    /// threads. Peer and transfer connections are unaffected: they stay
+    /// on dedicated blocking threads.
+    pub client_event_threads: usize,
+    /// Admission-control window: the maximum number of submits a single
+    /// client session may have in flight at the node. A submit arriving
+    /// over a full window is shed at the edge with an explicit
+    /// `ClientBusy` reply (wire tag 25) — it never reaches a worker —
+    /// and `TcpClient` surfaces it as a retryable busy error.
+    /// 0 = unbounded (no admission control).
+    pub max_inflight_per_session: usize,
+    /// Bounded wait of the per-peer writer's merge stage, in
+    /// microseconds. 0 (the default) keeps the opportunistic behaviour:
+    /// the writer merges only frames already queued and flushes
+    /// immediately — byte-identical to every run before this knob
+    /// existed (pinned by a unit test). A positive value lets the
+    /// writer wait up to this long for more frames before flushing,
+    /// trading bounded latency for more members per merged frame.
+    pub merge_wait_us: u64,
 }
 
 impl Config {
@@ -141,6 +162,18 @@ impl Config {
     /// lands well inside the window under any realistic client pipeline
     /// depth.
     pub const DEFAULT_DEDUP_WINDOW: usize = 64;
+
+    /// Default client-plane event-loop thread count (see
+    /// [`Config::client_event_threads`]). Two loops keep accept latency
+    /// and reply batching independent even on small machines; the bench
+    /// sweeps hold this fixed while connections scale 1k → 100k.
+    pub const DEFAULT_CLIENT_EVENT_THREADS: usize = 2;
+
+    /// Default per-session in-flight window (see
+    /// [`Config::max_inflight_per_session`]). Deep enough that a
+    /// well-behaved pipelined client never sees a busy reply; shallow
+    /// enough that a runaway session cannot queue unboundedly.
+    pub const DEFAULT_MAX_INFLIGHT_PER_SESSION: usize = 1024;
 
     pub fn new(r: usize, f: usize) -> Self {
         assert!(r >= 3, "need at least 3 replicas (r={r})");
@@ -168,6 +201,9 @@ impl Config {
             storage: StorageMode::Memory,
             wal_fsync_batch: 8,
             snapshot_every: 1024,
+            client_event_threads: Self::DEFAULT_CLIENT_EVENT_THREADS,
+            max_inflight_per_session: Self::DEFAULT_MAX_INFLIGHT_PER_SESSION,
+            merge_wait_us: 0,
         }
     }
 
@@ -292,6 +328,28 @@ impl Config {
     /// Checkpoint cadence (see [`Config::snapshot_every`]; 0 disables).
     pub fn with_snapshot_every(mut self, every: u64) -> Self {
         self.snapshot_every = every;
+        self
+    }
+
+    /// Client-plane event-loop thread count (see
+    /// [`Config::client_event_threads`]; must be ≥ 1).
+    pub fn with_client_event_threads(mut self, threads: usize) -> Self {
+        assert!(threads >= 1, "need at least one client event loop");
+        self.client_event_threads = threads;
+        self
+    }
+
+    /// Per-session in-flight admission window (see
+    /// [`Config::max_inflight_per_session`]; 0 = unbounded).
+    pub fn with_max_inflight_per_session(mut self, window: usize) -> Self {
+        self.max_inflight_per_session = window;
+        self
+    }
+
+    /// Bounded wait for the per-peer writer merge stage (see
+    /// [`Config::merge_wait_us`]; 0 = opportunistic, the default).
+    pub fn with_merge_wait_us(mut self, us: u64) -> Self {
+        self.merge_wait_us = us;
         self
     }
 

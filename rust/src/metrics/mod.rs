@@ -132,6 +132,22 @@ pub struct Counters {
     /// Snapshot pages fetched from a donor during restart state transfer
     /// (pages the recovering replica could not produce locally).
     pub chunks_fetched: u64,
+    /// Client connections accepted onto the event-loop plane over the
+    /// node's lifetime (peer/transfer connections are not counted —
+    /// they run on dedicated threads).
+    pub client_connections: u64,
+    /// Event-loop wakeups: poller returns with at least one ready
+    /// client connection or queued reply batch.
+    pub client_wakeups: u64,
+    /// Client-plane frames written to sessions (replies and busy sheds).
+    pub client_replies: u64,
+    /// Vectored flushes of per-connection reply queues. Replies ÷
+    /// flushes > 1 means the event loop batched replies per wakeup.
+    pub client_flushes: u64,
+    /// Submits shed at the edge with an explicit `ClientBusy` reply
+    /// because the session's in-flight window
+    /// (`Config::max_inflight_per_session`) was full.
+    pub busy_shed: u64,
 }
 
 impl Counters {
@@ -169,6 +185,11 @@ impl Counters {
         self.wal_bytes += o.wal_bytes;
         self.snapshots_taken += o.snapshots_taken;
         self.chunks_fetched += o.chunks_fetched;
+        self.client_connections += o.client_connections;
+        self.client_wakeups += o.client_wakeups;
+        self.client_replies += o.client_replies;
+        self.client_flushes += o.client_flushes;
+        self.busy_shed += o.busy_shed;
     }
 
     /// Mean number of messages per flushed batch (0 when batching never

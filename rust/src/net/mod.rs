@@ -7,16 +7,34 @@
 //! send `ClientSubmit` frames (docs/WIRE.md tag 17) and receive
 //! `ClientReply` frames (tag 18) — request/response over the same
 //! listener, distinguished by the frame header's sender field
-//! ([`CLIENT_FROM`]). Each node runs (a) an acceptor thread per inbound
-//! connection that decodes frames into per-worker event channels, (b)
-//! **one protocol thread per worker slot** (`Config::workers`,
-//! `protocol::common::shard`): each owns its own Tempo instance over the
-//! keys that hash to it, its own [`Executor`]/KV partition and its own
-//! rid→reply routing table, and (c) a tick timer fanning ticks to every
-//! worker. Peer frames travel inside the worker-routed envelope
-//! (docs/WIRE.md tag 19), so the acceptor routes by the envelope tag and
-//! client submits route by key hash — the monolithic deployment is simply
-//! `workers == 1`.
+//! ([`CLIENT_FROM`]). Each node runs (a) a poll-based acceptor thread,
+//! (b) `Config::client_event_threads` **client event loops** (see
+//! below), (c) **one protocol thread per worker slot**
+//! (`Config::workers`, `protocol::common::shard`): each owns its own
+//! Tempo instance over the keys that hash to it, its own
+//! [`Executor`]/KV partition and its own rid→reply routing table, and
+//! (d) a tick timer fanning ticks to every worker. Peer frames travel
+//! inside the worker-routed envelope (docs/WIRE.md tag 19), so frames
+//! route by the envelope tag and client submits route by key hash — the
+//! monolithic deployment is simply `workers == 1`.
+//!
+//! **Client edge (event loops, not threads).** Inbound connections are
+//! handed round-robin to a fixed pool of event-loop threads
+//! (`net::poll`: a hand-rolled `poll(2)` shim behind the [`poll::Poller`]
+//! trait — no `libc` crate, no async runtime). Each loop multiplexes
+//! many nonblocking sessions: reads run through an incremental frame
+//! decoder over the pooled buffer machinery (`wire::FrameDecoder`),
+//! replies queue per connection and flush as **one vectored write per
+//! wakeup**, and a bounded per-session in-flight window
+//! (`Config::max_inflight_per_session`) sheds overload at the edge with
+//! an explicit `ClientBusy` frame (tag 25) instead of queueing
+//! unboundedly. A connection whose first frame is *not* client-plane (a
+//! peer or a state-transfer dial) is handed off to a dedicated blocking
+//! thread — the peer plane keeps its thread-per-connection model, which
+//! is right for a full mesh of long-lived firehose links. Connection
+//! count therefore costs file descriptors, not threads;
+//! `Counters::{client_connections, client_wakeups, client_replies,
+//! client_flushes, busy_shed}` make the edge observable.
 //!
 //! **Send path (encode-once + per-peer frame merging).** A protocol
 //! step's outbound actions are lowered to bytes exactly once: a
@@ -41,9 +59,10 @@
 //! batchers alone cannot provide. Frame layout and limits are
 //! documented in `docs/WIRE.md`.
 
+pub mod poll;
 pub mod wire;
 
-use crate::client::Session;
+use crate::client::{Session, BUSY_ERROR_PREFIX};
 use crate::core::{
     ClientId, Command, Config, Key, Op, ProcessId, Response, Rid, StorageMode,
 };
@@ -55,13 +74,14 @@ use crate::protocol::tempo::Tempo;
 use crate::protocol::{Action, Protocol, RESTART_DOT_SLACK};
 use crate::store::storage::{assemble, plan_transfer, Durable, FileBackend, Manifest};
 use crate::store::{merkle_root, KvStore};
-use crate::util::error::{bail, Context, Result};
-use std::collections::HashMap;
+use crate::util::error::{bail, Context, Error, Result};
+use std::collections::{HashMap, VecDeque};
 use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -81,7 +101,7 @@ enum Event {
     Message { from: ProcessId, msg: Msg },
     /// A client submission; `floor` is the session's read-your-writes
     /// floor (consumed by `Protocol::submit_read`, 0 for writes).
-    Submit { cmd: Command, floor: u64, done: Sender<(Rid, Response, u64)> },
+    Submit { cmd: Command, floor: u64, done: Done },
     /// A state-transfer connection asks for this slot's current manifest
     /// and pages (served from the worker's executor so the snapshot is
     /// taken between protocol steps, never mid-execution).
@@ -90,9 +110,47 @@ enum Event {
     Shutdown,
 }
 
+/// Commands fed to one client event loop from outside its thread
+/// (always paired with a [`poll::Waker::wake`] so a sleeping loop
+/// notices).
+enum LoopCmd {
+    /// A freshly-accepted connection, plane still unknown — the loop
+    /// reads its first frame to find out (client stays, peer/transfer
+    /// hands off to a blocking thread).
+    Conn(TcpStream),
+    /// A completed request bound for the session at `token`.
+    Reply { token: poll::Token, rid: Rid, response: Response, ts: u64 },
+}
+
+/// Completion route of one in-flight client request: how the owning
+/// worker's `Action::Reply` travels back to the session that submitted.
+enum Done {
+    /// In-process submission ([`NodeHandle::submit`]): a plain channel.
+    Chan(Sender<(Rid, Response, u64)>),
+    /// A session multiplexed on a client event loop: the reply is queued
+    /// on the loop's command channel and the loop is woken to encode and
+    /// flush it (batched with whatever else that wakeup finds).
+    Loop { token: poll::Token, tx: Sender<LoopCmd>, waker: poll::Waker },
+}
+
+impl Done {
+    fn complete(self, rid: Rid, response: Response, ts: u64) {
+        match self {
+            Done::Chan(tx) => {
+                let _ = tx.send((rid, response, ts));
+            }
+            Done::Loop { token, tx, waker } => {
+                if tx.send(LoopCmd::Reply { token, rid, response, ts }).is_ok() {
+                    waker.wake();
+                }
+            }
+        }
+    }
+}
+
 /// A completion listener registered per in-flight request id; completions
 /// carry the command's decided timestamp (`Action::Reply::ts`).
-type DoneMap = HashMap<Rid, Sender<(Rid, Response, u64)>>;
+type DoneMap = HashMap<Rid, Done>;
 
 /// Per-worker observability shared with the [`NodeHandle`].
 #[derive(Default)]
@@ -109,12 +167,13 @@ pub struct NodeHandle {
     events: Vec<Sender<Event>>,
     workers: usize,
     threads: Vec<JoinHandle<()>>,
-    /// This node's own listen address plus the acceptor's stop flag:
-    /// `shutdown` raises the flag and dials itself to unblock `accept`,
-    /// so the listener is dropped and the port is free for a restart
-    /// (`start_node_in` on the same address).
-    addr: String,
-    closing: Arc<std::sync::atomic::AtomicBool>,
+    /// Stop flag observed by the acceptor and every client event loop;
+    /// `shutdown` raises it and fires `wakers` — no self-dial, no
+    /// leaked socket on a shutdown race.
+    closing: Arc<AtomicBool>,
+    /// Wake handles of the acceptor's poller and each client event
+    /// loop's poller, fired on shutdown to unblock their `poll`s.
+    wakers: Vec<poll::Waker>,
     /// One independently-locked stats slot per worker: each protocol
     /// thread writes only its own slot, so the shared-nothing workers
     /// never contend on observability.
@@ -139,7 +198,7 @@ impl NodeHandle {
         let (tx, rx) = channel();
         let w = worker_of_cmd(&cmd, self.workers)
             .unwrap_or_else(|(a, b)| panic!("command spans worker slots {a} and {b}"));
-        let _ = self.events[w].send(Event::Submit { cmd, floor, done: tx });
+        let _ = self.events[w].send(Event::Submit { cmd, floor, done: Done::Chan(tx) });
         rx
     }
 
@@ -155,6 +214,11 @@ impl NodeHandle {
         c.bytes_sent = self.net.bytes_sent.load(Ordering::Relaxed);
         c.frames_merged = self.net.frames_merged.load(Ordering::Relaxed);
         c.pooled_hits = wire::pool_stats::hits();
+        c.client_connections = self.net.client_connections.load(Ordering::Relaxed);
+        c.client_wakeups = self.net.client_wakeups.load(Ordering::Relaxed);
+        c.client_replies = self.net.client_replies.load(Ordering::Relaxed);
+        c.client_flushes = self.net.client_flushes.load(Ordering::Relaxed);
+        c.busy_shed = self.net.busy_shed.load(Ordering::Relaxed);
         c
     }
 
@@ -190,16 +254,20 @@ impl NodeHandle {
     /// Stop the node: drain the protocol threads (each flushes its WAL),
     /// close the listener (the port is immediately rebindable, so a
     /// crash-restart can boot the node again on the same address), and
-    /// join every thread the node owns. Handlers of still-open inbound
-    /// connections exit on their next frame — their worker channels are
-    /// gone — which severs the sockets and lets surviving peers notice.
+    /// join every thread the node owns. The acceptor and the client
+    /// event loops are unblocked through their pollers' wake tokens —
+    /// the old listener self-dial (and the socket it could leak on a
+    /// shutdown race) is gone. Handlers of still-open peer connections
+    /// exit on their next frame — their worker channels are gone —
+    /// which severs the sockets and lets surviving peers notice.
     pub fn shutdown(self) {
         self.closing.store(true, Ordering::SeqCst);
         for tx in &self.events {
             let _ = tx.send(Event::Shutdown);
         }
-        // Unblock the acceptor's `accept` so it observes the flag.
-        let _ = TcpStream::connect(&self.addr);
+        for waker in &self.wakers {
+            waker.wake();
+        }
         for t in self.threads {
             let _ = t.join();
         }
@@ -230,8 +298,11 @@ pub const MAX_FRAME_BYTES: usize = 16 << 20;
 /// a routed protocol message (or a merged frame of them) or a client
 /// frame depending on the sender ([`CLIENT_FROM`] marks the client
 /// plane). A frame that fits in the buffer's existing capacity counts as
-/// a pool hit (steady state: every frame after warm-up).
-fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<u32> {
+/// a pool hit (steady state: every frame after warm-up). Generic over
+/// the reader so the equivalence tests can drive it from an in-memory
+/// cursor; `wire::FrameDecoder` is the nonblocking twin of this
+/// function, and property tests pin the two to identical results.
+fn read_frame<R: Read>(stream: &mut R, buf: &mut Vec<u8>) -> Result<u32> {
     let mut hdr = [0u8; 8];
     stream.read_exact(&mut hdr)?;
     let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
@@ -261,6 +332,17 @@ struct NetStats {
     /// Frames coalesced away by merging: a merged frame of `k` members
     /// adds `k - 1`.
     frames_merged: AtomicU64,
+    /// Client connections accepted onto the event-loop plane.
+    client_connections: AtomicU64,
+    /// Event-loop poll returns (readiness, reply batches, or wakes).
+    client_wakeups: AtomicU64,
+    /// Client-plane frames fully written to sessions (replies + busy).
+    client_replies: AtomicU64,
+    /// Vectored flushes of per-connection reply queues; replies ÷
+    /// flushes > 1 ⇔ the loop batched replies per wakeup.
+    client_flushes: AtomicU64,
+    /// Submits shed at the edge with an explicit `ClientBusy` reply.
+    busy_shed: AtomicU64,
 }
 
 /// Bound on frames queued per peer writer. The channel is *bounded* on
@@ -374,6 +456,53 @@ fn write_merged_frame<W: Write>(
     Ok(8 + body_len)
 }
 
+/// Gather one flush batch for a peer writer: `first` plus whatever else
+/// can join it. With `wait == 0` (`Config::merge_wait_us` default) this
+/// is the opportunistic drain — only frames *already* queued are taken,
+/// byte-identical to the behaviour before the knob existed (pinned by a
+/// unit test below). A positive `wait` lets the writer block up to that
+/// long for more frames, raising members per merged frame at a bounded
+/// latency cost. Stops at `u16::MAX` members (the merged-frame count
+/// field) or when the next frame would push the merged body past
+/// `MAX_FRAME_BYTES` — that frame goes to `carry` and leads the next
+/// flush.
+fn collect_flush(
+    rx: &Receiver<OutFrame>,
+    first: OutFrame,
+    wait: Duration,
+    carry: &mut Option<OutFrame>,
+) -> Vec<OutFrame> {
+    let mut batch = vec![first];
+    let mut body_len = 3 + 4 + batch[0].bytes().len();
+    let deadline = if wait.is_zero() { None } else { Some(Instant::now() + wait) };
+    while batch.len() < u16::MAX as usize {
+        let next = match rx.try_recv() {
+            Ok(f) => Some(f),
+            Err(TryRecvError::Disconnected) => None,
+            Err(TryRecvError::Empty) => match deadline {
+                None => None,
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        None
+                    } else {
+                        rx.recv_timeout(d - now).ok()
+                    }
+                }
+            },
+        };
+        let Some(f) = next else { break };
+        let add = 4 + f.bytes().len();
+        if body_len + add > MAX_FRAME_BYTES {
+            *carry = Some(f); // flush what we have first
+            break;
+        }
+        body_len += add;
+        batch.push(f);
+    }
+    batch
+}
+
 /// The per-peer outbound stage: drain encoded frames bound for one peer
 /// and put them on the wire, merging everything immediately available
 /// (typically the ≤ `workers` per-slot `MBatch` flushes of one tick)
@@ -383,7 +512,14 @@ fn write_merged_frame<W: Write>(
 /// (crash-recovery fault model) rejoins the mesh without the survivors
 /// restarting; the frames lost while it was down are covered by the
 /// protocol retry timer and client failover.
-fn peer_writer(stream: TcpStream, addr: String, rx: Receiver<OutFrame>, from: u32, stats: Arc<NetStats>) {
+fn peer_writer(
+    stream: TcpStream,
+    addr: String,
+    rx: Receiver<OutFrame>,
+    from: u32,
+    merge_wait: Duration,
+    stats: Arc<NetStats>,
+) {
     let mut scratch: Vec<u8> = Vec::with_capacity(256);
     let mut carry: Option<OutFrame> = None;
     let mut stream: Option<TcpStream> = Some(stream);
@@ -395,22 +531,7 @@ fn peer_writer(stream: TcpStream, addr: String, rx: Receiver<OutFrame>, from: u3
                 Err(_) => return,
             },
         };
-        let mut batch = vec![first];
-        let mut body_len = 3 + 4 + batch[0].bytes().len();
-        while batch.len() < u16::MAX as usize {
-            match rx.try_recv() {
-                Ok(f) => {
-                    let add = 4 + f.bytes().len();
-                    if body_len + add > MAX_FRAME_BYTES {
-                        carry = Some(f); // flush what we have first
-                        break;
-                    }
-                    body_len += add;
-                    batch.push(f);
-                }
-                Err(_) => break,
-            }
-        }
+        let batch = collect_flush(&rx, first, merge_wait, &mut carry);
         if stream.is_none() {
             // The peer died earlier: one redial attempt per flush (on a
             // LAN a dead peer refuses instantly). Until it answers, its
@@ -455,18 +576,6 @@ fn peer_writer(stream: TcpStream, addr: String, rx: Receiver<OutFrame>, from: u3
     }
 }
 
-/// Serve one inbound connection: routed protocol frames (bare or merged)
-/// go to the worker slot named by their envelope; client submits route by
-/// key hash and lazily start a reply-writer thread for the connection,
-/// registering its sender as the request's completion route. The
-/// connection reads every frame into one pooled buffer (recycled when
-/// the connection drops), so steady-state receive allocates nothing.
-fn serve_connection(mut stream: TcpStream, node: ProcessId, txs: Vec<Sender<Event>>) {
-    let mut rbuf = wire::FrameBuf::take();
-    serve_connection_inner(&mut stream, node, &txs, &mut rbuf);
-    rbuf.recycle();
-}
-
 /// Route one decoded routed frame to its worker slot. `Err` drops the
 /// connection (hostile/mismatched deployment or shutdown).
 fn route_peer_frame(
@@ -481,129 +590,467 @@ fn route_peer_frame(
     txs[w].send(Event::Message { from, msg: routed.msg }).map_err(|_| ())
 }
 
-fn serve_connection_inner(
+/// Handle one frame of a **non-client** connection (peer or transfer
+/// plane): routed protocol frames (bare or merged) go to the worker slot
+/// named by their envelope; transfer requests round-trip through the
+/// slot's worker. Returns `false` to drop the connection (hostile or
+/// cross-plane input, a dead worker channel, or a dead socket).
+/// `transfer_pages` caches pages per slot so a transfer costs the worker
+/// a single `Manifest` event no matter how many pages move.
+fn handle_nonclient_frame(
     stream: &mut TcpStream,
     node: ProcessId,
     txs: &[Sender<Event>],
-    rbuf: &mut wire::FrameBuf,
-) {
+    from: u32,
+    body: &[u8],
+    transfer_pages: &mut HashMap<u32, HashMap<u64, Vec<u8>>>,
+) -> bool {
     let workers = txs.len();
-    let mut reply_tx: Option<Sender<(Rid, Response, u64)>> = None;
-    // Pages cached per slot for the transfer plane: a `ManifestRequest`
-    // snapshots the slot's store once (one worker round-trip); the
-    // follow-up `Chunk` fetches are served from the cache, so a transfer
-    // costs the worker a single event no matter how many pages move.
-    let mut transfer_pages: HashMap<u32, HashMap<u64, Vec<u8>>> = HashMap::new();
-    loop {
-        let from = match read_frame(stream, rbuf.vec()) {
-            Ok(f) => f,
-            Err(_) => return,
-        };
-        let body = rbuf.bytes();
-        if from == CLIENT_FROM {
-            let (cmd, floor) = match wire::decode_client(body) {
-                Ok(wire::ClientFrame::Submit { cmd, floor }) => (cmd, floor),
-                // A node never receives replies; malformed input drops
-                // the connection (the codec promises Err, not panic).
-                Ok(wire::ClientFrame::Reply { .. }) | Err(_) => return,
-            };
-            // A command must live inside one worker slot (see
-            // protocol::common::shard); a spanning key set is malformed
-            // for this deployment and drops the connection.
-            let w = match worker_of_cmd(&cmd, workers) {
-                Ok(w) => w,
-                Err(_) => return,
-            };
-            if reply_tx.is_none() {
-                let mut wstream = match stream.try_clone() {
-                    Ok(s) => s,
-                    Err(_) => return,
+    if from == CLIENT_FROM {
+        // Client frames never reach the blocking plane — the event loop
+        // keeps client sessions; one arriving here is hostile.
+        return false;
+    }
+    if from == TRANSFER_FROM {
+        return match wire::decode_transfer(body) {
+            Ok(wire::TransferFrame::ManifestRequest { slot }) => {
+                if slot as usize >= workers {
+                    return false;
+                }
+                let (txm, rxm) = channel();
+                if txs[slot as usize].send(Event::Manifest { done: txm }).is_err() {
+                    return false;
+                }
+                let (manifest, pages) = match rxm.recv() {
+                    Ok(v) => v,
+                    Err(_) => return false,
                 };
-                let (txr, rxr) = channel::<(Rid, Response, u64)>();
-                std::thread::spawn(move || {
-                    for (rid, response, ts) in rxr {
-                        let body = wire::encode_client(&wire::ClientFrame::Reply {
-                            rid,
-                            response,
-                            ts,
-                        });
-                        if write_frame(&mut wstream, node.0, &body).is_err() {
-                            return;
-                        }
-                    }
-                });
-                reply_tx = Some(txr);
+                let reply = wire::TransferFrame::ManifestReply {
+                    slot,
+                    applied: manifest.applied,
+                    chunks: manifest.chunks.clone(),
+                    dot_floors: manifest.dot_floors.clone(),
+                    dedup: manifest.dedup.clone(),
+                };
+                transfer_pages
+                    .insert(slot, manifest.chunks.iter().copied().zip(pages).collect());
+                write_frame(stream, node.0, &wire::encode_transfer(&reply)).is_ok()
             }
-            let done = reply_tx.as_ref().expect("reply writer started").clone();
-            if txs[w].send(Event::Submit { cmd, floor, done }).is_err() {
-                return;
+            Ok(wire::TransferFrame::Chunk { slot, hash, present: false, .. }) => {
+                let data = transfer_pages.get(&slot).and_then(|m| m.get(&hash)).cloned();
+                let reply = wire::TransferFrame::Chunk {
+                    slot,
+                    hash,
+                    present: data.is_some(),
+                    data: data.unwrap_or_default(),
+                };
+                write_frame(stream, node.0, &wire::encode_transfer(&reply)).is_ok()
             }
-        } else if from == TRANSFER_FROM {
-            match wire::decode_transfer(body) {
-                Ok(wire::TransferFrame::ManifestRequest { slot }) => {
-                    if slot as usize >= workers {
-                        return;
-                    }
-                    let (txm, rxm) = channel();
-                    if txs[slot as usize].send(Event::Manifest { done: txm }).is_err() {
-                        return;
-                    }
-                    let (manifest, pages) = match rxm.recv() {
-                        Ok(v) => v,
-                        Err(_) => return,
-                    };
-                    let reply = wire::TransferFrame::ManifestReply {
-                        slot,
-                        applied: manifest.applied,
-                        chunks: manifest.chunks.clone(),
-                        dot_floors: manifest.dot_floors.clone(),
-                        dedup: manifest.dedup.clone(),
-                    };
-                    transfer_pages
-                        .insert(slot, manifest.chunks.iter().copied().zip(pages).collect());
-                    if write_frame(stream, node.0, &wire::encode_transfer(&reply)).is_err() {
-                        return;
-                    }
+            // A donor never receives replies; malformed input drops the
+            // connection.
+            Ok(_) | Err(_) => false,
+        };
+    }
+    if body.first() == Some(&wire::TAG_MERGED) {
+        // The per-peer merger coalesced several routed frames into one
+        // wire frame; route the members in wire order (per-slot FIFO is
+        // preserved: a slot's frames enter the merge queue in send
+        // order).
+        let members = match wire::decode_merged(body) {
+            Ok(m) => m,
+            Err(_) => return false,
+        };
+        for routed in members {
+            if route_peer_frame(txs, ProcessId(from), routed).is_err() {
+                return false;
+            }
+        }
+        true
+    } else {
+        let routed = match wire::decode_routed(body) {
+            Ok(r) => r,
+            Err(_) => return false,
+        };
+        route_peer_frame(txs, ProcessId(from), routed).is_ok()
+    }
+}
+
+/// A peer or transfer connection identified by its first frame leaves
+/// the event loop and gets what the peer plane always had: a dedicated
+/// blocking thread (right for a full mesh of long-lived firehose links,
+/// and for the strictly request/response transfer plane). `dec` arrives
+/// holding the complete first frame; `leftover` is whatever the loop
+/// read past it. The decoder keeps running here — over blocking reads —
+/// so no byte is lost or reordered across the handoff.
+fn serve_handoff(
+    mut stream: TcpStream,
+    node: ProcessId,
+    txs: Vec<Sender<Event>>,
+    mut dec: wire::FrameDecoder,
+    leftover: Vec<u8>,
+) {
+    let mut transfer_pages: HashMap<u32, HashMap<u64, Vec<u8>>> = HashMap::new();
+    if !handle_nonclient_frame(
+        &mut stream,
+        node,
+        &txs,
+        dec.sender(),
+        dec.body(),
+        &mut transfer_pages,
+    ) {
+        dec.recycle();
+        return;
+    }
+    dec.clear();
+    let mut pending = leftover;
+    let mut off = 0;
+    let mut rbuf = vec![0u8; 16 << 10];
+    loop {
+        while off < pending.len() {
+            let (used, done) = match dec.feed(&pending[off..]) {
+                Ok(v) => v,
+                Err(_) => {
+                    dec.recycle();
+                    return;
                 }
-                Ok(wire::TransferFrame::Chunk { slot, hash, present: false, .. }) => {
-                    let data = transfer_pages.get(&slot).and_then(|m| m.get(&hash)).cloned();
-                    let reply = wire::TransferFrame::Chunk {
-                        slot,
-                        hash,
-                        present: data.is_some(),
-                        data: data.unwrap_or_default(),
-                    };
-                    if write_frame(stream, node.0, &wire::encode_transfer(&reply)).is_err() {
-                        return;
-                    }
-                }
-                // A donor never receives replies; malformed input drops
-                // the connection.
-                Ok(_) | Err(_) => return,
-            }
-        } else if body.first() == Some(&wire::TAG_MERGED) {
-            // The per-peer merger coalesced several routed frames into
-            // one wire frame; route the members in wire order (per-slot
-            // FIFO is preserved: a slot's frames enter the merge queue
-            // in send order).
-            let members = match wire::decode_merged(body) {
-                Ok(m) => m,
-                Err(_) => return,
             };
-            for routed in members {
-                if route_peer_frame(txs, ProcessId(from), routed).is_err() {
+            off += used;
+            if done {
+                let keep = handle_nonclient_frame(
+                    &mut stream,
+                    node,
+                    &txs,
+                    dec.sender(),
+                    dec.body(),
+                    &mut transfer_pages,
+                );
+                dec.clear();
+                if !keep {
+                    dec.recycle();
                     return;
                 }
             }
-        } else {
-            let routed = match wire::decode_routed(body) {
-                Ok(r) => r,
-                Err(_) => return,
-            };
-            if route_peer_frame(txs, ProcessId(from), routed).is_err() {
+        }
+        pending.clear();
+        off = 0;
+        match stream.read(&mut rbuf) {
+            Ok(0) => {
+                dec.recycle();
+                return;
+            }
+            Ok(n) => pending.extend_from_slice(&rbuf[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                dec.recycle();
                 return;
             }
         }
+    }
+}
+
+/// One client session multiplexed on an event loop.
+struct ClientConn {
+    stream: TcpStream,
+    /// Incremental frame decoder (pooled body buffer, reused across
+    /// frames — the nonblocking twin of `read_frame`).
+    dec: wire::FrameDecoder,
+    /// Encoded transport frames awaiting flush; `out_off` is how much of
+    /// the front frame already left the socket (partial vectored write).
+    out: VecDeque<wire::FrameBuf>,
+    out_off: usize,
+    /// Submits forwarded to workers and not yet replied — the admission
+    /// window (`Config::max_inflight_per_session`) is enforced on this.
+    inflight: usize,
+    /// Whether the first frame proved this is a client session (a
+    /// non-client first frame hands the stream off instead).
+    identified: bool,
+    /// Current poller interest includes writability (tracked to avoid
+    /// redundant `set_interest` calls).
+    want_write: bool,
+}
+
+/// What servicing a connection's readiness decided.
+enum ConnFate {
+    Keep,
+    /// Drop the connection (EOF, error, hostile input, or shutdown).
+    Dead,
+    /// First frame was peer/transfer plane: hand the stream (and the
+    /// bytes read past the frame) to a blocking thread.
+    Handoff(Vec<u8>),
+}
+
+/// Encode one client frame as a full transport frame —
+/// `[len][from][body]` — into a pooled buffer queued on `conn.out`.
+fn enqueue_client_frame(conn: &mut ClientConn, from: u32, frame: &wire::ClientFrame) {
+    let mut fb = wire::FrameBuf::take();
+    let body_len = wire::client_encoded_len(frame);
+    let v = fb.vec();
+    v.extend_from_slice(&(body_len as u32).to_le_bytes());
+    v.extend_from_slice(&from.to_le_bytes());
+    let mut w = wire::Writer::from_vec(std::mem::take(v));
+    wire::encode_client_into(&mut w, frame);
+    *fb.vec() = w.buf;
+    conn.out.push_back(fb);
+}
+
+/// Flush `conn`'s outbound queue: every queued reply goes out in as few
+/// vectored writes as possible (one, in the common case). Returns
+/// `false` if the connection died. On `WouldBlock` the remainder stays
+/// queued — the caller raises write interest and retries on the next
+/// writable event.
+fn flush_conn(conn: &mut ClientConn, stats: &NetStats) -> bool {
+    while !conn.out.is_empty() {
+        let mut slices: Vec<IoSlice> = Vec::with_capacity(conn.out.len().min(64));
+        for (i, fb) in conn.out.iter().take(64).enumerate() {
+            let b = fb.bytes();
+            slices.push(IoSlice::new(if i == 0 { &b[conn.out_off..] } else { b }));
+        }
+        match conn.stream.write_vectored(&slices) {
+            Ok(0) => return false,
+            Ok(mut n) => {
+                stats.client_flushes.fetch_add(1, Ordering::Relaxed);
+                while n > 0 {
+                    let front_rem = conn.out[0].bytes().len() - conn.out_off;
+                    if n >= front_rem {
+                        n -= front_rem;
+                        conn.out_off = 0;
+                        let fb = conn.out.pop_front().expect("front frame");
+                        fb.recycle();
+                        stats.client_replies.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        conn.out_off += n;
+                        n = 0;
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// Service one connection's read readiness: drain the socket through the
+/// incremental decoder, identify the plane on the first frame, apply
+/// admission control, and forward submits to their worker slots.
+#[allow(clippy::too_many_arguments)]
+fn service_readable(
+    conn: &mut ClientConn,
+    token: poll::Token,
+    node: ProcessId,
+    txs: &[Sender<Event>],
+    max_inflight: usize,
+    cmd_tx: &Sender<LoopCmd>,
+    waker: &poll::Waker,
+    stats: &NetStats,
+    rbuf: &mut [u8],
+) -> ConnFate {
+    loop {
+        let n = match conn.stream.read(rbuf) {
+            Ok(0) => return ConnFate::Dead,
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return ConnFate::Keep,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return ConnFate::Dead,
+        };
+        let mut off = 0;
+        while off < n {
+            let (used, done) = match conn.dec.feed(&rbuf[off..n]) {
+                Ok(v) => v,
+                Err(_) => return ConnFate::Dead,
+            };
+            off += used;
+            if !done {
+                continue;
+            }
+            if !conn.identified && conn.dec.sender() != CLIENT_FROM {
+                // Peer or transfer plane: hand off with the unconsumed
+                // tail of this read (bytes of the *next* frames).
+                return ConnFate::Handoff(rbuf[off..n].to_vec());
+            }
+            conn.identified = true;
+            let (cmd, floor) = match wire::decode_client(conn.dec.body()) {
+                Ok(wire::ClientFrame::Submit { cmd, floor }) => (cmd, floor),
+                // A node only ever receives submits on this plane.
+                Ok(_) | Err(_) => return ConnFate::Dead,
+            };
+            conn.dec.clear();
+            // A command must live inside one worker slot (see
+            // protocol::common::shard); a spanning key set is malformed
+            // for this deployment and drops the connection.
+            let w = match worker_of_cmd(&cmd, txs.len()) {
+                Ok(w) => w,
+                Err(_) => return ConnFate::Dead,
+            };
+            if max_inflight > 0 && conn.inflight >= max_inflight {
+                // Admission control: shed at the edge, before any worker
+                // sees the command. The explicit busy reply is the
+                // backpressure signal — nothing queues unboundedly.
+                stats.busy_shed.fetch_add(1, Ordering::Relaxed);
+                enqueue_client_frame(conn, node.0, &wire::ClientFrame::Busy { rid: cmd.rid });
+                continue;
+            }
+            conn.inflight += 1;
+            let done = Done::Loop { token, tx: cmd_tx.clone(), waker: waker.clone() };
+            if txs[w].send(Event::Submit { cmd, floor, done }).is_err() {
+                return ConnFate::Dead;
+            }
+        }
+    }
+}
+
+/// One client event loop: multiplexes many sessions over a [`Poller`].
+/// Wakeups come from socket readiness, from workers completing requests
+/// (`Done::Loop` → [`LoopCmd::Reply`] + wake), from the acceptor handing
+/// over fresh connections, and from shutdown. Each wakeup drains the
+/// command channel, services ready sockets, then flushes every
+/// connection that accumulated replies — one vectored write per
+/// connection per wakeup in the common case.
+fn client_loop<P: poll::Poller>(
+    mut poller: P,
+    cmd_rx: Receiver<LoopCmd>,
+    cmd_tx: Sender<LoopCmd>,
+    node: ProcessId,
+    txs: Vec<Sender<Event>>,
+    max_inflight: usize,
+    closing: Arc<AtomicBool>,
+    stats: Arc<NetStats>,
+) {
+    let waker = poller.waker();
+    let mut conns: HashMap<poll::Token, ClientConn> = HashMap::new();
+    let mut next_token: poll::Token = 0;
+    let mut events: Vec<(poll::Token, poll::Readiness)> = Vec::new();
+    let mut rbuf = vec![0u8; 64 << 10];
+    let mut dirty: Vec<poll::Token> = Vec::new();
+    loop {
+        if poller.poll(&mut events, None).is_err() {
+            break;
+        }
+        if closing.load(Ordering::SeqCst) {
+            break;
+        }
+        stats.client_wakeups.fetch_add(1, Ordering::Relaxed);
+        dirty.clear();
+        // Phase 1: commands — adopt fresh connections, absorb completed
+        // requests into per-connection reply queues.
+        loop {
+            match cmd_rx.try_recv() {
+                Ok(LoopCmd::Conn(stream)) => {
+                    if stream.set_nonblocking(true).is_err() || stream.set_nodelay(true).is_err()
+                    {
+                        continue;
+                    }
+                    let token = next_token;
+                    next_token += 1;
+                    poller.register(token, stream.as_raw_fd(), poll::Interest::READ);
+                    conns.insert(
+                        token,
+                        ClientConn {
+                            stream,
+                            dec: wire::FrameDecoder::new(),
+                            out: VecDeque::new(),
+                            out_off: 0,
+                            inflight: 0,
+                            identified: false,
+                            want_write: false,
+                        },
+                    );
+                    stats.client_connections.fetch_add(1, Ordering::Relaxed);
+                    // The socket may have become readable before the
+                    // registration: service it as if an event fired.
+                    dirty.push(token);
+                    events.push((token, poll::Readiness { readable: true, ..Default::default() }));
+                }
+                Ok(LoopCmd::Reply { token, rid, response, ts }) => {
+                    // A reply for a connection that died in the meantime
+                    // is dropped (the client re-issues via failover).
+                    if let Some(conn) = conns.get_mut(&token) {
+                        conn.inflight = conn.inflight.saturating_sub(1);
+                        enqueue_client_frame(
+                            conn,
+                            node.0,
+                            &wire::ClientFrame::Reply { rid, response, ts },
+                        );
+                        dirty.push(token);
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        // Phase 2: socket readiness.
+        for i in 0..events.len() {
+            let (token, ready) = events[i];
+            let fate = match conns.get_mut(&token) {
+                None => continue,
+                Some(conn) => {
+                    if ready.writable {
+                        dirty.push(token);
+                    }
+                    if ready.readable || ready.error {
+                        service_readable(
+                            conn,
+                            token,
+                            node,
+                            &txs,
+                            max_inflight,
+                            &cmd_tx,
+                            &waker,
+                            &stats,
+                            &mut rbuf,
+                        )
+                    } else {
+                        ConnFate::Keep
+                    }
+                }
+            };
+            match fate {
+                ConnFate::Keep => {}
+                ConnFate::Dead => {
+                    let conn = conns.remove(&token).expect("serviced conn");
+                    poller.deregister(token);
+                    conn.dec.recycle();
+                }
+                ConnFate::Handoff(leftover) => {
+                    let conn = conns.remove(&token).expect("serviced conn");
+                    poller.deregister(token);
+                    // Not a client after all: it was never a submit
+                    // source, so the connection count stays honest.
+                    stats.client_connections.fetch_sub(1, Ordering::Relaxed);
+                    if conn.stream.set_nonblocking(false).is_ok() {
+                        let txs = txs.to_vec();
+                        std::thread::spawn(move || {
+                            serve_handoff(conn.stream, node, txs, conn.dec, leftover)
+                        });
+                    } else {
+                        conn.dec.recycle();
+                    }
+                }
+            }
+        }
+        // Phase 3: flush every connection that accumulated output, then
+        // settle poller interest (write interest only while a queue has
+        // a blocked remainder).
+        for i in 0..dirty.len() {
+            let token = dirty[i];
+            let Some(conn) = conns.get_mut(&token) else { continue };
+            if !flush_conn(conn, &stats) {
+                let conn = conns.remove(&token).expect("flushed conn");
+                poller.deregister(token);
+                conn.dec.recycle();
+                continue;
+            }
+            let want = !conn.out.is_empty();
+            if want != conn.want_write {
+                conn.want_write = want;
+                let interest =
+                    if want { poll::Interest::READ_WRITE } else { poll::Interest::READ };
+                poller.set_interest(token, interest);
+            }
+        }
+    }
+    for (_, conn) in conns.drain() {
+        conn.dec.recycle();
     }
 }
 
@@ -702,34 +1149,78 @@ pub fn start_node_in(
     }
     let mut threads = Vec::new();
 
-    // Acceptor: protocol peers and clients dial us. The closing flag is
-    // raised by `NodeHandle::shutdown`, which then dials the listener to
-    // unblock `accept`; breaking drops the listener and frees the port
-    // for an in-process restart.
-    let closing = Arc::new(std::sync::atomic::AtomicBool::new(false));
-    {
+    // Client event loops: a small fixed pool, each thread multiplexing
+    // many sessions over its own poller. Connections land here first —
+    // the first frame identifies the plane, and peer/transfer links are
+    // handed off to dedicated blocking threads.
+    let net_stats = Arc::new(NetStats::default());
+    let closing = Arc::new(AtomicBool::new(false));
+    let mut loop_txs: Vec<Sender<LoopCmd>> = Vec::new();
+    let mut loop_wakers: Vec<poll::Waker> = Vec::new();
+    for _ in 0..config.client_event_threads.max(1) {
+        let poller = poll::PollPoller::new().context("create client-loop poller")?;
+        loop_wakers.push(poller.waker());
+        let (cmd_tx, cmd_rx) = channel::<LoopCmd>();
+        loop_txs.push(cmd_tx.clone());
         let txs = event_txs.clone();
         let closing = closing.clone();
+        let stats = net_stats.clone();
+        let max_inflight = config.max_inflight_per_session;
         threads.push(std::thread::spawn(move || {
-            for stream in listener.incoming() {
-                if closing.load(Ordering::SeqCst) {
-                    break;
+            client_loop(poller, cmd_rx, cmd_tx, id, txs, max_inflight, closing, stats)
+        }));
+    }
+
+    // Acceptor: protocol peers and clients dial us. Accepted sockets are
+    // dealt round-robin to the event loops. The acceptor polls its own
+    // nonblocking listener, so `NodeHandle::shutdown` unblocks it with
+    // the poller's wake token — no self-dial, no leaked socket; breaking
+    // drops the listener and frees the port for an in-process restart.
+    let mut wakers: Vec<poll::Waker> = Vec::new();
+    {
+        listener.set_nonblocking(true)?;
+        let mut poller = poll::PollPoller::new().context("create acceptor poller")?;
+        wakers.push(poller.waker());
+        let closing = closing.clone();
+        let loop_txs = loop_txs.clone();
+        let loop_wakers = loop_wakers.clone();
+        threads.push(std::thread::spawn(move || {
+            const LISTENER: poll::Token = 0;
+            poller.register(LISTENER, listener.as_raw_fd(), poll::Interest::READ);
+            let mut events = Vec::new();
+            let mut rr = 0usize;
+            loop {
+                if poller.poll(&mut events, None).is_err() {
+                    return;
                 }
-                let stream = match stream {
-                    Ok(s) => s,
-                    Err(_) => break,
-                };
-                let txs = txs.clone();
-                std::thread::spawn(move || serve_connection(stream, id, txs));
+                if closing.load(Ordering::SeqCst) {
+                    return;
+                }
+                loop {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let i = rr % loop_txs.len();
+                            rr = rr.wrapping_add(1);
+                            if loop_txs[i].send(LoopCmd::Conn(stream)).is_ok() {
+                                loop_wakers[i].wake();
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => return,
+                    }
+                }
             }
         }));
     }
+    wakers.extend(loop_wakers);
 
     // Dial every peer (retry until the whole cluster is up). Each peer
     // gets its own writer thread — the per-peer outbound stage — fed by
     // a channel the worker threads share; the writer merges whatever is
-    // queued into single wire frames (one vectored write per flush).
-    let net_stats = Arc::new(NetStats::default());
+    // queued into single wire frames (one vectored write per flush;
+    // `config.merge_wait_us` optionally lingers for stragglers).
+    let merge_wait = Duration::from_micros(config.merge_wait_us);
     let mut peers: HashMap<ProcessId, SyncSender<OutFrame>> = HashMap::new();
     for (j, addr) in addrs.iter().enumerate() {
         if j == me {
@@ -751,8 +1242,9 @@ pub fn start_node_in(
         let stats = net_stats.clone();
         let from = id.0;
         let peer_addr = addr.clone();
-        threads
-            .push(std::thread::spawn(move || peer_writer(stream, peer_addr, rx, from, stats)));
+        threads.push(std::thread::spawn(move || {
+            peer_writer(stream, peer_addr, rx, from, merge_wait, stats)
+        }));
         peers.insert(ProcessId(j as u32), tx);
     }
 
@@ -887,8 +1379,8 @@ pub fn start_node_in(
                     matches!(&event, Event::Submit { cmd, .. } if cmd.op == Op::Read);
                 let actions = match event {
                     Event::Message { from, msg } => proto.handle(from, msg, now_us(start)),
-                    Event::Submit { cmd, floor, done: tx } => {
-                        done.insert(cmd.rid, tx);
+                    Event::Submit { cmd, floor, done: route } => {
+                        done.insert(cmd.rid, route);
                         if read_submit {
                             // The local-read path: served at this replica
                             // with zero protocol messages once covered by
@@ -958,8 +1450,8 @@ pub fn start_node_in(
                             }
                         }
                         Action::Reply { rid, response, ts } => {
-                            if let Some(tx) = done.remove(&rid) {
-                                let _ = tx.send((rid, response, ts));
+                            if let Some(route) = done.remove(&rid) {
+                                route.complete(rid, response, ts);
                             }
                         }
                         _ => {}
@@ -991,8 +1483,8 @@ pub fn start_node_in(
         events: event_txs,
         workers,
         threads,
-        addr: addrs[me].clone(),
         closing,
+        wakers,
         stats,
         net: net_stats,
     })
@@ -1018,6 +1510,15 @@ pub fn start_node_in(
 /// of executing twice. Exactly-once end to end: a request is lost only
 /// if it never reached any surviving quorum, and it is never applied
 /// twice no matter how many times it is re-issued.
+///
+/// Surfaces **admission control**: a node whose per-session in-flight
+/// window is full answers a submit with a `ClientBusy` frame (tag 25)
+/// instead of queueing it; the client reports it as an error carrying
+/// [`BUSY_ERROR_PREFIX`] (classify with `client::is_busy_error`). A
+/// busy-shed rid stays outstanding — the command was neither executed
+/// nor queued, so [`TcpClient::resubmit`] can safely re-issue it (same
+/// rid) after backing off, and failover re-issues it like any other
+/// unacked request.
 pub struct TcpClient {
     session: Session,
     stream: TcpStream,
@@ -1029,8 +1530,34 @@ pub struct TcpClient {
     /// Replies (with their decided timestamps) read off the socket while
     /// waiting for a different rid.
     buffered: HashMap<Rid, (Response, u64)>,
-    /// Pooled receive buffer, reused across reply frames.
-    rbuf: wire::FrameBuf,
+    /// Incremental frame decoder (pooled body buffer, reused across
+    /// reply frames — the same state machine the node's event loop runs).
+    dec: wire::FrameDecoder,
+    /// Raw bytes read off the socket and not yet fed to the decoder
+    /// (`pending_off` marks the consumed prefix).
+    pending: Vec<u8>,
+    pending_off: usize,
+    /// Busy sheds observed while waiting for a *different* rid, reported
+    /// on the next receive call.
+    busied: VecDeque<Rid>,
+    /// The rid behind the most recent busy error this client returned.
+    last_busy: Option<Rid>,
+    /// Client-side submit window (0 = unbounded): `submit_async` refuses
+    /// (with a busy error) to put more than this many rids in flight,
+    /// keeping a well-behaved client under the node's edge window.
+    window: usize,
+}
+
+/// What one decoded client-plane frame from the node means.
+enum Incoming {
+    Reply(Rid, Response, u64),
+    Busy(Rid),
+}
+
+/// The error a busy shed surfaces: prefixed so `client::is_busy_error`
+/// classifies it as retryable.
+fn busy_shed_error(rid: Rid) -> Error {
+    Error::msg(format!("{BUSY_ERROR_PREFIX} node shed rid {rid:?}"))
 }
 
 impl TcpClient {
@@ -1044,8 +1571,21 @@ impl TcpClient {
             stream,
             outstanding: HashMap::new(),
             buffered: HashMap::new(),
-            rbuf: wire::FrameBuf::take(),
+            dec: wire::FrameDecoder::new(),
+            pending: Vec::new(),
+            pending_off: 0,
+            busied: VecDeque::new(),
+            last_busy: None,
+            window: 0,
         })
+    }
+
+    /// Cap the client-side submit window at `n` in-flight rids
+    /// (0 = unbounded, the default). With the cap, `submit_async` fails
+    /// fast with a busy error instead of letting the node shed.
+    pub fn with_window(mut self, n: usize) -> Self {
+        self.window = n;
+        self
     }
 
     /// Fail over to the node at `addr`: dial it, then re-issue every
@@ -1062,6 +1602,13 @@ impl TcpClient {
         let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
         stream.set_nodelay(true)?;
         self.stream = stream;
+        // A half-decoded frame from the dead stream is meaningless on
+        // the new one; busy sheds from the old node are moot (the rids
+        // are still outstanding and re-issued below).
+        self.dec.clear();
+        self.pending.clear();
+        self.pending_off = 0;
+        self.busied.clear();
         let mut unacked: Vec<&Command> = self
             .outstanding
             .iter()
@@ -1122,6 +1669,12 @@ impl TcpClient {
     /// session's read-your-writes floor so the node never serves it
     /// staler than this session's last acknowledged write.
     pub fn submit_async(&mut self, keys: Vec<Key>, op: Op, payload_len: u32) -> Result<Rid> {
+        if self.window > 0 && self.outstanding.len() >= self.window {
+            bail!(
+                "{BUSY_ERROR_PREFIX} client window full ({} in flight)",
+                self.outstanding.len()
+            );
+        }
         let cmd = self.session.command(keys, op, payload_len);
         let rid = cmd.rid;
         let floor = if op == Op::Read { self.session.read_floor() } else { 0 };
@@ -1136,8 +1689,14 @@ impl TcpClient {
     /// complete in a different order than their submissions. Replies for
     /// rids that are no longer outstanding (an earlier request whose
     /// `submit` timed out and was abandoned) are skipped, exactly like
-    /// the closed-loop path skips them.
+    /// the closed-loop path skips them. A busy shed observed for an
+    /// outstanding rid is reported as a busy error (the rid stays
+    /// outstanding; see [`TcpClient::last_busy`] / [`TcpClient::resubmit`]).
     pub fn recv_reply(&mut self) -> Result<(Rid, Response)> {
+        if let Some(rid) = self.busied.pop_front() {
+            self.last_busy = Some(rid);
+            return Err(busy_shed_error(rid));
+        }
         if let Some(&rid) = self.buffered.keys().next() {
             let (response, ts) = self.buffered.remove(&rid).expect("buffered reply");
             self.finish(rid, ts);
@@ -1147,31 +1706,150 @@ impl TcpClient {
             bail!("no outstanding requests to receive");
         }
         loop {
-            let (rid, response, ts) = self.read_reply()?;
-            if self.outstanding.contains_key(&rid) {
-                self.finish(rid, ts);
-                return Ok((rid, response));
+            match self.read_incoming()? {
+                Incoming::Reply(rid, response, ts) => {
+                    if self.outstanding.contains_key(&rid) {
+                        self.finish(rid, ts);
+                        return Ok((rid, response));
+                    }
+                    // else: stale reply for an abandoned request — skip.
+                }
+                Incoming::Busy(rid) => {
+                    if self.outstanding.contains_key(&rid) {
+                        self.last_busy = Some(rid);
+                        return Err(busy_shed_error(rid));
+                    }
+                }
             }
-            // else: stale reply for an abandoned request — skip it.
         }
     }
 
-    /// Read one `ClientReply` frame off the socket (into the session's
-    /// pooled buffer — no per-frame allocation).
-    fn read_reply(&mut self) -> Result<(Rid, Response, u64)> {
-        read_frame(&mut self.stream, self.rbuf.vec())?;
-        match wire::decode_client(self.rbuf.bytes())? {
-            wire::ClientFrame::Reply { rid, response, ts } => Ok((rid, response, ts)),
-            wire::ClientFrame::Submit { .. } => bail!("unexpected ClientSubmit from node"),
+    /// Nonblocking receive: like [`TcpClient::recv_reply`] but returns
+    /// `Ok(None)` when nothing is outstanding or no complete frame is
+    /// available yet (partial frames stay in the decoder for next time).
+    pub fn try_recv_reply(&mut self) -> Result<Option<(Rid, Response)>> {
+        if let Some(rid) = self.busied.pop_front() {
+            self.last_busy = Some(rid);
+            return Err(busy_shed_error(rid));
+        }
+        if let Some(&rid) = self.buffered.keys().next() {
+            let (response, ts) = self.buffered.remove(&rid).expect("buffered reply");
+            self.finish(rid, ts);
+            return Ok(Some((rid, response)));
+        }
+        if self.outstanding.is_empty() {
+            return Ok(None);
+        }
+        self.stream.set_nonblocking(true)?;
+        let result = loop {
+            match self.try_recv_inner() {
+                Ok(None) => break Ok(None),
+                Ok(Some(Incoming::Reply(rid, response, ts))) => {
+                    if self.outstanding.contains_key(&rid) {
+                        self.finish(rid, ts);
+                        break Ok(Some((rid, response)));
+                    }
+                }
+                Ok(Some(Incoming::Busy(rid))) => {
+                    if self.outstanding.contains_key(&rid) {
+                        self.last_busy = Some(rid);
+                        break Err(busy_shed_error(rid));
+                    }
+                }
+                Err(e) => break Err(e),
+            }
+        };
+        let _ = self.stream.set_nonblocking(false);
+        result
+    }
+
+    /// The rid behind the most recent busy error this client returned
+    /// (the natural `resubmit` target after backing off).
+    pub fn last_busy(&self) -> Option<Rid> {
+        self.last_busy
+    }
+
+    /// Re-issue a busy-shed (or otherwise stalled) outstanding request
+    /// **with its original rid** — safe because the dedup window keys on
+    /// the rid, so even a racing duplicate executes once.
+    pub fn resubmit(&mut self, rid: Rid) -> Result<()> {
+        let Some(cmd) = self.outstanding.get(&rid) else {
+            bail!("rid {rid:?} is not outstanding");
+        };
+        let cmd = cmd.clone();
+        let floor = if cmd.op == Op::Read { self.session.read_floor() } else { 0 };
+        let body = wire::encode_client(&wire::ClientFrame::Submit { cmd, floor });
+        write_frame(&mut self.stream, CLIENT_FROM, &body)?;
+        Ok(())
+    }
+
+    /// Feed buffered socket bytes through the incremental decoder and
+    /// return the next complete frame, if any (no I/O here).
+    fn poll_incoming(&mut self) -> Result<Option<Incoming>> {
+        while self.pending_off < self.pending.len() {
+            let (used, done) = self.dec.feed(&self.pending[self.pending_off..])?;
+            self.pending_off += used;
+            if !done {
+                continue;
+            }
+            let frame = wire::decode_client(self.dec.body())?;
+            self.dec.clear();
+            return match frame {
+                wire::ClientFrame::Reply { rid, response, ts } => {
+                    Ok(Some(Incoming::Reply(rid, response, ts)))
+                }
+                wire::ClientFrame::Busy { rid } => Ok(Some(Incoming::Busy(rid))),
+                wire::ClientFrame::Submit { .. } => bail!("unexpected ClientSubmit from node"),
+            };
+        }
+        self.pending.clear();
+        self.pending_off = 0;
+        Ok(None)
+    }
+
+    /// Block until one complete client-plane frame arrives.
+    fn read_incoming(&mut self) -> Result<Incoming> {
+        loop {
+            if let Some(inc) = self.poll_incoming()? {
+                return Ok(inc);
+            }
+            let mut buf = [0u8; 16 << 10];
+            match self.stream.read(&mut buf) {
+                Ok(0) => bail!("connection closed by node"),
+                Ok(n) => self.pending.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("read client stream"),
+            }
+        }
+    }
+
+    /// Nonblocking twin of [`TcpClient::read_incoming`] (stream must be
+    /// in nonblocking mode): `Ok(None)` when the socket has no bytes.
+    fn try_recv_inner(&mut self) -> Result<Option<Incoming>> {
+        loop {
+            if let Some(inc) = self.poll_incoming()? {
+                return Ok(Some(inc));
+            }
+            let mut buf = [0u8; 16 << 10];
+            match self.stream.read(&mut buf) {
+                Ok(0) => bail!("connection closed by node"),
+                Ok(n) => self.pending.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(None),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("read client stream"),
+            }
         }
     }
 
     /// Submit one command and block for *its* response (closed loop over
     /// the pipelined plumbing): replies for other in-flight rids that
-    /// arrive first are buffered, not dropped. On error (e.g. a read
-    /// timeout) the request is abandoned — its rid leaves `outstanding`,
-    /// so a late reply for it is skipped rather than mistaken for a
-    /// pipelined completion.
+    /// arrive first are buffered, not dropped; busy sheds for other rids
+    /// are queued for their own receive calls. On a busy shed of *this*
+    /// rid the call returns a busy error and the rid **stays
+    /// outstanding** (nothing executed — `resubmit` re-issues it). On
+    /// any other error (e.g. a read timeout) the request is abandoned —
+    /// its rid leaves `outstanding`, so a late reply for it is skipped
+    /// rather than mistaken for a pipelined completion.
     pub fn submit(&mut self, keys: Vec<Key>, op: Op, payload_len: u32) -> Result<(Rid, Response)> {
         let rid = self.submit_async(keys, op, payload_len)?;
         loop {
@@ -1179,21 +1857,31 @@ impl TcpClient {
                 self.finish(rid, ts);
                 return Ok((rid, response));
             }
-            let (got, response, ts) = match self.read_reply() {
-                Ok(r) => r,
+            match self.read_incoming() {
+                Ok(Incoming::Reply(got, response, ts)) => {
+                    if got == rid {
+                        self.finish(rid, ts);
+                        return Ok((rid, response));
+                    }
+                    if self.outstanding.contains_key(&got) {
+                        self.buffered.insert(got, (response, ts));
+                    }
+                    // else: a reply for an earlier (timed-out) request.
+                }
+                Ok(Incoming::Busy(got)) => {
+                    if got == rid {
+                        self.last_busy = Some(rid);
+                        return Err(busy_shed_error(rid));
+                    }
+                    if self.outstanding.contains_key(&got) {
+                        self.busied.push_back(got);
+                    }
+                }
                 Err(e) => {
                     self.outstanding.remove(&rid);
                     return Err(e);
                 }
-            };
-            if got == rid {
-                self.finish(rid, ts);
-                return Ok((rid, response));
             }
-            if self.outstanding.contains_key(&got) {
-                self.buffered.insert(got, (response, ts));
-            }
-            // else: a reply for an earlier (timed-out) request — skip it.
         }
     }
 
@@ -1260,6 +1948,203 @@ mod tests {
             members.iter().map(|m| m.worker).collect::<Vec<_>>(),
             vec![0, 1, 2]
         );
+    }
+
+    /// Satellite of the merge-wait knob: with `merge_wait_us == 0` (the
+    /// default) `collect_flush` must behave exactly like the old
+    /// opportunistic drain — take what is already queued, never block —
+    /// so default configs keep byte-identical flush batches.
+    #[test]
+    fn merge_wait_zero_is_the_opportunistic_drain() {
+        let (tx, rx) = std::sync::mpsc::channel::<OutFrame>();
+        for i in 0..3u8 {
+            tx.send(OutFrame::Shared(vec![i; 4].into())).unwrap();
+        }
+        let mut carry = None;
+        let first = OutFrame::Shared(vec![9u8; 4].into());
+        let t0 = Instant::now();
+        let batch = collect_flush(&rx, first, Duration::ZERO, &mut carry);
+        // Everything already queued joins the batch, in order…
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].bytes(), &[9, 9, 9, 9]);
+        assert_eq!(batch[3].bytes(), &[2, 2, 2, 2]);
+        assert!(carry.is_none());
+        // …and an empty queue yields a lone frame with zero waiting.
+        let batch = collect_flush(
+            &rx,
+            OutFrame::Shared(vec![7u8; 2].into()),
+            Duration::ZERO,
+            &mut carry,
+        );
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(100),
+            "wait=0 must never block"
+        );
+    }
+
+    #[test]
+    fn merge_wait_lingers_for_stragglers() {
+        let (tx, rx) = std::sync::mpsc::channel::<OutFrame>();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            let _ = tx.send(OutFrame::Shared(vec![1u8; 4].into()));
+        });
+        let mut carry = None;
+        let first = OutFrame::Shared(vec![0u8; 4].into());
+        // A generous window: the straggler lands well inside it.
+        let batch = collect_flush(&rx, first, Duration::from_millis(500), &mut carry);
+        sender.join().unwrap();
+        assert_eq!(
+            batch.len(),
+            2,
+            "a positive merge wait must pick up the straggler frame"
+        );
+    }
+
+    /// The nonblocking decode state machine must agree with the blocking
+    /// `read_frame` on every split of the same byte stream — the exact
+    /// contract the event loop relies on when frames straddle reads.
+    #[test]
+    fn frame_decoder_matches_read_frame_on_any_split() {
+        let frames: Vec<(u32, Vec<u8>)> = vec![
+            (CLIENT_FROM, vec![1, 2, 3]),
+            (0, vec![]),
+            (7, vec![0xAB; 300]),
+            (TRANSFER_FROM, vec![5]),
+        ];
+        let mut stream_bytes = Vec::new();
+        for (from, body) in &frames {
+            stream_bytes.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            stream_bytes.extend_from_slice(&from.to_le_bytes());
+            stream_bytes.extend_from_slice(body);
+        }
+        // Blocking reference: read_frame over an in-memory cursor.
+        let mut cursor = std::io::Cursor::new(stream_bytes.clone());
+        let mut reference = Vec::new();
+        let mut buf = Vec::new();
+        for _ in 0..frames.len() {
+            let from = read_frame(&mut cursor, &mut buf).expect("read_frame");
+            reference.push((from, buf.clone()));
+        }
+        // Nonblocking twin, fed in awkward 7-byte chunks.
+        let mut dec = wire::FrameDecoder::new();
+        let mut decoded = Vec::new();
+        let mut off = 0;
+        while off < stream_bytes.len() {
+            let end = (off + 7).min(stream_bytes.len());
+            let mut chunk = &stream_bytes[off..end];
+            while !chunk.is_empty() {
+                let (used, done) = dec.feed(chunk).expect("feed");
+                chunk = &chunk[used..];
+                if done {
+                    decoded.push((dec.sender(), dec.body().to_vec()));
+                    dec.clear();
+                }
+            }
+            off = end;
+        }
+        dec.recycle();
+        assert_eq!(decoded, reference, "decoder != read_frame on the same stream");
+    }
+
+    /// Drive a whole client event loop deterministically with the
+    /// scripted poller and one real socket pair: a session's submits are
+    /// forwarded to the worker within the in-flight window, shed with an
+    /// explicit `ClientBusy` beyond it, and the completion path encodes
+    /// the reply back onto the socket.
+    #[test]
+    fn client_loop_forwards_sheds_and_replies_deterministically() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let mut client_side = TcpStream::connect(addr).expect("connect");
+        let (node_side, _) = listener.accept().expect("accept");
+
+        // Two submits written BEFORE the loop adopts the socket, so the
+        // scripted readable events find both frames buffered.
+        let mut session = Session::new(ClientId(42));
+        let cmd1 = session.single(5, Op::Put, 8);
+        let cmd2 = session.single(5, Op::Put, 8);
+        let (rid1, rid2) = (cmd1.rid, cmd2.rid);
+        for cmd in [&cmd1, &cmd2] {
+            let body =
+                wire::encode_client(&wire::ClientFrame::Submit { cmd: cmd.clone(), floor: 0 });
+            write_frame(&mut client_side, CLIENT_FROM, &body).expect("write submit");
+        }
+
+        // Plenty of scripted readable batches: the loop re-services the
+        // socket each poll until the kernel delivered the bytes.
+        let script = vec![
+            vec![(0usize, poll::Readiness { readable: true, writable: false, error: false })];
+            100_000
+        ];
+        let poller = poll::ScriptedPoller::new(script);
+        let waker = poller.waker();
+        let (cmd_tx, cmd_rx) = channel::<LoopCmd>();
+        let (ev_tx, ev_rx) = channel::<Event>();
+        let closing = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(NetStats::default());
+        let loop_thread = {
+            let closing = closing.clone();
+            let stats = stats.clone();
+            let cmd_tx = cmd_tx.clone();
+            std::thread::spawn(move || {
+                client_loop(
+                    poller,
+                    cmd_rx,
+                    cmd_tx,
+                    ProcessId(0),
+                    vec![ev_tx],
+                    1, // max_inflight: the second submit must shed
+                    closing,
+                    stats,
+                )
+            })
+        };
+        cmd_tx.send(LoopCmd::Conn(node_side)).expect("send conn");
+        waker.wake();
+
+        // Exactly ONE submit reaches the worker (the window is 1)…
+        let (got, done) = loop {
+            match ev_rx.recv_timeout(Duration::from_secs(10)).expect("worker event") {
+                Event::Submit { cmd, done, .. } => break (cmd, done),
+                _ => continue,
+            }
+        };
+        assert_eq!(got.rid, rid1);
+        // …and the client first sees the shed of the second one.
+        client_side.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut rbuf = Vec::new();
+        let from = read_frame(&mut client_side, &mut rbuf).expect("busy frame");
+        assert_eq!(from, 0, "replies carry the node id");
+        match wire::decode_client(&rbuf).expect("decode busy") {
+            wire::ClientFrame::Busy { rid } => assert_eq!(rid, rid2),
+            other => panic!("expected Busy for {rid2}, got {other:?}"),
+        }
+        // Completing the forwarded request routes a Reply back through
+        // the loop's command channel and onto the socket.
+        let response = Response { versions: vec![(5, 1)] };
+        done.complete(rid1, response.clone(), 77);
+        read_frame(&mut client_side, &mut rbuf).expect("reply frame");
+        match wire::decode_client(&rbuf).expect("decode reply") {
+            wire::ClientFrame::Reply { rid, response: got, ts } => {
+                assert_eq!(rid, rid1);
+                assert_eq!(got, response);
+                assert_eq!(ts, 77);
+            }
+            other => panic!("expected Reply for {rid1}, got {other:?}"),
+        }
+        // No second Submit ever reached the worker.
+        assert!(
+            ev_rx.try_recv().is_err(),
+            "the shed submit must never reach a worker"
+        );
+        assert_eq!(stats.busy_shed.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.client_connections.load(Ordering::Relaxed), 1);
+        assert!(stats.client_replies.load(Ordering::Relaxed) >= 2); // busy + reply
+        closing.store(true, Ordering::SeqCst);
+        waker.wake();
+        loop_thread.join().expect("join loop");
     }
 
     #[test]

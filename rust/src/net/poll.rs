@@ -1,0 +1,419 @@
+//! Readiness polling for the client event loop: a thin `poll(2)` shim
+//! behind a [`Poller`] trait, keeping the zero-heavy-deps discipline —
+//! no `libc` crate, no async runtime. The one syscall the standard
+//! library does not expose is declared by hand (`extern "C" fn poll`;
+//! the symbol comes from the C runtime std already links), fd plumbing
+//! goes through `std::os::fd`, and the wake token is a connected
+//! loopback UDP pair (one byte sent = one poll wakeup), so waking a
+//! sleeping loop needs no signals and no self-dial of the listener.
+//!
+//! The trait exists so tests can drive the readiness machinery
+//! deterministically: [`ScriptedPoller`] replays a scripted sequence of
+//! readiness batches with no sockets and no time, while the production
+//! [`PollPoller`] multiplexes real nonblocking fds. Both surface the
+//! same wake-token semantics (a [`Waker`] is `Clone + Send`, coalesces
+//! redundant wakes, and interrupts a blocked [`Poller::poll`]).
+
+use crate::util::error::{Context, Result};
+use std::collections::BTreeMap;
+use std::net::UdpSocket;
+use std::os::fd::RawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Caller-chosen identity of one registered fd (the event loop uses the
+/// connection id; the acceptor uses a fixed token for the listener).
+pub type Token = usize;
+
+/// What a registration wants to hear about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    /// Read-only interest — the steady state of an idle connection.
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    /// Read + write interest — a connection with a partially-flushed
+    /// outbound queue waiting for the socket to drain.
+    pub const READ_WRITE: Interest = Interest { readable: true, writable: true };
+}
+
+/// What the poller observed on one fd.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Readiness {
+    pub readable: bool,
+    pub writable: bool,
+    /// Error/hangup: the owner should read to completion and drop the
+    /// connection (a read on such an fd returns 0 or an error).
+    pub error: bool,
+}
+
+/// Handle that interrupts a blocked [`Poller::poll`] from any thread.
+/// Cloneable and cheap; redundant wakes coalesce — between two polls at
+/// most one wake byte travels, however many threads called [`Waker::wake`].
+#[derive(Clone)]
+pub enum Waker {
+    /// Production: one byte over a connected loopback UDP pair.
+    Udp { sock: Arc<UdpSocket>, pending: Arc<AtomicBool> },
+    /// Deterministic tests: a flag the scripted poller observes.
+    Flag(Arc<AtomicBool>),
+}
+
+impl Waker {
+    /// Wake the poller (idempotent between polls).
+    pub fn wake(&self) {
+        match self {
+            Waker::Udp { sock, pending } => {
+                if !pending.swap(true, Ordering::AcqRel) {
+                    let _ = sock.send(&[1u8]);
+                }
+            }
+            Waker::Flag(flag) => flag.store(true, Ordering::Release),
+        }
+    }
+}
+
+/// Readiness selector the client event loop runs on. Implementations
+/// must be drivable from one thread while [`Waker`]s fire from others.
+pub trait Poller: Send {
+    /// Start watching `fd` as `token`. A token is registered at most
+    /// once; re-registering replaces the previous fd/interest.
+    fn register(&mut self, token: Token, fd: RawFd, interest: Interest);
+    /// Change what `token` wants to hear about (no-op if unregistered).
+    fn set_interest(&mut self, token: Token, interest: Interest);
+    /// Stop watching `token` (no-op if unregistered).
+    fn deregister(&mut self, token: Token);
+    /// Block until at least one registration is ready, the timeout
+    /// elapses, or a [`Waker`] fires; `events` is cleared and filled
+    /// with what happened (possibly nothing — a pure wake delivers an
+    /// empty batch). `None` blocks indefinitely (modulo wakes).
+    fn poll(&mut self, events: &mut Vec<(Token, Readiness)>, timeout: Option<Duration>)
+        -> Result<()>;
+    /// A wake handle for this poller.
+    fn waker(&self) -> Waker;
+}
+
+/// The `poll(2)` ABI, declared by hand: no `libc` crate in the tree.
+/// Linux's `nfds_t` is `unsigned long`; the struct layout is the
+/// kernel's `struct pollfd`.
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_ulong};
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    }
+}
+
+/// Production poller over `poll(2)`. The registration table is a
+/// `BTreeMap` so the pollfd array (and therefore event delivery order)
+/// is deterministic in token order — useful when replaying bugs. The
+/// wake token is slot 0 of every pollfd array: a connected loopback UDP
+/// pair whose receive side is drained (and the coalescing flag cleared)
+/// before events are reported.
+#[cfg(unix)]
+pub struct PollPoller {
+    fds: BTreeMap<Token, (RawFd, Interest)>,
+    wake_rx: UdpSocket,
+    waker: Waker,
+}
+
+#[cfg(unix)]
+impl PollPoller {
+    pub fn new() -> Result<PollPoller> {
+        let wake_rx = UdpSocket::bind("127.0.0.1:0").context("bind wake socket")?;
+        wake_rx.set_nonblocking(true)?;
+        let wake_tx = UdpSocket::bind("127.0.0.1:0").context("bind wake sender")?;
+        wake_tx.connect(wake_rx.local_addr()?).context("connect wake pair")?;
+        Ok(PollPoller {
+            fds: BTreeMap::new(),
+            wake_rx,
+            waker: Waker::Udp {
+                sock: Arc::new(wake_tx),
+                pending: Arc::new(AtomicBool::new(false)),
+            },
+        })
+    }
+}
+
+#[cfg(unix)]
+impl Poller for PollPoller {
+    fn register(&mut self, token: Token, fd: RawFd, interest: Interest) {
+        self.fds.insert(token, (fd, interest));
+    }
+
+    fn set_interest(&mut self, token: Token, interest: Interest) {
+        if let Some(entry) = self.fds.get_mut(&token) {
+            entry.1 = interest;
+        }
+    }
+
+    fn deregister(&mut self, token: Token) {
+        self.fds.remove(&token);
+    }
+
+    fn poll(
+        &mut self,
+        events: &mut Vec<(Token, Readiness)>,
+        timeout: Option<Duration>,
+    ) -> Result<()> {
+        use std::os::fd::AsRawFd;
+        events.clear();
+        let mut pollfds: Vec<sys::PollFd> = Vec::with_capacity(self.fds.len() + 1);
+        pollfds.push(sys::PollFd {
+            fd: self.wake_rx.as_raw_fd(),
+            events: sys::POLLIN,
+            revents: 0,
+        });
+        let mut tokens: Vec<Token> = Vec::with_capacity(self.fds.len());
+        for (&token, &(fd, interest)) in &self.fds {
+            let mut ev = 0i16;
+            if interest.readable {
+                ev |= sys::POLLIN;
+            }
+            if interest.writable {
+                ev |= sys::POLLOUT;
+            }
+            pollfds.push(sys::PollFd { fd, events: ev, revents: 0 });
+            tokens.push(token);
+        }
+        let timeout_ms: std::os::raw::c_int = match timeout {
+            None => -1,
+            Some(d) => d.as_millis().min(i32::MAX as u128) as i32,
+        };
+        let rc = unsafe {
+            sys::poll(
+                pollfds.as_mut_ptr(),
+                pollfds.len() as std::os::raw::c_ulong,
+                timeout_ms,
+            )
+        };
+        if rc < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                // A stray signal: report an empty batch, caller re-polls.
+                return Ok(());
+            }
+            return Err(err).context("poll(2)");
+        }
+        // Drain the wake pair first so the next wake() sends a fresh byte.
+        if pollfds[0].revents & sys::POLLIN != 0 {
+            let mut byte = [0u8; 8];
+            while self.wake_rx.recv(&mut byte).is_ok() {}
+            if let Waker::Udp { pending, .. } = &self.waker {
+                pending.store(false, Ordering::Release);
+            }
+        }
+        for (pfd, &token) in pollfds[1..].iter().zip(&tokens) {
+            if pfd.revents == 0 {
+                continue;
+            }
+            events.push((
+                token,
+                Readiness {
+                    readable: pfd.revents & sys::POLLIN != 0,
+                    writable: pfd.revents & sys::POLLOUT != 0,
+                    error: pfd.revents & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0,
+                },
+            ));
+        }
+        Ok(())
+    }
+
+    fn waker(&self) -> Waker {
+        self.waker.clone()
+    }
+}
+
+/// Deterministic poller for tests: replays a scripted sequence of
+/// readiness batches, never touches an fd, never blocks. Registrations
+/// are tracked (so a test can assert interest transitions), a wake
+/// observed between polls injects an empty batch ahead of the script
+/// (exactly the production contract: a pure wake delivers no events),
+/// and an exhausted script keeps returning empty batches.
+pub struct ScriptedPoller {
+    script: std::collections::VecDeque<Vec<(Token, Readiness)>>,
+    /// Registration table, public so tests can assert on it.
+    pub registered: BTreeMap<Token, Interest>,
+    woken: Arc<AtomicBool>,
+}
+
+impl ScriptedPoller {
+    pub fn new(script: Vec<Vec<(Token, Readiness)>>) -> ScriptedPoller {
+        ScriptedPoller {
+            script: script.into(),
+            registered: BTreeMap::new(),
+            woken: Arc::new(AtomicBool::new(false)),
+        }
+    }
+}
+
+impl Poller for ScriptedPoller {
+    fn register(&mut self, token: Token, _fd: RawFd, interest: Interest) {
+        self.registered.insert(token, interest);
+    }
+
+    fn set_interest(&mut self, token: Token, interest: Interest) {
+        if let Some(i) = self.registered.get_mut(&token) {
+            *i = interest;
+        }
+    }
+
+    fn deregister(&mut self, token: Token) {
+        self.registered.remove(&token);
+    }
+
+    fn poll(
+        &mut self,
+        events: &mut Vec<(Token, Readiness)>,
+        _timeout: Option<Duration>,
+    ) -> Result<()> {
+        events.clear();
+        if self.woken.swap(false, Ordering::AcqRel) {
+            return Ok(()); // a wake: empty batch, script untouched
+        }
+        if let Some(batch) = self.script.pop_front() {
+            // Only deliver events for tokens still registered — a
+            // deregistered connection must never come back readable.
+            events.extend(batch.into_iter().filter(|(t, _)| self.registered.contains_key(t)));
+        }
+        Ok(())
+    }
+
+    fn waker(&self) -> Waker {
+        Waker::Flag(self.woken.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+
+    #[test]
+    fn poll_reports_readable_after_write() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let mut tx = TcpStream::connect(addr).expect("connect");
+        let (rx, _) = listener.accept().expect("accept");
+        rx.set_nonblocking(true).expect("nonblocking");
+
+        let mut poller = PollPoller::new().expect("poller");
+        poller.register(7, rx.as_raw_fd(), Interest::READ);
+        let mut events = Vec::new();
+
+        // Nothing pending: a zero timeout returns an empty batch.
+        poller.poll(&mut events, Some(Duration::from_millis(0))).expect("poll");
+        assert!(events.is_empty(), "spurious readiness: {events:?}");
+
+        tx.write_all(b"ping").expect("write");
+        poller.poll(&mut events, Some(Duration::from_secs(5))).expect("poll");
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].0, 7);
+        assert!(events[0].1.readable);
+
+        // Deregistered fds never surface again, however ready.
+        poller.deregister(7);
+        poller.poll(&mut events, Some(Duration::from_millis(0))).expect("poll");
+        assert!(events.is_empty());
+        let mut sink = [0u8; 8];
+        let mut rx = rx;
+        let _ = rx.read(&mut sink);
+    }
+
+    #[test]
+    fn waker_interrupts_a_blocked_poll_and_coalesces() {
+        let mut poller = PollPoller::new().expect("poller");
+        let waker = poller.waker();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            // Many wakes from another thread: at most one byte flies.
+            for _ in 0..64 {
+                waker.wake();
+            }
+        });
+        let mut events = Vec::new();
+        // Blocks until the waker fires (5 s is the failure backstop).
+        poller.poll(&mut events, Some(Duration::from_secs(5))).expect("poll");
+        assert!(events.is_empty(), "a pure wake has no events");
+        handle.join().expect("join");
+        // The wake was drained: the next zero-timeout poll is quiet.
+        poller.poll(&mut events, Some(Duration::from_millis(0))).expect("poll");
+        assert!(events.is_empty());
+        // And the waker works again after the drain (flag was reset).
+        poller.waker().wake();
+        poller.poll(&mut events, Some(Duration::from_secs(5))).expect("poll");
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn poll_reports_writable_when_asked() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let tx = TcpStream::connect(addr).expect("connect");
+        tx.set_nonblocking(true).expect("nonblocking");
+        let mut poller = PollPoller::new().expect("poller");
+        // Read-only interest on an idle socket: quiet.
+        poller.register(1, tx.as_raw_fd(), Interest::READ);
+        let mut events = Vec::new();
+        poller.poll(&mut events, Some(Duration::from_millis(0))).expect("poll");
+        assert!(events.is_empty());
+        // Add write interest: an empty socket buffer is instantly writable.
+        poller.set_interest(1, Interest::READ_WRITE);
+        poller.poll(&mut events, Some(Duration::from_secs(5))).expect("poll");
+        assert_eq!(events.len(), 1);
+        assert!(events[0].1.writable);
+        assert!(!events[0].1.readable);
+    }
+
+    #[test]
+    fn scripted_poller_replays_batches_and_respects_wakes() {
+        let mut p = ScriptedPoller::new(vec![
+            vec![(1, Readiness { readable: true, ..Default::default() })],
+            vec![
+                (1, Readiness { readable: true, ..Default::default() }),
+                (2, Readiness { writable: true, ..Default::default() }),
+            ],
+        ]);
+        p.register(1, 0, Interest::READ);
+        p.register(2, 0, Interest::READ_WRITE);
+        let waker = p.waker();
+        let mut events = Vec::new();
+
+        p.poll(&mut events, None).expect("poll");
+        assert_eq!(events, vec![(1, Readiness { readable: true, ..Default::default() })]);
+
+        // A wake injects an empty batch *before* the script continues.
+        waker.wake();
+        p.poll(&mut events, None).expect("poll");
+        assert!(events.is_empty());
+
+        // Deregistering filters scripted events for that token.
+        p.deregister(2);
+        p.poll(&mut events, None).expect("poll");
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].0, 1);
+
+        // Script exhausted: quiet forever.
+        p.poll(&mut events, None).expect("poll");
+        assert!(events.is_empty());
+    }
+}

@@ -77,6 +77,21 @@ pub const TAG_MANIFEST_REPLY: u8 = 23;
 /// the donor's reply carries `present = 1` plus the page (or
 /// `present = 0` if the donor no longer holds that hash).
 pub const TAG_CHUNK: u8 = 24;
+/// Tag of the `ClientBusy` frame (docs/WIRE.md): `[25][rid]`. Node →
+/// client load-shed reply from the event-loop edge's admission control:
+/// the session's in-flight window (`Config::max_inflight_per_session`)
+/// was full, so the submission named by `rid` was **not** accepted —
+/// never forwarded to a worker, never ordered, never executed. The
+/// client may re-issue the same command with the same rid once its
+/// window drains (the per-client dedup window makes that safe even if
+/// a copy did slip through elsewhere). Client-plane only, exactly like
+/// tags 17–18.
+pub const TAG_CLIENT_BUSY: u8 = 25;
+
+/// True iff `tag` belongs to the client plane (tags 17, 18, 25).
+pub(crate) fn is_client_tag(tag: u8) -> bool {
+    tag == TAG_CLIENT_SUBMIT || tag == TAG_CLIENT_REPLY || tag == TAG_CLIENT_BUSY
+}
 
 /// Frames exchanged between a client session and a node over the client
 /// plane of the TCP runtime (never between protocol peers).
@@ -95,6 +110,12 @@ pub enum ClientFrame {
     /// read-your-writes floor to the `ts` of each acknowledged write.
     /// Tag 18.
     Reply { rid: Rid, response: Response, ts: u64 },
+    /// Node → client: admission control shed the submission named by
+    /// `rid` — the session already had `Config::max_inflight_per_session`
+    /// requests in flight, so this one was rejected *at the edge*,
+    /// before any worker saw it. Retryable: the command was not
+    /// executed and re-issuing it with the same rid is safe. Tag 25.
+    Busy { rid: Rid },
 }
 
 /// Frames of the state-transfer plane (docs/WIRE.md tags 22–24): a
@@ -390,6 +411,126 @@ impl FrameBuf {
                 }
             });
         }
+    }
+}
+
+/// Incremental frame decoder: the nonblocking twin of the TCP runtime's
+/// blocking `read_frame`, consuming a transport frame —
+/// `[len: u32][from: u32][body]` — from byte chunks of **any** split
+/// (byte-by-byte included) instead of a socket it may block on. One
+/// decoder per connection; the body accumulates in a pooled
+/// [`FrameBuf`] reused across frames, with the same per-frame
+/// hit/miss accounting as the blocking path (a frame whose body fits
+/// the kept capacity is a pool hit). The length header is validated
+/// against `net::MAX_FRAME_BYTES` the moment it completes — a corrupt
+/// or hostile length never allocates.
+///
+/// Equivalence with the blocking path is pinned by property tests: any
+/// chunking of a frame stream yields exactly the frames `read_frame`
+/// would return (`rust/tests/properties.rs`, and the Python mirror in
+/// `python/bench/wire.py::self_check`).
+pub struct FrameDecoder {
+    hdr: [u8; 8],
+    hdr_have: usize,
+    body: FrameBuf,
+    body_len: usize,
+    complete: bool,
+}
+
+impl Default for FrameDecoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameDecoder {
+    /// A fresh decoder expecting a frame header (pooled body buffer).
+    pub fn new() -> FrameDecoder {
+        FrameDecoder {
+            hdr: [0u8; 8],
+            hdr_have: 0,
+            body: FrameBuf::take(),
+            body_len: 0,
+            complete: false,
+        }
+    }
+
+    /// Consume bytes from `chunk`, stopping at the end of the current
+    /// frame. Returns `(consumed, complete)`: how many bytes of `chunk`
+    /// were used, and whether a full frame is now buffered — read it
+    /// with [`FrameDecoder::sender`]/[`FrameDecoder::body`], then call
+    /// [`FrameDecoder::clear`] before feeding further bytes (a feed on
+    /// a complete frame consumes nothing). Errors only on a length
+    /// header above `net::MAX_FRAME_BYTES` — the connection is then
+    /// poisoned and must be dropped, exactly like the blocking path.
+    pub fn feed(&mut self, chunk: &[u8]) -> Result<(usize, bool)> {
+        if self.complete {
+            return Ok((0, true));
+        }
+        let mut used = 0;
+        if self.hdr_have < 8 {
+            let n = (8 - self.hdr_have).min(chunk.len());
+            self.hdr[self.hdr_have..self.hdr_have + n].copy_from_slice(&chunk[..n]);
+            self.hdr_have += n;
+            used += n;
+            if self.hdr_have < 8 {
+                return Ok((used, false));
+            }
+            let len = u32::from_le_bytes(self.hdr[0..4].try_into().unwrap()) as usize;
+            let max = crate::net::MAX_FRAME_BYTES;
+            if len > max {
+                bail!("frame of {len} bytes exceeds MAX_FRAME_BYTES ({max})");
+            }
+            // Same per-frame pool accounting as the blocking read path.
+            if self.body.vec().capacity() >= len {
+                pool_stats::hit();
+            } else {
+                pool_stats::miss();
+            }
+            self.body.vec().clear();
+            self.body_len = len;
+            if len == 0 {
+                self.complete = true;
+                return Ok((used, true));
+            }
+        }
+        let need = self.body_len - self.body.bytes().len();
+        let take = need.min(chunk.len() - used);
+        self.body.vec().extend_from_slice(&chunk[used..used + take]);
+        used += take;
+        self.complete = self.body.bytes().len() == self.body_len;
+        Ok((used, self.complete))
+    }
+
+    /// Whether a complete frame is buffered.
+    pub fn is_complete(&self) -> bool {
+        self.complete
+    }
+
+    /// The completed (or in-progress, once the header is in) frame's
+    /// sender field — `net::CLIENT_FROM` marks the client plane.
+    pub fn sender(&self) -> u32 {
+        debug_assert!(self.hdr_have == 8, "sender read before the header completed");
+        u32::from_le_bytes(self.hdr[4..8].try_into().unwrap())
+    }
+
+    /// The completed frame's body.
+    pub fn body(&self) -> &[u8] {
+        &self.body.bytes()[..self.body_len.min(self.body.bytes().len())]
+    }
+
+    /// Discard the completed frame and expect the next header; the body
+    /// buffer's capacity is kept (that is the pooled read path).
+    pub fn clear(&mut self) {
+        self.hdr_have = 0;
+        self.body_len = 0;
+        self.complete = false;
+        self.body.vec().clear();
+    }
+
+    /// Return the body buffer to the frame pool (connection teardown).
+    pub fn recycle(self) {
+        self.body.recycle();
     }
 }
 
@@ -835,6 +976,7 @@ pub fn client_encoded_len(frame: &ClientFrame) -> usize {
     match frame {
         ClientFrame::Submit { cmd, .. } => 1 + cmd_len(cmd) + 8,
         ClientFrame::Reply { response, .. } => 1 + 16 + response_len(response) + 8,
+        ClientFrame::Busy { .. } => 1 + 16,
     }
 }
 
@@ -852,6 +994,10 @@ pub fn encode_client_into(w: &mut Writer, frame: &ClientFrame) {
             w.response(response);
             w.u64(*ts);
         }
+        ClientFrame::Busy { rid } => {
+            w.u8(TAG_CLIENT_BUSY);
+            w.rid(*rid);
+        }
     }
 }
 
@@ -863,8 +1009,8 @@ pub fn encode_client(frame: &ClientFrame) -> Vec<u8> {
     w.buf
 }
 
-/// Decode a client frame (tags 17–18). A protocol or transfer tag here
-/// is an error: the client plane never carries either.
+/// Decode a client frame (tags 17–18 and 25). A protocol or transfer
+/// tag here is an error: the client plane never carries either.
 pub fn decode_client(buf: &[u8]) -> Result<ClientFrame> {
     let mut r = Reader::new(buf);
     let tag = r.u8()?;
@@ -880,6 +1026,7 @@ pub fn decode_client(buf: &[u8]) -> Result<ClientFrame> {
             let ts = r.u64()?;
             Ok(ClientFrame::Reply { rid, response, ts })
         }
+        TAG_CLIENT_BUSY => Ok(ClientFrame::Busy { rid: r.rid()? }),
         x if x <= 16 => bail!("protocol frame tag {x} in client stream"),
         x if (TAG_MANIFEST_REQUEST..=TAG_CHUNK).contains(&x) => {
             bail!("transfer frame tag {x} in client stream")
@@ -975,6 +1122,9 @@ pub fn decode_transfer(buf: &[u8]) -> Result<TransferFrame> {
             Ok(TransferFrame::Chunk { slot, hash, present, data })
         }
         x if x <= TAG_EPOCH => bail!("non-transfer frame tag {x} in transfer stream"),
+        TAG_CLIENT_BUSY => {
+            bail!("client frame tag {TAG_CLIENT_BUSY} in transfer stream")
+        }
         x => bail!("bad transfer frame tag {x}"),
     }
 }
@@ -1059,7 +1209,7 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
                 let body = r.take(len)?;
                 match body.first() {
                     Some(&16) => bail!("nested MBatch frame"),
-                    Some(&t) if t == TAG_CLIENT_SUBMIT || t == TAG_CLIENT_REPLY => {
+                    Some(&t) if is_client_tag(t) => {
                         bail!("client frame tag {t} inside MBatch")
                     }
                     Some(&TAG_ROUTED) => bail!("routed envelope inside MBatch"),
@@ -1087,7 +1237,7 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
             }
             Msg::MEpoch { epoch, evicted }
         }
-        x if x == TAG_CLIENT_SUBMIT || x == TAG_CLIENT_REPLY => {
+        x if is_client_tag(x) => {
             bail!("client frame tag {x} in protocol stream")
         }
         TAG_ROUTED => bail!("routed envelope where a bare protocol message was expected"),
@@ -1317,6 +1467,12 @@ mod tests {
             ts: 0,
         };
         assert_eq!(decode_client(&encode_client(&empty)).unwrap(), empty);
+
+        let busy = ClientFrame::Busy { rid: Rid::new(ClientId(9), 12) };
+        let bytes = encode_client(&busy);
+        assert_eq!(bytes[0], TAG_CLIENT_BUSY);
+        assert_eq!(bytes.len(), 17, "busy is tag + rid, nothing else");
+        assert_eq!(decode_client(&bytes).expect("decode busy"), busy);
     }
 
     #[test]
@@ -1329,6 +1485,7 @@ mod tests {
                 response: Response { versions: vec![(5, 1)] },
                 ts: 3,
             },
+            ClientFrame::Busy { rid: Rid::new(ClientId(2), 9) },
         ] {
             let bytes = encode_client(&frame);
             for cut in 0..bytes.len() {
@@ -1351,6 +1508,9 @@ mod tests {
             ts: 0,
         });
         assert!(decode(&reply).is_err(), "ClientReply must not decode as a Msg");
+        let busy = encode_client(&ClientFrame::Busy { rid: Rid::new(ClientId(1), 1) });
+        assert!(decode(&busy).is_err(), "ClientBusy must not decode as a Msg");
+        assert!(decode_transfer(&busy).is_err(), "ClientBusy is not a transfer frame");
         // ... and a protocol frame in the client stream is an error.
         let stable = encode(&Msg::MStable { dot });
         assert!(decode_client(&stable).is_err(), "Msg must not decode as a client frame");
@@ -1358,8 +1518,8 @@ mod tests {
 
     #[test]
     fn batch_rejects_nested_client_frames_like_nested_batches() {
-        // An MBatch member whose tag is 17 or 18 must fail from the tag
-        // peek, exactly like a nested batch.
+        // An MBatch member whose tag is 17, 18 or 25 must fail from the
+        // tag peek, exactly like a nested batch.
         for member in [
             encode_client(&ClientFrame::Submit {
                 cmd: Command::new(Rid::new(ClientId(1), 1), vec![3], Op::Put, 4),
@@ -1370,6 +1530,7 @@ mod tests {
                 response: Response { versions: vec![(3, 1)] },
                 ts: 5,
             }),
+            encode_client(&ClientFrame::Busy { rid: Rid::new(ClientId(1), 1) }),
         ] {
             let mut w = Writer::new();
             w.u8(16);
@@ -1473,6 +1634,7 @@ mod tests {
                 response: Response { versions: vec![(1, 4), (99, 17)] },
                 ts: 7,
             },
+            ClientFrame::Busy { rid: Rid::new(ClientId(7), 3) },
         ] {
             assert_eq!(client_encoded_len(&frame), encode_client(&frame).len());
         }
@@ -1646,6 +1808,89 @@ mod tests {
             assert!(pool_stats::hits() >= hits_before + 1, "recycled take must count as a hit");
         }
         b2.recycle();
+    }
+
+    /// A transport frame as `write_frame` would put it on the wire:
+    /// `[len][from][body]`.
+    fn transport_frame(from: u32, body: &[u8]) -> Vec<u8> {
+        let mut f = Vec::with_capacity(8 + body.len());
+        f.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        f.extend_from_slice(&from.to_le_bytes());
+        f.extend_from_slice(body);
+        f
+    }
+
+    #[test]
+    fn frame_decoder_consumes_frames_at_any_split() {
+        let body = encode_client(&ClientFrame::Busy { rid: Rid::new(ClientId(3), 7) });
+        let frame = transport_frame(crate::net::CLIENT_FROM, &body);
+        // Whole-buffer feed.
+        let mut dec = FrameDecoder::new();
+        let (used, done) = dec.feed(&frame).unwrap();
+        assert_eq!((used, done), (frame.len(), true));
+        assert_eq!(dec.sender(), crate::net::CLIENT_FROM);
+        assert_eq!(dec.body(), &body[..]);
+        // A feed past a complete frame consumes nothing until clear().
+        assert_eq!(dec.feed(&[1, 2, 3]).unwrap(), (0, true));
+        // Byte-by-byte: same frame, 1-byte chunks.
+        dec.clear();
+        for (i, b) in frame.iter().enumerate() {
+            let (used, done) = dec.feed(std::slice::from_ref(b)).unwrap();
+            assert_eq!(used, 1, "byte {i} must be consumed");
+            assert_eq!(done, i == frame.len() - 1, "complete only at the last byte");
+        }
+        assert_eq!(dec.body(), &body[..]);
+        dec.recycle();
+    }
+
+    #[test]
+    fn frame_decoder_stops_at_frame_boundaries_in_a_shared_chunk() {
+        // Two back-to-back frames in one chunk: the decoder must stop at
+        // the first boundary so the caller can take the frame, then
+        // resume into the second from the leftover bytes.
+        let b1 = encode_client(&ClientFrame::Submit {
+            cmd: Command::new(Rid::new(ClientId(1), 1), vec![4], Op::Put, 16),
+            floor: 2,
+        });
+        let b2 = encode_client(&ClientFrame::Reply {
+            rid: Rid::new(ClientId(1), 1),
+            response: Response { versions: vec![(4, 1)] },
+            ts: 9,
+        });
+        let mut stream = transport_frame(crate::net::CLIENT_FROM, &b1);
+        stream.extend_from_slice(&transport_frame(crate::net::CLIENT_FROM, &b2));
+        let mut dec = FrameDecoder::new();
+        let (used, done) = dec.feed(&stream).unwrap();
+        assert!(done);
+        assert_eq!(used, 8 + b1.len(), "must stop at the first frame boundary");
+        assert_eq!(dec.body(), &b1[..]);
+        dec.clear();
+        let (used2, done2) = dec.feed(&stream[used..]).unwrap();
+        assert!(done2);
+        assert_eq!(used + used2, stream.len());
+        assert_eq!(dec.body(), &b2[..]);
+        dec.recycle();
+    }
+
+    #[test]
+    fn frame_decoder_rejects_hostile_lengths_without_allocating() {
+        // A length header above MAX_FRAME_BYTES must error the moment the
+        // header completes — before any body byte arrives.
+        let mut hostile = Vec::new();
+        hostile.extend_from_slice(&(crate::net::MAX_FRAME_BYTES as u32 + 1).to_le_bytes());
+        hostile.extend_from_slice(&crate::net::CLIENT_FROM.to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        assert!(dec.feed(&hostile).is_err(), "oversized length must fail");
+        dec.recycle();
+        // An empty body completes at the header (used by nothing today,
+        // but the state machine must not hang on it).
+        let empty = transport_frame(7, &[]);
+        let mut dec = FrameDecoder::new();
+        let (used, done) = dec.feed(&empty).unwrap();
+        assert_eq!((used, done), (empty.len(), true));
+        assert_eq!(dec.sender(), 7);
+        assert!(dec.body().is_empty());
+        dec.recycle();
     }
 
     #[test]

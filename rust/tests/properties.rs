@@ -307,17 +307,14 @@ fn prop_wire_codec_roundtrips_random_messages() {
     );
 }
 
-#[test]
-fn prop_client_frames_roundtrip_and_survive_corruption() {
-    // Tags 17–18 (docs/WIRE.md): random client frames round-trip through
-    // encode_client/decode_client, and truncations/bit-flips return Err
-    // or a different frame — never a panic.
+/// A random client-plane frame over every tag of that plane: Submit
+/// (17), Reply (18), or the admission-control Busy shed (25).
+fn random_client_frame(rng: &mut Rng) -> tempo::net::wire::ClientFrame {
     use tempo::core::Response;
-    use tempo::net::wire::{decode_client, encode_client, ClientFrame};
-    forall_seeds("client-frame-fuzz", |seed| {
-        let mut rng = Rng::new(seed);
-        let rid = Rid::new(ClientId(rng.gen_range(1 << 16)), 1 + rng.gen_range(1 << 20));
-        let frame = if rng.gen_bool(0.5) {
+    use tempo::net::wire::ClientFrame;
+    let rid = Rid::new(ClientId(rng.gen_range(1 << 16)), 1 + rng.gen_range(1 << 20));
+    match rng.gen_range(3) {
+        0 => {
             let keys: Vec<u64> =
                 (0..1 + rng.gen_range(4)).map(|_| rng.gen_range(1 << 30)).collect();
             let op = match rng.gen_range(4) {
@@ -330,12 +327,26 @@ fn prop_client_frames_roundtrip_and_survive_corruption() {
                 cmd: Command::new(rid, keys, op, rng.gen_range(512) as u32),
                 floor: rng.gen_range(1 << 40),
             }
-        } else {
+        }
+        1 => {
             let versions: Vec<(u64, u64)> = (0..rng.gen_range(5))
                 .map(|_| (rng.gen_range(1 << 30), rng.gen_range(1 << 20)))
                 .collect();
             ClientFrame::Reply { rid, response: Response { versions }, ts: rng.gen_range(1 << 40) }
-        };
+        }
+        _ => ClientFrame::Busy { rid },
+    }
+}
+
+#[test]
+fn prop_client_frames_roundtrip_and_survive_corruption() {
+    // Tags 17–18 and 25 (docs/WIRE.md): random client frames round-trip
+    // through encode_client/decode_client, and truncations/bit-flips
+    // return Err or a different frame — never a panic.
+    use tempo::net::wire::{decode_client, encode_client};
+    forall_seeds("client-frame-fuzz", |seed| {
+        let mut rng = Rng::new(seed);
+        let frame = random_client_frame(&mut rng);
         let enc = encode_client(&frame);
         let back = decode_client(&enc).map_err(|e| e.to_string())?;
         if back != frame {
@@ -349,6 +360,96 @@ fn prop_client_frames_roundtrip_and_survive_corruption() {
         let at = rng.gen_range(enc.len() as u64) as usize;
         flipped[at] ^= 1u8 << (rng.gen_range(8) as u32);
         let _ = decode_client(&flipped); // Err or a different frame — no panic
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incremental_decode_matches_whole_frame_decode_on_any_split() {
+    // The event loop's nonblocking `FrameDecoder` must agree with the
+    // whole-buffer reference on every chunking of the same byte stream:
+    // random client frames (tags 17, 18, 25) wrapped in transport
+    // framing, fed byte-by-byte AND at random split points, decode to
+    // exactly the frames that went in — and a truncated stream leaves
+    // the decoder incomplete without error (the frame simply has not
+    // arrived yet), while header corruption errors instead of panicking.
+    use tempo::net::wire::{decode_client, encode_client, FrameDecoder};
+    forall_seeds("incremental-decode", |seed| {
+        let mut rng = Rng::new(seed);
+        let frames: Vec<_> =
+            (0..1 + rng.gen_range(6)).map(|_| random_client_frame(&mut rng)).collect();
+        let mut stream = Vec::new();
+        for f in &frames {
+            let body = encode_client(f);
+            stream.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            stream.extend_from_slice(&u32::MAX.to_le_bytes()); // CLIENT_FROM
+            stream.extend_from_slice(&body);
+        }
+        // Decode the stream under a given chunking; compare to `frames`.
+        let run = |chunks: &[&[u8]]| -> Result<(), String> {
+            let mut dec = FrameDecoder::new();
+            let mut out = Vec::new();
+            for chunk in chunks {
+                let mut rest = *chunk;
+                while !rest.is_empty() {
+                    let (used, done) = dec.feed(rest).map_err(|e| e.to_string())?;
+                    rest = &rest[used..];
+                    if done {
+                        if dec.sender() != u32::MAX {
+                            return Err(format!("sender {} != CLIENT_FROM", dec.sender()));
+                        }
+                        out.push(decode_client(dec.body()).map_err(|e| e.to_string())?);
+                        dec.clear();
+                    }
+                }
+            }
+            if dec.is_complete() {
+                return Err("decoder complete after a fully-consumed stream".into());
+            }
+            dec.recycle();
+            if out != frames {
+                return Err(format!("{} frames in, {} out (or reordered)", frames.len(), out.len()));
+            }
+            Ok(())
+        };
+        // 1. One byte at a time — every header/body boundary is crossed.
+        let bytes: Vec<&[u8]> = stream.chunks(1).collect();
+        run(&bytes)?;
+        // 2. Random split points.
+        let mut splits = Vec::new();
+        let mut off = 0;
+        while off < stream.len() {
+            let n = 1 + rng.gen_range(40) as usize;
+            let end = (off + n).min(stream.len());
+            splits.push(&stream[off..end]);
+            off = end;
+        }
+        run(&splits)?;
+        // 3. The whole stream in one feed.
+        run(&[&stream])?;
+        // 4. Truncation: the decoder waits (incomplete), never errors.
+        let cut = rng.gen_range(stream.len() as u64) as usize;
+        let mut dec = FrameDecoder::new();
+        let mut rest = &stream[..cut];
+        while !rest.is_empty() {
+            let (used, done) = dec.feed(rest).map_err(|e| e.to_string())?;
+            rest = &rest[used..];
+            if done {
+                dec.clear();
+            }
+        }
+        if dec.is_complete() {
+            return Err("truncated stream left a complete frame pending".into());
+        }
+        dec.recycle();
+        // 5. An absurd length header errors instead of allocating/panicking.
+        let mut huge = FrameDecoder::new();
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&u32::MAX.to_le_bytes()); // len >> MAX_FRAME_BYTES
+        hdr.extend_from_slice(&u32::MAX.to_le_bytes());
+        if huge.feed(&hdr).is_ok() {
+            return Err("oversized frame header accepted".into());
+        }
         Ok(())
     });
 }
