@@ -302,14 +302,29 @@ fn read_mix(read_pct: u32) -> tempo::util::error::Result<()> {
 /// The proof is a private RMW counter key only this client touches:
 /// payload 0 keeps the KvStore RMW step at exactly +1, so the final
 /// version counts executions — a lost one leaves it short, a duplicated
-/// one overshoots. (The node is stopped *before* the window is written:
-/// the TCP runtime has no failure detector, so a proposal orphaned by a
-/// dying coordinator would stall its key forever — recovering that case
-/// needs the suspect/Ω machinery the simulator harness covers.)
+/// one overshoots.
+///
+/// The window is raced into the dying node *before* the kill, so some
+/// proposals die mid-protocol — orphaned at the survivors, stalling the
+/// stability frontier for their keys. No harness steps in: the TCP
+/// runtime's own failure detector must notice the silence (heartbeats,
+/// WIRE.md tag 26), suspect the dead coordinator after
+/// `Config::suspect_delay_us`, evict it through the epoch vote, and let
+/// recovery re-drive the orphaned dots — only then can the survivor
+/// execute the client's re-issues. The client paces its failover
+/// attempts with `TcpClient::backoff` while that plays out.
 fn kill_node() -> tempo::util::error::Result<()> {
     let r = 3usize;
-    let config = Config::new(r, 1).with_tick_interval_us(1_000).with_workers(2);
-    println!("--- e2e --kill-node ({r} nodes, 2 worker slots each) ---");
+    let config = Config::new(r, 1)
+        .with_tick_interval_us(1_000)
+        .with_workers(2)
+        .with_retry_interval_ticks(50)
+        .with_heartbeat_interval_us(20_000)
+        .with_suspect_delay_us(400_000);
+    println!(
+        "--- e2e --kill-node ({r} nodes, 2 worker slots each, \
+         heartbeats every 20 ms, suspect after 400 ms) ---"
+    );
     let (mut nodes, addrs) = boot_cluster(r, &config)?;
 
     let key = 1u64 << 42;
@@ -342,13 +357,13 @@ fn kill_node() -> tempo::util::error::Result<()> {
     completed.insert(done);
     println!("  executed-but-unacked rid re-issued at node 1 and absorbed");
 
-    // Kill phase: stop node 1 (the node this session is now on), then
-    // race a window of submissions into the dying connection. None of
-    // them can execute there — the shutdown event precedes them in every
-    // worker's queue — so the survivor-side re-issues are their only
-    // executions.
-    let victim = nodes.remove(1);
-    victim.shutdown();
+    // Kill phase: race a window of submissions into node 1 while it is
+    // still alive, *then* stop it. Some of the window executes before
+    // the shutdown (the re-issues below are absorbed by the dedup
+    // window); whatever was mid-protocol is orphaned at the survivors
+    // and stalls its key until the failure detector fires — the
+    // re-issues' only path to execution is suspicion -> eviction ->
+    // recovery, all driven by the runtime itself.
     for _ in 0..19 {
         match tc.submit_async(vec![key], Op::Rmw, 0) {
             Ok(rid) => {
@@ -357,8 +372,10 @@ fn kill_node() -> tempo::util::error::Result<()> {
             Err(_) => break, // connection already reset; re-issue the rest below
         }
     }
+    let victim = nodes.remove(1);
+    victim.shutdown();
     println!(
-        "  node 1 killed; {} requests unacked",
+        "  node 1 killed with {} requests unacked",
         submitted.len() - completed.len()
     );
 
@@ -371,6 +388,14 @@ fn kill_node() -> tempo::util::error::Result<()> {
             Err(e) => {
                 failovers += 1;
                 assert!(failovers <= 5, "failover loop not converging: {e:#}");
+                // Jittered exponential pacing between attempts: gives the
+                // detector/eviction/recovery pipeline time to unstall the
+                // orphaned dots instead of hammering the survivor.
+                std::thread::sleep(tc.backoff(
+                    failovers - 1,
+                    Duration::from_millis(50),
+                    Duration::from_millis(800),
+                ));
                 let n = tc.failover(&addrs[2])?;
                 println!("  failover #{failovers}: re-issued {n} rids at node 2");
             }
@@ -378,6 +403,37 @@ fn kill_node() -> tempo::util::error::Result<()> {
     }
     assert_eq!(completed, submitted, "every rid must complete exactly once");
     assert!(failovers > 0, "node death never surfaced to the client");
+
+    // The detector itself must have done the work: both survivors
+    // heartbeated, noticed the silence, and voted the victim out. The
+    // client side can finish before the suspect delay elapses (re-issues
+    // absorbed by dedup), so give the detector its window.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let done = nodes
+            .iter()
+            .all(|n| {
+                let c = n.counters();
+                c.suspicions >= 1 && c.evictions >= 1
+            });
+        if done {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "survivors never suspected+evicted the dead node: {:?}",
+            nodes.iter().map(|n| n.counters()).collect::<Vec<_>>()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    for (i, n) in nodes.iter().enumerate() {
+        let c = n.counters();
+        assert!(
+            c.heartbeats_sent > 0 && c.heartbeats_seen > 0,
+            "survivor {i}: no heartbeat traffic ({c:?})"
+        );
+    }
+    println!("  both survivors suspected and evicted node 1 on their own");
 
     // Exactly-once proof at the state machine.
     let expected = submitted.len() as u64;
@@ -886,18 +942,27 @@ fn sweep_clients() -> tempo::util::error::Result<()> {
         submitted.insert(tc.submit_async(vec![1 << 30 | i], Op::Put, 32)?);
     }
     let mut busy_errors = 0u64;
+    let mut busy_streak = 0u32;
     let mut completed = std::collections::HashSet::new();
     while tc.in_flight() > 0 {
         match tc.recv_reply() {
             Ok((rid, _)) => {
+                busy_streak = 0;
                 assert!(completed.insert(rid), "duplicate reply for {rid}");
             }
             Err(e) if is_busy_error(&e) => {
                 busy_errors += 1;
                 let rid = tc.last_busy().expect("busy rid recorded");
-                // The shed request was neither executed nor queued:
-                // back off and re-issue it under its original rid.
-                std::thread::sleep(Duration::from_millis(2));
+                // The shed request was neither executed nor queued: back
+                // off (jittered exponential, growing with the consecutive
+                // busy streak so a saturated window is not hammered) and
+                // re-issue it under its original rid.
+                std::thread::sleep(tc.backoff(
+                    busy_streak,
+                    Duration::from_millis(1),
+                    Duration::from_millis(16),
+                ));
+                busy_streak += 1;
                 tc.resubmit(rid)?;
             }
             Err(e) => return Err(e),

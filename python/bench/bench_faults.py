@@ -22,13 +22,23 @@ ordering path of bench_reads.py extended with the fault machinery —
    The GC frontier drops the evicted member and prunes the frozen
    backlog — the unfreeze the epoch subsystem exists for.
 
-4. **Post-eviction phase**: ops/s with quorums drawn from the survivor
+4. **Recovery phase**: the victim died holding half-driven proposals —
+   dots whose ``MPropose`` reached a survivor but whose commit never
+   followed. The lowest surviving member takes each one over with a
+   ballot above the dead coordinator's (``MRec`` prepare, WIRE.md tag
+   11), reads the recorded timestamp from the survivor's ``MRecAck``,
+   and re-drives the dot to commit — the port of the ballot-based
+   coordinator recovery the Rust side runs for Tempo and the dep-graph
+   families.
+
+5. **Post-eviction phase**: ops/s with quorums drawn from the survivor
    set only — the recovered throughput the gate compares against the
    healthy baseline.
 
 Reported: per-phase ops/s, retransmits, dedup hits, MEpoch frames,
-reconfiguration latency, and the info-record footprint at the crash, at
-its frozen peak, and after the unfreeze.
+reconfiguration latency, the stalled-dot recovery (count, frames, wall
+time), and the info-record footprint at the crash, at its frozen peak,
+and after the unfreeze.
 
 Run from anywhere: ``python3 python/bench/bench_faults.py``.
 ``--smoke`` (or ``SMOKE=1``) runs reduced iterations and leaves the
@@ -52,6 +62,7 @@ GC_EVERY = 64  # ports Config::gc_interval_ticks
 DEDUP_WINDOW = 64  # ports Config::dedup_window
 PAYLOAD = 100
 IN_FLIGHT_AT_CRASH = 16  # client pipeline depth failed over at the crash
+STALLED_AT_CRASH = 8  # proposals the victim was coordinating mid-protocol
 
 
 class Replica:
@@ -73,7 +84,9 @@ class Replica:
         self.dedup.append(rid)
         if len(self.dedup) > DEDUP_WINDOW:
             self.dedup.pop(0)
-        self.executed_wm = seq
+        # max: a recovered orphan executes after younger commands — the
+        # frontier must not regress to its (older) sequence number.
+        self.executed_wm = max(self.executed_wm, seq)
         return True
 
 
@@ -174,6 +187,97 @@ class Cluster:
             if rep.alive:
                 rep.infos = {s: i for s, i in rep.infos.items() if s > frontier}
 
+    def stall_victim_coordinations(self, n, rid_base):
+        """Replica 2 coordinates ``n`` commands that die mid-propose: the
+        MPropose reaches survivor replica 1 (which bumps its clock and
+        records the promised timestamp), but the coordinator crashes
+        before driving the commit. Returns the stalled records the
+        survivors hold — kept out of ``Replica.infos`` on purpose, so
+        the GC-footprint numbers stay about committed commands only."""
+        survivor = self.replicas[1]
+        stalled = []
+        for i in range(n):
+            self.seq += 1
+            seq = self.seq
+            victim = self.replicas[2]
+            victim.clock += 1
+            key = seq % N_KEYS
+            dot = (2, seq)
+            rid = (2, rid_base + i)
+            cmd = {"rid": rid, "op": 1, "payload_len": PAYLOAD, "batched": 0,
+                   "keys": [key]}
+            propose = wire.encode(
+                {"t": "MPropose", "dot": dot, "cmd": cmd,
+                 "quorums": [(0, self.group())], "ts": [(key, victim.clock)]}
+            )
+            self.wire_bytes += len(propose)
+            msg = wire.decode(propose)
+            proposed = msg["ts"][0][1]
+            if proposed > survivor.clock:
+                survivor.clock = proposed
+            # The survivor's ack heads back toward a coordinator that is
+            # about to die; the commit never follows.
+            ack = wire.encode(
+                {"t": "MProposeAck", "dot": dot,
+                 "ts": [(key, survivor.clock)],
+                 "promises": [(key, ([(survivor.clock, survivor.clock)],
+                                     []))]}
+            )
+            self.wire_bytes += len(ack)
+            stalled.append((dot, key, survivor.clock, rid, seq))
+        return stalled
+
+    def recover_stalled(self, stalled):
+        """Ballot-based coordinator takeover for the victim's stalled
+        dots — the port of what ``MRecDep``/``MRec`` does in Rust. The
+        lowest surviving member prepares each dot with an owned ballot
+        above the dead coordinator's initial one (``ballot::next_owned``
+        steps by r, so ``initial(victim) + R`` lands back on replica 0),
+        reads the recorded timestamp from the survivor's MRecAck, and
+        re-drives the dot to commit at the survivor set. Returns
+        (recovered_count, rec_frames)."""
+        new_coord = self.replicas[min(self.group())]
+        survivor_id = next(p for p in self.group() if p != min(self.group()))
+        survivor = self.replicas[survivor_id]
+        rec_frames = 0
+        recovered = 0
+        victim_initial_bal = 2 + 1  # initial coordinator ballots are 1..=r
+        takeover_bal = victim_initial_bal + R
+        for dot, key, ts, rid, seq in stalled:
+            prepare = wire.encode(
+                {"t": "MRec", "dot": dot, "bal": takeover_bal})
+            self.wire_bytes += len(prepare)
+            rec_frames += 1
+            assert wire.decode(prepare)["bal"] > victim_initial_bal
+            # The survivor saw the payload and promised a timestamp: it
+            # answers from the Propose phase with what it recorded.
+            rec_ack = wire.encode(
+                {"t": "MRecAck", "dot": dot, "ts": [(key, ts)],
+                 "phase": "Propose", "abal": victim_initial_bal,
+                 "bal": takeover_bal}
+            )
+            self.wire_bytes += len(rec_ack)
+            rec_frames += 1
+            ack = wire.decode(rec_ack)
+            final_ts = max(ack["ts"][0][1], new_coord.clock)
+            commit = wire.encode(
+                {"t": "MCommit", "dot": dot, "group": 0,
+                 "ts": [(key, final_ts)],
+                 "promises": [(0, [(key, ([(final_ts, final_ts)], []))])]}
+            )
+            for p in self.group():
+                if p == min(self.group()):
+                    continue
+                self.wire_bytes += len(commit)
+                wire.decode(commit)
+            for p in self.group():
+                rep = self.replicas[p]
+                rep.infos[seq] = (dot, final_ts)
+                rep.execute(rid, seq)
+            recovered += 1
+        assert survivor.executed_wm >= max(s[4] for s in stalled)
+        return recovered, rec_frames
+
     def evict(self, victim):
         """Survivor vote: every live member broadcasts its MEpoch vote
         for (epoch+1, evicted+victim); a majority installs it."""
@@ -210,6 +314,13 @@ def main():
     healthy, _ = run_phase(cluster, PHASE_OPS, 0)
     print(f"healthy       : {healthy['ops_per_s_wall']:>9} ops/s "
           f"({R} replicas, quorums over both peers)")
+
+    # Replica 2 starts coordinating its own commands and dies holding
+    # them mid-propose: the survivors have promised timestamps but no
+    # commit, and only the ballot takeover after eviction can finish
+    # them.
+    stalled = cluster.stall_victim_coordinations(STALLED_AT_CRASH,
+                                                 9_000_000)
 
     # Crash replica 2. The client had IN_FLIGHT_AT_CRASH requests
     # pipelined through it; it fails over and re-issues them at the
@@ -253,6 +364,19 @@ def main():
           f"({cluster.epoch_frames} MEpoch frames); "
           f"info records {infos_peak_frozen} -> {infos_after_unfreeze}")
 
+    # The victim's stalled dots: the lowest survivor takes each one over
+    # with a ballot above the dead coordinator's and re-drives it to
+    # commit from the survivors' recorded timestamps.
+    recover_wall = time.perf_counter()
+    recovered, rec_frames = cluster.recover_stalled(stalled)
+    recover_ms = (time.perf_counter() - recover_wall) * 1e3
+    assert recovered == STALLED_AT_CRASH, (
+        f"stalled dots left uncommitted: {recovered}/{STALLED_AT_CRASH}"
+    )
+    print(f"recovery      : {recovered}/{STALLED_AT_CRASH} stalled dots "
+          f"re-driven to commit ({rec_frames} MRec/MRecAck frames, "
+          f"{recover_ms:.2f} ms wall)")
+
     post, post_retried = run_phase(cluster, PHASE_OPS, 2 * PHASE_OPS + 100)
     assert post_retried == 0, "post-eviction quorums must avoid the victim"
     print(f"post-eviction : {post['ops_per_s_wall']:>9} ops/s "
@@ -270,8 +394,10 @@ def main():
         "deterministic simulator",
         "workload": f"single-key writes over {N_KEYS} keys, {PHASE_OPS} ops "
         f"per steady phase, crash of replica 2 with "
-        f"{IN_FLIGHT_AT_CRASH} requests failed over, suspect after "
-        f"{SUSPECT_AFTER_OPS} ops, r={R} majority={MAJORITY}",
+        f"{IN_FLIGHT_AT_CRASH} requests failed over and "
+        f"{STALLED_AT_CRASH} of its own proposals stalled mid-protocol, "
+        f"suspect after {SUSPECT_AFTER_OPS} ops, r={R} "
+        f"majority={MAJORITY}",
         "phases": [
             {"phase": "healthy", **healthy},
             {"phase": "degraded", **degraded},
@@ -289,6 +415,12 @@ def main():
                 "at_crash": infos_at_crash,
                 "peak_frozen": infos_peak_frozen,
                 "after_unfreeze": infos_after_unfreeze,
+            },
+            "stalled_dots": {
+                "stalled": STALLED_AT_CRASH,
+                "recovered_to_commit": recovered,
+                "rec_frames": rec_frames,
+                "time_to_recover_ms": round(recover_ms, 2),
             },
         },
         "wire_bytes_total": cluster.wire_bytes,

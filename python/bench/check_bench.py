@@ -349,11 +349,30 @@ def main():
             f"BENCH_faults.json eviction did not unfreeze GC (info records "
             f"{frozen} frozen -> {after} after)"
         )
+    stalled_dots = recovery.get("stalled_dots", {})
+    stalled = int(stalled_dots.get("stalled", 0))
+    redriven = int(stalled_dots.get("recovered_to_commit", -1))
+    if stalled <= 0:
+        fail(
+            "BENCH_faults.json recorded no stalled victim coordinations — "
+            "the ballot-takeover path was never exercised"
+        )
+    if redriven != stalled:
+        fail(
+            f"BENCH_faults.json stalled dots left uncommitted after the "
+            f"ballot takeover ({redriven}/{stalled} re-driven)"
+        )
+    if int(stalled_dots.get("rec_frames", 0)) <= 0:
+        fail(
+            "BENCH_faults.json records no MRec/MRecAck frames for the "
+            "stalled-dot recovery"
+        )
     print(
         f"faults: recovered {recovered:.0f}/{healthy:.0f} ops/s, "
         f"{phases['degraded']['retransmits']} retransmits, epoch "
         f"{recovery['epoch_installed']} evicting {recovery['evicted']}, "
-        f"gc {frozen} -> {after} ok"
+        f"gc {frozen} -> {after}, {redriven}/{stalled} stalled dots "
+        f"re-driven ok"
     )
     print("all bench gates passed")
 

@@ -154,6 +154,31 @@ pub struct Config {
     /// writer wait up to this long for more frames before flushing,
     /// trading bounded latency for more members per merged frame.
     pub merge_wait_us: u64,
+    /// Heartbeat cadence of the TCP runtime's failure detector, in
+    /// microseconds: a per-peer writer that has been idle this long
+    /// emits a one-byte heartbeat frame (wire tag 26) so the peer's
+    /// last-seen table keeps advancing even when the protocol is
+    /// quiet. Any frame counts as liveness evidence — heartbeats only
+    /// fill the gaps. Also the detector thread's scan cadence.
+    pub heartbeat_interval_us: u64,
+    /// Failure-detector suspicion timeout, in microseconds: if no frame
+    /// (heartbeat or otherwise) has arrived from a peer for this long,
+    /// the TCP runtime calls `Protocol::suspect` for it, driving the
+    /// `MEpoch` eviction vote over real sockets. `u64::MAX` (the
+    /// default) disables the detector — suspicion is then only ever
+    /// harness-driven, the pre-detector behaviour. Choose a value
+    /// several multiples of `heartbeat_interval_us`: a too-tight
+    /// timeout evicts live-but-slow nodes (safe — see the
+    /// false-suspicion test — but needlessly shrinks the group).
+    pub suspect_delay_us: u64,
+    /// Cap of the per-dot exponential retransmission backoff, in ticks.
+    /// 0 (the default) keeps the legacy fixed cadence: every in-flight
+    /// dot is re-driven on every `retry_interval_ticks`-th tick. A
+    /// positive cap makes each dot back off individually — first retry
+    /// `retry_interval_ticks` after registration, then doubling up to
+    /// the cap — so a long partition heals with a trickle instead of a
+    /// retransmit storm. Pinned by `protocol::common::retry` unit tests.
+    pub retry_backoff_cap_ticks: u64,
 }
 
 impl Config {
@@ -204,6 +229,9 @@ impl Config {
             client_event_threads: Self::DEFAULT_CLIENT_EVENT_THREADS,
             max_inflight_per_session: Self::DEFAULT_MAX_INFLIGHT_PER_SESSION,
             merge_wait_us: 0,
+            heartbeat_interval_us: 100_000,
+            suspect_delay_us: u64::MAX,
+            retry_backoff_cap_ticks: 0,
         }
     }
 
@@ -350,6 +378,28 @@ impl Config {
     /// [`Config::merge_wait_us`]; 0 = opportunistic, the default).
     pub fn with_merge_wait_us(mut self, us: u64) -> Self {
         self.merge_wait_us = us;
+        self
+    }
+
+    /// Heartbeat cadence of the TCP failure detector (see
+    /// [`Config::heartbeat_interval_us`]; must be ≥ 1 µs).
+    pub fn with_heartbeat_interval_us(mut self, us: u64) -> Self {
+        assert!(us >= 1, "heartbeat interval must be positive");
+        self.heartbeat_interval_us = us;
+        self
+    }
+
+    /// Failure-detector suspicion timeout (see
+    /// [`Config::suspect_delay_us`]; `u64::MAX` disables the detector).
+    pub fn with_suspect_delay_us(mut self, us: u64) -> Self {
+        self.suspect_delay_us = us;
+        self
+    }
+
+    /// Cap of the per-dot exponential retransmission backoff (see
+    /// [`Config::retry_backoff_cap_ticks`]; 0 = legacy fixed cadence).
+    pub fn with_retry_backoff_cap_ticks(mut self, ticks: u64) -> Self {
+        self.retry_backoff_cap_ticks = ticks;
         self
     }
 

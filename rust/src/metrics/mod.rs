@@ -148,6 +148,18 @@ pub struct Counters {
     /// because the session's in-flight window
     /// (`Config::max_inflight_per_session`) was full.
     pub busy_shed: u64,
+    /// Heartbeat frames (docs/WIRE.md tag 26) written to idle peer links
+    /// by the TCP runtime's per-peer writers. Transport-plane traffic:
+    /// excluded from `bytes_sent`/`wire_frames` so protocol byte
+    /// accounting is unchanged by the failure detector.
+    pub heartbeats_sent: u64,
+    /// Heartbeat frames received from peers and consumed at the
+    /// transport layer (they never reach the protocol codec).
+    pub heartbeats_seen: u64,
+    /// Peers this node's failure detector reported as suspected after
+    /// `Config::suspect_delay_us` of silence (sticky — each peer counts
+    /// at most once per node lifetime).
+    pub suspicions: u64,
 }
 
 impl Counters {
@@ -190,6 +202,9 @@ impl Counters {
         self.client_replies += o.client_replies;
         self.client_flushes += o.client_flushes;
         self.busy_shed += o.busy_shed;
+        self.heartbeats_sent += o.heartbeats_sent;
+        self.heartbeats_seen += o.heartbeats_seen;
+        self.suspicions += o.suspicions;
     }
 
     /// Mean number of messages per flushed batch (0 when batching never

@@ -87,6 +87,16 @@ pub const TAG_CHUNK: u8 = 24;
 /// a copy did slip through elsewhere). Client-plane only, exactly like
 /// tags 17–18.
 pub const TAG_CLIENT_BUSY: u8 = 25;
+/// Tag of the heartbeat frame (docs/WIRE.md): `[26]` — a body of
+/// exactly the tag byte, nothing else. **Transport plane only**: a
+/// node's per-peer writer emits one whenever
+/// `Config::heartbeat_interval_us` elapses with nothing queued for
+/// that peer, and the receiving end consumes it while refreshing the
+/// sender's last-seen time — *before* any codec runs. Every decoder
+/// (protocol, client, transfer) therefore rejects it exactly like a
+/// cross-plane tag, and it is never legal inside `MBatch`, a routed
+/// envelope, or a merged frame.
+pub const TAG_HEARTBEAT: u8 = 26;
 
 /// True iff `tag` belongs to the client plane (tags 17, 18, 25).
 pub(crate) fn is_client_tag(tag: u8) -> bool {
@@ -1031,6 +1041,7 @@ pub fn decode_client(buf: &[u8]) -> Result<ClientFrame> {
         x if (TAG_MANIFEST_REQUEST..=TAG_CHUNK).contains(&x) => {
             bail!("transfer frame tag {x} in client stream")
         }
+        TAG_HEARTBEAT => bail!("heartbeat frame in client stream (transport plane only)"),
         x => bail!("bad client frame tag {x}"),
     }
 }
@@ -1125,6 +1136,9 @@ pub fn decode_transfer(buf: &[u8]) -> Result<TransferFrame> {
         TAG_CLIENT_BUSY => {
             bail!("client frame tag {TAG_CLIENT_BUSY} in transfer stream")
         }
+        TAG_HEARTBEAT => {
+            bail!("heartbeat frame in transfer stream (transport plane only)")
+        }
         x => bail!("bad transfer frame tag {x}"),
     }
 }
@@ -1217,6 +1231,7 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
                     Some(&t) if (TAG_MANIFEST_REQUEST..=TAG_CHUNK).contains(&t) => {
                         bail!("transfer frame tag {t} inside MBatch")
                     }
+                    Some(&TAG_HEARTBEAT) => bail!("heartbeat frame inside MBatch"),
                     _ => {}
                 }
                 let mut sub = Reader::new(body);
@@ -1244,6 +1259,9 @@ fn decode_at(r: &mut Reader) -> Result<Msg> {
         TAG_MERGED => bail!("merged frame where a bare protocol message was expected"),
         x if (TAG_MANIFEST_REQUEST..=TAG_CHUNK).contains(&x) => {
             bail!("transfer frame tag {x} in protocol stream")
+        }
+        TAG_HEARTBEAT => {
+            bail!("heartbeat frame in protocol stream (transport plane only)")
         }
         x => bail!("bad message tag {x}"),
     };
@@ -1734,6 +1752,27 @@ mod tests {
         ] {
             assert!(decode_transfer(&bytes).is_err(), "cross-plane frame must not decode");
         }
+    }
+
+    /// The heartbeat frame (tag 26) lives below every codec: the peer
+    /// read path consumes it before decoding, so every decoder must
+    /// reject it like any cross-plane tag — on its own, routed, merged,
+    /// and inside `MBatch`.
+    #[test]
+    fn heartbeat_tag_is_rejected_on_every_plane() {
+        let hb = [TAG_HEARTBEAT];
+        assert!(decode(&hb).is_err(), "heartbeat is not a protocol message");
+        assert!(decode_client(&hb).is_err(), "heartbeat is not a client frame");
+        assert!(decode_transfer(&hb).is_err(), "heartbeat is not a transfer frame");
+        assert!(decode_routed(&hb).is_err(), "heartbeat is not a routed frame");
+        assert!(decode_merged(&hb).is_err(), "heartbeat is not a merged frame");
+        // Inside an MBatch the member-tag peek rejects it up front.
+        let mut w = Writer::new();
+        w.u8(16);
+        w.u16(1);
+        w.u32(hb.len() as u32);
+        w.buf.extend_from_slice(&hb);
+        assert!(decode(&w.buf).is_err(), "heartbeat inside MBatch must fail");
     }
 
     #[test]

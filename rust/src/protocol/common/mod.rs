@@ -6,7 +6,8 @@
 //! ([`CommandsInfo`]), group-wide garbage collection of executed commands
 //! ([`GCTrack`]), the stability kernel shared with the runtime
 //! ([`stability`]), parking for stability-powered local reads
-//! ([`read`]), per-key worker sharding of whole replicas
+//! ([`read`]), capped-exponential retransmission pacing ([`retry`]),
+//! per-key worker sharding of whole replicas
 //! ([`shard`]), and wire-size accounting ([`wire`]).
 //!
 //! Layering: `core` → `protocol/common` → protocol implementations
@@ -21,6 +22,7 @@ pub mod epoch;
 pub mod gc;
 pub mod info;
 pub mod read;
+pub mod retry;
 pub mod shard;
 pub mod stability;
 pub mod wire;
@@ -31,5 +33,6 @@ pub use epoch::{EpochManager, EpochProcess};
 pub use gc::{GCTrack, GcProcess};
 pub use info::CommandsInfo;
 pub use read::{ParkedRead, ReadStash};
+pub use retry::RetryPacer;
 pub use shard::{worker_of_cmd, worker_of_dot, worker_of_key, Routed, Sharded};
 pub use stability::{majority_watermark, ExecutedSet, QuorumFrontier, SourceTracker};

@@ -1,0 +1,164 @@
+//! Per-dot retransmission pacing with capped exponential backoff.
+//!
+//! `Config::retry_interval_ticks` alone re-drives *every* in-flight dot
+//! on every N-th tick: after a long partition every stalled dot fires
+//! on the same tick, so the heal instant sees a retransmit storm
+//! proportional to the outage length. [`RetryPacer`] spreads that out:
+//! each key backs off individually — first retry one base interval
+//! after it is first seen, then doubling up to
+//! `Config::retry_backoff_cap_ticks` — so steady-state stragglers are
+//! still re-driven promptly while long-stalled dots retry at the cap
+//! cadence instead of every opportunity.
+//!
+//! With `cap == 0` the pacer is pass-through (every key is always due),
+//! which keeps the legacy fixed-cadence behaviour — and every seeded
+//! run — bit-identical; the protocol's own `ticks % base` gate then
+//! provides the cadence exactly as before this module existed.
+
+use std::collections::BTreeMap;
+
+/// Per-key retransmission schedule: first due `base` ticks after a key
+/// is first consulted, then doubling intervals capped at `cap`.
+///
+/// Keys are whatever the protocol retries on (dots here); the pacer
+/// never retries anything itself — the owner asks [`RetryPacer::due`]
+/// on its retry ticks and must [`RetryPacer::retain`] the live key set
+/// periodically so completed commands do not leak schedule entries.
+#[derive(Debug, Clone)]
+pub struct RetryPacer<K: Ord + Copy> {
+    base: u64,
+    cap: u64,
+    /// key → (next due tick, completed attempts).
+    sched: BTreeMap<K, (u64, u32)>,
+}
+
+impl<K: Ord + Copy> RetryPacer<K> {
+    /// A pacer with retry base interval `base` ticks and backoff cap
+    /// `cap` ticks. `cap == 0` disables backoff (pass-through).
+    pub fn new(base: u64, cap: u64) -> Self {
+        Self { base, cap: if cap == 0 { 0 } else { cap.max(base) }, sched: BTreeMap::new() }
+    }
+
+    /// Whether backoff is active (`cap != 0`). With backoff off the
+    /// owner keeps its legacy global `ticks % base` cadence gate.
+    pub fn backoff_enabled(&self) -> bool {
+        self.cap != 0
+    }
+
+    /// Is `key` due for a retransmit at `tick`? First call for a key
+    /// schedules it `base` ticks out and answers no; each yes advances
+    /// the key's next due point by `min(base · 2^attempts, cap)`.
+    /// Pass-through (always yes, no state) when backoff is disabled.
+    pub fn due(&mut self, key: K, tick: u64) -> bool {
+        if self.cap == 0 {
+            return true;
+        }
+        match self.sched.get_mut(&key) {
+            None => {
+                self.sched.insert(key, (tick.saturating_add(self.base), 0));
+                false
+            }
+            Some((next, attempts)) => {
+                if tick < *next {
+                    return false;
+                }
+                *attempts += 1;
+                let interval =
+                    self.base.saturating_mul(1u64 << (*attempts).min(32)).min(self.cap);
+                *next = tick.saturating_add(interval.max(1));
+                true
+            }
+        }
+    }
+
+    /// Drop schedule entries whose key no longer needs retries (the
+    /// owner passes its live in-flight set).
+    pub fn retain(&mut self, mut live: impl FnMut(&K) -> bool) {
+        self.sched.retain(|k, _| live(k));
+    }
+
+    /// Forget one key (e.g. on commit, so any later commit-stage
+    /// retries of the same dot start from a fresh schedule).
+    pub fn clear(&mut self, key: &K) {
+        self.sched.remove(key);
+    }
+
+    /// Number of scheduled keys (tests / introspection).
+    pub fn len(&self) -> usize {
+        self.sched.len()
+    }
+
+    /// Whether no keys are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.sched.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The documented schedule, pinned: base 4, cap 32 fires a key at
+    /// offsets +4, +12, +28, +60, +92, … after first sight (intervals
+    /// 4, 8, 16, 32, 32 — doubling until the cap).
+    #[test]
+    fn backoff_schedule_is_pinned() {
+        let mut p = RetryPacer::new(4, 32);
+        assert!(p.backoff_enabled());
+        // First sight at tick 0 schedules, does not fire.
+        assert!(!p.due(7u64, 0));
+        let mut fired = Vec::new();
+        for tick in 1..=100 {
+            if p.due(7u64, tick) {
+                fired.push(tick);
+            }
+        }
+        assert_eq!(fired, vec![4, 12, 28, 60, 92]);
+    }
+
+    #[test]
+    fn pass_through_when_cap_zero() {
+        let mut p = RetryPacer::new(4, 0);
+        assert!(!p.backoff_enabled());
+        for tick in 0..10 {
+            assert!(p.due(1u64, tick), "cap=0 must always be due");
+        }
+        assert!(p.is_empty(), "pass-through keeps no state");
+    }
+
+    #[test]
+    fn keys_back_off_independently_and_retain_prunes() {
+        let mut p = RetryPacer::new(2, 8);
+        assert!(!p.due(1u64, 0));
+        assert!(!p.due(2u64, 5));
+        assert!(p.due(1u64, 2), "key 1 due at its own offset");
+        assert!(!p.due(2u64, 6), "key 2 not due on key 1's schedule");
+        assert!(p.due(2u64, 7));
+        assert_eq!(p.len(), 2);
+        p.retain(|k| *k == 2);
+        assert_eq!(p.len(), 1);
+        // Cleared keys restart from a fresh first-sight schedule.
+        p.clear(&2u64);
+        assert!(!p.due(2u64, 100));
+        assert!(p.due(2u64, 102));
+    }
+
+    /// A storm of keys first seen together still fires together on the
+    /// first retry, but their later retries stay bounded by the cap —
+    /// the property the satellite exists for is that a key retried n
+    /// times has sent only O(log(outage)) retransmits, not outage/base.
+    #[test]
+    fn long_outage_costs_logarithmic_retries() {
+        let mut p = RetryPacer::new(4, 64);
+        let mut count = 0;
+        p.due(9u64, 0);
+        for tick in 1..=1000 {
+            if p.due(9u64, tick) {
+                count += 1;
+            }
+        }
+        // Fixed cadence would fire 250 times; backoff fires at
+        // +4 +12 +28 +60 +124 then every 64: well under 25.
+        assert!(count < 25, "got {count} retries over 1000 ticks");
+    }
+}

@@ -17,17 +17,33 @@
 //! FPaxos).
 //!
 //! Reproduction notes (see DESIGN.md): the slow path uses the Flexible
-//! Paxos `f+1` quorum for all variants (favourable to EPaxos); baseline
-//! recovery is not implemented (the paper's experiments never crash
-//! baseline processes); Janus* execution uses per-group dependency graphs
-//! plus a cross-group readiness barrier in place of the full union-graph
-//! inquiry protocol — faithful for transactions whose conflicts are
-//! per-key, which YCSB+T's are.
+//! Paxos `f+1` quorum for all variants (favourable to EPaxos); Janus*
+//! execution uses per-group dependency graphs plus a cross-group
+//! readiness barrier in place of the full union-graph inquiry protocol —
+//! faithful for transactions whose conflicts are per-key, which YCSB+T's
+//! are.
+//!
+//! Recovery: one ballot-based prepare phase covers all three variants
+//! (the Atlas recovery of arXiv 2003.11789 §4, structurally identical to
+//! the Tempo §B port in [`crate::protocol::tempo`]). On a recovery
+//! timeout the Ω leader claims the dot at a ballot it owns
+//! (`protocol::ballot`), reads recorded dependency reports from a
+//! recovery quorum of `r - f` (`MRecDep`/`MRecDepAck`, NAck-helped like
+//! Tempo's `handle_rec_nack`), picks the highest accepted consensus
+//! value if one exists — else reconstructs the committed union from
+//! `I = Q_rec ∩ Q_fast` — and re-drives the dot through the ordinary
+//! `MConsensus` slow path to commit. Safety of the union rule: every
+//! fast-quorum report is extended with the initial coordinator's
+//! dependencies (`handle_propose`), so a dependency committed on the
+//! fast path that is missing from every `I` report would have to be
+//! reported only by `FQ \ Q_rec` — at most `f` processes including the
+//! initial coordinator — and anything the initial coordinator reported
+//! is in *every* report, a contradiction.
 
 use super::common::{
     wire, BaseProcess, CommandsInfo, EpochManager, EpochProcess, GCTrack, GcProcess, Process,
 };
-use super::{Action, Footprint, Protocol};
+use super::{ballot, Action, Footprint, Protocol};
 use crate::core::{key_to_shard, Command, Config, Dot, Key, Op, ProcessId, ShardId};
 use crate::executor::DepGraph;
 use crate::metrics::Counters;
@@ -64,11 +80,21 @@ pub type Quorums = Arc<[(ShardId, Vec<ProcessId>)]>;
 /// that mutate copy once on receipt, never once per peer.
 pub type Deps = Arc<[Dot]>;
 
+/// Per-command lifecycle (public because [`Msg::MRecDepAck`] carries it
+/// as the recovery leader's fast-path-validity evidence).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Phase {
+pub enum Phase {
     Start,
     Payload,
     Propose,
+    /// Recovery touched this replica before it saw the fast round: its
+    /// dependency report was computed in the `MRecDep` handler, which
+    /// invalidates the fast path (it never acked and, at a nonzero
+    /// ballot, never will).
+    RecoverR,
+    /// Recovery touched this replica after it acked the fast round: its
+    /// report is the one the initial coordinator may have committed on.
+    RecoverP,
     Commit,
     Execute,
 }
@@ -82,6 +108,17 @@ pub enum Msg {
     MCommit { dot: Dot, group: ShardId, deps: Deps },
     MConsensus { dot: Dot, deps: Deps, bal: u64 },
     MConsensusAck { dot: Dot, bal: u64 },
+    /// Recovery prepare (Atlas §4 / Tempo MRec analogue): a recovery
+    /// leader claims `dot` at ballot `bal` and asks the group for its
+    /// recorded dependency reports.
+    MRecDep { dot: Dot, bal: u64 },
+    /// Prepare reply: the replier's recorded report, its phase (the
+    /// leader's fast-path-validity evidence) and the ballot `abal` at
+    /// which it last *accepted* a consensus value (0 = never).
+    MRecDepAck { dot: Dot, deps: Deps, phase: Phase, abal: u64, bal: u64 },
+    /// Prepare rejection carrying the replier's (higher) promised
+    /// ballot, so the leader can help by retrying above it.
+    MRecDepNAck { dot: Dot, bal: u64 },
     /// Janus* cross-group execution barrier: this group is ready to
     /// execute `dot` (its local dependency closure is committed).
     MReady { dot: Dot },
@@ -117,6 +154,8 @@ impl Msg {
             Msg::MProposeAck { deps, .. }
             | Msg::MCommit { deps, .. }
             | Msg::MConsensus { deps, .. } => HDR + dots(deps.len()),
+            // phase byte + two ballots on top of the dep set.
+            Msg::MRecDepAck { deps, .. } => HDR + dots(deps.len()) + 17,
             Msg::MGarbageCollect { executed } => HDR + proc_vals(executed.len()),
             Msg::MEpoch { evicted, .. } => HDR + 8 + 4 * evicted.len() as u64,
             Msg::MBatch { msgs } => {
@@ -260,11 +299,18 @@ struct Info {
     /// Current local dependency value (proposal → decided for our group).
     deps: Vec<Dot>,
     bal: u64,
+    /// Ballot at which a consensus value was last *accepted* (0 = never)
+    /// — the classic Paxos highest-accepted rule during recovery.
+    abal: u64,
     coordinator: bool,
     decided: bool,
     /// Quorum replies, holding the shared wire buffers directly.
     acks: Vec<(ProcessId, Deps)>,
     consensus_acks: BTreeSet<ProcessId>,
+    /// Recovery prepare replies: (process, report, phase, abal).
+    rec_acks: Vec<(ProcessId, Deps, Phase, u64)>,
+    /// When this dot entered a pending phase (recovery timer base).
+    pending_since: u64,
     /// Committed dependency sets per accessed group.
     group_deps: Vec<(ShardId, Deps)>,
     /// Cross-group execution barrier.
@@ -280,10 +326,13 @@ impl Info {
             quorums: Vec::new().into(),
             deps: Vec::new(),
             bal: 0,
+            abal: 0,
             coordinator: false,
             decided: false,
             acks: Vec::new(),
             consensus_acks: BTreeSet::new(),
+            rec_acks: Vec::new(),
+            pending_since: 0,
             group_deps: Vec::new(),
             ready_acks: BTreeSet::new(),
             announced: false,
@@ -313,6 +362,14 @@ pub struct DepCore {
     /// MCommit is re-broadcast on the same cadence for peers that missed
     /// it (handle_commit is idempotent).
     retry_commits: BTreeSet<Dot>,
+    /// Per-dot retransmit pacing (`Config::retry_backoff_cap_ticks`);
+    /// pass-through when the cap is 0 (legacy fixed cadence).
+    retry_pacer: super::common::RetryPacer<Dot>,
+    /// Every locally known, not-yet-committed dot — any replica may
+    /// become the recovery leader, so all of them arm the timer.
+    pending: BTreeSet<Dot>,
+    /// Processes this replica suspects (Ω input for leader election).
+    suspected: BTreeSet<ProcessId>,
     ticks: u64,
     pub counters: Counters,
 }
@@ -334,6 +391,10 @@ impl DepCore {
         let graph = DepGraph::strided(bp.config.worker, bp.config.workers);
         let epochs =
             EpochManager::new(id, bp.group_procs.clone(), bp.config.epoch_fence_off);
+        let retry_pacer = super::common::RetryPacer::new(
+            bp.config.retry_interval_ticks,
+            bp.config.retry_backoff_cap_ticks,
+        );
         DepCore {
             bp,
             variant,
@@ -346,9 +407,29 @@ impl DepCore {
             epochs,
             retry_pending: BTreeSet::new(),
             retry_commits: BTreeSet::new(),
+            retry_pacer,
+            pending: BTreeSet::new(),
+            suspected: BTreeSet::new(),
             ticks: 0,
             counters: Counters::default(),
         }
+    }
+
+    /// `leader_p` from the Ω failure detector: lowest non-suspected
+    /// machine of our group (same election as Tempo's).
+    fn leader(&self) -> ProcessId {
+        self.bp
+            .group_procs
+            .iter()
+            .copied()
+            .find(|p| !self.suspected.contains(p))
+            .unwrap_or(self.bp.id)
+    }
+
+    /// Initial coordinator of `dot` at our group (the paper's
+    /// `initial_p`): the origin's co-located replica.
+    fn initial_coordinator(&self, dot: Dot) -> ProcessId {
+        self.bp.config.closest_in_shard(dot.origin, self.bp.group)
     }
 
     fn local_keys<'a>(&'a self, cmd: &'a Command) -> impl Iterator<Item = Key> + 'a {
@@ -462,8 +543,10 @@ impl DepCore {
             info.quorums = quorums.clone();
             info.deps = deps;
             info.coordinator = true;
+            info.pending_since = time;
             info.acks.push((me, shared.clone()));
         }
+        self.pending.insert(dot);
         if self.bp.config.retry_interval_ticks > 0 {
             self.retry_pending.insert(dot);
         }
@@ -533,7 +616,9 @@ impl DepCore {
             info.cmd = Some(cmd);
             info.quorums = quorums;
             info.deps = deps;
+            info.pending_since = time;
         }
+        self.pending.insert(dot);
         out.push(Action::send(from, Msg::MProposeAck { dot, deps: shared }));
         self.drain_stalled(dot, time, out);
     }
@@ -680,6 +765,7 @@ impl DepCore {
                 self.retry_commits.insert(dot);
             }
         }
+        self.pending.remove(&dot);
         self.graph.commit(dot, local_deps);
         self.pending_roots.insert(dot);
         out.push(Action::Committed { dot, fast: true });
@@ -708,10 +794,16 @@ impl DepCore {
         }
         let info = self.info.ensure(dot, Info::new);
         if info.bal > bal {
+            // Help a stale proposer (a recovery leader working from an
+            // old ballot) instead of silently dropping: the NAck carries
+            // our promise so it can retry above it.
+            let cur = info.bal;
+            out.push(Action::send(from, Msg::MRecDepNAck { dot, bal: cur }));
             return;
         }
         info.deps = deps.to_vec();
         info.bal = bal;
+        info.abal = bal;
         out.push(Action::send(from, Msg::MConsensusAck { dot, bal }));
     }
 
@@ -749,6 +841,203 @@ impl DepCore {
         let group = self.bp.group;
         let targets = self.all_processes_of(&cmd);
         self.broadcast(&targets, Msg::MCommit { dot, group, deps: deps.into() }, time, out);
+    }
+
+    // -- recovery (Atlas §4 prepare phase; Tempo §B port) -------------------
+
+    /// Take over coordination of `dot` at a ballot we own.
+    fn recover(&mut self, dot: Dot, time: u64, out: &mut Vec<Action<Msg>>) {
+        let bal = {
+            let info = match self.info.get_mut(&dot) {
+                Some(i) => i,
+                None => return,
+            };
+            if !info.phase.is_pending() {
+                return;
+            }
+            info.rec_acks.clear();
+            info.consensus_acks.clear();
+            info.bal
+        };
+        let b =
+            ballot::next_owned(bal, self.bp.id, self.bp.config.r as u64, self.bp.group_base());
+        self.counters.recoveries += 1;
+        out.push(Action::RecoveryStarted { dot });
+        self.broadcast(
+            &self.bp.group_procs.clone(),
+            Msg::MRecDep { dot, bal: b },
+            time,
+            out,
+        );
+    }
+
+    fn handle_rec_dep(
+        &mut self,
+        from: ProcessId,
+        dot: Dot,
+        bal: u64,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        if self.gc.was_executed(dot) {
+            return; // GC'd: the whole group executed it already
+        }
+        let phase = self.info.get(&dot).map_or(Phase::Start, |i| i.phase);
+        if phase == Phase::Start {
+            // No payload yet: park the prepare until it arrives (the
+            // in-flight MPropose/MPayload of the crashed coordinator, or
+            // the recovery leader's own re-drive, will drain it).
+            self.info.ensure(dot, Info::new);
+            self.stall(dot, from, Msg::MRecDep { dot, bal });
+            return;
+        }
+        if !phase.is_pending() {
+            // Committed here: no vote needed — the recorded decision
+            // helps `from` directly (the MCommitRequest analogue).
+            let group_deps = self.info[&dot].group_deps.clone();
+            for (g, d) in group_deps {
+                out.push(Action::send(from, Msg::MCommit { dot, group: g, deps: d }));
+            }
+            return;
+        }
+        let cur_bal = self.info[&dot].bal;
+        if cur_bal >= bal {
+            out.push(Action::send(from, Msg::MRecDepNAck { dot, bal: cur_bal }));
+            return;
+        }
+        if cur_bal == 0 {
+            match phase {
+                Phase::Payload => {
+                    // Never acked the fast round: compute and register
+                    // our report now. RECOVER-R records that it happened
+                    // here — the fast path is invalidated (we will never
+                    // ack the original proposal at a nonzero ballot).
+                    let cmd = self.info[&dot].cmd.clone().unwrap();
+                    let deps = self.conflicts_and_register(dot, &cmd);
+                    let info = self.info.get_mut(&dot).unwrap();
+                    info.deps = deps;
+                    info.phase = Phase::RecoverR;
+                }
+                Phase::Propose => {
+                    self.info.get_mut(&dot).unwrap().phase = Phase::RecoverP;
+                }
+                _ => {}
+            }
+        }
+        let info = self.info.get_mut(&dot).unwrap();
+        info.bal = bal;
+        let (deps, ph, abal) = (info.deps.clone(), info.phase, info.abal);
+        out.push(Action::send(
+            from,
+            Msg::MRecDepAck { dot, deps: deps.into(), phase: ph, abal, bal },
+        ));
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn handle_rec_dep_ack(
+        &mut self,
+        from: ProcessId,
+        dot: Dot,
+        deps: Deps,
+        phase: Phase,
+        abal: u64,
+        bal: u64,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        let rec_quorum = self.bp.config.recovery_quorum_size();
+        let group = self.bp.group;
+        let initial = self.initial_coordinator(dot);
+        let decided: Vec<Dot> = {
+            let info = match self.info.get_mut(&dot) {
+                Some(i) => i,
+                None => return,
+            };
+            if info.bal != bal || info.phase.is_committed_like() {
+                return;
+            }
+            if info.rec_acks.iter().any(|&(p, ..)| p == from) {
+                return;
+            }
+            info.rec_acks.push((from, deps, phase, abal));
+            if info.rec_acks.len() != rec_quorum {
+                return;
+            }
+            if let Some((_, d, _, _)) = info
+                .rec_acks
+                .iter()
+                .filter(|&&(_, _, _, ab)| ab != 0)
+                .max_by_key(|&&(_, _, _, ab)| ab)
+            {
+                // Some process accepted a consensus value: classic Paxos
+                // rule — adopt the value accepted at the highest ballot.
+                d.to_vec()
+            } else {
+                // Nobody accepted: reconstruct a dependency set that
+                // equals any fast-path commit. I = Q_rec ∩ Q_fast; the
+                // fast path is impossible if the initial coordinator
+                // answered the prepare (it would have committed itself
+                // first) or any I member never saw the proposal
+                // (RECOVER-R: its fast ack is missing forever) — then
+                // any report union is safe, so take all of them.
+                // Otherwise the union over I's extended reports equals
+                // the committed union (see the module header).
+                let fq: Vec<ProcessId> = info
+                    .quorums
+                    .iter()
+                    .find(|(g, _)| *g == group)
+                    .map(|(_, q)| q.clone())
+                    .unwrap_or_default();
+                let in_i: Vec<&(ProcessId, Deps, Phase, u64)> =
+                    info.rec_acks.iter().filter(|&&(p, ..)| fq.contains(&p)).collect();
+                let s = in_i.iter().any(|&&(p, ..)| p == initial)
+                    || in_i.iter().any(|&&(_, _, ph, _)| ph == Phase::RecoverR);
+                let candidates: Vec<&(ProcessId, Deps, Phase, u64)> =
+                    if s { info.rec_acks.iter().collect() } else { in_i };
+                let mut union: Vec<Dot> = candidates
+                    .iter()
+                    .flat_map(|(_, d, _, _)| d.iter().copied())
+                    .collect();
+                union.sort_unstable();
+                union.dedup();
+                union.retain(|&d| d != dot);
+                union
+            }
+        };
+        {
+            let info = self.info.get_mut(&dot).unwrap();
+            info.deps = decided.clone();
+            info.coordinator = true; // we own this command's completion now
+            info.decided = true; // fence our own fast-path decision
+            info.consensus_acks.clear();
+        }
+        let msg = Msg::MConsensus { dot, deps: decided.into(), bal };
+        self.broadcast(&self.bp.group_procs.clone(), msg, time, out);
+    }
+
+    fn handle_rec_dep_nack(
+        &mut self,
+        dot: Dot,
+        bal: u64,
+        time: u64,
+        out: &mut Vec<Action<Msg>>,
+    ) {
+        // Join the higher ballot and retry recovery (only the Ω leader,
+        // so competing takeovers converge instead of dueling).
+        if self.leader() != self.bp.id {
+            return;
+        }
+        {
+            let info = match self.info.get_mut(&dot) {
+                Some(i) => i,
+                None => return,
+            };
+            if info.bal >= bal || !info.phase.is_pending() {
+                return;
+            }
+            info.bal = bal;
+        }
+        self.recover(dot, time, out);
     }
 
     // -- execution ----------------------------------------------------------
@@ -844,12 +1133,21 @@ impl DepCore {
     /// nemesis window closes without double-counting anything.
     fn retry_tick(&mut self, out: &mut Vec<Action<Msg>>) {
         let every = self.bp.config.retry_interval_ticks;
-        if every == 0 || self.ticks % every != 0 {
+        if every == 0 {
+            return;
+        }
+        // Legacy fixed cadence fires everything on every N-th tick; with
+        // backoff the per-dot pacer owns the schedule and must be
+        // consulted on every tick (each dot has its own due point).
+        if !self.retry_pacer.backoff_enabled() && self.ticks % every != 0 {
             return;
         }
         let me = self.bp.id;
         let group = self.bp.group;
         for dot in self.retry_pending.clone() {
+            if !self.retry_pacer.due(dot, self.ticks) {
+                continue;
+            }
             let Some(info) = self.info.get(&dot) else { continue };
             let Some(cmd) = info.cmd.clone() else { continue };
             if info.decided {
@@ -895,6 +1193,9 @@ impl DepCore {
             }
         }
         for dot in self.retry_commits.clone() {
+            if !self.retry_pacer.due(dot, self.ticks) {
+                continue;
+            }
             let Some(info) = self.info.get(&dot) else {
                 self.retry_commits.remove(&dot);
                 continue;
@@ -916,11 +1217,16 @@ impl DepCore {
                 }
             }
         }
+        // Completed dots leave both retry sets; drop their schedules so
+        // the pacer stays bounded by the in-flight state it paces.
+        let (pending, commits) = (&self.retry_pending, &self.retry_commits);
+        self.retry_pacer.retain(|d| pending.contains(d) || commits.contains(d));
     }
 
     /// Periodic handler: the GC frontier exchange (common::GcProcess),
-    /// the epoch reconfiguration vote, and retransmission.
-    pub fn tick(&mut self, _time: u64) -> Vec<Action<Msg>> {
+    /// the epoch reconfiguration vote, retransmission, and the recovery
+    /// timers.
+    pub fn tick(&mut self, time: u64) -> Vec<Action<Msg>> {
         let mut out = Vec::new();
         if self.bp.crashed {
             return out;
@@ -930,10 +1236,39 @@ impl DepCore {
         self.gc_tick(ticks, |executed| Msg::MGarbageCollect { executed }, &mut out);
         self.epoch_tick(|epoch, evicted| Msg::MEpoch { epoch, evicted }, &mut out);
         self.retry_tick(&mut out);
+        // Recovery timers (only the Ω leader calls recover()): a pending
+        // dot whose progress stalled past the timeout — and whose current
+        // ballot we do not already own — gets the prepare phase.
+        if self.bp.config.recovery_timeout_us != u64::MAX && self.leader() == self.bp.id {
+            let timeout = self.bp.config.recovery_timeout_us;
+            let r = self.bp.config.r as u64;
+            let base = self.bp.group_base();
+            let me = self.bp.id;
+            let due: Vec<Dot> = self
+                .pending
+                .iter()
+                .copied()
+                .filter(|d| {
+                    self.info.get(d).is_some_and(|i| {
+                        i.phase.is_pending()
+                            && time.saturating_sub(i.pending_since) >= timeout
+                            && (i.bal == 0 || ballot::leader(i.bal, r, base) != me)
+                    })
+                })
+                .collect();
+            for dot in due {
+                // Restart the timer so we do not spam MRecDep every tick.
+                if let Some(i) = self.info.get_mut(&dot) {
+                    i.pending_since = time;
+                }
+                self.recover(dot, time, &mut out);
+            }
+        }
         out
     }
 
     pub fn suspect(&mut self, p: ProcessId) {
+        self.suspected.insert(p);
         self.epochs.suspect(p);
     }
 
@@ -994,6 +1329,7 @@ impl GcProcess for DepCore {
                 }
                 self.blocked_on.remove(&dot);
                 self.retry_commits.remove(&dot);
+                self.pending.remove(&dot);
                 self.bp.drop_stalled(dot);
             }
         }
@@ -1051,6 +1387,8 @@ impl Process for DepCore {
                     info.phase = Phase::Payload;
                     info.cmd = Some(cmd);
                     info.quorums = quorums;
+                    info.pending_since = time;
+                    self.pending.insert(dot);
                     self.drain_stalled(dot, time, &mut out);
                 }
             }
@@ -1062,6 +1400,13 @@ impl Process for DepCore {
             }
             Msg::MConsensusAck { dot, bal } => {
                 self.handle_consensus_ack(from, dot, bal, time, &mut out)
+            }
+            Msg::MRecDep { dot, bal } => self.handle_rec_dep(from, dot, bal, time, &mut out),
+            Msg::MRecDepAck { dot, deps, phase, abal, bal } => {
+                self.handle_rec_dep_ack(from, dot, deps, phase, abal, bal, time, &mut out)
+            }
+            Msg::MRecDepNAck { dot, bal } => {
+                self.handle_rec_dep_nack(dot, bal, time, &mut out)
             }
             Msg::MReady { dot } => self.handle_ready(from, dot, &mut out),
             Msg::MGarbageCollect { executed } => self.handle_garbage_collect(from, &executed),
@@ -1086,6 +1431,15 @@ impl Process for DepCore {
 impl Phase {
     fn is_committed_like(self) -> bool {
         matches!(self, Phase::Commit | Phase::Execute)
+    }
+
+    /// In flight: known (payload or proposal seen) but not yet committed
+    /// — the phases the recovery timer and prepare phase operate on.
+    fn is_pending(self) -> bool {
+        matches!(
+            self,
+            Phase::Payload | Phase::Propose | Phase::RecoverR | Phase::RecoverP
+        )
     }
 }
 

@@ -32,6 +32,7 @@ use self::msg::{KeyPromises, KeyTs, Msg, Phase, Quorums, SharedPromises};
 use self::promises::{PromiseSet, PromiseStore};
 use super::common::{
     BaseProcess, CommandsInfo, EpochManager, EpochProcess, GCTrack, GcProcess, Process, ReadStash,
+    RetryPacer,
 };
 use super::{ballot, Action, Footprint, Protocol};
 use crate::core::{key_to_shard, Command, Config, Dot, Key, ProcessId, ShardId};
@@ -143,6 +144,9 @@ pub struct Tempo {
     /// missed it (`handle_commit` is idempotent). Empty when the opt-in
     /// retry timer is off.
     retry_commits: BTreeSet<Dot>,
+    /// Per-dot retransmit pacing (`Config::retry_backoff_cap_ticks`);
+    /// pass-through when the cap is 0 (legacy fixed cadence).
+    retry_pacer: RetryPacer<Dot>,
     suspected: BTreeSet<ProcessId>,
     /// Epoch reconfiguration: eviction votes, installed history, fencing.
     epochs: EpochManager,
@@ -1269,13 +1273,22 @@ impl Tempo {
     /// into a voter set.
     fn retry_tick(&mut self, time: u64, out: &mut Vec<Action<Msg>>) {
         let every = self.bp.config.retry_interval_ticks;
-        if every == 0 || self.ticks % every != 0 {
+        if every == 0 {
+            return;
+        }
+        // Legacy fixed cadence fires everything on every N-th tick; with
+        // backoff the per-dot pacer owns the schedule and we must look at
+        // every tick (each dot has its own due point).
+        if !self.retry_pacer.backoff_enabled() && self.ticks % every != 0 {
             return;
         }
         let me = self.bp.id;
         let group = self.bp.group;
         let own_bal = (me.0 - self.bp.group_base()) as u64 + 1;
         for dot in self.pending.clone() {
+            if !self.retry_pacer.due(dot, self.ticks) {
+                continue;
+            }
             let plan = {
                 let Some(info) = self.info.get(&dot) else { continue };
                 if !info.coordinator || info.phase != Phase::Propose {
@@ -1335,6 +1348,9 @@ impl Tempo {
                 self.retry_commits.remove(&dot);
                 continue;
             }
+            if !self.retry_pacer.due(dot, self.ticks) {
+                continue;
+            }
             let redo = {
                 let Some(info) = self.info.get(&dot) else {
                     self.retry_commits.remove(&dot);
@@ -1354,6 +1370,10 @@ impl Tempo {
                 out,
             );
         }
+        // Completed dots leave both retry sets; drop their schedules so
+        // the pacer stays bounded by the in-flight state it paces.
+        let (pending, commits) = (&self.pending, &self.retry_commits);
+        self.retry_pacer.retain(|d| pending.contains(d) || commits.contains(d));
     }
 }
 
@@ -1372,6 +1392,10 @@ impl Protocol for Tempo {
         );
         let epochs =
             EpochManager::new(id, bp.group_procs.clone(), bp.config.epoch_fence_off);
+        let retry_pacer = RetryPacer::new(
+            bp.config.retry_interval_ticks,
+            bp.config.retry_backoff_cap_ticks,
+        );
         Tempo {
             bp,
             keys: HashMap::new(),
@@ -1381,6 +1405,7 @@ impl Protocol for Tempo {
             missing: HashMap::new(),
             pending: BTreeSet::new(),
             retry_commits: BTreeSet::new(),
+            retry_pacer,
             suspected: BTreeSet::new(),
             epochs,
             gc,

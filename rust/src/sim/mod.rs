@@ -81,6 +81,14 @@ pub struct SimOpts {
     pub restarts: Vec<(u64, ProcessId)>,
     /// Failure-detection delay after a crash.
     pub suspect_delay_us: u64,
+    /// False-suspicion schedule: (time, process). At `time` every live
+    /// peer suspects `process` — which is *not* crashed, merely presumed
+    /// dead (the slow-node case a timeout-based detector cannot tell from
+    /// a real crash). The victim keeps running and keeps its in-flight
+    /// coordinations going while the others evict it and its clients fail
+    /// over; the safety oracles (epoch fencing, PSMR, response validity,
+    /// exactly-once) must hold regardless.
+    pub suspicions: Vec<(u64, ProcessId)>,
     /// Negative knob: skip the manifest-diff state transfer on restart.
     /// A replica that crashed with unsynced WAL records (or snapshots
     /// behind its peers) then rejoins stale — the recovery oracle's
@@ -115,6 +123,7 @@ impl SimOpts {
             crashes: Vec::new(),
             restarts: Vec::new(),
             suspect_delay_us: 500_000,
+            suspicions: Vec::new(),
             transfer_on_restart: true,
             nemesis: Nemesis::default(),
             encode_once: false,
@@ -212,6 +221,10 @@ enum Event<M> {
     BatchFlush { site: usize },
     Crash { p: ProcessId },
     Suspect { at: ProcessId, suspected: ProcessId },
+    /// A live process is falsely suspected (`SimOpts::suspicions`): every
+    /// live peer suspects it at once and its clients fail over, but the
+    /// victim itself keeps running.
+    FalseSuspect { suspected: ProcessId },
     /// Session failover: the client re-issues an unacked rid at a
     /// surviving replica after its coordinator crashed.
     ClientRetry { rid: Rid },
@@ -252,6 +265,9 @@ pub struct Simulation<P: Protocol, W: Workload> {
     opts: SimOpts,
     procs: Vec<P>,
     dead: Vec<bool>,
+    /// Falsely-suspected processes (`SimOpts::suspicions`): alive, but
+    /// evicted by their peers — clients route around them like the dead.
+    shunned: Vec<bool>,
     /// Per-replica executors: apply `Action::Execute` to the replicated
     /// KV store and emit `Action::Reply` at the coordinator. The store is
     /// always wrapped in [`Durable`] — under `StorageMode::Memory` (the
@@ -331,6 +347,7 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             opts,
             procs,
             dead: vec![false; n],
+            shunned: vec![false; n],
             executors,
             backends,
             pre_crash: HashMap::new(),
@@ -383,6 +400,13 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
                 self.aux_seq += 1;
                 (time, 5, at.0, suspected.0, self.aux_seq)
             }
+            // Shares the Suspect rank (it *is* a suspicion, just fanned
+            // out); `u32::MAX` as the actor keeps it disjoint from any
+            // real (at, suspected) pair.
+            Event::FalseSuspect { suspected } => {
+                self.aux_seq += 1;
+                (time, 5, u32::MAX, suspected.0, self.aux_seq)
+            }
             // A closed-loop client has at most one in-flight rid, so
             // (client, seq) identifies the retry without an aux rank —
             // keeping the key a pure function of the event (insertion
@@ -425,6 +449,9 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
         restarts.extend(self.opts.nemesis.restarts.iter().copied());
         for (t, p) in restarts {
             self.push(t, Event::Restart { p });
+        }
+        for (t, p) in self.opts.suspicions.clone() {
+            self.push(t, Event::FalseSuspect { suspected: p });
         }
 
         while let Some(Reverse(key)) = self.heap.pop() {
@@ -528,6 +555,31 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             Event::Suspect { at, suspected } => {
                 if !self.dead[at.0 as usize] {
                     self.procs[at.0 as usize].suspect(suspected);
+                }
+            }
+            Event::FalseSuspect { suspected } => {
+                let idx = suspected.0 as usize;
+                // A real crash already handled suspicion the usual way.
+                if !self.dead[idx] && !self.shunned[idx] {
+                    self.shunned[idx] = true;
+                    for q in 0..self.procs.len() {
+                        if q != idx && !self.dead[q] {
+                            self.procs[q].suspect(suspected);
+                        }
+                    }
+                    // Session failover away from the shunned coordinator:
+                    // same re-issue path as a crash, fired immediately —
+                    // the suspicion instant *is* the detector giving up.
+                    let mut orphans: Vec<Rid> = self
+                        .in_flight
+                        .iter()
+                        .filter(|(_, inf)| inf.dot.origin == suspected)
+                        .map(|(rid, _)| *rid)
+                        .collect();
+                    orphans.sort_unstable();
+                    for rid in orphans {
+                        self.push(time, Event::ClientRetry { rid });
+                    }
                 }
             }
             Event::ClientRetry { rid } => {
@@ -659,10 +711,12 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
             // Replied (or superseded) in the meantime: nothing to do.
             None => return,
             Some(inf) => {
-                // Only retry while the current coordinator is dead; a
-                // live one may still reply. (A *restarted* coordinator
-                // re-issues its orphans itself, see `restart_process`.)
-                if !self.dead[inf.dot.origin.0 as usize] {
+                // Only retry while the current coordinator is dead or
+                // shunned; a live, trusted one may still reply. (A
+                // *restarted* coordinator re-issues its orphans itself,
+                // see `restart_process`.)
+                let o = inf.dot.origin.0 as usize;
+                if !self.dead[o] && !self.shunned[o] {
                     return;
                 }
             }
@@ -715,17 +769,21 @@ impl<P: Protocol, W: Workload> Simulation<P, W> {
     }
 
     /// The replica a client of `site` should talk to in `shard`: its own
-    /// site's replica when alive, otherwise the lowest-id surviving
-    /// member (deterministic failover target).
+    /// site's replica when alive and trusted, otherwise the lowest-id
+    /// surviving non-shunned member (deterministic failover target). A
+    /// falsely-suspected replica is routed around like a dead one — after
+    /// eviction its proposals cannot gather a quorum in the new epoch.
     fn live_origin(&self, shard: u32, site: usize) -> Option<ProcessId> {
         let base = shard * self.config.r as u32;
+        let usable = |q: &ProcessId| {
+            let i = q.0 as usize;
+            !self.dead[i] && !self.shunned[i]
+        };
         let preferred = ProcessId(base + site as u32);
-        if !self.dead[preferred.0 as usize] {
+        if usable(&preferred) {
             return Some(preferred);
         }
-        (0..self.config.r as u32)
-            .map(|i| ProcessId(base + i))
-            .find(|q| !self.dead[q.0 as usize])
+        (0..self.config.r as u32).map(|i| ProcessId(base + i)).find(usable)
     }
 
     fn client_submit(&mut self, client: usize, time: u64) {

@@ -27,7 +27,12 @@ pub trait StorageBackend: Send {
     /// Append one framed WAL record (durable only after [`Self::sync_wal`]).
     fn append_wal(&mut self, record: &[u8]);
     /// Make all appended records durable (fsync; the group-commit point).
-    fn sync_wal(&mut self);
+    /// Returns `false` when the sync **failed** — after a failed fsync
+    /// the kernel may have dropped the dirty pages, so the durability of
+    /// everything appended since the last successful sync is unknown
+    /// (the fsyncgate lesson: retrying the fsync cannot bring it back).
+    /// The [`super::Durable`] wrapper reacts by poisoning the slot.
+    fn sync_wal(&mut self) -> bool;
     /// All durable WAL bytes, in append order.
     fn read_wal(&self) -> Vec<u8>;
     /// Drop the WAL after a snapshot captured its effects.
@@ -56,7 +61,9 @@ pub struct NullBackend;
 
 impl StorageBackend for NullBackend {
     fn append_wal(&mut self, _record: &[u8]) {}
-    fn sync_wal(&mut self) {}
+    fn sync_wal(&mut self) -> bool {
+        true
+    }
     fn read_wal(&self) -> Vec<u8> {
         Vec::new()
     }
@@ -91,6 +98,10 @@ struct MemInner {
     manifest: Option<Vec<u8>>,
     bytes_written: u64,
     syncs: u64,
+    /// Fault-injection knob: while set, `sync_wal` fails (returns
+    /// `false`) and the tail stays unsynced — exactly what a failed
+    /// fsync means for the data's durability.
+    fail_syncs: bool,
 }
 
 /// Deterministic in-memory backend; clones share state (sim keeps one
@@ -128,6 +139,14 @@ impl MemBackend {
     pub fn synced_wal_len(&self) -> usize {
         self.inner.lock().unwrap().synced_wal.len()
     }
+
+    /// Test knob: make every subsequent `sync_wal` fail (model a dying
+    /// disk / full filesystem). The unsynced tail stays unsynced —
+    /// retrying an fsync after a failure cannot make the lost dirty
+    /// pages durable.
+    pub fn fail_syncs(&self, fail: bool) {
+        self.inner.lock().unwrap().fail_syncs = fail;
+    }
 }
 
 impl StorageBackend for MemBackend {
@@ -136,16 +155,20 @@ impl StorageBackend for MemBackend {
         g.unsynced_wal.extend_from_slice(record);
         g.unsynced_records += 1;
     }
-    fn sync_wal(&mut self) {
+    fn sync_wal(&mut self) -> bool {
         let mut g = self.inner.lock().unwrap();
+        if g.fail_syncs {
+            return false;
+        }
         if g.unsynced_wal.is_empty() {
-            return;
+            return true;
         }
         let tail = std::mem::take(&mut g.unsynced_wal);
         g.bytes_written += tail.len() as u64;
         g.synced_wal.extend_from_slice(&tail);
         g.unsynced_records = 0;
         g.syncs += 1;
+        true
     }
     fn read_wal(&self) -> Vec<u8> {
         self.inner.lock().unwrap().synced_wal.clone()
@@ -217,9 +240,15 @@ impl StorageBackend for FileBackend {
         self.wal.write_all(record).expect("WAL append failed");
         self.bytes_written += record.len() as u64;
     }
-    fn sync_wal(&mut self) {
-        self.wal.sync_data().expect("WAL fsync failed");
-        self.syncs += 1;
+    fn sync_wal(&mut self) -> bool {
+        // A failed fsync is surfaced, not unwrapped: the caller decides
+        // (the `Durable` wrapper poisons the slot — acking writes whose
+        // dirty pages the kernel may have dropped would be a lie).
+        let ok = self.wal.sync_data().is_ok();
+        if ok {
+            self.syncs += 1;
+        }
+        ok
     }
     fn read_wal(&self) -> Vec<u8> {
         fs::read(self.dir.join("wal.log")).unwrap_or_default()

@@ -90,6 +90,11 @@ pub struct Durable<S> {
     snapshot_every: u64,
     pending: usize,
     since_snapshot: u64,
+    /// Set when a WAL fsync fails. After a failed fsync the durability
+    /// of everything since the last successful sync is unknown (the
+    /// kernel may have dropped the dirty pages — fsyncgate), so the slot
+    /// refuses further writes instead of silently acking undurable ones.
+    poisoned: bool,
     dot_floors: HashMap<ProcessId, u64>,
     stats: DurableStats,
 }
@@ -113,6 +118,7 @@ impl<S: Snapshottable> Durable<S> {
             snapshot_every,
             pending: 0,
             since_snapshot: 0,
+            poisoned: false,
             dot_floors: HashMap::new(),
             stats: DurableStats::default(),
         }
@@ -216,11 +222,25 @@ impl<S: Snapshottable> Durable<S> {
     }
 
     /// Force-sync any records still sitting in the group-commit window.
+    /// A failed fsync poisons the slot (see [`Self::poisoned`]) — the
+    /// pending window is *not* cleared, because those records never
+    /// became durable.
     pub fn flush(&mut self) {
         if self.pending > 0 {
-            self.backend.sync_wal();
-            self.pending = 0;
+            if self.backend.sync_wal() {
+                self.pending = 0;
+            } else {
+                self.poisoned = true;
+            }
         }
+    }
+
+    /// Whether a WAL fsync has failed on this slot. Once poisoned, the
+    /// next [`StateMachine::log_execution`] (and any checkpoint) panics:
+    /// the wrapper will not acknowledge writes whose durability it
+    /// cannot vouch for.
+    pub fn poisoned(&self) -> bool {
+        self.poisoned
     }
 
     fn floors_sorted(&self) -> Vec<(ProcessId, u64)> {
@@ -268,6 +288,13 @@ impl<S: Snapshottable> StateMachine for Durable<S> {
         if !self.active {
             return;
         }
+        if self.poisoned {
+            panic!(
+                "durable slot poisoned: a WAL fsync failed, so records \
+                 acked since the last successful sync may not be on disk; \
+                 refusing further writes (crash and recover instead)"
+            );
+        }
         let rec =
             WalRecord { index: self.inner.applied(), dot, ts, cmd: cmd.clone() };
         self.backend.append_wal(&rec.encode());
@@ -276,8 +303,7 @@ impl<S: Snapshottable> StateMachine for Durable<S> {
         *floor = (*floor).max(dot.seq);
         self.pending += 1;
         if self.pending >= self.fsync_batch {
-            self.backend.sync_wal();
-            self.pending = 0;
+            self.flush();
         }
         self.since_snapshot += 1;
     }
@@ -295,6 +321,13 @@ impl<S: Snapshottable> StateMachine for Durable<S> {
         // Records in the group-commit window must be durable before the
         // manifest can claim `applied` covers them.
         self.flush();
+        if self.poisoned {
+            panic!(
+                "durable slot poisoned: WAL fsync failed while flushing \
+                 the group-commit window; a checkpoint now would claim \
+                 durability for records that may not be on disk"
+            );
+        }
         let (manifest, pages) =
             Manifest::of(&self.inner, dedup.to_vec(), self.floors_sorted());
         for (hash, page) in manifest.chunks.iter().zip(pages.iter()) {
@@ -432,6 +465,40 @@ mod tests {
             oracle.execute(&cmd(i));
         }
         assert_eq!(r.digest(), oracle.digest());
+    }
+
+    #[test]
+    fn failed_fsync_poisons_the_slot_and_rejects_further_writes() {
+        let backend = MemBackend::new();
+        let mut d = Durable::new(KvStore::new(), Box::new(backend.clone()), 4, 0);
+        run(&mut d, 0, 8); // two healthy group commits
+        assert!(!d.poisoned());
+        let healthy_syncs = d.backend_syncs();
+        backend.fail_syncs(true);
+        // The next group commit hits the failing disk: the write itself is
+        // accepted (the failure only surfaces at the sync), but the slot
+        // comes out poisoned and the pending window is not cleared.
+        run(&mut d, 8, 12);
+        assert!(d.poisoned(), "failed fsync must poison the slot");
+        assert_eq!(d.backend_syncs(), healthy_syncs, "failed syncs not counted");
+        // Poisoned slot refuses the next write outright.
+        let c = cmd(12);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            d.log_execution(Dot::new(ProcessId(1), 13), 120, &c);
+        }));
+        assert!(err.is_err(), "log_execution on a poisoned slot must panic");
+        // ... and a checkpoint must not claim durability either.
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            d.checkpoint(&[]);
+        }));
+        assert!(err.is_err(), "checkpoint on a poisoned slot must panic");
+        // The disk never saw the unsynced tail: recovery replays only the
+        // records covered by successful syncs.
+        drop(d);
+        backend.crash();
+        let (r, rec) = Durable::<KvStore>::recover(Box::new(backend), 4, 0);
+        assert_eq!(rec.wal_replayed, 8);
+        assert_eq!(r.applied(), 8);
     }
 
     #[test]

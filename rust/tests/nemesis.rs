@@ -17,6 +17,9 @@
 //! 3. **Crash + eviction**: a crashed replica is suspected, voted out,
 //!    and the survivors install epoch 1 with the victim in the evicted
 //!    set — in every family — while clients keep completing requests.
+//!    Tempo (§B takeover) and the dep-graph families (ballot-based
+//!    prepare + quorum dep reads) are held to the full liveness oracle:
+//!    every orphan a survivor can finish must finish.
 //! 4. **Eviction unfreezes GC**: with epochs enabled a crash does not
 //!    freeze the executed-frontier GC; survivor footprints stay
 //!    strictly below the epochs-off run of the same seed.
@@ -24,6 +27,11 @@
 //!    knobs each produce the violation their oracle exists to catch
 //!    (`EpochRegression`, `DuplicateRequest`), and the default
 //!    configuration does not.
+//! 6. **False suspicion**: a live, merely-presumed-dead replica is
+//!    suspected and evicted (`SimOpts::suspicions`); safety must not
+//!    depend on the detector being right — epoch fencing walls the
+//!    victim off, its clients fail over exactly once, and the oracles
+//!    stay clean while it keeps running.
 
 use std::collections::{HashMap, HashSet};
 use tempo::check::{check_psmr, Violation};
@@ -299,10 +307,12 @@ fn inactive_fault_windows_draw_nothing() {
 /// Crash P2 (never P0: it is FPaxos's leader and Tempo's initial Ω
 /// leader). Survivors must vote the victim into epoch 1, keep the run
 /// safe, and keep completing requests. `precise_liveness` additionally
-/// applies the recovery-grade excuse filter (Tempo only: the dep-graph
-/// families can commit a dead coordinator's proposal as a dependency
-/// without ever recovering it, so for them the crash sweep asserts
-/// safety + progress, not completion of every orphan).
+/// applies the recovery-grade excuse filter — and holds for every family
+/// with a real per-dot recovery path: Tempo (§B timestamp takeover) and
+/// the dep-graph families, whose ballot-based coordinator recovery
+/// (`MRecDep` prepare, highest-ballot NAck, quorum dep reads) re-drives
+/// a dead coordinator's pending proposals to commit. Caesar and FPaxos
+/// keep the safety + progress check.
 fn crash_evicts_victim<P: Protocol>(seed: u64, workers: usize, precise_liveness: bool) {
     let plan = Nemesis::new().crash(600_000, 2);
     let config = config(workers);
@@ -347,12 +357,15 @@ fn crash_evicts_victim<P: Protocol>(seed: u64, workers: usize, precise_liveness:
 #[test]
 fn crash_leads_to_eviction_in_every_family() {
     crash_evicts_victim::<Tempo>(170, 1, true);
-    crash_evicts_victim::<Atlas>(171, 1, false);
-    crash_evicts_victim::<EPaxos>(172, 1, false);
-    crash_evicts_victim::<Janus>(173, 1, false);
+    crash_evicts_victim::<Atlas>(171, 1, true);
+    crash_evicts_victim::<EPaxos>(172, 1, true);
+    crash_evicts_victim::<Janus>(173, 1, true);
     crash_evicts_victim::<Caesar>(174, 1, false);
     crash_evicts_victim::<FPaxos>(175, 1, false);
     crash_evicts_victim::<Sharded<Tempo>>(176, 4, true);
+    crash_evicts_victim::<Sharded<Atlas>>(177, 4, true);
+    crash_evicts_victim::<Sharded<EPaxos>>(178, 4, true);
+    crash_evicts_victim::<Sharded<Janus>>(179, 4, true);
 }
 
 // --- Layer 4: eviction unfreezes GC ---------------------------------------
@@ -459,4 +472,56 @@ fn dedup_window_zero_is_caught_and_the_default_is_exactly_once() {
         "dedup_window=0 never produced a DuplicateRequest across the seeds"
     );
     assert!(dedup_hits > 0, "failover re-issues never hit the dedup window");
+}
+
+// --- Layer 6: false suspicion of a live node ------------------------------
+
+/// The wrong call every timeout-based detector eventually makes: P2 is
+/// *not* crashed, merely presumed dead. Every live peer suspects it at
+/// once, its clients fail over, and the survivors evict it into epoch 1
+/// — while P2 keeps running, keeps its in-flight coordinations going,
+/// and may race recovery for its own dots. Safety must not depend on the
+/// detector being right: ballots/epoch fencing keep the histories
+/// consistent, the re-issues are absorbed exactly once, and the full
+/// oracle set stays clean (the excuse filter applies only to the fenced
+/// victim's own log, which legitimately stops growing once it is walled
+/// off).
+fn false_suspicion_stays_safe<P: Protocol>(seed: u64) {
+    let mut o = opts(seed, &Nemesis::new());
+    o.suspicions = vec![(600_000, ProcessId(2))];
+    let config = config(1);
+    let result = run::<P, _>(config.clone(), o, ZipfWorkload::new(100, 0.5, 64));
+    let label = format!("{} false suspicion (seed={seed})", P::name());
+    let violations = unexcused_violations(&config, &result, &[2]);
+    assert!(
+        violations.is_empty(),
+        "{label}: {} violation(s): {:#?}",
+        violations.len(),
+        violations.iter().take(8).collect::<Vec<_>>()
+    );
+    assert!(
+        result.metrics.counters.evictions >= 1,
+        "{label}: no eviction counted: {:?}",
+        result.metrics.counters
+    );
+    for p in [0usize, 1] {
+        assert_eq!(
+            result.epoch_views[p].last(),
+            Some(&(1, vec![ProcessId(2)])),
+            "{label}: P{p} did not install epoch 1 evicting P2: {:?}",
+            result.epoch_views[p]
+        );
+    }
+    assert!(
+        result.completions.iter().any(|c| c.completed_at > 1_500_000),
+        "{label}: no client progress after the false suspicion"
+    );
+}
+
+#[test]
+fn false_suspicion_of_a_live_node_is_safe_in_the_recovering_families() {
+    false_suspicion_stays_safe::<Tempo>(210);
+    false_suspicion_stays_safe::<Atlas>(211);
+    false_suspicion_stays_safe::<EPaxos>(212);
+    false_suspicion_stays_safe::<Janus>(213);
 }
